@@ -1,0 +1,120 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full Table I workload
+//! through every layer of the system.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mot_suite
+//! ```
+//!
+//! 1. generates the 11-sequence synthetic MOT-2015 suite (Table I
+//!    properties), writes real `det.txt` files;
+//! 2. tracks every sequence with the native engine, reporting the
+//!    paper's per-sequence FPS and the Table I columns;
+//! 3. cross-checks one sequence on the AOT/XLA tracker-bank path
+//!    (L3→L2→L1 composition) — skipped with a warning if `make
+//!    artifacts` hasn't run;
+//! 4. serves all 11 sequences as paced online streams and reports
+//!    latency percentiles;
+//! 5. prints the aggregate single-core FPS (the paper's headline
+//!    number for this machine).
+
+use smalltrack::coordinator::policy::run_sequence_serial;
+use smalltrack::coordinator::{serve, Pacing, ServerConfig, VideoStream};
+use smalltrack::data::mot::write_det_file;
+use smalltrack::data::synth::{generate_suite, MOT15_PROPERTIES};
+use smalltrack::runtime::{artifacts_available, XlaRuntime, XlaSortBank};
+use smalltrack::sort::{Bbox, SortParams};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let params = SortParams { timing: false, ..Default::default() };
+    let out_dir = std::env::temp_dir().join("smalltrack_mot_suite");
+
+    // --- 1. dataset (Table I)
+    let suite = generate_suite(7);
+    println!("=== Table I: dataset properties (synthetic MOT-2015) ===");
+    println!("{:<16} {:>7} {:>17}", "Dataset", "#Frames", "Max Tracked Object");
+    for (s, &(_, frames, max_obj)) in suite.iter().zip(&MOT15_PROPERTIES) {
+        assert_eq!(s.sequence.n_frames() as u32, frames);
+        println!("{:<16} {:>7} {:>17}", s.sequence.name, frames, max_obj);
+        write_det_file(&s.sequence, &out_dir.join(&s.sequence.name).join("det/det.txt"))?;
+    }
+    println!("det.txt files under {}\n", out_dir.display());
+
+    // --- 2. native tracking, per-sequence FPS
+    println!("=== Native single-core tracking ===");
+    let mut total_frames = 0u64;
+    let mut total_secs = 0.0;
+    let mut total_tracks = 0u64;
+    for s in &suite {
+        let t0 = Instant::now();
+        let (frames, tracks) = run_sequence_serial(s, params);
+        let dt = t0.elapsed().as_secs_f64();
+        total_frames += frames;
+        total_secs += dt;
+        total_tracks += tracks;
+        println!(
+            "{:<16} {:>6} frames  {:>8.0} fps  {:>6} track-frames",
+            s.sequence.name,
+            frames,
+            frames as f64 / dt,
+            tracks
+        );
+    }
+    println!(
+        "TOTAL {total_frames} frames  {:.3}s  {:.0} FPS single-core  ({total_tracks} track-frames)\n",
+        total_secs,
+        total_frames as f64 / total_secs
+    );
+
+    // --- 3. XLA bank cross-check (three-layer composition)
+    if artifacts_available() {
+        println!("=== XLA tracker-bank cross-check (PETS09-S2L1, first 200 frames) ===");
+        let rt = XlaRuntime::new()?;
+        let mut bank = XlaSortBank::new(&rt, params)?;
+        let mut native = smalltrack::sort::Sort::new(params);
+        let mut agree = true;
+        let mut boxes: Vec<Bbox> = Vec::new();
+        for frame in suite[0].sequence.frames.iter().take(200) {
+            boxes.clear();
+            boxes.extend(frame.detections.iter().map(|d| d.bbox));
+            let mut a: Vec<u64> = native.update(&boxes).iter().map(|t| t.id).collect();
+            let mut b: Vec<u64> = bank.update(&boxes)?.iter().map(|t| t.id).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            if a != b {
+                agree = false;
+                println!("  frame {}: native {a:?} vs xla {b:?}", frame.index);
+            }
+        }
+        println!(
+            "  native and AOT-compiled JAX/Pallas paths {} over 200 frames\n",
+            if agree { "AGREE" } else { "DISAGREE" }
+        );
+        assert!(agree, "three-layer composition broken");
+    } else {
+        println!("!!! artifacts missing — run `make artifacts` for the XLA cross-check\n");
+    }
+
+    // --- 4. online serving
+    println!("=== Online serving: 11 streams @ 30fps, 2 workers ===");
+    let streams: Vec<VideoStream> = generate_suite(7)
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut seq = s.sequence;
+            seq.frames.truncate(90); // 3 seconds of "video" per stream
+            VideoStream::new(i, seq, Pacing::fps(30.0))
+        })
+        .collect();
+    let report = serve(streams, ServerConfig { workers: 2, ..Default::default() });
+    let (p50, p95, p99, max) = report.latency.summary();
+    println!(
+        "  frames={} dropped={} wall={:.1}s",
+        report.frames_done,
+        report.dropped,
+        report.elapsed.as_secs_f64()
+    );
+    println!("  latency p50={p50:?} p95={p95:?} p99={p99:?} max={max:?}");
+    println!("\nmot_suite end-to-end driver: OK");
+    Ok(())
+}

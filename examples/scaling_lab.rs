@@ -1,0 +1,54 @@
+//! Scaling laboratory: the paper's §VI experiment, live.
+//!
+//! ```bash
+//! cargo run --release --example scaling_lab
+//! ```
+//!
+//! Part A runs the three policies for real at small thread counts on
+//! this machine (oversubscribed on a 1-core box — which *demonstrates*
+//! the strong-scaling overhead rather than hiding it).
+//! Part B calibrates the discrete-event simulator from the measured
+//! single-core service times and regenerates the paper's Table VI at
+//! 1/18/36/72 cores on the SKX-6140 profile.
+
+use smalltrack::coordinator::policy::{run_policy, ScalingPolicy};
+use smalltrack::data::synth::generate_suite;
+use smalltrack::simcore::{calibrate_workload, simulate, MachineProfile, SimPolicy};
+use smalltrack::sort::SortParams;
+
+fn main() {
+    let suite = generate_suite(7);
+    let params = SortParams { timing: false, ..Default::default() };
+
+    println!("=== Part A: measured on this machine ({} hw threads) ===", {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    });
+    println!("{:<22} {:>8} {:>10}", "policy", "wall(s)", "FPS");
+    for p in [1usize, 2, 4] {
+        for policy in [
+            ScalingPolicy::Strong { threads: p },
+            ScalingPolicy::Weak { workers: p },
+            ScalingPolicy::Throughput { workers: p },
+        ] {
+            let o = run_policy(&suite, policy, params);
+            println!("{:<22} {:>8.3} {:>10.0}", o.policy.label(), o.elapsed.as_secs_f64(), o.fps());
+        }
+    }
+
+    println!("\n=== Part B: calibrated simulation, SKX-6140 profile (Table VI) ===");
+    let w = calibrate_workload(&suite, 3);
+    println!(
+        "calibration anchor: single-core {:.0} FPS over {} frames",
+        w.single_core_fps(),
+        w.total_frames()
+    );
+    println!("{:>6} {:>10} {:>10} {:>12}", "Cores", "Strong", "Weak", "Throughput");
+    let m = MachineProfile::skx6140();
+    for p in [1usize, 18, 36, 72] {
+        let s = simulate(&w, &m, SimPolicy::Strong { threads: p }).fps_paper_metric;
+        let wk = simulate(&w, &m, SimPolicy::Weak { cores: p }).fps_paper_metric;
+        let tp = simulate(&w, &m, SimPolicy::Throughput { cores: p }).fps_paper_metric;
+        println!("{p:>6} {s:>10.0} {wk:>10.0} {tp:>12.0}");
+    }
+    println!("\npaper's Table VI shape: strong degrades with p; weak/throughput sustain");
+}

@@ -1,0 +1,347 @@
+"""Baseline: the *original-style* Python SORT the paper compares against.
+
+A faithful numpy reimplementation of abewley/sort (Bewley et al., ICIP'16)
+— the comparator for Table V.  Semantics match the original:
+
+  * filterpy-style KalmanFilter (predict: x=Fx, P=FPF'+Q; update with
+    Joseph-form covariance), 7-state constant-velocity bbox model;
+  * sklearn/scipy linear_assignment on the negated IoU matrix;
+  * KalmanBoxTracker lifecycle with max_age / min_hits / hit_streak.
+
+It is used in two places, both *off* the request path:
+  1. `make artifacts` runs it on a deterministic mini-sequence to export
+     golden end-to-end tracks for the Rust integration tests;
+  2. the Table V bench (`cargo bench --bench table5_speedup`) invokes it
+     as a subprocess on the full synthetic MOT suite and compares FPS
+     against the Rust implementation.
+
+CLI:  python baseline/sort_python.py SEQ_DIR [SEQ_DIR...] [--out OUT_DIR]
+      prints a one-line JSON timing record to stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+from scipy.optimize import linear_sum_assignment
+
+
+def linear_assignment(cost_matrix):
+    """sklearn.utils.linear_assignment_-compatible wrapper."""
+    x, y = linear_sum_assignment(cost_matrix)
+    return np.array(list(zip(x, y)))
+
+
+def iou_batch(bb_test, bb_gt):
+    """IoU between two sets of boxes [x1,y1,x2,y2]: (D,4) x (T,4) -> (D,T)."""
+    bb_gt = np.expand_dims(bb_gt, 0)
+    bb_test = np.expand_dims(bb_test, 1)
+
+    xx1 = np.maximum(bb_test[..., 0], bb_gt[..., 0])
+    yy1 = np.maximum(bb_test[..., 1], bb_gt[..., 1])
+    xx2 = np.minimum(bb_test[..., 2], bb_gt[..., 2])
+    yy2 = np.minimum(bb_test[..., 3], bb_gt[..., 3])
+    w = np.maximum(0.0, xx2 - xx1)
+    h = np.maximum(0.0, yy2 - yy1)
+    wh = w * h
+    o = wh / (
+        (bb_test[..., 2] - bb_test[..., 0]) * (bb_test[..., 3] - bb_test[..., 1])
+        + (bb_gt[..., 2] - bb_gt[..., 0]) * (bb_gt[..., 3] - bb_gt[..., 1])
+        - wh
+    )
+    return o
+
+
+def convert_bbox_to_z(bbox):
+    """[x1,y1,x2,y2] -> [u,v,s,r] column vector."""
+    w = bbox[2] - bbox[0]
+    h = bbox[3] - bbox[1]
+    x = bbox[0] + w / 2.0
+    y = bbox[1] + h / 2.0
+    s = w * h
+    r = w / float(h)
+    return np.array([x, y, s, r]).reshape((4, 1))
+
+
+def convert_x_to_bbox(x, score=None):
+    """[u,v,s,r,...] -> [x1,y1,x2,y2]."""
+    w = np.sqrt(x[2] * x[3])
+    h = x[2] / w
+    if score is None:
+        return np.array(
+            [x[0] - w / 2.0, x[1] - h / 2.0, x[0] + w / 2.0, x[1] + h / 2.0]
+        ).reshape((1, 4))
+    return np.array(
+        [x[0] - w / 2.0, x[1] - h / 2.0, x[0] + w / 2.0, x[1] + h / 2.0, score]
+    ).reshape((1, 5))
+
+
+class KalmanFilter:
+    """Minimal filterpy.kalman.KalmanFilter equivalent (numpy matrices)."""
+
+    def __init__(self, dim_x, dim_z):
+        self.dim_x = dim_x
+        self.dim_z = dim_z
+        self.x = np.zeros((dim_x, 1))
+        self.P = np.eye(dim_x)
+        self.Q = np.eye(dim_x)
+        self.F = np.eye(dim_x)
+        self.H = np.zeros((dim_z, dim_x))
+        self.R = np.eye(dim_z)
+        self._I = np.eye(dim_x)
+
+    def predict(self):
+        self.x = self.F @ self.x
+        self.P = self.F @ self.P @ self.F.T + self.Q
+
+    def update(self, z):
+        y = z - self.H @ self.x
+        PHT = self.P @ self.H.T
+        S = self.H @ PHT + self.R
+        K = PHT @ np.linalg.inv(S)
+        self.x = self.x + K @ y
+        I_KH = self._I - K @ self.H
+        # Joseph form, as filterpy's default update computes it.
+        self.P = I_KH @ self.P @ I_KH.T + K @ self.R @ K.T
+
+
+class KalmanBoxTracker:
+    """Internal state of an individual tracked object (bbox)."""
+
+    count = 0
+
+    def __init__(self, bbox):
+        self.kf = KalmanFilter(dim_x=7, dim_z=4)
+        self.kf.F = np.array(
+            [
+                [1, 0, 0, 0, 1, 0, 0],
+                [0, 1, 0, 0, 0, 1, 0],
+                [0, 0, 1, 0, 0, 0, 1],
+                [0, 0, 0, 1, 0, 0, 0],
+                [0, 0, 0, 0, 1, 0, 0],
+                [0, 0, 0, 0, 0, 1, 0],
+                [0, 0, 0, 0, 0, 0, 1],
+            ],
+            dtype=float,
+        )
+        self.kf.H = np.array(
+            [
+                [1, 0, 0, 0, 0, 0, 0],
+                [0, 1, 0, 0, 0, 0, 0],
+                [0, 0, 1, 0, 0, 0, 0],
+                [0, 0, 0, 1, 0, 0, 0],
+            ],
+            dtype=float,
+        )
+        self.kf.R[2:, 2:] *= 10.0
+        self.kf.P[4:, 4:] *= 1000.0
+        self.kf.P *= 10.0
+        self.kf.Q[-1, -1] *= 0.01
+        self.kf.Q[4:, 4:] *= 0.01
+
+        self.kf.x[:4] = convert_bbox_to_z(bbox)
+        self.time_since_update = 0
+        self.id = KalmanBoxTracker.count
+        KalmanBoxTracker.count += 1
+        self.history = []
+        self.hits = 0
+        self.hit_streak = 0
+        self.age = 0
+
+    def update(self, bbox):
+        self.time_since_update = 0
+        self.history = []
+        self.hits += 1
+        self.hit_streak += 1
+        self.kf.update(convert_bbox_to_z(bbox))
+
+    def predict(self):
+        if (self.kf.x[6] + self.kf.x[2]) <= 0:
+            self.kf.x[6] *= 0.0
+        self.kf.predict()
+        self.age += 1
+        if self.time_since_update > 0:
+            self.hit_streak = 0
+        self.time_since_update += 1
+        self.history.append(convert_x_to_bbox(self.kf.x))
+        return self.history[-1]
+
+    def get_state(self):
+        return convert_x_to_bbox(self.kf.x)
+
+
+def associate_detections_to_trackers(detections, trackers, iou_threshold=0.3):
+    """Assign detections to tracked objects (both as [x1,y1,x2,y2] boxes)."""
+    if len(trackers) == 0:
+        return (
+            np.empty((0, 2), dtype=int),
+            np.arange(len(detections)),
+            np.empty((0, 5), dtype=int),
+        )
+
+    iou_matrix = iou_batch(detections, trackers)
+
+    if min(iou_matrix.shape) > 0:
+        a = (iou_matrix > iou_threshold).astype(np.int32)
+        if a.sum(1).max() == 1 and a.sum(0).max() == 1:
+            matched_indices = np.stack(np.where(a), axis=1)
+        else:
+            matched_indices = linear_assignment(-iou_matrix)
+    else:
+        matched_indices = np.empty(shape=(0, 2))
+
+    unmatched_detections = [
+        d for d in range(len(detections)) if d not in matched_indices[:, 0]
+    ]
+    unmatched_trackers = [
+        t for t in range(len(trackers)) if t not in matched_indices[:, 1]
+    ]
+
+    matches = []
+    for m in matched_indices:
+        if iou_matrix[m[0], m[1]] < iou_threshold:
+            unmatched_detections.append(m[0])
+            unmatched_trackers.append(m[1])
+        else:
+            matches.append(m.reshape(1, 2))
+    if len(matches) == 0:
+        matches = np.empty((0, 2), dtype=int)
+    else:
+        matches = np.concatenate(matches, axis=0)
+
+    return matches, np.array(unmatched_detections), np.array(unmatched_trackers)
+
+
+class Sort:
+    def __init__(self, max_age=1, min_hits=3, iou_threshold=0.3):
+        self.max_age = max_age
+        self.min_hits = min_hits
+        self.iou_threshold = iou_threshold
+        self.trackers = []
+        self.frame_count = 0
+
+    def update(self, dets=np.empty((0, 5))):
+        """Process one frame; dets is (N,5) [x1,y1,x2,y2,score].
+
+        Must be called once per frame even with empty detections.
+        Returns (M,5) [x1,y1,x2,y2,track_id].
+        """
+        self.frame_count += 1
+        trks = np.zeros((len(self.trackers), 5))
+        to_del = []
+        ret = []
+        for t, trk in enumerate(trks):
+            pos = self.trackers[t].predict()[0]
+            trk[:] = [pos[0], pos[1], pos[2], pos[3], 0]
+            if np.any(np.isnan(pos)):
+                to_del.append(t)
+        trks = np.ma.compress_rows(np.ma.masked_invalid(trks))
+        for t in reversed(to_del):
+            self.trackers.pop(t)
+        matched, unmatched_dets, unmatched_trks = associate_detections_to_trackers(
+            dets[:, :4], trks[:, :4], self.iou_threshold
+        )
+
+        for m in matched:
+            self.trackers[m[1]].update(dets[m[0], :4])
+
+        for i in unmatched_dets:
+            trk = KalmanBoxTracker(dets[i, :4])
+            self.trackers.append(trk)
+
+        i = len(self.trackers)
+        for trk in reversed(self.trackers):
+            d = trk.get_state()[0]
+            if (trk.time_since_update < 1) and (
+                trk.hit_streak >= self.min_hits or self.frame_count <= self.min_hits
+            ):
+                ret.append(np.concatenate((d, [trk.id + 1])).reshape(1, -1))
+            i -= 1
+            if trk.time_since_update > self.max_age:
+                self.trackers.pop(i)
+        if len(ret) > 0:
+            return np.concatenate(ret)
+        return np.empty((0, 5))
+
+
+# --------------------------------------------------------------------------
+# CLI: run the tracker over MOT det.txt sequences, report timing.
+# --------------------------------------------------------------------------
+
+
+def load_mot_dets(path):
+    """MOT det.txt -> dict frame -> (N,5) [x1,y1,x2,y2,score]."""
+    data = np.loadtxt(path, delimiter=",", ndmin=2)
+    frames = {}
+    if data.size == 0:
+        return frames
+    for row in data:
+        f = int(row[0])
+        x, y, w, h, score = row[2], row[3], row[4], row[5], row[6]
+        det = np.array([x, y, x + w, y + h, score])
+        frames.setdefault(f, []).append(det)
+    return {f: np.array(v) for f, v in frames.items()}
+
+
+def run_sequence(det_path, out_path=None):
+    """Track one sequence; returns (n_frames, seconds_in_update)."""
+    frames = load_mot_dets(det_path)
+    if not frames:
+        return 0, 0.0
+    max_frame = max(frames)
+    tracker = Sort(max_age=1, min_hits=3, iou_threshold=0.3)
+    out_lines = []
+    total = 0.0
+    for f in range(1, max_frame + 1):
+        dets = frames.get(f, np.empty((0, 5)))
+        t0 = time.perf_counter()
+        tracks = tracker.update(dets)
+        total += time.perf_counter() - t0
+        if out_path is not None:
+            for d in tracks:
+                out_lines.append(
+                    "%d,%d,%.2f,%.2f,%.2f,%.2f,1,-1,-1,-1"
+                    % (f, d[4], d[0], d[1], d[2] - d[0], d[3] - d[1])
+                )
+    if out_path is not None:
+        with open(out_path, "w") as fh:
+            fh.write("\n".join(out_lines))
+    return max_frame, total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("seqs", nargs="+", help="det.txt files")
+    ap.add_argument("--out", default=None, help="directory for track output")
+    args = ap.parse_args()
+
+    total_frames, total_time = 0, 0.0
+    for det in args.seqs:
+        out = None
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            out = os.path.join(
+                args.out, os.path.basename(os.path.dirname(det) or det) + ".txt"
+            )
+        nf, tt = run_sequence(det, out)
+        total_frames += nf
+        total_time += tt
+
+    print(
+        json.dumps(
+            {
+                "impl": "python-baseline",
+                "frames": total_frames,
+                "seconds": total_time,
+                "fps": total_frames / total_time if total_time > 0 else 0.0,
+            }
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""AOT compile path: lower the L2 tracker-bank graphs to HLO text.
+
+Run once by ``make artifacts``; Python never runs on the request path.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.
+
+Outputs (under artifacts/):
+  bank_predict_iou.hlo.txt   T=16,D=16 fused predict + bbox + IoU matrix
+  bank_update.hlo.txt        T=16 masked Joseph-form update
+  bank_predict_T{n}.hlo.txt  bare predict at bank sizes for the E8 ablation
+  parity.json                golden KF trajectory + IoU matrix (from ref.py)
+                             consumed by the Rust unit tests
+  golden_tracks.json         end-to-end SORT output of the python baseline
+                             on a deterministic mini-sequence, consumed by
+                             the Rust integration tests
+  manifest.json              artifact index with shapes/dtypes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import ref  # noqa: E402
+
+PREDICT_SWEEP_T = [1, 4, 16, 64, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default elides
+    # dense array constants as `constant({...})`, which the xla crate's
+    # text parser silently reconstructs as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_artifacts(outdir: str) -> dict:
+    """Lower every L2 entry point; return the manifest fragment."""
+    arts = {}
+
+    lowered = jax.jit(model.bank_predict_iou).lower(*model.example_args())
+    path = os.path.join(outdir, "bank_predict_iou.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    arts["bank_predict_iou"] = {
+        "file": "bank_predict_iou.hlo.txt",
+        "t": model.BANK_T,
+        "d": model.BANK_D,
+        "inputs": [
+            ["x", [model.BANK_T, 7]],
+            ["p", [model.BANK_T, 7, 7]],
+            ["mask", [model.BANK_T, 1]],
+            ["dets", [model.BANK_D, 4]],
+            ["dmask", [model.BANK_D, 1]],
+        ],
+        "outputs": [
+            ["x", [model.BANK_T, 7]],
+            ["p", [model.BANK_T, 7, 7]],
+            ["boxes", [model.BANK_T, 4]],
+            ["iou", [model.BANK_D, model.BANK_T]],
+        ],
+    }
+
+    lowered = jax.jit(model.bank_update).lower(*model.example_update_args())
+    path = os.path.join(outdir, "bank_update.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    arts["bank_update"] = {
+        "file": "bank_update.hlo.txt",
+        "t": model.BANK_T,
+        "inputs": [
+            ["x", [model.BANK_T, 7]],
+            ["p", [model.BANK_T, 7, 7]],
+            ["z", [model.BANK_T, 4]],
+            ["zmask", [model.BANK_T, 1]],
+        ],
+        "outputs": [
+            ["x", [model.BANK_T, 7]],
+            ["p", [model.BANK_T, 7, 7]],
+        ],
+    }
+
+    for t in PREDICT_SWEEP_T:
+        lowered = jax.jit(model.bank_predict_only).lower(
+            jax.ShapeDtypeStruct((t, 7), jnp.float64),
+            jax.ShapeDtypeStruct((t, 7, 7), jnp.float64),
+            jax.ShapeDtypeStruct((t, 1), jnp.float64),
+        )
+        name = f"bank_predict_T{t}"
+        with open(os.path.join(outdir, name + ".hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        arts[name] = {
+            "file": name + ".hlo.txt",
+            "t": t,
+            "inputs": [["x", [t, 7]], ["p", [t, 7, 7]], ["mask", [t, 1]]],
+            "outputs": [["x", [t, 7]], ["p", [t, 7, 7]]],
+        }
+
+    return arts
+
+
+# --------------------------------------------------------------------------
+# Golden data for the Rust tests.
+# --------------------------------------------------------------------------
+
+
+def _mini_scenario(steps: int = 12):
+    """Deterministic measurements for 3 objects moving linearly."""
+    seeds = np.array(
+        [
+            [10.0, 20.0, 60.0, 140.0],
+            [200.0, 50.0, 260.0, 170.0],
+            [400.0, 300.0, 470.0, 420.0],
+        ]
+    )
+    vel = np.array([[3.0, 1.5], [-2.0, 0.5], [1.0, -2.0]])
+    frames = []
+    for k in range(steps):
+        boxes = seeds.copy()
+        boxes[:, 0] += vel[:, 0] * k
+        boxes[:, 2] += vel[:, 0] * k
+        boxes[:, 1] += vel[:, 1] * k
+        boxes[:, 3] += vel[:, 1] * k
+        # mild deterministic "detector jitter"
+        boxes[:, 0] += 0.3 * np.sin(0.7 * k + np.arange(3))
+        boxes[:, 2] += 0.2 * np.cos(0.5 * k + np.arange(3))
+        frames.append(boxes)
+    return frames
+
+
+def export_parity(outdir: str) -> None:
+    """Golden Kalman trajectory + IoU matrix from the jnp oracle."""
+    frames = _mini_scenario()
+    t = 3
+    x = np.zeros((t, 7))
+    p = np.zeros((t, 7, 7))
+    for i in range(t):
+        z0 = np.asarray(ref.bbox_to_z(jnp.asarray(frames[0][i])))
+        xi, pi = ref.new_tracker_state(jnp.asarray(z0))
+        x[i], p[i] = np.asarray(xi), np.asarray(pi)
+    mask = np.ones((t, 1))
+
+    steps = []
+    for k in range(1, len(frames)):
+        xn, pn = ref.predict_ref(jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask))
+        x_pred, p_pred = np.asarray(xn), np.asarray(pn)
+        z = np.asarray(ref.bbox_to_z(jnp.asarray(frames[k])))
+        xu, pu = ref.update_ref(
+            jnp.asarray(x_pred), jnp.asarray(p_pred), jnp.asarray(z), jnp.asarray(mask)
+        )
+        x, p = np.asarray(xu), np.asarray(pu)
+        steps.append(
+            {
+                "frame": k,
+                "z": z.tolist(),
+                "x_pred": x_pred.tolist(),
+                "p_pred_diag": [np.diag(p_pred[i]).tolist() for i in range(t)],
+                "x_post": x.tolist(),
+                "p_post": [p[i].tolist() for i in range(t)],
+            }
+        )
+
+    dets = np.array(
+        [
+            [0.0, 0.0, 10.0, 10.0],
+            [5.0, 5.0, 15.0, 15.0],
+            [100.0, 100.0, 120.0, 140.0],
+            [0.0, 0.0, 0.0, 0.0],
+        ]
+    )
+    boxes = np.array(
+        [
+            [0.0, 0.0, 10.0, 10.0],
+            [8.0, 8.0, 18.0, 18.0],
+            [95.0, 110.0, 125.0, 150.0],
+        ]
+    )
+    iou = np.asarray(ref.iou_ref(jnp.asarray(dets), jnp.asarray(boxes)))
+
+    parity = {
+        "description": "golden SORT KF trajectory (ref.py oracle); "
+        "consumed by rust/src/sort tests",
+        "constants": {
+            "F": np.asarray(ref.F).tolist(),
+            "H": np.asarray(ref.H).tolist(),
+            "Q": np.asarray(ref.Q).tolist(),
+            "R": np.asarray(ref.R).tolist(),
+            "P0": np.asarray(ref.P0).tolist(),
+        },
+        "seed_boxes": [f.tolist() for f in _mini_scenario(1)],
+        "frames": [f.tolist() for f in _mini_scenario()],
+        "steps": steps,
+        "iou_case": {
+            "dets": dets.tolist(),
+            "boxes": boxes.tolist(),
+            "iou": iou.tolist(),
+        },
+    }
+    with open(os.path.join(outdir, "parity.json"), "w") as f:
+        json.dump(parity, f)
+
+
+def export_golden_tracks(outdir: str) -> None:
+    """Run the python baseline SORT on the mini scenario; dump its output."""
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from baseline.sort_python import Sort  # noqa: E402
+
+    frames = _mini_scenario()
+    tracker = Sort(max_age=1, min_hits=3, iou_threshold=0.3)
+    out = []
+    for boxes in frames:
+        dets = np.hstack([boxes, np.ones((boxes.shape[0], 1))])  # score col
+        tracks = tracker.update(dets)
+        out.append(tracks.tolist())
+    with open(os.path.join(outdir, "golden_tracks.json"), "w") as f:
+        json.dump(
+            {
+                "params": {"max_age": 1, "min_hits": 3, "iou_threshold": 0.3},
+                "frames": [f.tolist() for f in frames],
+                "tracks": out,
+            },
+            f,
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    arts = lower_artifacts(args.outdir)
+    export_parity(args.outdir)
+    export_golden_tracks(args.outdir)
+
+    manifest = {
+        "dtype": "f64",
+        "dim_x": 7,
+        "dim_z": 4,
+        "bank_t": model.BANK_T,
+        "bank_d": model.BANK_D,
+        "artifacts": arts,
+    }
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(arts)} HLO artifacts + parity/golden/manifest to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

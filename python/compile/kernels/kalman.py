@@ -1,0 +1,208 @@
+"""Pallas kernels for the batched SORT Kalman tracker bank (L1).
+
+The paper's thesis is that SORT's matrices are *extremely small* (7x7,
+4x7, 4x4): one tracker cannot feed parallel hardware.  The profitable
+axis is the batch of independent trackers/streams — the accelerator
+analog of the paper's throughput scaling.  These kernels therefore
+process a *bank* of T tracker slots, tiled over the batch dimension by
+BlockSpec; within a block, every 7x7/4x4 operand lives in VMEM and the
+batched matmuls map onto the MXU/VPU.
+
+The kernels are lowered with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls); real-TPU efficiency is estimated in
+DESIGN.md from the BlockSpec footprint.
+
+Correctness contract: bit-for-bit semantics of ``ref.py`` (same guard,
+Joseph-form update), validated by ``python/tests/test_kalman_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DIM_X = ref.DIM_X
+DIM_Z = ref.DIM_Z
+
+# Default batch tile: 8 tracker slots per grid step.  8 x (7x7) f64
+# covariances ≈ 3.1 KiB — tiny next to ~16 MiB VMEM, so the tile size is
+# chosen for MXU occupancy of the batched matmul, not capacity.
+DEFAULT_BLOCK_T = 8
+
+
+def _block_t(t: int) -> int:
+    """Largest tile <= DEFAULT_BLOCK_T that divides the bank size."""
+    bt = min(DEFAULT_BLOCK_T, t)
+    while t % bt != 0:
+        bt -= 1
+    return max(bt, 1)
+
+
+# --------------------------------------------------------------------------
+# predict
+# --------------------------------------------------------------------------
+
+
+def _predict_kernel(x_ref, p_ref, m_ref, f_ref, q_ref, xo_ref, po_ref):
+    f = f_ref[...]          # (7, 7) constant, broadcast to every block
+    q = q_ref[...]          # (7, 7)
+
+    x = x_ref[...]          # (BT, 7)
+    p = p_ref[...]          # (BT, 7, 7)
+    m = m_ref[...]          # (BT, 1)
+
+    # SORT's negative-area guard: if x[6] + x[2] <= 0 then x[6] <- 0.
+    # Written as a column-mask select (TPU-friendly: no scatter).
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    guard = (x[:, 6:7] + x[:, 2:3] <= 0.0) & (col == DIM_X - 1)
+    xg = jnp.where(guard, jnp.zeros_like(x), x)
+
+    xn = xg @ f.T                                       # (BT,7)
+    pn = jnp.matmul(jnp.matmul(f, p), f.T) + q          # (BT,7,7)
+
+    xo_ref[...] = jnp.where(m > 0, xn, x)
+    po_ref[...] = jnp.where(m[:, :, None] > 0, pn, p)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def predict(x, p, mask, *, block_t: int | None = None):
+    """Batched SORT predict over a tracker bank.
+
+    x: (T,7), p: (T,7,7), mask: (T,1).  Returns (x', P').
+    """
+    t = x.shape[0]
+    bt = block_t or _block_t(t)
+    dtype = x.dtype
+    grid = (t // bt,)
+    f = ref.F.astype(dtype)
+    q = ref.Q.astype(dtype)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, DIM_X), lambda i: (i, 0)),
+            pl.BlockSpec((bt, DIM_X, DIM_X), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((DIM_X, DIM_X), lambda i: (0, 0)),
+            pl.BlockSpec((DIM_X, DIM_X), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, DIM_X), lambda i: (i, 0)),
+            pl.BlockSpec((bt, DIM_X, DIM_X), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, DIM_X), dtype),
+            jax.ShapeDtypeStruct((t, DIM_X, DIM_X), dtype),
+        ],
+        interpret=True,
+    )(x, p, mask, f, q)
+
+
+# --------------------------------------------------------------------------
+# update
+# --------------------------------------------------------------------------
+
+
+def _inv2x2(m):
+    """Closed-form batched 2x2 inverse: m is (..., 2, 2)."""
+    a = m[..., 0:1, 0:1]
+    b = m[..., 0:1, 1:2]
+    c = m[..., 1:2, 0:1]
+    d = m[..., 1:2, 1:2]
+    det = a * d - b * c
+    top = jnp.concatenate([d, -b], axis=-1)
+    bot = jnp.concatenate([-c, a], axis=-1)
+    return jnp.concatenate([top, bot], axis=-2) / det
+
+
+def _inv4x4_spd(s):
+    """Batched 4x4 SPD inverse via 2x2-block Schur complement.
+
+    s: (..., 4, 4) symmetric positive definite.  This is the kernel-side
+    stand-in for the paper's "cholesky/Inv" step: all arithmetic is
+    batched 2x2 matmuls, which vectorize cleanly over the tracker bank.
+    """
+    a = s[..., :2, :2]
+    b = s[..., :2, 2:]
+    c = s[..., 2:, :2]
+    d = s[..., 2:, 2:]
+    ai = _inv2x2(a)
+    schur = d - jnp.matmul(jnp.matmul(c, ai), b)
+    si = _inv2x2(schur)
+    aib = jnp.matmul(ai, b)          # (...,2,2)
+    cai = jnp.matmul(c, ai)          # (...,2,2)
+    tl = ai + jnp.matmul(jnp.matmul(aib, si), cai)
+    tr = -jnp.matmul(aib, si)
+    bl = -jnp.matmul(si, cai)
+    top = jnp.concatenate([tl, tr], axis=-1)
+    bot = jnp.concatenate([bl, si], axis=-1)
+    return jnp.concatenate([top, bot], axis=-2)
+
+
+def _update_kernel(x_ref, p_ref, z_ref, m_ref, h_ref, r_ref, xo_ref, po_ref):
+    h = h_ref[...]          # (4, 7) constant, broadcast to every block
+    r = r_ref[...]          # (4, 4)
+    # I_7 built in-kernel from iota (no captured constants allowed).
+    rows = jax.lax.broadcasted_iota(jnp.int32, (DIM_X, DIM_X), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (DIM_X, DIM_X), 1)
+    eye = jnp.where(rows == cols, jnp.ones((), h.dtype), jnp.zeros((), h.dtype))
+
+    x = x_ref[...]          # (BT,7)
+    p = p_ref[...]          # (BT,7,7)
+    z = z_ref[...]          # (BT,4)
+    m = m_ref[...]          # (BT,1)
+
+    y = z - x @ h.T                                  # (BT,4)
+    pht = jnp.matmul(p, h.T)                         # (BT,7,4)
+    s = jnp.matmul(h, pht) + r                       # (BT,4,4)
+    sinv = _inv4x4_spd(s)                            # (BT,4,4)
+    k = jnp.matmul(pht, sinv)                        # (BT,7,4)
+
+    xn = x + jnp.matmul(k, y[:, :, None])[:, :, 0]
+    ikh = eye - jnp.matmul(k, h)                     # (BT,7,7)
+    pn = jnp.matmul(jnp.matmul(ikh, p), jnp.swapaxes(ikh, -1, -2)) + jnp.matmul(
+        jnp.matmul(k, r), jnp.swapaxes(k, -1, -2)
+    )
+
+    xo_ref[...] = jnp.where(m > 0, xn, x)
+    po_ref[...] = jnp.where(m[:, :, None] > 0, pn, p)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def update(x, p, z, zmask, *, block_t: int | None = None):
+    """Batched SORT update (Joseph form) over a tracker bank.
+
+    x: (T,7), p: (T,7,7), z: (T,4), zmask: (T,1).  Returns (x', P').
+    """
+    t = x.shape[0]
+    bt = block_t or _block_t(t)
+    dtype = x.dtype
+    grid = (t // bt,)
+    h = ref.H.astype(dtype)
+    r = ref.R.astype(dtype)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, DIM_X), lambda i: (i, 0)),
+            pl.BlockSpec((bt, DIM_X, DIM_X), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, DIM_Z), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+            pl.BlockSpec((DIM_Z, DIM_X), lambda i: (0, 0)),
+            pl.BlockSpec((DIM_Z, DIM_Z), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, DIM_X), lambda i: (i, 0)),
+            pl.BlockSpec((bt, DIM_X, DIM_X), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, DIM_X), dtype),
+            jax.ShapeDtypeStruct((t, DIM_X, DIM_X), dtype),
+        ],
+        interpret=True,
+    )(x, p, z, zmask, h, r)

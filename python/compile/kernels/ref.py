@@ -1,0 +1,206 @@
+"""Pure-jnp reference oracle for the SORT numeric core.
+
+This module is the single source of truth for the paper's Kalman-filter
+constants (the 7-state constant-velocity bounding-box model of SORT,
+Bewley et al. 2016) and for the batched semantics the Pallas kernels must
+match.  Everything here is written with plain jax.numpy ops — no Pallas —
+so pytest can diff kernel outputs against it, and `aot.py` can export a
+golden trajectory (`artifacts/parity.json`) that the Rust implementation
+is unit-tested against.
+
+State layout (SORT):  x = [u, v, s, r, du, dv, ds]
+  u, v : bbox center;  s : scale (area);  r : aspect ratio (constant).
+Measurement:          z = [u, v, s, r]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# SORT Kalman constants (exactly abewley/sort's KalmanBoxTracker).
+# --------------------------------------------------------------------------
+
+DIM_X = 7
+DIM_Z = 4
+
+
+def _f_mat(dtype=jnp.float64) -> jnp.ndarray:
+    """State transition: constant velocity, dt = 1."""
+    f = np.eye(DIM_X)
+    f[0, 4] = 1.0
+    f[1, 5] = 1.0
+    f[2, 6] = 1.0
+    return jnp.asarray(f, dtype=dtype)
+
+
+def _h_mat(dtype=jnp.float64) -> jnp.ndarray:
+    """Measurement: observe [u, v, s, r]."""
+    h = np.zeros((DIM_Z, DIM_X))
+    for i in range(DIM_Z):
+        h[i, i] = 1.0
+    return jnp.asarray(h, dtype=dtype)
+
+
+def _q_mat(dtype=jnp.float64) -> jnp.ndarray:
+    """Process noise: Q = eye; Q[-1,-1] *= 0.01; Q[4:,4:] *= 0.01."""
+    q = np.eye(DIM_X)
+    q[-1, -1] *= 0.01
+    q[4:, 4:] *= 0.01
+    return jnp.asarray(q, dtype=dtype)
+
+
+def _r_mat(dtype=jnp.float64) -> jnp.ndarray:
+    """Measurement noise: R = eye; R[2:,2:] *= 10."""
+    r = np.eye(DIM_Z)
+    r[2:, 2:] *= 10.0
+    return jnp.asarray(r, dtype=dtype)
+
+
+def _p0_mat(dtype=jnp.float64) -> jnp.ndarray:
+    """Initial covariance: P = eye; P[4:,4:] *= 1000; P *= 10."""
+    p = np.eye(DIM_X)
+    p[4:, 4:] *= 1000.0
+    p *= 10.0
+    return jnp.asarray(p, dtype=dtype)
+
+
+F = _f_mat()
+H = _h_mat()
+Q = _q_mat()
+R = _r_mat()
+P0 = _p0_mat()
+
+# --------------------------------------------------------------------------
+# BBox conversions (SORT's convert_bbox_to_z / convert_x_to_bbox).
+# --------------------------------------------------------------------------
+
+
+def bbox_to_z(bbox: jnp.ndarray) -> jnp.ndarray:
+    """[x1,y1,x2,y2] -> [u,v,s,r]; batched over leading dims."""
+    bbox = jnp.asarray(bbox)
+    w = bbox[..., 2] - bbox[..., 0]
+    h = bbox[..., 3] - bbox[..., 1]
+    u = bbox[..., 0] + w / 2.0
+    v = bbox[..., 1] + h / 2.0
+    s = w * h
+    r = w / h
+    return jnp.stack([u, v, s, r], axis=-1)
+
+
+def x_to_bbox(x: jnp.ndarray) -> jnp.ndarray:
+    """state (...,7) -> bbox [x1,y1,x2,y2]; batched over leading dims."""
+    x = jnp.asarray(x)
+    s = x[..., 2]
+    r = x[..., 3]
+    w = jnp.sqrt(s * r)
+    h = s / w
+    return jnp.stack(
+        [
+            x[..., 0] - w / 2.0,
+            x[..., 1] - h / 2.0,
+            x[..., 0] + w / 2.0,
+            x[..., 1] + h / 2.0,
+        ],
+        axis=-1,
+    )
+
+
+# --------------------------------------------------------------------------
+# Batched Kalman predict / update over a tracker bank (T slots).
+# --------------------------------------------------------------------------
+
+
+def predict_ref(x, P, mask):
+    """Batched SORT predict.
+
+    x    : (T, 7)    states
+    P    : (T, 7, 7) covariances
+    mask : (T, 1)    1.0 for live slots, 0.0 for dead (passed through).
+
+    Returns (x', P').  Implements SORT's negative-area guard:
+    if x[6] + x[2] <= 0 then x[6] <- 0 before the linear predict.
+    """
+    x = jnp.asarray(x)
+    P = jnp.asarray(P)
+    mask = jnp.asarray(mask)
+    f = F.astype(x.dtype)
+    q = Q.astype(x.dtype)
+
+    guard = x[:, 6] + x[:, 2] <= 0.0
+    x6 = jnp.where(guard, 0.0, x[:, 6])
+    xg = x.at[:, 6].set(x6)
+
+    xn = xg @ f.T                                   # (T,7)
+    Pn = jnp.matmul(jnp.matmul(f, P), f.T) + q      # (T,7,7)
+
+    m1 = mask                                       # (T,1)
+    m2 = mask[:, :, None]                           # (T,1,1)
+    return jnp.where(m1 > 0, xn, x), jnp.where(m2 > 0, Pn, P)
+
+
+def update_ref(x, P, z, zmask):
+    """Batched SORT/filterpy update (Joseph-form covariance).
+
+    x     : (T, 7)    predicted states
+    P     : (T, 7, 7) predicted covariances
+    z     : (T, 4)    measurements ([u,v,s,r]) for matched slots
+    zmask : (T, 1)    1.0 where a measurement exists.
+
+    y = z - Hx;  S = HPH' + R;  K = PH'S^-1
+    x' = x + Ky;  P' = (I-KH)P(I-KH)' + KRK'
+    """
+    x = jnp.asarray(x)
+    P = jnp.asarray(P)
+    z = jnp.asarray(z)
+    zmask = jnp.asarray(zmask)
+    h = H.astype(x.dtype)
+    r = R.astype(x.dtype)
+    eye = jnp.eye(DIM_X, dtype=x.dtype)
+
+    y = z - x @ h.T                                 # (T,4)
+    PHt = jnp.matmul(P, h.T)                        # (T,7,4)
+    S = jnp.matmul(h, PHt) + r                      # (T,4,4)
+    Sinv = jnp.linalg.inv(S)                        # (T,4,4)
+    K = jnp.matmul(PHt, Sinv)                       # (T,7,4)
+
+    xn = x + jnp.matmul(K, y[:, :, None])[:, :, 0]  # (T,7)
+    IKH = eye - jnp.matmul(K, h)                    # (T,7,7)
+    Pn = jnp.matmul(jnp.matmul(IKH, P), jnp.swapaxes(IKH, -1, -2)) + jnp.matmul(
+        jnp.matmul(K, r), jnp.swapaxes(K, -1, -2)
+    )
+
+    m1 = zmask
+    m2 = zmask[:, :, None]
+    return jnp.where(m1 > 0, xn, x), jnp.where(m2 > 0, Pn, P)
+
+
+def iou_ref(dets, boxes):
+    """IoU matrix between detections (D,4) and tracker boxes (T,4).
+
+    Boxes are [x1,y1,x2,y2].  Degenerate/empty overlaps yield IoU 0.
+    """
+    dets = jnp.asarray(dets)
+    boxes = jnp.asarray(boxes)
+    d = dets[:, None, :]    # (D,1,4)
+    t = boxes[None, :, :]   # (1,T,4)
+
+    xx1 = jnp.maximum(d[..., 0], t[..., 0])
+    yy1 = jnp.maximum(d[..., 1], t[..., 1])
+    xx2 = jnp.minimum(d[..., 2], t[..., 2])
+    yy2 = jnp.minimum(d[..., 3], t[..., 3])
+    w = jnp.maximum(0.0, xx2 - xx1)
+    h = jnp.maximum(0.0, yy2 - yy1)
+    inter = w * h
+    area_d = (d[..., 2] - d[..., 0]) * (d[..., 3] - d[..., 1])
+    area_t = (t[..., 2] - t[..., 0]) * (t[..., 3] - t[..., 1])
+    union = area_d + area_t - inter
+    return jnp.where(union > 0, inter / jnp.where(union > 0, union, 1.0), 0.0)
+
+
+def new_tracker_state(z):
+    """Initial (x, P) for a fresh tracker seeded by measurement z=(4,)."""
+    z = jnp.asarray(z)
+    x = jnp.concatenate([z, jnp.zeros((3,), dtype=z.dtype)])
+    return x, P0.astype(z.dtype)

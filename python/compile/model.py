@@ -1,0 +1,91 @@
+"""L2: the SORT tracker-bank compute graph (JAX, build-time only).
+
+SORT's per-frame numeric work, reformulated as a fixed-shape *bank* of T
+tracker slots so that it AOT-compiles to static HLO the Rust coordinator
+can execute.  The control-flow-heavy parts of SORT (Hungarian assignment,
+tracker lifecycle) stay in Rust (L3); this module owns the dense algebra:
+
+  frame step =  bank_predict_iou  ->  [rust: associate]  ->  bank_update
+
+Both entry points call the Pallas kernels (L1) and add the pure-jnp glue
+XLA fuses around them (bbox conversion, masking).  Dead slots are carried
+through untouched so the Rust side can keep a stable slot <-> tracker id
+mapping.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import iou as iou_kernel
+from .kernels import kalman as kalman_kernel
+from .kernels import ref
+
+DIM_X = ref.DIM_X
+DIM_Z = ref.DIM_Z
+
+# Default bank geometry.  Table I's max simultaneous object count is 13;
+# 16 gives headroom and a power-of-two batch tile.
+BANK_T = 16
+BANK_D = 16
+
+
+def bank_predict_iou(x, p, mask, dets, dmask):
+    """Predict every live tracker slot and score it against detections.
+
+    Inputs:
+      x     (T,7)    tracker states
+      p     (T,7,7)  covariances
+      mask  (T,1)    1.0 = live slot
+      dets  (D,4)    detection boxes [x1,y1,x2,y2] (padded rows arbitrary)
+      dmask (D,1)    1.0 = real detection
+
+    Outputs:
+      xn    (T,7)    predicted states
+      pn    (T,7,7)  predicted covariances
+      boxes (T,4)    predicted boxes (dead slots: 0)
+      iou   (D,T)    IoU cost matrix, zeroed on dead/padded pairs
+    """
+    xn, pn = kalman_kernel.predict(x, p, mask)
+    boxes = ref.x_to_bbox(xn) * mask                 # (T,4); dead slots -> 0
+    boxes = jnp.where(jnp.isfinite(boxes), boxes, 0.0)
+    iou = iou_kernel.iou_matrix(dets, boxes)         # (D,T)
+    iou = iou * dmask * mask[:, 0][None, :]
+    return xn, pn, boxes, iou
+
+
+def bank_update(x, p, z, zmask):
+    """Measurement-update the matched slots; pass the rest through.
+
+    z rows are [u,v,s,r] measurements (SORT's bbox_to_z form), produced by
+    the Rust associator; zmask marks the matched slots.
+    """
+    return kalman_kernel.update(x, p, z, zmask)
+
+
+def bank_predict_only(x, p, mask):
+    """Bare batched predict — the unit used by the xla_vs_native crossover
+    ablation (E8) at several bank sizes."""
+    return kalman_kernel.predict(x, p, mask)
+
+
+def example_args(t: int = BANK_T, d: int = BANK_D, dtype=jnp.float64):
+    """ShapeDtypeStructs for AOT lowering of bank_predict_iou."""
+    return (
+        jax.ShapeDtypeStruct((t, DIM_X), dtype),
+        jax.ShapeDtypeStruct((t, DIM_X, DIM_X), dtype),
+        jax.ShapeDtypeStruct((t, 1), dtype),
+        jax.ShapeDtypeStruct((d, DIM_Z), dtype),
+        jax.ShapeDtypeStruct((d, 1), dtype),
+    )
+
+
+def example_update_args(t: int = BANK_T, dtype=jnp.float64):
+    """ShapeDtypeStructs for AOT lowering of bank_update."""
+    return (
+        jax.ShapeDtypeStruct((t, DIM_X), dtype),
+        jax.ShapeDtypeStruct((t, DIM_X, DIM_X), dtype),
+        jax.ShapeDtypeStruct((t, DIM_Z), dtype),
+        jax.ShapeDtypeStruct((t, 1), dtype),
+    )

@@ -1,0 +1,11 @@
+"""Shared pytest config: enable x64 (the paper's doubles) and make the
+`compile` and `baseline` packages importable regardless of invocation dir."""
+
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,92 @@
+"""AOT pipeline: artifacts get produced, parse as HLO text, and the
+parity/golden exports carry what the Rust tests expect."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    arts = aot.lower_artifacts(str(d))
+    aot.export_parity(str(d))
+    aot.export_golden_tracks(str(d))
+    with open(os.path.join(str(d), "manifest.json"), "w") as f:
+        json.dump({"artifacts": arts}, f)
+    return str(d)
+
+
+def test_all_artifacts_exist(outdir):
+    expected = ["bank_predict_iou.hlo.txt", "bank_update.hlo.txt"] + [
+        f"bank_predict_T{t}.hlo.txt" for t in aot.PREDICT_SWEEP_T
+    ]
+    for name in expected:
+        p = os.path.join(outdir, name)
+        assert os.path.exists(p), name
+        text = open(p).read()
+        assert "ENTRY" in text and "HloModule" in text
+
+
+def test_parity_json_structure(outdir):
+    parity = json.load(open(os.path.join(outdir, "parity.json")))
+    assert len(parity["constants"]["F"]) == 7
+    assert len(parity["constants"]["H"]) == 4
+    steps = parity["steps"]
+    assert len(steps) >= 10
+    s0 = steps[0]
+    assert len(s0["x_pred"]) == 3 and len(s0["x_pred"][0]) == 7
+    assert len(s0["p_post"][0]) == 7 and len(s0["p_post"][0][0]) == 7
+    iou = parity["iou_case"]
+    assert len(iou["iou"]) == len(iou["dets"])
+
+
+def test_parity_constants_match_sort_spec(outdir):
+    parity = json.load(open(os.path.join(outdir, "parity.json")))
+    c = parity["constants"]
+    assert c["Q"][6][6] == pytest.approx(0.0001)
+    assert c["Q"][4][4] == pytest.approx(0.01)
+    assert c["R"][2][2] == pytest.approx(10.0)
+    assert c["P0"][0][0] == pytest.approx(10.0)
+    assert c["P0"][4][4] == pytest.approx(10000.0)
+    assert c["F"][0][4] == pytest.approx(1.0)
+
+
+def test_golden_tracks_structure(outdir):
+    g = json.load(open(os.path.join(outdir, "golden_tracks.json")))
+    assert len(g["tracks"]) == len(g["frames"])
+    # 3 objects tracked steadily after the min_hits warm-up
+    final = g["tracks"][-1]
+    assert len(final) == 3
+    ids = sorted(int(t[4]) for t in final)
+    assert ids == [1, 2, 3]
+
+
+def test_hlo_has_expected_entry_shapes(outdir):
+    text = open(os.path.join(outdir, "bank_update.hlo.txt")).read()
+    t = model.BANK_T
+    assert f"f64[{t},7]" in text
+    assert f"f64[{t},7,7]" in text
+
+
+def test_hlo_text_contains_full_constants(outdir):
+    """Regression: as_hlo_text() must be called with
+    print_large_constants=True — the default elides dense constants as
+    `constant({...})`, which the Rust-side 0.5.1 text parser silently
+    reconstructs as ZEROS (every artifact computed zeros while all
+    Python tests passed)."""
+    for name in ["bank_predict_T1.hlo.txt", "bank_update.hlo.txt", "bank_predict_iou.hlo.txt"]:
+        text = open(os.path.join(outdir, name)).read()
+        assert "constant({...})" not in text, f"{name}: elided constants"
+
+
+def test_manifest_shapes_match_model(outdir):
+    manifest = json.load(open(os.path.join(outdir, "manifest.json")))
+    arts = manifest["artifacts"]
+    assert arts["bank_update"]["inputs"][0][1] == [16, 7]
+    assert arts["bank_predict_iou"]["outputs"][3][1] == [16, 16]
+    for t in [1, 4, 16, 64, 256]:
+        assert arts[f"bank_predict_T{t}"]["t"] == t

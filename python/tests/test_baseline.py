@@ -1,0 +1,133 @@
+"""Baseline SORT (the Table V comparator) behavioral tests.
+
+These pin the *semantics* the Rust implementation must reproduce: the
+golden_tracks.json parity file is only trustworthy if this baseline
+behaves like abewley/sort.
+"""
+
+import numpy as np
+import pytest
+
+from baseline.sort_python import (
+    KalmanBoxTracker,
+    Sort,
+    associate_detections_to_trackers,
+    convert_bbox_to_z,
+    convert_x_to_bbox,
+    iou_batch,
+)
+
+
+@pytest.fixture(autouse=True)
+def reset_id_counter():
+    KalmanBoxTracker.count = 0
+    yield
+
+
+def moving_boxes(k, n=3):
+    seeds = np.array(
+        [[10.0, 20.0, 60.0, 140.0], [200.0, 50.0, 260.0, 170.0], [400.0, 300.0, 470.0, 420.0]]
+    )[:n]
+    vel = np.array([[3.0, 1.5], [-2.0, 0.5], [1.0, -2.0]])[:n]
+    b = seeds.copy()
+    b[:, [0, 2]] += vel[:, 0:1] * k
+    b[:, [1, 3]] += vel[:, 1:2] * k
+    return b
+
+
+def dets_with_score(boxes):
+    return np.hstack([boxes, np.ones((boxes.shape[0], 1))])
+
+
+def test_bbox_roundtrip():
+    b = np.array([10.0, 20.0, 60.0, 140.0])
+    z = convert_bbox_to_z(b)
+    x = np.vstack([z, np.zeros((3, 1))])
+    back = convert_x_to_bbox(x)[0]
+    np.testing.assert_allclose(back, b, rtol=1e-12)
+
+
+def test_iou_batch_basics():
+    a = np.array([[0.0, 0.0, 10.0, 10.0]])
+    got = iou_batch(a, a)
+    assert got[0, 0] == pytest.approx(1.0)
+
+
+def test_association_prefers_best_iou():
+    dets = np.array([[0.0, 0.0, 10.0, 10.0], [100.0, 100.0, 120.0, 120.0]])
+    trks = np.array([[101.0, 101.0, 121.0, 121.0], [1.0, 1.0, 11.0, 11.0]])
+    matched, ud, ut = associate_detections_to_trackers(dets, trks, 0.3)
+    pairs = {tuple(m) for m in matched}
+    assert pairs == {(0, 1), (1, 0)}
+    assert len(ud) == 0 and len(ut) == 0
+
+
+def test_association_low_iou_unmatched():
+    dets = np.array([[0.0, 0.0, 10.0, 10.0]])
+    trks = np.array([[50.0, 50.0, 60.0, 60.0]])
+    matched, ud, ut = associate_detections_to_trackers(dets, trks, 0.3)
+    assert matched.shape[0] == 0
+    assert list(ud) == [0] and list(ut) == [0]
+
+
+def test_sort_reports_after_min_hits():
+    s = Sort(max_age=1, min_hits=3, iou_threshold=0.3)
+    # frames 1..3 are within the min_hits grace period -> reported
+    for k in range(3):
+        tracks = s.update(dets_with_score(moving_boxes(k)))
+        assert tracks.shape[0] == 3
+    # steady state: still 3 tracks with stable ids
+    ids = set(tracks[:, 4])
+    tracks = s.update(dets_with_score(moving_boxes(3)))
+    assert set(tracks[:, 4]) == ids
+
+
+def test_sort_id_stability_over_long_run():
+    s = Sort(max_age=1, min_hits=3, iou_threshold=0.3)
+    ids_seen = set()
+    for k in range(30):
+        tracks = s.update(dets_with_score(moving_boxes(k)))
+        ids_seen.update(tracks[:, 4].tolist())
+    assert ids_seen == {1.0, 2.0, 3.0}   # no id churn on clean data
+
+
+def test_sort_track_survives_single_dropout():
+    """max_age=1: one missed frame keeps the tracker, two kill it."""
+    s = Sort(max_age=1, min_hits=1, iou_threshold=0.3)
+    for k in range(5):
+        s.update(dets_with_score(moving_boxes(k)))
+    n_before = len(s.trackers)
+    s.update(np.empty((0, 5)))          # dropout frame
+    assert len(s.trackers) == n_before  # still alive (coasting)
+    tracks = s.update(dets_with_score(moving_boxes(6)))
+    assert tracks.shape[0] == 3         # re-acquired, same trackers
+    assert len({t.id for t in s.trackers}) == 3
+
+
+def test_sort_track_dies_after_max_age():
+    s = Sort(max_age=1, min_hits=1, iou_threshold=0.3)
+    for k in range(5):
+        s.update(dets_with_score(moving_boxes(k)))
+    s.update(np.empty((0, 5)))
+    s.update(np.empty((0, 5)))
+    assert len(s.trackers) == 0
+
+
+def test_sort_new_object_gets_new_id():
+    s = Sort(max_age=1, min_hits=1, iou_threshold=0.3)
+    for k in range(3):
+        s.update(dets_with_score(moving_boxes(k, n=2)))
+    # new object appears at frame 4; it is reported once it has a hit
+    # streak (new trackers are born with hit_streak 0)
+    boxes = np.vstack([moving_boxes(3), [[700.0, 700.0, 760.0, 800.0]]])
+    s.update(dets_with_score(boxes))
+    boxes = np.vstack([moving_boxes(4), [[700.0, 700.0, 760.0, 800.0]]])
+    tracks = s.update(dets_with_score(boxes))
+    assert tracks.shape[0] == 4
+    assert tracks[:, 4].max() >= 3      # a fresh id was allocated
+
+
+def test_sort_empty_input_returns_empty():
+    s = Sort()
+    out = s.update(np.empty((0, 5)))
+    assert out.shape == (0, 5)

@@ -1,0 +1,101 @@
+"""L1 correctness: the Pallas IoU kernel vs the oracle and vs numpy."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import iou, ref
+
+
+def np_iou(dets, boxes):
+    """Independent numpy formulation (the baseline's iou_batch)."""
+    d = dets[:, None, :]
+    t = boxes[None, :, :]
+    xx1 = np.maximum(d[..., 0], t[..., 0])
+    yy1 = np.maximum(d[..., 1], t[..., 1])
+    xx2 = np.minimum(d[..., 2], t[..., 2])
+    yy2 = np.minimum(d[..., 3], t[..., 3])
+    w = np.maximum(0.0, xx2 - xx1)
+    h = np.maximum(0.0, yy2 - yy1)
+    inter = w * h
+    union = (
+        (d[..., 2] - d[..., 0]) * (d[..., 3] - d[..., 1])
+        + (t[..., 2] - t[..., 0]) * (t[..., 3] - t[..., 1])
+        - inter
+    )
+    out = np.zeros_like(inter)
+    nz = union > 0
+    out[nz] = inter[nz] / union[nz]
+    return out
+
+
+def rand_boxes(rng, n):
+    x1 = rng.uniform(0, 1800, n)
+    y1 = rng.uniform(0, 1000, n)
+    w = rng.uniform(1, 300, n)
+    h = rng.uniform(1, 300, n)
+    return np.stack([x1, y1, x1 + w, y1 + h], axis=1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=16),
+    t=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_iou_matches_ref_and_numpy(d, t, seed):
+    rng = np.random.default_rng(seed)
+    dets, boxes = rand_boxes(rng, d), rand_boxes(rng, t)
+    got = np.asarray(iou.iou_matrix(jnp.asarray(dets), jnp.asarray(boxes)))
+    want_ref = np.asarray(ref.iou_ref(jnp.asarray(dets), jnp.asarray(boxes)))
+    want_np = np_iou(dets, boxes)
+    np.testing.assert_allclose(got, want_ref, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(got, want_np, rtol=1e-12, atol=1e-12)
+
+
+def test_iou_identity():
+    b = np.array([[0.0, 0.0, 10.0, 10.0], [5.0, 5.0, 25.0, 30.0]])
+    got = np.asarray(iou.iou_matrix(jnp.asarray(b), jnp.asarray(b)))
+    np.testing.assert_allclose(np.diag(got), [1.0, 1.0], rtol=1e-12)
+
+
+def test_iou_disjoint_is_zero():
+    a = np.array([[0.0, 0.0, 10.0, 10.0]])
+    b = np.array([[20.0, 20.0, 30.0, 30.0]])
+    got = np.asarray(iou.iou_matrix(jnp.asarray(a), jnp.asarray(b)))
+    assert got[0, 0] == 0.0
+
+
+def test_iou_touching_edges_is_zero():
+    a = np.array([[0.0, 0.0, 10.0, 10.0]])
+    b = np.array([[10.0, 0.0, 20.0, 10.0]])
+    got = np.asarray(iou.iou_matrix(jnp.asarray(a), jnp.asarray(b)))
+    assert got[0, 0] == 0.0
+
+
+def test_iou_degenerate_zero_area_boxes():
+    """Zero-area padding rows must produce IoU 0, not NaN."""
+    a = np.array([[0.0, 0.0, 0.0, 0.0]])
+    b = np.array([[0.0, 0.0, 0.0, 0.0], [1.0, 1.0, 5.0, 5.0]])
+    got = np.asarray(iou.iou_matrix(jnp.asarray(a), jnp.asarray(b)))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_array_equal(got, np.zeros((1, 2)))
+
+
+def test_iou_half_overlap():
+    a = np.array([[0.0, 0.0, 10.0, 10.0]])
+    b = np.array([[0.0, 5.0, 10.0, 15.0]])
+    got = np.asarray(iou.iou_matrix(jnp.asarray(a), jnp.asarray(b)))
+    assert got[0, 0] == pytest.approx(50.0 / 150.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_iou_range_and_symmetry(seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand_boxes(rng, 7), rand_boxes(rng, 5)
+    m = np.asarray(iou.iou_matrix(jnp.asarray(a), jnp.asarray(b)))
+    mt = np.asarray(iou.iou_matrix(jnp.asarray(b), jnp.asarray(a)))
+    assert np.all(m >= 0.0) and np.all(m <= 1.0 + 1e-12)
+    np.testing.assert_allclose(m, mt.T, rtol=1e-12)

@@ -1,0 +1,213 @@
+"""L1 correctness: the Pallas Kalman kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps bank sizes, block sizes, dtypes and value ranges; every
+case asserts allclose against ref.py (the CORE correctness signal for the
+AOT path — the same graphs are what the Rust runtime executes).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kalman, ref
+
+DIM_X = ref.DIM_X
+DIM_Z = ref.DIM_Z
+
+
+def make_state(rng, t, dtype=np.float64):
+    """Random but physically-plausible tracker bank."""
+    x = np.zeros((t, DIM_X), dtype=dtype)
+    x[:, 0] = rng.uniform(0, 1920, t)      # u
+    x[:, 1] = rng.uniform(0, 1080, t)      # v
+    x[:, 2] = rng.uniform(10, 40000, t)    # s (area)
+    x[:, 3] = rng.uniform(0.2, 5.0, t)     # r
+    x[:, 4:] = rng.normal(0, 5, (t, 3))    # velocities
+    a = rng.normal(0, 1, (t, DIM_X, DIM_X))
+    p = np.matmul(a, np.swapaxes(a, -1, -2)) + 3.0 * np.eye(DIM_X)
+    return x, p.astype(dtype)
+
+
+def make_z(rng, t, dtype=np.float64):
+    z = np.zeros((t, DIM_Z), dtype=dtype)
+    z[:, 0] = rng.uniform(0, 1920, t)
+    z[:, 1] = rng.uniform(0, 1080, t)
+    z[:, 2] = rng.uniform(10, 40000, t)
+    z[:, 3] = rng.uniform(0.2, 5.0, t)
+    return z
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=33),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    mask_p=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_predict_matches_ref(t, seed, mask_p):
+    rng = np.random.default_rng(seed)
+    x, p = make_state(rng, t)
+    mask = (rng.uniform(0, 1, (t, 1)) < mask_p).astype(np.float64)
+    xk, pk = kalman.predict(jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask))
+    xr, pr = ref.predict_ref(jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr), rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=33),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    mask_p=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_update_matches_ref(t, seed, mask_p):
+    rng = np.random.default_rng(seed)
+    x, p = make_state(rng, t)
+    z = make_z(rng, t)
+    zmask = (rng.uniform(0, 1, (t, 1)) < mask_p).astype(np.float64)
+    xk, pk = kalman.update(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(zmask)
+    )
+    xr, pr = ref.update_ref(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(zmask)
+    )
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bt=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_predict_block_size_invariance(bt, seed):
+    """Result must not depend on the BlockSpec tile size."""
+    t = 32
+    if t % bt != 0:
+        bt = 1
+    rng = np.random.default_rng(seed)
+    x, p = make_state(rng, t)
+    mask = np.ones((t, 1))
+    x1, p1 = kalman.predict(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask), block_t=bt
+    )
+    x2, p2 = kalman.predict(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask), block_t=t
+    )
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-12)
+
+
+def test_negative_area_guard():
+    """SORT's guard: if x[6]+x[2] <= 0 the area velocity is zeroed."""
+    rng = np.random.default_rng(0)
+    x, p = make_state(rng, 4)
+    x[1, 2] = 5.0
+    x[1, 6] = -10.0     # would go negative
+    x[2, 2] = 5.0
+    x[2, 6] = -4.0      # stays positive
+    mask = np.ones((4, 1))
+    xk, _ = kalman.predict(jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask))
+    xk = np.asarray(xk)
+    assert xk[1, 6] == 0.0                 # guard fired: ds <- 0
+    assert xk[1, 2] == x[1, 2]             # area unchanged (ds was zeroed)
+    assert xk[2, 2] == pytest.approx(x[2, 2] + x[2, 6])   # normal predict
+
+
+def test_dead_slots_pass_through():
+    rng = np.random.default_rng(1)
+    x, p = make_state(rng, 8)
+    mask = np.zeros((8, 1))
+    xk, pk = kalman.predict(jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(xk), x)
+    np.testing.assert_array_equal(np.asarray(pk), p)
+    z = make_z(rng, 8)
+    xu, pu = kalman.update(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(mask)
+    )
+    np.testing.assert_array_equal(np.asarray(xu), x)
+    np.testing.assert_array_equal(np.asarray(pu), p)
+
+
+def test_update_covariance_symmetric_psd():
+    """Joseph form must preserve symmetry and positive-definiteness."""
+    rng = np.random.default_rng(2)
+    x, p = make_state(rng, 6)
+    z = make_z(rng, 6)
+    mask = np.ones((6, 1))
+    _, pk = kalman.update(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(mask)
+    )
+    pk = np.asarray(pk)
+    np.testing.assert_allclose(pk, np.swapaxes(pk, -1, -2), rtol=1e-9, atol=1e-9)
+    for i in range(6):
+        evals = np.linalg.eigvalsh(pk[i])
+        assert evals.min() > 0
+
+
+def test_update_shrinks_uncertainty():
+    """A measurement must not increase the observed-state variance."""
+    rng = np.random.default_rng(3)
+    x, p = make_state(rng, 5)
+    z = make_z(rng, 5)
+    mask = np.ones((5, 1))
+    _, pk = kalman.update(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(mask)
+    )
+    pk = np.asarray(pk)
+    for i in range(5):
+        for j in range(DIM_Z):
+            assert pk[i, j, j] <= p[i, j, j] + 1e-9
+
+
+def test_f32_update_close():
+    """The kernels also lower in f32 (edge deployments); looser tolerance."""
+    rng = np.random.default_rng(4)
+    x, p = make_state(rng, 8, dtype=np.float32)
+    z = make_z(rng, 8, dtype=np.float32)
+    mask = np.ones((8, 1), dtype=np.float32)
+    xk, pk = kalman.update(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(mask)
+    )
+    xr, pr = ref.update_ref(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(mask)
+    )
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), rtol=1e-3, atol=1e-2)
+
+
+def test_sequential_filter_converges():
+    """Track a constant-velocity object for 30 frames: the post-update
+    position error must shrink well below the initial uncertainty."""
+    t = 1
+    bbox0 = np.array([100.0, 100.0, 150.0, 200.0])
+    z0 = np.asarray(ref.bbox_to_z(jnp.asarray(bbox0)))
+    x = np.concatenate([z0, np.zeros(3)])[None, :]
+    p = np.asarray(ref.P0)[None, :, :]
+    mask = np.ones((t, 1))
+    err = None
+    for k in range(1, 30):
+        true_box = bbox0 + np.array([2.0 * k, 1.0 * k, 2.0 * k, 1.0 * k])
+        z = np.asarray(ref.bbox_to_z(jnp.asarray(true_box)))[None, :]
+        x, p = kalman.predict(jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask))
+        x, p = kalman.update(jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(mask))
+        x, p = np.asarray(x), np.asarray(p)
+        err = abs(x[0, 0] - z[0, 0]) + abs(x[0, 1] - z[0, 1])
+    assert err is not None and err < 0.5
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_inv4x4_spd_blockwise_matches_linalg(seed):
+    """The kernel's 2x2-block Schur inverse vs jnp.linalg.inv on random
+    SPD matrices (including poorly-scaled ones)."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, (6, 4, 4))
+    scale = 10.0 ** rng.uniform(-2, 3, (6, 1, 1))
+    s = (np.matmul(a, np.swapaxes(a, -1, -2)) + 2.0 * np.eye(4)) * scale
+    got = np.asarray(kalman._inv4x4_spd(jnp.asarray(s)))
+    want = np.linalg.inv(s)
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-10)
+    # inverse property: S @ S^-1 = I
+    prod = np.matmul(s, got)
+    np.testing.assert_allclose(prod, np.tile(np.eye(4), (6, 1, 1)), rtol=1e-7, atol=1e-7)

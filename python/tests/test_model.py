@@ -1,0 +1,100 @@
+"""L2: tracker-bank graph semantics + AOT lowering smoke tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def bank_inputs(rng, t=model.BANK_T, d=model.BANK_D, live_t=5, live_d=4):
+    x = np.zeros((t, 7))
+    p = np.tile(np.asarray(ref.P0)[None], (t, 1, 1))
+    mask = np.zeros((t, 1))
+    for i in range(live_t):
+        x[i, 0] = 100.0 + 50 * i
+        x[i, 1] = 100.0 + 30 * i
+        x[i, 2] = 2000.0 + 100 * i
+        x[i, 3] = 0.5
+        mask[i, 0] = 1.0
+    dets = np.zeros((d, 4))
+    dmask = np.zeros((d, 1))
+    for j in range(live_d):
+        cx, cy = 100.0 + 50 * j, 100.0 + 30 * j
+        dets[j] = [cx - 20, cy - 30, cx + 20, cy + 30]
+        dmask[j, 0] = 1.0
+    return x, p, mask, dets, dmask
+
+
+def test_bank_predict_iou_shapes_and_masking():
+    rng = np.random.default_rng(0)
+    x, p, mask, dets, dmask = bank_inputs(rng)
+    xn, pn, boxes, iou = model.bank_predict_iou(
+        *(jnp.asarray(a) for a in (x, p, mask, dets, dmask))
+    )
+    xn, pn, boxes, iou = map(np.asarray, (xn, pn, boxes, iou))
+    assert xn.shape == (model.BANK_T, 7)
+    assert pn.shape == (model.BANK_T, 7, 7)
+    assert boxes.shape == (model.BANK_T, 4)
+    assert iou.shape == (model.BANK_D, model.BANK_T)
+    # dead tracker slots: untouched state, zero box, zero iou column
+    np.testing.assert_array_equal(xn[5:], x[5:])
+    np.testing.assert_array_equal(boxes[5:], 0.0)
+    np.testing.assert_array_equal(iou[:, 5:], 0.0)
+    # padded detection rows: zero iou row
+    np.testing.assert_array_equal(iou[4:, :], 0.0)
+    assert np.all(np.isfinite(boxes)) and np.all(np.isfinite(iou))
+
+
+def test_bank_predict_iou_matches_oracle_on_live_block():
+    rng = np.random.default_rng(1)
+    x, p, mask, dets, dmask = bank_inputs(rng)
+    xn, pn, boxes, iou = model.bank_predict_iou(
+        *(jnp.asarray(a) for a in (x, p, mask, dets, dmask))
+    )
+    xr, pr = ref.predict_ref(jnp.asarray(x), jnp.asarray(p), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(xn), np.asarray(xr), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(pn), np.asarray(pr), rtol=1e-12)
+    boxes_ref = np.asarray(ref.x_to_bbox(xr))[:5]
+    np.testing.assert_allclose(np.asarray(boxes)[:5], boxes_ref, rtol=1e-12)
+    iou_ref_m = np.asarray(ref.iou_ref(jnp.asarray(dets[:4]), jnp.asarray(boxes_ref)))
+    np.testing.assert_allclose(np.asarray(iou)[:4, :5], iou_ref_m, rtol=1e-12)
+
+
+def test_bank_update_matches_oracle():
+    rng = np.random.default_rng(2)
+    x, p, mask, dets, dmask = bank_inputs(rng)
+    z = np.zeros((model.BANK_T, 4))
+    z[:5] = np.asarray(ref.bbox_to_z(jnp.asarray(dets[:4])))[:4].sum() * 0 + 1.0
+    z[0] = [100.0, 100.0, 2400.0, 0.66]
+    zmask = mask.copy()
+    xu, pu = model.bank_update(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(zmask)
+    )
+    xr, pr = ref.update_ref(
+        jnp.asarray(x), jnp.asarray(p), jnp.asarray(z), jnp.asarray(zmask)
+    )
+    np.testing.assert_allclose(np.asarray(xu), np.asarray(xr), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(pu), np.asarray(pr), rtol=1e-9, atol=1e-9)
+
+
+def test_lowering_emits_hlo_text():
+    from compile.aot import to_hlo_text
+
+    lowered = jax.jit(model.bank_predict_iou).lower(*model.example_args())
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f64" in text
+
+    lowered = jax.jit(model.bank_update).lower(*model.example_update_args())
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+
+
+def test_lowering_is_deterministic():
+    from compile.aot import to_hlo_text
+
+    lowered1 = jax.jit(model.bank_update).lower(*model.example_update_args())
+    lowered2 = jax.jit(model.bank_update).lower(*model.example_update_args())
+    assert to_hlo_text(lowered1) == to_hlo_text(lowered2)

@@ -1,0 +1,60 @@
+//! E7 — the paper's Fig 4: strong vs weak scaling with the input files
+//! replicated 7× (77 files), on the Xeon 8280 profile.
+
+use smalltrack::benchkit::Table;
+use smalltrack::data::replicate::replicate_suite;
+use smalltrack::simcore::{calibrate_workload, simulate, MachineProfile, SimPolicy};
+
+fn main() {
+    // 7x replicated inputs, as in the paper
+    let suite = replicate_suite(7, 7);
+    assert_eq!(suite.len(), 77);
+
+    // calibrate on a subset (the 11 base sequences) — replicas share
+    // the cost model; then extend the workload to all 77
+    let w = calibrate_workload(&suite, 1);
+    println!(
+        "calibrated {} files / {} frames; single-core anchor {:.0} FPS",
+        w.seqs.len(),
+        w.total_frames(),
+        w.single_core_fps()
+    );
+
+    let m = MachineProfile::clx8280();
+    let mut table = Table::new(
+        "Fig 4 — strong vs weak scaling, 77 files, CLX-8280 profile (FPS)",
+        &["Cores", "Strong", "Weak", "weak/strong"],
+    );
+    let mut series = Vec::new();
+    for p in [1usize, 14, 28, 56, 112] {
+        let s = simulate(&w, &m, SimPolicy::Strong { threads: p }).fps_paper_metric;
+        let wk = simulate(&w, &m, SimPolicy::Weak { cores: p }).fps_paper_metric;
+        series.push((p, s, wk));
+        table.row(&[
+            format!("{p}"),
+            format!("{s:.0}"),
+            format!("{wk:.0}"),
+            format!("{:.2}x", wk / s),
+        ]);
+    }
+    table.print();
+
+    // text chart
+    println!("\nFig 4 (text form): FPS vs cores");
+    let max_fps = series.iter().map(|(_, s, w)| s.max(*w)).fold(0.0f64, f64::max);
+    for (p, s, wk) in &series {
+        let sb = "S".repeat((s / max_fps * 40.0).round() as usize);
+        let wb = "W".repeat((wk / max_fps * 40.0).round() as usize);
+        println!("  p={p:>3} strong |{sb}");
+        println!("        weak   |{wb}");
+    }
+
+    println!("\nshape checks (paper: weak > strong at every multi-core point):");
+    for (p, s, wk) in &series[1..] {
+        assert!(wk > s, "weak must beat strong at p={p}");
+    }
+    // weak sustains: last point within 25% of first multi-core point
+    let w14 = series[1].2;
+    let w112 = series[4].2;
+    assert!(w112 / w14 > 0.75, "weak scaling collapsed: {w14} -> {w112}");
+}

@@ -1,0 +1,72 @@
+//! Microbenchmarks of the small-matrix kernels (Table II shapes).
+//!
+//! The per-op latencies here justify the paper's core claim: a 7×7
+//! GEMM is tens of nanoseconds — thousands of times smaller than a
+//! thread wake-up — so intra-frame parallelism can never pay.
+
+use smalltrack::benchkit::{bench, BenchConfig, Measurement, Table};
+use smalltrack::linalg::{chol_inverse, cholesky, set_counters_enabled, Mat, Mat4, Mat4x7, Mat7};
+
+fn main() {
+    set_counters_enabled(false); // pure-speed numbers
+    let cfg = BenchConfig::default();
+
+    let f = {
+        let mut f = Mat7::eye();
+        f[(0, 4)] = 1.0;
+        f[(1, 5)] = 1.0;
+        f[(2, 6)] = 1.0;
+        f
+    };
+    let p = {
+        let mut p = Mat7::eye().scale(3.0);
+        for i in 0..6 {
+            p[(i, i + 1)] = 0.4;
+            p[(i + 1, i)] = 0.4;
+        }
+        p
+    };
+    let h = {
+        let mut h = Mat4x7::zeros();
+        for i in 0..4 {
+            h[(i, i)] = 1.0;
+        }
+        h
+    };
+    let s4: Mat4 = {
+        let ph = p.matmul_nt(&h);
+        h.matmul(&ph).add(&Mat4::diag(&[1.0, 1.0, 10.0, 10.0]))
+    };
+    let x = [1.0, 2.0, 3.0, 0.5, 0.1, 0.2, 0.3];
+
+    let mut rows: Vec<Measurement> = Vec::new();
+    rows.push(bench("gemm 7x7 * 7x7", &cfg, 1, || std::hint::black_box(f.matmul(&p))));
+    rows.push(bench("gemm 4x7 * 7x7", &cfg, 1, || std::hint::black_box(h.matmul(&p))));
+    rows.push(bench("gemm_nt 7x7 * (7x7)^T", &cfg, 1, || std::hint::black_box(p.matmul_nt(&f))));
+    rows.push(bench("gemv 7x7 * 7", &cfg, 1, || std::hint::black_box(f.matvec(&x))));
+    rows.push(bench("transpose 4x7", &cfg, 1, || std::hint::black_box(h.transpose())));
+    rows.push(bench("cholesky 4x4", &cfg, 1, || std::hint::black_box(cholesky(&s4))));
+    rows.push(bench("spd inverse 4x4", &cfg, 1, || std::hint::black_box(chol_inverse(&s4))));
+    rows.push(bench("cholesky 7x7", &cfg, 1, || std::hint::black_box(cholesky(&p))));
+    rows.push(bench("add 7x7", &cfg, 1, || std::hint::black_box(p.add(&f))));
+    rows.push(bench("symmetrize 7x7", &cfg, 1, || std::hint::black_box(p.symmetrize())));
+
+    let mut table = Table::new(
+        "micro — small-matrix kernel latencies (the paper's Table II shapes)",
+        &["kernel", "median", "mean", "min"],
+    );
+    for m in &rows {
+        table.row(&[
+            m.name.clone(),
+            smalltrack::benchkit::fmt_duration(m.median()),
+            smalltrack::benchkit::fmt_duration(m.mean()),
+            smalltrack::benchkit::fmt_duration(m.min()),
+        ]);
+    }
+    table.print();
+
+    let gemm = rows[0].median();
+    println!("\n7x7 GEMM = {}; a futex wake alone is ~2-10us — parallelizing", smalltrack::benchkit::fmt_duration(gemm));
+    println!("inside a frame buys {:.0}x less work than the wake costs.", 3e-6 / gemm);
+    set_counters_enabled(true);
+}

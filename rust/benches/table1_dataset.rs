@@ -1,0 +1,53 @@
+//! E1 — regenerate the paper's Table I (dataset properties) from the
+//! synthetic suite and verify the generator hits the published numbers.
+
+use smalltrack::benchkit::Table;
+use smalltrack::data::synth::{generate_suite, MOT15_PROPERTIES};
+
+fn main() {
+    let suite = generate_suite(7);
+    let mut table = Table::new(
+        "Table I — dataset properties (synthetic MOT-2015 substitution)",
+        &["Dataset (video)", "#Frames", "Max Tracked Object", "dets/frame", "total dets"],
+    );
+    let mut ok = true;
+    for (s, &(name, frames, max_obj)) in suite.iter().zip(&MOT15_PROPERTIES) {
+        // measured max simultaneous ground-truth objects
+        let per_frame_gt = {
+            let mut pf = vec![0u32; s.sequence.n_frames() + 1];
+            for t in &s.ground_truth {
+                for (f, _) in &t.boxes {
+                    pf[*f as usize] += 1;
+                }
+            }
+            pf.into_iter().max().unwrap_or(0)
+        };
+        if s.sequence.n_frames() as u32 != frames || per_frame_gt != max_obj {
+            ok = false;
+        }
+        table.row(&[
+            name.to_string(),
+            format!("{}", s.sequence.n_frames()),
+            format!("{per_frame_gt}"),
+            format!("{:.2}", s.sequence.n_detections() as f64 / s.sequence.n_frames() as f64),
+            format!("{}", s.sequence.n_detections()),
+        ]);
+    }
+    let total: usize = suite.iter().map(|s| s.sequence.n_frames()).sum();
+    table.row(&[
+        "TOTAL (11 files)".into(),
+        format!("{total}"),
+        "13".into(),
+        "-".into(),
+        format!("{}", suite.iter().map(|s| s.sequence.n_detections()).sum::<usize>()),
+    ]);
+    table.print();
+    println!("\npaper: 11 files, 5500 frames, max 13 simultaneous objects");
+    println!(
+        "match: frames_total={} (want 5500), per-sequence properties {}",
+        total,
+        if ok { "MATCH" } else { "MISMATCH" }
+    );
+    assert_eq!(total, 5500);
+    assert!(ok, "generator drifted from Table I");
+}

@@ -1,0 +1,91 @@
+//! E3 — the paper's Table III: hardware counters for the tracking run.
+//!
+//! Bare-metal counters are unreliable in this virtualized 1-core box,
+//! so the primary row comes from the analytic model in
+//! `rust/src/perfmodel.rs` (instructions from the instrumented flop/
+//! call counts; cache/TLB/BW from the working-set model). If a usable
+//! `perf stat` exists, a measured row is printed next to it.
+
+use smalltrack::benchkit::Table;
+use smalltrack::coordinator::policy::run_sequence_serial;
+use smalltrack::data::synth::generate_suite;
+use smalltrack::linalg::{reset_counters, snapshot};
+use smalltrack::perfmodel::{estimate, run_under_perf};
+use smalltrack::sort::SortParams;
+use std::time::Instant;
+
+fn main() {
+    let suite = generate_suite(7);
+
+    // counted run (instrumentation on)
+    reset_counters();
+    for s in &suite {
+        // dense kernels: the paper profiles a dense-library implementation
+        run_sequence_serial(s, SortParams { dense_kernels: true, ..Default::default() });
+    }
+    let counters = snapshot();
+
+    // timed run (instrumentation off; dense kernels to match the
+    // counted run — Table III characterizes the dense formulation)
+    let t0 = Instant::now();
+    for s in &suite {
+        run_sequence_serial(
+            s,
+            SortParams { timing: false, dense_kernels: true, ..Default::default() },
+        );
+    }
+    let wall = t0.elapsed();
+
+    let e = estimate(&counters, wall);
+    let mut table = Table::new(
+        "Table III — hardware counters for object tracking (5500 frames)",
+        &["source", "Instructions", "Time (s)", "IPC", "TLB MPKI", "LLC MPKI", "BW usage"],
+    );
+    table.row(&[
+        "model (this impl)".into(),
+        format!("{:.3e}", e.instructions),
+        format!("{:.4}", e.time.as_secs_f64()),
+        format!("{:.2}", e.ipc),
+        format!("{:.3}", e.tlb_mpki),
+        format!("{:.3}", e.llc_mpki),
+        format!("{:.4}%", e.bw_usage * 100.0),
+    ]);
+    table.row(&[
+        "paper (python orig.)".into(),
+        "4.755e10".into(),
+        "10".into(),
+        "2.21".into(),
+        "0.136".into(),
+        "0.059".into(),
+        "0.015%".into(),
+    ]);
+
+    // optional: real perf stat on the CLI binary
+    let exe = std::env::current_exe().ok().and_then(|p| {
+        // benches live in target/release/deps; the CLI sits two dirs up
+        p.parent()?.parent().map(|d| d.join("smalltrack"))
+    });
+    if let Some(exe) = exe.filter(|p| p.exists()) {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.arg("suite");
+        if let Some(stat) = run_under_perf(cmd) {
+            table.row(&[
+                "perf stat (measured)".into(),
+                stat.instructions.map(|v| format!("{v:.3e}")).unwrap_or("-".into()),
+                "-".into(),
+                stat.ipc().map(|v| format!("{v:.2}")).unwrap_or("-".into()),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        } else {
+            println!("(perf stat unavailable in this sandbox — model row only)");
+        }
+    }
+    table.print();
+
+    println!("\nshape check vs paper: low MPKI (working set ≪ LLC), sub-1% BW — the");
+    println!("workload is compute-dispatch-bound, not memory-bound. Our native run");
+    println!("does the same frames in {:.3}s vs the paper-python's 10s.", wall.as_secs_f64());
+    assert!(e.llc_mpki < 1.0 && e.tlb_mpki < 1.0 && e.bw_usage < 0.01);
+}

@@ -1,0 +1,89 @@
+//! E5 — the paper's Table V: native (Rust, here; C in the paper) vs the
+//! original-style Python implementation, same det.txt inputs.
+//!
+//! The Python baseline (`python/baseline/sort_python.py`, a faithful
+//! abewley/sort port on numpy+scipy) runs as a subprocess — off the
+//! request path, exactly like the paper's comparison methodology.
+//! Expected shape: 40–100× (paper: 45× on SKX-6140, 106.8× on CLX-8280).
+
+use smalltrack::benchkit::Table;
+use smalltrack::coordinator::policy::run_sequence_serial;
+use smalltrack::data::mot::write_det_file;
+use smalltrack::data::synth::generate_suite;
+use smalltrack::sort::SortParams;
+use std::time::Instant;
+
+fn main() {
+    let suite = generate_suite(7);
+
+    // --- rust native, single core (best of 3)
+    let params = SortParams { timing: false, ..Default::default() };
+    let mut rust_secs = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for s in &suite {
+            run_sequence_serial(s, params);
+        }
+        rust_secs = rust_secs.min(t0.elapsed().as_secs_f64());
+    }
+
+    // --- python baseline on the same data
+    let dir = std::env::temp_dir().join("smalltrack_table5");
+    let mut det_files = Vec::new();
+    for s in &suite {
+        let p = dir.join(&s.sequence.name).join("det").join("det.txt");
+        write_det_file(&s.sequence, &p).unwrap();
+        det_files.push(p.to_string_lossy().into_owned());
+    }
+    let baseline = std::path::Path::new("python/baseline/sort_python.py");
+    let py_secs = if baseline.exists() {
+        let out = std::process::Command::new("python")
+            .arg(baseline)
+            .args(&det_files)
+            .output()
+            .expect("spawn python baseline");
+        let text = String::from_utf8_lossy(&out.stdout);
+        // parse {"seconds": S}
+        text.find("\"seconds\": ")
+            .and_then(|i| {
+                let rest = &text[i + 11..];
+                let num: String =
+                    rest.chars().take_while(|c| c.is_ascii_digit() || *c == '.').collect();
+                num.parse::<f64>().ok()
+            })
+            .unwrap_or_else(|| panic!("could not parse baseline output: {text}"))
+    } else {
+        eprintln!("baseline script missing; run from the repo root");
+        std::process::exit(1);
+    };
+
+    let frames = 5500.0;
+    let speedup = py_secs / rust_secs;
+    let mut table = Table::new(
+        "Table V — speedup w.r.t. the original implementation (5500 frames)",
+        &["Machine", "native (ours)", "Python (orig.)", "Speedup"],
+    );
+    table.row(&[
+        "this testbed (1 core)".into(),
+        format!("{rust_secs:.3}s ({:.0} fps)", frames / rust_secs),
+        format!("{py_secs:.3}s ({:.0} fps)", frames / py_secs),
+        format!("{speedup:.1}x"),
+    ]);
+    table.row(&[
+        "paper: Xeon 6140".into(),
+        "0.12s (C)".into(),
+        "5.4s".into(),
+        "45x".into(),
+    ]);
+    table.row(&[
+        "paper: Xeon 8280".into(),
+        "0.074s (C)".into(),
+        "7.9s".into(),
+        "106.8x".into(),
+    ]);
+    table.print();
+
+    println!("\nshape check: paper reports 44–106x; native must beat python by >10x here");
+    assert!(speedup > 10.0, "speedup only {speedup:.1}x");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,279 @@
+//! Measurement harness for the `cargo bench` targets (criterion is not
+//! available offline).
+//!
+//! Provides warmed-up repeated timing with robust statistics and the
+//! aligned table printer every `rust/benches/*` target uses to emit the
+//! paper's tables. Methodology: N timed samples after a warm-up period,
+//! reporting median (primary), mean, stddev, min; medians make the
+//! numbers stable on a busy 1-core CI box.
+
+use std::time::{Duration, Instant};
+
+/// Samples + derived statistics for one measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Label for reports.
+    pub name: String,
+    /// Raw per-sample durations (seconds).
+    pub samples: Vec<f64>,
+    /// Work items per sample (e.g. frames) for rate reporting.
+    pub items_per_sample: u64,
+}
+
+impl Measurement {
+    /// Median sample (seconds).
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return 0.0;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    /// Mean sample (seconds).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Fastest sample.
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// items/second at the median sample.
+    pub fn rate(&self) -> f64 {
+        let m = self.median();
+        if m > 0.0 {
+            self.items_per_sample as f64 / m
+        } else {
+            0.0
+        }
+    }
+
+    /// One formatted summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} median {:>12} mean {:>12} ±{:>10} min {:>12}{}",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.mean()),
+            fmt_duration(self.stddev()),
+            fmt_duration(self.min()),
+            if self.items_per_sample > 0 {
+                format!("  ({:.0} items/s)", self.rate())
+            } else {
+                String::new()
+            }
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Minimum warm-up wall time before sampling.
+    pub warmup: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Minimum total sampling time (more iterations per sample if fast).
+    pub min_sample_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            samples: 15,
+            min_sample_time: Duration::from_millis(20),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast configuration for long end-to-end benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(100),
+            samples: 5,
+            min_sample_time: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Measure `f`: warm up, then `samples` timed runs. `items` is the work
+/// per call of `f` (for rate reporting).
+pub fn bench<R>(name: &str, cfg: &BenchConfig, items: u64, mut f: impl FnMut() -> R) -> Measurement {
+    // warm-up
+    let w0 = Instant::now();
+    while w0.elapsed() < cfg.warmup {
+        std::hint::black_box(f());
+    }
+    // decide iterations per sample so each sample >= min_sample_time
+    let probe = Instant::now();
+    std::hint::black_box(f());
+    let one = probe.elapsed().max(Duration::from_nanos(1));
+    let iters = (cfg.min_sample_time.as_secs_f64() / one.as_secs_f64()).ceil().max(1.0) as u64;
+
+    let mut samples = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    Measurement { name: name.to_string(), samples, items_per_sample: items }
+}
+
+/// Time a single long-running call (end-to-end drivers).
+pub fn time_once<R>(mut f: impl FnMut() -> R) -> (Duration, R) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed(), r)
+}
+
+/// Human duration formatting (ns → s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Fixed-width table printer used by every bench target.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    /// New table with a title line and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    /// Append a row (cells already formatted).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![3.0, 1.0, 2.0],
+            items_per_sample: 0,
+        };
+        assert_eq!(m.median(), 2.0);
+        let m2 = Measurement {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0],
+            items_per_sample: 0,
+        };
+        assert_eq!(m2.median(), 2.5);
+    }
+
+    #[test]
+    fn stats_on_constant_samples() {
+        let m = Measurement {
+            name: "c".into(),
+            samples: vec![2.0; 10],
+            items_per_sample: 4,
+        };
+        assert_eq!(m.mean(), 2.0);
+        assert_eq!(m.stddev(), 0.0);
+        assert_eq!(m.rate(), 2.0);
+    }
+
+    #[test]
+    fn bench_runs_and_returns_samples() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            min_sample_time: Duration::from_micros(100),
+        };
+        let mut x = 0u64;
+        let m = bench("noop", &cfg, 1, || {
+            x = x.wrapping_add(1);
+            x
+        });
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.median() > 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_checks_columns() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only one".to_string()]);
+    }
+}

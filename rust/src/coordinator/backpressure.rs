@@ -1,0 +1,232 @@
+//! Bounded queue with blocking and try semantics — backpressure for
+//! the online stream server.
+//!
+//! Online tracking is latency-sensitive: when a consumer falls behind,
+//! the producer must either block (lossless ingestion) or shed the
+//! oldest frame (bounded-staleness display). Both policies are
+//! provided; the stream server uses [`PushPolicy::DropOldest`] so a
+//! stall shows up as dropped frames, not unbounded latency — and the
+//! drop counter is part of the metrics output.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// What `push` does when the queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushPolicy {
+    /// Block the producer until space frees up.
+    Block,
+    /// Evict the oldest queued item, count it as dropped.
+    DropOldest,
+}
+
+#[derive(Debug, Default)]
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+    dropped: u64,
+}
+
+/// Multi-producer multi-consumer bounded queue.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    policy: PushPolicy,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue holding at most `capacity` items.
+    pub fn new(capacity: usize, policy: PushPolicy) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false, dropped: 0 }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+            policy,
+        }
+    }
+
+    /// Push an item, applying the configured policy when full.
+    /// Returns `false` if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.queue.len() < self.capacity {
+                g.queue.push_back(item);
+                self.not_empty.notify_one();
+                return true;
+            }
+            match self.policy {
+                PushPolicy::Block => {
+                    g = self.not_full.wait(g).unwrap();
+                }
+                PushPolicy::DropOldest => {
+                    g.queue.pop_front();
+                    g.dropped += 1;
+                    g.queue.push_back(item);
+                    self.not_empty.notify_one();
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Pop; blocks while empty; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.queue.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.queue.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items dropped by `DropOldest`.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Current queue depth.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Whether currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4, PushPolicy::Block);
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn drop_oldest_evicts_head() {
+        let q = BoundedQueue::new(2, PushPolicy::DropOldest);
+        q.push(1);
+        q.push(2);
+        q.push(3); // evicts 1
+        assert_eq!(q.dropped(), 1);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(BoundedQueue::new(1, PushPolicy::Block));
+        q.push(1);
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.push(2));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "producer must be blocked");
+        assert_eq!(q.pop(), Some(1));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_unblocks_everyone() {
+        let q = Arc::new(BoundedQueue::<u32>::new(1, PushPolicy::Block));
+        let q2 = Arc::clone(&q);
+        let consumer = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+        assert!(!q.push(5), "push after close fails");
+    }
+
+    #[test]
+    fn close_drains_remaining_items() {
+        let q = BoundedQueue::new(4, PushPolicy::Block);
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn try_pop_nonblocking() {
+        let q = BoundedQueue::<u32>::new(2, PushPolicy::Block);
+        assert_eq!(q.try_pop(), None);
+        q.push(9);
+        assert_eq!(q.try_pop(), Some(9));
+    }
+
+    #[test]
+    fn mpmc_stress() {
+        let q = Arc::new(BoundedQueue::new(8, PushPolicy::Block));
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let q = Arc::clone(&q);
+            handles.push(thread::spawn(move || {
+                for i in 0..250 {
+                    q.push(p * 1000 + i);
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..4 {
+            let q = Arc::clone(&q);
+            consumers.push(thread::spawn(move || {
+                let mut n = 0;
+                while q.pop().is_some() {
+                    n += 1;
+                }
+                n
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let total: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 1000);
+    }
+}

@@ -1,0 +1,211 @@
+//! Runtime metrics: FPS accounting and latency percentiles.
+//!
+//! The paper reports frames-per-second (Table VI, Fig 4); the online
+//! serving example additionally reports per-frame latency percentiles
+//! (the workload is "latency-sensitive", §I). The histogram uses
+//! log-spaced buckets from 100 ns to 10 s — ample for both the ~2 µs
+//! native frame and multi-ms stress cases.
+
+use std::time::Duration;
+
+/// Frames-per-second accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct FpsCounter {
+    frames: u64,
+    busy: Duration,
+}
+
+impl FpsCounter {
+    /// Record `n` frames processed in `dt`.
+    pub fn record(&mut self, n: u64, dt: Duration) {
+        self.frames += n;
+        self.busy += dt;
+    }
+
+    /// Total frames recorded.
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Total busy time.
+    pub fn busy(&self) -> Duration {
+        self.busy
+    }
+
+    /// Frames per second of busy time.
+    pub fn fps(&self) -> f64 {
+        let s = self.busy.as_secs_f64();
+        if s > 0.0 {
+            self.frames as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// Merge another counter (per-thread merges).
+    pub fn merge(&mut self, other: &FpsCounter) {
+        self.frames += other.frames;
+        self.busy += other.busy;
+    }
+}
+
+/// Log-bucketed latency histogram.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [BASE * GROWTH^i, BASE * GROWTH^(i+1))
+    buckets: Vec<u64>,
+    count: u64,
+    max_ns: u64,
+    sum_ns: u64,
+}
+
+const BASE_NS: f64 = 100.0;
+const GROWTH: f64 = 1.25;
+const N_BUCKETS: usize = 84; // 100ns * 1.25^84 ≈ 13.6 s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: vec![0; N_BUCKETS], count: 0, max_ns: 0, sum_ns: 0 }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns as f64 <= BASE_NS {
+            return 0;
+        }
+        let b = ((ns as f64 / BASE_NS).ln() / GROWTH.ln()).floor() as usize;
+        b.min(N_BUCKETS - 1)
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.max_ns = self.max_ns.max(ns);
+        self.sum_ns += ns;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns / self.count)
+    }
+
+    /// Maximum observed latency.
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Upper-bound estimate of the q-quantile (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                if i == N_BUCKETS - 1 {
+                    // overflow bucket: the true upper bound is the max
+                    return self.max();
+                }
+                let upper = BASE_NS * GROWTH.powi(i as i32 + 1);
+                return Duration::from_nanos(upper.min(self.max_ns as f64) as u64);
+            }
+        }
+        self.max()
+    }
+
+    /// Merge another histogram.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// `(p50, p95, p99, max)` summary.
+    pub fn summary(&self) -> (Duration, Duration, Duration, Duration) {
+        (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99), self.max())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fps_math() {
+        let mut f = FpsCounter::default();
+        f.record(100, Duration::from_secs(2));
+        assert!((f.fps() - 50.0).abs() < 1e-9);
+        let mut g = FpsCounter::default();
+        g.record(100, Duration::from_secs(2));
+        f.merge(&g);
+        assert_eq!(f.frames(), 200);
+        assert!((f.fps() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_fps_is_zero() {
+        assert_eq!(FpsCounter::default().fps(), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let (p50, p95, p99, max) = h.summary();
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= max);
+        // p50 of uniform 1..1000us should be around 500us (log buckets
+        // give an upper bound, allow wide tolerance)
+        assert!(p50 >= Duration::from_micros(400) && p50 <= Duration::from_micros(800), "{p50:?}");
+    }
+
+    #[test]
+    fn histogram_single_sample() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_millis(5));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), Duration::from_millis(5));
+        assert!(h.quantile(0.99) >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn extreme_latencies_clamp_to_last_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_secs(100));
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(1.0) >= Duration::from_secs(99));
+    }
+}

@@ -1,0 +1,36 @@
+//! L3 coordinator: the multi-stream tracking runtime.
+//!
+//! The paper's systems contribution is *how to schedule* SORT on
+//! parallel hardware: per-frame work is too small to split (strong
+//! scaling loses), so the coordinator scales across independent
+//! streams. This module makes that a deployable runtime rather than an
+//! experiment script:
+//!
+//! * [`pool`] — worker pool + fork-join parallel-for (the OpenMP analog)
+//! * [`policy`] — strong / weak / throughput scaling as scheduler modes
+//!   (Table VI / Fig 4 runners)
+//! * [`strong`] — the intra-frame-parallel SORT variant
+//! * [`stream`] — online frame-arrival simulation over stored sequences
+//! * [`router`] — stream→worker pinning (sequential Kalman chains never
+//!   split across workers)
+//! * [`backpressure`] — bounded queues with block/shed policies
+//! * [`server`] — the online serving loop with latency metrics (E10)
+//! * [`metrics`] — FPS counters + latency histograms
+
+pub mod backpressure;
+pub mod metrics;
+pub mod policy;
+pub mod pool;
+pub mod router;
+pub mod server;
+pub mod stream;
+pub mod strong;
+
+pub use backpressure::{BoundedQueue, PushPolicy};
+pub use metrics::{FpsCounter, LatencyHistogram};
+pub use policy::{run_policy, ScalingOutcome, ScalingPolicy};
+pub use pool::WorkerPool;
+pub use router::{RoutePolicy, Router};
+pub use server::{serve, ServerConfig, ServerReport};
+pub use stream::{FrameJob, Pacing, VideoStream};
+pub use strong::ParallelSort;

@@ -1,0 +1,273 @@
+//! Worker pool + fork-join parallel-for (the OpenMP analog).
+//!
+//! Two primitives:
+//! * [`WorkerPool`] — long-lived threads consuming boxed jobs from a
+//!   shared queue; used by the weak/throughput scaling policies where
+//!   each job is an entire video sequence.
+//! * [`parallel_for_chunks`] — scoped fork-join over an index range,
+//!   used by the *strong*-scaling policy to parallelize inside a frame
+//!   exactly the way the paper's OpenMP `parallel for` does. The
+//!   per-invocation thread spawn/join cost is deliberately representative:
+//!   the paper's point is that this overhead dwarfs the tiny-matrix work.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool with a shared unbounded job queue.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` worker threads.
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("smalltrack-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                if *p == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool { tx: Some(tx), handles, pending }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("queue alive");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fork-join parallel for over `0..n`, `threads`-way, chunked
+/// contiguously (OpenMP `schedule(static)`).
+///
+/// `body(i)` must be safe to run concurrently for distinct `i`.
+/// Spawns and joins scoped threads *per call* — this models (and pays)
+/// the per-parallel-region overhead the paper measures in its strong-
+/// scaling experiment.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Fork-join parallel iteration over two equal-length mutable slices,
+/// chunked `threads`-way. Used by the strong-scaling tracker to run
+/// per-tracker work (predict/update) concurrently, zipping each tracker
+/// with its output slot.
+pub fn parallel_zip_mut<A, B, F>(a: &mut [A], b: &mut [B], threads: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut A, &mut B) + Sync,
+{
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+            f(i, x, y);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut base = 0usize;
+        while !rest_a.is_empty() {
+            let take = chunk.min(rest_a.len());
+            let (ca, ra) = rest_a.split_at_mut(take);
+            let (cb, rb) = rest_b.split_at_mut(take);
+            rest_a = ra;
+            rest_b = rb;
+            let f = &f;
+            let start = base;
+            s.spawn(move || {
+                for (i, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                    f(start + i, x, y);
+                }
+            });
+            base += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = WorkerPool::new(2);
+        pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..103).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(103, 4, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_single_thread_and_empty() {
+        let sum = AtomicU64::new(0);
+        parallel_for_chunks(10, 1, |i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+        parallel_for_chunks(0, 8, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_zip_mut_pairs_correctly() {
+        let mut a: Vec<u64> = (0..37).collect();
+        let mut b: Vec<u64> = vec![0; 37];
+        parallel_zip_mut(&mut a, &mut b, 4, |i, x, y| {
+            *y = *x * 2 + i as u64;
+        });
+        for i in 0..37u64 {
+            assert_eq!(b[i as usize], i * 3);
+        }
+    }
+
+    #[test]
+    fn parallel_zip_mut_empty_and_single() {
+        let mut a: Vec<u64> = vec![];
+        let mut b: Vec<u64> = vec![];
+        parallel_zip_mut(&mut a, &mut b, 8, |_, _, _| panic!("no items"));
+        let mut a = vec![5u64];
+        let mut b = vec![0u64];
+        parallel_zip_mut(&mut a, &mut b, 8, |_, x, y| *y = *x);
+        assert_eq!(b[0], 5);
+    }
+
+    #[test]
+    fn parallel_for_more_threads_than_items() {
+        let sum = AtomicU64::new(0);
+        parallel_for_chunks(3, 16, |i| {
+            sum.fetch_add(i as u64 + 1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 6);
+    }
+}

@@ -1,0 +1,127 @@
+//! Stream→worker routing.
+//!
+//! The Kalman state of a stream is sequentially dependent across frames
+//! (§II-A), so all frames of one stream must execute on one worker, in
+//! order. The router enforces that invariant structurally: each worker
+//! owns a private FIFO, and a stream is pinned to a worker at
+//! registration. Pinning uses least-loaded assignment (by registered
+//! stream count) with a deterministic tie-break — property-tested in
+//! `rust/tests/integration_coordinator.rs`.
+
+use std::collections::HashMap;
+
+/// Assignment policy for new streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Pin to the worker with the fewest registered streams.
+    #[default]
+    LeastLoaded,
+    /// `stream_id % workers` (stateless; reproducible across restarts).
+    HashMod,
+}
+
+/// Stream→worker pinning table.
+#[derive(Debug)]
+pub struct Router {
+    workers: usize,
+    policy: RoutePolicy,
+    pinned: HashMap<usize, usize>,
+    load: Vec<usize>,
+}
+
+impl Router {
+    /// Router over `workers` workers.
+    pub fn new(workers: usize, policy: RoutePolicy) -> Self {
+        assert!(workers > 0);
+        Router { workers, policy, pinned: HashMap::new(), load: vec![0; workers] }
+    }
+
+    /// Worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Register (or look up) the worker for a stream.
+    pub fn route(&mut self, stream_id: usize) -> usize {
+        if let Some(&w) = self.pinned.get(&stream_id) {
+            return w;
+        }
+        let w = match self.policy {
+            RoutePolicy::HashMod => stream_id % self.workers,
+            RoutePolicy::LeastLoaded => {
+                // min load; ties -> lowest worker id (determinism)
+                let mut best = 0usize;
+                for i in 1..self.workers {
+                    if self.load[i] < self.load[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.pinned.insert(stream_id, w);
+        self.load[w] += 1;
+        w
+    }
+
+    /// Unregister a finished stream (frees its load slot).
+    pub fn release(&mut self, stream_id: usize) {
+        if let Some(w) = self.pinned.remove(&stream_id) {
+            self.load[w] -= 1;
+        }
+    }
+
+    /// Current per-worker registered-stream counts.
+    pub fn loads(&self) -> &[usize] {
+        &self.load
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_sticky() {
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        let w = r.route(42);
+        for _ in 0..10 {
+            assert_eq!(r.route(42), w);
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        for s in 0..9 {
+            r.route(s);
+        }
+        assert_eq!(r.loads(), &[3, 3, 3]);
+    }
+
+    #[test]
+    fn hashmod_is_stateless_formula() {
+        let mut r = Router::new(4, RoutePolicy::HashMod);
+        assert_eq!(r.route(10), 2);
+        assert_eq!(r.route(7), 3);
+    }
+
+    #[test]
+    fn release_frees_load() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        r.route(1);
+        r.route(2);
+        assert_eq!(r.loads(), &[1, 1]);
+        r.release(1);
+        assert_eq!(r.loads(), &[0, 1]);
+        // next stream goes to the freed worker
+        assert_eq!(r.route(3), 0);
+    }
+
+    #[test]
+    fn release_unknown_stream_is_noop() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        r.release(99);
+        assert_eq!(r.loads(), &[0, 0]);
+    }
+}

@@ -1,0 +1,246 @@
+//! The online multi-stream tracking server (deliverable E10).
+//!
+//! Architecture (one box per concept):
+//!
+//! ```text
+//!  streams ──► dispatcher ──► router ──► per-worker BoundedQueue ──► worker
+//!  (paced)     (arrival        (pin          (backpressure:          (owns the
+//!              simulation)      stream)       DropOldest)             Sort state
+//!                                                                     of its streams)
+//! ```
+//!
+//! Frames of one stream always land on one worker in order (the Kalman
+//! chain is sequential); workers never share tracker state — the weak-
+//! scaling lesson of the paper baked into the serving architecture.
+//! Metrics: arrival→completion latency percentiles, FPS, drops.
+
+use super::backpressure::{BoundedQueue, PushPolicy};
+use super::metrics::{FpsCounter, LatencyHistogram};
+use super::router::{RoutePolicy, Router};
+use super::stream::{FrameJob, VideoStream};
+use crate::sort::{Sort, SortParams};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Worker threads (each owns a disjoint set of streams).
+    pub workers: usize,
+    /// Per-worker queue capacity (frames).
+    pub queue_capacity: usize,
+    /// Queue-full behavior.
+    pub push_policy: PushPolicy,
+    /// Stream pinning policy.
+    pub route_policy: RoutePolicy,
+    /// Tracker parameters.
+    pub sort_params: SortParams,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 1,
+            queue_capacity: 64,
+            push_policy: PushPolicy::DropOldest,
+            route_policy: RoutePolicy::LeastLoaded,
+            sort_params: SortParams { timing: false, ..Default::default() },
+        }
+    }
+}
+
+/// Aggregated serving report.
+#[derive(Debug)]
+pub struct ServerReport {
+    /// Frames fully processed.
+    pub frames_done: u64,
+    /// Track-frames emitted.
+    pub tracks_out: u64,
+    /// Frames shed by backpressure.
+    pub dropped: u64,
+    /// Wall time of the serving run.
+    pub elapsed: Duration,
+    /// Arrival→completion latency distribution.
+    pub latency: LatencyHistogram,
+    /// Per-worker FPS counters.
+    pub per_worker_fps: Vec<FpsCounter>,
+}
+
+impl ServerReport {
+    /// Aggregate frames/second of wall time.
+    pub fn fps(&self) -> f64 {
+        let s = self.elapsed.as_secs_f64();
+        if s > 0.0 {
+            self.frames_done as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run a set of streams to completion and report.
+///
+/// The dispatcher thread simulates arrivals (honoring each stream's
+/// pacing), routes frames to pinned workers, then closes the queues;
+/// workers drain and exit.
+pub fn serve(streams: Vec<VideoStream>, cfg: ServerConfig) -> ServerReport {
+    let queues: Vec<Arc<BoundedQueue<FrameJob>>> = (0..cfg.workers)
+        .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity, cfg.push_policy)))
+        .collect();
+
+    let t0 = Instant::now();
+    let mut worker_handles = Vec::with_capacity(cfg.workers);
+    for w in 0..cfg.workers {
+        let q = Arc::clone(&queues[w]);
+        let params = cfg.sort_params;
+        worker_handles.push(thread::spawn(move || {
+            let mut trackers: HashMap<usize, Sort> = HashMap::new();
+            let mut latency = LatencyHistogram::new();
+            let mut fps = FpsCounter::default();
+            let mut frames_done = 0u64;
+            let mut tracks_out = 0u64;
+            while let Some(job) = q.pop() {
+                let f0 = Instant::now();
+                let sort = trackers.entry(job.stream_id).or_insert_with(|| Sort::new(params));
+                tracks_out += sort.update(&job.boxes).len() as u64;
+                if job.last {
+                    trackers.remove(&job.stream_id);
+                }
+                frames_done += 1;
+                fps.record(1, f0.elapsed());
+                latency.record(job.arrival.elapsed());
+            }
+            (frames_done, tracks_out, latency, fps)
+        }));
+    }
+
+    // dispatcher (this thread): earliest-due-frame simulation
+    let mut router = Router::new(cfg.workers, cfg.route_policy);
+    let mut streams = streams;
+    loop {
+        // earliest next_due across streams
+        let mut best: Option<(usize, Instant)> = None;
+        for (i, s) in streams.iter_mut().enumerate() {
+            if let Some(due) = s.next_due() {
+                if best.map(|(_, d)| due < d).unwrap_or(true) {
+                    best = Some((i, due));
+                }
+            }
+        }
+        let Some((i, due)) = best else { break };
+        let now = Instant::now();
+        if due > now {
+            thread::sleep(due - now);
+        }
+        let stream_id = streams[i].id;
+        let w = router.route(stream_id);
+        let mut job = streams[i].take().expect("due stream has a frame");
+        job.arrival = Instant::now();
+        if job.last {
+            router.release(stream_id);
+        }
+        queues[w].push(job);
+        if streams[i].remaining() == 0 {
+            streams.swap_remove(i);
+        }
+    }
+    for q in &queues {
+        q.close();
+    }
+
+    let mut report = ServerReport {
+        frames_done: 0,
+        tracks_out: 0,
+        dropped: queues.iter().map(|q| q.dropped()).sum(),
+        elapsed: Duration::ZERO,
+        latency: LatencyHistogram::new(),
+        per_worker_fps: Vec::new(),
+    };
+    for h in worker_handles {
+        let (frames, tracks, lat, fps) = h.join().expect("worker panicked");
+        report.frames_done += frames;
+        report.tracks_out += tracks;
+        report.latency.merge(&lat);
+        report.per_worker_fps.push(fps);
+    }
+    report.dropped = queues.iter().map(|q| q.dropped()).sum();
+    report.elapsed = t0.elapsed();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stream::Pacing;
+    use crate::data::synth::{generate_sequence, SynthConfig};
+
+    fn mk_streams(n: usize, frames: u32, pacing: Pacing) -> Vec<VideoStream> {
+        (0..n)
+            .map(|i| {
+                let s = generate_sequence(&SynthConfig::mot15(&format!("S{i}"), frames, 5, i as u64));
+                VideoStream::new(i, s.sequence, pacing)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_all_frames_unpaced() {
+        let streams = mk_streams(4, 50, Pacing::Unpaced);
+        let report = serve(streams, ServerConfig { workers: 2, ..Default::default() });
+        assert_eq!(report.frames_done + report.dropped, 4 * 50);
+        assert!(report.fps() > 0.0);
+        assert!(report.latency.count() > 0);
+    }
+
+    #[test]
+    fn single_worker_single_stream() {
+        let streams = mk_streams(1, 30, Pacing::Unpaced);
+        let report = serve(streams, ServerConfig::default());
+        assert_eq!(report.frames_done, 30);
+        assert_eq!(report.dropped, 0);
+    }
+
+    #[test]
+    fn paced_streams_have_bounded_latency() {
+        // 4 streams at 200fps on 2 workers: work ≪ capacity, so p99
+        // latency must stay far below the frame interval
+        let streams = mk_streams(4, 40, Pacing::fps(200.0));
+        let report = serve(streams, ServerConfig { workers: 2, ..Default::default() });
+        assert_eq!(report.frames_done, 160);
+        let (p50, _, p99, _) = report.latency.summary();
+        assert!(p50 < Duration::from_millis(5), "p50 {p50:?}");
+        assert!(p99 < Duration::from_millis(50), "p99 {p99:?}");
+    }
+
+    #[test]
+    fn track_output_matches_offline_run() {
+        // serving one stream must produce the same track count as the
+        // offline serial run (same state machine, different plumbing)
+        use crate::coordinator::policy::run_sequence_serial;
+        let synth = generate_sequence(&SynthConfig::mot15("P", 80, 6, 9));
+        let (_, offline_tracks) =
+            run_sequence_serial(&synth, SortParams { timing: false, ..Default::default() });
+        let stream = VideoStream::new(0, synth.sequence.clone(), Pacing::Unpaced);
+        // Block (lossless) policy: shedding would change the output
+        let report = serve(
+            vec![stream],
+            ServerConfig { push_policy: PushPolicy::Block, ..Default::default() },
+        );
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.tracks_out, offline_tracks);
+    }
+
+    #[test]
+    fn tiny_queue_with_drop_oldest_sheds_load() {
+        // 8 fast streams into 1 worker with a 2-deep queue: drops happen,
+        // frames_done + dropped == total
+        let streams = mk_streams(8, 50, Pacing::Unpaced);
+        let report = serve(
+            streams,
+            ServerConfig { workers: 1, queue_capacity: 2, ..Default::default() },
+        );
+        assert_eq!(report.frames_done + report.dropped, 400);
+    }
+}

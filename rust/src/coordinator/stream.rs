@@ -1,0 +1,157 @@
+//! Video streams: framing a sequence as an *online* arrival process.
+//!
+//! The paper's workload is online — "the input video sequence is
+//! streamed through the system" (§III). [`VideoStream`] turns a stored
+//! sequence into a timed frame source for the stream server; pacing at
+//! e.g. 30 fps simulates camera input, `Pacing::Unpaced` replays as
+//! fast as the system can drain (the offline-benchmark mode).
+
+use crate::data::mot::Sequence;
+use crate::sort::Bbox;
+use std::time::{Duration, Instant};
+
+/// Arrival pacing for a stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pacing {
+    /// Frames become available every `interval` (camera-like).
+    Fixed { interval: Duration },
+    /// All frames available immediately (offline replay).
+    Unpaced,
+}
+
+impl Pacing {
+    /// Camera at `fps` frames/second.
+    pub fn fps(fps: f64) -> Self {
+        Pacing::Fixed { interval: Duration::from_secs_f64(1.0 / fps) }
+    }
+}
+
+/// One frame of work flowing through the coordinator.
+#[derive(Debug, Clone)]
+pub struct FrameJob {
+    /// Which stream this frame belongs to.
+    pub stream_id: usize,
+    /// 1-based frame index within the stream.
+    pub frame_index: u32,
+    /// Detection boxes for the frame.
+    pub boxes: Vec<Bbox>,
+    /// When the frame "arrived" (latency measurement origin).
+    pub arrival: Instant,
+    /// True on the stream's final frame (stream teardown signal).
+    pub last: bool,
+}
+
+/// An online view over a stored sequence.
+#[derive(Debug)]
+pub struct VideoStream {
+    /// Stable stream identity.
+    pub id: usize,
+    seq: Sequence,
+    cursor: usize,
+    pacing: Pacing,
+    started: Option<Instant>,
+}
+
+impl VideoStream {
+    /// Wrap a sequence as stream `id`.
+    pub fn new(id: usize, seq: Sequence, pacing: Pacing) -> Self {
+        VideoStream { id, seq, cursor: 0, pacing, started: None }
+    }
+
+    /// Sequence name.
+    pub fn name(&self) -> &str {
+        &self.seq.name
+    }
+
+    /// Frames remaining.
+    pub fn remaining(&self) -> usize {
+        self.seq.frames.len() - self.cursor
+    }
+
+    /// Instant at which the next frame becomes available
+    /// (`None` when the stream is exhausted).
+    pub fn next_due(&mut self) -> Option<Instant> {
+        if self.cursor >= self.seq.frames.len() {
+            return None;
+        }
+        let start = *self.started.get_or_insert_with(Instant::now);
+        Some(match self.pacing {
+            Pacing::Unpaced => start,
+            Pacing::Fixed { interval } => start + interval * self.cursor as u32,
+        })
+    }
+
+    /// Take the next frame (caller is responsible for honoring
+    /// [`Self::next_due`] when simulating real time).
+    pub fn take(&mut self) -> Option<FrameJob> {
+        if self.cursor >= self.seq.frames.len() {
+            return None;
+        }
+        let f = &self.seq.frames[self.cursor];
+        self.cursor += 1;
+        Some(FrameJob {
+            stream_id: self.id,
+            frame_index: f.index,
+            boxes: f.detections.iter().map(|d| d.bbox).collect(),
+            arrival: Instant::now(),
+            last: self.cursor == self.seq.frames.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_sequence, SynthConfig};
+
+    fn stream(n: u32, pacing: Pacing) -> VideoStream {
+        let s = generate_sequence(&SynthConfig::mot15("S", n, 4, 1));
+        VideoStream::new(3, s.sequence, pacing)
+    }
+
+    #[test]
+    fn drains_all_frames_in_order() {
+        let mut s = stream(10, Pacing::Unpaced);
+        let mut last_idx = 0;
+        let mut n = 0;
+        while let Some(job) = s.take() {
+            assert_eq!(job.stream_id, 3);
+            assert!(job.frame_index > last_idx);
+            last_idx = job.frame_index;
+            n += 1;
+        }
+        assert_eq!(n, 10);
+        assert_eq!(s.remaining(), 0);
+    }
+
+    #[test]
+    fn last_flag_set_exactly_once() {
+        let mut s = stream(5, Pacing::Unpaced);
+        let mut lasts = 0;
+        while let Some(job) = s.take() {
+            if job.last {
+                lasts += 1;
+                assert_eq!(job.frame_index, 5);
+            }
+        }
+        assert_eq!(lasts, 1);
+    }
+
+    #[test]
+    fn fixed_pacing_spaces_due_times() {
+        let mut s = stream(3, Pacing::fps(100.0)); // 10ms interval
+        let d1 = s.next_due().unwrap();
+        s.take();
+        let d2 = s.next_due().unwrap();
+        assert!(d2 >= d1 + Duration::from_millis(9));
+    }
+
+    #[test]
+    fn unpaced_streams_all_due_immediately() {
+        let mut s = stream(3, Pacing::Unpaced);
+        let d1 = s.next_due().unwrap();
+        s.take();
+        let d2 = s.next_due().unwrap();
+        assert_eq!(d1, d2);
+    }
+}

@@ -1,0 +1,127 @@
+//! MOT ground-truth (`gt.txt`) I/O.
+//!
+//! Row format: `frame, track_id, left, top, width, height, conf, class,
+//! visibility`. The synthetic generator exports its true trajectories in
+//! this format so external MOT tooling (and our `quality` module) can
+//! score any tracker output against the same files.
+
+use super::synth::{GtTrack, SynthSequence};
+use crate::sort::Bbox;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write ground-truth trajectories as MOT `gt.txt`.
+pub fn write_gt_file(tracks: &[GtTrack], path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    // MOT gt files are frame-major sorted
+    let mut rows: Vec<(u32, u64, Bbox)> = Vec::new();
+    for t in tracks {
+        for (f, b) in &t.boxes {
+            rows.push((*f, t.id + 1, *b)); // 1-based ids on disk
+        }
+    }
+    rows.sort_by_key(|r| (r.0, r.1));
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for (frame, id, b) in rows {
+        writeln!(
+            w,
+            "{},{},{:.2},{:.2},{:.2},{:.2},1,1,1.0",
+            frame,
+            id,
+            b.x1,
+            b.y1,
+            b.w(),
+            b.h()
+        )?;
+    }
+    Ok(())
+}
+
+/// Read a MOT `gt.txt` back into trajectories.
+pub fn read_gt_file(path: &Path) -> anyhow::Result<Vec<GtTrack>> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut by_id: BTreeMap<u64, Vec<(u32, Bbox)>> = BTreeMap::new();
+    for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').map(str::trim).collect();
+        if f.len() < 6 {
+            bail!("{path:?}:{}: expected >=6 fields", lineno + 1);
+        }
+        let frame: u32 = f[0].parse::<f64>()? as u32;
+        let id: u64 = f[1].parse::<f64>()? as u64;
+        let (l, t, w, h): (f64, f64, f64, f64) =
+            (f[2].parse()?, f[3].parse()?, f[4].parse()?, f[5].parse()?);
+        by_id.entry(id - 1).or_default().push((frame, Bbox::from_ltwh(l, t, w, h)));
+    }
+    Ok(by_id
+        .into_iter()
+        .map(|(id, mut boxes)| {
+            boxes.sort_by_key(|b| b.0);
+            GtTrack { id, boxes }
+        })
+        .collect())
+}
+
+/// Export a synthetic sequence MOT-style: `<dir>/<name>/det/det.txt`
+/// and `<dir>/<name>/gt/gt.txt`.
+pub fn export_mot_layout(synth: &SynthSequence, dir: &Path) -> anyhow::Result<()> {
+    let base = dir.join(&synth.sequence.name);
+    super::mot::write_det_file(&synth.sequence, &base.join("det").join("det.txt"))?;
+    write_gt_file(&synth.ground_truth, &base.join("gt").join("gt.txt"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_sequence, SynthConfig};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("smalltrack_gt_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn roundtrip_gt_file() {
+        let synth = generate_sequence(&SynthConfig::mot15("GT", 60, 5, 3));
+        let p = tmp("gt_roundtrip.txt");
+        write_gt_file(&synth.ground_truth, &p).unwrap();
+        let back = read_gt_file(&p).unwrap();
+        assert_eq!(back.len(), synth.ground_truth.len());
+        // spot-check a trajectory
+        let orig = &synth.ground_truth[0];
+        let got = back.iter().find(|t| t.id == orig.id).unwrap();
+        assert_eq!(got.boxes.len(), orig.boxes.len());
+        for ((f1, b1), (f2, b2)) in orig.boxes.iter().zip(&got.boxes) {
+            assert_eq!(f1, f2);
+            assert!((b1.x1 - b2.x1).abs() < 0.011); // %.2f quantization
+            assert!((b1.y2 - b2.y2).abs() < 0.021);
+        }
+    }
+
+    #[test]
+    fn export_layout_creates_det_and_gt() {
+        let synth = generate_sequence(&SynthConfig::mot15("Layout", 20, 4, 1));
+        let dir = tmp("layout");
+        export_mot_layout(&synth, &dir).unwrap();
+        assert!(dir.join("Layout/det/det.txt").exists());
+        assert!(dir.join("Layout/gt/gt.txt").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_rejects_malformed() {
+        let p = tmp("bad_gt.txt");
+        std::fs::write(&p, "1,2,3\n").unwrap();
+        assert!(read_gt_file(&p).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Data layer: MOT-format I/O, the synthetic MOT-2015-like dataset
+//! generator, input replication, and a dependency-free JSON reader.
+//!
+//! The paper evaluates on the 11 sequences of the MOT-2015 benchmark
+//! (Table I). The benchmark itself is not redistributable, so
+//! [`synth`] generates sequences with the *same measured properties* —
+//! frame counts, max simultaneous object counts, detector noise — in
+//! the real MOT `det.txt` wire format ([`mot`]); every consumer
+//! (tracker, baseline, benches) reads the same files the original
+//! would. [`replicate`] implements the paper's "replicated the input
+//! files 7 times" protocol for Fig 4.
+
+pub mod gt;
+pub mod json;
+pub mod mot;
+pub mod replicate;
+pub mod synth;
+
+pub use gt::{export_mot_layout, read_gt_file, write_gt_file};
+pub use mot::{read_det_file, write_det_file, write_track_file, Detection, FrameDets, Sequence};
+pub use synth::{generate_sequence, generate_suite, SynthConfig, MOT15_PROPERTIES};

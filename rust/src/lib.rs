@@ -1,0 +1,61 @@
+//! # smalltrack
+//!
+//! Production-quality reproduction of *"Online and Real-time Object
+//! Tracking Algorithm with Extremely Small Matrices"* (Tithi,
+//! Aananthakrishnan, Petrini — Intel, 2020): the SORT multi-object
+//! tracker rebuilt as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's observation: SORT's per-frame linear algebra runs on
+//! matrices no larger than 7×7, so parallelizing *inside* a frame
+//! (strong scaling) loses to a single well-optimized core, while running
+//! independent video streams per core (weak / throughput scaling)
+//! sustains full single-core FPS. This crate embodies that thesis:
+//!
+//! * [`linalg`] — hand-rolled fixed-size small-matrix kernels (the
+//!   paper's C analog) with flop/byte/invocation instrumentation that
+//!   regenerates the paper's Table II and Table IV.
+//! * [`sort`] — the SORT core: 7-state Kalman filter, rectangular
+//!   Hungarian assignment, IoU association, tracker lifecycle.
+//! * [`data`] — MOT-format I/O plus a synthetic MOT-2015-like dataset
+//!   generator reproducing Table I's properties.
+//! * [`coordinator`] — the multi-stream runtime: worker pool, the three
+//!   scaling policies (strong / weak / throughput) as first-class
+//!   scheduler modes, backpressure, metrics.
+//! * [`simcore`] — a calibrated discrete-event multicore simulator used
+//!   to regenerate the paper's 18/36/72-core tables on this testbed.
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
+//!   tracker-bank kernels (`artifacts/*.hlo.txt`) from Rust.
+//! * [`perfmodel`] — analytic hardware-counter model for Table III.
+//! * [`benchkit`] / [`proptest_lite`] — offline-friendly measurement and
+//!   property-testing harnesses (criterion/proptest are not available in
+//!   the build sandbox).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use smalltrack::data::synth::{SynthConfig, generate_sequence};
+//! use smalltrack::sort::{Sort, SortParams};
+//!
+//! let synth = generate_sequence(&SynthConfig::mot15("TUD-Campus", 71, 6, 7));
+//! let mut tracker = Sort::new(SortParams::default());
+//! for frame in &synth.sequence.frames {
+//!     let boxes: Vec<_> = frame.detections.iter().map(|d| d.bbox).collect();
+//!     for t in tracker.update(&boxes) {
+//!         println!("frame {} id {} box {:?}", frame.index, t.id, t.bbox);
+//!     }
+//! }
+//! ```
+
+pub mod benchkit;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod perfmodel;
+pub mod prng;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod simcore;
+pub mod sort;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,193 @@
+//! Cholesky factorization, triangular solves and SPD inverse.
+//!
+//! SORT's only matrix inverse is the 4×4 innovation covariance
+//! `S = H P H' + R`, which is symmetric positive definite by
+//! construction — so, as in the paper's C implementation ("cholesky/Inv"
+//! in Table IV), we factor `S = L L'` and solve instead of running a
+//! general LU. At N=4 everything unrolls.
+
+use super::counters::{record, Kernel};
+use super::matrix::Mat;
+
+/// Lower-triangular Cholesky factor of an SPD matrix: `A = L L^T`.
+///
+/// Returns `None` if a non-positive pivot is met (matrix not SPD —
+/// in SORT this signals a degenerate tracker covariance; callers treat
+/// the tracker as corrupt rather than crash).
+pub fn cholesky<const N: usize>(a: &Mat<N, N>) -> Option<Mat<N, N>> {
+    // ~N^3/3 multiply-adds + N sqrt.
+    record(
+        Kernel::Cholesky,
+        ((N * N * N) / 3 + N) as u64,
+        (2 * N * N * 8) as u64,
+    );
+    let mut l = Mat::<N, N>::zeros();
+    for i in 0..N {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return None;
+                }
+                l[(i, i)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` for SPD `A` given its Cholesky factor `L`
+/// (forward then backward substitution).
+pub fn chol_solve<const N: usize>(l: &Mat<N, N>, b: &[f64; N]) -> [f64; N] {
+    record(Kernel::TriSolve, (2 * N * N) as u64, ((N * N + 2 * N) * 8) as u64);
+    // L y = b
+    let mut y = [0.0; N];
+    for i in 0..N {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    // L^T x = y
+    let mut x = [0.0; N];
+    for i in (0..N).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..N {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// SPD inverse via Cholesky: `A^-1 = solve(A, e_i)` column-by-column.
+///
+/// Counted under [`Kernel::Inverse`] (the paper's "Matrix-Inverse" row);
+/// the inner factor/solve work is *not* double counted.
+pub fn chol_inverse<const N: usize>(a: &Mat<N, N>) -> Option<Mat<N, N>> {
+    record(
+        Kernel::Inverse,
+        ((2 * N * N * N) as u64) / 3,
+        (2 * N * N * 8) as u64,
+    );
+    let was_on = super::counters::counters_enabled();
+    super::counters::set_counters_enabled(false);
+    let l = match cholesky(a) {
+        Some(l) => l,
+        None => {
+            super::counters::set_counters_enabled(was_on);
+            return None;
+        }
+    };
+    let mut inv = Mat::<N, N>::zeros();
+    let mut e = [0.0; N];
+    for c in 0..N {
+        e[c] = 1.0;
+        let col = chol_solve(&l, &e);
+        e[c] = 0.0;
+        for r in 0..N {
+            inv[(r, c)] = col[r];
+        }
+    }
+    super::counters::set_counters_enabled(was_on);
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd4() -> Mat<4, 4> {
+        // A = B B^T + 4I for a fixed B.
+        let b = Mat::<4, 4>::from_slice(&[
+            1.0, 2.0, 0.5, -1.0, //
+            0.0, 1.5, 1.0, 0.3, //
+            2.0, -0.5, 1.0, 0.0, //
+            0.7, 0.7, -0.2, 2.0,
+        ]);
+        b.matmul_nt(&b).add(&Mat::eye().scale(4.0))
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd4();
+        let l = cholesky(&a).expect("SPD");
+        let back = l.matmul_nt(&l);
+        assert!(a.max_abs_diff(&back) < 1e-10);
+        // strictly lower-triangular above diagonal
+        for r in 0..4 {
+            for c in (r + 1)..4 {
+                assert_eq!(l[(r, c)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let mut a = Mat::<3, 3>::eye();
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        let a = spd4();
+        let x_true = [1.0, -2.0, 3.0, 0.25];
+        let b = a.matvec(&x_true);
+        let l = cholesky(&a).unwrap();
+        let x = chol_solve(&l, &b);
+        for i in 0..4 {
+            assert!((x[i] - x_true[i]).abs() < 1e-10, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let a = spd4();
+        let inv = chol_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Mat::eye()) < 1e-10);
+    }
+
+    #[test]
+    fn inverse_of_diagonal() {
+        let a = Mat::<4, 4>::diag(&[2.0, 4.0, 5.0, 10.0]);
+        let inv = chol_inverse(&a).unwrap();
+        let want = Mat::<4, 4>::diag(&[0.5, 0.25, 0.2, 0.1]);
+        assert!(inv.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn inverse_counts_once_without_double_counting() {
+        use crate::linalg::counters::{reset_counters, snapshot, Kernel};
+        reset_counters();
+        let _ = chol_inverse(&spd4());
+        let s = snapshot();
+        assert_eq!(s.get(Kernel::Inverse).calls, 1);
+        assert_eq!(s.get(Kernel::Cholesky).calls, 0, "inner work suppressed");
+        assert_eq!(s.get(Kernel::TriSolve).calls, 0);
+    }
+
+    #[test]
+    fn solve_7x7_spd() {
+        // exercise a second monomorphization (the covariance size)
+        let mut a = Mat::<7, 7>::eye().scale(3.0);
+        for i in 0..6 {
+            a[(i, i + 1)] = 0.5;
+            a[(i + 1, i)] = 0.5;
+        }
+        let x_true = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let b = a.matvec(&x_true);
+        let l = cholesky(&a).unwrap();
+        let x = chol_solve(&l, &b);
+        for i in 0..7 {
+            assert!((x[i] - x_true[i]).abs() < 1e-9);
+        }
+    }
+}

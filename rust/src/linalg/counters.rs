@@ -1,0 +1,264 @@
+//! Kernel invocation / flop / byte instrumentation.
+//!
+//! The paper characterizes SORT by *which* matrix kernels run and at
+//! what arithmetic intensity (Tables II–IV). To regenerate those tables
+//! from a live run rather than by hand, every `linalg` kernel reports
+//! `(calls, flops, bytes)` here, keyed by [`Kernel`]. Counters are
+//! thread-local so worker threads never contend; harnesses aggregate
+//! snapshots per phase.
+
+use std::cell::Cell;
+
+/// The kernel taxonomy of the paper's Table II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Kernel {
+    /// Matrix–matrix multiplication (DGEMM-shaped).
+    Gemm = 0,
+    /// Matrix–vector multiplication (DGEMV-shaped).
+    Gemv = 1,
+    /// Matrix transpose.
+    Transpose = 2,
+    /// SPD inverse (via Cholesky — the paper's "cholesky/Inv").
+    Inverse = 3,
+    /// Cholesky factorization.
+    Cholesky = 4,
+    /// Triangular solve.
+    TriSolve = 5,
+    /// Element-wise matrix–matrix (add/sub/mul/min).
+    EwMatMat = 6,
+    /// Element-wise matrix–vector ops.
+    EwMatVec = 7,
+    /// Element-wise vector–vector ops.
+    EwVecVec = 8,
+    /// Matrix/vector creation, copies, resets ("manipulation libs").
+    MatCopy = 9,
+    /// Scalar × matrix.
+    ScalarMat = 10,
+    /// Transcendentals (sqrt in bbox conversion).
+    Sqrt = 11,
+    /// IoU pairwise geometry.
+    Iou = 12,
+    /// Hungarian row/col reductions and augmenting scans.
+    Hungarian = 13,
+}
+
+/// Number of kernel kinds (length of the counter arrays).
+pub const N_KERNELS: usize = 14;
+
+impl Kernel {
+    /// All kernels, in `repr` order.
+    pub const ALL: [Kernel; N_KERNELS] = [
+        Kernel::Gemm,
+        Kernel::Gemv,
+        Kernel::Transpose,
+        Kernel::Inverse,
+        Kernel::Cholesky,
+        Kernel::TriSolve,
+        Kernel::EwMatMat,
+        Kernel::EwMatVec,
+        Kernel::EwVecVec,
+        Kernel::MatCopy,
+        Kernel::ScalarMat,
+        Kernel::Sqrt,
+        Kernel::Iou,
+        Kernel::Hungarian,
+    ];
+
+    /// Human-readable name matching the paper's Table II rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Gemm => "Matrix-Matrix Multiplication",
+            Kernel::Gemv => "Matrix-Vector Multiplication",
+            Kernel::Transpose => "Matrix-Transpose",
+            Kernel::Inverse => "Matrix-Inverse",
+            Kernel::Cholesky => "Cholesky Factorization",
+            Kernel::TriSolve => "Triangular Solve",
+            Kernel::EwMatMat => "Element-wise Matrix-Matrix",
+            Kernel::EwMatVec => "Element-wise Matrix-Vector",
+            Kernel::EwVecVec => "Element-wise Vector-Vector",
+            Kernel::MatCopy => "Matrix-vector manipulation/copy",
+            Kernel::ScalarMat => "Scalar*Matrix",
+            Kernel::Sqrt => "Transcendental (sqrt)",
+            Kernel::Iou => "IoU pairwise geometry",
+            Kernel::Hungarian => "Hungarian scan/reduce",
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread kill-switch: toggling it never races with other
+    /// worker threads' instrumentation (and a thread-local read is as
+    /// cheap as the counter bump it guards).
+    static ENABLED: Cell<bool> = const { Cell::new(true) };
+}
+
+/// Enable/disable counting for the calling thread (e.g. for
+/// pure-speed benches).
+pub fn set_counters_enabled(on: bool) {
+    ENABLED.with(|e| e.set(on));
+}
+
+/// Whether instrumentation is on for the calling thread.
+pub fn counters_enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+thread_local! {
+    static CALLS: [Cell<u64>; N_KERNELS] = Default::default();
+    static FLOPS: [Cell<u64>; N_KERNELS] = Default::default();
+    static BYTES: [Cell<u64>; N_KERNELS] = Default::default();
+}
+
+/// Record one kernel invocation. Called by every `linalg` op.
+#[inline(always)]
+pub fn record(k: Kernel, flops: u64, bytes: u64) {
+    if !counters_enabled() {
+        return;
+    }
+    let i = k as usize;
+    CALLS.with(|c| c[i].set(c[i].get() + 1));
+    FLOPS.with(|c| c[i].set(c[i].get() + flops));
+    BYTES.with(|c| c[i].set(c[i].get() + bytes));
+}
+
+/// Per-kernel aggregate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    pub calls: u64,
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+impl KernelStats {
+    /// Arithmetic intensity in flops/byte (0 when no bytes moved).
+    pub fn ai(&self) -> f64 {
+        if self.bytes == 0 {
+            0.0
+        } else {
+            self.flops as f64 / self.bytes as f64
+        }
+    }
+}
+
+/// Snapshot of all kernel counters for the calling thread.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub per_kernel: [KernelStats; N_KERNELS],
+}
+
+impl CounterSnapshot {
+    /// Stats for one kernel kind.
+    pub fn get(&self, k: Kernel) -> KernelStats {
+        self.per_kernel[k as usize]
+    }
+
+    /// Sum across all kernels.
+    pub fn total(&self) -> KernelStats {
+        let mut t = KernelStats::default();
+        for s in &self.per_kernel {
+            t.calls += s.calls;
+            t.flops += s.flops;
+            t.bytes += s.bytes;
+        }
+        t
+    }
+
+    /// `self - earlier`, element-wise; used for per-phase deltas.
+    pub fn delta(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        let mut out = CounterSnapshot::default();
+        for i in 0..N_KERNELS {
+            out.per_kernel[i] = KernelStats {
+                calls: self.per_kernel[i].calls - earlier.per_kernel[i].calls,
+                flops: self.per_kernel[i].flops - earlier.per_kernel[i].flops,
+                bytes: self.per_kernel[i].bytes - earlier.per_kernel[i].bytes,
+            };
+        }
+        out
+    }
+
+    /// Element-wise accumulate (for merging per-thread snapshots).
+    pub fn merge(&mut self, other: &CounterSnapshot) {
+        for i in 0..N_KERNELS {
+            self.per_kernel[i].calls += other.per_kernel[i].calls;
+            self.per_kernel[i].flops += other.per_kernel[i].flops;
+            self.per_kernel[i].bytes += other.per_kernel[i].bytes;
+        }
+    }
+}
+
+/// Read the calling thread's counters.
+pub fn snapshot() -> CounterSnapshot {
+    let mut s = CounterSnapshot::default();
+    CALLS.with(|c| {
+        for i in 0..N_KERNELS {
+            s.per_kernel[i].calls = c[i].get();
+        }
+    });
+    FLOPS.with(|c| {
+        for i in 0..N_KERNELS {
+            s.per_kernel[i].flops = c[i].get();
+        }
+    });
+    BYTES.with(|c| {
+        for i in 0..N_KERNELS {
+            s.per_kernel[i].bytes = c[i].get();
+        }
+    });
+    s
+}
+
+/// Zero the calling thread's counters.
+pub fn reset_counters() {
+    CALLS.with(|c| c.iter().for_each(|x| x.set(0)));
+    FLOPS.with(|c| c.iter().for_each(|x| x.set(0)));
+    BYTES.with(|c| c.iter().for_each(|x| x.set(0)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot_roundtrip() {
+        reset_counters();
+        record(Kernel::Gemm, 100, 64);
+        record(Kernel::Gemm, 50, 32);
+        record(Kernel::Sqrt, 1, 8);
+        let s = snapshot();
+        assert_eq!(s.get(Kernel::Gemm).calls, 2);
+        assert_eq!(s.get(Kernel::Gemm).flops, 150);
+        assert_eq!(s.get(Kernel::Gemm).bytes, 96);
+        assert_eq!(s.get(Kernel::Sqrt).calls, 1);
+        assert_eq!(s.total().calls, 3);
+        reset_counters();
+        assert_eq!(snapshot().total().calls, 0);
+    }
+
+    #[test]
+    fn delta_isolates_a_phase() {
+        reset_counters();
+        record(Kernel::Gemv, 10, 10);
+        let before = snapshot();
+        record(Kernel::Gemv, 7, 3);
+        let d = snapshot().delta(&before);
+        assert_eq!(d.get(Kernel::Gemv).calls, 1);
+        assert_eq!(d.get(Kernel::Gemv).flops, 7);
+    }
+
+    #[test]
+    fn disabled_counters_do_not_record() {
+        reset_counters();
+        set_counters_enabled(false);
+        record(Kernel::Gemm, 5, 5);
+        set_counters_enabled(true);
+        assert_eq!(snapshot().get(Kernel::Gemm).calls, 0);
+    }
+
+    #[test]
+    fn ai_computation() {
+        let s = KernelStats { calls: 1, flops: 18, bytes: 1 };
+        assert!((s.ai() - 18.0).abs() < 1e-12);
+        assert_eq!(KernelStats::default().ai(), 0.0);
+    }
+}

@@ -1,0 +1,417 @@
+//! `Mat<R, C>` — a const-generic, stack-allocated dense matrix.
+//!
+//! All of SORT's matrices fit in a cache line or two, so the right
+//! representation is `[[f64; C]; R]` by value: no indirection, no
+//! bounds checks after inlining, and the compiler fully unrolls every
+//! loop because `R` and `C` are compile-time constants. This is the
+//! paper's "well-optimized serial C" substrate.
+
+use super::counters::{record, Kernel};
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major `R x C` matrix of `f64` on the stack.
+#[derive(Clone, Copy, PartialEq)]
+pub struct Mat<const R: usize, const C: usize> {
+    data: [[f64; C]; R],
+}
+
+impl<const R: usize, const C: usize> Default for Mat<R, C> {
+    fn default() -> Self {
+        Self::zeros()
+    }
+}
+
+impl<const R: usize, const C: usize> fmt::Debug for Mat<R, C> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat<{R}x{C}>[")?;
+        for r in 0..R {
+            writeln!(f, "  {:?}", self.data[r])?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl<const R: usize, const C: usize> Mat<R, C> {
+    /// All-zero matrix.
+    #[inline]
+    pub fn zeros() -> Self {
+        Mat { data: [[0.0; C]; R] }
+    }
+
+    /// Construct from a row-major array.
+    #[inline]
+    pub fn from_rows(data: [[f64; C]; R]) -> Self {
+        Mat { data }
+    }
+
+    /// Construct from a flat row-major slice (length must be `R*C`).
+    pub fn from_slice(v: &[f64]) -> Self {
+        assert_eq!(v.len(), R * C, "from_slice: wrong length");
+        let mut m = Self::zeros();
+        for r in 0..R {
+            for c in 0..C {
+                m.data[r][c] = v[r * C + c];
+            }
+        }
+        m
+    }
+
+    /// Number of rows (const).
+    #[inline]
+    pub const fn rows(&self) -> usize {
+        R
+    }
+
+    /// Number of columns (const).
+    #[inline]
+    pub const fn cols(&self) -> usize {
+        C
+    }
+
+    /// Flatten to a row-major `Vec`.
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(R * C);
+        for r in 0..R {
+            v.extend_from_slice(&self.data[r]);
+        }
+        v
+    }
+
+    /// Matrix–matrix product: `(R x C) * (C x K) -> (R x K)`.
+    ///
+    /// Flop count `2*R*K*C` and the operand/result traffic are recorded
+    /// under [`Kernel::Gemm`].
+    #[inline]
+    pub fn matmul<const K: usize>(&self, rhs: &Mat<C, K>) -> Mat<R, K> {
+        record(
+            Kernel::Gemm,
+            (2 * R * K * C) as u64,
+            ((R * C + C * K + R * K) * 8) as u64,
+        );
+        let mut out = Mat::<R, K>::zeros();
+        for r in 0..R {
+            for c in 0..C {
+                let a = self.data[r][c];
+                for k in 0..K {
+                    out.data[r][k] += a * rhs.data[c][k];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product: `(R x C) * C -> R` ([`Kernel::Gemv`]).
+    #[inline]
+    pub fn matvec(&self, v: &[f64; C]) -> [f64; R] {
+        record(
+            Kernel::Gemv,
+            (2 * R * C) as u64,
+            ((R * C + C + R) * 8) as u64,
+        );
+        let mut out = [0.0; R];
+        for r in 0..R {
+            let mut acc = 0.0;
+            for c in 0..C {
+                acc += self.data[r][c] * v[c];
+            }
+            out[r] = acc;
+        }
+        out
+    }
+
+    /// Transpose ([`Kernel::Transpose`]).
+    #[inline]
+    pub fn transpose(&self) -> Mat<C, R> {
+        record(Kernel::Transpose, 0, (2 * R * C * 8) as u64);
+        let mut out = Mat::<C, R>::zeros();
+        for r in 0..R {
+            for c in 0..C {
+                out.data[c][r] = self.data[r][c];
+            }
+        }
+        out
+    }
+
+    /// `A * B^T` fused (skips materializing the transpose) —
+    /// the shape that appears twice per Kalman step (`P H^T`, `F P F^T`).
+    #[inline]
+    pub fn matmul_nt<const K: usize>(&self, rhs: &Mat<K, C>) -> Mat<R, K> {
+        record(
+            Kernel::Gemm,
+            (2 * R * K * C) as u64,
+            ((R * C + K * C + R * K) * 8) as u64,
+        );
+        let mut out = Mat::<R, K>::zeros();
+        for r in 0..R {
+            for k in 0..K {
+                let mut acc = 0.0;
+                for c in 0..C {
+                    acc += self.data[r][c] * rhs.data[k][c];
+                }
+                out.data[r][k] = acc;
+            }
+        }
+        out
+    }
+
+    /// Element-wise sum ([`Kernel::EwMatMat`]).
+    #[inline]
+    pub fn add(&self, rhs: &Self) -> Self {
+        record(Kernel::EwMatMat, (R * C) as u64, (3 * R * C * 8) as u64);
+        let mut out = *self;
+        for r in 0..R {
+            for c in 0..C {
+                out.data[r][c] += rhs.data[r][c];
+            }
+        }
+        out
+    }
+
+    /// Element-wise difference ([`Kernel::EwMatMat`]).
+    #[inline]
+    pub fn sub(&self, rhs: &Self) -> Self {
+        record(Kernel::EwMatMat, (R * C) as u64, (3 * R * C * 8) as u64);
+        let mut out = *self;
+        for r in 0..R {
+            for c in 0..C {
+                out.data[r][c] -= rhs.data[r][c];
+            }
+        }
+        out
+    }
+
+    /// Scalar multiple ([`Kernel::ScalarMat`]).
+    #[inline]
+    pub fn scale(&self, s: f64) -> Self {
+        record(Kernel::ScalarMat, (R * C) as u64, (2 * R * C * 8) as u64);
+        let mut out = *self;
+        for r in 0..R {
+            for c in 0..C {
+                out.data[r][c] *= s;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm (diagnostic; not on the hot path).
+    pub fn frobenius(&self) -> f64 {
+        let mut acc = 0.0;
+        for r in 0..R {
+            for c in 0..C {
+                acc += self.data[r][c] * self.data[r][c];
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Max |a - b| over all entries (test helper).
+    pub fn max_abs_diff(&self, rhs: &Self) -> f64 {
+        let mut m: f64 = 0.0;
+        for r in 0..R {
+            for c in 0..C {
+                m = m.max((self.data[r][c] - rhs.data[r][c]).abs());
+            }
+        }
+        m
+    }
+
+    /// `max |a[i][j] - a[j][i]|` asymmetry measure (square only).
+    pub fn asymmetry(&self) -> f64 {
+        let mut m: f64 = 0.0;
+        for r in 0..R {
+            for c in 0..C {
+                if r < R && c < R && r < C && c < C {
+                    m = m.max((self.data[r][c] - self.data[c][r]).abs());
+                }
+            }
+        }
+        m
+    }
+
+    /// Raw row access.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64; C] {
+        &self.data[r]
+    }
+}
+
+impl<const N: usize> Mat<N, N> {
+    /// Identity matrix.
+    #[inline]
+    pub fn eye() -> Self {
+        let mut m = Self::zeros();
+        for i in 0..N {
+            m.data[i][i] = 1.0;
+        }
+        m
+    }
+
+    /// Diagonal matrix from a vector.
+    #[inline]
+    pub fn diag(d: &[f64; N]) -> Self {
+        let mut m = Self::zeros();
+        for i in 0..N {
+            m.data[i][i] = d[i];
+        }
+        m
+    }
+
+    /// Diagonal as an array.
+    pub fn diagonal(&self) -> [f64; N] {
+        let mut d = [0.0; N];
+        for i in 0..N {
+            d[i] = self.data[i][i];
+        }
+        d
+    }
+
+    /// `(A + A^T) / 2` — cheap symmetry repair after long update chains.
+    #[inline]
+    pub fn symmetrize(&self) -> Self {
+        record(Kernel::EwMatMat, (N * N) as u64, (2 * N * N * 8) as u64);
+        let mut out = *self;
+        for r in 0..N {
+            for c in (r + 1)..N {
+                let v = 0.5 * (self.data[r][c] + self.data[c][r]);
+                out.data[r][c] = v;
+                out.data[c][r] = v;
+            }
+        }
+        out
+    }
+}
+
+impl<const R: usize, const C: usize> Index<(usize, usize)> for Mat<R, C> {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r][c]
+    }
+}
+
+impl<const R: usize, const C: usize> IndexMut<(usize, usize)> for Mat<R, C> {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r][c]
+    }
+}
+
+/// Element-wise vector add ([`Kernel::EwVecVec`]).
+#[inline]
+pub fn vec_add<const N: usize>(a: &[f64; N], b: &[f64; N]) -> [f64; N] {
+    record(Kernel::EwVecVec, N as u64, (3 * N * 8) as u64);
+    let mut out = [0.0; N];
+    for i in 0..N {
+        out[i] = a[i] + b[i];
+    }
+    out
+}
+
+/// Element-wise vector subtract ([`Kernel::EwVecVec`]).
+#[inline]
+pub fn vec_sub<const N: usize>(a: &[f64; N], b: &[f64; N]) -> [f64; N] {
+    record(Kernel::EwVecVec, N as u64, (3 * N * 8) as u64);
+    let mut out = [0.0; N];
+    for i in 0..N {
+        out[i] = a[i] - b[i];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::<2, 2>::from_rows([[1.0, 2.0], [3.0, 4.0]]);
+        let b = Mat::<2, 2>::from_rows([[1.0, 1.0], [1.0, 1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c[(0, 0)], 3.0);
+        assert_eq!(c[(0, 1)], 3.0);
+        assert_eq!(c[(1, 0)], 7.0);
+        assert_eq!(c[(1, 1)], 7.0);
+    }
+
+    #[test]
+    fn matmul_rectangular_shapes() {
+        let h = Mat::<4, 7>::from_slice(&(0..28).map(|i| i as f64).collect::<Vec<_>>());
+        let p = Mat::<7, 7>::eye();
+        let hp = h.matmul(&p);
+        assert_eq!(hp.to_vec(), h.to_vec());
+    }
+
+    #[test]
+    fn matmul_nt_equals_explicit_transpose() {
+        let a = Mat::<3, 5>::from_slice(&(0..15).map(|i| (i as f64) * 0.7 - 3.0).collect::<Vec<_>>());
+        let b = Mat::<4, 5>::from_slice(&(0..20).map(|i| (i as f64) * 1.3 + 1.0).collect::<Vec<_>>());
+        let fused = a.matmul_nt(&b);
+        let explicit = a.matmul(&b.transpose());
+        assert!(fused.max_abs_diff(&explicit) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let f = Mat::<7, 7>::from_slice(&(0..49).map(|i| (i % 5) as f64).collect::<Vec<_>>());
+        let x = [1.0, -1.0, 2.0, 0.5, 0.0, 3.0, -2.0];
+        let got = f.matvec(&x);
+        for r in 0..7 {
+            let mut want = 0.0;
+            for c in 0..7 {
+                want += f[(r, c)] * x[c];
+            }
+            assert!((got[r] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::<4, 7>::from_slice(&(0..28).map(|i| i as f64).collect::<Vec<_>>());
+        let back = a.transpose().transpose();
+        assert!(a.max_abs_diff(&back) == 0.0);
+    }
+
+    #[test]
+    fn add_sub_scale_roundtrip() {
+        let a = Mat::<3, 3>::from_slice(&[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let b = a.scale(2.0);
+        let c = b.sub(&a);
+        assert!(c.max_abs_diff(&a) < 1e-12);
+        let d = a.add(&a);
+        assert!(d.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i = Mat::<5, 5>::eye();
+        let d = Mat::<5, 5>::diag(&[1.0; 5]);
+        assert!(i.max_abs_diff(&d) == 0.0);
+        assert_eq!(i.diagonal(), [1.0; 5]);
+    }
+
+    #[test]
+    fn symmetrize_fixes_asymmetry() {
+        let mut a = Mat::<3, 3>::eye();
+        a[(0, 1)] = 1.0;
+        a[(1, 0)] = 3.0;
+        let s = a.symmetrize();
+        assert_eq!(s[(0, 1)], 2.0);
+        assert_eq!(s[(1, 0)], 2.0);
+        assert_eq!(s.asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn vec_ops() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [0.5, 0.5, 0.5];
+        assert_eq!(vec_add(&a, &b), [1.5, 2.5, 3.5]);
+        assert_eq!(vec_sub(&a, &b), [0.5, 1.5, 2.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong length")]
+    fn from_slice_length_checked() {
+        let _ = Mat::<2, 2>::from_slice(&[1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Fixed-size small-matrix linear algebra — the paper's C substrate.
+//!
+//! SORT's hot path manipulates matrices no larger than 7×7 (Table II of
+//! the paper): `F[7][7]`, `H[4][7]`, `P[7][7]`, `Q[7][7]`, `R[4][4]`,
+//! `S[4][4]`, state vectors `x[7]`, measurements `z[4]`. At these sizes
+//! a general BLAS call is dominated by dispatch overhead, so — like the
+//! paper's C implementation — every kernel here is a monomorphized,
+//! fully-unrollable loop nest over const-generic stack arrays. No heap,
+//! no dispatch, no aliasing: the optimizer sees every bound.
+//!
+//! Every kernel is *instrumented*: each invocation bumps a thread-local
+//! counter of calls / flops / bytes keyed by [`Kernel`]. The counters
+//! are what regenerate the paper's Table II (kernel inventory), Table IV
+//! (arithmetic intensity per algorithm step) and feed the Table III
+//! analytic counter model. Instrumentation is a pair of thread-local
+//! integer adds per call — negligible next to even a 4×4 matmul — and
+//! can be globally disabled for the perf-critical benches.
+
+pub mod cholesky;
+pub mod counters;
+pub mod matrix;
+
+pub use cholesky::{chol_inverse, chol_solve, cholesky};
+pub use counters::{
+    counters_enabled, reset_counters, set_counters_enabled, snapshot, CounterSnapshot, Kernel,
+    KernelStats,
+};
+pub use matrix::Mat;
+
+/// 7 = dimension of SORT's Kalman state `[u, v, s, r, du, dv, ds]`.
+pub const DIM_X: usize = 7;
+/// 4 = dimension of SORT's measurement `[u, v, s, r]`.
+pub const DIM_Z: usize = 4;
+
+/// `Mat` aliases for the shapes in the paper's Table II.
+pub type Mat7 = Mat<7, 7>;
+/// Measurement-model matrix (`H[4][7]`).
+pub type Mat4x7 = Mat<4, 7>;
+/// Kalman-gain shape (`K[7][4]`).
+pub type Mat7x4 = Mat<7, 4>;
+/// Innovation-covariance shape (`S[4][4]`).
+pub type Mat4 = Mat<4, 4>;
+/// State vector as a column (`x[7][1]`).
+pub type Vec7 = [f64; 7];
+/// Measurement vector (`z[4][1]`).
+pub type Vec4 = [f64; 4];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aliases_have_expected_shapes() {
+        let m: Mat7 = Mat::zeros();
+        assert_eq!(m.rows(), 7);
+        assert_eq!(m.cols(), 7);
+        let h: Mat4x7 = Mat::zeros();
+        assert_eq!(h.rows(), 4);
+        assert_eq!(h.cols(), 7);
+    }
+}

@@ -1,0 +1,115 @@
+//! Minimal property-testing harness (the offline sandbox has no
+//! `proptest`).
+//!
+//! Deliberately simple: deterministic seeded case generation, a
+//! configurable case count, and first-failure reporting with the seed
+//! so any failure is reproducible with `Config { seed, cases: 1 }`.
+//! No shrinking — at SORT's input sizes failing cases are already
+//! small enough to read.
+
+use crate::prng::Rng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: u32,
+    /// Master seed; case `i` uses an independent split stream.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x5EED_CAFE }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics (with the case seed)
+/// on the first failure so `cargo test` reports it.
+pub fn run_named<G, T, P>(name: &str, cfg: Config, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    T: std::fmt::Debug,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut master = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = master.split();
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}):\n  {msg}\n  input: {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// [`run_named`] with defaults.
+pub fn run<G, T, P>(name: &str, gen: G, prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    T: std::fmt::Debug,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    run_named(name, Config::default(), gen, prop)
+}
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run_named(
+            "count",
+            Config { cases: 10, seed: 1 },
+            |r| r.below(100),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        run_named(
+            "fails",
+            Config { cases: 10, seed: 2 },
+            |r| r.below(10),
+            |&v| ensure(v < 5, format!("v={v} not < 5")),
+        );
+    }
+
+    #[test]
+    fn deterministic_given_same_seed() {
+        let collect = |seed: u64| {
+            let mut vals = Vec::new();
+            run_named(
+                "det",
+                Config { cases: 5, seed },
+                |r| r.below(1000),
+                |&v| {
+                    vals.push(v);
+                    Ok(())
+                },
+            );
+            vals
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

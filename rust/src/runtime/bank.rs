@@ -1,0 +1,288 @@
+//! The XLA tracker bank: SORT with its dense algebra offloaded to the
+//! AOT-compiled JAX/Pallas kernels.
+//!
+//! This is the accelerator-shaped variant of the tracker (DESIGN.md
+//! §Hardware-Adaptation): tracker state lives in fixed `(T,7)` /
+//! `(T,7,7)` slot arrays; predict + IoU run as one compiled XLA call,
+//! association (control flow) stays in Rust, and the matched updates
+//! run as a second XLA call. Lifecycle semantics are identical to the
+//! native [`crate::sort::Sort`] — equivalence is integration-tested in
+//! `rust/tests/integration_runtime.rs`.
+//!
+//! The per-call dispatch overhead vs. the native path at various bank
+//! sizes is exactly the paper's "tiny matrices don't amortize"
+//! argument, measured by `cargo bench --bench xla_vs_native` (E8).
+
+use super::client::{Artifact, XlaRuntime};
+use crate::sort::association::{associate_from_matrix, AssociationScratch};
+use crate::sort::{AssociationMethod, Bbox, SortParams, Track};
+use anyhow::Result;
+
+const DX: usize = 7;
+const DZ: usize = 4;
+
+/// Padded tracker-slot arrays (the XLA-side state).
+#[derive(Debug, Clone)]
+pub struct BankState {
+    /// Bank capacity (slot count `T`).
+    pub t: usize,
+    /// `(T,7)` row-major states.
+    pub x: Vec<f64>,
+    /// `(T,7,7)` row-major covariances.
+    pub p: Vec<f64>,
+    /// `(T,1)` live mask.
+    pub mask: Vec<f64>,
+}
+
+impl BankState {
+    /// Empty bank with `t` slots.
+    pub fn new(t: usize) -> Self {
+        BankState { t, x: vec![0.0; t * DX], p: vec![0.0; t * DX * DX], mask: vec![0.0; t] }
+    }
+
+    /// Indices of live slots.
+    pub fn live_slots(&self) -> Vec<usize> {
+        (0..self.t).filter(|&i| self.mask[i] > 0.0).collect()
+    }
+
+    /// First free slot.
+    pub fn free_slot(&self) -> Option<usize> {
+        (0..self.t).find(|&i| self.mask[i] == 0.0)
+    }
+
+    /// Seed slot `i` from measurement `z` (velocities 0, covariance P0).
+    pub fn seed(&mut self, i: usize, z: &[f64; 4]) {
+        let consts = crate::sort::SortConstants::sort_defaults();
+        self.x[i * DX..i * DX + 4].copy_from_slice(z);
+        self.x[i * DX + 4..(i + 1) * DX].fill(0.0);
+        for r in 0..DX {
+            for c in 0..DX {
+                self.p[i * DX * DX + r * DX + c] = consts.p0[(r, c)];
+            }
+        }
+        self.mask[i] = 1.0;
+    }
+
+    /// Kill slot `i`.
+    pub fn kill(&mut self, i: usize) {
+        self.mask[i] = 0.0;
+    }
+}
+
+/// Per-slot lifecycle bookkeeping (the Rust-side tracker metadata).
+#[derive(Debug, Clone, Copy, Default)]
+struct SlotMeta {
+    id: u64,
+    time_since_update: u32,
+    hit_streak: u32,
+    hits: u32,
+    age: u32,
+}
+
+/// SORT over the XLA tracker bank.
+pub struct XlaSortBank {
+    predict_iou: Artifact,
+    update: Artifact,
+    params: SortParams,
+    bank: BankState,
+    meta: Vec<SlotMeta>,
+    /// Detection capacity `D` (padded).
+    pub d_cap: usize,
+    frame_count: u64,
+    next_id: u64,
+    assoc: AssociationScratch,
+    out: Vec<Track>,
+    /// Detections ignored because they exceeded the padded capacity.
+    pub overflow_dets: u64,
+}
+
+impl XlaSortBank {
+    /// Build from a runtime (artifacts `bank_predict_iou` + `bank_update`).
+    pub fn new(rt: &XlaRuntime, params: SortParams) -> Result<Self> {
+        let predict_iou = rt.load("bank_predict_iou")?;
+        let update = rt.load("bank_update")?;
+        let t = predict_iou.input_shapes[0][0];
+        let d_cap = predict_iou.input_shapes[3][0];
+        Ok(XlaSortBank {
+            predict_iou,
+            update,
+            params,
+            bank: BankState::new(t),
+            meta: vec![SlotMeta::default(); t],
+            d_cap,
+            frame_count: 0,
+            next_id: 0,
+            assoc: AssociationScratch::default(),
+            out: Vec::new(),
+            overflow_dets: 0,
+        })
+    }
+
+    /// Bank capacity.
+    pub fn capacity(&self) -> usize {
+        self.bank.t
+    }
+
+    /// Live tracker count.
+    pub fn n_trackers(&self) -> usize {
+        self.bank.live_slots().len()
+    }
+
+    /// Process one frame; same semantics as `Sort::update`, modulo the
+    /// fixed capacity (`T` trackers, `D` detections; overflow counted).
+    pub fn update(&mut self, dets: &[Bbox]) -> Result<&[Track]> {
+        self.frame_count += 1;
+        let t = self.bank.t;
+
+        // --- pad detections
+        if dets.len() > self.d_cap {
+            self.overflow_dets += (dets.len() - self.d_cap) as u64;
+        }
+        let nd = dets.len().min(self.d_cap);
+        let mut det_buf = vec![0.0; self.d_cap * DZ];
+        let mut dmask = vec![0.0; self.d_cap];
+        for (i, b) in dets.iter().take(nd).enumerate() {
+            det_buf[i * DZ..(i + 1) * DZ].copy_from_slice(&b.to_array());
+            dmask[i] = 1.0;
+        }
+
+        // --- XLA call 1: predict + boxes + IoU matrix (D x T)
+        let outs = self.predict_iou.run(&[
+            &self.bank.x,
+            &self.bank.p,
+            &self.bank.mask,
+            &det_buf,
+            &dmask,
+        ])?;
+        let (xn, pn, boxes, iou_full) = (&outs[0], &outs[1], &outs[2], &outs[3]);
+        self.bank.x.copy_from_slice(xn);
+        self.bank.p.copy_from_slice(pn);
+
+        // --- lifecycle: age/streak/tsu per live slot; cull non-finite
+        for i in 0..t {
+            if self.bank.mask[i] == 0.0 {
+                continue;
+            }
+            let finite = boxes[i * 4..(i + 1) * 4].iter().all(|v| v.is_finite())
+                && boxes[i * 4..(i + 1) * 4].iter().any(|v| *v != 0.0);
+            if !finite {
+                self.bank.kill(i);
+                continue;
+            }
+            let m = &mut self.meta[i];
+            m.age += 1;
+            if m.time_since_update > 0 {
+                m.hit_streak = 0;
+            }
+            m.time_since_update += 1;
+        }
+
+        // --- association on the compressed (real dets × live slots) view
+        let live = self.bank.live_slots();
+        let nt = live.len();
+        let mut iou = vec![0.0; nd * nt];
+        for d in 0..nd {
+            for (k, &slot) in live.iter().enumerate() {
+                iou[d * nt + k] = iou_full[d * t + slot];
+            }
+        }
+        let result = associate_from_matrix(
+            &iou,
+            nd,
+            nt,
+            self.params.iou_threshold,
+            self.params.method,
+            &mut self.assoc,
+        );
+
+        // --- XLA call 2: masked measurement update for matched slots
+        if !result.matched.is_empty() {
+            let mut z = vec![0.0; t * DZ];
+            let mut zmask = vec![0.0; t];
+            for &(d, k) in &result.matched {
+                let slot = live[k];
+                let zd = dets[d].to_z();
+                z[slot * DZ..(slot + 1) * DZ].copy_from_slice(&zd);
+                zmask[slot] = 1.0;
+                let m = &mut self.meta[slot];
+                m.time_since_update = 0;
+                m.hits += 1;
+                m.hit_streak += 1;
+            }
+            let outs = self.update.run(&[&self.bank.x, &self.bank.p, &z, &zmask])?;
+            self.bank.x.copy_from_slice(&outs[0]);
+            self.bank.p.copy_from_slice(&outs[1]);
+        }
+
+        // --- create new trackers from unmatched detections
+        for &d in &result.unmatched_dets {
+            let Some(slot) = self.bank.free_slot() else {
+                self.overflow_dets += 1;
+                continue;
+            };
+            self.bank.seed(slot, &dets[d].to_z());
+            self.meta[slot] = SlotMeta { id: self.next_id, ..Default::default() };
+            self.next_id += 1;
+        }
+
+        // --- output + cull (slot order ≈ tracker order)
+        self.out.clear();
+        for i in 0..t {
+            if self.bank.mask[i] == 0.0 {
+                continue;
+            }
+            let m = self.meta[i];
+            if m.time_since_update < 1
+                && (m.hit_streak >= self.params.min_hits
+                    || self.frame_count <= self.params.min_hits as u64)
+            {
+                let xi: &[f64] = &self.bank.x[i * DX..(i + 1) * DX];
+                let state: [f64; 7] = xi.try_into().unwrap();
+                self.out.push(Track { id: m.id + 1, bbox: Bbox::from_state(&state) });
+            }
+            if m.time_since_update > self.params.max_age {
+                self.bank.kill(i);
+            }
+        }
+        self.out.sort_by(|a, b| b.id.cmp(&a.id)); // match Sort's reverse-order output
+        Ok(&self.out)
+    }
+}
+
+/// Association method re-export for bank users.
+pub fn default_method() -> AssociationMethod {
+    AssociationMethod::Hungarian
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_state_slot_management() {
+        let mut b = BankState::new(4);
+        assert_eq!(b.live_slots().len(), 0);
+        assert_eq!(b.free_slot(), Some(0));
+        b.seed(0, &[10.0, 20.0, 400.0, 0.5]);
+        b.seed(2, &[1.0, 2.0, 100.0, 1.0]);
+        assert_eq!(b.live_slots(), vec![0, 2]);
+        assert_eq!(b.free_slot(), Some(1));
+        assert_eq!(b.x[0], 10.0);
+        assert_eq!(b.x[4], 0.0); // velocity zeroed
+        // P0 diagonal
+        assert_eq!(b.p[0], 10.0);
+        assert_eq!(b.p[4 * 7 + 4], 10000.0);
+        b.kill(0);
+        assert_eq!(b.live_slots(), vec![2]);
+    }
+
+    #[test]
+    fn seed_overwrites_previous_state() {
+        let mut b = BankState::new(2);
+        b.seed(1, &[1.0, 1.0, 1.0, 1.0]);
+        b.kill(1);
+        b.seed(1, &[9.0, 9.0, 9.0, 9.0]);
+        assert_eq!(b.x[7], 9.0);
+        assert_eq!(b.mask[1], 1.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! PJRT client wrapper: compile `artifacts/*.hlo.txt` once, execute
+//! many times.
+//!
+//! Follows the reference wiring of `/opt/xla-example/load_hlo`: text →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `compile` on
+//! the CPU PJRT client. Inputs/outputs are `f64` literals (the paper's
+//! doubles); jax lowers with `return_tuple=True`, so results unpack via
+//! `to_tuple`.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Directory holding the AOT artifacts (`SMALLTRACK_ARTIFACTS` env
+/// override; defaults to `./artifacts`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SMALLTRACK_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Whether the AOT artifacts exist (runtime-dependent tests/benches
+/// skip gracefully when `make artifacts` has not run).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// One compiled executable plus its I/O geometry.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (manifest key).
+    pub name: String,
+    /// Input shapes (row-major dims) in argument order.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Output shapes in tuple order.
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+impl Artifact {
+    /// Execute on f64 row-major buffers (one per input, shapes as in
+    /// `input_shapes`). Returns one row-major `Vec<f64>` per output.
+    pub fn run(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(
+            inputs.len() == self.input_shapes.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.input_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&self.input_shapes) {
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(
+                buf.len() == n,
+                "{}: input length {} != shape {:?}",
+                self.name,
+                buf.len(),
+                shape
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {:?}: {e:?}", shape))?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.name))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == self.output_shapes.len(),
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.output_shapes.len(),
+            parts.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT client with every artifact from the manifest compiled.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: crate::data::json::Value,
+}
+
+impl XlaRuntime {
+    /// CPU client over the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(&artifacts_dir())
+    }
+
+    /// CPU client over an explicit artifacts directory.
+    pub fn with_dir(dir: &Path) -> Result<Self> {
+        let manifest = crate::data::json::parse_file(&dir.join("manifest.json"))
+            .context("read manifest.json (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(XlaRuntime { client, dir: dir.to_path_buf(), manifest })
+    }
+
+    /// PJRT platform name ("Host" for CPU).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        match self.manifest.req("artifacts") {
+            crate::data::json::Value::Obj(m) => m.keys().cloned().collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Load + compile one artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let entry = self
+            .manifest
+            .req("artifacts")
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let file = entry.req("file").str().to_string();
+        let path = self.dir.join(&file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+
+        let shapes = |key: &str| -> Vec<Vec<usize>> {
+            entry
+                .req(key)
+                .arr()
+                .iter()
+                .map(|io| io.arr()[1].arr().iter().map(|d| d.num() as usize).collect())
+                .collect()
+        };
+        Ok(Artifact {
+            exe,
+            name: name.to_string(),
+            input_shapes: shapes("inputs"),
+            output_shapes: shapes("outputs"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full execution tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts`). Here: path/manifest plumbing only.
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        let dir = artifacts_dir();
+        assert!(dir.ends_with("artifacts") || std::env::var_os("SMALLTRACK_ARTIFACTS").is_some());
+    }
+
+    #[test]
+    fn with_dir_missing_manifest_errors() {
+        let err = match XlaRuntime::with_dir(Path::new("/nonexistent-dir-xyz")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest"), "{msg}");
+    }
+}

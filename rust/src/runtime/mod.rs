@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas
+//! tracker-bank kernels from Rust.
+//!
+//! Build-time Python (`make artifacts`) lowers the L2 graphs to HLO
+//! *text* (see `python/compile/aot.py` for why text, not serialized
+//! protos); this module compiles them once on the PJRT CPU client and
+//! exposes typed entry points over `f64` buffers. Python never runs on
+//! the request path — after `make artifacts` the Rust binary is
+//! self-contained.
+//!
+//! * [`client`] — client + executable wrappers, artifact manifest.
+//! * [`bank`] — the tracker-bank view: padded slot arrays + marshalling
+//!   between `Sort`-style tracker state and the XLA buffers.
+
+pub mod bank;
+pub mod client;
+
+pub use bank::{BankState, XlaSortBank};
+pub use client::{artifacts_available, artifacts_dir, Artifact, XlaRuntime};

@@ -1,0 +1,142 @@
+//! Calibration: measure the real single-core tracker to parameterize
+//! the simulator.
+//!
+//! The simulator's absolute scale comes from here — per-sequence mean
+//! frame service time and the serial/parallel work split — measured on
+//! *this* machine with the *real* `Sort` implementation, so the
+//! simulated Table VI's 1-core column matches the measured one by
+//! construction and only the multi-core behavior is modeled.
+
+use crate::coordinator::policy::run_sequence_serial;
+use crate::data::synth::SynthSequence;
+use crate::sort::{Phase, Sort, SortParams};
+use std::time::Instant;
+
+/// Cost model of one sequence.
+#[derive(Debug, Clone)]
+pub struct SeqCost {
+    /// Sequence name.
+    pub name: String,
+    /// Frame count.
+    pub frames: u64,
+    /// Mean service time per frame (seconds, single core, calibration
+    /// frequency).
+    pub frame_secs: f64,
+    /// Fraction of frame time in parallelizable phases (predict +
+    /// update + IoU rows; the assignment solve and output prep are
+    /// serial in the paper's OpenMP port).
+    pub par_frac: f64,
+    /// Mean detections per frame — the iteration count (and thus the
+    /// usable parallelism) of the per-frame parallel loops.
+    pub avg_objects: f64,
+}
+
+/// A calibrated workload: sequence costs + global stats.
+#[derive(Debug, Clone)]
+pub struct SimWorkload {
+    /// Per-sequence costs.
+    pub seqs: Vec<SeqCost>,
+}
+
+impl SimWorkload {
+    /// Total frames.
+    pub fn total_frames(&self) -> u64 {
+        self.seqs.iter().map(|s| s.frames).sum()
+    }
+
+    /// Total single-core busy time at calibration frequency.
+    pub fn total_secs(&self) -> f64 {
+        self.seqs.iter().map(|s| s.frames as f64 * s.frame_secs).sum()
+    }
+
+    /// Aggregate single-core FPS (the 1-core Table VI anchor).
+    pub fn single_core_fps(&self) -> f64 {
+        self.total_frames() as f64 / self.total_secs()
+    }
+}
+
+/// Measure a suite with the real tracker; `reps` repetitions are
+/// averaged (the whole suite takes ~100 ms, so calibration is cheap).
+pub fn calibrate_workload(suite: &[SynthSequence], reps: u32) -> SimWorkload {
+    let params = SortParams { timing: false, ..Default::default() };
+    let mut seqs = Vec::with_capacity(suite.len());
+    for seq in suite {
+        // timing run (no phase instrumentation)
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            let (frames, _) = run_sequence_serial(seq, params);
+            let dt = t0.elapsed().as_secs_f64();
+            best = best.min(dt / frames.max(1) as f64);
+        }
+        // phase-split run (instrumented) for the parallel fraction
+        let mut sort = Sort::new(SortParams::default());
+        let mut boxes = Vec::new();
+        for frame in &seq.sequence.frames {
+            boxes.clear();
+            boxes.extend(frame.detections.iter().map(|d| d.bbox));
+            sort.update(&boxes);
+        }
+        let pct = sort.phases.percentages();
+        let par = (pct[Phase::Predict as usize] + pct[Phase::Update as usize]
+            + 0.5 * pct[Phase::Assign as usize])
+            / 100.0;
+        let avg_objects =
+            seq.sequence.n_detections() as f64 / seq.sequence.n_frames().max(1) as f64;
+        seqs.push(SeqCost {
+            name: seq.sequence.name.clone(),
+            frames: seq.sequence.n_frames() as u64,
+            frame_secs: best,
+            par_frac: par.clamp(0.05, 0.95),
+            avg_objects: avg_objects.max(1.0),
+        });
+    }
+    SimWorkload { seqs }
+}
+
+/// Synthetic workload for simulator unit tests (no measurement):
+/// `n` sequences of `frames` frames at `frame_secs` each.
+pub fn uniform_workload(n: usize, frames: u64, frame_secs: f64, par_frac: f64) -> SimWorkload {
+    SimWorkload {
+        seqs: (0..n)
+            .map(|i| SeqCost {
+                name: format!("seq{i}"),
+                frames,
+                frame_secs,
+                par_frac,
+                avg_objects: 7.0,
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_sequence, SynthConfig};
+
+    #[test]
+    fn calibration_produces_sane_costs() {
+        let suite = vec![
+            generate_sequence(&SynthConfig::mot15("CA", 80, 6, 1)),
+            generate_sequence(&SynthConfig::mot15("CB", 50, 4, 2)),
+        ];
+        let w = calibrate_workload(&suite, 2);
+        assert_eq!(w.seqs.len(), 2);
+        assert_eq!(w.total_frames(), 130);
+        for s in &w.seqs {
+            assert!(s.frame_secs > 0.0 && s.frame_secs < 0.01, "{s:?}");
+            assert!((0.05..=0.95).contains(&s.par_frac), "{s:?}");
+            assert!(s.avg_objects >= 1.0 && s.avg_objects <= 16.0);
+        }
+        assert!(w.single_core_fps() > 1000.0, "{}", w.single_core_fps());
+    }
+
+    #[test]
+    fn uniform_workload_math() {
+        let w = uniform_workload(4, 100, 1e-5, 0.6);
+        assert_eq!(w.total_frames(), 400);
+        assert!((w.total_secs() - 4e-3).abs() < 1e-12);
+        assert!((w.single_core_fps() - 1e5).abs() < 1.0);
+    }
+}

@@ -1,0 +1,299 @@
+//! SORT's detection↔tracker association (Fig 2's "Assign" step).
+//!
+//! Builds the IoU score matrix, runs the assignment (Hungarian by
+//! default, greedy as the E9 ablation), then applies SORT's
+//! post-filter: matched pairs whose IoU falls below `iou_threshold`
+//! are demoted to unmatched. Includes the original's fast path — when
+//! the thresholded IoU matrix is already a partial permutation (each
+//! row/col has at most one candidate), the assignment solver is
+//! skipped entirely.
+
+use super::bbox::Bbox;
+use super::greedy::greedy_max_score;
+use super::hungarian::{hungarian_min_cost, HungarianScratch};
+use super::iou::iou_matrix_into;
+
+/// Which assignment algorithm backs [`associate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AssociationMethod {
+    /// Optimal min-cost assignment on -IoU (the SORT default).
+    #[default]
+    Hungarian,
+    /// Greedy best-pair-first (ablation).
+    Greedy,
+}
+
+/// Output of the association step, in detection/tracker index space.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AssociationResult {
+    /// `(det_idx, trk_idx)` matches with IoU >= threshold.
+    pub matched: Vec<(usize, usize)>,
+    /// Detections with no tracker.
+    pub unmatched_dets: Vec<usize>,
+    /// Trackers with no detection.
+    pub unmatched_trks: Vec<usize>,
+}
+
+/// Reusable buffers for the association step.
+#[derive(Debug, Default)]
+pub struct AssociationScratch {
+    iou: Vec<f64>,
+    cost: Vec<f64>,
+    det_matched: Vec<bool>,
+    trk_matched: Vec<bool>,
+    hungarian: HungarianScratch,
+}
+
+/// Associate detections with predicted tracker boxes.
+///
+/// Mirrors `associate_detections_to_trackers` of the original: IoU
+/// matrix → (fast-path | assignment) → threshold post-filter.
+pub fn associate(
+    dets: &[Bbox],
+    trks: &[Bbox],
+    iou_threshold: f64,
+    method: AssociationMethod,
+    scratch: &mut AssociationScratch,
+) -> AssociationResult {
+    let nd = dets.len();
+    let nt = trks.len();
+    let mut out = AssociationResult::default();
+
+    if nt == 0 {
+        out.unmatched_dets = (0..nd).collect();
+        return out;
+    }
+    if nd == 0 {
+        out.unmatched_trks = (0..nt).collect();
+        return out;
+    }
+
+    iou_matrix_into(dets, trks, &mut scratch.iou);
+    let iou = &scratch.iou;
+
+    // Fast path: if the thresholded matrix is already a partial
+    // permutation, the greedy row/col pick *is* the optimal assignment.
+    let mut fast_ok = true;
+    let mut row_count = vec![0usize; nd];
+    let mut col_count = vec![0usize; nt];
+    for d in 0..nd {
+        for t in 0..nt {
+            if iou[d * nt + t] > iou_threshold {
+                row_count[d] += 1;
+                col_count[t] += 1;
+            }
+        }
+    }
+    if row_count.iter().any(|&c| c > 1) || col_count.iter().any(|&c| c > 1) {
+        fast_ok = false;
+    }
+
+    let pairs: Vec<(usize, usize)> = if fast_ok {
+        let mut p = Vec::new();
+        for d in 0..nd {
+            for t in 0..nt {
+                if iou[d * nt + t] > iou_threshold {
+                    p.push((d, t));
+                }
+            }
+        }
+        p
+    } else {
+        match method {
+            AssociationMethod::Hungarian => {
+                scratch.cost.clear();
+                scratch.cost.extend(iou.iter().map(|v| -v));
+                let asn = hungarian_min_cost(&scratch.cost, nd, nt, &mut scratch.hungarian);
+                asn.iter()
+                    .enumerate()
+                    .filter_map(|(d, t)| t.map(|t| (d, t)))
+                    .collect()
+            }
+            AssociationMethod::Greedy => greedy_max_score(iou, nd, nt, 0.0),
+        }
+    };
+
+    scratch.det_matched.clear();
+    scratch.det_matched.resize(nd, false);
+    scratch.trk_matched.clear();
+    scratch.trk_matched.resize(nt, false);
+
+    for (d, t) in pairs {
+        // SORT's post-filter: low-IoU "matches" are not matches.
+        if iou[d * nt + t] < iou_threshold {
+            continue;
+        }
+        scratch.det_matched[d] = true;
+        scratch.trk_matched[t] = true;
+        out.matched.push((d, t));
+    }
+    for d in 0..nd {
+        if !scratch.det_matched[d] {
+            out.unmatched_dets.push(d);
+        }
+    }
+    for t in 0..nt {
+        if !scratch.trk_matched[t] {
+            out.unmatched_trks.push(t);
+        }
+    }
+    out
+}
+
+/// [`associate`] over a *precomputed* IoU matrix (row-major `nd x nt`).
+///
+/// Used by the XLA tracker-bank path, where the IoU matrix comes out of
+/// the AOT-compiled kernel rather than the native loop. Threshold and
+/// post-filter semantics are identical to [`associate`].
+pub fn associate_from_matrix(
+    iou: &[f64],
+    nd: usize,
+    nt: usize,
+    iou_threshold: f64,
+    method: AssociationMethod,
+    scratch: &mut AssociationScratch,
+) -> AssociationResult {
+    assert_eq!(iou.len(), nd * nt);
+    let mut out = AssociationResult::default();
+    if nt == 0 {
+        out.unmatched_dets = (0..nd).collect();
+        return out;
+    }
+    if nd == 0 {
+        out.unmatched_trks = (0..nt).collect();
+        return out;
+    }
+
+    let pairs: Vec<(usize, usize)> = match method {
+        AssociationMethod::Hungarian => {
+            scratch.cost.clear();
+            scratch.cost.extend(iou.iter().map(|v| -v));
+            let asn = hungarian_min_cost(&scratch.cost, nd, nt, &mut scratch.hungarian);
+            asn.iter().enumerate().filter_map(|(d, t)| t.map(|t| (d, t))).collect()
+        }
+        AssociationMethod::Greedy => greedy_max_score(iou, nd, nt, 0.0),
+    };
+
+    scratch.det_matched.clear();
+    scratch.det_matched.resize(nd, false);
+    scratch.trk_matched.clear();
+    scratch.trk_matched.resize(nt, false);
+    for (d, t) in pairs {
+        if iou[d * nt + t] < iou_threshold {
+            continue;
+        }
+        scratch.det_matched[d] = true;
+        scratch.trk_matched[t] = true;
+        out.matched.push((d, t));
+    }
+    for d in 0..nd {
+        if !scratch.det_matched[d] {
+            out.unmatched_dets.push(d);
+        }
+    }
+    for t in 0..nt {
+        if !scratch.trk_matched[t] {
+            out.unmatched_trks.push(t);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn boxes(coords: &[[f64; 4]]) -> Vec<Bbox> {
+        coords.iter().map(|c| Bbox::new(c[0], c[1], c[2], c[3])).collect()
+    }
+
+    fn assoc(d: &[Bbox], t: &[Bbox], thr: f64) -> AssociationResult {
+        let mut s = AssociationScratch::default();
+        associate(d, t, thr, AssociationMethod::Hungarian, &mut s)
+    }
+
+    #[test]
+    fn no_trackers_all_dets_unmatched() {
+        let d = boxes(&[[0.0, 0.0, 10.0, 10.0]]);
+        let r = assoc(&d, &[], 0.3);
+        assert_eq!(r.unmatched_dets, vec![0]);
+        assert!(r.matched.is_empty());
+    }
+
+    #[test]
+    fn no_dets_all_trackers_unmatched() {
+        let t = boxes(&[[0.0, 0.0, 10.0, 10.0], [5.0, 5.0, 9.0, 9.0]]);
+        let r = assoc(&[], &t, 0.3);
+        assert_eq!(r.unmatched_trks, vec![0, 1]);
+    }
+
+    #[test]
+    fn perfect_overlap_matches_crosswise() {
+        let d = boxes(&[[0.0, 0.0, 10.0, 10.0], [100.0, 100.0, 120.0, 120.0]]);
+        let t = boxes(&[[100.0, 100.0, 120.0, 120.0], [0.0, 0.0, 10.0, 10.0]]);
+        let r = assoc(&d, &t, 0.3);
+        let mut m = r.matched.clone();
+        m.sort_unstable();
+        assert_eq!(m, vec![(0, 1), (1, 0)]);
+        assert!(r.unmatched_dets.is_empty() && r.unmatched_trks.is_empty());
+    }
+
+    #[test]
+    fn below_threshold_goes_unmatched() {
+        // ~11% overlap < 0.3 threshold
+        let d = boxes(&[[0.0, 0.0, 10.0, 10.0]]);
+        let t = boxes(&[[8.0, 8.0, 18.0, 18.0]]);
+        let r = assoc(&d, &t, 0.3);
+        assert!(r.matched.is_empty());
+        assert_eq!(r.unmatched_dets, vec![0]);
+        assert_eq!(r.unmatched_trks, vec![0]);
+    }
+
+    #[test]
+    fn contested_tracker_resolved_optimally() {
+        // two dets overlap one tracker; hungarian must give the tracker
+        // to the better det and leave the other unmatched
+        let d = boxes(&[[0.0, 0.0, 10.0, 10.0], [1.0, 1.0, 11.0, 11.0]]);
+        let t = boxes(&[[1.0, 1.0, 11.0, 11.0]]);
+        let r = assoc(&d, &t, 0.3);
+        assert_eq!(r.matched, vec![(1, 0)]);
+        assert_eq!(r.unmatched_dets, vec![0]);
+    }
+
+    #[test]
+    fn greedy_and_hungarian_agree_on_unambiguous_input() {
+        let d = boxes(&[[0.0, 0.0, 10.0, 10.0], [50.0, 50.0, 60.0, 60.0]]);
+        let t = boxes(&[[0.0, 1.0, 10.0, 11.0], [50.0, 51.0, 60.0, 61.0]]);
+        let mut s1 = AssociationScratch::default();
+        let mut s2 = AssociationScratch::default();
+        let h = associate(&d, &t, 0.3, AssociationMethod::Hungarian, &mut s1);
+        let g = associate(&d, &t, 0.3, AssociationMethod::Greedy, &mut s2);
+        assert_eq!(h.matched, g.matched);
+    }
+
+    #[test]
+    fn matrix_variant_agrees_with_box_variant() {
+        let d = boxes(&[[0.0, 0.0, 10.0, 10.0], [1.0, 1.0, 11.0, 11.0], [40.0, 40.0, 55.0, 60.0]]);
+        let t = boxes(&[[1.0, 1.0, 11.0, 11.0], [41.0, 41.0, 56.0, 61.0]]);
+        let mut s1 = AssociationScratch::default();
+        let mut s2 = AssociationScratch::default();
+        let via_boxes = associate(&d, &t, 0.3, AssociationMethod::Hungarian, &mut s1);
+        let m = crate::sort::iou::iou_matrix(&d, &t);
+        let via_matrix =
+            associate_from_matrix(&m, d.len(), t.len(), 0.3, AssociationMethod::Hungarian, &mut s2);
+        assert_eq!(via_boxes.matched, via_matrix.matched);
+        assert_eq!(via_boxes.unmatched_dets, via_matrix.unmatched_dets);
+        assert_eq!(via_boxes.unmatched_trks, via_matrix.unmatched_trks);
+    }
+
+    #[test]
+    fn fast_path_equals_full_hungarian() {
+        // disjoint unambiguous overlaps: fast path must fire and agree
+        let d = boxes(&[[0.0, 0.0, 10.0, 10.0], [30.0, 30.0, 40.0, 40.0]]);
+        let t = boxes(&[[30.0, 31.0, 40.0, 41.0], [0.0, 1.0, 10.0, 11.0]]);
+        let r = assoc(&d, &t, 0.3);
+        let mut m = r.matched.clone();
+        m.sort_unstable();
+        assert_eq!(m, vec![(0, 1), (1, 0)]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Bounding boxes and SORT's measurement-space conversions.
+//!
+//! SORT filters in `[u, v, s, r]` space (center, area, aspect ratio)
+//! rather than raw corners: under constant-velocity motion the area
+//! grows linearly while the aspect ratio stays constant, which is what
+//! the filter's constant-velocity model assumes.
+
+use crate::linalg::counters::{record, Kernel};
+
+/// Axis-aligned box `[x1, y1, x2, y2]` (top-left / bottom-right).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Bbox {
+    pub x1: f64,
+    pub y1: f64,
+    pub x2: f64,
+    pub y2: f64,
+}
+
+impl Bbox {
+    /// Construct from corners.
+    pub fn new(x1: f64, y1: f64, x2: f64, y2: f64) -> Self {
+        Bbox { x1, y1, x2, y2 }
+    }
+
+    /// Construct from MOT's `[left, top, width, height]`.
+    pub fn from_ltwh(l: f64, t: f64, w: f64, h: f64) -> Self {
+        Bbox { x1: l, y1: t, x2: l + w, y2: t + h }
+    }
+
+    /// Width (may be negative for corrupt boxes; callers validate).
+    #[inline]
+    pub fn w(&self) -> f64 {
+        self.x2 - self.x1
+    }
+
+    /// Height.
+    #[inline]
+    pub fn h(&self) -> f64 {
+        self.y2 - self.y1
+    }
+
+    /// Area (w*h).
+    #[inline]
+    pub fn area(&self) -> f64 {
+        self.w() * self.h()
+    }
+
+    /// All four coordinates finite.
+    pub fn is_finite(&self) -> bool {
+        self.x1.is_finite() && self.y1.is_finite() && self.x2.is_finite() && self.y2.is_finite()
+    }
+
+    /// SORT's `convert_bbox_to_z`: `[x1,y1,x2,y2] -> [u,v,s,r]`.
+    #[inline]
+    pub fn to_z(&self) -> [f64; 4] {
+        record(Kernel::EwVecVec, 8, 64);
+        let w = self.w();
+        let h = self.h();
+        [self.x1 + w / 2.0, self.y1 + h / 2.0, w * h, w / h]
+    }
+
+    /// SORT's `convert_x_to_bbox`: state `[u,v,s,r,..] -> [x1,y1,x2,y2]`.
+    ///
+    /// Produces NaN when `s*r < 0` — exactly like the Python original,
+    /// where such trackers are subsequently culled by the NaN check in
+    /// `Sort::update`.
+    #[inline]
+    pub fn from_state(x: &[f64; 7]) -> Self {
+        record(Kernel::Sqrt, 2, 56);
+        let w = (x[2] * x[3]).sqrt();
+        let h = x[2] / w;
+        Bbox {
+            x1: x[0] - w / 2.0,
+            y1: x[1] - h / 2.0,
+            x2: x[0] + w / 2.0,
+            y2: x[1] + h / 2.0,
+        }
+    }
+
+    /// Row-major `[x1,y1,x2,y2]` array.
+    pub fn to_array(&self) -> [f64; 4] {
+        [self.x1, self.y1, self.x2, self.y2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bbox_z_state() {
+        let b = Bbox::new(10.0, 20.0, 60.0, 140.0);
+        let z = b.to_z();
+        assert_eq!(z[0], 35.0); // cx
+        assert_eq!(z[1], 80.0); // cy
+        assert_eq!(z[2], 50.0 * 120.0); // area
+        assert!((z[3] - 50.0 / 120.0).abs() < 1e-12);
+        let x = [z[0], z[1], z[2], z[3], 0.0, 0.0, 0.0];
+        let back = Bbox::from_state(&x);
+        assert!((back.x1 - b.x1).abs() < 1e-9);
+        assert!((back.y1 - b.y1).abs() < 1e-9);
+        assert!((back.x2 - b.x2).abs() < 1e-9);
+        assert!((back.y2 - b.y2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ltwh_conversion() {
+        let b = Bbox::from_ltwh(5.0, 6.0, 10.0, 20.0);
+        assert_eq!(b.x2, 15.0);
+        assert_eq!(b.y2, 26.0);
+        assert_eq!(b.area(), 200.0);
+    }
+
+    #[test]
+    fn negative_area_state_yields_nan_like_python() {
+        let x = [0.0, 0.0, -5.0, 0.5, 0.0, 0.0, 0.0];
+        let b = Bbox::from_state(&x);
+        assert!(!b.is_finite());
+    }
+}

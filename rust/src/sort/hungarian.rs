@@ -1,0 +1,370 @@
+//! Rectangular Hungarian algorithm (Kuhn–Munkres) — paper §II-B.
+//!
+//! The original SORT calls sklearn's `linear_assignment_` (equivalently
+//! scipy's `linear_sum_assignment`); this is the same O(n·m·min(n,m))
+//! shortest-augmenting-path formulation (Jonker–Volgenant-style dual
+//! potentials), specialized for the tiny dense matrices of this
+//! workload: a 13×13 cost matrix fits comfortably in L1, so the scratch
+//! arrays are reused across frames via [`HungarianScratch`].
+//!
+//! Correctness is property-tested against an exhaustive brute-force
+//! oracle for all shapes up to 6×6 (`proptest_lite` in
+//! `rust/tests/integration_hungarian.rs` plus unit tests here).
+
+use crate::linalg::counters::{record, Kernel};
+
+/// Reusable scratch buffers (no allocation in the per-frame loop).
+#[derive(Debug, Default)]
+pub struct HungarianScratch {
+    u: Vec<f64>,
+    v: Vec<f64>,
+    p: Vec<usize>,
+    way: Vec<usize>,
+    minv: Vec<f64>,
+    used: Vec<bool>,
+}
+
+/// Solve the min-cost rectangular assignment problem.
+///
+/// `cost` is row-major `rows x cols`. Returns, for each row, the
+/// assigned column (or `None` when `rows > cols` leaves the row
+/// unassigned). Every column is used at most once. The sum of assigned
+/// costs is minimal.
+///
+/// For `rows <= cols` every row is assigned; for `rows > cols` the
+/// algorithm is run on the transpose and the result mapped back — the
+/// assignment covers all columns instead.
+pub fn hungarian_min_cost(
+    cost: &[f64],
+    rows: usize,
+    cols: usize,
+    scratch: &mut HungarianScratch,
+) -> Vec<Option<usize>> {
+    assert_eq!(cost.len(), rows * cols, "cost matrix shape mismatch");
+    if rows == 0 || cols == 0 {
+        return vec![None; rows];
+    }
+    record(
+        Kernel::Hungarian,
+        (rows * cols * rows.min(cols)) as u64,
+        (rows * cols * 8) as u64,
+    );
+
+    if rows <= cols {
+        let row_to_col = solve_rows_le_cols(cost, rows, cols, scratch);
+        row_to_col.into_iter().map(Some).collect()
+    } else {
+        // transpose: solve cols (as rows) vs rows (as cols)
+        let mut t = vec![0.0; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = cost[r * cols + c];
+            }
+        }
+        let col_to_row = solve_rows_le_cols(&t, cols, rows, scratch);
+        let mut out = vec![None; rows];
+        for (c, r) in col_to_row.into_iter().enumerate() {
+            out[r] = Some(c);
+        }
+        out
+    }
+}
+
+/// Core shortest-augmenting-path Hungarian for `n <= m`.
+/// Returns `row -> col` with all rows assigned.
+fn solve_rows_le_cols(
+    cost: &[f64],
+    n: usize,
+    m: usize,
+    s: &mut HungarianScratch,
+) -> Vec<usize> {
+    // 1-indexed dual potentials, matching the classic formulation.
+    s.u.clear();
+    s.u.resize(n + 1, 0.0);
+    s.v.clear();
+    s.v.resize(m + 1, 0.0);
+    s.p.clear();
+    s.p.resize(m + 1, 0); // p[j] = row matched to column j (0 = none)
+    s.way.clear();
+    s.way.resize(m + 1, 0);
+
+    for i in 1..=n {
+        s.p[0] = i;
+        let mut j0 = 0usize;
+        s.minv.clear();
+        s.minv.resize(m + 1, f64::INFINITY);
+        s.used.clear();
+        s.used.resize(m + 1, false);
+        loop {
+            s.used[j0] = true;
+            let i0 = s.p[j0];
+            let mut delta = f64::INFINITY;
+            let mut j1 = 0usize;
+            for j in 1..=m {
+                if s.used[j] {
+                    continue;
+                }
+                let cur = cost[(i0 - 1) * m + (j - 1)] - s.u[i0] - s.v[j];
+                if cur < s.minv[j] {
+                    s.minv[j] = cur;
+                    s.way[j] = j0;
+                }
+                if s.minv[j] < delta {
+                    delta = s.minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=m {
+                if s.used[j] {
+                    s.u[s.p[j]] += delta;
+                    s.v[j] -= delta;
+                } else {
+                    s.minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if s.p[j0] == 0 {
+                break;
+            }
+        }
+        // augment along the alternating path
+        loop {
+            let j1 = s.way[j0];
+            s.p[j0] = s.p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut row_to_col = vec![usize::MAX; n];
+    for j in 1..=m {
+        if s.p[j] != 0 {
+            row_to_col[s.p[j] - 1] = j - 1;
+        }
+    }
+    debug_assert!(row_to_col.iter().all(|&c| c != usize::MAX));
+    row_to_col
+}
+
+/// Exhaustive brute-force oracle (min-cost over all permutations);
+/// exponential — test use only, shapes up to ~7.
+pub fn brute_force_min_cost(cost: &[f64], rows: usize, cols: usize) -> (f64, Vec<Option<usize>>) {
+    let k = rows.min(cols);
+    let mut best = (f64::INFINITY, vec![None; rows]);
+    let mut cols_perm: Vec<usize> = (0..cols).collect();
+    let mut rows_sel: Vec<usize> = (0..rows).collect();
+
+    // choose which k rows are assigned (only matters when rows > cols)
+    fn combinations(n: usize, k: usize) -> Vec<Vec<usize>> {
+        if k == 0 {
+            return vec![vec![]];
+        }
+        if n < k {
+            return vec![];
+        }
+        let mut out = Vec::new();
+        let mut idx: Vec<usize> = (0..k).collect();
+        loop {
+            out.push(idx.clone());
+            // advance
+            let mut i = k;
+            loop {
+                if i == 0 {
+                    return out;
+                }
+                i -= 1;
+                if idx[i] != i + n - k {
+                    break;
+                }
+                if i == 0 && idx[0] == n - k {
+                    return out;
+                }
+            }
+            idx[i] += 1;
+            for j in (i + 1)..k {
+                idx[j] = idx[j - 1] + 1;
+            }
+        }
+    }
+
+    fn permutations(items: &[usize]) -> Vec<Vec<usize>> {
+        if items.len() <= 1 {
+            return vec![items.to_vec()];
+        }
+        let mut out = Vec::new();
+        for (i, &x) in items.iter().enumerate() {
+            let mut rest = items.to_vec();
+            rest.remove(i);
+            for mut p in permutations(&rest) {
+                p.insert(0, x);
+                out.push(p);
+            }
+        }
+        out
+    }
+
+    rows_sel.truncate(rows);
+    cols_perm.truncate(cols);
+    for row_subset in combinations(rows, k) {
+        for col_subset in combinations(cols, k) {
+            for perm in permutations(&col_subset) {
+                let total: f64 = row_subset
+                    .iter()
+                    .zip(perm.iter())
+                    .map(|(&r, &c)| cost[r * cols + c])
+                    .sum();
+                if total < best.0 {
+                    let mut asn = vec![None; rows];
+                    for (&r, &c) in row_subset.iter().zip(perm.iter()) {
+                        asn[r] = Some(c);
+                    }
+                    best = (total, asn);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Total cost of an assignment (test helper).
+pub fn assignment_cost(cost: &[f64], cols: usize, asn: &[Option<usize>]) -> f64 {
+    asn.iter()
+        .enumerate()
+        .filter_map(|(r, c)| c.map(|c| cost[r * cols + c]))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve(cost: &[f64], rows: usize, cols: usize) -> Vec<Option<usize>> {
+        let mut s = HungarianScratch::default();
+        hungarian_min_cost(cost, rows, cols, &mut s)
+    }
+
+    #[test]
+    fn square_identity_prefers_diagonal() {
+        #[rustfmt::skip]
+        let cost = vec![
+            0.0, 1.0, 1.0,
+            1.0, 0.0, 1.0,
+            1.0, 1.0, 0.0,
+        ];
+        let asn = solve(&cost, 3, 3);
+        assert_eq!(asn, vec![Some(0), Some(1), Some(2)]);
+    }
+
+    #[test]
+    fn classic_textbook_case() {
+        // min cost = 5 (0->1:2, 1->0:3... ) verify against brute force
+        #[rustfmt::skip]
+        let cost = vec![
+            4.0, 1.0, 3.0,
+            2.0, 0.0, 5.0,
+            3.0, 2.0, 2.0,
+        ];
+        let asn = solve(&cost, 3, 3);
+        let got = assignment_cost(&cost, 3, &asn);
+        let (want, _) = brute_force_min_cost(&cost, 3, 3);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn wide_matrix_rows_lt_cols() {
+        #[rustfmt::skip]
+        let cost = vec![
+            9.0, 1.0, 5.0, 7.0,
+            2.0, 8.0, 6.0, 3.0,
+        ];
+        let asn = solve(&cost, 2, 4);
+        assert_eq!(asn, vec![Some(1), Some(0)]);
+    }
+
+    #[test]
+    fn tall_matrix_rows_gt_cols_leaves_rows_unassigned() {
+        #[rustfmt::skip]
+        let cost = vec![
+            9.0, 1.0,
+            2.0, 8.0,
+            0.5, 0.6,
+        ];
+        let asn = solve(&cost, 3, 2);
+        let assigned: Vec<_> = asn.iter().flatten().collect();
+        assert_eq!(assigned.len(), 2);
+        let got = assignment_cost(&cost, 2, &asn);
+        let (want, _) = brute_force_min_cost(&cost, 3, 2);
+        assert!((got - want).abs() < 1e-12, "got {got} want {want}");
+    }
+
+    #[test]
+    fn negative_costs_supported() {
+        // SORT feeds -IoU: all entries in [-1, 0]
+        #[rustfmt::skip]
+        let cost = vec![
+            -0.9, -0.1,
+            -0.2, -0.8,
+        ];
+        let asn = solve(&cost, 2, 2);
+        assert_eq!(asn, vec![Some(0), Some(1)]);
+    }
+
+    #[test]
+    fn empty_dimensions() {
+        assert!(solve(&[], 0, 0).is_empty());
+        assert_eq!(solve(&[], 3, 0), vec![None, None, None]);
+        assert!(solve(&[], 0, 3).is_empty());
+    }
+
+    #[test]
+    fn single_cell() {
+        assert_eq!(solve(&[5.0], 1, 1), vec![Some(0)]);
+    }
+
+    #[test]
+    fn ties_still_produce_valid_permutation() {
+        let cost = vec![1.0; 16];
+        let asn = solve(&cost, 4, 4);
+        let mut cols: Vec<_> = asn.iter().flatten().copied().collect();
+        cols.sort_unstable();
+        assert_eq!(cols, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn matches_brute_force_on_fixed_grid() {
+        // deterministic pseudo-random costs over several shapes
+        let mut seed = 0x12345678u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            (seed % 1000) as f64 / 100.0
+        };
+        let mut s = HungarianScratch::default();
+        for &(r, c) in &[(2, 2), (3, 3), (4, 4), (5, 5), (2, 5), (5, 2), (3, 6), (6, 3), (1, 4), (4, 1)] {
+            for _case in 0..20 {
+                let cost: Vec<f64> = (0..r * c).map(|_| next()).collect();
+                let asn = hungarian_min_cost(&cost, r, c, &mut s);
+                let got = assignment_cost(&cost, c, &asn);
+                let (want, _) = brute_force_min_cost(&cost, r, c);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "shape {r}x{c}: got {got} want {want} cost={cost:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        let mut s = HungarianScratch::default();
+        let a = hungarian_min_cost(&[1.0, 2.0, 3.0, 0.5], 2, 2, &mut s);
+        let b = hungarian_min_cost(&[1.0, 2.0, 3.0, 0.5], 2, 2, &mut s);
+        assert_eq!(a, b);
+        // different shape afterwards
+        let c = hungarian_min_cost(&[1.0, 2.0, 3.0], 1, 3, &mut s);
+        assert_eq!(c, vec![Some(0)]);
+    }
+}

@@ -1,0 +1,40 @@
+//! The SORT core: Kalman tracking + Hungarian association.
+//!
+//! Faithful port of abewley/sort (Bewley et al., ICIP 2016) — the
+//! algorithm the paper re-implements in C. Semantics are pinned two
+//! ways: unit tests against `artifacts/parity.json` (golden Kalman
+//! trajectories from the JAX oracle) and integration tests against
+//! `artifacts/golden_tracks.json` (end-to-end output of the original
+//! Python implementation on a deterministic mini-sequence).
+//!
+//! Module map (one paper concept per module):
+//! * [`bbox`] — box representation + SORT's `[u,v,s,r]` conversions
+//! * [`iou`] — pairwise IoU and the cost matrix
+//! * [`kalman`] — the 7-state constant-velocity Kalman filter
+//! * [`hungarian`] — rectangular assignment (Kuhn–Munkres)
+//! * [`greedy`] — greedy association baseline (ablation E9)
+//! * [`association`] — SORT's match/unmatch logic on top of either
+//! * [`tracker`] — per-object lifecycle (`max_age`, `min_hits`, streaks)
+//! * [`sort`] — the per-frame update loop (Algorithm 1 of the paper)
+//! * [`phases`] — per-phase timing (Table IV / Fig 3 instrumentation)
+//! * [`quality`] — CLEAR-MOT metrics vs ground truth (ablation guardrail)
+
+pub mod association;
+pub mod bbox;
+pub mod greedy;
+pub mod hungarian;
+pub mod iou;
+pub mod kalman;
+pub mod phases;
+pub mod quality;
+pub mod sort;
+pub mod tracker;
+
+pub use association::{associate, AssociationMethod, AssociationResult};
+pub use bbox::Bbox;
+pub use hungarian::hungarian_min_cost;
+pub use kalman::{KalmanState, SortConstants};
+pub use phases::{Phase, PhaseStats, PhaseTimer};
+pub use quality::{evaluate, evaluate_sort, MotMetrics};
+pub use sort::{Sort, SortParams, Track};
+pub use tracker::KalmanBoxTracker;

@@ -1,0 +1,225 @@
+//! Per-phase timing — the paper's timing model and Table IV / Fig 3.
+//!
+//! `T_frame = a·T_predict + b·T_assign + c·T_update + d·T_output` (§III).
+//! [`PhaseTimer`] accumulates wall time and linalg counter deltas per
+//! phase so the breakdown benches can print the paper's tables from a
+//! live run.
+
+use crate::linalg::counters::{snapshot, CounterSnapshot};
+use std::time::{Duration, Instant};
+
+/// The four timed phases of `Sort::update` (plus tracker creation,
+/// Table IV row 6.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Phase {
+    /// Kalman predict over all trackers (Table IV step 6.2).
+    Predict = 0,
+    /// IoU + Hungarian association (6.3).
+    Assign = 1,
+    /// Kalman update of matched trackers (6.4).
+    Update = 2,
+    /// New tracker creation (6.6).
+    CreateNew = 3,
+    /// Output prep + tracker culling (6.7).
+    Output = 4,
+}
+
+/// Number of phases.
+pub const N_PHASES: usize = 5;
+
+impl Phase {
+    /// All phases in execution order.
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Predict,
+        Phase::Assign,
+        Phase::Update,
+        Phase::CreateNew,
+        Phase::Output,
+    ];
+
+    /// Paper's step label (Table IV).
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Predict => "6.2 predict",
+            Phase::Assign => "6.3 assignment",
+            Phase::Update => "6.4 update",
+            Phase::CreateNew => "6.6 create new",
+            Phase::Output => "6.7 prepare output",
+        }
+    }
+}
+
+/// Accumulated statistics for one phase.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseStats {
+    /// Total wall time in this phase.
+    pub elapsed: Duration,
+    /// Times the phase ran.
+    pub count: u64,
+    /// Linalg counter delta attributed to this phase.
+    pub counters: CounterSnapshot,
+    /// Unique working-set bytes touched (reported by the pipeline; the
+    /// paper's Table IV AI divides flops by data *touched*, not by
+    /// per-operation operand traffic).
+    pub ws_bytes: u64,
+}
+
+impl PhaseStats {
+    /// flops per operand-traffic byte (per-op accounting).
+    pub fn ai(&self) -> f64 {
+        self.counters.total().ai()
+    }
+
+    /// flops per unique working-set byte — the paper's Table IV AI.
+    pub fn ai_ws(&self) -> f64 {
+        if self.ws_bytes == 0 {
+            0.0
+        } else {
+            self.counters.total().flops as f64 / self.ws_bytes as f64
+        }
+    }
+}
+
+/// Accumulates per-phase stats; one per tracking pipeline.
+///
+/// Timing can be disabled (`enabled = false`) to measure the pure
+/// tracking speed without `Instant::now` overhead — the delta is itself
+/// reported in EXPERIMENTS.md §Perf.
+#[derive(Debug)]
+pub struct PhaseTimer {
+    stats: [PhaseStats; N_PHASES],
+    enabled: bool,
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        Self::new(true)
+    }
+}
+
+impl PhaseTimer {
+    /// Create; `enabled = false` makes all operations free no-ops.
+    pub fn new(enabled: bool) -> Self {
+        PhaseTimer { stats: Default::default(), enabled }
+    }
+
+    /// Whether instrumentation is active.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Run `f` attributed to `phase`.
+    #[inline]
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        if !self.enabled {
+            return f();
+        }
+        let c0 = snapshot();
+        let t0 = Instant::now();
+        let r = f();
+        let dt = t0.elapsed();
+        let dc = snapshot().delta(&c0);
+        let s = &mut self.stats[phase as usize];
+        s.elapsed += dt;
+        s.count += 1;
+        s.counters.merge(&dc);
+        r
+    }
+
+    /// Stats for one phase.
+    pub fn get(&self, phase: Phase) -> &PhaseStats {
+        &self.stats[phase as usize]
+    }
+
+    /// Credit `bytes` of unique working set to `phase`.
+    #[inline]
+    pub fn add_ws(&mut self, phase: Phase, bytes: u64) {
+        if self.enabled {
+            self.stats[phase as usize].ws_bytes += bytes;
+        }
+    }
+
+    /// Total time across phases.
+    pub fn total_elapsed(&self) -> Duration {
+        self.stats.iter().map(|s| s.elapsed).sum()
+    }
+
+    /// Percentage share of each phase (sums to ~100 when any time passed).
+    pub fn percentages(&self) -> [f64; N_PHASES] {
+        let total = self.total_elapsed().as_secs_f64();
+        let mut out = [0.0; N_PHASES];
+        if total > 0.0 {
+            for (i, s) in self.stats.iter().enumerate() {
+                out[i] = 100.0 * s.elapsed.as_secs_f64() / total;
+            }
+        }
+        out
+    }
+
+    /// Merge another timer's accumulations (for per-thread merges).
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for i in 0..N_PHASES {
+            self.stats[i].elapsed += other.stats[i].elapsed;
+            self.stats[i].count += other.stats[i].count;
+            self.stats[i].counters.merge(&other.stats[i].counters);
+            self.stats[i].ws_bytes += other.stats[i].ws_bytes;
+        }
+    }
+
+    /// Reset all accumulations.
+    pub fn reset(&mut self) {
+        self.stats = Default::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::counters::{record, reset_counters, Kernel};
+
+    #[test]
+    fn time_attributes_duration_and_counters() {
+        reset_counters();
+        let mut pt = PhaseTimer::new(true);
+        let v = pt.time(Phase::Predict, || {
+            record(Kernel::Gemm, 100, 50);
+            42
+        });
+        assert_eq!(v, 42);
+        let s = pt.get(Phase::Predict);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.counters.get(Kernel::Gemm).flops, 100);
+        assert!(s.elapsed > Duration::ZERO);
+        assert_eq!(pt.get(Phase::Assign).count, 0);
+    }
+
+    #[test]
+    fn disabled_timer_is_transparent() {
+        let mut pt = PhaseTimer::new(false);
+        let v = pt.time(Phase::Update, || 7);
+        assert_eq!(v, 7);
+        assert_eq!(pt.get(Phase::Update).count, 0);
+        assert_eq!(pt.total_elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn percentages_sum_to_100() {
+        let mut pt = PhaseTimer::new(true);
+        pt.time(Phase::Predict, || std::thread::sleep(Duration::from_millis(2)));
+        pt.time(Phase::Update, || std::thread::sleep(Duration::from_millis(2)));
+        let p = pt.percentages();
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = PhaseTimer::new(true);
+        let mut b = PhaseTimer::new(true);
+        a.time(Phase::Assign, || {});
+        b.time(Phase::Assign, || {});
+        a.merge(&b);
+        assert_eq!(a.get(Phase::Assign).count, 2);
+    }
+}

@@ -1,0 +1,253 @@
+//! Tracking-quality metrics (CLEAR-MOT style) against ground truth.
+//!
+//! The paper evaluates speed only (its §II cites the MOT benchmark for
+//! data, not for accuracy), but a reproduction that changes the
+//! association or covariance math needs a quality guardrail: the E9
+//! ablations and the synthetic-generator tests score MOTA, precision/
+//! recall and identity switches here. Matching follows the CLEAR
+//! protocol: greedy IoU-0.5 assignment between ground-truth boxes and
+//! reported tracks per frame, id-switch counted when a ground-truth
+//! identity changes its matched track id.
+
+use super::bbox::Bbox;
+use super::iou::iou_raw;
+use std::collections::HashMap;
+
+/// Per-frame input to the evaluator.
+#[derive(Debug, Clone)]
+pub struct EvalFrame {
+    /// `(gt_id, box)` ground truth objects visible this frame.
+    pub gt: Vec<(u64, Bbox)>,
+    /// `(track_id, box)` tracker output this frame.
+    pub tracks: Vec<(u64, Bbox)>,
+}
+
+/// Aggregated CLEAR-MOT-style metrics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MotMetrics {
+    /// Ground-truth boxes over all frames.
+    pub n_gt: u64,
+    /// Matched (true positive) track boxes.
+    pub tp: u64,
+    /// Unmatched track boxes (false positives).
+    pub fp: u64,
+    /// Unmatched ground-truth boxes (misses).
+    pub fn_: u64,
+    /// Identity switches.
+    pub id_switches: u64,
+    /// Sum of IoU over matches (for MOTP).
+    pub iou_sum: f64,
+}
+
+impl MotMetrics {
+    /// Multi-object tracking accuracy: `1 - (FN + FP + IDSW) / GT`.
+    pub fn mota(&self) -> f64 {
+        if self.n_gt == 0 {
+            return 0.0;
+        }
+        1.0 - (self.fn_ + self.fp + self.id_switches) as f64 / self.n_gt as f64
+    }
+
+    /// Multi-object tracking precision: mean IoU of matches.
+    pub fn motp(&self) -> f64 {
+        if self.tp == 0 {
+            return 0.0;
+        }
+        self.iou_sum / self.tp as f64
+    }
+
+    /// Detection recall `TP / GT`.
+    pub fn recall(&self) -> f64 {
+        if self.n_gt == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / self.n_gt as f64
+    }
+
+    /// Detection precision `TP / (TP + FP)`.
+    pub fn precision(&self) -> f64 {
+        let denom = self.tp + self.fp;
+        if denom == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / denom as f64
+    }
+}
+
+/// Evaluate a whole sequence (frames in order).
+pub fn evaluate(frames: &[EvalFrame], iou_threshold: f64) -> MotMetrics {
+    let mut m = MotMetrics::default();
+    let mut last_match: HashMap<u64, u64> = HashMap::new(); // gt_id -> track_id
+    for f in frames {
+        m.n_gt += f.gt.len() as u64;
+        // greedy best-IoU matching above the threshold
+        let mut pairs: Vec<(f64, usize, usize)> = Vec::new();
+        for (gi, (_, gb)) in f.gt.iter().enumerate() {
+            for (ti, (_, tb)) in f.tracks.iter().enumerate() {
+                let v = iou_raw(gb, tb);
+                if v >= iou_threshold {
+                    pairs.push((v, gi, ti));
+                }
+            }
+        }
+        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut gt_used = vec![false; f.gt.len()];
+        let mut trk_used = vec![false; f.tracks.len()];
+        let mut matched = 0u64;
+        for (v, gi, ti) in pairs {
+            if gt_used[gi] || trk_used[ti] {
+                continue;
+            }
+            gt_used[gi] = true;
+            trk_used[ti] = true;
+            matched += 1;
+            m.iou_sum += v;
+            let gt_id = f.gt[gi].0;
+            let trk_id = f.tracks[ti].0;
+            if let Some(&prev) = last_match.get(&gt_id) {
+                if prev != trk_id {
+                    m.id_switches += 1;
+                }
+            }
+            last_match.insert(gt_id, trk_id);
+        }
+        m.tp += matched;
+        m.fp += (f.tracks.len() as u64).saturating_sub(matched);
+        m.fn_ += (f.gt.len() as u64).saturating_sub(matched);
+    }
+    m
+}
+
+/// Run SORT over a synthetic sequence and score it against its own
+/// ground truth (convenience for ablations and tests).
+pub fn evaluate_sort(
+    synth: &crate::data::synth::SynthSequence,
+    params: super::sort::SortParams,
+    iou_threshold: f64,
+) -> MotMetrics {
+    let mut sort = super::sort::Sort::new(params);
+    let mut gt_by_frame: HashMap<u32, Vec<(u64, Bbox)>> = HashMap::new();
+    for t in &synth.ground_truth {
+        for (f, b) in &t.boxes {
+            gt_by_frame.entry(*f).or_default().push((t.id, *b));
+        }
+    }
+    let mut frames = Vec::with_capacity(synth.sequence.frames.len());
+    let mut boxes: Vec<Bbox> = Vec::new();
+    for frame in &synth.sequence.frames {
+        boxes.clear();
+        boxes.extend(frame.detections.iter().map(|d| d.bbox));
+        let tracks: Vec<(u64, Bbox)> = sort.update(&boxes).iter().map(|t| (t.id, t.bbox)).collect();
+        frames.push(EvalFrame {
+            gt: gt_by_frame.get(&frame.index).cloned().unwrap_or_default(),
+            tracks,
+        });
+    }
+    evaluate(&frames, iou_threshold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(x: f64) -> Bbox {
+        Bbox::new(x, 0.0, x + 10.0, 20.0)
+    }
+
+    #[test]
+    fn perfect_tracking_scores_mota_one() {
+        let frames: Vec<EvalFrame> = (0..10)
+            .map(|k| EvalFrame {
+                gt: vec![(1, b(k as f64)), (2, b(100.0 + k as f64))],
+                tracks: vec![(7, b(k as f64)), (9, b(100.0 + k as f64))],
+            })
+            .collect();
+        let m = evaluate(&frames, 0.5);
+        assert_eq!(m.tp, 20);
+        assert_eq!(m.fp, 0);
+        assert_eq!(m.fn_, 0);
+        assert_eq!(m.id_switches, 0);
+        assert!((m.mota() - 1.0).abs() < 1e-12);
+        assert!(m.motp() > 0.99);
+    }
+
+    #[test]
+    fn missed_object_counts_fn() {
+        let frames = vec![EvalFrame {
+            gt: vec![(1, b(0.0)), (2, b(100.0))],
+            tracks: vec![(7, b(0.0))],
+        }];
+        let m = evaluate(&frames, 0.5);
+        assert_eq!(m.fn_, 1);
+        assert_eq!(m.tp, 1);
+        assert!((m.recall() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ghost_track_counts_fp() {
+        let frames = vec![EvalFrame {
+            gt: vec![(1, b(0.0))],
+            tracks: vec![(7, b(0.0)), (8, b(500.0))],
+        }];
+        let m = evaluate(&frames, 0.5);
+        assert_eq!(m.fp, 1);
+        assert!((m.precision() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn id_switch_detected() {
+        let frames = vec![
+            EvalFrame { gt: vec![(1, b(0.0))], tracks: vec![(7, b(0.0))] },
+            EvalFrame { gt: vec![(1, b(1.0))], tracks: vec![(8, b(1.0))] }, // id changed
+            EvalFrame { gt: vec![(1, b(2.0))], tracks: vec![(8, b(2.0))] },
+        ];
+        let m = evaluate(&frames, 0.5);
+        assert_eq!(m.id_switches, 1);
+    }
+
+    #[test]
+    fn empty_sequences() {
+        let m = evaluate(&[], 0.5);
+        assert_eq!(m.mota(), 0.0);
+        assert_eq!(m.motp(), 0.0);
+    }
+
+    #[test]
+    fn sort_on_clean_synthetic_sequence_scores_high() {
+        use crate::data::synth::{generate_sequence, SynthConfig};
+        use crate::sort::SortParams;
+        let mut cfg = SynthConfig::mot15("QA", 300, 6, 17);
+        cfg.det_prob = 1.0; // no dropouts
+        cfg.fp_rate = 0.0; // no clutter
+        cfg.jitter_px = 0.5;
+        let synth = generate_sequence(&cfg);
+        let m = evaluate_sort(
+            &synth,
+            SortParams { timing: false, ..Default::default() },
+            0.5,
+        );
+        // min_hits warm-up costs a few FN per track birth; everything
+        // else should track nearly perfectly on clean data
+        assert!(m.mota() > 0.85, "MOTA {} ({m:?})", m.mota());
+        assert!(m.motp() > 0.85, "MOTP {}", m.motp());
+        assert!(m.precision() > 0.99, "precision {}", m.precision());
+    }
+
+    #[test]
+    fn dense_and_fast_kernels_give_identical_quality() {
+        use crate::data::synth::{generate_sequence, SynthConfig};
+        use crate::sort::SortParams;
+        let synth = generate_sequence(&SynthConfig::mot15("QB", 200, 8, 31));
+        let fast = evaluate_sort(
+            &synth,
+            SortParams { timing: false, ..Default::default() },
+            0.5,
+        );
+        let dense = evaluate_sort(
+            &synth,
+            SortParams { timing: false, dense_kernels: true, ..Default::default() },
+            0.5,
+        );
+        assert_eq!(fast, dense, "structure-aware kernels changed tracking output");
+    }
+}

@@ -1,0 +1,159 @@
+//! `KalmanBoxTracker` — per-object lifecycle state (Fig 2, §III).
+//!
+//! A tracker is born from an unmatched detection, coasts through missed
+//! frames (`time_since_update`), accumulates a `hit_streak` while
+//! matched, and is culled once it has coasted longer than `max_age`.
+
+use super::bbox::Bbox;
+use super::kalman::{CovarianceForm, KalmanState, SortConstants};
+
+/// One tracked object: Kalman state + lifecycle counters.
+#[derive(Debug, Clone)]
+pub struct KalmanBoxTracker {
+    /// Stable track identity (1-based in the output, like the original).
+    pub id: u64,
+    /// Filter state (mean + covariance).
+    pub kf: KalmanState,
+    /// Frames since the last matched detection (0 = matched this frame).
+    pub time_since_update: u32,
+    /// Total matched detections over the track's life.
+    pub hits: u32,
+    /// Consecutive matched frames ending now.
+    pub hit_streak: u32,
+    /// Total frames since birth.
+    pub age: u32,
+}
+
+impl KalmanBoxTracker {
+    /// Create a tracker from a seed detection.
+    pub fn new(id: u64, bbox: &Bbox, consts: &SortConstants) -> Self {
+        KalmanBoxTracker {
+            id,
+            kf: KalmanState::from_measurement(&bbox.to_z(), consts),
+            time_since_update: 0,
+            hits: 0,
+            hit_streak: 0,
+            age: 0,
+        }
+    }
+
+    /// Advance one frame and return the predicted box.
+    ///
+    /// Order matches the original: guard+predict, then `age += 1`, then
+    /// the streak reset (a streak survives only while
+    /// `time_since_update == 0` at predict time), then
+    /// `time_since_update += 1`.
+    pub fn predict(&mut self, consts: &SortConstants) -> Bbox {
+        self.predict_with(consts, false)
+    }
+
+    /// [`Self::predict`] choosing dense library kernels (paper-style
+    /// accounting) or the structure-aware fast path.
+    pub fn predict_with(&mut self, consts: &SortConstants, dense: bool) -> Bbox {
+        if dense {
+            self.kf.predict_dense(consts);
+        } else {
+            self.kf.predict(consts);
+        }
+        self.age += 1;
+        if self.time_since_update > 0 {
+            self.hit_streak = 0;
+        }
+        self.time_since_update += 1;
+        Bbox::from_state(&self.kf.x)
+    }
+
+    /// Fold in a matched detection.
+    pub fn update(&mut self, bbox: &Bbox, consts: &SortConstants, form: CovarianceForm) -> bool {
+        self.update_with(bbox, consts, form, false)
+    }
+
+    /// [`Self::update`] choosing dense kernels or the fast path.
+    pub fn update_with(
+        &mut self,
+        bbox: &Bbox,
+        consts: &SortConstants,
+        form: CovarianceForm,
+        dense: bool,
+    ) -> bool {
+        self.time_since_update = 0;
+        self.hits += 1;
+        self.hit_streak += 1;
+        if dense {
+            self.kf.update_dense(&bbox.to_z(), consts, form)
+        } else {
+            self.kf.update(&bbox.to_z(), consts, form)
+        }
+    }
+
+    /// Current state as a box.
+    pub fn state_bbox(&self) -> Bbox {
+        Bbox::from_state(&self.kf.x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts() -> SortConstants {
+        SortConstants::sort_defaults()
+    }
+
+    #[test]
+    fn new_tracker_reports_seed_box() {
+        let c = consts();
+        let b = Bbox::new(10.0, 20.0, 60.0, 140.0);
+        let t = KalmanBoxTracker::new(7, &b, &c);
+        let s = t.state_bbox();
+        assert!((s.x1 - b.x1).abs() < 1e-9);
+        assert!((s.y2 - b.y2).abs() < 1e-9);
+        assert_eq!(t.id, 7);
+        assert_eq!(t.age, 0);
+    }
+
+    #[test]
+    fn predict_increments_age_and_tsu() {
+        let c = consts();
+        let mut t = KalmanBoxTracker::new(0, &Bbox::new(0.0, 0.0, 10.0, 10.0), &c);
+        t.predict(&c);
+        assert_eq!(t.age, 1);
+        assert_eq!(t.time_since_update, 1);
+    }
+
+    #[test]
+    fn hit_streak_grows_and_resets() {
+        let c = consts();
+        let b = Bbox::new(0.0, 0.0, 10.0, 10.0);
+        let mut t = KalmanBoxTracker::new(0, &b, &c);
+        for _ in 0..3 {
+            t.predict(&c);
+            t.update(&b, &c, CovarianceForm::Joseph);
+        }
+        assert_eq!(t.hit_streak, 3);
+        assert_eq!(t.hits, 3);
+        // two coasting frames: streak survives the first predict
+        // (tsu was 0) and dies on the second
+        t.predict(&c);
+        assert_eq!(t.hit_streak, 3);
+        t.predict(&c);
+        assert_eq!(t.hit_streak, 0);
+        assert_eq!(t.time_since_update, 2);
+    }
+
+    #[test]
+    fn tracked_box_follows_moving_object() {
+        let c = consts();
+        let mut t = KalmanBoxTracker::new(0, &Bbox::new(0.0, 0.0, 10.0, 10.0), &c);
+        for k in 1..20 {
+            t.predict(&c);
+            let b = Bbox::new(2.0 * k as f64, 0.0, 2.0 * k as f64 + 10.0, 10.0);
+            t.update(&b, &c, CovarianceForm::Joseph);
+        }
+        // after predict, the box should lead in the motion direction
+        let before = t.state_bbox();
+        t.predict(&c);
+        let after = t.state_bbox();
+        assert!(after.x1 > before.x1);
+    }
+}

@@ -1,0 +1,97 @@
+//! CLI smoke tests: the deployable binary end to end (gen-data →
+//! track → scaling → simulate), via `CARGO_BIN_EXE_smalltrack`.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_smalltrack"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("smalltrack_cli_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["gen-data", "track", "suite", "serve", "scaling", "simulate", "xla"] {
+        assert!(text.contains(cmd), "missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn gen_data_then_track_roundtrip() {
+    let dir = tmpdir("roundtrip");
+    let out = bin().args(["gen-data", "--out"]).arg(&dir).args(["--seed", "3"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let det = dir.join("TUD-Campus/det/det.txt");
+    assert!(det.exists());
+
+    let tracks_dir = dir.join("tracks");
+    let out = bin()
+        .args(["track", "--det"])
+        .arg(&det)
+        .arg("--out")
+        .arg(&tracks_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"frames\": 71"), "{stdout}");
+    // track output exists and is MOT-formatted
+    let track_file = tracks_dir.join("TUD-Campus.txt");
+    let body = std::fs::read_to_string(&track_file).unwrap();
+    let first = body.lines().next().unwrap();
+    assert!(first.split(',').count() >= 10, "{first}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn suite_reports_5500_frames() {
+    let out = bin().arg("suite").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("5500 frames"), "{text}");
+    assert!(text.contains("Venice-2"));
+}
+
+#[test]
+fn scaling_policies_run() {
+    for policy in ["strong", "weak", "throughput"] {
+        let out = bin().args(["scaling", "--policy", policy, "--p", "2"]).output().unwrap();
+        assert!(out.status.success(), "{policy}");
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("frames=5500"), "{policy}: {text}");
+    }
+}
+
+#[test]
+fn scaling_with_real_processes() {
+    let out = bin().args(["scaling", "--processes", "--p", "2"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("throughput-processes(p=2)"), "{text}");
+    assert!(text.contains("frames=5500"), "{text}");
+}
+
+#[test]
+fn simulate_prints_table6() {
+    let out = bin().args(["simulate", "--machine", "skx6140"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table VI"));
+    assert!(text.contains("72"));
+}

@@ -1,0 +1,121 @@
+//! Coordinator-level properties: routing invariants, policy agreement,
+//! serving vs offline equivalence on randomized workloads.
+
+use smalltrack::coordinator::backpressure::PushPolicy;
+use smalltrack::coordinator::policy::{outcomes_consistent, run_policy, run_sequence_serial};
+use smalltrack::coordinator::{
+    serve, Pacing, RoutePolicy, Router, ScalingPolicy, ServerConfig, VideoStream,
+};
+use smalltrack::data::synth::{generate_sequence, SynthConfig, SynthSequence};
+use smalltrack::proptest_lite::{ensure, run_named, Config};
+use smalltrack::sort::SortParams;
+
+fn random_suite(rng: &mut smalltrack::prng::Rng, max_seqs: u64) -> Vec<SynthSequence> {
+    let n = 1 + rng.below(max_seqs) as usize;
+    (0..n)
+        .map(|i| {
+            let frames = 20 + rng.below(80) as u32;
+            let objs = 2 + rng.below(8) as u32;
+            generate_sequence(&SynthConfig::mot15(&format!("R{i}"), frames, objs, rng.next_u64()))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_router_pins_and_balances() {
+    run_named(
+        "router-invariants",
+        Config { cases: 100, seed: 0x40073 },
+        |rng| {
+            let workers = 1 + rng.below(8) as usize;
+            let streams: Vec<usize> = (0..rng.below(40)).map(|_| rng.below(1000) as usize).collect();
+            (workers, streams)
+        },
+        |(workers, streams)| {
+            let mut r = Router::new(*workers, RoutePolicy::LeastLoaded);
+            let mut first: std::collections::HashMap<usize, usize> = Default::default();
+            for &s in streams {
+                let w = r.route(s);
+                ensure(w < *workers, "worker in range")?;
+                if let Some(&w0) = first.get(&s) {
+                    ensure(w0 == w, format!("stream {s} re-routed {w0} -> {w}"))?;
+                } else {
+                    first.insert(s, w);
+                }
+            }
+            // balance: max-min load <= 1 for unique streams
+            let unique = first.len();
+            let loads = r.loads();
+            let max = loads.iter().max().unwrap();
+            let min = loads.iter().min().unwrap();
+            ensure(
+                max - min <= 1 && loads.iter().sum::<usize>() == unique,
+                format!("unbalanced {loads:?}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_scaling_policies_agree_on_output() {
+    run_named(
+        "policies-agree",
+        Config { cases: 12, seed: 0xACE },
+        |rng| random_suite(rng, 5),
+        |suite| {
+            let params = SortParams { timing: false, ..Default::default() };
+            let outcomes: Vec<_> = [
+                ScalingPolicy::Strong { threads: 2 },
+                ScalingPolicy::Weak { workers: 3 },
+                ScalingPolicy::Throughput { workers: 2 },
+            ]
+            .into_iter()
+            .map(|p| run_policy(suite, p, params))
+            .collect();
+            ensure(outcomes_consistent(&outcomes), format!("{outcomes:?}"))
+        },
+    );
+}
+
+#[test]
+fn prop_lossless_serving_equals_offline() {
+    run_named(
+        "serve-equals-offline",
+        Config { cases: 8, seed: 0x5E4E },
+        |rng| random_suite(rng, 4),
+        |suite| {
+            let params = SortParams { timing: false, ..Default::default() };
+            let offline: u64 = suite.iter().map(|s| run_sequence_serial(s, params).1).sum();
+            let streams: Vec<VideoStream> = suite
+                .iter()
+                .enumerate()
+                .map(|(i, s)| VideoStream::new(i, s.sequence.clone(), Pacing::Unpaced))
+                .collect();
+            let report = serve(
+                streams,
+                ServerConfig {
+                    workers: 2,
+                    push_policy: PushPolicy::Block,
+                    sort_params: params,
+                    ..Default::default()
+                },
+            );
+            ensure(report.dropped == 0, "no drops under Block")?;
+            ensure(
+                report.tracks_out == offline,
+                format!("served {} vs offline {offline}", report.tracks_out),
+            )
+        },
+    );
+}
+
+#[test]
+fn full_table1_suite_runs_and_reports() {
+    let suite = smalltrack::data::synth::generate_suite(7);
+    let params = SortParams { timing: false, ..Default::default() };
+    let outcome = run_policy(&suite, ScalingPolicy::Weak { workers: 2 }, params);
+    assert_eq!(outcome.frames, 5500);
+    assert_eq!(outcome.files, 11);
+    assert!(outcome.fps() > 1000.0, "suspiciously slow: {}", outcome.fps());
+    assert!(outcome.tracks_out > 10_000, "tracks_out {}", outcome.tracks_out);
+}

@@ -1,0 +1,48 @@
+//! End-to-end parity: the Rust SORT vs the original-style Python SORT.
+//!
+//! `make artifacts` runs `python/baseline/sort_python.py` (the faithful
+//! abewley/sort reimplementation) on a deterministic mini-sequence and
+//! dumps its per-frame output. The Rust tracker must produce the same
+//! tracks — same ids, same boxes — frame by frame.
+
+use smalltrack::data::json::parse_file;
+use smalltrack::sort::{Bbox, Sort, SortParams};
+
+#[test]
+fn rust_sort_matches_python_baseline_tracks() {
+    let path = smalltrack::runtime::artifacts_dir().join("golden_tracks.json");
+    if !path.exists() {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    }
+    let golden = parse_file(&path).unwrap();
+    let params = golden.req("params");
+    assert_eq!(params.req("max_age").num(), 1.0);
+    assert_eq!(params.req("min_hits").num(), 3.0);
+
+    let mut sort = Sort::new(SortParams::default());
+    let frames = golden.req("frames").arr();
+    let tracks = golden.req("tracks").arr();
+    assert_eq!(frames.len(), tracks.len());
+
+    for (k, (frame, want)) in frames.iter().zip(tracks.iter()).enumerate() {
+        let boxes: Vec<Bbox> = frame
+            .f64_mat()
+            .iter()
+            .map(|b| Bbox::new(b[0], b[1], b[2], b[3]))
+            .collect();
+        let mut got: Vec<_> = sort.update(&boxes).to_vec();
+        got.sort_by_key(|t| t.id);
+        let mut want_rows = want.f64_mat();
+        want_rows.sort_by(|a, b| a[4].partial_cmp(&b[4]).unwrap());
+
+        assert_eq!(got.len(), want_rows.len(), "frame {k}: track count");
+        for (g, w) in got.iter().zip(&want_rows) {
+            assert_eq!(g.id, w[4] as u64, "frame {k}: id");
+            assert!((g.bbox.x1 - w[0]).abs() < 1e-6, "frame {k} id {} x1", g.id);
+            assert!((g.bbox.y1 - w[1]).abs() < 1e-6, "frame {k}");
+            assert!((g.bbox.x2 - w[2]).abs() < 1e-6, "frame {k}");
+            assert!((g.bbox.y2 - w[3]).abs() < 1e-6, "frame {k}");
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Property tests: the Hungarian solver vs an exhaustive oracle, and
+//! structural invariants at arbitrary shapes.
+
+use smalltrack::proptest_lite::{ensure, run_named, Config};
+use smalltrack::sort::hungarian::{
+    assignment_cost, brute_force_min_cost, hungarian_min_cost, HungarianScratch,
+};
+
+#[test]
+fn prop_optimal_vs_brute_force_small_shapes() {
+    run_named(
+        "hungarian-optimal",
+        Config { cases: 400, seed: 0xB10C },
+        |rng| {
+            let rows = 1 + rng.below(5) as usize;
+            let cols = 1 + rng.below(5) as usize;
+            let cost: Vec<f64> = (0..rows * cols).map(|_| rng.range(-10.0, 10.0)).collect();
+            (rows, cols, cost)
+        },
+        |(rows, cols, cost)| {
+            let mut s = HungarianScratch::default();
+            let asn = hungarian_min_cost(cost, *rows, *cols, &mut s);
+            let got = assignment_cost(cost, *cols, &asn);
+            let (want, _) = brute_force_min_cost(cost, *rows, *cols);
+            ensure(
+                (got - want).abs() < 1e-9,
+                format!("suboptimal: got {got}, optimal {want}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_assignment_is_partial_permutation() {
+    run_named(
+        "hungarian-permutation",
+        Config { cases: 400, seed: 0xFACE },
+        |rng| {
+            let rows = 1 + rng.below(13) as usize; // Table I max objects
+            let cols = 1 + rng.below(13) as usize;
+            let cost: Vec<f64> = (0..rows * cols).map(|_| -rng.uniform()).collect(); // -IoU range
+            (rows, cols, cost)
+        },
+        |(rows, cols, cost)| {
+            let mut s = HungarianScratch::default();
+            let asn = hungarian_min_cost(cost, *rows, *cols, &mut s);
+            ensure(asn.len() == *rows, "one entry per row")?;
+            let assigned: Vec<usize> = asn.iter().flatten().copied().collect();
+            // exactly min(rows, cols) assignments
+            ensure(
+                assigned.len() == *rows.min(cols),
+                format!("{} assigned, want {}", assigned.len(), rows.min(cols)),
+            )?;
+            // columns unique and in range
+            let mut cols_seen = assigned.clone();
+            cols_seen.sort_unstable();
+            let before = cols_seen.len();
+            cols_seen.dedup();
+            ensure(cols_seen.len() == before, "duplicate column")?;
+            ensure(cols_seen.iter().all(|c| c < cols), "column out of range")
+        },
+    );
+}
+
+#[test]
+fn prop_invariant_under_row_constant_shift() {
+    // adding a constant to a row must not change the argmin assignment
+    run_named(
+        "hungarian-shift-invariance",
+        Config { cases: 200, seed: 0x5111F7 },
+        |rng| {
+            let n = 2 + rng.below(5) as usize;
+            let cost: Vec<f64> = (0..n * n).map(|_| rng.range(0.0, 100.0)).collect();
+            let row = rng.below(n as u64) as usize;
+            let shift = rng.range(-50.0, 50.0);
+            (n, cost, row, shift)
+        },
+        |(n, cost, row, shift)| {
+            let mut s = HungarianScratch::default();
+            let base = hungarian_min_cost(cost, *n, *n, &mut s);
+            let mut shifted = cost.clone();
+            for c in 0..*n {
+                shifted[row * n + c] += shift;
+            }
+            let after = hungarian_min_cost(&shifted, *n, *n, &mut s);
+            let cost_base = assignment_cost(cost, *n, &base);
+            let cost_after = assignment_cost(cost, *n, &after);
+            // assignments may differ under ties, but value must match
+            ensure(
+                (cost_base - cost_after).abs() < 1e-9,
+                format!("{cost_base} vs {cost_after}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_transpose_duality() {
+    // optimal value of cost == optimal value of its transpose
+    run_named(
+        "hungarian-transpose",
+        Config { cases: 200, seed: 0x7A27 },
+        |rng| {
+            let rows = 1 + rng.below(6) as usize;
+            let cols = 1 + rng.below(6) as usize;
+            let cost: Vec<f64> = (0..rows * cols).map(|_| rng.range(0.0, 10.0)).collect();
+            (rows, cols, cost)
+        },
+        |(rows, cols, cost)| {
+            let mut s = HungarianScratch::default();
+            let a = hungarian_min_cost(cost, *rows, *cols, &mut s);
+            let va = assignment_cost(cost, *cols, &a);
+            let mut t = vec![0.0; rows * cols];
+            for r in 0..*rows {
+                for c in 0..*cols {
+                    t[c * rows + r] = cost[r * cols + c];
+                }
+            }
+            let b = hungarian_min_cost(&t, *cols, *rows, &mut s);
+            let vb = assignment_cost(&t, *rows, &b);
+            ensure((va - vb).abs() < 1e-9, format!("{va} vs {vb}"))
+        },
+    );
+}

@@ -1,0 +1,164 @@
+//! Property tests on the Kalman filter: the structure-aware fast path
+//! vs the dense formulation on randomized states, plus filter
+//! invariants under randomized measurement streams.
+
+use smalltrack::linalg::Mat;
+use smalltrack::proptest_lite::{ensure, run_named, Config};
+use smalltrack::sort::kalman::{is_symmetric_psd, CovarianceForm, KalmanState, SortConstants};
+
+fn random_state(rng: &mut smalltrack::prng::Rng, consts: &SortConstants) -> KalmanState {
+    let z = [
+        rng.range(0.0, 1920.0),
+        rng.range(0.0, 1080.0),
+        rng.range(50.0, 40000.0),
+        rng.range(0.2, 5.0),
+    ];
+    let mut s = KalmanState::from_measurement(&z, consts);
+    s.x[4] = rng.range(-10.0, 10.0);
+    s.x[5] = rng.range(-10.0, 10.0);
+    s.x[6] = rng.range(-100.0, 100.0);
+    // random SPD covariance: B B' + 2I, scaled
+    let mut b = Mat::<7, 7>::zeros();
+    for r in 0..7 {
+        for c in 0..7 {
+            b[(r, c)] = rng.normal();
+        }
+    }
+    s.p = b.matmul_nt(&b).add(&Mat::eye().scale(2.0)).scale(rng.range(0.5, 20.0));
+    s
+}
+
+#[test]
+fn prop_fast_predict_equals_dense() {
+    let consts = SortConstants::sort_defaults();
+    run_named(
+        "predict-fast-vs-dense",
+        Config { cases: 300, seed: 0xFA57 },
+        |rng| random_state(rng, &consts),
+        |s0| {
+            let mut fast = *s0;
+            let mut dense = *s0;
+            fast.predict(&consts);
+            dense.predict_dense(&consts);
+            for r in 0..7 {
+                ensure(
+                    (fast.x[r] - dense.x[r]).abs() < 1e-9 * dense.x[r].abs().max(1.0),
+                    format!("x[{r}]: {} vs {}", fast.x[r], dense.x[r]),
+                )?;
+                for c in 0..7 {
+                    ensure(
+                        (fast.p[(r, c)] - dense.p[(r, c)]).abs()
+                            < 1e-9 * dense.p[(r, c)].abs().max(1.0),
+                        format!("P[{r}][{c}]"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fast_update_equals_dense() {
+    let consts = SortConstants::sort_defaults();
+    run_named(
+        "update-fast-vs-dense",
+        Config { cases: 300, seed: 0x0DDB },
+        |rng| {
+            let s = random_state(rng, &consts);
+            let z = [
+                rng.range(0.0, 1920.0),
+                rng.range(0.0, 1080.0),
+                rng.range(50.0, 40000.0),
+                rng.range(0.2, 5.0),
+            ];
+            let form = if rng.chance(0.5) { CovarianceForm::Joseph } else { CovarianceForm::Simple };
+            (s, z, form)
+        },
+        |(s0, z, form)| {
+            let mut fast = *s0;
+            let mut dense = *s0;
+            let ok_f = fast.update(z, &consts, *form);
+            let ok_d = dense.update_dense(z, &consts, *form);
+            ensure(ok_f == ok_d, "SPD acceptance must agree")?;
+            if !ok_f {
+                return Ok(());
+            }
+            for r in 0..7 {
+                ensure(
+                    (fast.x[r] - dense.x[r]).abs() < 1e-7 * dense.x[r].abs().max(1.0),
+                    format!("x[{r}]: {} vs {}", fast.x[r], dense.x[r]),
+                )?;
+                for c in 0..7 {
+                    ensure(
+                        (fast.p[(r, c)] - dense.p[(r, c)]).abs()
+                            < 1e-7 * dense.p[(r, c)].abs().max(1.0),
+                        format!("P[{r}][{c}]: {} vs {}", fast.p[(r, c)], dense.p[(r, c)]),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_joseph_update_preserves_spd() {
+    let consts = SortConstants::sort_defaults();
+    run_named(
+        "joseph-preserves-spd",
+        Config { cases: 200, seed: 0x5BD },
+        |rng| {
+            let s = random_state(rng, &consts);
+            let z = [
+                rng.range(0.0, 1920.0),
+                rng.range(0.0, 1080.0),
+                rng.range(50.0, 40000.0),
+                rng.range(0.2, 5.0),
+            ];
+            (s, z)
+        },
+        |(s0, z)| {
+            let mut s = *s0;
+            if !s.update(z, &consts, CovarianceForm::Joseph) {
+                return Ok(()); // rejected non-SPD input
+            }
+            ensure(is_symmetric_psd(&s.p, 1e-6), "P lost SPD after Joseph update")
+        },
+    );
+}
+
+#[test]
+fn prop_update_is_contraction_on_observed_block() {
+    // folding in a measurement never increases the observed variance
+    let consts = SortConstants::sort_defaults();
+    run_named(
+        "update-contracts-observed-variance",
+        Config { cases: 200, seed: 0xC0 },
+        |rng| {
+            let s = random_state(rng, &consts);
+            let z = [
+                rng.range(0.0, 1920.0),
+                rng.range(0.0, 1080.0),
+                rng.range(50.0, 40000.0),
+                rng.range(0.2, 5.0),
+            ];
+            (s, z)
+        },
+        |(s0, z)| {
+            let mut s = *s0;
+            let before = s.p.diagonal();
+            if !s.update(z, &consts, CovarianceForm::Joseph) {
+                return Ok(());
+            }
+            let after = s.p.diagonal();
+            for i in 0..4 {
+                ensure(
+                    after[i] <= before[i] * (1.0 + 1e-9),
+                    format!("var[{i}] grew: {} -> {}", before[i], after[i]),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,149 @@
+//! Cross-layer parity: the Rust Kalman filter vs the JAX oracle.
+//!
+//! `make artifacts` exports `artifacts/parity.json` — a golden
+//! trajectory computed by `python/compile/kernels/ref.py` (the same
+//! oracle the Pallas kernels are tested against). These tests replay it
+//! through the native Rust filter; agreement here means L1 (Pallas), L2
+//! (JAX) and L3 (Rust) all implement the same arithmetic.
+
+use smalltrack::data::json::{parse_file, Value};
+use smalltrack::linalg::{Mat, Mat4, Mat4x7, Mat7};
+use smalltrack::sort::kalman::{CovarianceForm, KalmanState, SortConstants};
+use smalltrack::sort::Bbox;
+use std::path::PathBuf;
+
+fn parity_path() -> Option<PathBuf> {
+    let p = smalltrack::runtime::artifacts_dir().join("parity.json");
+    p.exists().then_some(p)
+}
+
+fn mat7_from(v: &Value) -> Mat7 {
+    let rows = v.f64_mat();
+    let flat: Vec<f64> = rows.into_iter().flatten().collect();
+    Mat::from_slice(&flat)
+}
+
+#[test]
+fn constants_match_oracle() {
+    let Some(path) = parity_path() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let parity = parse_file(&path).unwrap();
+    let c = parity.req("constants");
+    let ours = SortConstants::sort_defaults();
+
+    let f = mat7_from(c.req("F"));
+    assert!(ours.f.max_abs_diff(&f) == 0.0, "F differs");
+    let q = mat7_from(c.req("Q"));
+    assert!(ours.q.max_abs_diff(&q) < 1e-15, "Q differs");
+    let p0 = mat7_from(c.req("P0"));
+    assert!(ours.p0.max_abs_diff(&p0) == 0.0, "P0 differs");
+
+    let h_rows = c.req("H").f64_mat();
+    let h = Mat4x7::from_slice(&h_rows.into_iter().flatten().collect::<Vec<_>>());
+    assert!(ours.h.max_abs_diff(&h) == 0.0, "H differs");
+    let r_rows = c.req("R").f64_mat();
+    let r = Mat4::from_slice(&r_rows.into_iter().flatten().collect::<Vec<_>>());
+    assert!(ours.r.max_abs_diff(&r) == 0.0, "R differs");
+}
+
+#[test]
+fn kalman_trajectory_matches_oracle() {
+    let Some(path) = parity_path() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let parity = parse_file(&path).unwrap();
+    let consts = SortConstants::sort_defaults();
+
+    // seed three trackers from frame 0 of the scenario
+    let frames = parity.req("frames").arr();
+    let frame0 = frames[0].f64_mat();
+    let mut states: Vec<KalmanState> = frame0
+        .iter()
+        .map(|b| {
+            let bbox = Bbox::new(b[0], b[1], b[2], b[3]);
+            KalmanState::from_measurement(&bbox.to_z(), &consts)
+        })
+        .collect();
+
+    for step in parity.req("steps").arr() {
+        // predict and compare against x_pred / p_pred_diag
+        let x_pred = step.req("x_pred").f64_mat();
+        let p_pred_diag = step.req("p_pred_diag").f64_mat();
+        for (i, s) in states.iter_mut().enumerate() {
+            s.predict(&consts);
+            for k in 0..7 {
+                assert!(
+                    (s.x[k] - x_pred[i][k]).abs() < 1e-9,
+                    "frame {} trk {i} x[{k}]: {} vs {}",
+                    step.req("frame").num(),
+                    s.x[k],
+                    x_pred[i][k]
+                );
+            }
+            let diag = s.p.diagonal();
+            for k in 0..7 {
+                let want = p_pred_diag[i][k];
+                assert!(
+                    (diag[k] - want).abs() < 1e-6 * want.abs().max(1.0),
+                    "P diag mismatch trk {i} [{k}]: {} vs {want}",
+                    diag[k]
+                );
+            }
+        }
+        // update with z and compare x_post / full p_post
+        let z = step.req("z").f64_mat();
+        let x_post = step.req("x_post").f64_mat();
+        let p_post = step.req("p_post").arr();
+        for (i, s) in states.iter_mut().enumerate() {
+            let zi = [z[i][0], z[i][1], z[i][2], z[i][3]];
+            assert!(s.update(&zi, &consts, CovarianceForm::Joseph));
+            for k in 0..7 {
+                assert!(
+                    (s.x[k] - x_post[i][k]).abs() < 1e-9,
+                    "post x mismatch trk {i} [{k}]"
+                );
+            }
+            let want_p = mat7_from(&p_post[i]);
+            assert!(
+                s.p.max_abs_diff(&want_p) < 1e-8,
+                "post P mismatch trk {i}: {}",
+                s.p.max_abs_diff(&want_p)
+            );
+        }
+    }
+}
+
+#[test]
+fn iou_matrix_matches_oracle() {
+    let Some(path) = parity_path() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let parity = parse_file(&path).unwrap();
+    let case = parity.req("iou_case");
+    let dets: Vec<Bbox> = case
+        .req("dets")
+        .f64_mat()
+        .iter()
+        .map(|b| Bbox::new(b[0], b[1], b[2], b[3]))
+        .collect();
+    let boxes: Vec<Bbox> = case
+        .req("boxes")
+        .f64_mat()
+        .iter()
+        .map(|b| Bbox::new(b[0], b[1], b[2], b[3]))
+        .collect();
+    let want = case.req("iou").f64_mat();
+    let got = smalltrack::sort::iou::iou_matrix(&dets, &boxes);
+    for d in 0..dets.len() {
+        for t in 0..boxes.len() {
+            assert!(
+                (got[d * boxes.len() + t] - want[d][t]).abs() < 1e-12,
+                "iou[{d}][{t}]"
+            );
+        }
+    }
+}

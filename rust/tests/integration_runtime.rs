@@ -1,0 +1,169 @@
+//! L3↔L2/L1 integration: the PJRT runtime executing the AOT artifacts.
+//!
+//! Requires `make artifacts`. Verifies that (a) the compiled XLA graphs
+//! agree numerically with the native Rust filter and (b) the full
+//! XLA-bank tracker produces the same tracks as the native `Sort` on a
+//! real synthetic sequence — i.e. the three-layer stack composes.
+
+use smalltrack::data::synth::{generate_sequence, SynthConfig};
+use smalltrack::runtime::{artifacts_available, XlaRuntime, XlaSortBank};
+use smalltrack::sort::kalman::{CovarianceForm, KalmanState, SortConstants};
+use smalltrack::sort::{Bbox, Sort, SortParams};
+
+fn runtime() -> Option<XlaRuntime> {
+    if !artifacts_available() {
+        eprintln!("skipped: run `make artifacts` first");
+        return None;
+    }
+    Some(XlaRuntime::new().expect("PJRT CPU client"))
+}
+
+#[test]
+fn predict_artifact_matches_native_kalman() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.load("bank_predict_T16").unwrap();
+
+    // 16 slots: 5 live with distinct states, rest dead
+    let consts = SortConstants::sort_defaults();
+    let mut x = vec![0.0; 16 * 7];
+    let mut p = vec![0.0; 16 * 7 * 7];
+    let mut mask = vec![0.0; 16];
+    let mut native: Vec<KalmanState> = Vec::new();
+    for i in 0..5 {
+        let z = [100.0 * (i + 1) as f64, 50.0 * (i + 1) as f64, 2000.0 + 100.0 * i as f64, 0.5];
+        let mut s = KalmanState::from_measurement(&z, &consts);
+        s.x[4] = i as f64 - 2.0;
+        s.x[5] = 0.5 * i as f64;
+        for k in 0..7 {
+            x[i * 7 + k] = s.x[k];
+            for c in 0..7 {
+                p[i * 49 + k * 7 + c] = s.p[(k, c)];
+            }
+        }
+        mask[i] = 1.0;
+        native.push(s);
+    }
+
+    let outs = art.run(&[&x, &p, &mask]).unwrap();
+    let (xn, pn) = (&outs[0], &outs[1]);
+
+    for (i, s) in native.iter_mut().enumerate() {
+        s.predict(&consts);
+        for k in 0..7 {
+            assert!(
+                (xn[i * 7 + k] - s.x[k]).abs() < 1e-9,
+                "slot {i} x[{k}]: {} vs {}",
+                xn[i * 7 + k],
+                s.x[k]
+            );
+            for c in 0..7 {
+                assert!(
+                    (pn[i * 49 + k * 7 + c] - s.p[(k, c)]).abs() < 1e-9,
+                    "slot {i} P[{k}][{c}]"
+                );
+            }
+        }
+    }
+    // dead slots untouched
+    for i in 5..16 {
+        for k in 0..7 {
+            assert_eq!(xn[i * 7 + k], 0.0);
+        }
+    }
+}
+
+#[test]
+fn update_artifact_matches_native_kalman() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.load("bank_update").unwrap();
+    let consts = SortConstants::sort_defaults();
+
+    let mut x = vec![0.0; 16 * 7];
+    let mut p = vec![0.0; 16 * 7 * 7];
+    let mut z = vec![0.0; 16 * 4];
+    let mut zmask = vec![0.0; 16];
+    let mut native: Vec<KalmanState> = Vec::new();
+    for i in 0..4 {
+        let seed = [200.0 + 30.0 * i as f64, 100.0, 3000.0, 0.6];
+        let mut s = KalmanState::from_measurement(&seed, &consts);
+        s.predict(&consts);
+        for k in 0..7 {
+            x[i * 7 + k] = s.x[k];
+            for c in 0..7 {
+                p[i * 49 + k * 7 + c] = s.p[(k, c)];
+            }
+        }
+        let meas = [seed[0] + 2.0, seed[1] - 1.0, seed[2] + 50.0, 0.6];
+        z[i * 4..(i + 1) * 4].copy_from_slice(&meas);
+        zmask[i] = 1.0;
+        native.push(s);
+    }
+
+    let outs = art.run(&[&x, &p, &z, &zmask]).unwrap();
+    for (i, s) in native.iter_mut().enumerate() {
+        let zi = [z[i * 4], z[i * 4 + 1], z[i * 4 + 2], z[i * 4 + 3]];
+        assert!(s.update(&zi, &consts, CovarianceForm::Joseph));
+        for k in 0..7 {
+            assert!(
+                (outs[0][i * 7 + k] - s.x[k]).abs() < 1e-8,
+                "slot {i} x[{k}]: {} vs {}",
+                outs[0][i * 7 + k],
+                s.x[k]
+            );
+        }
+        // covariance within fp tolerance of the Joseph form
+        for k in 0..49 {
+            let (r, c) = (k / 7, k % 7);
+            assert!(
+                (outs[1][i * 49 + k] - s.p[(r, c)]).abs() < 1e-7,
+                "slot {i} P[{r}][{c}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_bank_tracker_matches_native_sort_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    let params = SortParams { timing: false, ..Default::default() };
+    let mut bank = XlaSortBank::new(&rt, params).unwrap();
+    let mut native = Sort::new(params);
+
+    // synthetic sequence bounded to the bank capacity
+    let synth = generate_sequence(&SynthConfig::mot15("XLAE2E", 120, 8, 23));
+    for frame in &synth.sequence.frames {
+        let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+        let mut a: Vec<_> = native.update(&boxes).to_vec();
+        let mut b: Vec<_> = bank.update(&boxes).unwrap().to_vec();
+        a.sort_by_key(|t| t.id);
+        b.sort_by_key(|t| t.id);
+        assert_eq!(
+            a.iter().map(|t| t.id).collect::<Vec<_>>(),
+            b.iter().map(|t| t.id).collect::<Vec<_>>(),
+            "frame {}: ids diverge",
+            frame.index
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x.bbox.x1 - y.bbox.x1).abs() < 1e-6, "frame {}", frame.index);
+            assert!((x.bbox.y1 - y.bbox.y1).abs() < 1e-6, "frame {}", frame.index);
+            assert!((x.bbox.x2 - y.bbox.x2).abs() < 1e-6, "frame {}", frame.index);
+            assert!((x.bbox.y2 - y.bbox.y2).abs() < 1e-6, "frame {}", frame.index);
+        }
+    }
+    assert_eq!(bank.overflow_dets, 0);
+}
+
+#[test]
+fn predict_sweep_artifacts_all_load_and_run() {
+    let Some(rt) = runtime() else { return };
+    for t in [1usize, 4, 16, 64, 256] {
+        let art = rt.load(&format!("bank_predict_T{t}")).unwrap();
+        let x = vec![1.0; t * 7];
+        let p = vec![0.5; t * 49];
+        let mask = vec![1.0; t];
+        let outs = art.run(&[&x, &p, &mask]).unwrap();
+        assert_eq!(outs[0].len(), t * 7);
+        assert_eq!(outs[1].len(), t * 49);
+        assert!(outs[0].iter().all(|v| v.is_finite()));
+    }
+}
