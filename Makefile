@@ -1,0 +1,24 @@
+# Build-time helpers. The Rust crate itself needs only `cargo build`.
+
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: artifacts test bench fmt clippy
+
+# Lower the JAX/Pallas tracker-bank graphs to HLO text + export the
+# golden parity/track JSONs and the manifest (requires python with jax;
+# see python/compile/aot.py). Without this, the Rust side runs the
+# built-in reference interpreter and the checked-in golden JSONs.
+artifacts:
+	cd python && python -m compile.aot --outdir ../$(ARTIFACTS_DIR)
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings

@@ -21,7 +21,7 @@ use smalltrack::coordinator::policy::run_sequence_serial;
 use smalltrack::coordinator::{serve, Pacing, ServerConfig, VideoStream};
 use smalltrack::data::mot::write_det_file;
 use smalltrack::data::synth::{generate_suite, MOT15_PROPERTIES};
-use smalltrack::runtime::{artifacts_available, XlaRuntime, XlaSortBank};
+use smalltrack::engine::{EngineKind, TrackerEngine};
 use smalltrack::sort::{Bbox, SortParams};
 use std::time::Instant;
 
@@ -66,34 +66,30 @@ fn main() -> anyhow::Result<()> {
         total_frames as f64 / total_secs
     );
 
-    // --- 3. XLA bank cross-check (three-layer composition)
-    if artifacts_available() {
-        println!("=== XLA tracker-bank cross-check (PETS09-S2L1, first 200 frames) ===");
-        let rt = XlaRuntime::new()?;
-        let mut bank = XlaSortBank::new(&rt, params)?;
-        let mut native = smalltrack::sort::Sort::new(params);
-        let mut agree = true;
-        let mut boxes: Vec<Bbox> = Vec::new();
-        for frame in suite[0].sequence.frames.iter().take(200) {
-            boxes.clear();
-            boxes.extend(frame.detections.iter().map(|d| d.bbox));
-            let mut a: Vec<u64> = native.update(&boxes).iter().map(|t| t.id).collect();
-            let mut b: Vec<u64> = bank.update(&boxes)?.iter().map(|t| t.id).collect();
-            a.sort_unstable();
-            b.sort_unstable();
-            if a != b {
-                agree = false;
-                println!("  frame {}: native {a:?} vs xla {b:?}", frame.index);
-            }
+    // --- 3. tracker-bank cross-check (three-layer composition) —
+    // engines injected through the trait, as the coordinator does
+    println!("=== tracker-bank cross-check (PETS09-S2L1, first 200 frames) ===");
+    let mut bank = EngineKind::Xla.build(params)?;
+    let mut native = EngineKind::Native.build(params)?;
+    let mut agree = true;
+    let mut boxes: Vec<Bbox> = Vec::new();
+    for frame in suite[0].sequence.frames.iter().take(200) {
+        boxes.clear();
+        boxes.extend(frame.detections.iter().map(|d| d.bbox));
+        let mut a: Vec<u64> = native.update(&boxes).iter().map(|t| t.id).collect();
+        let mut b: Vec<u64> = bank.update(&boxes).iter().map(|t| t.id).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        if a != b {
+            agree = false;
+            println!("  frame {}: native {a:?} vs xla {b:?}", frame.index);
         }
-        println!(
-            "  native and AOT-compiled JAX/Pallas paths {} over 200 frames\n",
-            if agree { "AGREE" } else { "DISAGREE" }
-        );
-        assert!(agree, "three-layer composition broken");
-    } else {
-        println!("!!! artifacts missing — run `make artifacts` for the XLA cross-check\n");
     }
+    println!(
+        "  native and tracker-bank paths {} over 200 frames\n",
+        if agree { "AGREE" } else { "DISAGREE" }
+    );
+    assert!(agree, "three-layer composition broken");
 
     // --- 4. online serving
     println!("=== Online serving: 11 streams @ 30fps, 2 workers ===");

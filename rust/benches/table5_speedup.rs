@@ -1,5 +1,6 @@
 //! E5 — the paper's Table V: native (Rust, here; C in the paper) vs the
-//! original-style Python implementation, same det.txt inputs.
+//! original-style Python implementation, same det.txt inputs — plus the
+//! other [`TrackerEngine`] backends through the same generic loop.
 //!
 //! The Python baseline (`python/baseline/sort_python.py`, a faithful
 //! abewley/sort port on numpy+scipy) runs as a subprocess — off the
@@ -7,25 +8,37 @@
 //! Expected shape: 40–100× (paper: 45× on SKX-6140, 106.8× on CLX-8280).
 
 use smalltrack::benchkit::Table;
-use smalltrack::coordinator::policy::run_sequence_serial;
 use smalltrack::data::mot::write_det_file;
-use smalltrack::data::synth::generate_suite;
+use smalltrack::data::synth::{generate_suite, SynthSequence};
+use smalltrack::engine::{run_sequence, EngineKind, TrackerEngine};
 use smalltrack::sort::SortParams;
 use std::time::Instant;
 
-fn main() {
-    let suite = generate_suite(7);
-
-    // --- rust native, single core (best of 3)
-    let params = SortParams { timing: false, ..Default::default() };
-    let mut rust_secs = f64::INFINITY;
+/// Best-of-3 wall time for one engine over the whole suite, through
+/// the trait — every backend is measured by the identical loop.
+fn suite_secs(kind: EngineKind, suite: &[SynthSequence], params: SortParams) -> f64 {
+    let mut engine = kind.build(params).expect("build engine");
+    let mut best = f64::INFINITY;
     for _ in 0..3 {
         let t0 = Instant::now();
-        for s in &suite {
-            run_sequence_serial(s, params);
+        for s in suite {
+            engine.reset();
+            run_sequence(&mut *engine, &s.sequence);
         }
-        rust_secs = rust_secs.min(t0.elapsed().as_secs_f64());
+        best = best.min(t0.elapsed().as_secs_f64());
     }
+    best
+}
+
+fn main() {
+    let suite = generate_suite(7);
+    let params = SortParams { timing: false, ..Default::default() };
+    let frames = 5500.0;
+
+    // --- every engine, same generic loop
+    let rust_secs = suite_secs(EngineKind::Native, &suite, params);
+    let strong_secs = suite_secs(EngineKind::Strong { threads: 2 }, &suite, params);
+    let xla_secs = suite_secs(EngineKind::Xla, &suite, params);
 
     // --- python baseline on the same data
     let dir = std::env::temp_dir().join("smalltrack_table5");
@@ -57,28 +70,34 @@ fn main() {
         std::process::exit(1);
     };
 
-    let frames = 5500.0;
     let speedup = py_secs / rust_secs;
     let mut table = Table::new(
         "Table V — speedup w.r.t. the original implementation (5500 frames)",
-        &["Machine", "native (ours)", "Python (orig.)", "Speedup"],
+        &["Engine / machine", "time", "fps", "speedup vs python"],
     );
+    for (label, secs) in [
+        ("native (ours, 1 core)", rust_secs),
+        ("strong (2 threads)", strong_secs),
+        ("xla bank", xla_secs),
+        ("python (orig.)", py_secs),
+    ] {
+        table.row(&[
+            label.into(),
+            format!("{secs:.3}s"),
+            format!("{:.0}", frames / secs),
+            format!("{:.1}x", py_secs / secs),
+        ]);
+    }
     table.row(&[
-        "this testbed (1 core)".into(),
-        format!("{rust_secs:.3}s ({:.0} fps)", frames / rust_secs),
-        format!("{py_secs:.3}s ({:.0} fps)", frames / py_secs),
-        format!("{speedup:.1}x"),
-    ]);
-    table.row(&[
-        "paper: Xeon 6140".into(),
-        "0.12s (C)".into(),
-        "5.4s".into(),
+        "paper: Xeon 6140 (C)".into(),
+        "0.12s".into(),
+        format!("{:.0}", frames / 0.12),
         "45x".into(),
     ]);
     table.row(&[
-        "paper: Xeon 8280".into(),
-        "0.074s (C)".into(),
-        "7.9s".into(),
+        "paper: Xeon 8280 (C)".into(),
+        "0.074s".into(),
+        format!("{:.0}", frames / 0.074),
         "106.8x".into(),
     ]);
     table.print();

@@ -1,33 +1,78 @@
 //! E8 (ours) — the paper's "tiny matrices" thesis, measured on an
-//! accelerator-shaped stack: per-step latency of the native Rust
-//! Kalman bank vs the AOT-compiled XLA bank at growing bank sizes.
+//! accelerator-shaped stack, end to end *and* per kernel step.
 //!
-//! Expectation: at T=1 the native path wins by orders of magnitude
-//! (kernel-dispatch overhead dominates, the multicore analog of the
-//! paper's strong-scaling result); the XLA path amortizes as T grows —
-//! batching across independent trackers/streams is the accelerator
-//! analog of throughput scaling.
+//! Part A compares full tracker engines through the [`TrackerEngine`]
+//! trait — the same code path the coordinator serves — on a shared
+//! synthetic sequence: `native` vs `strong` vs `xla`. This runs
+//! everywhere (the bank falls back to the reference interpreter when
+//! `make artifacts` has not produced the compiled kernels).
 //!
-//! Requires `make artifacts`; exits 0 with a notice if missing.
+//! Part B is the per-step bank sweep: batched Kalman predict at growing
+//! bank sizes T, native loop vs one bank-kernel dispatch. Expectation:
+//! at T=1 the native path wins by orders of magnitude (kernel-dispatch
+//! overhead dominates — the accelerator analog of the paper's
+//! strong-scaling result); the bank amortizes as T grows, which is the
+//! accelerator analog of throughput scaling.
 
 use smalltrack::benchkit::{bench, fmt_duration, BenchConfig, Table};
+use smalltrack::data::synth::{generate_sequence, SynthConfig};
+use smalltrack::engine::{run_sequence, EngineKind, TrackerEngine};
 use smalltrack::runtime::{artifacts_available, XlaRuntime};
 use smalltrack::sort::kalman::{KalmanState, SortConstants};
+use smalltrack::sort::SortParams;
 
 fn main() {
-    if !artifacts_available() {
-        println!("artifacts missing — run `make artifacts` first; skipping");
-        return;
-    }
-    let rt = XlaRuntime::new().expect("PJRT client");
-    let consts = SortConstants::sort_defaults();
-    let cfg = BenchConfig::default();
+    let cfg = BenchConfig::quick();
+    let params = SortParams { timing: false, ..Default::default() };
+    let rt = XlaRuntime::new().expect("kernel runtime");
 
+    // --- Part A: whole engines through the trait, one shared workload
+    let synth = generate_sequence(&SynthConfig::mot15("E8-e2e", 300, 8, 21));
+    let frames = synth.sequence.n_frames() as u64;
     let mut table = Table::new(
-        "E8 — batched Kalman predict: native loop vs AOT/XLA bank",
-        &["bank T", "native/step", "xla/step", "native/tracker", "xla/tracker", "xla win?"],
+        &format!(
+            "E8a — end-to-end engines on one 300-frame stream (xla backend: {})",
+            rt.platform()
+        ),
+        &["engine", "time/stream", "us/frame", "fps", "tracks"],
     );
+    let mut baseline_tracks = None;
+    for kind in EngineKind::all(2) {
+        let mut engine = kind.build(params).expect("build engine");
+        let mut tracks = 0u64;
+        let m = bench(kind.label(), &cfg, frames, || {
+            engine.reset();
+            tracks = run_sequence(&mut *engine, &synth.sequence).1;
+        });
+        // engines must agree on output — the comparison is meaningless
+        // otherwise
+        match baseline_tracks {
+            None => baseline_tracks = Some(tracks),
+            Some(want) => assert_eq!(tracks, want, "engine {} diverged", kind.label()),
+        }
+        table.row(&[
+            kind.label().to_string(),
+            fmt_duration(m.median()),
+            format!("{:.2}", m.median() * 1e6 / frames as f64),
+            format!("{:.0}", m.rate()),
+            format!("{tracks}"),
+        ]);
+    }
+    table.print();
+    println!("\ndispatch asymmetry at bank size ~8 IS the paper's thesis: per-item");
+    println!("work this small cannot amortize a kernel (or thread) launch.");
 
+    // --- Part B: per-step bank sweep (needs the AOT kernel geometry
+    // for the larger bank sizes; built-in geometry covers the rest)
+    if !artifacts_available() {
+        println!("\n(artifacts missing — run `make artifacts` for the compiled-kernel");
+        println!(" sweep; E8b below uses the reference interpreter geometry)");
+    }
+    let consts = SortConstants::sort_defaults();
+    let mut sweep = Table::new(
+        "E8b — batched Kalman predict: native loop vs bank kernel",
+        &["bank T", "native/step", "bank/step", "native/tracker", "bank/tracker", "bank cost"],
+    );
     for t in [1usize, 4, 16, 64, 256] {
         // native: T sequential KalmanState::predict calls
         let mut states: Vec<KalmanState> = (0..t)
@@ -48,18 +93,19 @@ fn main() {
             }
         });
 
-        // xla: one bank_predict_T{t} execution
+        // bank: one bank_predict_T{t} dispatch, outputs reused
         let art = rt.load(&format!("bank_predict_T{t}")).expect("artifact");
         let x = vec![1.0; t * 7];
         let p = vec![0.5; t * 49];
         let mask = vec![1.0; t];
-        let xla = bench(&format!("xla T={t}"), &cfg, t as u64, || {
-            art.run(&[&x, &p, &mask]).expect("run")
+        let mut outs = Vec::new();
+        let bank_m = bench(&format!("bank T={t}"), &cfg, t as u64, || {
+            art.run_into(&[&x, &p, &mask], &mut outs).expect("run")
         });
 
         let n_step = native.median();
-        let x_step = xla.median();
-        table.row(&[
+        let x_step = bank_m.median();
+        sweep.row(&[
             format!("{t}"),
             fmt_duration(n_step),
             fmt_duration(x_step),
@@ -68,7 +114,7 @@ fn main() {
             format!("{:.1}x native", x_step / n_step),
         ]);
     }
-    table.print();
+    sweep.print();
 
     println!("\nthe ratio shrinking with T is the paper's argument transposed to an");
     println!("accelerator: tiny per-item work cannot amortize dispatch — batch the");

@@ -6,10 +6,15 @@
 //! streams. This module makes that a deployable runtime rather than an
 //! experiment script:
 //!
+//! Tracker backends are never named here: every runner and the serving
+//! loop program against [`crate::engine::TrackerEngine`], selected via
+//! [`crate::engine::EngineKind`].
+//!
 //! * [`pool`] — worker pool + fork-join parallel-for (the OpenMP analog)
 //! * [`policy`] — strong / weak / throughput scaling as scheduler modes
-//!   (Table VI / Fig 4 runners)
-//! * [`strong`] — the intra-frame-parallel SORT variant
+//!   (Table VI / Fig 4 runners), generic over the engine
+//! * [`strong`] — the intra-frame-parallel SORT variant (the `strong`
+//!   engine backend)
 //! * [`stream`] — online frame-arrival simulation over stored sequences
 //! * [`router`] — stream→worker pinning (sequential Kalman chains never
 //!   split across workers)
@@ -28,7 +33,7 @@ pub mod strong;
 
 pub use backpressure::{BoundedQueue, PushPolicy};
 pub use metrics::{FpsCounter, LatencyHistogram};
-pub use policy::{run_policy, ScalingOutcome, ScalingPolicy};
+pub use policy::{run_policy, run_policy_with_engine, ScalingOutcome, ScalingPolicy};
 pub use pool::WorkerPool;
 pub use router::{RoutePolicy, Router};
 pub use server::{serve, ServerConfig, ServerReport};

@@ -1,8 +1,9 @@
 //! The three scaling policies of the paper's §VI, as first-class
-//! scheduler modes.
+//! scheduler modes — generic over the tracker backend.
 //!
 //! * **Strong** — one video, frames processed in order, per-frame work
-//!   split across `p` threads ([`super::strong::ParallelSort`]).
+//!   split across `p` threads (the [`crate::engine::EngineKind::Strong`]
+//!   backend).
 //! * **Weak** — `p` worker threads pull whole sequences from a shared
 //!   queue ("1 core per video file"); threads share the process (and
 //!   thus allocator, cache, etc.), like the paper's OpenMP sections.
@@ -12,13 +13,20 @@
 //!   the `smalltrack scaling --processes` CLI path runs real child
 //!   processes for the faithful variant).
 //!
+//! This layer never constructs a concrete tracker: every runner takes
+//! an [`EngineKind`] and builds engines through the
+//! [`crate::engine::TrackerEngine`] trait, so any backend — native,
+//! strong-scaled, XLA bank, or a future one — slots into any schedule.
+//! Workers build one engine each and [`TrackerEngine::reset`] it
+//! between sequences (warm scratch buffers are reused).
+//!
 //! All runners report frames-per-second of wall time — the Table VI
 //! metric.
 
 use super::pool::WorkerPool;
-use super::strong::ParallelSort;
 use crate::data::synth::SynthSequence;
-use crate::sort::{Bbox, Sort, SortParams};
+use crate::engine::{run_sequence, EngineKind, TrackerEngine};
+use crate::sort::SortParams;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -41,6 +49,16 @@ impl ScalingPolicy {
             ScalingPolicy::Strong { threads } => format!("strong(p={threads})"),
             ScalingPolicy::Weak { workers } => format!("weak(p={workers})"),
             ScalingPolicy::Throughput { workers } => format!("throughput(p={workers})"),
+        }
+    }
+
+    /// The engine each schedule runs by default: strong scaling means
+    /// the intra-frame-parallel backend; the stream-parallel schedules
+    /// run the native engine per worker.
+    pub fn default_engine(&self) -> EngineKind {
+        match self {
+            ScalingPolicy::Strong { threads } => EngineKind::Strong { threads: *threads },
+            ScalingPolicy::Weak { .. } | ScalingPolicy::Throughput { .. } => EngineKind::Native,
         }
     }
 }
@@ -72,35 +90,37 @@ impl ScalingOutcome {
     }
 }
 
-fn frame_boxes(frames: &crate::data::mot::FrameDets, buf: &mut Vec<Bbox>) {
-    buf.clear();
-    buf.extend(frames.detections.iter().map(|d| d.bbox));
-}
-
-/// Track one full sequence serially; returns (frames, tracks_out).
+/// Track one full sequence serially on the native engine; returns
+/// (frames, tracks_out). Calibration and bench anchor.
 pub fn run_sequence_serial(seq: &SynthSequence, params: SortParams) -> (u64, u64) {
-    let mut sort = Sort::new(params);
-    let mut boxes = Vec::with_capacity(16);
-    let mut tracks_out = 0u64;
-    for frame in &seq.sequence.frames {
-        frame_boxes(frame, &mut boxes);
-        tracks_out += sort.update(&boxes).len() as u64;
-    }
-    (seq.sequence.n_frames() as u64, tracks_out)
+    let mut engine = EngineKind::Native.build(params).expect("build native engine");
+    run_sequence(&mut *engine, &seq.sequence)
 }
 
-/// Run a suite under a policy; wall-clock measured over the whole batch.
+/// Run a suite under a policy with that policy's default engine.
 pub fn run_policy(
     suite: &[SynthSequence],
     policy: ScalingPolicy,
     params: SortParams,
 ) -> ScalingOutcome {
+    run_policy_with_engine(suite, policy, policy.default_engine(), params)
+}
+
+/// Run a suite under a policy with an explicit engine backend; wall
+/// clock is measured over the whole batch. Any engine composes with
+/// any schedule (e.g. `Weak` workers each driving an XLA bank).
+pub fn run_policy_with_engine(
+    suite: &[SynthSequence],
+    policy: ScalingPolicy,
+    engine: EngineKind,
+    params: SortParams,
+) -> ScalingOutcome {
     let total_frames: u64 = suite.iter().map(|s| s.sequence.n_frames() as u64).sum();
     let t0 = Instant::now();
     let tracks_out = match policy {
-        ScalingPolicy::Strong { threads } => run_strong(suite, threads, params),
-        ScalingPolicy::Weak { workers } => run_weak(suite, workers, params),
-        ScalingPolicy::Throughput { workers } => run_throughput(suite, workers, params),
+        ScalingPolicy::Strong { .. } => run_sequential(suite, engine, params),
+        ScalingPolicy::Weak { workers } => run_weak(suite, workers, engine, params),
+        ScalingPolicy::Throughput { workers } => run_throughput(suite, workers, engine, params),
     };
     ScalingOutcome {
         policy,
@@ -112,22 +132,25 @@ pub fn run_policy(
 }
 
 /// Strong scaling: sequences processed one after another (the frame
-/// chain is sequential); inside each frame, `threads`-way parallelism.
-fn run_strong(suite: &[SynthSequence], threads: usize, params: SortParams) -> u64 {
+/// chain is sequential); parallelism, if any, lives inside the engine.
+fn run_sequential(suite: &[SynthSequence], kind: EngineKind, params: SortParams) -> u64 {
+    let mut engine = kind.build(params).expect("build tracker engine");
     let mut tracks_out = 0u64;
-    let mut boxes = Vec::with_capacity(16);
     for seq in suite {
-        let mut sort = ParallelSort::new(params, threads);
-        for frame in &seq.sequence.frames {
-            frame_boxes(frame, &mut boxes);
-            tracks_out += sort.update(&boxes).len() as u64;
-        }
+        engine.reset();
+        tracks_out += run_sequence(&mut *engine, &seq.sequence).1;
     }
     tracks_out
 }
 
-/// Weak scaling: shared work queue of sequences, `workers` threads.
-fn run_weak(suite: &[SynthSequence], workers: usize, params: SortParams) -> u64 {
+/// Weak scaling: shared work queue of sequences, `workers` threads,
+/// one engine per worker (reset between sequences).
+fn run_weak(
+    suite: &[SynthSequence],
+    workers: usize,
+    kind: EngineKind,
+    params: SortParams,
+) -> u64 {
     let pool = WorkerPool::new(workers);
     let tracks_out = Arc::new(AtomicU64::new(0));
     // hand out borrowed sequences via an index queue (suite outlives the
@@ -138,13 +161,19 @@ fn run_weak(suite: &[SynthSequence], workers: usize, params: SortParams) -> u64 
         let next = Arc::clone(&next);
         let suite = Arc::clone(&suite_arc);
         let tracks_out = Arc::clone(&tracks_out);
-        pool.submit(move || loop {
-            let i = next.fetch_add(1, Ordering::Relaxed) as usize;
-            if i >= suite.len() {
-                break;
+        pool.submit(move || {
+            let mut engine: Option<Box<dyn TrackerEngine>> = None;
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed) as usize;
+                if i >= suite.len() {
+                    break;
+                }
+                let engine =
+                    engine.get_or_insert_with(|| kind.build(params).expect("build engine"));
+                engine.reset();
+                let (_f, t) = run_sequence(&mut **engine, &suite[i].sequence);
+                tracks_out.fetch_add(t, Ordering::Relaxed);
             }
-            let (_f, t) = run_sequence_serial(&suite[i], params);
-            tracks_out.fetch_add(t, Ordering::Relaxed);
         });
     }
     pool.wait_idle();
@@ -152,18 +181,27 @@ fn run_weak(suite: &[SynthSequence], workers: usize, params: SortParams) -> u64 
 }
 
 /// Throughput scaling: static partition, fully isolated workers.
-fn run_throughput(suite: &[SynthSequence], workers: usize, params: SortParams) -> u64 {
+fn run_throughput(
+    suite: &[SynthSequence],
+    workers: usize,
+    kind: EngineKind,
+    params: SortParams,
+) -> u64 {
     let tracks_out = AtomicU64::new(0);
     std::thread::scope(|s| {
         for w in 0..workers {
             let tracks_out = &tracks_out;
             let my_files: Vec<&SynthSequence> =
                 suite.iter().enumerate().filter(|(i, _)| i % workers == w).map(|(_, q)| q).collect();
+            if my_files.is_empty() {
+                continue;
+            }
             s.spawn(move || {
+                let mut engine = kind.build(params).expect("build engine");
                 let mut local = 0u64;
                 for seq in my_files {
-                    let (_f, t) = run_sequence_serial(seq, params);
-                    local += t;
+                    engine.reset();
+                    local += run_sequence(&mut *engine, &seq.sequence).1;
                 }
                 tracks_out.fetch_add(local, Ordering::Relaxed);
             });
@@ -235,6 +273,34 @@ mod tests {
         .collect();
         assert!(outcomes_consistent(&outcomes), "{outcomes:?}");
         assert!(outcomes[0].tracks_out > 0);
+    }
+
+    #[test]
+    fn every_engine_composes_with_every_schedule() {
+        let suite = mini_suite();
+        let params = SortParams { timing: false, ..Default::default() };
+        let baseline = run_policy_with_engine(
+            &suite,
+            ScalingPolicy::Weak { workers: 1 },
+            EngineKind::Native,
+            params,
+        );
+        for kind in EngineKind::all(2) {
+            for policy in [
+                ScalingPolicy::Strong { threads: 2 },
+                ScalingPolicy::Weak { workers: 2 },
+                ScalingPolicy::Throughput { workers: 2 },
+            ] {
+                let o = run_policy_with_engine(&suite, policy, kind, params);
+                assert_eq!(o.frames, baseline.frames, "{policy:?} x {}", kind.label());
+                assert_eq!(
+                    o.tracks_out,
+                    baseline.tracks_out,
+                    "engine {} under {policy:?} diverged",
+                    kind.label()
+                );
+            }
+        }
     }
 
     #[test]

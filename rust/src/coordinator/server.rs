@@ -4,21 +4,24 @@
 //!
 //! ```text
 //!  streams ──► dispatcher ──► router ──► per-worker BoundedQueue ──► worker
-//!  (paced)     (arrival        (pin          (backpressure:          (owns the
-//!              simulation)      stream)       DropOldest)             Sort state
-//!                                                                     of its streams)
+//!  (paced)     (arrival        (pin          (backpressure:          (owns one
+//!              simulation)      stream)       DropOldest)             TrackerEngine
+//!                                                                     per stream)
 //! ```
 //!
 //! Frames of one stream always land on one worker in order (the Kalman
 //! chain is sequential); workers never share tracker state — the weak-
 //! scaling lesson of the paper baked into the serving architecture.
+//! The tracker backend is injected via [`ServerConfig::engine`]; the
+//! serving loop knows only the [`TrackerEngine`] trait.
 //! Metrics: arrival→completion latency percentiles, FPS, drops.
 
 use super::backpressure::{BoundedQueue, PushPolicy};
 use super::metrics::{FpsCounter, LatencyHistogram};
 use super::router::{RoutePolicy, Router};
 use super::stream::{FrameJob, VideoStream};
-use crate::sort::{Sort, SortParams};
+use crate::engine::{EngineKind, TrackerEngine};
+use crate::sort::SortParams;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread;
@@ -35,6 +38,9 @@ pub struct ServerConfig {
     pub push_policy: PushPolicy,
     /// Stream pinning policy.
     pub route_policy: RoutePolicy,
+    /// Tracker backend; workers build one engine per pinned stream
+    /// through the [`TrackerEngine`] trait (never a concrete type).
+    pub engine: EngineKind,
     /// Tracker parameters.
     pub sort_params: SortParams,
 }
@@ -46,6 +52,7 @@ impl Default for ServerConfig {
             queue_capacity: 64,
             push_policy: PushPolicy::DropOldest,
             route_policy: RoutePolicy::LeastLoaded,
+            engine: EngineKind::Native,
             sort_params: SortParams { timing: false, ..Default::default() },
         }
     }
@@ -95,16 +102,19 @@ pub fn serve(streams: Vec<VideoStream>, cfg: ServerConfig) -> ServerReport {
     for w in 0..cfg.workers {
         let q = Arc::clone(&queues[w]);
         let params = cfg.sort_params;
+        let kind = cfg.engine;
         worker_handles.push(thread::spawn(move || {
-            let mut trackers: HashMap<usize, Sort> = HashMap::new();
+            let mut trackers: HashMap<usize, Box<dyn TrackerEngine>> = HashMap::new();
             let mut latency = LatencyHistogram::new();
             let mut fps = FpsCounter::default();
             let mut frames_done = 0u64;
             let mut tracks_out = 0u64;
             while let Some(job) = q.pop() {
                 let f0 = Instant::now();
-                let sort = trackers.entry(job.stream_id).or_insert_with(|| Sort::new(params));
-                tracks_out += sort.update(&job.boxes).len() as u64;
+                let engine = trackers
+                    .entry(job.stream_id)
+                    .or_insert_with(|| kind.build(params).expect("build tracker engine"));
+                tracks_out += engine.update(&job.boxes).len() as u64;
                 if job.last {
                     trackers.remove(&job.stream_id);
                 }
@@ -230,6 +240,30 @@ mod tests {
         );
         assert_eq!(report.dropped, 0);
         assert_eq!(report.tracks_out, offline_tracks);
+    }
+
+    #[test]
+    fn any_engine_serves_with_identical_output() {
+        // the server must be engine-agnostic: every backend produces
+        // the same track count as the offline native run
+        use crate::coordinator::policy::run_sequence_serial;
+        let params = SortParams { timing: false, ..Default::default() };
+        let synth = generate_sequence(&SynthConfig::mot15("EJ", 60, 6, 13));
+        let (_, offline_tracks) = run_sequence_serial(&synth, params);
+        for kind in crate::engine::EngineKind::all(2) {
+            let stream = VideoStream::new(0, synth.sequence.clone(), Pacing::Unpaced);
+            let report = serve(
+                vec![stream],
+                ServerConfig {
+                    engine: kind,
+                    push_policy: PushPolicy::Block,
+                    sort_params: params,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(report.dropped, 0, "{}", kind.label());
+            assert_eq!(report.tracks_out, offline_tracks, "engine {}", kind.label());
+        }
     }
 
     #[test]

@@ -5,6 +5,10 @@
 //! sequence into a timed frame source for the stream server; pacing at
 //! e.g. 30 fps simulates camera input, `Pacing::Unpaced` replays as
 //! fast as the system can drain (the offline-benchmark mode).
+//!
+//! Streams carry raw detections only — they are engine-agnostic by
+//! construction; the worker that a stream is pinned to owns the
+//! [`crate::engine::TrackerEngine`] consuming its frames.
 
 use crate::data::mot::Sequence;
 use crate::sort::Bbox;

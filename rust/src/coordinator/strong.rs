@@ -53,6 +53,16 @@ impl ParallelSort {
         self.trackers.len()
     }
 
+    /// Drop all tracker state but keep scratch buffers (stream reuse);
+    /// mirrors [`crate::sort::Sort::reset`].
+    pub fn reset(&mut self) {
+        self.trackers.clear();
+        self.predicted.clear();
+        self.frame_count = 0;
+        self.next_id = 0;
+        self.out.clear();
+    }
+
     /// Process one frame (parallel phases; same semantics as `Sort`).
     pub fn update(&mut self, dets: &[Bbox]) -> &[Track] {
         self.frame_count += 1;
@@ -186,6 +196,27 @@ mod tests {
         let mut p = ParallelSort::new(SortParams::default(), 4);
         assert!(p.update(&[]).is_empty());
         assert_eq!(p.n_trackers(), 0);
+    }
+
+    #[test]
+    fn reset_matches_fresh_pipeline() {
+        let synth = generate_sequence(&SynthConfig::mot15("RS", 50, 6, 8));
+        let mut reused = ParallelSort::new(SortParams::default(), 2);
+        let mut boxes: Vec<Bbox> = Vec::new();
+        let run = |p: &mut ParallelSort, boxes: &mut Vec<Bbox>| {
+            let mut total = 0u64;
+            for frame in &synth.sequence.frames {
+                boxes.clear();
+                boxes.extend(frame.detections.iter().map(|d| d.bbox));
+                total += p.update(boxes).len() as u64;
+            }
+            total
+        };
+        let first = run(&mut reused, &mut boxes);
+        reused.reset();
+        assert_eq!(reused.n_trackers(), 0);
+        let second = run(&mut reused, &mut boxes);
+        assert_eq!(first, second, "reset must reproduce a fresh run");
     }
 
     #[test]

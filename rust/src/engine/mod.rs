@@ -1,0 +1,276 @@
+//! `TrackerEngine` — the one abstraction every tracker backend sits
+//! behind.
+//!
+//! The repo grew three tracker implementations with identical semantics
+//! but different execution strategies:
+//!
+//! * [`Sort`] (`native`) — the single-core structure-aware pipeline,
+//!   the paper's "well-optimized serial C" analog;
+//! * [`ParallelSort`] (`strong`) — intra-frame fork-join parallelism,
+//!   the paper's (losing) OpenMP strong-scaling port;
+//! * [`TrackerBank`] (`xla`) — fixed-slot state arrays with the dense
+//!   algebra dispatched to the AOT-compiled JAX/Pallas kernels (or the
+//!   built-in reference interpreter when the PJRT backend is absent).
+//!
+//! The coordinator, CLI, benches and tests program against this trait
+//! only; backends are chosen by [`EngineKind`] and injected, never
+//! constructed inline. Adding a backend (batched SoA bank, GPU,
+//! simulator-driven) means implementing four methods and one enum arm.
+//!
+//! Equivalence between all three engines on shared inputs is pinned by
+//! `rust/tests/integration_engines.rs`.
+
+use crate::coordinator::strong::ParallelSort;
+use crate::runtime::{TrackerBank, XlaRuntime};
+use crate::sort::{Bbox, PhaseTimer, Sort, SortParams, Track};
+
+/// A multi-object tracker backend for one video stream.
+///
+/// Implementations own all per-stream state (filter states, lifecycle
+/// counters, scratch buffers). `update` must be called once per frame,
+/// in order, with an empty slice when the frame has no detections.
+pub trait TrackerEngine: Send {
+    /// Process one frame of detections; returns the confirmed tracks,
+    /// valid until the next call.
+    fn update(&mut self, dets: &[Bbox]) -> &[Track];
+
+    /// Number of live trackers (confirmed or tentative).
+    fn n_trackers(&self) -> usize;
+
+    /// Per-phase timing instrumentation, when the backend collects it.
+    fn phases(&self) -> Option<&PhaseTimer>;
+
+    /// Drop all tracker state (ids restart) but keep warm scratch
+    /// buffers, so a worker can reuse one engine across streams.
+    fn reset(&mut self);
+
+    /// Stable backend name (`native` | `strong` | `xla`).
+    fn name(&self) -> &'static str;
+}
+
+impl TrackerEngine for Sort {
+    fn update(&mut self, dets: &[Bbox]) -> &[Track] {
+        Sort::update(self, dets)
+    }
+
+    fn n_trackers(&self) -> usize {
+        Sort::n_trackers(self)
+    }
+
+    fn phases(&self) -> Option<&PhaseTimer> {
+        Some(&self.phases)
+    }
+
+    fn reset(&mut self) {
+        Sort::reset(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+impl TrackerEngine for ParallelSort {
+    fn update(&mut self, dets: &[Bbox]) -> &[Track] {
+        ParallelSort::update(self, dets)
+    }
+
+    fn n_trackers(&self) -> usize {
+        ParallelSort::n_trackers(self)
+    }
+
+    fn phases(&self) -> Option<&PhaseTimer> {
+        None
+    }
+
+    fn reset(&mut self) {
+        ParallelSort::reset(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "strong"
+    }
+}
+
+impl TrackerEngine for TrackerBank {
+    fn update(&mut self, dets: &[Bbox]) -> &[Track] {
+        // The reference interpreter cannot fail on well-formed geometry;
+        // a real PJRT execution error here means the artifacts and the
+        // bank disagree on shapes, which is unrecoverable state
+        // corruption — surface it loudly.
+        TrackerBank::update(self, dets).expect("tracker-bank kernel dispatch failed")
+    }
+
+    fn n_trackers(&self) -> usize {
+        TrackerBank::n_trackers(self)
+    }
+
+    fn phases(&self) -> Option<&PhaseTimer> {
+        None
+    }
+
+    fn reset(&mut self) {
+        TrackerBank::reset(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Which backend to build — the injectable engine selector.
+///
+/// `Copy` so it can cross thread boundaries freely (worker threads build
+/// their own engine instances; engines themselves are never shared).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Single-core structure-aware `Sort`.
+    Native,
+    /// Intra-frame fork-join `ParallelSort` with `threads` threads.
+    Strong {
+        /// Fork-join width per frame.
+        threads: usize,
+    },
+    /// The XLA tracker bank (AOT kernels or reference interpreter).
+    Xla,
+}
+
+impl EngineKind {
+    /// Parse a CLI `--engine` value. `threads` parameterizes the
+    /// `strong` backend (ignored by the others).
+    pub fn parse(name: &str, threads: usize) -> crate::Result<EngineKind> {
+        match name {
+            "native" => Ok(EngineKind::Native),
+            "strong" => Ok(EngineKind::Strong { threads: threads.max(1) }),
+            "xla" => Ok(EngineKind::Xla),
+            other => anyhow::bail!("unknown engine '{other}' (expected native|strong|xla)"),
+        }
+    }
+
+    /// Stable backend name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Strong { .. } => "strong",
+            EngineKind::Xla => "xla",
+        }
+    }
+
+    /// Construct a fresh engine of this kind.
+    ///
+    /// For `Xla` this opens a private [`XlaRuntime`] — cheap with the
+    /// reference interpreter (one manifest stat/parse), but callers
+    /// building many bank engines (or using a compiled PJRT backend,
+    /// where construction means compiling HLO) should share one runtime
+    /// via [`Self::build_with_runtime`].
+    pub fn build(&self, params: SortParams) -> crate::Result<Box<dyn TrackerEngine>> {
+        Ok(match self {
+            EngineKind::Native => Box::new(Sort::new(params)),
+            EngineKind::Strong { threads } => Box::new(ParallelSort::new(params, *threads)),
+            EngineKind::Xla => Box::new(TrackerBank::new(&XlaRuntime::new()?, params)?),
+        })
+    }
+
+    /// [`Self::build`] reusing a caller-owned kernel runtime for the
+    /// `Xla` backend (the other kinds don't need one).
+    pub fn build_with_runtime(
+        &self,
+        rt: &XlaRuntime,
+        params: SortParams,
+    ) -> crate::Result<Box<dyn TrackerEngine>> {
+        match self {
+            EngineKind::Xla => Ok(Box::new(TrackerBank::new(rt, params)?)),
+            other => other.build(params),
+        }
+    }
+
+    /// All three kinds (test/bench sweeps).
+    pub fn all(threads: usize) -> [EngineKind; 3] {
+        [EngineKind::Native, EngineKind::Strong { threads }, EngineKind::Xla]
+    }
+}
+
+/// Track one stored sequence through an engine; returns
+/// `(frames, track_frames)`. The shared runner every scheduler mode and
+/// bench uses, so all backends are measured through the same loop.
+pub fn run_sequence(
+    engine: &mut dyn TrackerEngine,
+    seq: &crate::data::mot::Sequence,
+) -> (u64, u64) {
+    let mut boxes: Vec<Bbox> = Vec::with_capacity(16);
+    let mut tracks_out = 0u64;
+    for frame in &seq.frames {
+        boxes.clear();
+        boxes.extend(frame.detections.iter().map(|d| d.bbox));
+        tracks_out += engine.update(&boxes).len() as u64;
+    }
+    (seq.n_frames() as u64, tracks_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_sequence, SynthConfig};
+
+    fn params() -> SortParams {
+        SortParams { timing: false, ..Default::default() }
+    }
+
+    #[test]
+    fn parse_all_kinds() {
+        assert_eq!(EngineKind::parse("native", 4).unwrap(), EngineKind::Native);
+        assert_eq!(EngineKind::parse("strong", 4).unwrap(), EngineKind::Strong { threads: 4 });
+        assert_eq!(EngineKind::parse("strong", 0).unwrap(), EngineKind::Strong { threads: 1 });
+        assert_eq!(EngineKind::parse("xla", 1).unwrap(), EngineKind::Xla);
+        assert!(EngineKind::parse("gpu", 1).is_err());
+    }
+
+    #[test]
+    fn every_kind_builds_and_tracks() {
+        let synth = generate_sequence(&SynthConfig::mot15("ENG", 40, 5, 3));
+        for kind in EngineKind::all(2) {
+            let mut e = kind.build(params()).expect("build");
+            assert_eq!(e.name(), kind.label());
+            let (frames, tracks) = run_sequence(&mut *e, &synth.sequence);
+            assert_eq!(frames, 40, "{}", kind.label());
+            assert!(tracks > 0, "{} produced no tracks", kind.label());
+            assert!(e.n_trackers() > 0);
+            e.reset();
+            assert_eq!(e.n_trackers(), 0, "{} reset", kind.label());
+        }
+    }
+
+    #[test]
+    fn reset_restarts_ids() {
+        let synth = generate_sequence(&SynthConfig::mot15("RST", 30, 4, 9));
+        for kind in EngineKind::all(2) {
+            let mut e = kind.build(params()).expect("build");
+            let (_, first) = run_sequence(&mut *e, &synth.sequence);
+            e.reset();
+            let (_, second) = run_sequence(&mut *e, &synth.sequence);
+            assert_eq!(first, second, "{}: reset must reproduce the run", kind.label());
+        }
+    }
+
+    #[test]
+    fn shared_runtime_builds_equivalent_bank_engines() {
+        let rt = XlaRuntime::new().expect("runtime");
+        let synth = generate_sequence(&SynthConfig::mot15("SHR", 30, 4, 7));
+        let mut a = EngineKind::Xla.build_with_runtime(&rt, params()).expect("shared");
+        let mut b = EngineKind::Xla.build(params()).expect("private");
+        let ra = run_sequence(&mut *a, &synth.sequence);
+        let rb = run_sequence(&mut *b, &synth.sequence);
+        assert_eq!(ra, rb);
+        // non-bank kinds accept (and ignore) the runtime
+        let mut n = EngineKind::Native.build_with_runtime(&rt, params()).expect("native");
+        assert_eq!(run_sequence(&mut *n, &synth.sequence), ra);
+    }
+
+    #[test]
+    fn native_engine_exposes_phases() {
+        let mut e = EngineKind::Native.build(SortParams::default()).unwrap();
+        e.update(&[Bbox::new(0.0, 0.0, 10.0, 20.0)]);
+        let phases = e.phases().expect("native collects phases");
+        assert_eq!(phases.get(crate::sort::Phase::Predict).count, 1);
+    }
+}

@@ -18,9 +18,14 @@
 //!   Hungarian assignment, IoU association, tracker lifecycle.
 //! * [`data`] — MOT-format I/O plus a synthetic MOT-2015-like dataset
 //!   generator reproducing Table I's properties.
+//! * [`engine`] — the [`engine::TrackerEngine`] trait unifying the
+//!   three tracker backends (`native` [`sort::Sort`], `strong`
+//!   [`coordinator::ParallelSort`], `xla` [`runtime::TrackerBank`]);
+//!   everything downstream programs against it.
 //! * [`coordinator`] — the multi-stream runtime: worker pool, the three
 //!   scaling policies (strong / weak / throughput) as first-class
-//!   scheduler modes, backpressure, metrics.
+//!   scheduler modes, backpressure, metrics. Engines are injected via
+//!   [`engine::EngineKind`], never constructed inline.
 //! * [`simcore`] — a calibrated discrete-event multicore simulator used
 //!   to regenerate the paper's 18/36/72-core tables on this testbed.
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
@@ -49,6 +54,7 @@
 pub mod benchkit;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod linalg;
 pub mod perfmodel;
 pub mod prng;

@@ -70,12 +70,27 @@ impl<const R: usize, const C: usize> Mat<R, C> {
     }
 
     /// Flatten to a row-major `Vec`.
+    ///
+    /// Allocates; hot paths (the tracker-bank marshalling in
+    /// [`crate::runtime`]) use [`Self::write_to`] with a reused buffer
+    /// instead.
     pub fn to_vec(&self) -> Vec<f64> {
         let mut v = Vec::with_capacity(R * C);
         for r in 0..R {
             v.extend_from_slice(&self.data[r]);
         }
         v
+    }
+
+    /// Write the row-major contents into a caller-provided slice of
+    /// length `R*C` — the allocation-free counterpart of
+    /// [`Self::to_vec`] for per-frame marshalling loops.
+    #[inline]
+    pub fn write_to(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), R * C, "write_to: wrong length");
+        for r in 0..R {
+            out[r * C..(r + 1) * C].copy_from_slice(&self.data[r]);
+        }
     }
 
     /// Matrix–matrix product: `(R x C) * (C x K) -> (R x K)`.
@@ -413,5 +428,14 @@ mod tests {
     #[should_panic(expected = "wrong length")]
     fn from_slice_length_checked() {
         let _ = Mat::<2, 2>::from_slice(&[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn write_to_roundtrips_with_from_slice() {
+        let a = Mat::<3, 4>::from_slice(&(0..12).map(|i| i as f64 * 1.5).collect::<Vec<_>>());
+        let mut buf = [0.0; 12];
+        a.write_to(&mut buf);
+        let back = Mat::<3, 4>::from_slice(&buf);
+        assert!(a.max_abs_diff(&back) == 0.0);
     }
 }

@@ -13,13 +13,14 @@
 //! offline build environment has no clap.
 
 use anyhow::{bail, Context, Result};
-use smalltrack::coordinator::policy::{run_policy, ScalingPolicy};
+use smalltrack::coordinator::policy::{run_policy_with_engine, ScalingPolicy};
 use smalltrack::coordinator::{serve, Pacing, ServerConfig, VideoStream};
 use smalltrack::data::mot::{read_det_file, write_det_file, write_track_file};
 use smalltrack::data::synth::{generate_suite, SynthSequence};
 use smalltrack::data::{replicate::replicate_suite, MOT15_PROPERTIES};
+use smalltrack::engine::{EngineKind, TrackerEngine};
 use smalltrack::simcore::{calibrate_workload, simulate, MachineProfile, SimPolicy};
-use smalltrack::sort::{Bbox, Sort, SortParams};
+use smalltrack::sort::{Bbox, SortParams};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::Instant;
@@ -68,6 +69,13 @@ impl Args {
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// `--engine native|strong|xla` (default native); `--threads N`
+    /// parameterizes the strong backend.
+    fn engine(&self) -> Result<EngineKind> {
+        let threads: usize = self.num("threads", 2usize)?;
+        EngineKind::parse(self.get("engine").unwrap_or("native"), threads)
+    }
 }
 
 fn main() -> Result<()> {
@@ -101,12 +109,18 @@ USAGE: smalltrack <command> [--key value ...]
 
 COMMANDS
   gen-data  --out DIR [--seed N] [--replicas K]     write synthetic MOT det.txt suite
-  track     --det FILE[,FILE..] [--out DIR]         track det.txt files, print timing
+  track     --det FILE[,FILE..] [--out DIR] [--engine E]  track det.txt files, print timing
   suite     [--seed N]                              full Table I suite, in-memory
-  serve     [--workers N] [--stream-fps F] [--seed N]  online serving demo
-  scaling   [--policy strong|weak|throughput] [--p N] [--processes] [--replicas K]
+  serve     [--workers N] [--stream-fps F] [--seed N] [--engine E]  online serving demo
+  scaling   [--policy strong|weak|throughput] [--p N] [--processes] [--replicas K] [--engine E]
   simulate  [--machine skx6140|clx8280] [--replicas K] [--seed N]
-  xla       [--seed N] [--frames N]                 track via the XLA bank path"
+  xla       [--seed N] [--frames N]                 track via the XLA bank path
+
+ENGINES (--engine, default native)
+  native    single-core structure-aware Sort (the paper's fast path)
+  strong    intra-frame fork-join ParallelSort (--threads N, default 2)
+  xla       batched tracker bank (AOT kernels, or the built-in
+            reference interpreter when `make artifacts` has not run)"
     );
 }
 
@@ -137,6 +151,8 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 fn cmd_track(args: &Args) -> Result<()> {
     let dets = args.get("det").context("--det FILE[,FILE..] required")?;
     let out = args.get("out").map(PathBuf::from);
+    let kind = args.engine()?;
+    let mut engine = kind.build(params_fast())?;
     let mut total_frames = 0u64;
     let mut total_secs = 0.0f64;
     for path in dets.split(',') {
@@ -148,14 +164,14 @@ fn cmd_track(args: &Args) -> Result<()> {
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "seq".into());
         let seq = read_det_file(&path, &name)?;
-        let mut sort = Sort::new(params_fast());
+        engine.reset();
         let mut rows: Vec<(u32, u64, Bbox)> = Vec::new();
         let t0 = Instant::now();
         let mut boxes = Vec::new();
         for frame in &seq.frames {
             boxes.clear();
             boxes.extend(frame.detections.iter().map(|d| d.bbox));
-            for t in sort.update(&boxes) {
+            for t in engine.update(&boxes) {
                 rows.push((frame.index, t.id, t.bbox));
             }
         }
@@ -174,7 +190,8 @@ fn cmd_track(args: &Args) -> Result<()> {
     }
     // machine-readable line for harnesses (same shape as the python baseline)
     println!(
-        "{{\"impl\": \"rust-native\", \"frames\": {}, \"seconds\": {:.6}, \"fps\": {:.1}}}",
+        "{{\"impl\": \"rust-{}\", \"frames\": {}, \"seconds\": {:.6}, \"fps\": {:.1}}}",
+        kind.label(),
         total_frames,
         total_secs,
         total_frames as f64 / total_secs.max(1e-12)
@@ -216,14 +233,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers: usize = args.num("workers", 2usize)?;
     let stream_fps: f64 = args.num("stream-fps", 30.0f64)?;
     let seed: u64 = args.num("seed", 7u64)?;
+    let engine = args.engine()?;
     let suite = generate_suite(seed);
     let streams: Vec<VideoStream> = suite
         .into_iter()
         .enumerate()
         .map(|(i, s)| VideoStream::new(i, s.sequence, Pacing::fps(stream_fps)))
         .collect();
-    println!("serving 11 streams at {stream_fps} fps on {workers} workers ...");
-    let report = serve(streams, ServerConfig { workers, ..Default::default() });
+    println!(
+        "serving 11 streams at {stream_fps} fps on {workers} workers ({} engine) ...",
+        engine.label()
+    );
+    let report = serve(streams, ServerConfig { workers, engine, ..Default::default() });
     let (p50, p95, p99, max) = report.latency.summary();
     println!(
         "frames={} dropped={} wall={:.2}s agg_fps={:.0}",
@@ -252,10 +273,21 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         "throughput" => ScalingPolicy::Throughput { workers: p },
         other => bail!("unknown policy '{other}'"),
     };
-    let o = run_policy(&suite, policy, params_fast());
+    // engine defaults to the policy's natural backend, overridable
+    // with --engine (any backend composes with any schedule); for an
+    // explicit strong engine, --threads defaults to --p so the label
+    // and the actual fork-join width agree
+    let engine = if args.has("engine") {
+        let threads: usize = args.num("threads", p)?;
+        EngineKind::parse(args.get("engine").unwrap_or("native"), threads)?
+    } else {
+        policy.default_engine()
+    };
+    let o = run_policy_with_engine(&suite, policy, engine, params_fast());
     println!(
-        "{}: files={} frames={} wall={:.3}s fps={:.0}",
+        "{} [{} engine]: files={} frames={} wall={:.3}s fps={:.0}",
         o.policy.label(),
+        engine.label(),
         o.files,
         o.frames,
         o.elapsed.as_secs_f64(),
@@ -359,12 +391,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_xla(args: &Args) -> Result<()> {
-    use smalltrack::runtime::{XlaRuntime, XlaSortBank};
+    use smalltrack::runtime::{TrackerBank, XlaRuntime};
     let seed: u64 = args.num("seed", 7u64)?;
     let frames: u32 = args.num("frames", 200u32)?;
     let rt = XlaRuntime::new()?;
-    println!("PJRT platform: {}", rt.platform());
-    let mut bank = XlaSortBank::new(&rt, params_fast())?;
+    println!("kernel backend: {}", rt.platform());
+    let mut bank = TrackerBank::new(&rt, params_fast())?;
     let synth = smalltrack::data::synth::generate_sequence(
         &smalltrack::data::synth::SynthConfig::mot15("XLA-demo", frames, 8, seed),
     );

@@ -1,13 +1,19 @@
-//! The XLA tracker bank: SORT with its dense algebra offloaded to the
-//! AOT-compiled JAX/Pallas kernels.
+//! The tracker bank: SORT with its dense algebra offloaded to the
+//! batched bank kernels (AOT-compiled JAX/Pallas via PJRT, or the
+//! built-in reference interpreter — see [`super::client`]).
 //!
-//! This is the accelerator-shaped variant of the tracker (DESIGN.md
-//! §Hardware-Adaptation): tracker state lives in fixed `(T,7)` /
-//! `(T,7,7)` slot arrays; predict + IoU run as one compiled XLA call,
-//! association (control flow) stays in Rust, and the matched updates
-//! run as a second XLA call. Lifecycle semantics are identical to the
-//! native [`crate::sort::Sort`] — equivalence is integration-tested in
-//! `rust/tests/integration_runtime.rs`.
+//! This is the accelerator-shaped variant of the tracker: state lives
+//! in fixed `(T,7)` / `(T,7,7)` slot arrays; predict + IoU run as one
+//! kernel call, association (control flow) stays in Rust, and the
+//! matched updates run as a second kernel call. Lifecycle semantics are
+//! identical to the native [`crate::sort::Sort`] — equivalence is
+//! integration-tested in `rust/tests/integration_runtime.rs` and
+//! `rust/tests/integration_engines.rs`.
+//!
+//! All marshalling buffers (padded detections, measurement rows, the
+//! compressed IoU view, kernel outputs) are owned by the bank and
+//! reused across frames: after warm-up the per-frame path performs no
+//! heap allocation, the same invariant `Sort::update` holds.
 //!
 //! The per-call dispatch overhead vs. the native path at various bank
 //! sizes is exactly the paper's "tiny matrices don't amortize"
@@ -21,7 +27,7 @@ use anyhow::Result;
 const DX: usize = 7;
 const DZ: usize = 4;
 
-/// Padded tracker-slot arrays (the XLA-side state).
+/// Padded tracker-slot arrays (the kernel-side state).
 #[derive(Debug, Clone)]
 pub struct BankState {
     /// Bank capacity (slot count `T`).
@@ -55,17 +61,20 @@ impl BankState {
         let consts = crate::sort::SortConstants::sort_defaults();
         self.x[i * DX..i * DX + 4].copy_from_slice(z);
         self.x[i * DX + 4..(i + 1) * DX].fill(0.0);
-        for r in 0..DX {
-            for c in 0..DX {
-                self.p[i * DX * DX + r * DX + c] = consts.p0[(r, c)];
-            }
-        }
+        consts.p0.write_to(&mut self.p[i * DX * DX..(i + 1) * DX * DX]);
         self.mask[i] = 1.0;
     }
 
     /// Kill slot `i`.
     pub fn kill(&mut self, i: usize) {
         self.mask[i] = 0.0;
+    }
+
+    /// Clear every slot (stream reuse; buffers keep their capacity).
+    pub fn clear(&mut self) {
+        self.x.fill(0.0);
+        self.p.fill(0.0);
+        self.mask.fill(0.0);
     }
 }
 
@@ -79,8 +88,8 @@ struct SlotMeta {
     age: u32,
 }
 
-/// SORT over the XLA tracker bank.
-pub struct XlaSortBank {
+/// SORT over the batched tracker bank — the `xla` engine.
+pub struct TrackerBank {
     predict_iou: Artifact,
     update: Artifact,
     params: SortParams,
@@ -94,16 +103,32 @@ pub struct XlaSortBank {
     out: Vec<Track>,
     /// Detections ignored because they exceeded the padded capacity.
     pub overflow_dets: u64,
+    /// One-shot warning latch: capacity overflow means the bank is
+    /// silently dropping work and its output diverges from the native
+    /// engine — surface that once, loudly, even through the trait.
+    warned_overflow: bool,
+    // --- reused marshalling buffers (no per-frame allocation) ---
+    det_buf: Vec<f64>,
+    dmask: Vec<f64>,
+    z_buf: Vec<f64>,
+    zmask_buf: Vec<f64>,
+    iou_view: Vec<f64>,
+    live: Vec<usize>,
+    predict_outs: Vec<Vec<f64>>,
+    update_outs: Vec<Vec<f64>>,
 }
 
-impl XlaSortBank {
+/// Former name of [`TrackerBank`], kept for source compatibility.
+pub type XlaSortBank = TrackerBank;
+
+impl TrackerBank {
     /// Build from a runtime (artifacts `bank_predict_iou` + `bank_update`).
     pub fn new(rt: &XlaRuntime, params: SortParams) -> Result<Self> {
         let predict_iou = rt.load("bank_predict_iou")?;
         let update = rt.load("bank_update")?;
         let t = predict_iou.input_shapes[0][0];
         let d_cap = predict_iou.input_shapes[3][0];
-        Ok(XlaSortBank {
+        Ok(TrackerBank {
             predict_iou,
             update,
             params,
@@ -115,6 +140,15 @@ impl XlaSortBank {
             assoc: AssociationScratch::default(),
             out: Vec::new(),
             overflow_dets: 0,
+            warned_overflow: false,
+            det_buf: vec![0.0; d_cap * DZ],
+            dmask: vec![0.0; d_cap],
+            z_buf: vec![0.0; t * DZ],
+            zmask_buf: vec![0.0; t],
+            iou_view: Vec::with_capacity(d_cap * t),
+            live: Vec::with_capacity(t),
+            predict_outs: Vec::new(),
+            update_outs: Vec::new(),
         })
     }
 
@@ -125,7 +159,35 @@ impl XlaSortBank {
 
     /// Live tracker count.
     pub fn n_trackers(&self) -> usize {
-        self.bank.live_slots().len()
+        self.bank.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    /// Emit the capacity-overflow warning once per bank instance.
+    /// Overflowed detections are dropped, so the bank's output is no
+    /// longer equivalent to the native engine's; `overflow_dets` keeps
+    /// the exact count for programmatic checks.
+    fn warn_overflow(&mut self) {
+        if !self.warned_overflow {
+            self.warned_overflow = true;
+            eprintln!(
+                "smalltrack: tracker bank capacity exceeded (T={}, D={}); dropping \
+                 overflow detections — output diverges from the native engine \
+                 (see TrackerBank::overflow_dets)",
+                self.bank.t, self.d_cap
+            );
+        }
+    }
+
+    /// Drop all tracker state (ids restart) but keep every warm buffer.
+    pub fn reset(&mut self) {
+        self.bank.clear();
+        for m in &mut self.meta {
+            *m = SlotMeta::default();
+        }
+        self.frame_count = 0;
+        self.next_id = 0;
+        self.overflow_dets = 0;
+        self.out.clear();
     }
 
     /// Process one frame; same semantics as `Sort::update`, modulo the
@@ -134,60 +196,78 @@ impl XlaSortBank {
         self.frame_count += 1;
         let t = self.bank.t;
 
-        // --- pad detections
+        // --- pad detections into the reused buffers
         if dets.len() > self.d_cap {
             self.overflow_dets += (dets.len() - self.d_cap) as u64;
+            self.warn_overflow();
         }
         let nd = dets.len().min(self.d_cap);
-        let mut det_buf = vec![0.0; self.d_cap * DZ];
-        let mut dmask = vec![0.0; self.d_cap];
+        self.det_buf.fill(0.0);
+        self.dmask.fill(0.0);
         for (i, b) in dets.iter().take(nd).enumerate() {
-            det_buf[i * DZ..(i + 1) * DZ].copy_from_slice(&b.to_array());
-            dmask[i] = 1.0;
+            self.det_buf[i * DZ..(i + 1) * DZ].copy_from_slice(&b.to_array());
+            self.dmask[i] = 1.0;
         }
 
-        // --- XLA call 1: predict + boxes + IoU matrix (D x T)
-        let outs = self.predict_iou.run(&[
-            &self.bank.x,
-            &self.bank.p,
-            &self.bank.mask,
-            &det_buf,
-            &dmask,
-        ])?;
-        let (xn, pn, boxes, iou_full) = (&outs[0], &outs[1], &outs[2], &outs[3]);
-        self.bank.x.copy_from_slice(xn);
-        self.bank.p.copy_from_slice(pn);
+        // --- kernel call 1: predict + boxes + IoU matrix (D x T)
+        self.predict_iou.run_into(
+            &[
+                &self.bank.x,
+                &self.bank.p,
+                &self.bank.mask,
+                &self.det_buf,
+                &self.dmask,
+            ],
+            &mut self.predict_outs,
+        )?;
+        self.bank.x.copy_from_slice(&self.predict_outs[0]);
+        self.bank.p.copy_from_slice(&self.predict_outs[1]);
 
         // --- lifecycle: age/streak/tsu per live slot; cull non-finite
-        for i in 0..t {
-            if self.bank.mask[i] == 0.0 {
-                continue;
+        // (the kernels zero non-finite boxes, so "all-zero" is the
+        // corrupt-tracker signal here, mirroring Sort's NaN culling)
+        {
+            let boxes = &self.predict_outs[2];
+            for i in 0..t {
+                if self.bank.mask[i] == 0.0 {
+                    continue;
+                }
+                let finite = boxes[i * 4..(i + 1) * 4].iter().all(|v| v.is_finite())
+                    && boxes[i * 4..(i + 1) * 4].iter().any(|v| *v != 0.0);
+                if !finite {
+                    self.bank.kill(i);
+                    continue;
+                }
+                let m = &mut self.meta[i];
+                m.age += 1;
+                if m.time_since_update > 0 {
+                    m.hit_streak = 0;
+                }
+                m.time_since_update += 1;
             }
-            let finite = boxes[i * 4..(i + 1) * 4].iter().all(|v| v.is_finite())
-                && boxes[i * 4..(i + 1) * 4].iter().any(|v| *v != 0.0);
-            if !finite {
-                self.bank.kill(i);
-                continue;
-            }
-            let m = &mut self.meta[i];
-            m.age += 1;
-            if m.time_since_update > 0 {
-                m.hit_streak = 0;
-            }
-            m.time_since_update += 1;
         }
 
         // --- association on the compressed (real dets × live slots) view
-        let live = self.bank.live_slots();
+        let live = &mut self.live;
+        live.clear();
+        for (i, &m) in self.bank.mask.iter().enumerate() {
+            if m > 0.0 {
+                live.push(i);
+            }
+        }
         let nt = live.len();
-        let mut iou = vec![0.0; nd * nt];
-        for d in 0..nd {
-            for (k, &slot) in live.iter().enumerate() {
-                iou[d * nt + k] = iou_full[d * t + slot];
+        self.iou_view.clear();
+        self.iou_view.resize(nd * nt, 0.0);
+        {
+            let iou_full = &self.predict_outs[3];
+            for d in 0..nd {
+                for (k, &slot) in live.iter().enumerate() {
+                    self.iou_view[d * nt + k] = iou_full[d * t + slot];
+                }
             }
         }
         let result = associate_from_matrix(
-            &iou,
+            &self.iou_view,
             nd,
             nt,
             self.params.iou_threshold,
@@ -195,29 +275,33 @@ impl XlaSortBank {
             &mut self.assoc,
         );
 
-        // --- XLA call 2: masked measurement update for matched slots
+        // --- kernel call 2: masked measurement update for matched slots
         if !result.matched.is_empty() {
-            let mut z = vec![0.0; t * DZ];
-            let mut zmask = vec![0.0; t];
+            self.z_buf.fill(0.0);
+            self.zmask_buf.fill(0.0);
             for &(d, k) in &result.matched {
-                let slot = live[k];
+                let slot = self.live[k];
                 let zd = dets[d].to_z();
-                z[slot * DZ..(slot + 1) * DZ].copy_from_slice(&zd);
-                zmask[slot] = 1.0;
+                self.z_buf[slot * DZ..(slot + 1) * DZ].copy_from_slice(&zd);
+                self.zmask_buf[slot] = 1.0;
                 let m = &mut self.meta[slot];
                 m.time_since_update = 0;
                 m.hits += 1;
                 m.hit_streak += 1;
             }
-            let outs = self.update.run(&[&self.bank.x, &self.bank.p, &z, &zmask])?;
-            self.bank.x.copy_from_slice(&outs[0]);
-            self.bank.p.copy_from_slice(&outs[1]);
+            self.update.run_into(
+                &[&self.bank.x, &self.bank.p, &self.z_buf, &self.zmask_buf],
+                &mut self.update_outs,
+            )?;
+            self.bank.x.copy_from_slice(&self.update_outs[0]);
+            self.bank.p.copy_from_slice(&self.update_outs[1]);
         }
 
         // --- create new trackers from unmatched detections
         for &d in &result.unmatched_dets {
             let Some(slot) = self.bank.free_slot() else {
                 self.overflow_dets += 1;
+                self.warn_overflow();
                 continue;
             };
             self.bank.seed(slot, &dets[d].to_z());
@@ -284,5 +368,42 @@ mod tests {
         b.seed(1, &[9.0, 9.0, 9.0, 9.0]);
         assert_eq!(b.x[7], 9.0);
         assert_eq!(b.mask[1], 1.0);
+    }
+
+    #[test]
+    fn bank_tracks_a_moving_object() {
+        let rt = XlaRuntime::new().expect("runtime");
+        let mut bank = TrackerBank::new(&rt, SortParams { timing: false, ..Default::default() })
+            .expect("bank");
+        assert_eq!(bank.capacity(), 16);
+        let b = |k: f64| Bbox::new(10.0 + 2.0 * k, 10.0, 40.0 + 2.0 * k, 80.0);
+        for k in 0..6 {
+            bank.update(&[b(k as f64)]).unwrap();
+        }
+        assert_eq!(bank.n_trackers(), 1);
+        let tracks = bank.update(&[b(6.0)]).unwrap();
+        assert_eq!(tracks.len(), 1);
+        assert_eq!(tracks[0].id, 1);
+        // coast past max_age: culled
+        bank.update(&[]).unwrap();
+        bank.update(&[]).unwrap();
+        assert_eq!(bank.n_trackers(), 0);
+    }
+
+    #[test]
+    fn reset_restarts_ids_and_state() {
+        let rt = XlaRuntime::new().expect("runtime");
+        let mut bank = TrackerBank::new(&rt, SortParams { timing: false, ..Default::default() })
+            .expect("bank");
+        let b = Bbox::new(5.0, 5.0, 50.0, 90.0);
+        for _ in 0..4 {
+            bank.update(&[b]).unwrap();
+        }
+        assert_eq!(bank.n_trackers(), 1);
+        bank.reset();
+        assert_eq!(bank.n_trackers(), 0);
+        let tracks = bank.update(&[b]).unwrap().to_vec();
+        assert_eq!(tracks.len(), 1);
+        assert_eq!(tracks[0].id, 1, "ids restart after reset");
     }
 }

@@ -1,12 +1,28 @@
-//! PJRT client wrapper: compile `artifacts/*.hlo.txt` once, execute
-//! many times.
+//! Artifact loading and kernel execution for the tracker bank.
 //!
-//! Follows the reference wiring of `/opt/xla-example/load_hlo`: text →
-//! `HloModuleProto::from_text_file` → `XlaComputation` → `compile` on
-//! the CPU PJRT client. Inputs/outputs are `f64` literals (the paper's
-//! doubles); jax lowers with `return_tuple=True`, so results unpack via
-//! `to_tuple`.
+//! `make artifacts` lowers the L2 JAX graphs to HLO text plus a
+//! `manifest.json` carrying each artifact's I/O geometry. This module
+//! resolves artifact names to executable kernels behind one `Artifact`
+//! handle, over pluggable execution backends:
+//!
+//! * **Reference interpreter** (always available) — the pure-Rust
+//!   implementation of the bank kernel contracts in
+//!   [`super::interp`]. Used whenever the compiled backend is absent;
+//!   also works with *no* artifacts directory at all (built-in default
+//!   geometry, `T = D = 16`), so `--engine xla` and the runtime tests
+//!   run from a fresh clone.
+//! * **PJRT** (cargo feature `pjrt`, not compiled here) — the original
+//!   wiring compiles the HLO text on the PJRT CPU client via the
+//!   `xla` crate (`HloModuleProto::from_text_file` → `XlaComputation`
+//!   → `compile`, executing f64 literals with `return_tuple=True`
+//!   unpacking). The offline build environment cannot vendor that
+//!   crate, so the backend is gated out; re-enabling it means adding
+//!   the dependency and a `Compiled` arm to [`ExecBackend`].
+//!
+//! Either way the calling code ([`super::bank`], benches, tests) sees
+//! the same `Artifact::run` / `run_into` contract.
 
+use super::interp::RefKernel;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -18,15 +34,24 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-/// Whether the AOT artifacts exist (runtime-dependent tests/benches
-/// skip gracefully when `make artifacts` has not run).
+/// Whether the full AOT artifact set exists (compiled-kernel benches
+/// skip their HLO-specific sections when `make artifacts` has not run;
+/// the reference interpreter does not need it).
 pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.json").exists()
 }
 
-/// One compiled executable plus its I/O geometry.
+/// Execution backend behind an [`Artifact`].
+enum ExecBackend {
+    /// Pure-Rust interpreter of the bank kernel contracts.
+    Reference(RefKernel),
+    // Compiled(xla::PjRtLoadedExecutable) lives behind the `pjrt`
+    // feature once the xla crate is vendored; see module docs.
+}
+
+/// One executable kernel plus its I/O geometry.
 pub struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
+    backend: ExecBackend,
     /// Artifact name (manifest key).
     pub name: String,
     /// Input shapes (row-major dims) in argument order.
@@ -38,7 +63,19 @@ pub struct Artifact {
 impl Artifact {
     /// Execute on f64 row-major buffers (one per input, shapes as in
     /// `input_shapes`). Returns one row-major `Vec<f64>` per output.
+    ///
+    /// Allocates the output vectors; per-frame callers use
+    /// [`Self::run_into`] with reused buffers.
     pub fn run(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let mut outs = Vec::new();
+        self.run_into(inputs, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// Execute into caller-provided output buffers: `outs` is resized
+    /// to the output arity/shapes on first use and reused verbatim on
+    /// every later call — no per-frame heap allocation.
+    pub fn run_into(&self, inputs: &[&[f64]], outs: &mut Vec<Vec<f64>>) -> Result<()> {
         anyhow::ensure!(
             inputs.len() == self.input_shapes.len(),
             "{}: expected {} inputs, got {}",
@@ -46,7 +83,6 @@ impl Artifact {
             self.input_shapes.len(),
             inputs.len()
         );
-        let mut literals = Vec::with_capacity(inputs.len());
         for (buf, shape) in inputs.iter().zip(&self.input_shapes) {
             let n: usize = shape.iter().product();
             anyhow::ensure!(
@@ -56,102 +92,108 @@ impl Artifact {
                 buf.len(),
                 shape
             );
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(
-                xla::Literal::vec1(buf)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape {:?}: {e:?}", shape))?,
-            );
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.name))?;
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        match &self.backend {
+            ExecBackend::Reference(kernel) => kernel.run_into(inputs, outs)?,
+        }
         anyhow::ensure!(
-            parts.len() == self.output_shapes.len(),
+            outs.len() == self.output_shapes.len(),
             "{}: expected {} outputs, got {}",
             self.name,
             self.output_shapes.len(),
-            parts.len()
+            outs.len()
         );
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
-        }
-        Ok(out)
+        Ok(())
     }
 }
 
-/// The PJRT client with every artifact from the manifest compiled.
+/// The kernel runtime: resolves artifact names against the manifest
+/// when present, falling back to the built-in bank geometry otherwise.
 pub struct XlaRuntime {
-    client: xla::PjRtClient,
+    #[allow(dead_code)] // consumed by the pjrt backend (HLO file paths)
     dir: PathBuf,
-    manifest: crate::data::json::Value,
+    manifest: Option<crate::data::json::Value>,
 }
 
 impl XlaRuntime {
-    /// CPU client over the default artifacts directory.
+    /// Runtime over the default artifacts directory. Never fails on a
+    /// missing directory/manifest — the reference interpreter covers
+    /// the built-in kernels — but does fail on a *corrupt* manifest.
     pub fn new() -> Result<Self> {
-        Self::with_dir(&artifacts_dir())
+        let dir = artifacts_dir();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = if manifest_path.exists() {
+            Some(
+                crate::data::json::parse_file(&manifest_path)
+                    .context("parse artifacts manifest.json")?,
+            )
+        } else {
+            None
+        };
+        Ok(XlaRuntime { dir, manifest })
     }
 
-    /// CPU client over an explicit artifacts directory.
+    /// Runtime over an explicit artifacts directory; the manifest is
+    /// required here (this is the "I ran `make artifacts`" entry point).
     pub fn with_dir(dir: &Path) -> Result<Self> {
         let manifest = crate::data::json::parse_file(&dir.join("manifest.json"))
             .context("read manifest.json (run `make artifacts`)")?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(XlaRuntime { client, dir: dir.to_path_buf(), manifest })
+        Ok(XlaRuntime { dir: dir.to_path_buf(), manifest: Some(manifest) })
     }
 
-    /// PJRT platform name ("Host" for CPU).
+    /// Execution platform name. "Host" once the PJRT backend is
+    /// compiled in; the reference interpreter otherwise.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "reference-interpreter".to_string()
     }
 
-    /// Artifact names available in the manifest.
+    /// Artifact names available (manifest entries, or the built-in
+    /// kernel set when running manifest-less).
     pub fn artifact_names(&self) -> Vec<String> {
-        match self.manifest.req("artifacts") {
-            crate::data::json::Value::Obj(m) => m.keys().cloned().collect(),
-            _ => Vec::new(),
+        match self.manifest.as_ref().map(|m| m.req("artifacts")) {
+            Some(crate::data::json::Value::Obj(m)) => m.keys().cloned().collect(),
+            _ => vec!["bank_predict_iou".into(), "bank_update".into()],
         }
     }
 
-    /// Load + compile one artifact by manifest name.
+    /// Load one artifact by name.
     pub fn load(&self, name: &str) -> Result<Artifact> {
-        let entry = self
-            .manifest
-            .req("artifacts")
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
-        let file = entry.req("file").str().to_string();
-        let path = self.dir.join(&file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not UTF-8")?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-
-        let shapes = |key: &str| -> Vec<Vec<usize>> {
-            entry
-                .req(key)
-                .arr()
-                .iter()
-                .map(|io| io.arr()[1].arr().iter().map(|d| d.num() as usize).collect())
-                .collect()
+        let (kernel, input_shapes, output_shapes) = match &self.manifest {
+            Some(manifest) => {
+                let entry = manifest
+                    .req("artifacts")
+                    .get(name)
+                    .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+                let shapes = |key: &str| -> Vec<Vec<usize>> {
+                    entry
+                        .req(key)
+                        .arr()
+                        .iter()
+                        .map(|io| io.arr()[1].arr().iter().map(|d| d.num() as usize).collect())
+                        .collect()
+                };
+                let inputs = shapes("inputs");
+                let outputs = shapes("outputs");
+                let kernel = RefKernel::from_shapes(name, &inputs).ok_or_else(|| {
+                    anyhow!("artifact '{name}' has no reference interpretation")
+                })?;
+                (kernel, inputs, outputs)
+            }
+            None => {
+                let kernel = RefKernel::from_name(name).ok_or_else(|| {
+                    anyhow!(
+                        "artifact '{name}' unknown and no manifest present \
+                         (run `make artifacts` for the full set)"
+                    )
+                })?;
+                (kernel, kernel.input_shapes(), kernel.output_shapes())
+            }
         };
         Ok(Artifact {
-            exe,
+            backend: ExecBackend::Reference(kernel),
             name: name.to_string(),
-            input_shapes: shapes("inputs"),
-            output_shapes: shapes("outputs"),
+            input_shapes,
+            output_shapes,
         })
     }
 }
@@ -159,9 +201,6 @@ impl XlaRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    // Full execution tests live in rust/tests/integration_runtime.rs
-    // (they need `make artifacts`). Here: path/manifest plumbing only.
 
     #[test]
     fn artifacts_dir_env_override() {
@@ -177,5 +216,31 @@ mod tests {
         };
         let msg = format!("{err:#}");
         assert!(msg.contains("manifest"), "{msg}");
+    }
+
+    #[test]
+    fn manifestless_runtime_loads_builtin_kernels() {
+        let rt = XlaRuntime { dir: PathBuf::from("/nonexistent"), manifest: None };
+        for name in ["bank_predict_iou", "bank_update", "bank_predict_T4"] {
+            let art = rt.load(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(art.name, name);
+            assert!(!art.input_shapes.is_empty());
+        }
+        assert!(rt.load("bank_nonsense").is_err());
+    }
+
+    #[test]
+    fn artifact_run_validates_shapes() {
+        let rt = XlaRuntime { dir: PathBuf::from("/nonexistent"), manifest: None };
+        let art = rt.load("bank_predict_T2").unwrap();
+        // wrong arity
+        assert!(art.run(&[&[0.0; 14]]).is_err());
+        // wrong length
+        assert!(art.run(&[&[0.0; 13], &[0.0; 98], &[0.0; 2]]).is_err());
+        // correct
+        let outs = art.run(&[&[0.0; 14], &[0.0; 98], &[0.0; 2]]).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].len(), 14);
+        assert_eq!(outs[1].len(), 98);
     }
 }

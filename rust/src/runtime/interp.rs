@@ -1,0 +1,349 @@
+//! Reference interpreter for the tracker-bank kernels.
+//!
+//! The AOT pipeline (`python/compile/model.py`) lowers exactly three
+//! kernel families to HLO: `bank_predict_iou`, `bank_update`, and the
+//! `bank_predict_T{n}` sweep. Their semantics are fully specified by
+//! the jnp oracle (`python/compile/kernels/ref.py`); this module
+//! implements the same batched contracts in pure Rust so the bank
+//! engine runs — and is testable — on machines without the PJRT
+//! execution backend (the `pjrt` cargo feature).
+//!
+//! Numerically the interpreter reuses the *native* structure-aware
+//! Kalman kernels ([`KalmanState::predict`] / [`KalmanState::update`]),
+//! so the bank engine's per-slot state evolves bit-identically to
+//! [`crate::sort::Sort`]'s — which is what makes the
+//! `--engine native` vs `--engine xla` byte-parity guarantee (and
+//! `rust/tests/integration_engines.rs`) possible. The real XLA
+//! artifacts use the dense formulation instead; the two agree to ~1e-9
+//! (unit-tested in `rust/src/sort/kalman.rs`), within every consumer's
+//! tolerance.
+//!
+//! All entry points write into caller-provided output buffers — the
+//! per-frame path performs no heap allocation after warm-up, preserving
+//! `Sort::update`'s invariant on the bank path.
+
+use crate::linalg::{Mat7, Vec4, Vec7};
+use crate::sort::iou::iou_raw;
+use crate::sort::kalman::{CovarianceForm, KalmanState, SortConstants};
+use crate::sort::Bbox;
+use anyhow::{ensure, Result};
+
+const DX: usize = 7;
+const DZ: usize = 4;
+
+/// One interpretable kernel, with its bank geometry baked in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefKernel {
+    /// `bank_predict_iou`: predict `T` slots, emit boxes + `(D,T)` IoU.
+    PredictIou {
+        /// Tracker-slot capacity.
+        t: usize,
+        /// Detection capacity.
+        d: usize,
+    },
+    /// `bank_update`: masked Joseph-form measurement update of `T` slots.
+    Update {
+        /// Tracker-slot capacity.
+        t: usize,
+    },
+    /// `bank_predict_T{n}`: bare masked predict (the E8 sweep unit).
+    Predict {
+        /// Tracker-slot capacity.
+        t: usize,
+    },
+}
+
+impl RefKernel {
+    /// Resolve an artifact name to a kernel, using built-in default
+    /// geometry (`T = D = 16`, matching `model.py`'s `BANK_T/BANK_D`).
+    pub fn from_name(name: &str) -> Option<RefKernel> {
+        match name {
+            "bank_predict_iou" => Some(RefKernel::PredictIou { t: 16, d: 16 }),
+            "bank_update" => Some(RefKernel::Update { t: 16 }),
+            _ => name
+                .strip_prefix("bank_predict_T")
+                .and_then(|n| n.parse::<usize>().ok())
+                .filter(|&t| t > 0)
+                .map(|t| RefKernel::Predict { t }),
+        }
+    }
+
+    /// Resolve a manifest entry (name + input shapes) to a kernel with
+    /// the manifest's geometry.
+    pub fn from_shapes(name: &str, input_shapes: &[Vec<usize>]) -> Option<RefKernel> {
+        let t = *input_shapes.first()?.first()?;
+        if name == "bank_predict_iou" {
+            let d = *input_shapes.get(3)?.first()?;
+            Some(RefKernel::PredictIou { t, d })
+        } else if name == "bank_update" {
+            Some(RefKernel::Update { t })
+        } else if name.starts_with("bank_predict_T") {
+            Some(RefKernel::Predict { t })
+        } else {
+            None
+        }
+    }
+
+    /// Input shapes in argument order (row-major dims).
+    pub fn input_shapes(&self) -> Vec<Vec<usize>> {
+        match *self {
+            RefKernel::PredictIou { t, d } => vec![
+                vec![t, DX],
+                vec![t, DX, DX],
+                vec![t, 1],
+                vec![d, DZ],
+                vec![d, 1],
+            ],
+            RefKernel::Update { t } => {
+                vec![vec![t, DX], vec![t, DX, DX], vec![t, DZ], vec![t, 1]]
+            }
+            RefKernel::Predict { t } => vec![vec![t, DX], vec![t, DX, DX], vec![t, 1]],
+        }
+    }
+
+    /// Output shapes in tuple order.
+    pub fn output_shapes(&self) -> Vec<Vec<usize>> {
+        match *self {
+            RefKernel::PredictIou { t, d } => vec![
+                vec![t, DX],
+                vec![t, DX, DX],
+                vec![t, DZ],
+                vec![d, t],
+            ],
+            RefKernel::Update { t } => vec![vec![t, DX], vec![t, DX, DX]],
+            RefKernel::Predict { t } => vec![vec![t, DX], vec![t, DX, DX]],
+        }
+    }
+
+    /// Execute into caller-provided output buffers (resized to the
+    /// output shapes on first use, reused afterwards).
+    pub fn run_into(&self, inputs: &[&[f64]], outs: &mut Vec<Vec<f64>>) -> Result<()> {
+        let out_shapes = self.output_shapes();
+        outs.resize(out_shapes.len(), Vec::new());
+        for (o, shape) in outs.iter_mut().zip(&out_shapes) {
+            o.resize(shape.iter().product(), 0.0);
+        }
+        let consts = SortConstants::sort_defaults();
+        match *self {
+            RefKernel::Predict { t } => {
+                let (x, p, mask) = (inputs[0], inputs[1], inputs[2]);
+                let (xn, rest) = outs.split_at_mut(1);
+                predict_bank(t, x, p, mask, &consts, &mut xn[0], &mut rest[0]);
+            }
+            RefKernel::PredictIou { t, d } => {
+                let (x, p, mask, dets, dmask) =
+                    (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+                let (xn, rest) = outs.split_at_mut(1);
+                let (pn, rest) = rest.split_at_mut(1);
+                let (boxes, iou) = rest.split_at_mut(1);
+                predict_bank(t, x, p, mask, &consts, &mut xn[0], &mut pn[0]);
+                // boxes: x_to_bbox(xn) * mask, non-finite -> 0 (ref.py)
+                let boxes = &mut boxes[0];
+                for i in 0..t {
+                    if mask[i] > 0.0 {
+                        let xi: Vec7 = slice7(&xn[0], i);
+                        let b = Bbox::from_state(&xi).to_array();
+                        for (k, v) in b.iter().enumerate() {
+                            boxes[i * DZ + k] = if v.is_finite() { *v } else { 0.0 };
+                        }
+                    } else {
+                        boxes[i * DZ..(i + 1) * DZ].fill(0.0);
+                    }
+                }
+                // iou (D,T), zeroed on padded/dead pairs
+                let iou = &mut iou[0];
+                for di in 0..d {
+                    let db = Bbox::new(
+                        dets[di * DZ],
+                        dets[di * DZ + 1],
+                        dets[di * DZ + 2],
+                        dets[di * DZ + 3],
+                    );
+                    for ti in 0..t {
+                        let tb = Bbox::new(
+                            boxes[ti * DZ],
+                            boxes[ti * DZ + 1],
+                            boxes[ti * DZ + 2],
+                            boxes[ti * DZ + 3],
+                        );
+                        iou[di * t + ti] = iou_raw(&db, &tb) * dmask[di] * mask[ti];
+                    }
+                }
+            }
+            RefKernel::Update { t } => {
+                let (x, p, z, zmask) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+                let (xn, pn) = outs.split_at_mut(1);
+                let (xn, pn) = (&mut xn[0], &mut pn[0]);
+                xn.copy_from_slice(x);
+                pn.copy_from_slice(p);
+                for i in 0..t {
+                    if zmask[i] <= 0.0 {
+                        continue;
+                    }
+                    let mut ks = KalmanState {
+                        x: slice7(xn, i),
+                        p: Mat7::from_slice(&pn[i * DX * DX..(i + 1) * DX * DX]),
+                    };
+                    let zi: Vec4 = [
+                        z[i * DZ],
+                        z[i * DZ + 1],
+                        z[i * DZ + 2],
+                        z[i * DZ + 3],
+                    ];
+                    // Non-SPD innovation covariance: pass the slot
+                    // through untouched (the compiled kernel computes a
+                    // garbage inverse there; callers only feed live,
+                    // well-conditioned slots, so the paths agree on all
+                    // real inputs and the interpreter fails safer).
+                    if ks.update(&zi, &consts, CovarianceForm::Joseph) {
+                        xn[i * DX..(i + 1) * DX].copy_from_slice(&ks.x);
+                        ks.p.write_to(&mut pn[i * DX * DX..(i + 1) * DX * DX]);
+                    }
+                }
+            }
+        }
+        ensure!(outs.len() == out_shapes.len(), "interpreter output arity");
+        Ok(())
+    }
+}
+
+fn slice7(buf: &[f64], i: usize) -> Vec7 {
+    let mut out = [0.0; DX];
+    out.copy_from_slice(&buf[i * DX..(i + 1) * DX]);
+    out
+}
+
+/// Masked batched predict: live slots advance with the structure-aware
+/// kernel, dead slots pass through (ref.py's `predict_ref`).
+fn predict_bank(
+    t: usize,
+    x: &[f64],
+    p: &[f64],
+    mask: &[f64],
+    consts: &SortConstants,
+    xn: &mut [f64],
+    pn: &mut [f64],
+) {
+    xn.copy_from_slice(x);
+    pn.copy_from_slice(p);
+    for i in 0..t {
+        if mask[i] <= 0.0 {
+            continue;
+        }
+        let mut ks = KalmanState {
+            x: slice7(xn, i),
+            p: Mat7::from_slice(&pn[i * DX * DX..(i + 1) * DX * DX]),
+        };
+        ks.predict(consts);
+        xn[i * DX..(i + 1) * DX].copy_from_slice(&ks.x);
+        ks.p.write_to(&mut pn[i * DX * DX..(i + 1) * DX * DX]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_resolution() {
+        assert_eq!(
+            RefKernel::from_name("bank_predict_iou"),
+            Some(RefKernel::PredictIou { t: 16, d: 16 })
+        );
+        assert_eq!(RefKernel::from_name("bank_update"), Some(RefKernel::Update { t: 16 }));
+        assert_eq!(RefKernel::from_name("bank_predict_T64"), Some(RefKernel::Predict { t: 64 }));
+        assert_eq!(RefKernel::from_name("bank_predict_T0"), None);
+        assert_eq!(RefKernel::from_name("unknown"), None);
+    }
+
+    #[test]
+    fn predict_matches_native_kalman_bitwise() {
+        let consts = SortConstants::sort_defaults();
+        let mut native = KalmanState::from_measurement(&[100.0, 50.0, 2000.0, 0.5], &consts);
+        native.x[4] = 3.0;
+
+        let k = RefKernel::Predict { t: 2 };
+        let mut x = vec![0.0; 2 * 7];
+        let mut p = vec![0.0; 2 * 49];
+        x[..7].copy_from_slice(&native.x);
+        native.p.write_to(&mut p[..49]);
+        let mask = vec![1.0, 0.0];
+        let mut outs = Vec::new();
+        k.run_into(&[&x, &p, &mask], &mut outs).unwrap();
+
+        native.predict(&consts);
+        for i in 0..7 {
+            assert_eq!(outs[0][i], native.x[i], "x[{i}] must be bit-identical");
+        }
+        for i in 0..49 {
+            assert_eq!(outs[1][i], native.p[(i / 7, i % 7)], "p[{i}]");
+        }
+        // dead slot untouched
+        assert!(outs[0][7..].iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn update_matches_native_kalman_bitwise() {
+        let consts = SortConstants::sort_defaults();
+        let mut native = KalmanState::from_measurement(&[200.0, 100.0, 3000.0, 0.6], &consts);
+        native.predict(&consts);
+
+        let k = RefKernel::Update { t: 1 };
+        let mut x = vec![0.0; 7];
+        let mut p = vec![0.0; 49];
+        x.copy_from_slice(&native.x);
+        native.p.write_to(&mut p);
+        let z = vec![202.0, 99.0, 3050.0, 0.6];
+        let zmask = vec![1.0];
+        let mut outs = Vec::new();
+        k.run_into(&[&x, &p, &z, &zmask], &mut outs).unwrap();
+
+        assert!(native.update(&[202.0, 99.0, 3050.0, 0.6], &consts, CovarianceForm::Joseph));
+        for i in 0..7 {
+            assert_eq!(outs[0][i], native.x[i], "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn predict_iou_masks_dead_and_padded_pairs() {
+        let k = RefKernel::PredictIou { t: 2, d: 2 };
+        let consts = SortConstants::sort_defaults();
+        let seed = KalmanState::from_measurement(
+            &Bbox::new(10.0, 10.0, 30.0, 50.0).to_z(),
+            &consts,
+        );
+        let mut x = vec![0.0; 2 * 7];
+        let mut p = vec![0.0; 2 * 49];
+        x[..7].copy_from_slice(&seed.x);
+        seed.p.write_to(&mut p[..49]);
+        let mask = vec![1.0, 0.0];
+        // det 0 = on top of the tracker; det 1 = padded row
+        let dets = vec![10.0, 10.0, 30.0, 50.0, 999.0, 999.0, 1000.0, 1000.0];
+        let dmask = vec![1.0, 0.0];
+        let mut outs = Vec::new();
+        k.run_into(&[&x, &p, &mask, &dets, &dmask], &mut outs).unwrap();
+
+        let iou = &outs[3]; // (D=2, T=2)
+        assert!(iou[0] > 0.9, "live pair overlaps: {}", iou[0]);
+        assert_eq!(iou[1], 0.0, "dead slot column zeroed");
+        assert_eq!(iou[2], 0.0, "padded det row zeroed");
+        assert_eq!(iou[3], 0.0);
+        // dead slot's box row is zero
+        assert!(outs[2][4..8].iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn run_into_reuses_buffers_without_reallocation() {
+        let k = RefKernel::Predict { t: 4 };
+        let x = vec![1.0; 4 * 7];
+        let p = vec![0.5; 4 * 49];
+        let mask = vec![1.0; 4];
+        let mut outs = Vec::new();
+        k.run_into(&[&x, &p, &mask], &mut outs).unwrap();
+        let caps: Vec<usize> = outs.iter().map(Vec::capacity).collect();
+        let ptrs: Vec<*const f64> = outs.iter().map(|o| o.as_ptr()).collect();
+        k.run_into(&[&x, &p, &mask], &mut outs).unwrap();
+        assert_eq!(caps, outs.iter().map(Vec::capacity).collect::<Vec<_>>());
+        assert_eq!(ptrs, outs.iter().map(|o| o.as_ptr()).collect::<Vec<_>>());
+    }
+}

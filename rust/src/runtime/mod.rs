@@ -1,19 +1,27 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas
-//! tracker-bank kernels from Rust.
+//! Kernel runtime: execute the tracker-bank kernels from Rust.
 //!
 //! Build-time Python (`make artifacts`) lowers the L2 graphs to HLO
 //! *text* (see `python/compile/aot.py` for why text, not serialized
-//! protos); this module compiles them once on the PJRT CPU client and
-//! exposes typed entry points over `f64` buffers. Python never runs on
-//! the request path — after `make artifacts` the Rust binary is
-//! self-contained.
+//! protos); this module resolves artifact names/geometry and exposes
+//! typed entry points over `f64` buffers. Python never runs on the
+//! request path.
 //!
-//! * [`client`] — client + executable wrappers, artifact manifest.
-//! * [`bank`] — the tracker-bank view: padded slot arrays + marshalling
-//!   between `Sort`-style tracker state and the XLA buffers.
+//! Two execution backends sit behind one `Artifact` handle:
+//! the PJRT CPU client (cargo feature `pjrt`, requires the `xla`
+//! crate) and a pure-Rust reference interpreter of the bank kernel
+//! contracts that is always available — so the `xla` engine, its tests
+//! and the CLI work from a fresh clone with no artifacts at all.
+//!
+//! * [`client`] — artifact manifest, geometry, execution backends.
+//! * [`interp`] — the reference kernel interpreter.
+//! * [`bank`] — the tracker-bank view: padded slot arrays + reused
+//!   marshalling buffers between `Sort`-style tracker state and the
+//!   kernel buffers.
 
 pub mod bank;
 pub mod client;
+pub mod interp;
 
-pub use bank::{BankState, XlaSortBank};
+pub use bank::{BankState, TrackerBank, XlaSortBank};
 pub use client::{artifacts_available, artifacts_dir, Artifact, XlaRuntime};
+pub use interp::RefKernel;

@@ -1,0 +1,124 @@
+//! Engine equivalence: all three [`TrackerEngine`] backends must emit
+//! identical track ids and boxes on shared deterministic input.
+//!
+//! This is the contract that makes the backends interchangeable behind
+//! the coordinator: `native` is the reference; `strong` runs the same
+//! math under fork-join parallelism; `xla` runs it through the batched
+//! tracker-bank kernels. The bank's reference interpreter reuses the
+//! native Kalman kernels, so agreement is expected to be bitwise on the
+//! state path (asserted here at 1e-9 to stay robust if the compiled
+//! PJRT backend — dense formulation, ~1e-9 agreement — is swapped in).
+
+use smalltrack::data::synth::{generate_sequence, SynthConfig, SynthSequence};
+use smalltrack::engine::{EngineKind, TrackerEngine};
+use smalltrack::sort::{Bbox, SortParams, Track};
+
+fn params() -> SortParams {
+    SortParams { timing: false, ..Default::default() }
+}
+
+/// Per-frame sorted track outputs for one engine over a sequence.
+fn track_all(engine: &mut dyn TrackerEngine, synth: &SynthSequence) -> Vec<Vec<Track>> {
+    let mut out = Vec::with_capacity(synth.sequence.frames.len());
+    let mut boxes: Vec<Bbox> = Vec::new();
+    for frame in &synth.sequence.frames {
+        boxes.clear();
+        boxes.extend(frame.detections.iter().map(|d| d.bbox));
+        let mut tracks = engine.update(&boxes).to_vec();
+        tracks.sort_by_key(|t| t.id);
+        out.push(tracks);
+    }
+    out
+}
+
+fn assert_equivalent(name: &str, got: &[Vec<Track>], want: &[Vec<Track>]) {
+    assert_eq!(got.len(), want.len());
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.iter().map(|t| t.id).collect::<Vec<_>>(),
+            w.iter().map(|t| t.id).collect::<Vec<_>>(),
+            "{name}: frame {k} ids diverge"
+        );
+        for (a, b) in g.iter().zip(w) {
+            for (x, y) in a.bbox.to_array().iter().zip(b.bbox.to_array()) {
+                assert!(
+                    (x - y).abs() < 1e-9,
+                    "{name}: frame {k} id {} box {} vs {}",
+                    a.id,
+                    x,
+                    y
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_engines_emit_identical_tracks() {
+    // 8 objects keeps the run inside the bank's 16-slot capacity
+    let synth = generate_sequence(&SynthConfig::mot15("ENGEQ", 200, 8, 23));
+    let mut native = EngineKind::Native.build(params()).expect("native");
+    let reference = track_all(&mut *native, &synth);
+    assert!(
+        reference.iter().map(Vec::len).sum::<usize>() > 200,
+        "reference run produced too few tracks to be meaningful"
+    );
+    for kind in [EngineKind::Strong { threads: 3 }, EngineKind::Xla] {
+        let mut engine = kind.build(params()).expect("build");
+        let got = track_all(&mut *engine, &synth);
+        assert_equivalent(kind.label(), &got, &reference);
+    }
+}
+
+#[test]
+fn equivalence_holds_across_reset() {
+    // engines reused via reset() (the worker-pool pattern) must match
+    // fresh engines exactly
+    let a = generate_sequence(&SynthConfig::mot15("ENGR-A", 80, 6, 5));
+    let b = generate_sequence(&SynthConfig::mot15("ENGR-B", 80, 6, 6));
+    for kind in EngineKind::all(2) {
+        let mut reused = kind.build(params()).expect("build");
+        track_all(&mut *reused, &a);
+        reused.reset();
+        let got = track_all(&mut *reused, &b);
+        let mut fresh = kind.build(params()).expect("build");
+        let want = track_all(&mut *fresh, &b);
+        assert_equivalent(kind.label(), &got, &want);
+    }
+}
+
+#[test]
+fn equivalence_with_empty_and_bursty_frames() {
+    // hand-built stress: birth, dropout (coast), reacquire, death
+    let b = |x: f64, y: f64| Bbox::new(x, y, x + 30.0, y + 70.0);
+    let frames: Vec<Vec<Bbox>> = vec![
+        vec![b(10.0, 10.0), b(500.0, 300.0)],
+        vec![b(13.0, 11.0), b(498.0, 302.0)],
+        vec![b(16.0, 12.0), b(496.0, 304.0)],
+        vec![b(19.0, 13.0)], // second object drops out
+        vec![b(22.0, 14.0), b(492.0, 308.0)], // reacquired within max_age
+        vec![],              // everything coasts
+        vec![b(28.0, 16.0)],
+        vec![b(31.0, 17.0), b(900.0, 900.0)], // newcomer
+        vec![b(34.0, 18.0), b(903.0, 901.0)],
+        vec![b(37.0, 19.0), b(906.0, 902.0)],
+        vec![b(40.0, 20.0), b(909.0, 903.0)],
+    ];
+    let run = |engine: &mut dyn TrackerEngine| -> Vec<Vec<Track>> {
+        frames
+            .iter()
+            .map(|boxes| {
+                let mut t = engine.update(boxes).to_vec();
+                t.sort_by_key(|t| t.id);
+                t
+            })
+            .collect()
+    };
+    let mut native = EngineKind::Native.build(params()).expect("native");
+    let want = run(&mut *native);
+    for kind in [EngineKind::Strong { threads: 2 }, EngineKind::Xla] {
+        let mut engine = kind.build(params()).expect("build");
+        let got = run(&mut *engine);
+        assert_equivalent(kind.label(), &got, &want);
+    }
+}
