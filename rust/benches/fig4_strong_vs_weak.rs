@@ -1,9 +1,13 @@
 //! E7 — the paper's Fig 4: strong vs weak scaling with the input files
-//! replicated 7× (77 files), on the Xeon 8280 profile.
+//! replicated 7× (77 files), on the Xeon 8280 profile — plus the
+//! measured shard-scheduler counterpart (pinned vs stealing) on the
+//! same 77-file workload, the deployment form of the "weak" column.
 
 use smalltrack::benchkit::Table;
+use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
 use smalltrack::data::replicate::replicate_suite;
 use smalltrack::simcore::{calibrate_workload, simulate, MachineProfile, SimPolicy};
+use smalltrack::sort::SortParams;
 
 fn main() {
     // 7x replicated inputs, as in the paper
@@ -57,4 +61,47 @@ fn main() {
     let w14 = series[1].2;
     let w112 = series[4].2;
     assert!(w112 / w14 > 0.75, "weak scaling collapsed: {w14} -> {w112}");
+
+    // measured counterpart: the shard scheduler on the same 77 files.
+    // Replication preserves the heterogeneous 71..1000-frame mix, so
+    // pinned shards finish ragged and stealing reclaims the idle tail.
+    let params = SortParams { timing: false, ..Default::default() };
+    let mut measured = Table::new(
+        "Fig 4 (measured) — shard scheduler on 77 files (FPS, wall-clock)",
+        &["Workers", "Pinned", "Stealing", "stolen"],
+    );
+    let mut anchor: Option<u64> = None;
+    for p in [1usize, 2, 4] {
+        let mut fps = [0.0f64; 2];
+        let mut stolen = 0u64;
+        for (i, policy) in [ShardPolicy::Pinned, ShardPolicy::Stealing].iter().enumerate() {
+            for _ in 0..2 {
+                let r = run_shards(
+                    &suite,
+                    SchedulerConfig {
+                        workers: p,
+                        shard_policy: *policy,
+                        sort_params: params,
+                        queue_capacity: 128,
+                        ..Default::default()
+                    },
+                );
+                let a = *anchor.get_or_insert(r.tracks_out);
+                assert_eq!(r.tracks_out, a, "scheduler output drifted at p={p}");
+                if r.fps() > fps[i] {
+                    fps[i] = r.fps();
+                    if *policy == ShardPolicy::Stealing {
+                        stolen = r.stolen;
+                    }
+                }
+            }
+        }
+        measured.row(&[
+            format!("{p}"),
+            format!("{:.0}", fps[0]),
+            format!("{:.0}", fps[1]),
+            format!("{stolen}"),
+        ]);
+    }
+    measured.print();
 }

@@ -1,10 +1,14 @@
-//! Runtime metrics: FPS accounting and latency percentiles.
+//! Runtime metrics: FPS accounting, latency percentiles, and the
+//! per-worker scheduler counters.
 //!
 //! The paper reports frames-per-second (Table VI, Fig 4); the online
 //! serving example additionally reports per-frame latency percentiles
 //! (the workload is "latency-sensitive", §I). The histogram uses
 //! log-spaced buckets from 100 ns to 10 s — ample for both the ~2 µs
-//! native frame and multi-ms stress cases.
+//! native frame and multi-ms stress cases. [`WorkerCounters`] is the
+//! per-worker roll-up the throughput scheduler
+//! ([`crate::coordinator::scheduler`]) reports: streams run, streams
+//! stolen, frames, tracks, and busy-time FPS.
 
 use std::time::Duration;
 
@@ -46,6 +50,46 @@ impl FpsCounter {
     pub fn merge(&mut self, other: &FpsCounter) {
         self.frames += other.frames;
         self.busy += other.busy;
+    }
+}
+
+/// Per-worker scheduler counters (streams, steals, frames, busy FPS).
+///
+/// One instance lives on each scheduler worker thread; the scheduler
+/// report carries the per-worker vector and the aggregate is a fold of
+/// [`WorkerCounters::merge`].
+#[derive(Debug, Clone, Default)]
+pub struct WorkerCounters {
+    /// Streams fully tracked by this worker.
+    pub streams: u64,
+    /// Streams this worker executed away from their home shard.
+    pub stolen: u64,
+    /// Frames processed.
+    pub frames: u64,
+    /// Confirmed track-frames emitted.
+    pub tracks_out: u64,
+    /// Busy-time FPS accumulator (per-stream tracking time only; queue
+    /// wait is excluded — wall-clock FPS lives in the report).
+    pub fps: FpsCounter,
+}
+
+impl WorkerCounters {
+    /// Record one completed stream.
+    pub fn record_stream(&mut self, frames: u64, tracks_out: u64, stolen: bool, busy: Duration) {
+        self.streams += 1;
+        self.stolen += u64::from(stolen);
+        self.frames += frames;
+        self.tracks_out += tracks_out;
+        self.fps.record(frames, busy);
+    }
+
+    /// Merge another worker's counters (aggregate reporting).
+    pub fn merge(&mut self, other: &WorkerCounters) {
+        self.streams += other.streams;
+        self.stolen += other.stolen;
+        self.frames += other.frames;
+        self.tracks_out += other.tracks_out;
+        self.fps.merge(&other.fps);
     }
 }
 
@@ -166,6 +210,25 @@ mod tests {
     #[test]
     fn empty_fps_is_zero() {
         assert_eq!(FpsCounter::default().fps(), 0.0);
+    }
+
+    #[test]
+    fn worker_counters_record_and_merge() {
+        let mut a = WorkerCounters::default();
+        a.record_stream(100, 40, false, Duration::from_secs(1));
+        a.record_stream(50, 20, true, Duration::from_secs(1));
+        assert_eq!(a.streams, 2);
+        assert_eq!(a.stolen, 1);
+        assert_eq!(a.frames, 150);
+        assert_eq!(a.tracks_out, 60);
+        assert!((a.fps.fps() - 75.0).abs() < 1e-9);
+        let mut b = WorkerCounters::default();
+        b.record_stream(150, 60, true, Duration::from_secs(2));
+        a.merge(&b);
+        assert_eq!(a.streams, 3);
+        assert_eq!(a.stolen, 2);
+        assert_eq!(a.frames, 300);
+        assert!((a.fps.fps() - 75.0).abs() < 1e-9);
     }
 
     #[test]

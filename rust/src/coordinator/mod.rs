@@ -11,31 +11,40 @@
 //! [`crate::engine::EngineKind`].
 //!
 //! * [`pool`] — worker pool + fork-join parallel-for (the OpenMP analog)
-//! * [`policy`] — strong / weak / throughput scaling as scheduler modes
-//!   (Table VI / Fig 4 runners), generic over the engine
+//! * [`policy`] — strong / weak / throughput / sharded scaling as
+//!   scheduler modes (Table VI / Fig 4 runners), generic over the engine
+//! * [`scheduler`] — the work-stealing throughput scheduler: per-worker
+//!   LIFO deques, FIFO stealing, bounded admission (the production form
+//!   of the paper's throughput scaling)
 //! * [`strong`] — the intra-frame-parallel SORT variant (the `strong`
 //!   engine backend)
 //! * [`stream`] — online frame-arrival simulation over stored sequences
 //! * [`router`] — stream→worker pinning (sequential Kalman chains never
 //!   split across workers)
 //! * [`backpressure`] — bounded queues with block/shed policies
-//! * [`server`] — the online serving loop with latency metrics (E10)
-//! * [`metrics`] — FPS counters + latency histograms
+//! * [`server`] — the online serving loop with latency metrics (E10);
+//!   also fronts the sharded batch mode
+//! * [`metrics`] — FPS counters, latency histograms, per-worker
+//!   scheduler counters
 
 pub mod backpressure;
 pub mod metrics;
 pub mod policy;
 pub mod pool;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod stream;
 pub mod strong;
 
 pub use backpressure::{BoundedQueue, PushPolicy};
-pub use metrics::{FpsCounter, LatencyHistogram};
+pub use metrics::{FpsCounter, LatencyHistogram, WorkerCounters};
 pub use policy::{run_policy, run_policy_with_engine, ScalingOutcome, ScalingPolicy};
 pub use pool::WorkerPool;
 pub use router::{RoutePolicy, Router};
+pub use scheduler::{
+    run_shards, Scheduler, SchedulerConfig, SchedulerReport, ShardPolicy, StreamOutput,
+};
 pub use server::{serve, ServerConfig, ServerReport};
 pub use stream::{FrameJob, Pacing, VideoStream};
 pub use strong::ParallelSort;

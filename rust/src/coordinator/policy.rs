@@ -12,6 +12,11 @@
 //!   model of the paper's "p independent sequential executables";
 //!   the `smalltrack scaling --processes` CLI path runs real child
 //!   processes for the faithful variant).
+//! * **Sharded** — the [`super::scheduler`] runtime: streams shard to
+//!   home workers with bounded admission, optionally rebalanced by
+//!   work stealing. `Sharded { stealing: false }` is the dynamic-
+//!   dispatch form of `Throughput`; `stealing: true` is what a
+//!   deployment should run when sequence lengths are heterogeneous.
 //!
 //! This layer never constructs a concrete tracker: every runner takes
 //! an [`EngineKind`] and builds engines through the
@@ -40,6 +45,15 @@ pub enum ScalingPolicy {
     Weak { workers: usize },
     /// `workers` isolated workers with statically partitioned files.
     Throughput { workers: usize },
+    /// The work-stealing shard scheduler ([`super::scheduler`]):
+    /// `workers` deque-owning workers, streams pinned to home shards,
+    /// rebalanced by stealing when `stealing` is set.
+    Sharded {
+        /// Worker (shard) count.
+        workers: usize,
+        /// Allow idle workers to steal queued streams.
+        stealing: bool,
+    },
 }
 
 impl ScalingPolicy {
@@ -49,6 +63,9 @@ impl ScalingPolicy {
             ScalingPolicy::Strong { threads } => format!("strong(p={threads})"),
             ScalingPolicy::Weak { workers } => format!("weak(p={workers})"),
             ScalingPolicy::Throughput { workers } => format!("throughput(p={workers})"),
+            ScalingPolicy::Sharded { workers, stealing } => {
+                format!("sharded(p={workers},{})", if *stealing { "stealing" } else { "pinned" })
+            }
         }
     }
 
@@ -58,7 +75,9 @@ impl ScalingPolicy {
     pub fn default_engine(&self) -> EngineKind {
         match self {
             ScalingPolicy::Strong { threads } => EngineKind::Strong { threads: *threads },
-            ScalingPolicy::Weak { .. } | ScalingPolicy::Throughput { .. } => EngineKind::Native,
+            ScalingPolicy::Weak { .. }
+            | ScalingPolicy::Throughput { .. }
+            | ScalingPolicy::Sharded { .. } => EngineKind::Native,
         }
     }
 }
@@ -121,6 +140,20 @@ pub fn run_policy_with_engine(
         ScalingPolicy::Strong { .. } => run_sequential(suite, engine, params),
         ScalingPolicy::Weak { workers } => run_weak(suite, workers, engine, params),
         ScalingPolicy::Throughput { workers } => run_throughput(suite, workers, engine, params),
+        ScalingPolicy::Sharded { workers, stealing } => {
+            let cfg = super::scheduler::SchedulerConfig {
+                workers,
+                shard_policy: if stealing {
+                    super::scheduler::ShardPolicy::Stealing
+                } else {
+                    super::scheduler::ShardPolicy::Pinned
+                },
+                engine,
+                sort_params: params,
+                ..Default::default()
+            };
+            super::scheduler::run_shards(suite, cfg).tracks_out
+        }
     };
     ScalingOutcome {
         policy,
@@ -251,6 +284,7 @@ mod tests {
             ScalingPolicy::Strong { threads: 2 },
             ScalingPolicy::Weak { workers: 2 },
             ScalingPolicy::Throughput { workers: 2 },
+            ScalingPolicy::Sharded { workers: 2, stealing: true },
         ] {
             let o = run_policy(&suite, policy, SortParams::default());
             assert_eq!(o.frames, total, "{policy:?}");
@@ -266,6 +300,8 @@ mod tests {
             ScalingPolicy::Strong { threads: 2 },
             ScalingPolicy::Weak { workers: 3 },
             ScalingPolicy::Throughput { workers: 2 },
+            ScalingPolicy::Sharded { workers: 2, stealing: false },
+            ScalingPolicy::Sharded { workers: 3, stealing: true },
             ScalingPolicy::Weak { workers: 1 },
         ]
         .into_iter()
@@ -290,6 +326,7 @@ mod tests {
                 ScalingPolicy::Strong { threads: 2 },
                 ScalingPolicy::Weak { workers: 2 },
                 ScalingPolicy::Throughput { workers: 2 },
+                ScalingPolicy::Sharded { workers: 2, stealing: true },
             ] {
                 let o = run_policy_with_engine(&suite, policy, kind, params);
                 assert_eq!(o.frames, baseline.frames, "{policy:?} x {}", kind.label());
@@ -309,6 +346,12 @@ mod tests {
         let o = run_policy(&suite, ScalingPolicy::Weak { workers: 16 }, SortParams::default());
         assert_eq!(o.frames, 180);
         let o = run_policy(&suite, ScalingPolicy::Throughput { workers: 16 }, SortParams::default());
+        assert_eq!(o.frames, 180);
+        let o = run_policy(
+            &suite,
+            ScalingPolicy::Sharded { workers: 16, stealing: true },
+            SortParams::default(),
+        );
         assert_eq!(o.frames, 180);
     }
 

@@ -10,17 +10,31 @@
 //!   per-invocation thread spawn/join cost is deliberately representative:
 //!   the paper's point is that this overhead dwarfs the tiny-matrix work.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Jobs outstanding + the first panic payload caught from one.
+struct Pending {
+    count: usize,
+    panic: Option<Box<dyn Any + Send + 'static>>,
+}
+
 /// Fixed-size thread pool with a shared unbounded job queue.
+///
+/// Jobs that panic do not kill their worker thread or get silently
+/// swallowed: the worker catches the unwind, keeps serving the queue,
+/// and the first panic payload is re-raised from [`WorkerPool::wait_idle`]
+/// on the joining thread — so a panicking tracker frame surfaces in
+/// the caller instead of zeroing its partial results.
 pub struct WorkerPool {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, Condvar)>,
+    pending: Arc<(Mutex<Pending>, Condvar)>,
 }
 
 impl WorkerPool {
@@ -29,7 +43,8 @@ impl WorkerPool {
         assert!(n > 0, "pool needs at least one worker");
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let pending: Arc<(Mutex<Pending>, Condvar)> =
+            Arc::new((Mutex::new(Pending { count: 0, panic: None }), Condvar::new()));
         let mut handles = Vec::with_capacity(n);
         for i in 0..n {
             let rx = Arc::clone(&rx);
@@ -44,11 +59,17 @@ impl WorkerPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
+                                // catch so the worker survives and the
+                                // pending count always reaches zero; the
+                                // payload is re-raised in wait_idle
+                                let result = catch_unwind(AssertUnwindSafe(job));
                                 let (lock, cv) = &*pending;
                                 let mut p = lock.lock().unwrap();
-                                *p -= 1;
-                                if *p == 0 {
+                                p.count -= 1;
+                                if let Err(payload) = result {
+                                    p.panic.get_or_insert(payload);
+                                }
+                                if p.count == 0 {
                                     cv.notify_all();
                                 }
                             }
@@ -69,7 +90,7 @@ impl WorkerPool {
     /// Enqueue a job.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
         let (lock, _) = &*self.pending;
-        *lock.lock().unwrap() += 1;
+        lock.lock().unwrap().count += 1;
         self.tx
             .as_ref()
             .expect("pool alive")
@@ -78,11 +99,19 @@ impl WorkerPool {
     }
 
     /// Block until every submitted job has finished.
+    ///
+    /// If any job panicked since the last call, the first panic is
+    /// re-raised here (after all jobs have drained) instead of being
+    /// silently dropped with the worker.
     pub fn wait_idle(&self) {
         let (lock, cv) = &*self.pending;
         let mut p = lock.lock().unwrap();
-        while *p > 0 {
+        while p.count > 0 {
             p = cv.wait(p).unwrap();
+        }
+        if let Some(payload) = p.panic.take() {
+            drop(p);
+            resume_unwind(payload);
         }
     }
 }
@@ -216,6 +245,61 @@ mod tests {
         pool.wait_idle();
         drop(pool);
         assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "job exploded")]
+    fn job_panic_propagates_through_wait_idle() {
+        let pool = WorkerPool::new(2);
+        pool.submit(|| panic!("job exploded"));
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(1);
+        pool.submit(|| panic!("first job dies"));
+        // the panic surfaces on wait_idle ...
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| pool.wait_idle()));
+        assert!(caught.is_err(), "wait_idle must re-raise the job panic");
+        // ... and the (single) worker thread is still alive to run more
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn remaining_jobs_still_run_when_one_panics() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                if i == 3 {
+                    panic!("one of twenty");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| pool.wait_idle()));
+        assert!(caught.is_err());
+        assert_eq!(counter.load(Ordering::SeqCst), 19, "non-panicking jobs must all finish");
+    }
+
+    #[test]
+    #[should_panic]
+    fn parallel_zip_mut_propagates_worker_panic() {
+        let mut a: Vec<u64> = (0..16).collect();
+        let mut b: Vec<u64> = vec![0; 16];
+        parallel_zip_mut(&mut a, &mut b, 4, |i, _, _| {
+            if i == 9 {
+                panic!("mid-frame worker panic");
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,701 @@
+//! Work-stealing throughput scheduler — stream-granular sharding.
+//!
+//! The paper's scaling result (§VI, Table VI) is that SORT's per-frame
+//! work is too small to split across threads: the win comes from
+//! *throughput* parallelism, where each core drives independent video
+//! sequences end to end. [`Scheduler`] turns that finding into a real
+//! runtime instead of a static partition:
+//!
+//! ```text
+//!                        submit() … join()
+//!                                │
+//!                     ┌──────────▼──────────┐
+//!                     │ BoundedQueue<Task>  │  admission control
+//!                     │ (backpressure.rs:   │  Block = lossless
+//!                     │  Block | DropOldest)│  DropOldest = shed+count
+//!                     └──────────┬──────────┘
+//!                                │ dispatcher thread
+//!                                │ (withholds while in-flight ≥ cap)
+//!              ┌─────────────────┼─────────────────┐
+//!              ▼                 ▼                 ▼
+//!        deque[0]          deque[1]          deque[N-1]   home = id % N
+//!        (LIFO own /       (LIFO own /       (LIFO own /
+//!         FIFO steal)       FIFO steal)       FIFO steal)
+//!              │                 │                 │
+//!         worker 0          worker 1          worker N-1
+//!       1 TrackerEngine,  reused via reset() between streams
+//! ```
+//!
+//! * **Sharding** — every stream has a *home* worker (`stream_id %
+//!   workers`); the dispatcher pushes each admitted stream onto its
+//!   home deque. Under [`ShardPolicy::Pinned`] that is final — the
+//!   paper's static "1 core per video file" partition.
+//! * **Stealing** — under [`ShardPolicy::Stealing`] a worker whose own
+//!   deque is empty steals the *oldest* queued stream (FIFO end) from
+//!   the most loaded peer, while owners pop their *newest* (LIFO end).
+//!   This is the classic work-stealing discipline at stream
+//!   granularity: owners keep cache-warm recent work, thieves take the
+//!   work that has waited longest, and load imbalance from
+//!   heterogeneous sequence lengths evens out.
+//! * **Determinism** — a stream is tracked start-to-finish by exactly
+//!   one worker on one engine that is [`TrackerEngine::reset`] first,
+//!   so every stream's track output is byte-identical to a fresh
+//!   single-threaded run no matter which worker executes it or in what
+//!   order streams complete (pinned `rust/tests/integration_scheduler.rs`).
+//! * **No allocation after warm-up** — workers build one engine lazily
+//!   and reuse it for every stream they run; tasks move between deques
+//!   as `Arc<Sequence>` handles, never by copying frames.
+//!
+//! Tasks are whole sequences (hundreds of frames, milliseconds of
+//! work), so the deques are guarded by one mutex rather than lock-free
+//! Chase–Lev buffers: one uncontended lock round per *stream* is noise
+//! next to the stream's own tracking work, and the scheduling
+//! *discipline* (LIFO owner / FIFO thief / bounded admission) is what
+//! the benches measure.
+
+use super::backpressure::{BoundedQueue, PushPolicy};
+use super::metrics::{LatencyHistogram, WorkerCounters};
+use crate::data::mot::Sequence;
+use crate::engine::{EngineKind, TrackerEngine};
+use crate::sort::{Bbox, SortParams};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// How streams may move between workers after initial sharding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// A stream runs on its home worker (`stream_id % workers`), full
+    /// stop — the paper's static throughput partition. Tail latency is
+    /// bounded by the unluckiest shard.
+    Pinned,
+    /// Idle workers steal the oldest queued stream from the most
+    /// loaded peer. Same per-stream output (streams never split), but
+    /// heterogeneous stream lengths no longer leave workers idle.
+    Stealing,
+}
+
+impl ShardPolicy {
+    /// Parse a CLI `--shard-policy` value.
+    pub fn parse(name: &str) -> crate::Result<ShardPolicy> {
+        match name {
+            "pinned" => Ok(ShardPolicy::Pinned),
+            "stealing" => Ok(ShardPolicy::Stealing),
+            other => anyhow::bail!("unknown shard policy '{other}' (expected pinned|stealing)"),
+        }
+    }
+
+    /// Stable policy name (`pinned` | `stealing`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardPolicy::Pinned => "pinned",
+            ShardPolicy::Stealing => "stealing",
+        }
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Worker threads; each owns one long-lived [`TrackerEngine`].
+    pub workers: usize,
+    /// Pinned (static shards) or stealing (load-balanced shards).
+    pub shard_policy: ShardPolicy,
+    /// Tracker backend each worker builds (lazily, on first stream).
+    pub engine: EngineKind,
+    /// Tracker parameters shared by every engine.
+    pub sort_params: SortParams,
+    /// Admission-queue depth: streams submitted but not yet dispatched.
+    pub queue_capacity: usize,
+    /// What a full admission queue does to `submit` —
+    /// [`PushPolicy::Block`] (lossless) or [`PushPolicy::DropOldest`]
+    /// (shed the longest-waiting undispatched stream, counted in
+    /// [`SchedulerReport::shed`]).
+    pub admission: PushPolicy,
+    /// Dispatch bound: streams dispatched to deques but not yet
+    /// finished. The dispatcher withholds new streams at this bound so
+    /// backpressure reaches producers instead of piling into deques.
+    pub max_in_flight: usize,
+    /// Collect full per-stream track rows in the report (tests,
+    /// `track --out`); benches leave this off to keep workers
+    /// allocation-free after warm-up.
+    pub collect_tracks: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            workers: 2,
+            shard_policy: ShardPolicy::Stealing,
+            engine: EngineKind::Native,
+            sort_params: SortParams { timing: false, ..Default::default() },
+            queue_capacity: 64,
+            admission: PushPolicy::Block,
+            max_in_flight: 256,
+            collect_tracks: false,
+        }
+    }
+}
+
+/// One stream's tracking output, reported when
+/// [`SchedulerConfig::collect_tracks`] is on.
+#[derive(Debug, Clone)]
+pub struct StreamOutput {
+    /// Submission-order stream id.
+    pub stream_id: usize,
+    /// Sequence name.
+    pub name: String,
+    /// Worker that executed the stream.
+    pub worker: usize,
+    /// True when the executing worker was not the home worker.
+    pub stolen: bool,
+    /// Frames processed.
+    pub frames: u64,
+    /// `(frame_index, track_id, bbox)` rows, MOT order — identical to
+    /// a single-threaded run of the same engine on the same stream.
+    pub rows: Vec<(u32, u64, Bbox)>,
+}
+
+/// Aggregate result of a scheduler run.
+#[derive(Debug)]
+pub struct SchedulerReport {
+    /// Per-stream outputs sorted by `stream_id` (empty unless
+    /// [`SchedulerConfig::collect_tracks`]).
+    pub outputs: Vec<StreamOutput>,
+    /// Streams fully tracked.
+    pub streams: u64,
+    /// Streams executed by a non-home worker (0 under `Pinned`).
+    pub stolen: u64,
+    /// Streams shed by admission control (`DropOldest` only).
+    pub shed: u64,
+    /// Frames processed across all streams.
+    pub frames: u64,
+    /// Confirmed track-frames emitted (output sanity anchor — must
+    /// match a serial run of the same suite).
+    pub tracks_out: u64,
+    /// Wall time from scheduler start to full drain.
+    pub elapsed: Duration,
+    /// Per-worker counters, indexed by worker id.
+    pub per_worker: Vec<WorkerCounters>,
+    /// Per-frame engine-processing latency across all workers.
+    pub latency: LatencyHistogram,
+}
+
+impl SchedulerReport {
+    /// Frames per second of wall time — the paper's Table VI metric.
+    pub fn fps(&self) -> f64 {
+        let s = self.elapsed.as_secs_f64();
+        if s > 0.0 {
+            self.frames as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A unit of scheduling: one whole stream.
+struct StreamTask {
+    stream_id: usize,
+    seq: Arc<Sequence>,
+}
+
+/// Deque state shared by dispatcher and workers.
+struct State {
+    deques: Vec<VecDeque<StreamTask>>,
+    /// Dispatched-but-unfinished streams (deque depth + running).
+    in_flight: usize,
+    /// Ingress drained and dispatcher exited: workers finish and stop.
+    closed: bool,
+    /// A worker panicked: everyone abandons queued work and exits so
+    /// `join` can re-raise instead of deadlocking on orphaned tasks.
+    poisoned: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for deque work.
+    work: Condvar,
+    /// The dispatcher waits here for `in_flight` to fall below bound.
+    space: Condvar,
+    stealing: bool,
+    max_in_flight: usize,
+}
+
+/// The work-stealing throughput scheduler (see module docs).
+///
+/// Lifecycle: [`Scheduler::new`] spawns workers + dispatcher;
+/// [`Scheduler::submit`] feeds streams through admission control;
+/// [`Scheduler::join`] closes ingress, drains, and returns the
+/// [`SchedulerReport`]. [`run_shards`] wraps the three for batch runs.
+pub struct Scheduler {
+    ingress: Arc<BoundedQueue<StreamTask>>,
+    next_id: AtomicUsize,
+    workers: Vec<thread::JoinHandle<WorkerResult>>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    t0: Instant,
+}
+
+struct WorkerResult {
+    counters: WorkerCounters,
+    latency: LatencyHistogram,
+    outputs: Vec<StreamOutput>,
+}
+
+impl Scheduler {
+    /// Spawn `cfg.workers` worker threads and the dispatcher.
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        let n = cfg.workers.max(1);
+        let ingress: Arc<BoundedQueue<StreamTask>> =
+            Arc::new(BoundedQueue::new(cfg.queue_capacity.max(1), cfg.admission));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                deques: (0..n).map(|_| VecDeque::new()).collect(),
+                in_flight: 0,
+                closed: false,
+                poisoned: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            stealing: cfg.shard_policy == ShardPolicy::Stealing,
+            max_in_flight: cfg.max_in_flight.max(1),
+        });
+
+        let mut workers = Vec::with_capacity(n);
+        for w in 0..n {
+            let shared = Arc::clone(&shared);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("smalltrack-shard-{w}"))
+                    .spawn(move || worker_loop(w, n, cfg, shared))
+                    .expect("spawn shard worker"),
+            );
+        }
+
+        let dispatcher = {
+            let ingress = Arc::clone(&ingress);
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("smalltrack-dispatch".into())
+                .spawn(move || dispatcher_loop(n, ingress, shared))
+                .expect("spawn dispatcher")
+        };
+
+        Scheduler {
+            ingress,
+            next_id: AtomicUsize::new(0),
+            workers,
+            dispatcher: Some(dispatcher),
+            t0: Instant::now(),
+        }
+    }
+
+    /// Submit one stream through admission control; returns its
+    /// assigned stream id, or `None` if the scheduler is closed.
+    ///
+    /// With [`PushPolicy::Block`] admission this blocks while the
+    /// ingress queue is full (lossless backpressure to the producer);
+    /// with [`PushPolicy::DropOldest`] it always succeeds and the
+    /// longest-waiting undispatched stream is shed instead.
+    pub fn submit(&self, seq: Arc<Sequence>) -> Option<usize> {
+        let stream_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if self.ingress.push(StreamTask { stream_id, seq }) {
+            Some(stream_id)
+        } else {
+            None
+        }
+    }
+
+    /// Close ingress, drain every admitted stream, join all threads,
+    /// and aggregate the report.
+    ///
+    /// A worker panic poisons the scheduler: peers abandon queued
+    /// streams, everything unwinds cleanly, and the original panic is
+    /// re-raised here — never a deadlock on orphaned work.
+    pub fn join(mut self) -> SchedulerReport {
+        self.ingress.close();
+        if let Some(d) = self.dispatcher.take() {
+            if let Err(payload) = d.join() {
+                // the dispatcher holds no engine state; its panic can
+                // only be a scheduler bug — surface the original
+                std::panic::resume_unwind(payload);
+            }
+        }
+        let shed = self.ingress.dropped();
+        let mut report = SchedulerReport {
+            outputs: Vec::new(),
+            streams: 0,
+            stolen: 0,
+            shed,
+            frames: 0,
+            tracks_out: 0,
+            elapsed: Duration::ZERO,
+            per_worker: Vec::with_capacity(self.workers.len()),
+            latency: LatencyHistogram::new(),
+        };
+        for h in self.workers.drain(..) {
+            match h.join() {
+                Ok(r) => {
+                    report.streams += r.counters.streams;
+                    report.stolen += r.counters.stolen;
+                    report.frames += r.counters.frames;
+                    report.tracks_out += r.counters.tracks_out;
+                    report.latency.merge(&r.latency);
+                    report.per_worker.push(r.counters);
+                    report.outputs.extend(r.outputs);
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        report.outputs.sort_by_key(|o| o.stream_id);
+        report.elapsed = self.t0.elapsed();
+        report
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        // a dropped-without-join scheduler must not leak live threads
+        self.ingress.close();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Dispatcher: ingress → home deque, bounded by `max_in_flight`.
+fn dispatcher_loop(workers: usize, ingress: Arc<BoundedQueue<StreamTask>>, shared: Arc<Shared>) {
+    loop {
+        // wait for dispatch room before consuming from admission, so a
+        // full system backs pressure up into the ingress queue where
+        // the configured PushPolicy (block/shed) applies; a poisoned
+        // scheduler stops bounding (workers are exiting and will never
+        // drain in_flight) and just empties ingress until close
+        {
+            let mut st = shared.state.lock().unwrap();
+            while st.in_flight >= shared.max_in_flight && !st.poisoned {
+                st = shared.space.wait(st).unwrap();
+            }
+        }
+        match ingress.pop() {
+            Some(task) => {
+                let home = task.stream_id % workers;
+                let mut st = shared.state.lock().unwrap();
+                st.in_flight += 1;
+                st.deques[home].push_back(task);
+                drop(st);
+                shared.work.notify_all();
+            }
+            None => {
+                // ingress closed and drained: signal workers to finish
+                let mut st = shared.state.lock().unwrap();
+                st.closed = true;
+                drop(st);
+                shared.work.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// Worker: LIFO-pop own deque, FIFO-steal from the most loaded peer.
+fn worker_loop(
+    w: usize,
+    workers: usize,
+    cfg: SchedulerConfig,
+    shared: Arc<Shared>,
+) -> WorkerResult {
+    let mut engine: Option<Box<dyn TrackerEngine>> = None;
+    let mut counters = WorkerCounters::default();
+    let mut latency = LatencyHistogram::new();
+    let mut outputs: Vec<StreamOutput> = Vec::new();
+    let mut boxes: Vec<Bbox> = Vec::with_capacity(16);
+
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        // a poisoned scheduler abandons queued work immediately — the
+        // panic is about to be re-raised from join, so tracking more
+        // streams would only delay the unwind
+        if st.poisoned {
+            shared.work.notify_all();
+            return WorkerResult { counters, latency, outputs };
+        }
+        // own work first: newest stream (LIFO) keeps the engine's warm
+        // scratch sized for what was just queued
+        let mut task = st.deques[w].pop_back();
+        if task.is_none() && shared.stealing {
+            // steal the oldest stream (FIFO) from the deepest deque
+            let victim = (0..workers)
+                .filter(|&v| v != w && !st.deques[v].is_empty())
+                .max_by_key(|&v| st.deques[v].len());
+            if let Some(v) = victim {
+                task = st.deques[v].pop_front();
+            }
+        }
+
+        let Some(task) = task else {
+            // Exit when drained. The dispatcher's close notification
+            // wakes everyone once; after that, the only event that can
+            // complete the predicate is a peer popping the last queued
+            // task — that peer is awake by definition, will observe
+            // the predicate itself, and its exit notify_all below
+            // cascades the remaining waiters out.
+            if st.closed && st.deques.iter().all(VecDeque::is_empty) {
+                shared.work.notify_all();
+                return WorkerResult { counters, latency, outputs };
+            }
+            st = shared.work.wait(st).unwrap();
+            continue;
+        };
+        drop(st);
+
+        // Run the stream to completion on this worker's one engine.
+        // The run is unwind-caught so a panicking engine still
+        // decrements in_flight (otherwise the dispatcher's bound wait
+        // would deadlock join); the panic is then re-raised and
+        // propagates through Scheduler::join.
+        let stolen = task.stream_id % workers != w;
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let engine = engine.get_or_insert_with(|| {
+                cfg.engine.build(cfg.sort_params).expect("build shard engine")
+            });
+            engine.reset();
+            let mut rows: Vec<(u32, u64, Bbox)> = Vec::new();
+            let mut frames = 0u64;
+            let mut tracks = 0u64;
+            let t0 = Instant::now();
+            for frame in &task.seq.frames {
+                boxes.clear();
+                boxes.extend(frame.detections.iter().map(|d| d.bbox));
+                let f0 = Instant::now();
+                let out = engine.update(&boxes);
+                latency.record(f0.elapsed());
+                tracks += out.len() as u64;
+                if cfg.collect_tracks {
+                    rows.extend(out.iter().map(|t| (frame.index, t.id, t.bbox)));
+                }
+                frames += 1;
+            }
+            (frames, tracks, rows, t0.elapsed())
+        }));
+
+        st = shared.state.lock().unwrap();
+        st.in_flight -= 1;
+        shared.space.notify_one();
+        match run {
+            Ok((frames, tracks, rows, dt)) => {
+                counters.record_stream(frames, tracks, stolen, dt);
+                if cfg.collect_tracks {
+                    outputs.push(StreamOutput {
+                        stream_id: task.stream_id,
+                        name: task.seq.name.clone(),
+                        worker: w,
+                        stolen,
+                        frames,
+                        rows,
+                    });
+                }
+            }
+            Err(payload) => {
+                // poison so peers stop waiting for this worker's
+                // orphaned home-deque tasks and the dispatcher stops
+                // bounding on in_flight that will never drain
+                st.poisoned = true;
+                drop(st);
+                shared.work.notify_all();
+                shared.space.notify_one();
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
+/// Run a whole suite through a fresh scheduler and return the report —
+/// the batch entry point used by the scaling policy, the benches and
+/// the CLI.
+pub fn run_shards(
+    suite: &[crate::data::synth::SynthSequence],
+    cfg: SchedulerConfig,
+) -> SchedulerReport {
+    // clone into Arc handles before the scheduler starts its wall
+    // clock, so submission-side copying never counts toward FPS
+    let streams: Vec<Arc<Sequence>> =
+        suite.iter().map(|s| Arc::new(s.sequence.clone())).collect();
+    let sched = Scheduler::new(cfg);
+    for s in streams {
+        sched.submit(s);
+    }
+    sched.join()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_sequence, SynthConfig, SynthSequence};
+
+    fn hetero_suite(n: usize) -> Vec<SynthSequence> {
+        (0..n)
+            .map(|i| {
+                let frames = 30 + 37 * (i as u32 % 5);
+                let objects = 3 + (i as u32 % 4);
+                generate_sequence(&SynthConfig::mot15(&format!("H{i}"), frames, objects, i as u64))
+            })
+            .collect()
+    }
+
+    fn serial_tracks(suite: &[SynthSequence]) -> u64 {
+        let params = SortParams { timing: false, ..Default::default() };
+        suite.iter().map(|s| crate::coordinator::policy::run_sequence_serial(s, params).1).sum()
+    }
+
+    #[test]
+    fn processes_every_stream_and_frame() {
+        let suite = hetero_suite(9);
+        let total_frames: u64 = suite.iter().map(|s| s.sequence.n_frames() as u64).sum();
+        for policy in [ShardPolicy::Pinned, ShardPolicy::Stealing] {
+            let report = run_shards(
+                &suite,
+                SchedulerConfig { workers: 3, shard_policy: policy, ..Default::default() },
+            );
+            assert_eq!(report.streams, 9, "{}", policy.label());
+            assert_eq!(report.frames, total_frames);
+            assert_eq!(report.shed, 0);
+            assert_eq!(report.tracks_out, serial_tracks(&suite));
+            assert!(report.fps() > 0.0);
+            assert_eq!(report.per_worker.len(), 3);
+            let by_worker: u64 = report.per_worker.iter().map(|c| c.streams).sum();
+            assert_eq!(by_worker, 9);
+        }
+    }
+
+    #[test]
+    fn pinned_never_steals_and_respects_home() {
+        let suite = hetero_suite(8);
+        let report = run_shards(
+            &suite,
+            SchedulerConfig {
+                workers: 4,
+                shard_policy: ShardPolicy::Pinned,
+                collect_tracks: true,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.stolen, 0);
+        for o in &report.outputs {
+            assert_eq!(o.worker, o.stream_id % 4, "stream {} off home", o.stream_id);
+            assert!(!o.stolen);
+        }
+    }
+
+    #[test]
+    fn stealing_matches_pinned_output_exactly() {
+        let suite = hetero_suite(10);
+        let mk = |policy| {
+            run_shards(
+                &suite,
+                SchedulerConfig {
+                    workers: 3,
+                    shard_policy: policy,
+                    collect_tracks: true,
+                    ..Default::default()
+                },
+            )
+        };
+        let pinned = mk(ShardPolicy::Pinned);
+        let stealing = mk(ShardPolicy::Stealing);
+        assert_eq!(pinned.outputs.len(), stealing.outputs.len());
+        for (a, b) in pinned.outputs.iter().zip(&stealing.outputs) {
+            assert_eq!(a.stream_id, b.stream_id);
+            assert_eq!(a.rows, b.rows, "stream {} diverged across policies", a.stream_id);
+        }
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_serial_order() {
+        let suite = hetero_suite(5);
+        let report = run_shards(
+            &suite,
+            SchedulerConfig { workers: 1, collect_tracks: true, ..Default::default() },
+        );
+        assert_eq!(report.streams, 5);
+        assert_eq!(report.stolen, 0);
+        assert_eq!(report.tracks_out, serial_tracks(&suite));
+    }
+
+    #[test]
+    fn shed_admission_conserves_streams() {
+        // 1 worker, 1-deep admission, 1 in flight, shed policy: most
+        // streams are shed while the worker grinds the first; every
+        // submitted stream is either executed or counted shed
+        let suite = hetero_suite(12);
+        let report = run_shards(
+            &suite,
+            SchedulerConfig {
+                workers: 1,
+                queue_capacity: 1,
+                max_in_flight: 1,
+                admission: PushPolicy::DropOldest,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.streams + report.shed, 12, "stream conservation");
+        assert!(report.shed > 0, "tiny queue must shed under burst submission");
+    }
+
+    #[test]
+    fn block_admission_is_lossless_beyond_capacity() {
+        let suite = hetero_suite(12);
+        let report = run_shards(
+            &suite,
+            SchedulerConfig {
+                workers: 2,
+                queue_capacity: 2,
+                max_in_flight: 2,
+                admission: PushPolicy::Block,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.streams, 12);
+        assert_eq!(report.tracks_out, serial_tracks(&suite));
+    }
+
+    #[test]
+    fn submit_after_join_path_is_safe() {
+        // dropping without join must not hang or leak threads
+        let sched = Scheduler::new(SchedulerConfig::default());
+        let s = generate_sequence(&SynthConfig::mot15("DR", 20, 3, 1));
+        sched.submit(Arc::new(s.sequence));
+        drop(sched);
+    }
+
+    #[test]
+    fn every_engine_runs_under_both_policies() {
+        let suite = hetero_suite(4);
+        let anchor = serial_tracks(&suite);
+        for kind in EngineKind::all(2) {
+            for policy in [ShardPolicy::Pinned, ShardPolicy::Stealing] {
+                let report = run_shards(
+                    &suite,
+                    SchedulerConfig {
+                        workers: 2,
+                        shard_policy: policy,
+                        engine: kind,
+                        ..Default::default()
+                    },
+                );
+                assert_eq!(
+                    report.tracks_out,
+                    anchor,
+                    "engine {} under {} diverged",
+                    kind.label(),
+                    policy.label()
+                );
+            }
+        }
+    }
+}

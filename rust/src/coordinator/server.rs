@@ -15,10 +15,19 @@
 //! The tracker backend is injected via [`ServerConfig::engine`]; the
 //! serving loop knows only the [`TrackerEngine`] trait.
 //! Metrics: arrival→completion latency percentiles, FPS, drops.
+//!
+//! Two execution modes share this front door:
+//! * **online** (default) — the paced frame-granular pipeline above;
+//! * **sharded** ([`ServerConfig::shard`] = `Some(policy)`) — whole
+//!   streams are handed to the work-stealing
+//!   [`super::scheduler::Scheduler`] and drained at full speed, the
+//!   batch/backfill mode. Latency then measures per-frame engine time
+//!   rather than arrival→completion.
 
 use super::backpressure::{BoundedQueue, PushPolicy};
 use super::metrics::{FpsCounter, LatencyHistogram};
 use super::router::{RoutePolicy, Router};
+use super::scheduler::{Scheduler, SchedulerConfig, ShardPolicy};
 use super::stream::{FrameJob, VideoStream};
 use crate::engine::{EngineKind, TrackerEngine};
 use crate::sort::SortParams;
@@ -43,6 +52,10 @@ pub struct ServerConfig {
     pub engine: EngineKind,
     /// Tracker parameters.
     pub sort_params: SortParams,
+    /// `Some(policy)` switches the server into sharded batch mode:
+    /// whole streams go through the work-stealing scheduler instead of
+    /// the paced frame pipeline. `None` (default) serves online.
+    pub shard: Option<ShardPolicy>,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +67,7 @@ impl Default for ServerConfig {
             route_policy: RoutePolicy::LeastLoaded,
             engine: EngineKind::Native,
             sort_params: SortParams { timing: false, ..Default::default() },
+            shard: None,
         }
     }
 }
@@ -89,10 +103,15 @@ impl ServerReport {
 
 /// Run a set of streams to completion and report.
 ///
-/// The dispatcher thread simulates arrivals (honoring each stream's
-/// pacing), routes frames to pinned workers, then closes the queues;
-/// workers drain and exit.
+/// Online mode: the dispatcher thread simulates arrivals (honoring
+/// each stream's pacing), routes frames to pinned workers, then closes
+/// the queues; workers drain and exit. Sharded mode
+/// ([`ServerConfig::shard`]): streams bypass pacing and run through
+/// the work-stealing scheduler at full speed.
 pub fn serve(streams: Vec<VideoStream>, cfg: ServerConfig) -> ServerReport {
+    if let Some(policy) = cfg.shard {
+        return serve_sharded(streams, cfg, policy);
+    }
     let queues: Vec<Arc<BoundedQueue<FrameJob>>> = (0..cfg.workers)
         .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity, cfg.push_policy)))
         .collect();
@@ -180,6 +199,38 @@ pub fn serve(streams: Vec<VideoStream>, cfg: ServerConfig) -> ServerReport {
     report
 }
 
+/// Sharded batch mode: whole streams through the scheduler.
+///
+/// `dropped` counts *streams* shed by admission (0 under
+/// [`PushPolicy::Block`]); latency is per-frame engine time.
+fn serve_sharded(
+    streams: Vec<VideoStream>,
+    cfg: ServerConfig,
+    policy: ShardPolicy,
+) -> ServerReport {
+    let sched = Scheduler::new(SchedulerConfig {
+        workers: cfg.workers,
+        shard_policy: policy,
+        engine: cfg.engine,
+        sort_params: cfg.sort_params,
+        queue_capacity: cfg.queue_capacity,
+        admission: cfg.push_policy,
+        ..Default::default()
+    });
+    for s in streams {
+        sched.submit(Arc::new(s.into_sequence()));
+    }
+    let report = sched.join();
+    ServerReport {
+        frames_done: report.frames,
+        tracks_out: report.tracks_out,
+        dropped: report.shed,
+        elapsed: report.elapsed,
+        latency: report.latency,
+        per_worker_fps: report.per_worker.iter().map(|c| c.fps.clone()).collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +314,32 @@ mod tests {
             );
             assert_eq!(report.dropped, 0, "{}", kind.label());
             assert_eq!(report.tracks_out, offline_tracks, "engine {}", kind.label());
+        }
+    }
+
+    #[test]
+    fn sharded_mode_matches_online_track_output() {
+        // the sharded front door must produce the same tracks as the
+        // lossless online pipeline on the same streams
+        let online = serve(
+            mk_streams(4, 60, Pacing::Unpaced),
+            ServerConfig { workers: 2, push_policy: PushPolicy::Block, ..Default::default() },
+        );
+        for policy in [ShardPolicy::Pinned, ShardPolicy::Stealing] {
+            let sharded = serve(
+                mk_streams(4, 60, Pacing::Unpaced),
+                ServerConfig {
+                    workers: 2,
+                    push_policy: PushPolicy::Block,
+                    shard: Some(policy),
+                    ..Default::default()
+                },
+            );
+            assert_eq!(sharded.frames_done, 240, "{}", policy.label());
+            assert_eq!(sharded.dropped, 0);
+            assert_eq!(sharded.tracks_out, online.tracks_out, "{}", policy.label());
+            assert_eq!(sharded.per_worker_fps.len(), 2);
+            assert!(sharded.latency.count() > 0);
         }
     }
 

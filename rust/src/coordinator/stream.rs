@@ -72,6 +72,12 @@ impl VideoStream {
         self.seq.frames.len() - self.cursor
     }
 
+    /// Unwrap the underlying sequence (drops pacing and cursor) — the
+    /// sharded serve mode hands whole sequences to the scheduler.
+    pub fn into_sequence(self) -> Sequence {
+        self.seq
+    }
+
     /// Instant at which the next frame becomes available
     /// (`None` when the stream is exhausted).
     pub fn next_due(&mut self) -> Option<Instant> {

@@ -11,10 +11,18 @@
 //! The paper's finding — that this *slows the tracker down* because
 //! 7×7 matrices cannot amortize a parallel region — is reproduced by
 //! `cargo bench --bench table6_scaling`.
+//!
+//! Like [`crate::sort::Sort`], the pipeline carries a
+//! [`PhaseTimer`] (when `params.timing` is set): the per-phase wall
+//! times *include* the fork-join overhead of each parallel region,
+//! which is precisely the cost the paper's strong-scaling experiment
+//! measures. Worker panics inside a parallel region unwind through the
+//! scoped join and surface in the caller — the timer is never left
+//! silently holding a half-recorded frame.
 
 use super::pool::parallel_zip_mut;
 use crate::sort::association::{associate, AssociationScratch};
-use crate::sort::{Bbox, KalmanBoxTracker, SortConstants, SortParams, Track};
+use crate::sort::{Bbox, KalmanBoxTracker, Phase, PhaseTimer, SortConstants, SortParams, Track};
 
 /// Strong-scaled SORT pipeline for one stream.
 #[derive(Debug)]
@@ -29,6 +37,11 @@ pub struct ParallelSort {
     assoc: AssociationScratch,
     out: Vec<Track>,
     iou_buf: Vec<f64>,
+    /// Per-phase timing (fork-join overhead included); enabled by
+    /// `params.timing`, merged by harnesses like [`Sort`]'s.
+    ///
+    /// [`Sort`]: crate::sort::Sort
+    pub phases: PhaseTimer,
 }
 
 impl ParallelSort {
@@ -45,6 +58,7 @@ impl ParallelSort {
             assoc: AssociationScratch::default(),
             out: Vec::with_capacity(32),
             iou_buf: Vec::new(),
+            phases: PhaseTimer::new(params.timing),
         }
     }
 
@@ -61,6 +75,7 @@ impl ParallelSort {
         self.frame_count = 0;
         self.next_id = 0;
         self.out.clear();
+        self.phases.reset();
     }
 
     /// Process one frame (parallel phases; same semantics as `Sort`).
@@ -68,29 +83,31 @@ impl ParallelSort {
         self.frame_count += 1;
         let consts = self.consts.clone();
         let params = self.params;
+        let threads = self.threads;
 
         // --- predict: p-way parallel over trackers (a parallel region
-        // per frame, like `#pragma omp parallel for`)
-        let n = self.trackers.len();
-        self.predicted.clear();
-        self.predicted.resize(n, Bbox::default());
-        parallel_zip_mut(
-            &mut self.trackers,
-            &mut self.predicted,
-            self.threads,
-            |_, trk, slot| {
-                *slot = trk.predict(&consts);
-            },
-        );
-        // serial NaN compaction (index-coupled removal)
-        let mut i = 0;
-        while i < self.trackers.len() {
-            if self.predicted[i].is_finite() {
-                i += 1;
-            } else {
-                self.trackers.remove(i);
-                self.predicted.remove(i);
-            }
+        // per frame, like `#pragma omp parallel for`), then serial NaN
+        // compaction (index-coupled removal)
+        {
+            let trackers = &mut self.trackers;
+            let predicted = &mut self.predicted;
+            let consts_ref = &consts;
+            self.phases.time(Phase::Predict, || {
+                predicted.clear();
+                predicted.resize(trackers.len(), Bbox::default());
+                parallel_zip_mut(trackers, predicted, threads, |_, trk, slot| {
+                    *slot = trk.predict(consts_ref);
+                });
+                let mut i = 0;
+                while i < trackers.len() {
+                    if predicted[i].is_finite() {
+                        i += 1;
+                    } else {
+                        trackers.remove(i);
+                        predicted.remove(i);
+                    }
+                }
+            });
         }
 
         // --- association: parallel IoU rows + serial Hungarian.
@@ -98,19 +115,23 @@ impl ParallelSort {
         // measured parallel region honest we precompute rows in
         // parallel here and the serial recompute inside `associate` is
         // skipped by passing the same scratch buffer pre-filled.
-        let nd = dets.len();
-        let nt = self.predicted.len();
-        if nd > 0 && nt > 0 {
-            self.iou_buf.clear();
-            self.iou_buf.resize(nd * nt, 0.0);
-            let preds = &self.predicted;
-            let buf = &mut self.iou_buf;
-            // parallel over detection rows
-            let rows: Vec<&mut [f64]> = buf.chunks_mut(nt).collect();
-            let mut rows = rows;
-            parallel_for_rows(&mut rows, dets, preds, self.threads);
-        }
-        let result = associate(dets, &self.predicted, params.iou_threshold, params.method, &mut self.assoc);
+        let result = {
+            let predicted = &self.predicted;
+            let iou_buf = &mut self.iou_buf;
+            let assoc = &mut self.assoc;
+            self.phases.time(Phase::Assign, || {
+                let nd = dets.len();
+                let nt = predicted.len();
+                if nd > 0 && nt > 0 {
+                    iou_buf.clear();
+                    iou_buf.resize(nd * nt, 0.0);
+                    // parallel over detection rows
+                    let mut rows: Vec<&mut [f64]> = iou_buf.chunks_mut(nt).collect();
+                    parallel_for_rows(&mut rows, dets, predicted, threads);
+                }
+                associate(dets, predicted, params.iou_threshold, params.method, assoc)
+            })
+        };
 
         // --- update matched trackers in parallel
         // Collect (tracker index -> det index) then update disjointly.
@@ -118,34 +139,53 @@ impl ParallelSort {
         for &(d, t) in &result.matched {
             z_for[t] = Some(d);
         }
-        let trackers = &mut self.trackers;
-        let consts_ref = &consts;
-        parallel_zip_mut(trackers, &mut z_for, self.threads, |_, trk, z| {
-            if let Some(d) = z {
-                trk.update(&dets[*d], consts_ref, params.cov_form);
-            }
-        });
+        {
+            let trackers = &mut self.trackers;
+            let consts_ref = &consts;
+            self.phases.time(Phase::Update, || {
+                parallel_zip_mut(trackers, &mut z_for, threads, |_, trk, z| {
+                    if let Some(d) = z {
+                        trk.update(&dets[*d], consts_ref, params.cov_form);
+                    }
+                });
+            });
+        }
 
         // --- create new trackers (serial: id allocation is sequential)
-        for &d in &result.unmatched_dets {
-            self.trackers.push(KalmanBoxTracker::new(self.next_id, &dets[d], &consts));
-            self.next_id += 1;
+        {
+            let trackers = &mut self.trackers;
+            let next_id = &mut self.next_id;
+            let consts_ref = &consts;
+            self.phases.time(Phase::CreateNew, || {
+                for &d in &result.unmatched_dets {
+                    trackers.push(KalmanBoxTracker::new(*next_id, &dets[d], consts_ref));
+                    *next_id += 1;
+                }
+            });
         }
 
         // --- output + cull (serial, as in the original)
-        self.out.clear();
-        let mut i = self.trackers.len();
-        while i > 0 {
-            i -= 1;
-            let trk = &self.trackers[i];
-            if trk.time_since_update < 1
-                && (trk.hit_streak >= params.min_hits || self.frame_count <= params.min_hits as u64)
-            {
-                self.out.push(Track { id: trk.id + 1, bbox: trk.state_bbox() });
-            }
-            if trk.time_since_update > params.max_age {
-                self.trackers.remove(i);
-            }
+        {
+            let trackers = &mut self.trackers;
+            let out = &mut self.out;
+            let frame_count = self.frame_count;
+            self.phases.time(Phase::Output, || {
+                out.clear();
+                let mut i = trackers.len();
+                while i > 0 {
+                    i -= 1;
+                    let trk = &trackers[i];
+                    if trk.time_since_update < 1
+                        && (trk.hit_streak >= params.min_hits
+                            || frame_count <= params.min_hits as u64)
+                    {
+                        out.push(Track { id: trk.id + 1, bbox: trk.state_bbox() });
+                    }
+                    if trk.time_since_update > params.max_age {
+                        trackers.remove(i);
+                    }
+                }
+            });
         }
         &self.out
     }
@@ -217,6 +257,28 @@ mod tests {
         assert_eq!(reused.n_trackers(), 0);
         let second = run(&mut reused, &mut boxes);
         assert_eq!(first, second, "reset must reproduce a fresh run");
+    }
+
+    #[test]
+    fn phase_timer_records_parallel_phases() {
+        let b = |k: f64| Bbox::new(10.0 + k, 10.0, 40.0 + k, 80.0);
+        let mut p = ParallelSort::new(SortParams::default(), 2);
+        for k in 0..10 {
+            p.update(&[b(k as f64)]);
+        }
+        assert_eq!(p.phases.get(Phase::Predict).count, 10);
+        assert_eq!(p.phases.get(Phase::Assign).count, 10);
+        assert_eq!(p.phases.get(Phase::Output).count, 10);
+        assert!(p.phases.total_elapsed() > std::time::Duration::ZERO);
+        p.reset();
+        assert_eq!(p.phases.get(Phase::Predict).count, 0, "reset clears the timer");
+    }
+
+    #[test]
+    fn disabled_timing_records_nothing() {
+        let mut p = ParallelSort::new(SortParams { timing: false, ..Default::default() }, 2);
+        p.update(&[Bbox::new(0.0, 0.0, 10.0, 20.0)]);
+        assert_eq!(p.phases.get(Phase::Predict).count, 0);
     }
 
     #[test]

@@ -11,11 +11,17 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (parsed as `f64`).
     Num(f64),
+    /// String literal.
     Str(String),
+    /// Array.
     Arr(Vec<Value>),
+    /// Object (sorted keys).
     Obj(BTreeMap<String, Value>),
 }
 

@@ -15,6 +15,24 @@
 //! and matrix sizes only — the paper's whole point — matching counts
 //! and noise statistics preserves the arithmetic footprint that the
 //! paper's tables measure.
+//!
+//! Generate a stream and track it:
+//!
+//! ```
+//! use smalltrack::data::synth::{generate_sequence, SynthConfig};
+//! use smalltrack::sort::{Sort, SortParams};
+//!
+//! let synth = generate_sequence(&SynthConfig::mot15("TUD-Campus", 71, 6, 7));
+//! assert_eq!(synth.sequence.n_frames(), 71);
+//!
+//! let mut tracker = Sort::new(SortParams::default());
+//! let mut track_frames = 0;
+//! for frame in &synth.sequence.frames {
+//!     let boxes: Vec<_> = frame.detections.iter().map(|d| d.bbox).collect();
+//!     track_frames += tracker.update(&boxes).len();
+//! }
+//! assert!(track_frames > 0, "a 6-object stream must yield confirmed tracks");
+//! ```
 
 use super::mot::{Detection, FrameDets, Sequence};
 use crate::prng::Rng;

@@ -29,6 +29,27 @@ use crate::sort::{Bbox, PhaseTimer, Sort, SortParams, Track};
 /// Implementations own all per-stream state (filter states, lifecycle
 /// counters, scratch buffers). `update` must be called once per frame,
 /// in order, with an empty slice when the frame has no detections.
+///
+/// The minimal track-one-stream loop:
+///
+/// ```
+/// use smalltrack::data::synth::{generate_sequence, SynthConfig};
+/// use smalltrack::engine::EngineKind;
+/// use smalltrack::sort::{Bbox, SortParams};
+///
+/// let synth = generate_sequence(&SynthConfig::mot15("ENG", 40, 5, 3));
+/// let mut engine = EngineKind::Native.build(SortParams::default()).unwrap();
+/// let mut boxes: Vec<Bbox> = Vec::new();
+/// let mut track_frames = 0;
+/// for frame in &synth.sequence.frames {
+///     boxes.clear();
+///     boxes.extend(frame.detections.iter().map(|d| d.bbox));
+///     track_frames += engine.update(&boxes).len();
+/// }
+/// assert!(track_frames > 0);
+/// engine.reset(); // ready for the next stream, scratch kept warm
+/// assert_eq!(engine.n_trackers(), 0);
+/// ```
 pub trait TrackerEngine: Send {
     /// Process one frame of detections; returns the confirmed tracks,
     /// valid until the next call.
@@ -80,7 +101,7 @@ impl TrackerEngine for ParallelSort {
     }
 
     fn phases(&self) -> Option<&PhaseTimer> {
-        None
+        Some(&self.phases)
     }
 
     fn reset(&mut self) {
@@ -271,6 +292,14 @@ mod tests {
         let mut e = EngineKind::Native.build(SortParams::default()).unwrap();
         e.update(&[Bbox::new(0.0, 0.0, 10.0, 20.0)]);
         let phases = e.phases().expect("native collects phases");
+        assert_eq!(phases.get(crate::sort::Phase::Predict).count, 1);
+    }
+
+    #[test]
+    fn strong_engine_exposes_phases() {
+        let mut e = EngineKind::Strong { threads: 2 }.build(SortParams::default()).unwrap();
+        e.update(&[Bbox::new(0.0, 0.0, 10.0, 20.0)]);
+        let phases = e.phases().expect("strong collects phases (incl. fork-join overhead)");
         assert_eq!(phases.get(crate::sort::Phase::Predict).count, 1);
     }
 }

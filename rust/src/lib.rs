@@ -22,10 +22,12 @@
 //!   three tracker backends (`native` [`sort::Sort`], `strong`
 //!   [`coordinator::ParallelSort`], `xla` [`runtime::TrackerBank`]);
 //!   everything downstream programs against it.
-//! * [`coordinator`] — the multi-stream runtime: worker pool, the three
-//!   scaling policies (strong / weak / throughput) as first-class
-//!   scheduler modes, backpressure, metrics. Engines are injected via
-//!   [`engine::EngineKind`], never constructed inline.
+//! * [`coordinator`] — the multi-stream runtime: worker pool, the
+//!   scaling policies (strong / weak / throughput / sharded) as
+//!   first-class scheduler modes, the work-stealing
+//!   [`coordinator::scheduler::Scheduler`], backpressure, metrics.
+//!   Engines are injected via [`engine::EngineKind`], never
+//!   constructed inline.
 //! * [`simcore`] — a calibrated discrete-event multicore simulator used
 //!   to regenerate the paper's 18/36/72-core tables on this testbed.
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
@@ -37,19 +39,24 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use smalltrack::data::synth::{SynthConfig, generate_sequence};
 //! use smalltrack::sort::{Sort, SortParams};
 //!
 //! let synth = generate_sequence(&SynthConfig::mot15("TUD-Campus", 71, 6, 7));
 //! let mut tracker = Sort::new(SortParams::default());
+//! let mut track_frames = 0;
 //! for frame in &synth.sequence.frames {
 //!     let boxes: Vec<_> = frame.detections.iter().map(|d| d.bbox).collect();
-//!     for t in tracker.update(&boxes) {
-//!         println!("frame {} id {} box {:?}", frame.index, t.id, t.bbox);
-//!     }
+//!     track_frames += tracker.update(&boxes).len();
 //! }
+//! assert!(track_frames > 0);
 //! ```
+//!
+//! The repo-level `ARCHITECTURE.md` maps every module (and every paper
+//! table) to its file.
+
+#![warn(missing_docs)]
 
 pub mod benchkit;
 pub mod coordinator;

@@ -125,8 +125,11 @@ pub fn record(k: Kernel, flops: u64, bytes: u64) {
 /// Per-kernel aggregate.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct KernelStats {
+    /// Kernel invocations.
     pub calls: u64,
+    /// Floating-point operations performed.
     pub flops: u64,
+    /// Operand bytes moved (per-operation accounting).
     pub bytes: u64,
 }
 
@@ -144,6 +147,7 @@ impl KernelStats {
 /// Snapshot of all kernel counters for the calling thread.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
+    /// One aggregate per kernel kind, indexed by `Kernel as usize`.
     pub per_kernel: [KernelStats; N_KERNELS],
 }
 

@@ -14,6 +14,7 @@
 
 use anyhow::{bail, Context, Result};
 use smalltrack::coordinator::policy::{run_policy_with_engine, ScalingPolicy};
+use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
 use smalltrack::coordinator::{serve, Pacing, ServerConfig, VideoStream};
 use smalltrack::data::mot::{read_det_file, write_det_file, write_track_file};
 use smalltrack::data::synth::{generate_suite, SynthSequence};
@@ -111,8 +112,11 @@ COMMANDS
   gen-data  --out DIR [--seed N] [--replicas K]     write synthetic MOT det.txt suite
   track     --det FILE[,FILE..] [--out DIR] [--engine E]  track det.txt files, print timing
   suite     [--seed N]                              full Table I suite, in-memory
-  serve     [--workers N] [--stream-fps F] [--seed N] [--engine E]  online serving demo
-  scaling   [--policy strong|weak|throughput] [--p N] [--processes] [--replicas K] [--engine E]
+  serve     [--workers N] [--stream-fps F] [--seed N] [--engine E]
+            [--shard-policy pinned|stealing]        online serving demo (sharded batch
+                                                    mode when --shard-policy is given)
+  scaling   [--policy strong|weak|throughput|sharded] [--p N] [--workers N]
+            [--shard-policy pinned|stealing] [--processes] [--replicas K] [--engine E]
   simulate  [--machine skx6140|clx8280] [--replicas K] [--seed N]
   xla       [--seed N] [--frames N]                 track via the XLA bank path
 
@@ -120,7 +124,11 @@ ENGINES (--engine, default native)
   native    single-core structure-aware Sort (the paper's fast path)
   strong    intra-frame fork-join ParallelSort (--threads N, default 2)
   xla       batched tracker bank (AOT kernels, or the built-in
-            reference interpreter when `make artifacts` has not run)"
+            reference interpreter when `make artifacts` has not run)
+
+SHARD SCHEDULER (--workers N --shard-policy pinned|stealing)
+  pinned    streams stay on their home worker (static throughput shards)
+  stealing  idle workers steal the oldest queued stream (load balance)"
     );
 }
 
@@ -234,17 +242,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stream_fps: f64 = args.num("stream-fps", 30.0f64)?;
     let seed: u64 = args.num("seed", 7u64)?;
     let engine = args.engine()?;
+    let shard = args.get("shard-policy").map(ShardPolicy::parse).transpose()?;
     let suite = generate_suite(seed);
+    // sharded batch mode drains at full speed; pacing only matters online
+    let pacing = if shard.is_some() { Pacing::Unpaced } else { Pacing::fps(stream_fps) };
     let streams: Vec<VideoStream> = suite
         .into_iter()
         .enumerate()
-        .map(|(i, s)| VideoStream::new(i, s.sequence, Pacing::fps(stream_fps)))
+        .map(|(i, s)| VideoStream::new(i, s.sequence, pacing))
         .collect();
-    println!(
-        "serving 11 streams at {stream_fps} fps on {workers} workers ({} engine) ...",
-        engine.label()
-    );
-    let report = serve(streams, ServerConfig { workers, engine, ..Default::default() });
+    match shard {
+        Some(p) => println!(
+            "serving 11 streams sharded ({}) on {workers} workers ({} engine) ...",
+            p.label(),
+            engine.label()
+        ),
+        None => println!(
+            "serving 11 streams at {stream_fps} fps on {workers} workers ({} engine) ...",
+            engine.label()
+        ),
+    }
+    let report = serve(streams, ServerConfig { workers, engine, shard, ..Default::default() });
     let (p50, p95, p99, max) = report.latency.summary();
     println!(
         "frames={} dropped={} wall={:.2}s agg_fps={:.0}",
@@ -267,11 +285,15 @@ fn cmd_scaling(args: &Args) -> Result<()> {
     if args.has("processes") {
         return scaling_processes(&suite, p);
     }
+    // the sharded policy prints the richer scheduler report
+    if args.get("policy") == Some("sharded") {
+        return scaling_sharded(args, &suite, p);
+    }
     let policy = match args.get("policy").unwrap_or("weak") {
         "strong" => ScalingPolicy::Strong { threads: p },
         "weak" => ScalingPolicy::Weak { workers: p },
         "throughput" => ScalingPolicy::Throughput { workers: p },
-        other => bail!("unknown policy '{other}'"),
+        other => bail!("unknown policy '{other}' (try strong|weak|throughput|sharded)"),
     };
     // engine defaults to the policy's natural backend, overridable
     // with --engine (any backend composes with any schedule); for an
@@ -293,6 +315,45 @@ fn cmd_scaling(args: &Args) -> Result<()> {
         o.elapsed.as_secs_f64(),
         o.fps()
     );
+    Ok(())
+}
+
+/// Sharded scaling via the work-stealing scheduler, with per-worker
+/// counters (`--workers N --shard-policy pinned|stealing`).
+fn scaling_sharded(args: &Args, suite: &[SynthSequence], p: usize) -> Result<()> {
+    let workers: usize = args.num("workers", p)?;
+    let policy = ShardPolicy::parse(args.get("shard-policy").unwrap_or("stealing"))?;
+    let engine = args.engine()?;
+    let report = run_shards(
+        suite,
+        SchedulerConfig {
+            workers,
+            shard_policy: policy,
+            engine,
+            sort_params: params_fast(),
+            ..Default::default()
+        },
+    );
+    println!(
+        "sharded(p={workers},{}) [{} engine]: files={} frames={} stolen={} shed={} wall={:.3}s fps={:.0}",
+        policy.label(),
+        engine.label(),
+        report.streams,
+        report.frames,
+        report.stolen,
+        report.shed,
+        report.elapsed.as_secs_f64(),
+        report.fps()
+    );
+    for (w, c) in report.per_worker.iter().enumerate() {
+        println!(
+            "  worker {w}: streams={} stolen={} frames={} busy_fps={:.0}",
+            c.streams,
+            c.stolen,
+            c.frames,
+            c.fps.fps()
+        );
+    }
     Ok(())
 }
 

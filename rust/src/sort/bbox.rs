@@ -10,9 +10,13 @@ use crate::linalg::counters::{record, Kernel};
 /// Axis-aligned box `[x1, y1, x2, y2]` (top-left / bottom-right).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Bbox {
+    /// Left edge.
     pub x1: f64,
+    /// Top edge.
     pub y1: f64,
+    /// Right edge.
     pub x2: f64,
+    /// Bottom edge.
     pub y2: f64,
 }
 

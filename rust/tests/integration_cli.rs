@@ -79,6 +79,37 @@ fn scaling_policies_run() {
 }
 
 #[test]
+fn scaling_sharded_reports_workers() {
+    for shard in ["pinned", "stealing"] {
+        let out = bin()
+            .args(["scaling", "--policy", "sharded", "--workers", "2", "--shard-policy", shard])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{shard}: {}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains(&format!("sharded(p=2,{shard})")), "{text}");
+        assert!(text.contains("frames=5500"), "{shard}: {text}");
+        assert!(text.contains("worker 0:"), "{text}");
+        assert!(text.contains("worker 1:"), "{text}");
+        if shard == "pinned" {
+            assert!(text.contains("stolen=0"), "pinned must not steal: {text}");
+        }
+    }
+}
+
+#[test]
+fn serve_sharded_mode_runs() {
+    let out = bin()
+        .args(["serve", "--workers", "2", "--shard-policy", "stealing"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sharded (stealing)"), "{text}");
+    assert!(text.contains("frames=5500"), "{text}");
+}
+
+#[test]
 fn scaling_with_real_processes() {
     let out = bin().args(["scaling", "--processes", "--p", "2"]).output().unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));

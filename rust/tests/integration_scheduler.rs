@@ -1,0 +1,201 @@
+//! Scheduler equivalence: the work-stealing shard scheduler must be a
+//! pure throughput transform — pinned and stealing shard policies, at
+//! any worker count, produce byte-identical tracks to a fresh
+//! single-threaded `Sort` run on the same synthetic streams.
+//!
+//! This is the determinism contract that makes the scheduler safe to
+//! deploy: which worker runs a stream, and in what order streams
+//! complete, must never leak into the tracking output.
+
+use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
+use smalltrack::data::synth::{generate_sequence, SynthConfig, SynthSequence};
+use smalltrack::engine::EngineKind;
+use smalltrack::sort::{Bbox, SortParams};
+
+fn params() -> SortParams {
+    SortParams { timing: false, ..Default::default() }
+}
+
+/// A heterogeneous suite: frame counts 40..260, object counts 3..7 —
+/// enough spread that stealing actually happens at 2 and 8 workers.
+fn suite() -> Vec<SynthSequence> {
+    (0..10)
+        .map(|i| {
+            let frames = 40 + 55 * (i as u32 % 5);
+            let objects = 3 + (i as u32 % 5);
+            generate_sequence(&SynthConfig::mot15(&format!("SCHED-{i}"), frames, objects, i as u64))
+        })
+        .collect()
+}
+
+/// Reference: single-threaded native `Sort`, one fresh engine per
+/// stream, collecting `(frame, id, bbox)` rows.
+fn serial_rows(suite: &[SynthSequence]) -> Vec<Vec<(u32, u64, Bbox)>> {
+    suite
+        .iter()
+        .map(|s| {
+            let mut engine = EngineKind::Native.build(params()).expect("build");
+            let mut rows = Vec::new();
+            let mut boxes: Vec<Bbox> = Vec::new();
+            for frame in &s.sequence.frames {
+                boxes.clear();
+                boxes.extend(frame.detections.iter().map(|d| d.bbox));
+                for t in engine.update(&boxes) {
+                    rows.push((frame.index, t.id, t.bbox));
+                }
+            }
+            rows
+        })
+        .collect()
+}
+
+/// Render rows as MOT track-file lines so "byte-identical" is checked
+/// on actual serialized bytes, not just on f64 equality.
+fn to_bytes(rows: &[(u32, u64, Bbox)]) -> Vec<u8> {
+    let mut out = String::new();
+    for (frame, id, b) in rows {
+        out.push_str(&format!(
+            "{},{},{:.2},{:.2},{:.2},{:.2},1,-1,-1,-1\n",
+            frame,
+            id,
+            b.x1,
+            b.y1,
+            b.x2 - b.x1,
+            b.y2 - b.y1
+        ));
+    }
+    out.into_bytes()
+}
+
+#[test]
+fn shard_policies_are_byte_identical_to_serial_sort() {
+    let suite = suite();
+    let reference = serial_rows(&suite);
+    for workers in [1usize, 2, 8] {
+        for policy in [ShardPolicy::Pinned, ShardPolicy::Stealing] {
+            let report = run_shards(
+                &suite,
+                SchedulerConfig {
+                    workers,
+                    shard_policy: policy,
+                    sort_params: params(),
+                    collect_tracks: true,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(report.shed, 0);
+            assert_eq!(report.outputs.len(), suite.len(), "w={workers} {}", policy.label());
+            for (out, want) in report.outputs.iter().zip(&reference) {
+                assert_eq!(
+                    out.rows, *want,
+                    "stream {} (w={workers}, {}) diverged from serial Sort",
+                    out.stream_id,
+                    policy.label()
+                );
+                assert_eq!(
+                    to_bytes(&out.rows),
+                    to_bytes(want),
+                    "stream {} (w={workers}, {}) serialized bytes differ",
+                    out.stream_id,
+                    policy.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stealing_actually_steals_on_imbalanced_shards() {
+    // streams 0 and 2 (both homed on worker 0) carry ~27x the frames
+    // of the short clips: worker 0 cannot clear its deque before
+    // worker 1 drains its own short shard and comes stealing,
+    // regardless of pop order or thread start timing
+    let mut suite: Vec<SynthSequence> = Vec::new();
+    for i in 0..8u32 {
+        let frames = if i == 0 || i == 2 { 800 } else { 30 };
+        suite.push(generate_sequence(&SynthConfig::mot15(
+            &format!("S{i}"),
+            frames,
+            5,
+            i as u64,
+        )));
+    }
+    let report = run_shards(
+        &suite,
+        SchedulerConfig {
+            workers: 2,
+            shard_policy: ShardPolicy::Stealing,
+            sort_params: params(),
+            ..Default::default()
+        },
+    );
+    assert_eq!(report.streams, 8);
+    // worker 0's home shard carries 1660 frames vs worker 1's 120:
+    // whichever thread runs ahead must cross shards to finish the batch
+    assert!(report.stolen > 0, "no steals despite a 14x-imbalanced shard");
+    // pinned on the same suite must not steal
+    let pinned = run_shards(
+        &suite,
+        SchedulerConfig {
+            workers: 2,
+            shard_policy: ShardPolicy::Pinned,
+            sort_params: params(),
+            ..Default::default()
+        },
+    );
+    assert_eq!(pinned.stolen, 0);
+    assert_eq!(pinned.tracks_out, report.tracks_out, "steal policy changed tracker output");
+}
+
+#[test]
+fn repeat_runs_are_deterministic() {
+    let suite = suite();
+    let run = || {
+        run_shards(
+            &suite,
+            SchedulerConfig {
+                workers: 8,
+                shard_policy: ShardPolicy::Stealing,
+                sort_params: params(),
+                collect_tracks: true,
+                ..Default::default()
+            },
+        )
+    };
+    let a = run();
+    let b = run();
+    for (x, y) in a.outputs.iter().zip(&b.outputs) {
+        assert_eq!(x.stream_id, y.stream_id);
+        assert_eq!(x.rows, y.rows, "stream {} varies across runs", x.stream_id);
+    }
+}
+
+#[test]
+fn every_engine_is_schedulable_with_identical_tracks() {
+    // small suite: the xla interpreter engine is much slower per frame
+    let suite: Vec<SynthSequence> = (0..4)
+        .map(|i| generate_sequence(&SynthConfig::mot15(&format!("E{i}"), 50, 4, i as u64)))
+        .collect();
+    let reference = serial_rows(&suite);
+    for kind in EngineKind::all(2) {
+        let report = run_shards(
+            &suite,
+            SchedulerConfig {
+                workers: 2,
+                shard_policy: ShardPolicy::Stealing,
+                engine: kind,
+                sort_params: params(),
+                collect_tracks: true,
+                ..Default::default()
+            },
+        );
+        for (out, want) in report.outputs.iter().zip(&reference) {
+            assert_eq!(
+                out.rows, *want,
+                "engine {} stream {} diverged from serial Sort",
+                kind.label(),
+                out.stream_id
+            );
+        }
+    }
+}
