@@ -2,7 +2,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts test bench fmt clippy
+.PHONY: artifacts test test-nocounters bench fmt clippy
 
 # Lower the JAX/Pallas tracker-bank graphs to HLO text + export the
 # golden parity/track JSONs and the manifest (requires python with jax;
@@ -13,6 +13,10 @@ artifacts:
 
 test:
 	cargo build --release && cargo test -q
+
+# counters-off configuration: record() compiles to a no-op
+test-nocounters:
+	cargo test -q --no-default-features
 
 bench:
 	cargo bench

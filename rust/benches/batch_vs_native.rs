@@ -1,0 +1,115 @@
+//! Batch-vs-native engine bench: per-frame latency, single-stream
+//! throughput, and the kernel-counter instrumentation tax.
+//!
+//! The paper's thesis applied to our own hot loop: at 7×7 matrices the
+//! per-tracker *overhead* (pointer chasing across `KalmanBoxTracker`
+//! objects, one counter bump per kernel call) rivals the arithmetic.
+//! The `batch` engine keeps all trackers in SoA lanes and records one
+//! counter event per kernel kind per frame; this bench measures what
+//! that buys at 1 / 8 / 32 trackers per frame, with the thread-local
+//! counters enabled and runtime-disabled. (Compile with
+//! `--no-default-features` to remove the instrumentation entirely —
+//! the residual "off" tax below is the branch the feature deletes.)
+//!
+//! Run modes: `cargo bench --bench batch_vs_native` (full), or append
+//! `smoke` (CI) for a seconds-long pass with the same table shape.
+
+use smalltrack::benchkit::{bench, fmt_duration, BenchConfig, Table};
+use smalltrack::data::synth::{generate_sequence, SynthConfig};
+use smalltrack::engine::{run_sequence, EngineKind, TrackerEngine};
+use smalltrack::linalg::set_counters_enabled;
+use smalltrack::sort::SortParams;
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "smoke" || a == "--smoke");
+    let cfg = if smoke {
+        BenchConfig {
+            warmup: Duration::from_millis(30),
+            samples: 3,
+            min_sample_time: Duration::from_millis(2),
+        }
+    } else {
+        BenchConfig::quick()
+    };
+    let frames: u32 = if smoke { 120 } else { 300 };
+    let params = SortParams { timing: false, ..Default::default() };
+
+    let mut table = Table::new(
+        &format!(
+            "batch vs native — {frames}-frame single stream{}",
+            if smoke { " (smoke mode)" } else { "" }
+        ),
+        &["trackers", "counters", "engine", "time/frame", "fps", "vs native", "tracks"],
+    );
+
+    for &n_obj in &[1u32, 8, 32] {
+        let synth =
+            generate_sequence(&SynthConfig::mot15(&format!("BVN-{n_obj}"), frames, n_obj, 21));
+        let n_frames = synth.sequence.n_frames() as u64;
+
+        // equality gate before any timing: batch must be byte-identical
+        // to native on this workload, frame by frame
+        {
+            let mut native = EngineKind::Native.build(params).expect("native");
+            let mut batch = EngineKind::Batch.build(params).expect("batch");
+            let mut boxes = Vec::new();
+            for frame in &synth.sequence.frames {
+                boxes.clear();
+                boxes.extend(frame.detections.iter().map(|d| d.bbox));
+                let a = native.update(&boxes).to_vec();
+                let b = batch.update(&boxes);
+                assert_eq!(a.len(), b.len(), "track count diverged (frame {})", frame.index);
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.id, y.id, "ids diverged (frame {})", frame.index);
+                    assert_eq!(
+                        x.bbox.to_array().map(f64::to_bits),
+                        y.bbox.to_array().map(f64::to_bits),
+                        "boxes diverged (frame {}, id {})",
+                        frame.index,
+                        x.id
+                    );
+                }
+            }
+        }
+        let mut want_tracks: Option<u64> = None;
+        for counters_on in [true, false] {
+            set_counters_enabled(counters_on);
+            let mut native_per_frame = 0.0f64;
+            for kind in [EngineKind::Native, EngineKind::Batch] {
+                let mut engine = kind.build(params).expect("build engine");
+                let mut tracks = 0u64;
+                let m = bench(kind.label(), &cfg, n_frames, || {
+                    engine.reset();
+                    tracks = run_sequence(&mut *engine, &synth.sequence).1;
+                });
+                // the comparison is meaningless if the engines diverge
+                match want_tracks {
+                    None => want_tracks = Some(tracks),
+                    Some(w) => assert_eq!(tracks, w, "engine {} diverged", kind.label()),
+                }
+                let per_frame = m.median() / n_frames as f64;
+                let rel = if kind == EngineKind::Native {
+                    native_per_frame = per_frame;
+                    "1.00x".to_string()
+                } else {
+                    format!("{:.2}x", per_frame / native_per_frame)
+                };
+                table.row(&[
+                    format!("{n_obj}"),
+                    if counters_on { "on" } else { "off" }.to_string(),
+                    kind.label().to_string(),
+                    fmt_duration(per_frame),
+                    format!("{:.0}", m.rate()),
+                    rel,
+                    format!("{tracks}"),
+                ]);
+            }
+        }
+        set_counters_enabled(true);
+    }
+    table.print();
+    println!("\n'vs native' < 1.00x = the SoA lanes + one-record-per-frame win;");
+    println!("'off' rows show the runtime counter tax (compile-time removal:");
+    println!("cargo bench --no-default-features removes even the off-branch).");
+}

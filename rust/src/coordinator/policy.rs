@@ -21,7 +21,8 @@
 //! This layer never constructs a concrete tracker: every runner takes
 //! an [`EngineKind`] and builds engines through the
 //! [`crate::engine::TrackerEngine`] trait, so any backend — native,
-//! strong-scaled, XLA bank, or a future one — slots into any schedule.
+//! batched SoA, strong-scaled, XLA bank, or a future one — slots into
+//! any schedule.
 //! Workers build one engine each and [`TrackerEngine::reset`] it
 //! between sequences (warm scratch buffers are reused).
 //!

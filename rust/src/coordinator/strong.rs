@@ -21,8 +21,10 @@
 //! silently holding a half-recorded frame.
 
 use super::pool::parallel_zip_mut;
-use crate::sort::association::{associate, AssociationScratch};
-use crate::sort::{Bbox, KalmanBoxTracker, Phase, PhaseTimer, SortConstants, SortParams, Track};
+use crate::sort::association::{associate_from_matrix_into, associate_into};
+use crate::sort::{
+    Bbox, FrameScratch, KalmanBoxTracker, Phase, PhaseTimer, SortConstants, SortParams, Track,
+};
 
 /// Strong-scaled SORT pipeline for one stream.
 #[derive(Debug)]
@@ -34,9 +36,10 @@ pub struct ParallelSort {
     frame_count: u64,
     next_id: u64,
     predicted: Vec<Bbox>,
-    assoc: AssociationScratch,
+    assoc: FrameScratch,
     out: Vec<Track>,
     iou_buf: Vec<f64>,
+    z_for: Vec<Option<usize>>,
     /// Per-phase timing (fork-join overhead included); enabled by
     /// `params.timing`, merged by harnesses like [`Sort`]'s.
     ///
@@ -55,9 +58,10 @@ impl ParallelSort {
             frame_count: 0,
             next_id: 0,
             predicted: Vec::with_capacity(32),
-            assoc: AssociationScratch::default(),
+            assoc: FrameScratch::default(),
             out: Vec::with_capacity(32),
             iou_buf: Vec::new(),
+            z_for: Vec::with_capacity(32),
             phases: PhaseTimer::new(params.timing),
         }
     }
@@ -110,12 +114,13 @@ impl ParallelSort {
             });
         }
 
-        // --- association: parallel IoU rows + serial Hungarian.
-        // `associate` recomputes IoU internally (serially); to keep the
-        // measured parallel region honest we precompute rows in
-        // parallel here and the serial recompute inside `associate` is
-        // skipped by passing the same scratch buffer pre-filled.
-        let result = {
+        // --- association: parallel IoU rows + serial assignment, the
+        // way the paper's OpenMP port splits it. The matrix computed by
+        // the parallel region feeds the solver directly; the solver
+        // runs every frame (no partial-permutation fast path), which on
+        // such matrices provably selects the same above-threshold pairs
+        // — so the output still matches the native engine exactly.
+        {
             let predicted = &self.predicted;
             let iou_buf = &mut self.iou_buf;
             let assoc = &mut self.assoc;
@@ -128,22 +133,35 @@ impl ParallelSort {
                     // parallel over detection rows
                     let mut rows: Vec<&mut [f64]> = iou_buf.chunks_mut(nt).collect();
                     parallel_for_rows(&mut rows, dets, predicted, threads);
+                    associate_from_matrix_into(
+                        iou_buf,
+                        nd,
+                        nt,
+                        params.iou_threshold,
+                        params.method,
+                        assoc,
+                    );
+                } else {
+                    associate_into(dets, predicted, params.iou_threshold, params.method, assoc);
                 }
-                associate(dets, predicted, params.iou_threshold, params.method, assoc)
             })
         };
+        let result = &self.assoc.result;
 
         // --- update matched trackers in parallel
-        // Collect (tracker index -> det index) then update disjointly.
-        let mut z_for: Vec<Option<usize>> = vec![None; self.trackers.len()];
+        // Collect (tracker index -> det index) then update disjointly
+        // (the map buffer is engine-owned and reused across frames).
+        self.z_for.clear();
+        self.z_for.resize(self.trackers.len(), None);
         for &(d, t) in &result.matched {
-            z_for[t] = Some(d);
+            self.z_for[t] = Some(d);
         }
         {
             let trackers = &mut self.trackers;
+            let z_for = &mut self.z_for;
             let consts_ref = &consts;
             self.phases.time(Phase::Update, || {
-                parallel_zip_mut(trackers, &mut z_for, threads, |_, trk, z| {
+                parallel_zip_mut(trackers, z_for, threads, |_, trk, z| {
                     if let Some(d) = z {
                         trk.update(&dets[*d], consts_ref, params.cov_form);
                     }

@@ -1,11 +1,14 @@
 //! `TrackerEngine` — the one abstraction every tracker backend sits
 //! behind.
 //!
-//! The repo grew three tracker implementations with identical semantics
+//! The repo grew four tracker implementations with identical semantics
 //! but different execution strategies:
 //!
 //! * [`Sort`] (`native`) — the single-core structure-aware pipeline,
 //!   the paper's "well-optimized serial C" analog;
+//! * [`BatchSort`] (`batch`) — the same math over structure-of-arrays
+//!   lanes: fused predict/update loops over all trackers at once, one
+//!   counter event per frame, zero steady-state allocation;
 //! * [`ParallelSort`] (`strong`) — intra-frame fork-join parallelism,
 //!   the paper's (losing) OpenMP strong-scaling port;
 //! * [`TrackerBank`] (`xla`) — fixed-slot state arrays with the dense
@@ -14,15 +17,15 @@
 //!
 //! The coordinator, CLI, benches and tests program against this trait
 //! only; backends are chosen by [`EngineKind`] and injected, never
-//! constructed inline. Adding a backend (batched SoA bank, GPU,
-//! simulator-driven) means implementing four methods and one enum arm.
+//! constructed inline. Adding a backend (GPU, simulator-driven) means
+//! implementing four methods and one enum arm.
 //!
-//! Equivalence between all three engines on shared inputs is pinned by
+//! Equivalence between all four engines on shared inputs is pinned by
 //! `rust/tests/integration_engines.rs`.
 
 use crate::coordinator::strong::ParallelSort;
 use crate::runtime::{TrackerBank, XlaRuntime};
-use crate::sort::{Bbox, PhaseTimer, Sort, SortParams, Track};
+use crate::sort::{BatchSort, Bbox, PhaseTimer, Sort, SortParams, Track};
 
 /// A multi-object tracker backend for one video stream.
 ///
@@ -65,7 +68,7 @@ pub trait TrackerEngine: Send {
     /// buffers, so a worker can reuse one engine across streams.
     fn reset(&mut self);
 
-    /// Stable backend name (`native` | `strong` | `xla`).
+    /// Stable backend name (`native` | `batch` | `strong` | `xla`).
     fn name(&self) -> &'static str;
 }
 
@@ -88,6 +91,28 @@ impl TrackerEngine for Sort {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+impl TrackerEngine for BatchSort {
+    fn update(&mut self, dets: &[Bbox]) -> &[Track] {
+        BatchSort::update(self, dets)
+    }
+
+    fn n_trackers(&self) -> usize {
+        BatchSort::n_trackers(self)
+    }
+
+    fn phases(&self) -> Option<&PhaseTimer> {
+        Some(&self.phases)
+    }
+
+    fn reset(&mut self) {
+        BatchSort::reset(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "batch"
     }
 }
 
@@ -147,6 +172,9 @@ impl TrackerEngine for TrackerBank {
 pub enum EngineKind {
     /// Single-core structure-aware `Sort`.
     Native,
+    /// Batched SoA `BatchSort` (fused per-frame loops over all
+    /// trackers, zero steady-state allocation).
+    Batch,
     /// Intra-frame fork-join `ParallelSort` with `threads` threads.
     Strong {
         /// Fork-join width per frame.
@@ -162,9 +190,10 @@ impl EngineKind {
     pub fn parse(name: &str, threads: usize) -> crate::Result<EngineKind> {
         match name {
             "native" => Ok(EngineKind::Native),
+            "batch" => Ok(EngineKind::Batch),
             "strong" => Ok(EngineKind::Strong { threads: threads.max(1) }),
             "xla" => Ok(EngineKind::Xla),
-            other => anyhow::bail!("unknown engine '{other}' (expected native|strong|xla)"),
+            other => anyhow::bail!("unknown engine '{other}' (expected native|batch|strong|xla)"),
         }
     }
 
@@ -172,6 +201,7 @@ impl EngineKind {
     pub fn label(&self) -> &'static str {
         match self {
             EngineKind::Native => "native",
+            EngineKind::Batch => "batch",
             EngineKind::Strong { .. } => "strong",
             EngineKind::Xla => "xla",
         }
@@ -187,6 +217,7 @@ impl EngineKind {
     pub fn build(&self, params: SortParams) -> crate::Result<Box<dyn TrackerEngine>> {
         Ok(match self {
             EngineKind::Native => Box::new(Sort::new(params)),
+            EngineKind::Batch => Box::new(BatchSort::new(params)),
             EngineKind::Strong { threads } => Box::new(ParallelSort::new(params, *threads)),
             EngineKind::Xla => Box::new(TrackerBank::new(&XlaRuntime::new()?, params)?),
         })
@@ -205,9 +236,14 @@ impl EngineKind {
         }
     }
 
-    /// All three kinds (test/bench sweeps).
-    pub fn all(threads: usize) -> [EngineKind; 3] {
-        [EngineKind::Native, EngineKind::Strong { threads }, EngineKind::Xla]
+    /// All four kinds (test/bench sweeps).
+    pub fn all(threads: usize) -> [EngineKind; 4] {
+        [
+            EngineKind::Native,
+            EngineKind::Batch,
+            EngineKind::Strong { threads },
+            EngineKind::Xla,
+        ]
     }
 }
 
@@ -240,10 +276,19 @@ mod tests {
     #[test]
     fn parse_all_kinds() {
         assert_eq!(EngineKind::parse("native", 4).unwrap(), EngineKind::Native);
+        assert_eq!(EngineKind::parse("batch", 4).unwrap(), EngineKind::Batch);
         assert_eq!(EngineKind::parse("strong", 4).unwrap(), EngineKind::Strong { threads: 4 });
         assert_eq!(EngineKind::parse("strong", 0).unwrap(), EngineKind::Strong { threads: 1 });
         assert_eq!(EngineKind::parse("xla", 1).unwrap(), EngineKind::Xla);
         assert!(EngineKind::parse("gpu", 1).is_err());
+    }
+
+    #[test]
+    fn batch_engine_exposes_phases() {
+        let mut e = EngineKind::Batch.build(SortParams::default()).unwrap();
+        e.update(&[Bbox::new(0.0, 0.0, 10.0, 20.0)]);
+        let phases = e.phases().expect("batch collects phases");
+        assert_eq!(phases.get(crate::sort::Phase::Predict).count, 1);
     }
 
     #[test]

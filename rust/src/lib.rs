@@ -13,15 +13,21 @@
 //!
 //! * [`linalg`] — hand-rolled fixed-size small-matrix kernels (the
 //!   paper's C analog) with flop/byte/invocation instrumentation that
-//!   regenerates the paper's Table II and Table IV.
+//!   regenerates the paper's Table II and Table IV (gated behind the
+//!   default-on `counters` cargo feature; `--no-default-features`
+//!   compiles every `record` to a no-op).
 //! * [`sort`] — the SORT core: 7-state Kalman filter, rectangular
-//!   Hungarian assignment, IoU association, tracker lifecycle.
+//!   Hungarian assignment, IoU association, tracker lifecycle; plus
+//!   [`sort::BatchSort`], the batched structure-of-arrays variant, and
+//!   [`sort::FrameScratch`], the reused buffers that keep the
+//!   steady-state frame loop allocation-free.
 //! * [`data`] — MOT-format I/O plus a synthetic MOT-2015-like dataset
 //!   generator reproducing Table I's properties.
 //! * [`engine`] — the [`engine::TrackerEngine`] trait unifying the
-//!   three tracker backends (`native` [`sort::Sort`], `strong`
-//!   [`coordinator::ParallelSort`], `xla` [`runtime::TrackerBank`]);
-//!   everything downstream programs against it.
+//!   four tracker backends (`native` [`sort::Sort`], `batch`
+//!   [`sort::BatchSort`], `strong` [`coordinator::ParallelSort`],
+//!   `xla` [`runtime::TrackerBank`]); everything downstream programs
+//!   against it.
 //! * [`coordinator`] — the multi-stream runtime: worker pool, the
 //!   scaling policies (strong / weak / throughput / sharded) as
 //!   first-class scheduler modes, the work-stealing

@@ -21,6 +21,13 @@ pub fn cholesky<const N: usize>(a: &Mat<N, N>) -> Option<Mat<N, N>> {
         ((N * N * N) / 3 + N) as u64,
         (2 * N * N * 8) as u64,
     );
+    cholesky_raw(a)
+}
+
+/// [`cholesky`] without the counter bump — batched callers record one
+/// aggregate event per frame instead of one per factorization (the
+/// same convention as [`crate::sort::iou::iou_raw`]).
+pub fn cholesky_raw<const N: usize>(a: &Mat<N, N>) -> Option<Mat<N, N>> {
     let mut l = Mat::<N, N>::zeros();
     for i in 0..N {
         for j in 0..=i {
@@ -45,6 +52,12 @@ pub fn cholesky<const N: usize>(a: &Mat<N, N>) -> Option<Mat<N, N>> {
 /// (forward then backward substitution).
 pub fn chol_solve<const N: usize>(l: &Mat<N, N>, b: &[f64; N]) -> [f64; N] {
     record(Kernel::TriSolve, (2 * N * N) as u64, ((N * N + 2 * N) * 8) as u64);
+    chol_solve_raw(l, b)
+}
+
+/// [`chol_solve`] without the counter bump (batched aggregate
+/// accounting — see [`cholesky_raw`]).
+pub fn chol_solve_raw<const N: usize>(l: &Mat<N, N>, b: &[f64; N]) -> [f64; N] {
     // L y = b
     let mut y = [0.0; N];
     for i in 0..N {
@@ -76,26 +89,26 @@ pub fn chol_inverse<const N: usize>(a: &Mat<N, N>) -> Option<Mat<N, N>> {
         ((2 * N * N * N) as u64) / 3,
         (2 * N * N * 8) as u64,
     );
-    let was_on = super::counters::counters_enabled();
-    super::counters::set_counters_enabled(false);
-    let l = match cholesky(a) {
-        Some(l) => l,
-        None => {
-            super::counters::set_counters_enabled(was_on);
-            return None;
-        }
-    };
+    chol_inverse_raw(a)
+}
+
+/// [`chol_inverse`] without the counter bump. The inner factor/solve
+/// work is uninstrumented by construction (no counter toggling needed),
+/// so this is also the kernel the batched SoA engine calls per matched
+/// tracker while recording one aggregate [`Kernel::Inverse`] event per
+/// frame.
+pub fn chol_inverse_raw<const N: usize>(a: &Mat<N, N>) -> Option<Mat<N, N>> {
+    let l = cholesky_raw(a)?;
     let mut inv = Mat::<N, N>::zeros();
     let mut e = [0.0; N];
     for c in 0..N {
         e[c] = 1.0;
-        let col = chol_solve(&l, &e);
+        let col = chol_solve_raw(&l, &e);
         e[c] = 0.0;
         for r in 0..N {
             inv[(r, c)] = col[r];
         }
     }
-    super::counters::set_counters_enabled(was_on);
     Some(inv)
 }
 
@@ -164,6 +177,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "counters")]
     fn inverse_counts_once_without_double_counting() {
         use crate::linalg::counters::{reset_counters, snapshot, Kernel};
         reset_counters();

@@ -6,7 +6,15 @@
 //! `(calls, flops, bytes)` here, keyed by [`Kernel`]. Counters are
 //! thread-local so worker threads never contend; harnesses aggregate
 //! snapshots per phase.
+//!
+//! The whole instrumentation layer is gated behind the default-on
+//! `counters` cargo feature: with `--no-default-features`, [`record`]
+//! compiles to a literal no-op (not even a branch), [`snapshot`]
+//! returns zeros and the thread-local storage does not exist. The
+//! `batch_vs_native` bench measures the residual runtime tax of the
+//! default configuration; the feature removes even that.
 
+#[cfg(feature = "counters")]
 use std::cell::Cell;
 
 /// The kernel taxonomy of the paper's Table II.
@@ -86,6 +94,7 @@ impl Kernel {
     }
 }
 
+#[cfg(feature = "counters")]
 thread_local! {
     /// Per-thread kill-switch: toggling it never races with other
     /// worker threads' instrumentation (and a thread-local read is as
@@ -94,16 +103,30 @@ thread_local! {
 }
 
 /// Enable/disable counting for the calling thread (e.g. for
-/// pure-speed benches).
+/// pure-speed benches). A no-op when the `counters` feature is off.
+#[cfg(feature = "counters")]
 pub fn set_counters_enabled(on: bool) {
     ENABLED.with(|e| e.set(on));
 }
 
-/// Whether instrumentation is on for the calling thread.
+/// Enable/disable counting (no-op: `counters` feature disabled).
+#[cfg(not(feature = "counters"))]
+pub fn set_counters_enabled(_on: bool) {}
+
+/// Whether instrumentation is on for the calling thread (always
+/// `false` when the `counters` feature is compiled out).
 pub fn counters_enabled() -> bool {
-    ENABLED.with(|e| e.get())
+    #[cfg(feature = "counters")]
+    {
+        ENABLED.with(|e| e.get())
+    }
+    #[cfg(not(feature = "counters"))]
+    {
+        false
+    }
 }
 
+#[cfg(feature = "counters")]
 thread_local! {
     static CALLS: [Cell<u64>; N_KERNELS] = Default::default();
     static FLOPS: [Cell<u64>; N_KERNELS] = Default::default();
@@ -111,15 +134,23 @@ thread_local! {
 }
 
 /// Record one kernel invocation. Called by every `linalg` op.
+/// Compiles to nothing when the `counters` feature is off.
 #[inline(always)]
 pub fn record(k: Kernel, flops: u64, bytes: u64) {
-    if !counters_enabled() {
-        return;
+    #[cfg(feature = "counters")]
+    {
+        if !counters_enabled() {
+            return;
+        }
+        let i = k as usize;
+        CALLS.with(|c| c[i].set(c[i].get() + 1));
+        FLOPS.with(|c| c[i].set(c[i].get() + flops));
+        BYTES.with(|c| c[i].set(c[i].get() + bytes));
     }
-    let i = k as usize;
-    CALLS.with(|c| c[i].set(c[i].get() + 1));
-    FLOPS.with(|c| c[i].set(c[i].get() + flops));
-    BYTES.with(|c| c[i].set(c[i].get() + bytes));
+    #[cfg(not(feature = "counters"))]
+    {
+        let _ = (k, flops, bytes);
+    }
 }
 
 /// Per-kernel aggregate.
@@ -191,32 +222,43 @@ impl CounterSnapshot {
     }
 }
 
-/// Read the calling thread's counters.
+/// Read the calling thread's counters (all-zero when the `counters`
+/// feature is compiled out).
 pub fn snapshot() -> CounterSnapshot {
-    let mut s = CounterSnapshot::default();
-    CALLS.with(|c| {
-        for i in 0..N_KERNELS {
-            s.per_kernel[i].calls = c[i].get();
-        }
-    });
-    FLOPS.with(|c| {
-        for i in 0..N_KERNELS {
-            s.per_kernel[i].flops = c[i].get();
-        }
-    });
-    BYTES.with(|c| {
-        for i in 0..N_KERNELS {
-            s.per_kernel[i].bytes = c[i].get();
-        }
-    });
-    s
+    #[cfg(feature = "counters")]
+    {
+        let mut s = CounterSnapshot::default();
+        CALLS.with(|c| {
+            for i in 0..N_KERNELS {
+                s.per_kernel[i].calls = c[i].get();
+            }
+        });
+        FLOPS.with(|c| {
+            for i in 0..N_KERNELS {
+                s.per_kernel[i].flops = c[i].get();
+            }
+        });
+        BYTES.with(|c| {
+            for i in 0..N_KERNELS {
+                s.per_kernel[i].bytes = c[i].get();
+            }
+        });
+        s
+    }
+    #[cfg(not(feature = "counters"))]
+    {
+        CounterSnapshot::default()
+    }
 }
 
-/// Zero the calling thread's counters.
+/// Zero the calling thread's counters (no-op when compiled out).
 pub fn reset_counters() {
-    CALLS.with(|c| c.iter().for_each(|x| x.set(0)));
-    FLOPS.with(|c| c.iter().for_each(|x| x.set(0)));
-    BYTES.with(|c| c.iter().for_each(|x| x.set(0)));
+    #[cfg(feature = "counters")]
+    {
+        CALLS.with(|c| c.iter().for_each(|x| x.set(0)));
+        FLOPS.with(|c| c.iter().for_each(|x| x.set(0)));
+        BYTES.with(|c| c.iter().for_each(|x| x.set(0)));
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +266,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[cfg(feature = "counters")]
     fn record_and_snapshot_roundtrip() {
         reset_counters();
         record(Kernel::Gemm, 100, 64);
@@ -240,6 +283,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "counters")]
     fn delta_isolates_a_phase() {
         reset_counters();
         record(Kernel::Gemv, 10, 10);

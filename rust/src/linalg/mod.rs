@@ -20,7 +20,9 @@ pub mod cholesky;
 pub mod counters;
 pub mod matrix;
 
-pub use cholesky::{chol_inverse, chol_solve, cholesky};
+pub use cholesky::{
+    chol_inverse, chol_inverse_raw, chol_solve, chol_solve_raw, cholesky, cholesky_raw,
+};
 pub use counters::{
     counters_enabled, reset_counters, set_counters_enabled, snapshot, CounterSnapshot, Kernel,
     KernelStats,

@@ -71,7 +71,7 @@ impl Args {
         self.flags.contains_key(key)
     }
 
-    /// `--engine native|strong|xla` (default native); `--threads N`
+    /// `--engine native|batch|strong|xla` (default native); `--threads N`
     /// parameterizes the strong backend.
     fn engine(&self) -> Result<EngineKind> {
         let threads: usize = self.num("threads", 2usize)?;
@@ -122,6 +122,8 @@ COMMANDS
 
 ENGINES (--engine, default native)
   native    single-core structure-aware Sort (the paper's fast path)
+  batch     batched SoA Sort: all trackers in structure-of-arrays
+            lanes, fused per-frame loops, zero steady-state allocation
   strong    intra-frame fork-join ParallelSort (--threads N, default 2)
   xla       batched tracker bank (AOT kernels, or the built-in
             reference interpreter when `make artifacts` has not run)

@@ -164,9 +164,11 @@ pub fn run_under_perf(cmd: Command) -> Option<PerfStat> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    #[cfg(feature = "counters")]
     use crate::linalg::counters::{record, reset_counters, snapshot};
 
     #[test]
+    #[cfg(feature = "counters")]
     fn estimate_scales_with_flops() {
         reset_counters();
         record(Kernel::Gemm, 1_000_000, 100_000);
@@ -179,6 +181,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "counters")]
     fn low_mpki_for_tiny_working_set() {
         reset_counters();
         record(Kernel::Gemm, 1_000_000, 500_000);
@@ -190,6 +193,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "counters")]
     fn ipc_in_plausible_range() {
         reset_counters();
         // ~47k FPS native: 5500 frames of ~40k flops in ~0.117 s

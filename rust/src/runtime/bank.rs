@@ -20,7 +20,8 @@
 //! argument, measured by `cargo bench --bench xla_vs_native` (E8).
 
 use super::client::{Artifact, XlaRuntime};
-use crate::sort::association::{associate_from_matrix, AssociationScratch};
+use crate::sort::association::associate_from_matrix_into;
+use crate::sort::FrameScratch;
 use crate::sort::{AssociationMethod, Bbox, SortParams, Track};
 use anyhow::Result;
 
@@ -99,7 +100,7 @@ pub struct TrackerBank {
     pub d_cap: usize,
     frame_count: u64,
     next_id: u64,
-    assoc: AssociationScratch,
+    assoc: FrameScratch,
     out: Vec<Track>,
     /// Detections ignored because they exceeded the padded capacity.
     pub overflow_dets: u64,
@@ -137,7 +138,7 @@ impl TrackerBank {
             d_cap,
             frame_count: 0,
             next_id: 0,
-            assoc: AssociationScratch::default(),
+            assoc: FrameScratch::default(),
             out: Vec::new(),
             overflow_dets: 0,
             warned_overflow: false,
@@ -165,15 +166,16 @@ impl TrackerBank {
     /// Emit the capacity-overflow warning once per bank instance.
     /// Overflowed detections are dropped, so the bank's output is no
     /// longer equivalent to the native engine's; `overflow_dets` keeps
-    /// the exact count for programmatic checks.
-    fn warn_overflow(&mut self) {
-        if !self.warned_overflow {
-            self.warned_overflow = true;
+    /// the exact count for programmatic checks. Takes the fields it
+    /// needs (not `&mut self`) so callers holding disjoint borrows of
+    /// the association result can still warn.
+    fn warn_overflow(warned: &mut bool, t: usize, d_cap: usize) {
+        if !*warned {
+            *warned = true;
             eprintln!(
-                "smalltrack: tracker bank capacity exceeded (T={}, D={}); dropping \
+                "smalltrack: tracker bank capacity exceeded (T={t}, D={d_cap}); dropping \
                  overflow detections — output diverges from the native engine \
-                 (see TrackerBank::overflow_dets)",
-                self.bank.t, self.d_cap
+                 (see TrackerBank::overflow_dets)"
             );
         }
     }
@@ -199,7 +201,7 @@ impl TrackerBank {
         // --- pad detections into the reused buffers
         if dets.len() > self.d_cap {
             self.overflow_dets += (dets.len() - self.d_cap) as u64;
-            self.warn_overflow();
+            Self::warn_overflow(&mut self.warned_overflow, self.bank.t, self.d_cap);
         }
         let nd = dets.len().min(self.d_cap);
         self.det_buf.fill(0.0);
@@ -266,7 +268,7 @@ impl TrackerBank {
                 }
             }
         }
-        let result = associate_from_matrix(
+        associate_from_matrix_into(
             &self.iou_view,
             nd,
             nt,
@@ -275,11 +277,13 @@ impl TrackerBank {
             &mut self.assoc,
         );
 
-        // --- kernel call 2: masked measurement update for matched slots
-        if !result.matched.is_empty() {
+        // --- kernel call 2: masked measurement update for matched
+        // slots (the association result is read in place from the
+        // scratch — no per-frame clone of its vectors)
+        if !self.assoc.result.matched.is_empty() {
             self.z_buf.fill(0.0);
             self.zmask_buf.fill(0.0);
-            for &(d, k) in &result.matched {
+            for &(d, k) in &self.assoc.result.matched {
                 let slot = self.live[k];
                 let zd = dets[d].to_z();
                 self.z_buf[slot * DZ..(slot + 1) * DZ].copy_from_slice(&zd);
@@ -298,10 +302,10 @@ impl TrackerBank {
         }
 
         // --- create new trackers from unmatched detections
-        for &d in &result.unmatched_dets {
+        for &d in &self.assoc.result.unmatched_dets {
             let Some(slot) = self.bank.free_slot() else {
                 self.overflow_dets += 1;
-                self.warn_overflow();
+                Self::warn_overflow(&mut self.warned_overflow, self.bank.t, self.d_cap);
                 continue;
             };
             self.bank.seed(slot, &dets[d].to_z());

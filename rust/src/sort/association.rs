@@ -7,11 +7,18 @@
 //! the thresholded IoU matrix is already a partial permutation (each
 //! row/col has at most one candidate), the assignment solver is
 //! skipped entirely.
+//!
+//! The hot entry point is [`associate_into`], which works entirely out
+//! of a caller-owned [`FrameScratch`] (matrices, candidate counts,
+//! pairs, result vectors) so the steady-state frame loop performs no
+//! heap allocation. [`associate`] is the allocating convenience wrapper
+//! for tests and examples.
 
 use super::bbox::Bbox;
-use super::greedy::greedy_max_score;
-use super::hungarian::{hungarian_min_cost, HungarianScratch};
+use super::greedy::greedy_max_score_into;
+use super::hungarian::hungarian_min_cost_into;
 use super::iou::iou_matrix_into;
+use super::scratch::FrameScratch;
 
 /// Which assignment algorithm backs [`associate`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -34,169 +41,217 @@ pub struct AssociationResult {
     pub unmatched_trks: Vec<usize>,
 }
 
-/// Reusable buffers for the association step.
-#[derive(Debug, Default)]
-pub struct AssociationScratch {
-    iou: Vec<f64>,
-    cost: Vec<f64>,
-    det_matched: Vec<bool>,
-    trk_matched: Vec<bool>,
-    hungarian: HungarianScratch,
+impl AssociationResult {
+    /// Empty all three vectors, keeping their capacity (frame reuse).
+    pub fn clear(&mut self) {
+        self.matched.clear();
+        self.unmatched_dets.clear();
+        self.unmatched_trks.clear();
+    }
 }
 
-/// Associate detections with predicted tracker boxes.
+/// Associate detections with predicted tracker boxes, writing the
+/// result into `scratch.result` (read it via [`FrameScratch::result`]).
 ///
 /// Mirrors `associate_detections_to_trackers` of the original: IoU
-/// matrix → (fast-path | assignment) → threshold post-filter.
-pub fn associate(
+/// matrix → (fast-path | assignment) → threshold post-filter. Performs
+/// no heap allocation once the scratch buffers have reached the
+/// stream's high-water sizes.
+pub fn associate_into(
     dets: &[Bbox],
     trks: &[Bbox],
     iou_threshold: f64,
     method: AssociationMethod,
-    scratch: &mut AssociationScratch,
-) -> AssociationResult {
+    scratch: &mut FrameScratch,
+) {
     let nd = dets.len();
     let nt = trks.len();
-    let mut out = AssociationResult::default();
+    scratch.result.clear();
 
     if nt == 0 {
-        out.unmatched_dets = (0..nd).collect();
-        return out;
+        scratch.result.unmatched_dets.extend(0..nd);
+        return;
     }
     if nd == 0 {
-        out.unmatched_trks = (0..nt).collect();
-        return out;
+        scratch.result.unmatched_trks.extend(0..nt);
+        return;
     }
 
-    iou_matrix_into(dets, trks, &mut scratch.iou);
-    let iou = &scratch.iou;
+    // The matrix is moved out of the scratch for the duration of the
+    // call (a pointer swap, not an allocation) so the helpers below can
+    // borrow it immutably while the rest of the scratch stays mutable.
+    let mut iou = std::mem::take(&mut scratch.iou);
+    iou_matrix_into(dets, trks, &mut iou);
 
     // Fast path: if the thresholded matrix is already a partial
     // permutation, the greedy row/col pick *is* the optimal assignment.
-    let mut fast_ok = true;
-    let mut row_count = vec![0usize; nd];
-    let mut col_count = vec![0usize; nt];
+    scratch.row_count.clear();
+    scratch.row_count.resize(nd, 0);
+    scratch.col_count.clear();
+    scratch.col_count.resize(nt, 0);
     for d in 0..nd {
         for t in 0..nt {
             if iou[d * nt + t] > iou_threshold {
-                row_count[d] += 1;
-                col_count[t] += 1;
+                scratch.row_count[d] += 1;
+                scratch.col_count[t] += 1;
             }
         }
     }
-    if row_count.iter().any(|&c| c > 1) || col_count.iter().any(|&c| c > 1) {
-        fast_ok = false;
-    }
+    let fast_ok = !scratch.row_count.iter().any(|&c| c > 1)
+        && !scratch.col_count.iter().any(|&c| c > 1);
 
-    let pairs: Vec<(usize, usize)> = if fast_ok {
-        let mut p = Vec::new();
+    scratch.pairs.clear();
+    if fast_ok {
         for d in 0..nd {
             for t in 0..nt {
                 if iou[d * nt + t] > iou_threshold {
-                    p.push((d, t));
+                    scratch.pairs.push((d, t));
                 }
             }
         }
-        p
     } else {
         match method {
             AssociationMethod::Hungarian => {
                 scratch.cost.clear();
                 scratch.cost.extend(iou.iter().map(|v| -v));
-                let asn = hungarian_min_cost(&scratch.cost, nd, nt, &mut scratch.hungarian);
-                asn.iter()
-                    .enumerate()
-                    .filter_map(|(d, t)| t.map(|t| (d, t)))
-                    .collect()
+                hungarian_min_cost_into(
+                    &scratch.cost,
+                    nd,
+                    nt,
+                    &mut scratch.hungarian,
+                    &mut scratch.assignment,
+                );
+                for (d, t) in scratch.assignment.iter().enumerate() {
+                    if let Some(t) = t {
+                        scratch.pairs.push((d, *t));
+                    }
+                }
             }
-            AssociationMethod::Greedy => greedy_max_score(iou, nd, nt, 0.0),
+            AssociationMethod::Greedy => greedy_max_score_into(
+                &iou,
+                nd,
+                nt,
+                0.0,
+                &mut scratch.greedy_rows,
+                &mut scratch.greedy_cols,
+                &mut scratch.pairs,
+            ),
         }
-    };
+    }
 
+    post_filter(&iou, nd, nt, iou_threshold, scratch);
+    scratch.iou = iou;
+}
+
+/// [`associate_into`] over a *precomputed* IoU matrix (row-major
+/// `nd x nt`).
+///
+/// Used by the XLA tracker-bank path, where the IoU matrix comes out of
+/// the AOT-compiled kernel rather than the native loop. Threshold and
+/// post-filter semantics are identical to [`associate_into`] (minus the
+/// fast path, which the bank kernels do not expose).
+pub fn associate_from_matrix_into(
+    iou: &[f64],
+    nd: usize,
+    nt: usize,
+    iou_threshold: f64,
+    method: AssociationMethod,
+    scratch: &mut FrameScratch,
+) {
+    assert_eq!(iou.len(), nd * nt);
+    scratch.result.clear();
+    if nt == 0 {
+        scratch.result.unmatched_dets.extend(0..nd);
+        return;
+    }
+    if nd == 0 {
+        scratch.result.unmatched_trks.extend(0..nt);
+        return;
+    }
+
+    scratch.pairs.clear();
+    match method {
+        AssociationMethod::Hungarian => {
+            scratch.cost.clear();
+            scratch.cost.extend(iou.iter().map(|v| -v));
+            hungarian_min_cost_into(
+                &scratch.cost,
+                nd,
+                nt,
+                &mut scratch.hungarian,
+                &mut scratch.assignment,
+            );
+            for (d, t) in scratch.assignment.iter().enumerate() {
+                if let Some(t) = t {
+                    scratch.pairs.push((d, *t));
+                }
+            }
+        }
+        AssociationMethod::Greedy => greedy_max_score_into(
+            iou,
+            nd,
+            nt,
+            0.0,
+            &mut scratch.greedy_rows,
+            &mut scratch.greedy_cols,
+            &mut scratch.pairs,
+        ),
+    }
+
+    post_filter(iou, nd, nt, iou_threshold, scratch);
+}
+
+/// SORT's post-filter over `scratch.pairs`: low-IoU "matches" are not
+/// matches; everything unmatched is listed explicitly.
+fn post_filter(iou: &[f64], nd: usize, nt: usize, iou_threshold: f64, scratch: &mut FrameScratch) {
     scratch.det_matched.clear();
     scratch.det_matched.resize(nd, false);
     scratch.trk_matched.clear();
     scratch.trk_matched.resize(nt, false);
 
-    for (d, t) in pairs {
-        // SORT's post-filter: low-IoU "matches" are not matches.
+    for &(d, t) in &scratch.pairs {
         if iou[d * nt + t] < iou_threshold {
             continue;
         }
         scratch.det_matched[d] = true;
         scratch.trk_matched[t] = true;
-        out.matched.push((d, t));
+        scratch.result.matched.push((d, t));
     }
     for d in 0..nd {
         if !scratch.det_matched[d] {
-            out.unmatched_dets.push(d);
+            scratch.result.unmatched_dets.push(d);
         }
     }
     for t in 0..nt {
         if !scratch.trk_matched[t] {
-            out.unmatched_trks.push(t);
+            scratch.result.unmatched_trks.push(t);
         }
     }
-    out
 }
 
-/// [`associate`] over a *precomputed* IoU matrix (row-major `nd x nt`).
-///
-/// Used by the XLA tracker-bank path, where the IoU matrix comes out of
-/// the AOT-compiled kernel rather than the native loop. Threshold and
-/// post-filter semantics are identical to [`associate`].
+/// Allocating wrapper over [`associate_into`] (tests, examples).
+pub fn associate(
+    dets: &[Bbox],
+    trks: &[Bbox],
+    iou_threshold: f64,
+    method: AssociationMethod,
+    scratch: &mut FrameScratch,
+) -> AssociationResult {
+    associate_into(dets, trks, iou_threshold, method, scratch);
+    scratch.result.clone()
+}
+
+/// Allocating wrapper over [`associate_from_matrix_into`].
 pub fn associate_from_matrix(
     iou: &[f64],
     nd: usize,
     nt: usize,
     iou_threshold: f64,
     method: AssociationMethod,
-    scratch: &mut AssociationScratch,
+    scratch: &mut FrameScratch,
 ) -> AssociationResult {
-    assert_eq!(iou.len(), nd * nt);
-    let mut out = AssociationResult::default();
-    if nt == 0 {
-        out.unmatched_dets = (0..nd).collect();
-        return out;
-    }
-    if nd == 0 {
-        out.unmatched_trks = (0..nt).collect();
-        return out;
-    }
-
-    let pairs: Vec<(usize, usize)> = match method {
-        AssociationMethod::Hungarian => {
-            scratch.cost.clear();
-            scratch.cost.extend(iou.iter().map(|v| -v));
-            let asn = hungarian_min_cost(&scratch.cost, nd, nt, &mut scratch.hungarian);
-            asn.iter().enumerate().filter_map(|(d, t)| t.map(|t| (d, t))).collect()
-        }
-        AssociationMethod::Greedy => greedy_max_score(iou, nd, nt, 0.0),
-    };
-
-    scratch.det_matched.clear();
-    scratch.det_matched.resize(nd, false);
-    scratch.trk_matched.clear();
-    scratch.trk_matched.resize(nt, false);
-    for (d, t) in pairs {
-        if iou[d * nt + t] < iou_threshold {
-            continue;
-        }
-        scratch.det_matched[d] = true;
-        scratch.trk_matched[t] = true;
-        out.matched.push((d, t));
-    }
-    for d in 0..nd {
-        if !scratch.det_matched[d] {
-            out.unmatched_dets.push(d);
-        }
-    }
-    for t in 0..nt {
-        if !scratch.trk_matched[t] {
-            out.unmatched_trks.push(t);
-        }
-    }
-    out
+    associate_from_matrix_into(iou, nd, nt, iou_threshold, method, scratch);
+    scratch.result.clone()
 }
 
 #[cfg(test)]
@@ -208,7 +263,7 @@ mod tests {
     }
 
     fn assoc(d: &[Bbox], t: &[Bbox], thr: f64) -> AssociationResult {
-        let mut s = AssociationScratch::default();
+        let mut s = FrameScratch::default();
         associate(d, t, thr, AssociationMethod::Hungarian, &mut s)
     }
 
@@ -264,8 +319,8 @@ mod tests {
     fn greedy_and_hungarian_agree_on_unambiguous_input() {
         let d = boxes(&[[0.0, 0.0, 10.0, 10.0], [50.0, 50.0, 60.0, 60.0]]);
         let t = boxes(&[[0.0, 1.0, 10.0, 11.0], [50.0, 51.0, 60.0, 61.0]]);
-        let mut s1 = AssociationScratch::default();
-        let mut s2 = AssociationScratch::default();
+        let mut s1 = FrameScratch::default();
+        let mut s2 = FrameScratch::default();
         let h = associate(&d, &t, 0.3, AssociationMethod::Hungarian, &mut s1);
         let g = associate(&d, &t, 0.3, AssociationMethod::Greedy, &mut s2);
         assert_eq!(h.matched, g.matched);
@@ -275,8 +330,8 @@ mod tests {
     fn matrix_variant_agrees_with_box_variant() {
         let d = boxes(&[[0.0, 0.0, 10.0, 10.0], [1.0, 1.0, 11.0, 11.0], [40.0, 40.0, 55.0, 60.0]]);
         let t = boxes(&[[1.0, 1.0, 11.0, 11.0], [41.0, 41.0, 56.0, 61.0]]);
-        let mut s1 = AssociationScratch::default();
-        let mut s2 = AssociationScratch::default();
+        let mut s1 = FrameScratch::default();
+        let mut s2 = FrameScratch::default();
         let via_boxes = associate(&d, &t, 0.3, AssociationMethod::Hungarian, &mut s1);
         let m = crate::sort::iou::iou_matrix(&d, &t);
         let via_matrix =

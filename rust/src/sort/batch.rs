@@ -1,0 +1,610 @@
+//! `BatchSort` — structure-of-arrays SORT engine (`--engine batch`).
+//!
+//! The paper's core observation is that SORT's matrices are so small
+//! (7×7, 4×7) that per-call overhead, not arithmetic, dominates the
+//! per-frame cost — which is why it batches many tiny tracker updates
+//! into one kernel invocation. [`BatchSort`] applies that idea to the
+//! native CPU path: instead of `N` independent [`KalmanBoxTracker`]
+//! objects each running `predict`/`update` through counter-instrumented
+//! kernels, all live trackers' Kalman state lives in SoA lanes —
+//!
+//! * `x[l][t]` — state component `l` (of 7) of tracker `t`, one
+//!   contiguous lane per component, and
+//! * `p[t*49 ..]` — tracker-major packed 7×7 covariance panels —
+//!
+//! so predict and update run as fused loops over all trackers at once:
+//! contiguous memory the compiler can auto-vectorize, and **one**
+//! kernel-counter [`record`] per kernel kind per frame instead of one
+//! per tracker.
+//!
+//! Per tracker, the scalar operation sequence is *exactly* the one
+//! [`KalmanState`](super::kalman::KalmanState) performs (same guard,
+//! same structure-aware `F P F'` shifts, same Joseph chain, same
+//! rounding order), so the emitted tracks are byte-identical to
+//! `--engine native` — pinned by `rust/tests/integration_engines.rs`
+//! on randomized streams, standalone and under the sharded scheduler.
+//!
+//! [`KalmanBoxTracker`]: super::tracker::KalmanBoxTracker
+//! [`record`]: crate::linalg::counters::record
+
+use super::association::associate_into;
+use super::bbox::Bbox;
+use super::kalman::{CovarianceForm, SortConstants};
+use super::phases::{Phase, PhaseTimer};
+use super::scratch::FrameScratch;
+use super::sort::{SortParams, Track};
+use crate::linalg::counters::{record, Kernel};
+use crate::linalg::{chol_inverse_raw, Mat4};
+
+/// Batched SoA multi-object tracker state for one video stream.
+///
+/// Same semantics and parameters as [`super::sort::Sort`]; the
+/// difference is purely the execution strategy (state layout, fused
+/// loops, aggregated counter accounting). There is no dense-GEMM
+/// formulation of the SoA path, so `dense_kernels` is normalized to
+/// `false` at construction ([`Self::params`] reflects what actually
+/// runs) — dense-accounting sweeps (Table II/IV, ablation E9.4)
+/// should use the `native` engine.
+#[derive(Debug)]
+pub struct BatchSort {
+    params: SortParams,
+    consts: SortConstants,
+    /// Dense row-major panel of `consts.q` (added to every covariance).
+    q: [f64; 49],
+    /// Dense row-major panel of `consts.p0` (seed covariance).
+    p0: [f64; 49],
+    // --- SoA tracker lanes (index = live tracker slot, in birth order)
+    x: [Vec<f64>; 7],
+    p: Vec<f64>,
+    id: Vec<u64>,
+    time_since_update: Vec<u32>,
+    hits: Vec<u32>,
+    hit_streak: Vec<u32>,
+    age: Vec<u32>,
+    // --- stream state
+    frame_count: u64,
+    next_id: u64,
+    /// Per-phase timing (merged by harnesses), like `Sort`'s.
+    pub phases: PhaseTimer,
+    // --- scratch (reused across frames)
+    predicted: Vec<Bbox>,
+    scratch: FrameScratch,
+    out: Vec<Track>,
+}
+
+impl BatchSort {
+    /// New batched tracker pipeline.
+    ///
+    /// `params.dense_kernels` is normalized to `false` (see the struct
+    /// docs): the byte-identity contract is against the native engine's
+    /// structure-aware formulation, which is the only one this engine
+    /// implements.
+    pub fn new(params: SortParams) -> Self {
+        let params = SortParams { dense_kernels: false, ..params };
+        let consts = SortConstants::sort_defaults();
+        let mut q = [0.0; 49];
+        consts.q.write_to(&mut q);
+        let mut p0 = [0.0; 49];
+        consts.p0.write_to(&mut p0);
+        BatchSort {
+            params,
+            consts,
+            q,
+            p0,
+            x: std::array::from_fn(|_| Vec::with_capacity(32)),
+            p: Vec::with_capacity(32 * 49),
+            id: Vec::with_capacity(32),
+            time_since_update: Vec::with_capacity(32),
+            hits: Vec::with_capacity(32),
+            hit_streak: Vec::with_capacity(32),
+            age: Vec::with_capacity(32),
+            frame_count: 0,
+            next_id: 0,
+            phases: PhaseTimer::new(params.timing),
+            predicted: Vec::with_capacity(32),
+            scratch: FrameScratch::default(),
+            out: Vec::with_capacity(32),
+        }
+    }
+
+    /// Number of live trackers (confirmed or tentative).
+    pub fn n_trackers(&self) -> usize {
+        self.id.len()
+    }
+
+    /// Frames processed so far.
+    pub fn frame_count(&self) -> u64 {
+        self.frame_count
+    }
+
+    /// Tracker parameters.
+    pub fn params(&self) -> &SortParams {
+        &self.params
+    }
+
+    /// Process one frame of detections; same contract as
+    /// [`super::sort::Sort::update`].
+    pub fn update(&mut self, dets: &[Bbox]) -> &[Track] {
+        self.frame_count += 1;
+        let BatchSort {
+            params,
+            consts,
+            q,
+            p0,
+            x,
+            p,
+            id,
+            time_since_update,
+            hits,
+            hit_streak,
+            age,
+            frame_count,
+            next_id,
+            phases,
+            predicted,
+            scratch,
+            out,
+        } = self;
+        let params = *params;
+        let consts: &SortConstants = consts;
+        let frame_count = *frame_count;
+
+        // --- 6.2 predict: fused SoA loops over all trackers, then one
+        // ordered compaction pass culling non-finite predictions.
+        phases.time(Phase::Predict, || {
+            let n = id.len();
+            // negative-area guard, then x' = F x: positions += velocities
+            // (lane split: lo = components 0..4, hi = 4..7)
+            let (lo, hi) = x.split_at_mut(4);
+            for t in 0..n {
+                if hi[2][t] + lo[2][t] <= 0.0 {
+                    hi[2][t] = 0.0;
+                }
+            }
+            for t in 0..n {
+                lo[0][t] += hi[0][t];
+            }
+            for t in 0..n {
+                lo[1][t] += hi[1][t];
+            }
+            for t in 0..n {
+                lo[2][t] += hi[2][t];
+            }
+            // P' = F P F' + Q, in place per packed panel: F = I + E with
+            // three velocity couplings, so the product reduces to row
+            // shifts then column shifts (same op order as
+            // KalmanState::predict, so bitwise-identical results).
+            for pan in p.chunks_exact_mut(49) {
+                for r in 0..3 {
+                    for c in 0..7 {
+                        pan[r * 7 + c] += pan[(r + 4) * 7 + c];
+                    }
+                }
+                for r in 0..7 {
+                    for c in 0..3 {
+                        pan[r * 7 + c] += pan[r * 7 + c + 4];
+                    }
+                }
+                for e in 0..49 {
+                    pan[e] += q[e];
+                }
+            }
+            // one aggregate counter event per kernel kind per frame —
+            // same per-tracker accounting as the native path, 1 call
+            if n > 0 {
+                let n = n as u64;
+                record(
+                    Kernel::Gemm,
+                    n * (2 * (3 * 7 + 7 * 3 + 3 * 3) as u64 + 49 + 3),
+                    n * (2 * 49 + 49) * 8,
+                );
+                record(Kernel::EwMatMat, n * 49, n * (3 * 49 * 8));
+                record(Kernel::Sqrt, n * 2, n * 56);
+            }
+            // lifecycle + predicted boxes (same order as
+            // KalmanBoxTracker::predict_with / Bbox::from_state)
+            predicted.clear();
+            for t in 0..n {
+                age[t] += 1;
+                if time_since_update[t] > 0 {
+                    hit_streak[t] = 0;
+                }
+                time_since_update[t] += 1;
+                // velocities are unused by the conversion; zeros keep
+                // the call shape without gathering the hi lanes
+                predicted.push(Bbox::from_state_raw(&[
+                    lo[0][t], lo[1][t], lo[2][t], lo[3][t], 0.0, 0.0, 0.0,
+                ]));
+            }
+            // ordered compaction: drop trackers whose prediction went
+            // non-finite (native removes them mid-loop; the surviving
+            // order is identical either way)
+            let mut keep = 0;
+            for t in 0..n {
+                if predicted[t].is_finite() {
+                    if keep != t {
+                        for lane in x.iter_mut() {
+                            lane[keep] = lane[t];
+                        }
+                        p.copy_within(t * 49..(t + 1) * 49, keep * 49);
+                        id[keep] = id[t];
+                        time_since_update[keep] = time_since_update[t];
+                        hits[keep] = hits[t];
+                        hit_streak[keep] = hit_streak[t];
+                        age[keep] = age[t];
+                        predicted[keep] = predicted[t];
+                    }
+                    keep += 1;
+                }
+            }
+            if keep != n {
+                for lane in x.iter_mut() {
+                    lane.truncate(keep);
+                }
+                p.truncate(keep * 49);
+                id.truncate(keep);
+                time_since_update.truncate(keep);
+                hits.truncate(keep);
+                hit_streak.truncate(keep);
+                age.truncate(keep);
+                predicted.truncate(keep);
+            }
+        });
+        let n_trk = id.len() as u64;
+        phases.add_ws(Phase::Predict, n_trk * 56 * 8 + 98 * 8);
+
+        // --- 6.3 assignment (shared with the native engine: identical
+        // inputs produce identical results)
+        let predicted: &Vec<Bbox> = predicted;
+        phases.time(Phase::Assign, || {
+            associate_into(dets, predicted, params.iou_threshold, params.method, scratch);
+        });
+        let (nd, nt) = (dets.len() as u64, predicted.len() as u64);
+        phases.add_ws(Phase::Assign, (4 * nd + 4 * nt + nd * nt) * 8);
+        let result = &scratch.result;
+
+        // --- 6.4 fold matched detections in, one fused loop over the
+        // matched set (same scalar sequence as KalmanState::update)
+        phases.time(Phase::Update, || {
+            // pairs surviving the SPD check — the native path records
+            // the gain/covariance GEMMs only for those
+            let mut n_ok = 0u64;
+            for &(d, t) in &result.matched {
+                time_since_update[t] = 0;
+                hits[t] += 1;
+                hit_streak[t] += 1;
+
+                let z = dets[d].to_z_raw();
+                let pan = &mut p[t * 49..(t + 1) * 49];
+                // y = z - H x
+                let y = [z[0] - x[0][t], z[1] - x[1][t], z[2] - x[2][t], z[3] - x[3][t]];
+                // S = P[0..4][0..4] + diag(R)
+                let mut s = Mat4::zeros();
+                for r in 0..4 {
+                    for c in 0..4 {
+                        s[(r, c)] = pan[r * 7 + c];
+                    }
+                    s[(r, r)] += consts.r[(r, r)];
+                }
+                let s_inv = match chol_inverse_raw(&s) {
+                    Some(inv) => inv,
+                    // non-SPD innovation: state untouched (the
+                    // lifecycle bump above matches the native path,
+                    // whose update_with also ignores the failure)
+                    None => continue,
+                };
+                n_ok += 1;
+                // K = P[:,0..4] S^-1
+                let mut k = [[0.0f64; 4]; 7];
+                for r in 0..7 {
+                    for c in 0..4 {
+                        let mut acc = 0.0;
+                        for j in 0..4 {
+                            acc += pan[r * 7 + j] * s_inv[(j, c)];
+                        }
+                        k[r][c] = acc;
+                    }
+                }
+                // x' = x + K y
+                for (r, lane) in x.iter_mut().enumerate() {
+                    lane[t] +=
+                        k[r][0] * y[0] + k[r][1] * y[1] + k[r][2] * y[2] + k[r][3] * y[3];
+                }
+                // A = (I - K H) P
+                let mut a = [0.0f64; 49];
+                for r in 0..7 {
+                    for c in 0..7 {
+                        let mut acc = pan[r * 7 + c];
+                        for j in 0..4 {
+                            acc -= k[r][j] * pan[j * 7 + c];
+                        }
+                        a[r * 7 + c] = acc;
+                    }
+                }
+                match params.cov_form {
+                    CovarianceForm::Joseph => {
+                        // P' = A (I-KH)' + K R K', lower triangle + mirror
+                        let rd = consts.r.diagonal();
+                        for r in 0..7 {
+                            for c in 0..=r {
+                                let mut acc = a[r * 7 + c];
+                                for j in 0..4 {
+                                    acc -= a[r * 7 + j] * k[c][j];
+                                }
+                                for j in 0..4 {
+                                    acc += k[r][j] * rd[j] * k[c][j];
+                                }
+                                pan[r * 7 + c] = acc;
+                                pan[c * 7 + r] = acc;
+                            }
+                        }
+                    }
+                    CovarianceForm::Simple => pan.copy_from_slice(&a),
+                }
+            }
+            // z conversion and the Inverse attempt happen for every
+            // matched pair; the gain/covariance GEMMs only for the
+            // n_ok that passed the SPD check — same as native.
+            let n_m = result.matched.len() as u64;
+            if n_m > 0 {
+                record(Kernel::EwVecVec, n_m * 8, n_m * 64);
+                record(Kernel::Inverse, n_m * ((2 * 64) / 3), n_m * (2 * 16 * 8));
+            }
+            if n_ok > 0 {
+                record(Kernel::Gemm, n_ok * 2 * (7 * 4 * 4), n_ok * (7 * 4 + 16 + 7 * 4) * 8);
+                record(
+                    Kernel::Gemm,
+                    n_ok * match params.cov_form {
+                        CovarianceForm::Joseph => 3 * 2 * (7 * 7 * 4) as u64,
+                        CovarianceForm::Simple => 2 * (7 * 7 * 4) as u64,
+                    },
+                    n_ok * (49 + 28 + 49) * 8,
+                );
+            }
+        });
+        phases.add_ws(Phase::Update, result.matched.len() as u64 * 60 * 8 + 44 * 8);
+
+        // --- 6.6 seed new trackers from unmatched detections
+        phases.time(Phase::CreateNew, || {
+            for &d in &result.unmatched_dets {
+                let z = dets[d].to_z_raw();
+                for (l, lane) in x.iter_mut().enumerate() {
+                    lane.push(if l < 4 { z[l] } else { 0.0 });
+                }
+                p.extend_from_slice(&p0[..]);
+                id.push(*next_id);
+                *next_id += 1;
+                time_since_update.push(0);
+                hits.push(0);
+                hit_streak.push(0);
+                age.push(0);
+            }
+            let n_new = result.unmatched_dets.len() as u64;
+            if n_new > 0 {
+                record(Kernel::EwVecVec, n_new * 8, n_new * 64);
+            }
+        });
+        phases.add_ws(Phase::CreateNew, result.unmatched_dets.len() as u64 * 60 * 8);
+
+        // --- 6.7 prepare output + cull expired trackers (reverse walk
+        // with ordered removal, exactly like the native loop)
+        phases.time(Phase::Output, || {
+            out.clear();
+            let mut i = id.len();
+            while i > 0 {
+                i -= 1;
+                if time_since_update[i] < 1
+                    && (hit_streak[i] >= params.min_hits || frame_count <= params.min_hits as u64)
+                {
+                    out.push(Track {
+                        id: id[i] + 1,
+                        bbox: Bbox::from_state_raw(&[
+                            x[0][i], x[1][i], x[2][i], x[3][i], 0.0, 0.0, 0.0,
+                        ]),
+                    });
+                }
+                if time_since_update[i] > params.max_age {
+                    for lane in x.iter_mut() {
+                        lane.remove(i);
+                    }
+                    p.drain(i * 49..(i + 1) * 49);
+                    id.remove(i);
+                    time_since_update.remove(i);
+                    hits.remove(i);
+                    hit_streak.remove(i);
+                    age.remove(i);
+                }
+            }
+            let n_out = out.len() as u64;
+            if n_out > 0 {
+                record(Kernel::Sqrt, n_out * 2, n_out * 56);
+            }
+        });
+        let n_after = id.len() as u64;
+        phases.add_ws(Phase::Output, n_after * 11 * 8);
+        out
+    }
+
+    /// Drop all tracker state but keep scratch buffers (stream reuse).
+    pub fn reset(&mut self) {
+        for lane in self.x.iter_mut() {
+            lane.clear();
+        }
+        self.p.clear();
+        self.id.clear();
+        self.time_since_update.clear();
+        self.hits.clear();
+        self.hit_streak.clear();
+        self.age.clear();
+        self.predicted.clear();
+        self.out.clear();
+        self.frame_count = 0;
+        self.next_id = 0;
+        self.phases.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::Sort;
+
+    fn b(x1: f64, y1: f64, x2: f64, y2: f64) -> Bbox {
+        Bbox::new(x1, y1, x2, y2)
+    }
+
+    /// Three objects on linear trajectories (same scenario as the
+    /// `Sort` unit tests).
+    fn frame_boxes(k: usize) -> Vec<Bbox> {
+        let seeds = [
+            [10.0, 20.0, 60.0, 140.0],
+            [200.0, 50.0, 260.0, 170.0],
+            [400.0, 300.0, 470.0, 420.0],
+        ];
+        let vel = [[3.0, 1.5], [-2.0, 0.5], [1.0, -2.0]];
+        (0..3)
+            .map(|i| {
+                b(
+                    seeds[i][0] + vel[i][0] * k as f64,
+                    seeds[i][1] + vel[i][1] * k as f64,
+                    seeds[i][2] + vel[i][0] * k as f64,
+                    seeds[i][3] + vel[i][1] * k as f64,
+                )
+            })
+            .collect()
+    }
+
+    /// The defining contract: bit-identical output to the native
+    /// engine, frame by frame, including coasting and culling.
+    #[test]
+    fn bitwise_identical_to_native_sort() {
+        let mut native = Sort::new(SortParams::default());
+        let mut batch = BatchSort::new(SortParams::default());
+        for k in 0..60 {
+            let mut boxes = frame_boxes(k);
+            if k % 11 == 5 {
+                boxes.pop(); // dropout
+            }
+            if k % 17 == 9 {
+                boxes.push(b(700.0 + k as f64, 700.0, 760.0 + k as f64, 800.0)); // newcomer
+            }
+            let want = native.update(&boxes).to_vec();
+            let got = batch.update(&boxes).to_vec();
+            assert_eq!(want.len(), got.len(), "frame {k}");
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.id, g.id, "frame {k}");
+                assert_eq!(w.bbox.to_array().map(f64::to_bits), g.bbox.to_array().map(f64::to_bits), "frame {k} id {}", w.id);
+            }
+            assert_eq!(native.n_trackers(), batch.n_trackers(), "frame {k}");
+        }
+    }
+
+    #[test]
+    fn empty_frames_kill_trackers_after_max_age() {
+        let mut s = BatchSort::new(SortParams { min_hits: 1, ..Default::default() });
+        for k in 0..5 {
+            s.update(&frame_boxes(k));
+        }
+        assert_eq!(s.n_trackers(), 3);
+        s.update(&[]); // coast 1 (<= max_age: kept)
+        assert_eq!(s.n_trackers(), 3);
+        s.update(&[]); // coast 2 (> max_age: culled)
+        assert_eq!(s.n_trackers(), 0);
+    }
+
+    #[test]
+    fn reset_clears_state_and_restarts_ids() {
+        let mut s = BatchSort::new(SortParams::default());
+        s.update(&frame_boxes(0));
+        assert!(s.n_trackers() > 0);
+        s.reset();
+        assert_eq!(s.n_trackers(), 0);
+        assert_eq!(s.frame_count(), 0);
+        s.update(&frame_boxes(0));
+        let tracks = s.update(&frame_boxes(1)).to_vec();
+        assert!(tracks.iter().all(|t| t.id <= 3));
+    }
+
+    #[test]
+    fn phase_timer_records_all_phases() {
+        let mut s = BatchSort::new(SortParams::default());
+        for k in 0..10 {
+            s.update(&frame_boxes(k));
+        }
+        assert_eq!(s.phases.get(Phase::Predict).count, 10);
+        assert_eq!(s.phases.get(Phase::Assign).count, 10);
+        if cfg!(feature = "counters") {
+            assert!(s.phases.get(Phase::Update).counters.total().flops > 0);
+            // one aggregate Gemm record per frame (frame 1 has no
+            // trackers to predict yet), not one per tracker (3/frame)
+            assert_eq!(s.phases.get(Phase::Predict).counters.get(Kernel::Gemm).calls, 9);
+        }
+    }
+
+    /// The aggregate accounting must agree with the native per-call
+    /// accounting: identical flop and byte totals per kernel kind (the
+    /// Table II–IV numbers), with far fewer counter events. This is
+    /// the tripwire for anyone editing a `record()` constant in
+    /// kalman.rs/bbox.rs without updating the batch aggregates.
+    #[test]
+    #[cfg(feature = "counters")]
+    fn aggregate_counters_match_native_totals() {
+        use crate::linalg::counters::{reset_counters, snapshot};
+        let run = |engine_is_batch: bool| {
+            reset_counters();
+            let params = SortParams { timing: false, ..Default::default() };
+            if engine_is_batch {
+                let mut e = BatchSort::new(params);
+                for k in 0..40 {
+                    e.update(&frame_boxes(k));
+                }
+            } else {
+                let mut e = Sort::new(params);
+                for k in 0..40 {
+                    e.update(&frame_boxes(k));
+                }
+            }
+            snapshot()
+        };
+        let native = run(false);
+        let batch = run(true);
+        for kernel in Kernel::ALL {
+            let (n, b) = (native.get(kernel), batch.get(kernel));
+            assert_eq!(n.flops, b.flops, "{kernel:?} flop totals diverge");
+            assert_eq!(n.bytes, b.bytes, "{kernel:?} byte totals diverge");
+        }
+        assert!(
+            batch.total().calls < native.total().calls,
+            "batching must reduce counter events ({} vs {})",
+            batch.total().calls,
+            native.total().calls
+        );
+    }
+
+    #[test]
+    fn corrupt_state_is_culled_like_native() {
+        // drive one tracker's area negative so from_state yields NaN:
+        // native culls it during predict; batch must do the same
+        let mut native = Sort::new(SortParams { min_hits: 1, ..Default::default() });
+        let mut batch = BatchSort::new(SortParams { min_hits: 1, ..Default::default() });
+        // shrinking box: area velocity goes strongly negative
+        for k in 0..12 {
+            let shrink = 30.0 - 2.9 * k as f64;
+            let boxes = vec![
+                b(100.0, 100.0, 100.0 + shrink.max(0.5), 100.0 + shrink.max(0.5)),
+                b(500.0, 500.0, 560.0, 570.0),
+            ];
+            let want = native.update(&boxes).to_vec();
+            let got = batch.update(&boxes).to_vec();
+            assert_eq!(want, got, "frame {k}");
+        }
+        // coast: predictions extrapolate the shrink; both engines must
+        // agree on survivor count either way
+        for k in 0..3 {
+            let want = native.update(&[]).to_vec();
+            let got = batch.update(&[]).to_vec();
+            assert_eq!(want, got, "coast frame {k}");
+            assert_eq!(native.n_trackers(), batch.n_trackers(), "coast frame {k}");
+        }
+    }
+}

@@ -58,6 +58,13 @@ impl Bbox {
     #[inline]
     pub fn to_z(&self) -> [f64; 4] {
         record(Kernel::EwVecVec, 8, 64);
+        self.to_z_raw()
+    }
+
+    /// [`Self::to_z`] without the counter bump — batched callers record
+    /// one aggregate event per frame (the `iou_raw` convention).
+    #[inline]
+    pub fn to_z_raw(&self) -> [f64; 4] {
         let w = self.w();
         let h = self.h();
         [self.x1 + w / 2.0, self.y1 + h / 2.0, w * h, w / h]
@@ -71,6 +78,13 @@ impl Bbox {
     #[inline]
     pub fn from_state(x: &[f64; 7]) -> Self {
         record(Kernel::Sqrt, 2, 56);
+        Self::from_state_raw(x)
+    }
+
+    /// [`Self::from_state`] without the counter bump (batched aggregate
+    /// accounting).
+    #[inline]
+    pub fn from_state_raw(x: &[f64; 7]) -> Self {
         let w = (x[2] * x[3]).sqrt();
         let h = x[2] / w;
         Bbox {

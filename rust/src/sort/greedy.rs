@@ -14,10 +14,30 @@ pub fn greedy_max_score(
     cols: usize,
     min_score: f64,
 ) -> Vec<(usize, usize)> {
-    assert_eq!(score.len(), rows * cols);
-    let mut row_used = vec![false; rows];
-    let mut col_used = vec![false; cols];
+    let mut row_used = Vec::new();
+    let mut col_used = Vec::new();
     let mut out = Vec::with_capacity(rows.min(cols));
+    greedy_max_score_into(score, rows, cols, min_score, &mut row_used, &mut col_used, &mut out);
+    out
+}
+
+/// [`greedy_max_score`] over caller-reused buffers — the
+/// allocation-free form the per-frame hot loop uses.
+pub fn greedy_max_score_into(
+    score: &[f64],
+    rows: usize,
+    cols: usize,
+    min_score: f64,
+    row_used: &mut Vec<bool>,
+    col_used: &mut Vec<bool>,
+    out: &mut Vec<(usize, usize)>,
+) {
+    assert_eq!(score.len(), rows * cols);
+    row_used.clear();
+    row_used.resize(rows, false);
+    col_used.clear();
+    col_used.resize(cols, false);
+    out.clear();
     loop {
         let mut best = min_score;
         let mut arg: Option<(usize, usize)> = None;
@@ -45,7 +65,6 @@ pub fn greedy_max_score(
             None => break,
         }
     }
-    out
 }
 
 #[cfg(test)]

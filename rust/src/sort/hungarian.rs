@@ -22,6 +22,8 @@ pub struct HungarianScratch {
     way: Vec<usize>,
     minv: Vec<f64>,
     used: Vec<bool>,
+    transpose: Vec<f64>,
+    row_to_col: Vec<usize>,
 }
 
 /// Solve the min-cost rectangular assignment problem.
@@ -40,9 +42,26 @@ pub fn hungarian_min_cost(
     cols: usize,
     scratch: &mut HungarianScratch,
 ) -> Vec<Option<usize>> {
+    let mut out = Vec::with_capacity(rows);
+    hungarian_min_cost_into(cost, rows, cols, scratch, &mut out);
+    out
+}
+
+/// [`hungarian_min_cost`] writing into a caller-reused output buffer —
+/// the allocation-free form the per-frame hot loop uses (the transpose
+/// workspace for `rows > cols` also lives in the scratch).
+pub fn hungarian_min_cost_into(
+    cost: &[f64],
+    rows: usize,
+    cols: usize,
+    scratch: &mut HungarianScratch,
+    out: &mut Vec<Option<usize>>,
+) {
     assert_eq!(cost.len(), rows * cols, "cost matrix shape mismatch");
+    out.clear();
     if rows == 0 || cols == 0 {
-        return vec![None; rows];
+        out.resize(rows, None);
+        return;
     }
     record(
         Kernel::Hungarian,
@@ -51,33 +70,32 @@ pub fn hungarian_min_cost(
     );
 
     if rows <= cols {
-        let row_to_col = solve_rows_le_cols(cost, rows, cols, scratch);
-        row_to_col.into_iter().map(Some).collect()
+        solve_rows_le_cols(cost, rows, cols, scratch);
+        out.extend(scratch.row_to_col.iter().map(|&c| Some(c)));
     } else {
-        // transpose: solve cols (as rows) vs rows (as cols)
-        let mut t = vec![0.0; rows * cols];
+        // transpose: solve cols (as rows) vs rows (as cols). The buffer
+        // is taken out of the scratch for the solve call (disjoint
+        // borrows), then handed back with its capacity intact.
+        let mut t = std::mem::take(&mut scratch.transpose);
+        t.clear();
+        t.resize(rows * cols, 0.0);
         for r in 0..rows {
             for c in 0..cols {
                 t[c * rows + r] = cost[r * cols + c];
             }
         }
-        let col_to_row = solve_rows_le_cols(&t, cols, rows, scratch);
-        let mut out = vec![None; rows];
-        for (c, r) in col_to_row.into_iter().enumerate() {
+        solve_rows_le_cols(&t, cols, rows, scratch);
+        scratch.transpose = t;
+        out.resize(rows, None);
+        for (c, &r) in scratch.row_to_col.iter().enumerate() {
             out[r] = Some(c);
         }
-        out
     }
 }
 
 /// Core shortest-augmenting-path Hungarian for `n <= m`.
-/// Returns `row -> col` with all rows assigned.
-fn solve_rows_le_cols(
-    cost: &[f64],
-    n: usize,
-    m: usize,
-    s: &mut HungarianScratch,
-) -> Vec<usize> {
+/// Leaves `row -> col` (all rows assigned) in `s.row_to_col`.
+fn solve_rows_le_cols(cost: &[f64], n: usize, m: usize, s: &mut HungarianScratch) {
     // 1-indexed dual potentials, matching the classic formulation.
     s.u.clear();
     s.u.resize(n + 1, 0.0);
@@ -138,14 +156,14 @@ fn solve_rows_le_cols(
         }
     }
 
-    let mut row_to_col = vec![usize::MAX; n];
+    s.row_to_col.clear();
+    s.row_to_col.resize(n, usize::MAX);
     for j in 1..=m {
         if s.p[j] != 0 {
-            row_to_col[s.p[j] - 1] = j - 1;
+            s.row_to_col[s.p[j] - 1] = j - 1;
         }
     }
-    debug_assert!(row_to_col.iter().all(|&c| c != usize::MAX));
-    row_to_col
+    debug_assert!(s.row_to_col.iter().all(|&c| c != usize::MAX));
 }
 
 /// Exhaustive brute-force oracle (min-cost over all permutations);

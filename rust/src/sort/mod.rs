@@ -14,12 +14,15 @@
 //! * [`hungarian`] — rectangular assignment (Kuhn–Munkres)
 //! * [`greedy`] — greedy association baseline (ablation E9)
 //! * [`association`] — SORT's match/unmatch logic on top of either
+//! * [`scratch`] — [`FrameScratch`], the reused per-frame hot-loop buffers
 //! * [`tracker`] — per-object lifecycle (`max_age`, `min_hits`, streaks)
 //! * [`sort`] — the per-frame update loop (Algorithm 1 of the paper)
+//! * [`batch`] — the batched SoA engine (all trackers in fused lanes)
 //! * [`phases`] — per-phase timing (Table IV / Fig 3 instrumentation)
 //! * [`quality`] — CLEAR-MOT metrics vs ground truth (ablation guardrail)
 
 pub mod association;
+pub mod batch;
 pub mod bbox;
 pub mod greedy;
 pub mod hungarian;
@@ -27,14 +30,17 @@ pub mod iou;
 pub mod kalman;
 pub mod phases;
 pub mod quality;
+pub mod scratch;
 pub mod sort;
 pub mod tracker;
 
 pub use association::{associate, AssociationMethod, AssociationResult};
+pub use batch::BatchSort;
 pub use bbox::Bbox;
 pub use hungarian::hungarian_min_cost;
 pub use kalman::{KalmanState, SortConstants};
 pub use phases::{Phase, PhaseStats, PhaseTimer};
 pub use quality::{evaluate, evaluate_sort, MotMetrics};
+pub use scratch::FrameScratch;
 pub use sort::{Sort, SortParams, Track};
 pub use tracker::KalmanBoxTracker;

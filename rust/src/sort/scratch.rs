@@ -1,0 +1,95 @@
+//! [`FrameScratch`] — every heap buffer the per-frame hot loop needs,
+//! owned by the engine and reused across frames.
+//!
+//! The paper's regime is "low actual work, high overhead": at 7×7
+//! matrices and ≤13×13 cost matrices, a single `malloc` costs more
+//! than the arithmetic it feeds. So the frame loop is allocation-free
+//! in steady state — after a warm-up period in which these buffers
+//! grow to the stream's high-water marks, `Sort::update` and
+//! `BatchSort::update` never touch the allocator again. The contract
+//! is pinned by `rust/tests/integration_alloc.rs` with a counting
+//! global allocator; see ARCHITECTURE.md §"Hot-path memory discipline"
+//! for what is allowed to allocate and when.
+//!
+//! One `FrameScratch` bundles the association working set:
+//! * the IoU matrix and the negated cost matrix,
+//! * the fast-path row/col candidate counts,
+//! * the raw assignment pairs (fast path, Hungarian, or greedy),
+//! * the matched/unmatched flags and the [`AssociationResult`] vectors,
+//! * the [`HungarianScratch`] dual potentials / augmenting-path state.
+
+use super::association::AssociationResult;
+use super::hungarian::HungarianScratch;
+
+/// Reusable per-frame buffers for one tracking pipeline.
+///
+/// Fields are crate-private: engines own one and thread it through
+/// [`super::association::associate_into`]; the association output is
+/// read back via [`Self::result`].
+#[derive(Debug, Default)]
+pub struct FrameScratch {
+    /// Row-major `dets x trackers` IoU matrix.
+    pub(crate) iou: Vec<f64>,
+    /// Negated IoU (the Hungarian minimizes cost).
+    pub(crate) cost: Vec<f64>,
+    /// Fast-path candidate count per detection row.
+    pub(crate) row_count: Vec<usize>,
+    /// Fast-path candidate count per tracker column.
+    pub(crate) col_count: Vec<usize>,
+    /// Raw `(det, trk)` pairs before the threshold post-filter.
+    pub(crate) pairs: Vec<(usize, usize)>,
+    /// Hungarian `row -> Option<col>` assignment output.
+    pub(crate) assignment: Vec<Option<usize>>,
+    /// Which detections ended up matched.
+    pub(crate) det_matched: Vec<bool>,
+    /// Which trackers ended up matched.
+    pub(crate) trk_matched: Vec<bool>,
+    /// Greedy-fallback row-used flags.
+    pub(crate) greedy_rows: Vec<bool>,
+    /// Greedy-fallback column-used flags.
+    pub(crate) greedy_cols: Vec<bool>,
+    /// Hungarian solver state (duals, augmenting paths, transpose).
+    pub(crate) hungarian: HungarianScratch,
+    /// The association output vectors, cleared and refilled per frame.
+    pub(crate) result: AssociationResult,
+}
+
+impl FrameScratch {
+    /// The association result of the most recent
+    /// [`super::association::associate_into`] call.
+    pub fn result(&self) -> &AssociationResult {
+        &self.result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::association::{associate_into, AssociationMethod};
+    use crate::sort::Bbox;
+
+    #[test]
+    fn buffers_are_reused_across_calls() {
+        let mut s = FrameScratch::default();
+        let d = vec![Bbox::new(0.0, 0.0, 10.0, 10.0), Bbox::new(50.0, 50.0, 60.0, 60.0)];
+        let t = vec![Bbox::new(0.0, 1.0, 10.0, 11.0), Bbox::new(50.0, 51.0, 60.0, 61.0)];
+        associate_into(&d, &t, 0.3, AssociationMethod::Hungarian, &mut s);
+        let matched_first = s.result().matched.clone();
+        let cap = s.iou.capacity();
+        associate_into(&d, &t, 0.3, AssociationMethod::Hungarian, &mut s);
+        assert_eq!(s.result().matched, matched_first);
+        assert_eq!(s.iou.capacity(), cap, "IoU buffer must be reused");
+    }
+
+    #[test]
+    fn result_is_cleared_between_frames() {
+        let mut s = FrameScratch::default();
+        let d = vec![Bbox::new(0.0, 0.0, 10.0, 10.0)];
+        let t = vec![Bbox::new(0.0, 0.0, 10.0, 10.0)];
+        associate_into(&d, &t, 0.3, AssociationMethod::Hungarian, &mut s);
+        assert_eq!(s.result().matched.len(), 1);
+        associate_into(&[], &t, 0.3, AssociationMethod::Hungarian, &mut s);
+        assert!(s.result().matched.is_empty(), "stale matches must not leak");
+        assert_eq!(s.result().unmatched_trks, vec![0]);
+    }
+}

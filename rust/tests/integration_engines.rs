@@ -1,14 +1,17 @@
-//! Engine equivalence: all three [`TrackerEngine`] backends must emit
+//! Engine equivalence: all four [`TrackerEngine`] backends must emit
 //! identical track ids and boxes on shared deterministic input.
 //!
 //! This is the contract that makes the backends interchangeable behind
-//! the coordinator: `native` is the reference; `strong` runs the same
-//! math under fork-join parallelism; `xla` runs it through the batched
+//! the coordinator: `native` is the reference; `batch` runs the exact
+//! same scalar sequence over structure-of-arrays lanes (asserted
+//! *byte-identical*, `f64::to_bits`); `strong` runs the same math
+//! under fork-join parallelism; `xla` runs it through the batched
 //! tracker-bank kernels. The bank's reference interpreter reuses the
 //! native Kalman kernels, so agreement is expected to be bitwise on the
 //! state path (asserted here at 1e-9 to stay robust if the compiled
 //! PJRT backend — dense formulation, ~1e-9 agreement — is swapped in).
 
+use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
 use smalltrack::data::synth::{generate_sequence, SynthConfig, SynthSequence};
 use smalltrack::engine::{EngineKind, TrackerEngine};
 use smalltrack::sort::{Bbox, SortParams, Track};
@@ -63,10 +66,115 @@ fn all_engines_emit_identical_tracks() {
         reference.iter().map(Vec::len).sum::<usize>() > 200,
         "reference run produced too few tracks to be meaningful"
     );
-    for kind in [EngineKind::Strong { threads: 3 }, EngineKind::Xla] {
+    for kind in [EngineKind::Batch, EngineKind::Strong { threads: 3 }, EngineKind::Xla] {
         let mut engine = kind.build(params()).expect("build");
         let got = track_all(&mut *engine, &synth);
         assert_equivalent(kind.label(), &got, &reference);
+    }
+}
+
+/// Per-frame track outputs with exact bit patterns (no tolerance).
+fn assert_byte_identical(name: &str, got: &[Vec<Track>], want: &[Vec<Track>]) {
+    assert_eq!(got.len(), want.len());
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "{name}: frame {k} track count");
+        for (a, b) in g.iter().zip(w) {
+            assert_eq!(a.id, b.id, "{name}: frame {k} ids diverge");
+            assert_eq!(
+                a.bbox.to_array().map(f64::to_bits),
+                b.bbox.to_array().map(f64::to_bits),
+                "{name}: frame {k} id {} bit pattern diverges",
+                a.id
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_is_byte_identical_to_native_on_randomized_streams() {
+    // the batch engine replays the native scalar op sequence over SoA
+    // lanes, so agreement must be exact to the last bit — across many
+    // randomized streams with births, dropouts (det_prob < 1), false
+    // positives and varying object counts
+    for (i, &(frames, objects, seed)) in [
+        (200u32, 8u32, 23u64),
+        (150, 3, 101),
+        (150, 13, 7),
+        (80, 1, 55),
+        (300, 6, 2024),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let synth = generate_sequence(&SynthConfig::mot15(&format!("BB-{i}"), frames, objects, seed));
+        let mut native = EngineKind::Native.build(params()).expect("native");
+        let mut batch = EngineKind::Batch.build(params()).expect("batch");
+        let want = track_all(&mut *native, &synth);
+        let got = track_all(&mut *batch, &synth);
+        assert_byte_identical(&format!("batch stream {i}"), &got, &want);
+    }
+}
+
+#[test]
+fn batch_is_byte_identical_under_sharded_scheduler() {
+    // the scheduler must be a pure throughput transform for the batch
+    // engine too: pinned/stealing shards at 1, 2 and 8 workers emit the
+    // same rows as a serial native run, bit for bit
+    let suite: Vec<SynthSequence> = (0..6)
+        .map(|i| {
+            generate_sequence(&SynthConfig::mot15(
+                &format!("BSCH-{i}"),
+                60 + 30 * (i as u32 % 3),
+                3 + (i as u32 % 4),
+                i as u64,
+            ))
+        })
+        .collect();
+    // serial native reference rows, one fresh engine per stream
+    let reference: Vec<Vec<(u32, u64, Bbox)>> = suite
+        .iter()
+        .map(|s| {
+            let mut engine = EngineKind::Native.build(params()).expect("build");
+            let mut rows = Vec::new();
+            let mut boxes: Vec<Bbox> = Vec::new();
+            for frame in &s.sequence.frames {
+                boxes.clear();
+                boxes.extend(frame.detections.iter().map(|d| d.bbox));
+                for t in engine.update(&boxes) {
+                    rows.push((frame.index, t.id, t.bbox));
+                }
+            }
+            rows
+        })
+        .collect();
+    for workers in [1usize, 2, 8] {
+        for policy in [ShardPolicy::Pinned, ShardPolicy::Stealing] {
+            let report = run_shards(
+                &suite,
+                SchedulerConfig {
+                    workers,
+                    shard_policy: policy,
+                    engine: EngineKind::Batch,
+                    sort_params: params(),
+                    collect_tracks: true,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(report.outputs.len(), suite.len());
+            for (out, want) in report.outputs.iter().zip(&reference) {
+                assert_eq!(out.rows.len(), want.len());
+                for ((fa, ia, ba), (fb, ib, bb)) in out.rows.iter().zip(want) {
+                    assert_eq!((fa, ia), (fb, ib), "stream {} w={workers}", out.stream_id);
+                    assert_eq!(
+                        ba.to_array().map(f64::to_bits),
+                        bb.to_array().map(f64::to_bits),
+                        "stream {} w={workers} {} diverged from serial native",
+                        out.stream_id,
+                        policy.label()
+                    );
+                }
+            }
+        }
     }
 }
 
@@ -116,7 +224,7 @@ fn equivalence_with_empty_and_bursty_frames() {
     };
     let mut native = EngineKind::Native.build(params()).expect("native");
     let want = run(&mut *native);
-    for kind in [EngineKind::Strong { threads: 2 }, EngineKind::Xla] {
+    for kind in [EngineKind::Batch, EngineKind::Strong { threads: 2 }, EngineKind::Xla] {
         let mut engine = kind.build(params()).expect("build");
         let got = run(&mut *engine);
         assert_equivalent(kind.label(), &got, &want);
