@@ -19,12 +19,19 @@
 //! It also demonstrates admission control: with a tiny `Block` ingress
 //! the submitter is backpressured (lossless), while `DropOldest`
 //! sheds the longest-waiting streams and counts them.
+//!
+//! Finally, the same 64-stream fleet is replayed through the live
+//! session API (`TrackingService`): sessions admitted at runtime,
+//! frames pushed incrementally, metrics observable mid-flight — and
+//! the exact same total track output as the batch scheduler.
 
 use smalltrack::coordinator::backpressure::PushPolicy;
 use smalltrack::coordinator::scheduler::{
     run_shards, Scheduler, SchedulerConfig, ShardPolicy,
 };
+use smalltrack::coordinator::service::{ServiceConfig, SessionParams, TrackingService};
 use smalltrack::data::synth::{generate_sequence, SynthConfig, SynthSequence};
+use smalltrack::sort::Bbox;
 use std::sync::Arc;
 
 /// 64 streams with a deliberately lumpy length distribution: mostly
@@ -129,4 +136,70 @@ fn main() {
         );
         assert_eq!(r.streams + r.shed, 64, "every stream is run or counted shed");
     }
+
+    println!("\n=== the same fleet through the live session API (4 workers) ===");
+    // batch anchor: the scheduler's total track output on this fleet
+    let anchor = run_shards(
+        &fleet,
+        SchedulerConfig { workers: 4, queue_capacity: 128, ..Default::default() },
+    )
+    .tracks_out;
+    let svc = TrackingService::start(ServiceConfig {
+        workers: 4,
+        push_policy: PushPolicy::Block, // lossless, like the scheduler
+        ..Default::default()
+    })
+    .expect("start service");
+    // sessions admitted one by one at runtime; frames fed round-robin
+    // so every worker stays busy despite the 18x length spread
+    let mut feeds: Vec<(&SynthSequence, _, usize)> = fleet
+        .iter()
+        .map(|s| (s, svc.open_session(SessionParams::default()).expect("open"), 0usize))
+        .collect();
+    let mut handles = Vec::with_capacity(feeds.len());
+    let mut live_printed = false;
+    while !feeds.is_empty() {
+        let mut i = 0;
+        while i < feeds.len() {
+            let (s, h, cursor) = &mut feeds[i];
+            let end = (*cursor + 8).min(s.sequence.frames.len());
+            for frame in &s.sequence.frames[*cursor..end] {
+                let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+                h.push_frame(boxes);
+            }
+            *cursor = end;
+            if *cursor == s.sequence.frames.len() {
+                h.close();
+                let (_, h, _) = feeds.swap_remove(i);
+                handles.push(h);
+            } else {
+                i += 1;
+            }
+        }
+        if !live_printed && handles.len() >= 32 && !feeds.is_empty() {
+            live_printed = true;
+            let m = svc.metrics();
+            println!(
+                "  live @ {} sessions retired: open={} queued={} frames_done={}",
+                handles.len(),
+                m.open_sessions,
+                m.queue_depth(),
+                m.frames_done
+            );
+        }
+    }
+    let mut tracks = 0u64;
+    for h in &handles {
+        tracks += h.join().tracks_out;
+    }
+    let m = svc.shutdown();
+    println!(
+        "  sessions={} frames={} tracks={} busy_fps={:.0}",
+        m.sessions_closed,
+        m.frames_done,
+        tracks,
+        m.aggregate_fps().fps()
+    );
+    assert_eq!(m.frames_done, total_frames);
+    assert_eq!(tracks, anchor, "session path diverged from the batch scheduler");
 }

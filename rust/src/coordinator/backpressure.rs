@@ -20,6 +20,20 @@ pub enum PushPolicy {
     DropOldest,
 }
 
+/// Outcome of [`BoundedQueue::try_pop_status`]: a non-blocking pop
+/// that also observes queue shutdown in the same atomic step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TryPop<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// The queue is empty but still open — more items may arrive.
+    Empty,
+    /// The queue is closed *and* fully drained — no item will ever
+    /// arrive again. A consumer multiplexing several queues uses this
+    /// to retire one without racing a concurrent close.
+    Done,
+}
+
 #[derive(Debug, Default)]
 struct Inner<T> {
     queue: VecDeque<T>,
@@ -101,6 +115,23 @@ impl<T> BoundedQueue<T> {
             self.not_full.notify_one();
         }
         item
+    }
+
+    /// Non-blocking pop that distinguishes "empty for now" from
+    /// "closed and drained" under one lock acquisition, so a consumer
+    /// draining many queues can retire a closed one without the race
+    /// of checking emptiness and closedness separately (a producer
+    /// could push-then-close between the two observations).
+    pub fn try_pop_status(&self) -> TryPop<T> {
+        let mut g = self.inner.lock().unwrap();
+        match g.queue.pop_front() {
+            Some(item) => {
+                self.not_full.notify_one();
+                TryPop::Item(item)
+            }
+            None if g.closed => TryPop::Done,
+            None => TryPop::Empty,
+        }
     }
 
     /// Close: producers fail, consumers drain then get `None`.
@@ -197,6 +228,55 @@ mod tests {
         assert_eq!(q.try_pop(), None);
         q.push(9);
         assert_eq!(q.try_pop(), Some(9));
+    }
+
+    #[test]
+    fn drop_oldest_capacity_one_counts_every_eviction() {
+        // the degenerate capacity-1 queue: every push past the first
+        // evicts exactly one item, and the ledger must balance —
+        // pushes == pops + drops, with the newest item surviving
+        let q = BoundedQueue::new(1, PushPolicy::DropOldest);
+        for i in 0..10 {
+            assert!(q.push(i), "push {i} must succeed under DropOldest");
+        }
+        assert_eq!(q.dropped(), 9, "9 of 10 pushes must be evictions");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(9), "survivor is the newest item");
+        assert_eq!(q.dropped(), 9, "pop must not change the drop count");
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn drop_oldest_interleaved_conservation() {
+        // interleave pushes and pops on a capacity-1 queue: at every
+        // point pushed == popped + dropped + len
+        let q = BoundedQueue::new(1, PushPolicy::DropOldest);
+        let mut pushed = 0u64;
+        let mut popped = 0u64;
+        for round in 0..5u64 {
+            for i in 0..3u64 {
+                q.push(round * 10 + i);
+                pushed += 1;
+            }
+            while q.try_pop().is_some() {
+                popped += 1;
+            }
+            assert_eq!(pushed, popped + q.dropped() + q.len() as u64);
+        }
+        assert_eq!(q.dropped(), 10, "2 of every 3 burst pushes evict");
+    }
+
+    #[test]
+    fn try_pop_status_distinguishes_empty_from_done() {
+        let q = BoundedQueue::<u32>::new(2, PushPolicy::Block);
+        assert_eq!(q.try_pop_status(), TryPop::Empty, "open+empty is Empty");
+        q.push(7);
+        assert_eq!(q.try_pop_status(), TryPop::Item(7));
+        q.push(8);
+        q.close();
+        assert_eq!(q.try_pop_status(), TryPop::Item(8), "closed queues drain first");
+        assert_eq!(q.try_pop_status(), TryPop::Done, "closed+drained is Done");
+        assert_eq!(q.try_pop_status(), TryPop::Done, "Done is terminal");
     }
 
     #[test]

@@ -93,6 +93,65 @@ impl WorkerCounters {
     }
 }
 
+/// One worker's slice of a live [`ServiceMetrics`] snapshot.
+///
+/// Produced by `TrackingService::metrics`
+/// ([`crate::coordinator::service`]): counters accumulate over the
+/// service's whole lifetime, while `open_sessions` / `queue_depth` are
+/// instantaneous gauges.
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    /// Busy-time FPS accumulator (per-frame tracking time only).
+    pub fps: FpsCounter,
+    /// Frames fully processed by this worker.
+    pub frames_done: u64,
+    /// Confirmed track-frames emitted.
+    pub tracks_out: u64,
+    /// Sessions currently pinned to this worker (gauge).
+    pub open_sessions: usize,
+    /// Frames queued across this worker's open sessions (gauge).
+    pub queue_depth: usize,
+    /// Sessions this worker has fully drained and retired.
+    pub sessions_closed: u64,
+    /// Frames shed by backpressure on this worker's sessions.
+    pub dropped: u64,
+}
+
+/// Live service-wide snapshot — the in-flight answer to "how is the
+/// fleet doing", where the batch `serve()` wrappers only report
+/// post-mortem.
+#[derive(Debug, Clone)]
+pub struct ServiceMetrics {
+    /// Per-worker slices, indexed by worker id.
+    pub per_worker: Vec<WorkerSnapshot>,
+    /// Sessions currently open across all workers (gauge).
+    pub open_sessions: usize,
+    /// Sessions fully drained and retired.
+    pub sessions_closed: u64,
+    /// Frames fully processed.
+    pub frames_done: u64,
+    /// Confirmed track-frames emitted.
+    pub tracks_out: u64,
+    /// Frames shed by backpressure.
+    pub dropped: u64,
+}
+
+impl ServiceMetrics {
+    /// All workers' busy-time FPS counters folded into one.
+    pub fn aggregate_fps(&self) -> FpsCounter {
+        let mut agg = FpsCounter::default();
+        for w in &self.per_worker {
+            agg.merge(&w.fps);
+        }
+        agg
+    }
+
+    /// Frames queued across every open session (gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.per_worker.iter().map(|w| w.queue_depth).sum()
+    }
+}
+
 /// Log-bucketed latency histogram.
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
@@ -262,6 +321,34 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.max(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn service_metrics_aggregate_across_workers() {
+        let mut w0 = WorkerSnapshot {
+            fps: FpsCounter::default(),
+            frames_done: 100,
+            tracks_out: 40,
+            open_sessions: 2,
+            queue_depth: 3,
+            sessions_closed: 1,
+            dropped: 5,
+        };
+        w0.fps.record(100, Duration::from_secs(1));
+        let mut w1 = w0.clone();
+        w1.queue_depth = 7;
+        let m = ServiceMetrics {
+            per_worker: vec![w0, w1],
+            open_sessions: 4,
+            sessions_closed: 2,
+            frames_done: 200,
+            tracks_out: 80,
+            dropped: 10,
+        };
+        assert_eq!(m.queue_depth(), 10);
+        let agg = m.aggregate_fps();
+        assert_eq!(agg.frames(), 200);
+        assert!((agg.fps() - 100.0).abs() < 1e-9);
     }
 
     #[test]

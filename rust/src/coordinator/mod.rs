@@ -22,10 +22,14 @@
 //! * [`router`] — stream→worker pinning (sequential Kalman chains never
 //!   split across workers)
 //! * [`backpressure`] — bounded queues with block/shed policies
-//! * [`server`] — the online serving loop with latency metrics (E10);
-//!   also fronts the sharded batch mode
+//! * [`service`] — **the serving front door**: the long-lived
+//!   [`service::TrackingService`] — sessions open/close at runtime,
+//!   frames push incrementally, metrics are live (E10)
+//! * [`server`] — run-to-completion compatibility wrappers
+//!   ([`server::serve`]) over the session runtime; also fronts the
+//!   sharded batch mode
 //! * [`metrics`] — FPS counters, latency histograms, per-worker
-//!   scheduler counters
+//!   scheduler counters, live service snapshots
 
 pub mod backpressure;
 pub mod metrics;
@@ -34,17 +38,21 @@ pub mod pool;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod service;
 pub mod stream;
 pub mod strong;
 
-pub use backpressure::{BoundedQueue, PushPolicy};
-pub use metrics::{FpsCounter, LatencyHistogram, WorkerCounters};
+pub use backpressure::{BoundedQueue, PushPolicy, TryPop};
+pub use metrics::{FpsCounter, LatencyHistogram, ServiceMetrics, WorkerCounters, WorkerSnapshot};
 pub use policy::{run_policy, run_policy_with_engine, ScalingOutcome, ScalingPolicy};
 pub use pool::WorkerPool;
 pub use router::{RoutePolicy, Router};
 pub use scheduler::{
     run_shards, Scheduler, SchedulerConfig, SchedulerReport, ShardPolicy, StreamOutput,
 };
-pub use server::{serve, ServerConfig, ServerReport};
+pub use server::{serve, serve_observed, ServerConfig, ServerReport};
+pub use service::{
+    ServiceConfig, SessionHandle, SessionParams, SessionStats, TrackingService,
+};
 pub use stream::{FrameJob, Pacing, VideoStream};
 pub use strong::ParallelSort;

@@ -124,4 +124,61 @@ mod tests {
         r.release(99);
         assert_eq!(r.loads(), &[0, 0]);
     }
+
+    #[test]
+    fn least_loaded_pin_is_stable_under_churn() {
+        // a stream's pin must survive arbitrary registration/release
+        // churn of *other* streams — the Kalman chain owner never moves
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        let pins: Vec<usize> = (0..8).map(|s| r.route(s)).collect();
+        for s in 100..120 {
+            r.route(s);
+        }
+        for s in (100..120).step_by(2) {
+            r.release(s);
+        }
+        for s in 0..8 {
+            assert_eq!(r.route(s), pins[s], "stream {s} re-pinned under churn");
+        }
+    }
+
+    #[test]
+    fn rebalance_after_session_close_fills_freed_worker() {
+        // drain one worker entirely: the next opens must all land on
+        // it until loads level out again
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        for s in 0..6 {
+            r.route(s); // 2 per worker
+        }
+        assert_eq!(r.loads(), &[2, 2, 2]);
+        // close both sessions pinned to worker 1
+        let on_w1: Vec<usize> = (0..6).filter(|&s| r.route(s) == 1).collect();
+        assert_eq!(on_w1.len(), 2);
+        for s in on_w1 {
+            r.release(s);
+        }
+        assert_eq!(r.loads(), &[2, 0, 2]);
+        // the freed worker absorbs the next two sessions
+        assert_eq!(r.route(10), 1);
+        assert_eq!(r.route(11), 1);
+        assert_eq!(r.loads(), &[2, 2, 2]);
+        // and the one after that ties-break to the lowest id again
+        assert_eq!(r.route(12), 0);
+    }
+
+    #[test]
+    fn released_id_reroutes_fresh() {
+        // a released stream id is a *new* session on re-open: it is
+        // re-routed by current load, not by its dead pin
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(0), 0);
+        assert_eq!(r.route(1), 1);
+        assert_eq!(r.route(2), 0);
+        r.release(0);
+        r.release(2); // worker 0 now empty, worker 1 holds stream 1
+        assert_eq!(r.route(0), 0, "reopened stream routes by load");
+        // loads are tied at [1,1] now: deterministic tie-break to the
+        // lowest worker id, same as a fresh registration
+        assert_eq!(r.route(2), 0);
+    }
 }

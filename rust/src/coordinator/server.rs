@@ -1,60 +1,73 @@
-//! The online multi-stream tracking server (deliverable E10).
+//! Batch-compatibility front door over the session runtime (E10).
 //!
-//! Architecture (one box per concept):
+//! The serving engine proper is the long-lived
+//! [`super::service::TrackingService`] — sessions open and close at
+//! runtime, frames are pushed incrementally, metrics are live. This
+//! module keeps the historical run-to-completion entry point on top of
+//! it:
 //!
 //! ```text
-//!  streams ──► dispatcher ──► router ──► per-worker BoundedQueue ──► worker
-//!  (paced)     (arrival        (pin          (backpressure:          (owns one
-//!              simulation)      stream)       DropOldest)             TrackerEngine
-//!                                                                     per stream)
+//!  serve(streams, cfg)
+//!    │  open one session per VideoStream   (TrackingService)
+//!    │  dispatch frames by arrival time    (pacing simulation)
+//!    │  close sessions as streams end
+//!    ▼  join sessions + shutdown           → ServerReport
 //! ```
 //!
 //! Frames of one stream always land on one worker in order (the Kalman
 //! chain is sequential); workers never share tracker state — the weak-
 //! scaling lesson of the paper baked into the serving architecture.
 //! The tracker backend is injected via [`ServerConfig::engine`]; the
-//! serving loop knows only the [`TrackerEngine`] trait.
+//! session runtime knows only the [`TrackerEngine`] trait.
 //! Metrics: arrival→completion latency percentiles, FPS, drops.
 //!
 //! Two execution modes share this front door:
-//! * **online** (default) — the paced frame-granular pipeline above;
-//! * **sharded** ([`ServerConfig::shard`] = `Some(policy)`) — whole
-//!   streams are handed to the work-stealing
-//!   [`super::scheduler::Scheduler`] and drained at full speed, the
-//!   batch/backfill mode. Latency then measures per-frame engine time
-//!   rather than arrival→completion.
+//! * **online** (default) — paced arrivals through the session
+//!   pipeline above;
+//! * **sharded** ([`ServerConfig::shard`] = `Some(policy)`) — pacing
+//!   is ignored and whole streams are pushed at full speed, losslessly
+//!   (the feeder blocks instead of shedding), the batch/backfill mode.
+//!   [`ShardPolicy::Pinned`] maps to hash-mod session routing (the
+//!   paper's static `id % workers` partition), [`ShardPolicy::Stealing`]
+//!   to least-loaded routing. For stream-granular work stealing proper
+//!   (idle workers reclaiming queued streams), use
+//!   [`super::scheduler::run_shards`] — the batch scheduler is
+//!   unchanged underneath.
+//!
+//! [`TrackerEngine`]: crate::engine::TrackerEngine
 
-use super::backpressure::{BoundedQueue, PushPolicy};
-use super::metrics::{FpsCounter, LatencyHistogram};
-use super::router::{RoutePolicy, Router};
-use super::scheduler::{Scheduler, SchedulerConfig, ShardPolicy};
-use super::stream::{FrameJob, VideoStream};
-use crate::engine::{EngineKind, TrackerEngine};
+use super::backpressure::PushPolicy;
+use super::metrics::{FpsCounter, LatencyHistogram, ServiceMetrics};
+use super::router::RoutePolicy;
+use super::scheduler::ShardPolicy;
+use super::service::{ServiceConfig, SessionHandle, SessionParams, TrackingService};
+use super::stream::VideoStream;
+use crate::engine::EngineKind;
 use crate::sort::SortParams;
 use std::collections::HashMap;
-use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 /// Server configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
-    /// Worker threads (each owns a disjoint set of streams).
+    /// Worker threads (each owns a disjoint set of sessions).
     pub workers: usize,
-    /// Per-worker queue capacity (frames).
+    /// Per-session queue capacity (frames).
     pub queue_capacity: usize,
     /// Queue-full behavior.
     pub push_policy: PushPolicy,
     /// Stream pinning policy.
     pub route_policy: RoutePolicy,
-    /// Tracker backend; workers build one engine per pinned stream
-    /// through the [`TrackerEngine`] trait (never a concrete type).
+    /// Tracker backend; each stream's session builds one engine
+    /// through the [`crate::engine::TrackerEngine`] trait (never a
+    /// concrete type).
     pub engine: EngineKind,
     /// Tracker parameters.
     pub sort_params: SortParams,
     /// `Some(policy)` switches the server into sharded batch mode:
-    /// whole streams go through the work-stealing scheduler instead of
-    /// the paced frame pipeline. `None` (default) serves online.
+    /// pacing is ignored and whole streams are pushed at full speed.
+    /// `None` (default) serves online.
     pub shard: Option<ShardPolicy>,
 }
 
@@ -101,53 +114,80 @@ impl ServerReport {
     }
 }
 
-/// Run a set of streams to completion and report.
-///
-/// Online mode: the dispatcher thread simulates arrivals (honoring
-/// each stream's pacing), routes frames to pinned workers, then closes
-/// the queues; workers drain and exit. Sharded mode
-/// ([`ServerConfig::shard`]): streams bypass pacing and run through
-/// the work-stealing scheduler at full speed.
-pub fn serve(streams: Vec<VideoStream>, cfg: ServerConfig) -> ServerReport {
-    if let Some(policy) = cfg.shard {
-        return serve_sharded(streams, cfg, policy);
-    }
-    let queues: Vec<Arc<BoundedQueue<FrameJob>>> = (0..cfg.workers)
-        .map(|_| Arc::new(BoundedQueue::new(cfg.queue_capacity, cfg.push_policy)))
-        .collect();
+/// Start a [`TrackingService`] shaped like this server config.
+fn start_service(cfg: &ServerConfig, route: RoutePolicy) -> TrackingService {
+    TrackingService::start(ServiceConfig {
+        workers: cfg.workers,
+        queue_capacity: cfg.queue_capacity,
+        push_policy: cfg.push_policy,
+        route_policy: route,
+        session_defaults: SessionParams { engine: cfg.engine, sort_params: cfg.sort_params },
+    })
+    .expect("start tracking service")
+}
 
-    let t0 = Instant::now();
-    let mut worker_handles = Vec::with_capacity(cfg.workers);
-    for w in 0..cfg.workers {
-        let q = Arc::clone(&queues[w]);
-        let params = cfg.sort_params;
-        let kind = cfg.engine;
-        worker_handles.push(thread::spawn(move || {
-            let mut trackers: HashMap<usize, Box<dyn TrackerEngine>> = HashMap::new();
-            let mut latency = LatencyHistogram::new();
-            let mut fps = FpsCounter::default();
-            let mut frames_done = 0u64;
-            let mut tracks_out = 0u64;
-            while let Some(job) = q.pop() {
-                let f0 = Instant::now();
-                let engine = trackers
-                    .entry(job.stream_id)
-                    .or_insert_with(|| kind.build(params).expect("build tracker engine"));
-                tracks_out += engine.update(&job.boxes).len() as u64;
-                if job.last {
-                    trackers.remove(&job.stream_id);
-                }
-                frames_done += 1;
-                fps.record(1, f0.elapsed());
-                latency.record(job.arrival.elapsed());
-            }
-            (frames_done, tracks_out, latency, fps)
-        }));
+/// Drain every session and fold its stats plus the service's
+/// per-worker counters into a [`ServerReport`]; returns the final
+/// [`ServiceMetrics`] snapshot alongside it.
+fn drain_into_report(
+    svc: TrackingService,
+    handles: impl IntoIterator<Item = SessionHandle>,
+    t0: Instant,
+) -> (ServerReport, ServiceMetrics) {
+    let mut report = ServerReport {
+        frames_done: 0,
+        tracks_out: 0,
+        dropped: 0,
+        elapsed: Duration::ZERO,
+        latency: LatencyHistogram::new(),
+        per_worker_fps: Vec::new(),
+    };
+    for h in handles {
+        let stats = h.join();
+        report.frames_done += stats.frames_done;
+        report.tracks_out += stats.tracks_out;
+        report.dropped += stats.dropped;
+        report.latency.merge(&stats.latency);
     }
+    let metrics = svc.shutdown();
+    report.per_worker_fps = metrics.per_worker.iter().map(|w| w.fps.clone()).collect();
+    report.elapsed = t0.elapsed();
+    (report, metrics)
+}
+
+/// Run a set of streams to completion and report — the batch
+/// compatibility wrapper over [`TrackingService`].
+///
+/// Online mode: one session per stream; this thread simulates arrivals
+/// (honoring each stream's pacing) and pushes frames to the pinned
+/// sessions, closing each as its stream ends; sessions drain and the
+/// service shuts down. Sharded mode ([`ServerConfig::shard`]): pacing
+/// is bypassed and whole streams are pushed at full speed.
+pub fn serve(streams: Vec<VideoStream>, cfg: ServerConfig) -> ServerReport {
+    serve_observed(streams, cfg, |_, _| {}).0
+}
+
+/// [`serve`] with a mid-flight observer: `on_frame(dispatched, &svc)`
+/// runs after every dispatched frame, with the live service in hand —
+/// the hook the CLI uses to print [`TrackingService::metrics`]
+/// snapshots while a run is in progress. Also returns the final
+/// metrics snapshot next to the report.
+pub fn serve_observed(
+    streams: Vec<VideoStream>,
+    cfg: ServerConfig,
+    mut on_frame: impl FnMut(u64, &TrackingService),
+) -> (ServerReport, ServiceMetrics) {
+    if let Some(policy) = cfg.shard {
+        return serve_sharded(streams, cfg, policy, on_frame);
+    }
+    let svc = start_service(&cfg, cfg.route_policy);
+    let t0 = Instant::now();
+    let params = SessionParams { engine: cfg.engine, sort_params: cfg.sort_params };
 
     // dispatcher (this thread): earliest-due-frame simulation
-    let mut router = Router::new(cfg.workers, cfg.route_policy);
+    let mut sessions: HashMap<usize, SessionHandle> = HashMap::new();
     let mut streams = streams;
+    let mut dispatched = 0u64;
     loop {
         // earliest next_due across streams
         let mut best: Option<(usize, Instant)> = None;
@@ -164,71 +204,83 @@ pub fn serve(streams: Vec<VideoStream>, cfg: ServerConfig) -> ServerReport {
             thread::sleep(due - now);
         }
         let stream_id = streams[i].id;
-        let w = router.route(stream_id);
-        let mut job = streams[i].take().expect("due stream has a frame");
-        job.arrival = Instant::now();
+        let job = streams[i].take().expect("due stream has a frame");
+        let session = sessions
+            .entry(stream_id)
+            .or_insert_with(|| svc.open_session(params).expect("open session"));
+        session.push_frame(job.boxes);
         if job.last {
-            router.release(stream_id);
+            session.close();
         }
-        queues[w].push(job);
         if streams[i].remaining() == 0 {
             streams.swap_remove(i);
         }
-    }
-    for q in &queues {
-        q.close();
+        dispatched += 1;
+        on_frame(dispatched, &svc);
     }
 
-    let mut report = ServerReport {
-        frames_done: 0,
-        tracks_out: 0,
-        dropped: queues.iter().map(|q| q.dropped()).sum(),
-        elapsed: Duration::ZERO,
-        latency: LatencyHistogram::new(),
-        per_worker_fps: Vec::new(),
-    };
-    for h in worker_handles {
-        let (frames, tracks, lat, fps) = h.join().expect("worker panicked");
-        report.frames_done += frames;
-        report.tracks_out += tracks;
-        report.latency.merge(&lat);
-        report.per_worker_fps.push(fps);
-    }
-    report.dropped = queues.iter().map(|q| q.dropped()).sum();
-    report.elapsed = t0.elapsed();
-    report
+    drain_into_report(svc, sessions.into_values(), t0)
 }
 
-/// Sharded batch mode: whole streams through the scheduler.
+/// Sharded batch mode: whole streams pushed at full speed through
+/// sessions routed by the shard policy's analog (`Pinned` →
+/// hash-mod homes, `Stealing` → least-loaded spreading).
 ///
-/// `dropped` counts *streams* shed by admission (0 under
-/// [`PushPolicy::Block`]); latency is per-frame engine time.
+/// Batch mode is lossless by construction: every frame of every
+/// admitted stream is processed (`dropped` is always 0). The feeder is
+/// backpressured with [`PushPolicy::Block`] when sessions fall behind
+/// — the frame-granular analog of the scheduler's default `Block`
+/// stream admission; shedding frames mid-stream would silently change
+/// batch results. Latency measures push→completion.
 fn serve_sharded(
     streams: Vec<VideoStream>,
     cfg: ServerConfig,
     policy: ShardPolicy,
-) -> ServerReport {
-    let sched = Scheduler::new(SchedulerConfig {
-        workers: cfg.workers,
-        shard_policy: policy,
-        engine: cfg.engine,
-        sort_params: cfg.sort_params,
-        queue_capacity: cfg.queue_capacity,
-        admission: cfg.push_policy,
-        ..Default::default()
-    });
-    for s in streams {
-        sched.submit(Arc::new(s.into_sequence()));
+    mut on_frame: impl FnMut(u64, &TrackingService),
+) -> (ServerReport, ServiceMetrics) {
+    let route = match policy {
+        ShardPolicy::Pinned => RoutePolicy::HashMod,
+        ShardPolicy::Stealing => RoutePolicy::LeastLoaded,
+    };
+    let cfg = ServerConfig { push_policy: PushPolicy::Block, ..cfg };
+    let svc = start_service(&cfg, route);
+    let t0 = Instant::now();
+    let params = SessionParams { engine: cfg.engine, sort_params: cfg.sort_params };
+
+    // open every stream up front, then feed frames round-robin so all
+    // workers stay busy even when queues are shallow
+    let mut feeds: Vec<(VideoStream, SessionHandle)> = streams
+        .into_iter()
+        .map(|s| {
+            let h = svc.open_session(params).expect("open session");
+            (s, h)
+        })
+        .collect();
+    let mut done: Vec<SessionHandle> = Vec::with_capacity(feeds.len());
+    let mut dispatched = 0u64;
+    while !feeds.is_empty() {
+        let mut i = 0;
+        while i < feeds.len() {
+            let (stream, session) = &mut feeds[i];
+            match stream.take() {
+                Some(job) => {
+                    session.push_frame(job.boxes);
+                    if job.last {
+                        session.close();
+                    }
+                    dispatched += 1;
+                    on_frame(dispatched, &svc);
+                    i += 1;
+                }
+                None => {
+                    let (_, session) = feeds.swap_remove(i);
+                    done.push(session);
+                }
+            }
+        }
     }
-    let report = sched.join();
-    ServerReport {
-        frames_done: report.frames,
-        tracks_out: report.tracks_out,
-        dropped: report.shed,
-        elapsed: report.elapsed,
-        latency: report.latency,
-        per_worker_fps: report.per_worker.iter().map(|c| c.fps.clone()).collect(),
-    }
+
+    drain_into_report(svc, done, t0)
 }
 
 #[cfg(test)]
@@ -353,5 +405,24 @@ mod tests {
             ServerConfig { workers: 1, queue_capacity: 2, ..Default::default() },
         );
         assert_eq!(report.frames_done + report.dropped, 400);
+    }
+
+    #[test]
+    fn sharded_pinned_homes_by_session_id() {
+        // hash-mod analog of the scheduler's static partition: with 4
+        // streams on 2 workers, both workers process frames
+        let report = serve(
+            mk_streams(4, 40, Pacing::Unpaced),
+            ServerConfig {
+                workers: 2,
+                push_policy: PushPolicy::Block,
+                shard: Some(ShardPolicy::Pinned),
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.frames_done, 160);
+        for (w, fps) in report.per_worker_fps.iter().enumerate() {
+            assert!(fps.frames() > 0, "worker {w} processed nothing under pinned homes");
+        }
     }
 }

@@ -1,0 +1,865 @@
+//! `TrackingService` — the long-lived, session-oriented serving front
+//! door.
+//!
+//! The paper's workload is *online*: "the input video sequence is
+//! streamed through the system" (§III), and its winning schedule is
+//! throughput parallelism across independent streams. The historical
+//! `serve(streams, cfg)` front door under-delivered on that: every
+//! stream had to exist up front and the call blocked until all of them
+//! drained. Real deployments run as long-lived services — cameras
+//! attach, stream for a while, and detach, while operators watch live
+//! metrics. This module is that runtime:
+//!
+//! ```text
+//!  TrackingService::start(cfg)          one worker pool, forever
+//!        │
+//!  open_session(params) ──► Router ──► worker w   (least-loaded /
+//!        │     (one TrackerEngine per session,     hash-mod pinning)
+//!        │      warm-pooled across close/reopen)
+//!        ▼
+//!  SessionHandle
+//!    ├── push_frame(boxes) ──► per-session BoundedQueue ──► worker w
+//!    │                         (backpressure: Block | DropOldest,
+//!    │                          drops counted per session)
+//!    ├── poll_tracks()  ◄── per-session sink (rows, latency, counts)
+//!    ├── close()        ──► intake sealed; worker drains then retires
+//!    └── join()         ──► blocks until drained; final SessionStats
+//!
+//!  service.metrics()    ──► live ServiceMetrics snapshot (per-worker
+//!                           FPS, queue depths, drops) at any time
+//!  service.shutdown()   ──► seals every session, drains, joins
+//! ```
+//!
+//! Invariants, identical to the batch scheduler's determinism
+//! contract:
+//!
+//! * **One worker per session.** A session is pinned at open
+//!   ([`super::router::Router`]) and its frames execute on that worker
+//!   in push order — the Kalman chain is sequential, so track output
+//!   is byte-identical to a serial run no matter what else the service
+//!   is doing (pinned by `rust/tests/integration_service.rs`).
+//! * **One engine per session.** Built through
+//!   [`EngineKind::build`] at open — sessions on one service can mix
+//!   backends freely. When a session retires, its engine is
+//!   [`TrackerEngine::reset`] and parked in a warm pool keyed by
+//!   `(EngineKind, SortParams)`; a later `open_session` with the same
+//!   parameters reuses it, scratch buffers and all.
+//! * **Backpressure is per session.** Each session owns a
+//!   [`BoundedQueue`]: `Block` gives lossless ingestion (the producer
+//!   stalls), `DropOldest` sheds that session's stalest frame and
+//!   counts it — one slow session never evicts a neighbor's frames.
+//!
+//! The batch entry points survive as thin wrappers:
+//! [`super::server::serve`] opens one session per [`VideoStream`],
+//! paces arrivals, and drains — see that module.
+//!
+//! [`VideoStream`]: super::stream::VideoStream
+
+use super::backpressure::{BoundedQueue, PushPolicy, TryPop};
+use super::metrics::{FpsCounter, LatencyHistogram, ServiceMetrics, WorkerSnapshot};
+use super::router::{RoutePolicy, Router};
+use crate::engine::{EngineKind, TrackerEngine};
+use crate::sort::{Bbox, SortParams, Track};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// Service-wide configuration, fixed at [`TrackingService::start`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Worker threads; sessions are pinned across them.
+    pub workers: usize,
+    /// Per-session frame-queue capacity.
+    pub queue_capacity: usize,
+    /// What a full session queue does to `push_frame`.
+    pub push_policy: PushPolicy,
+    /// Session→worker pinning policy.
+    pub route_policy: RoutePolicy,
+    /// Defaults for sessions opened without explicit parameters
+    /// ([`TrackingService::open_session_default`]).
+    pub session_defaults: SessionParams,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 64,
+            push_policy: PushPolicy::DropOldest,
+            route_policy: RoutePolicy::LeastLoaded,
+            session_defaults: SessionParams::default(),
+        }
+    }
+}
+
+/// Per-session parameters: which tracker backend, with what knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionParams {
+    /// Tracker backend for this session's engine.
+    pub engine: EngineKind,
+    /// Tracker parameters.
+    pub sort_params: SortParams,
+}
+
+impl Default for SessionParams {
+    fn default() -> Self {
+        SessionParams {
+            engine: EngineKind::Native,
+            sort_params: SortParams { timing: false, ..Default::default() },
+        }
+    }
+}
+
+/// A session's lifetime accounting, returned by
+/// [`SessionHandle::stats`] (live) and [`SessionHandle::join`] (final).
+#[derive(Debug, Clone)]
+pub struct SessionStats {
+    /// Frames accepted by `push_frame`.
+    pub frames_in: u64,
+    /// Frames fully processed by the engine.
+    pub frames_done: u64,
+    /// Frames shed by this session's queue (`DropOldest` only).
+    pub dropped: u64,
+    /// Confirmed track-frames emitted.
+    pub tracks_out: u64,
+    /// Push→completion latency distribution.
+    pub latency: LatencyHistogram,
+    /// True once the worker has drained and retired the session.
+    pub finished: bool,
+}
+
+/// One frame queued for a session's engine.
+struct FrameMsg {
+    /// 1-based frame number, assigned in push order.
+    seq: u32,
+    boxes: Vec<Bbox>,
+    arrival: Instant,
+}
+
+/// Per-session output accumulator, drained by `poll_tracks`.
+struct SessionSink {
+    rows: Vec<(u32, u64, Bbox)>,
+    frames_done: u64,
+    tracks_out: u64,
+    latency: LatencyHistogram,
+    finished: bool,
+}
+
+/// Shared per-session state (handle side + worker side).
+struct SessionShared {
+    id: u64,
+    worker: usize,
+    params: SessionParams,
+    queue: BoundedQueue<FrameMsg>,
+    /// Accepted pushes; also assigns 1-based frame numbers.
+    frames_in: AtomicU64,
+    /// Present while the session is live; taken (reset, pooled) at
+    /// retirement. Only the owning worker touches it after open.
+    engine: Mutex<Option<Box<dyn TrackerEngine>>>,
+    sink: Mutex<SessionSink>,
+    /// Signalled (with `sink`) when the worker retires the session.
+    done: Condvar,
+}
+
+/// Worker-thread shared state.
+struct WorkerShared {
+    state: Mutex<WorkerState>,
+    /// Workers wait here for frames / session events.
+    work: Condvar,
+    stats: Mutex<WorkerStats>,
+}
+
+struct WorkerState {
+    /// Open sessions pinned to this worker.
+    sessions: Vec<Arc<SessionShared>>,
+    /// Round-robin scan cursor (fairness across sessions).
+    next: usize,
+    /// Graceful-drain flag: exit once every session retires.
+    shutdown: bool,
+}
+
+#[derive(Default)]
+struct WorkerStats {
+    fps: FpsCounter,
+    frames_done: u64,
+    tracks_out: u64,
+    sessions_closed: u64,
+    /// Drop counts inherited from already-retired sessions (live
+    /// sessions report through their own queues).
+    dropped_retired: u64,
+}
+
+struct ServiceInner {
+    cfg: ServiceConfig,
+    workers: Vec<Arc<WorkerShared>>,
+    router: Mutex<Router>,
+    /// Warm engines from retired sessions, keyed by parameters.
+    /// Bounded (see `retire_session`) so session churn can't grow it
+    /// without limit.
+    engine_pool: Mutex<Vec<(SessionParams, Box<dyn TrackerEngine>)>>,
+    next_session: AtomicU64,
+    closed: AtomicBool,
+}
+
+/// The long-lived multi-stream tracking runtime (see module docs).
+///
+/// ```
+/// use smalltrack::coordinator::service::{ServiceConfig, TrackingService};
+/// use smalltrack::sort::Bbox;
+///
+/// let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+/// let cam = svc.open_session_default().unwrap();
+/// cam.push_frame(vec![Bbox::new(10.0, 10.0, 40.0, 80.0)]);
+/// let stats = cam.join(); // close + drain
+/// assert_eq!(stats.frames_done, 1);
+/// svc.shutdown();
+/// ```
+pub struct TrackingService {
+    inner: Arc<ServiceInner>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+/// A caller's handle to one open session.
+///
+/// Frames are numbered 1, 2, 3… in push order. Sessions are
+/// single-producer by design (one camera, one feed); concurrent
+/// `push_frame` callers still get *unique* numbers (claimed
+/// atomically), but the queue order then follows whichever claimant
+/// enqueued first.
+pub struct SessionHandle {
+    session: Arc<SessionShared>,
+    worker: Arc<WorkerShared>,
+}
+
+impl TrackingService {
+    /// Spin up the worker pool. Workers live until [`Self::shutdown`]
+    /// (or drop) and serve every session opened later.
+    pub fn start(cfg: ServiceConfig) -> crate::Result<TrackingService> {
+        if cfg.workers == 0 {
+            anyhow::bail!("TrackingService needs at least 1 worker");
+        }
+        if cfg.queue_capacity == 0 {
+            anyhow::bail!("TrackingService needs a session queue capacity of at least 1");
+        }
+        let workers: Vec<Arc<WorkerShared>> = (0..cfg.workers)
+            .map(|_| {
+                Arc::new(WorkerShared {
+                    state: Mutex::new(WorkerState {
+                        sessions: Vec::new(),
+                        next: 0,
+                        shutdown: false,
+                    }),
+                    work: Condvar::new(),
+                    stats: Mutex::new(WorkerStats::default()),
+                })
+            })
+            .collect();
+        let inner = Arc::new(ServiceInner {
+            cfg,
+            workers,
+            router: Mutex::new(Router::new(cfg.workers, cfg.route_policy)),
+            engine_pool: Mutex::new(Vec::new()),
+            next_session: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let inner = Arc::clone(&inner);
+            let me = Arc::clone(&inner.workers[w]);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("smalltrack-svc-{w}"))
+                    .spawn(move || {
+                        // contain engine panics: mark every session on
+                        // this worker finished before re-raising, so a
+                        // blocked `SessionHandle::join` can never hang
+                        // on a dead worker
+                        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || worker_loop(&inner, &me),
+                        ));
+                        if let Err(payload) = run {
+                            poison_worker(&inner, &me);
+                            std::panic::resume_unwind(payload);
+                        }
+                    })
+                    .expect("spawn service worker"),
+            );
+        }
+        Ok(TrackingService { inner, handles })
+    }
+
+    /// Admit one stream: route it to a worker, build (or warm-reuse)
+    /// its engine, and hand back the frame-submission handle.
+    ///
+    /// Fails if the engine cannot be built or the service is shut
+    /// down. Cheap enough to call mid-flight — admission is the point.
+    pub fn open_session(&self, params: SessionParams) -> crate::Result<SessionHandle> {
+        if self.inner.closed.load(Ordering::Acquire) {
+            anyhow::bail!("TrackingService is shut down");
+        }
+        // warm pool first: a retired engine with identical parameters
+        // resumes with its scratch buffers already grown. On a miss,
+        // build with the pool lock RELEASED — engine construction can
+        // be slow (the xla backend opens a runtime) and must not stall
+        // concurrent opens or worker-side retirements.
+        let pooled = {
+            let mut pool = self.inner.engine_pool.lock().unwrap();
+            pool.iter()
+                .position(|(p, _)| *p == params)
+                .map(|i| pool.swap_remove(i).1)
+        };
+        let engine = match pooled {
+            Some(engine) => engine,
+            None => params.engine.build(params.sort_params)?,
+        };
+        let id = self.inner.next_session.fetch_add(1, Ordering::Relaxed);
+        let worker = self.inner.router.lock().unwrap().route(id as usize);
+        let session = Arc::new(SessionShared {
+            id,
+            worker,
+            params,
+            queue: BoundedQueue::new(self.inner.cfg.queue_capacity, self.inner.cfg.push_policy),
+            frames_in: AtomicU64::new(0),
+            engine: Mutex::new(Some(engine)),
+            sink: Mutex::new(SessionSink {
+                rows: Vec::new(),
+                frames_done: 0,
+                tracks_out: 0,
+                latency: LatencyHistogram::new(),
+                finished: false,
+            }),
+            done: Condvar::new(),
+        });
+        let wsh = Arc::clone(&self.inner.workers[worker]);
+        {
+            let mut st = wsh.state.lock().unwrap();
+            if st.shutdown {
+                // raced a shutdown: undo the registration
+                drop(st);
+                self.inner.router.lock().unwrap().release(id as usize);
+                anyhow::bail!("TrackingService is shut down");
+            }
+            st.sessions.push(Arc::clone(&session));
+            wsh.work.notify_one();
+        }
+        Ok(SessionHandle { session, worker: wsh })
+    }
+
+    /// [`Self::open_session`] with [`ServiceConfig::session_defaults`].
+    pub fn open_session_default(&self) -> crate::Result<SessionHandle> {
+        self.open_session(self.inner.cfg.session_defaults)
+    }
+
+    /// Live snapshot of the whole service: per-worker FPS, queue
+    /// depths, drops, session gauges. Callable at any time, including
+    /// mid-flight — nothing stops the world.
+    pub fn metrics(&self) -> ServiceMetrics {
+        let mut per_worker = Vec::with_capacity(self.inner.workers.len());
+        let mut agg = ServiceMetrics {
+            per_worker: Vec::new(),
+            open_sessions: 0,
+            sessions_closed: 0,
+            frames_done: 0,
+            tracks_out: 0,
+            dropped: 0,
+        };
+        for wsh in &self.inner.workers {
+            let (open_sessions, queue_depth, live_drops) = {
+                let st = wsh.state.lock().unwrap();
+                let mut depth = 0usize;
+                let mut drops = 0u64;
+                for s in &st.sessions {
+                    depth += s.queue.len();
+                    drops += s.queue.dropped();
+                }
+                (st.sessions.len(), depth, drops)
+            };
+            let stats = wsh.stats.lock().unwrap();
+            let snap = WorkerSnapshot {
+                fps: stats.fps.clone(),
+                frames_done: stats.frames_done,
+                tracks_out: stats.tracks_out,
+                open_sessions,
+                queue_depth,
+                sessions_closed: stats.sessions_closed,
+                dropped: stats.dropped_retired + live_drops,
+            };
+            agg.open_sessions += snap.open_sessions;
+            agg.sessions_closed += snap.sessions_closed;
+            agg.frames_done += snap.frames_done;
+            agg.tracks_out += snap.tracks_out;
+            agg.dropped += snap.dropped;
+            per_worker.push(snap);
+        }
+        agg.per_worker = per_worker;
+        agg
+    }
+
+    /// Graceful shutdown: seal every session's intake, drain all
+    /// queued frames, retire every session, join the workers, and
+    /// return the final metrics snapshot.
+    pub fn shutdown(mut self) -> ServiceMetrics {
+        self.begin_shutdown();
+        for h in self.handles.drain(..) {
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        self.metrics()
+    }
+
+    fn begin_shutdown(&self) {
+        self.inner.closed.store(true, Ordering::Release);
+        for wsh in &self.inner.workers {
+            // sealed under the state lock so no open_session can slip
+            // a session in between the sweep and the flag
+            let mut st = wsh.state.lock().unwrap();
+            for s in &st.sessions {
+                s.queue.close();
+            }
+            st.shutdown = true;
+            wsh.work.notify_all();
+        }
+    }
+}
+
+impl Drop for TrackingService {
+    fn drop(&mut self) {
+        // a dropped-without-shutdown service must not leak live threads
+        self.begin_shutdown();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl SessionHandle {
+    /// Service-assigned session id.
+    pub fn id(&self) -> u64 {
+        self.session.id
+    }
+
+    /// Worker this session is pinned to.
+    pub fn worker(&self) -> usize {
+        self.session.worker
+    }
+
+    /// Submit one frame of detections (empty slice = empty frame).
+    ///
+    /// Applies the service's [`PushPolicy`]: `Block` stalls the caller
+    /// while this session's queue is full (lossless); `DropOldest`
+    /// sheds this session's stalest queued frame and counts it in
+    /// [`SessionStats::dropped`]. Returns `false` once the session is
+    /// closed.
+    pub fn push_frame(&self, boxes: Vec<Bbox>) -> bool {
+        // claim the frame number BEFORE enqueueing so concurrent
+        // pushers can never collide on a number; a claim whose push
+        // then loses a race with close() is returned (single-producer
+        // sessions — the intended shape — never hit that path)
+        let seq = self.session.frames_in.fetch_add(1, Ordering::Relaxed) as u32 + 1;
+        if !self.session.queue.push(FrameMsg { seq, boxes, arrival: Instant::now() }) {
+            self.session.frames_in.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        // lock pairs the notify with the worker's predicate re-check
+        let _st = self.worker.state.lock().unwrap();
+        self.worker.work.notify_one();
+        true
+    }
+
+    /// Drain the track rows produced since the last poll:
+    /// `(frame_number, track_id, bbox)` in frame order, frame numbers
+    /// 1-based in push order. Non-blocking; an empty vec means the
+    /// worker hasn't gotten to new frames yet.
+    pub fn poll_tracks(&self) -> Vec<(u32, u64, Bbox)> {
+        std::mem::take(&mut self.session.sink.lock().unwrap().rows)
+    }
+
+    /// Live accounting snapshot (cheap; does not drain rows).
+    pub fn stats(&self) -> SessionStats {
+        let sink = self.session.sink.lock().unwrap();
+        SessionStats {
+            frames_in: self.session.frames_in.load(Ordering::Relaxed),
+            frames_done: sink.frames_done,
+            dropped: self.session.queue.dropped(),
+            tracks_out: sink.tracks_out,
+            latency: sink.latency.clone(),
+            finished: sink.finished,
+        }
+    }
+
+    /// Seal the session's intake: further `push_frame` calls return
+    /// `false`; already-queued frames still drain in order.
+    /// Non-blocking and idempotent.
+    pub fn close(&self) {
+        self.session.queue.close();
+        let _st = self.worker.state.lock().unwrap();
+        self.worker.work.notify_one();
+    }
+
+    /// [`Self::close`], then block until the worker has drained and
+    /// retired the session; returns the final stats. Call
+    /// [`Self::poll_tracks`] afterwards for any rows not yet drained.
+    pub fn join(&self) -> SessionStats {
+        self.close();
+        let mut sink = self.session.sink.lock().unwrap();
+        while !sink.finished {
+            sink = self.session.done.wait(sink).unwrap();
+        }
+        drop(sink);
+        self.stats()
+    }
+}
+
+/// Worker thread: round-robin over pinned sessions — pop one frame,
+/// run it on that session's engine, repeat; retire sessions whose
+/// queue reports [`TryPop::Done`]; park when everything is idle.
+fn worker_loop(inner: &ServiceInner, me: &WorkerShared) {
+    let mut st = me.state.lock().unwrap();
+    loop {
+        let mut found: Option<(Arc<SessionShared>, FrameMsg)> = None;
+        let mut retired: Vec<Arc<SessionShared>> = Vec::new();
+        let n = st.sessions.len();
+        if n > 0 {
+            let start = st.next % n;
+            for k in 0..n {
+                let i = (start + k) % n;
+                match st.sessions[i].queue.try_pop_status() {
+                    TryPop::Item(msg) => {
+                        st.next = i + 1;
+                        found = Some((Arc::clone(&st.sessions[i]), msg));
+                        break;
+                    }
+                    TryPop::Done => retired.push(Arc::clone(&st.sessions[i])),
+                    TryPop::Empty => {}
+                }
+            }
+            if !retired.is_empty() {
+                // fold the ledger in the SAME critical section that
+                // removes the sessions, so a concurrent metrics() call
+                // never sees a session missing from both the live
+                // gauges and the closed counters
+                st.sessions.retain(|s| !retired.iter().any(|r| Arc::ptr_eq(r, s)));
+                let mut stats = me.stats.lock().unwrap();
+                for s in &retired {
+                    stats.sessions_closed += 1;
+                    stats.dropped_retired += s.queue.dropped();
+                }
+            }
+        }
+        if found.is_none() && retired.is_empty() {
+            if st.shutdown && st.sessions.is_empty() {
+                return;
+            }
+            st = me.work.wait(st).unwrap();
+            continue;
+        }
+        drop(st);
+        for s in &retired {
+            retire_session(inner, s);
+        }
+        if let Some((s, msg)) = found {
+            process_frame(me, &s, msg);
+        }
+        st = me.state.lock().unwrap();
+    }
+}
+
+/// Run one frame through its session's engine and publish the output.
+fn process_frame(me: &WorkerShared, s: &SessionShared, msg: FrameMsg) {
+    let t0 = Instant::now();
+    let mut slot = s.engine.lock().unwrap();
+    let engine = slot.as_mut().expect("live session owns an engine");
+    let tracks: &[Track] = engine.update(&msg.boxes);
+    let n_tracks = tracks.len() as u64;
+    {
+        let mut sink = s.sink.lock().unwrap();
+        sink.rows.extend(tracks.iter().map(|t| (msg.seq, t.id, t.bbox)));
+        sink.frames_done += 1;
+        sink.tracks_out += n_tracks;
+        sink.latency.record(msg.arrival.elapsed());
+    }
+    drop(slot);
+    let busy = t0.elapsed();
+    let mut stats = me.stats.lock().unwrap();
+    stats.fps.record(1, busy);
+    stats.frames_done += 1;
+    stats.tracks_out += n_tracks;
+}
+
+/// Post-panic cleanup: seal and "finish" every session still pinned
+/// to a dead worker (tolerating poisoned locks), so handle-side
+/// `join` calls unblock and the panic can surface through
+/// [`TrackingService::shutdown`] instead of deadlocking.
+fn poison_worker(inner: &ServiceInner, me: &WorkerShared) {
+    let mut st = match me.state.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    st.shutdown = true;
+    let sessions = std::mem::take(&mut st.sessions);
+    drop(st);
+    for s in sessions {
+        s.queue.close();
+        if let Ok(mut router) = inner.router.lock() {
+            router.release(s.id as usize);
+        }
+        let mut sink = match s.sink.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        sink.finished = true;
+        s.done.notify_all();
+    }
+    me.work.notify_all();
+}
+
+/// Retire a drained session: reset its engine into the warm pool,
+/// free its routing slot, and wake anyone blocked in `join` (the
+/// stats ledger was already folded under the worker state lock when
+/// the session left the scan list).
+fn retire_session(inner: &ServiceInner, s: &SessionShared) {
+    if let Some(mut engine) = s.engine.lock().unwrap().take() {
+        engine.reset();
+        // bounded warm pool: keep enough engines to re-admit a full
+        // complement of sessions instantly, drop the rest — an
+        // always-on service churning heterogeneous sessions must not
+        // retain every engine it ever built
+        let cap = (inner.cfg.workers * 2).max(8);
+        let mut pool = inner.engine_pool.lock().unwrap();
+        if pool.len() < cap {
+            pool.push((s.params, engine));
+        }
+    }
+    inner.router.lock().unwrap().release(s.id as usize);
+    let mut sink = s.sink.lock().unwrap();
+    sink.finished = true;
+    s.done.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_sequence, SynthConfig};
+    use crate::engine::run_sequence;
+
+    fn seq(name: &str, frames: u32, seed: u64) -> crate::data::mot::Sequence {
+        generate_sequence(&SynthConfig::mot15(name, frames, 5, seed)).sequence
+    }
+
+    /// Push a whole stored sequence through a session and return the
+    /// polled rows after join.
+    fn run_session(h: &SessionHandle, s: &crate::data::mot::Sequence) -> Vec<(u32, u64, Bbox)> {
+        for frame in &s.frames {
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            assert!(h.push_frame(boxes));
+        }
+        h.join();
+        h.poll_tracks()
+    }
+
+    /// Serial reference on a fresh engine, frames numbered by position
+    /// (1-based) to match session numbering.
+    fn serial_rows(kind: EngineKind, s: &crate::data::mot::Sequence) -> Vec<(u32, u64, Bbox)> {
+        let params = SessionParams::default();
+        let mut engine = kind.build(params.sort_params).unwrap();
+        let mut rows = Vec::new();
+        for (i, frame) in s.frames.iter().enumerate() {
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            for t in engine.update(&boxes) {
+                rows.push((i as u32 + 1, t.id, t.bbox));
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn session_output_matches_serial_sort() {
+        let s = seq("SVC-A", 60, 3);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc.open_session_default().unwrap();
+        let rows = run_session(&h, &s);
+        assert_eq!(rows, serial_rows(EngineKind::Native, &s));
+        let stats = h.stats();
+        assert!(stats.finished);
+        assert_eq!(stats.frames_in, 60);
+        assert_eq!(stats.frames_done, 60);
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.tracks_out, rows.len() as u64);
+        assert_eq!(stats.latency.count(), 60);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sessions_can_mix_engines_on_one_service() {
+        let s = seq("SVC-MIX", 50, 7);
+        let svc =
+            TrackingService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+        for kind in EngineKind::all(2) {
+            let h = svc
+                .open_session(SessionParams { engine: kind, ..Default::default() })
+                .unwrap();
+            let rows = run_session(&h, &s);
+            assert_eq!(
+                rows,
+                serial_rows(kind, &s),
+                "engine {} diverged through the session path",
+                kind.label()
+            );
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn close_reopen_reuses_warm_engine_cleanly() {
+        // two back-to-back sessions with identical params on one
+        // worker: the second must reuse the first's engine (warm pool)
+        // and still produce identical output — reset() leaves nothing
+        let s = seq("SVC-WARM", 40, 11);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let first = {
+            let h = svc.open_session_default().unwrap();
+            run_session(&h, &s)
+        };
+        assert_eq!(svc.metrics().sessions_closed, 1);
+        let second = {
+            let h = svc.open_session_default().unwrap();
+            run_session(&h, &s)
+        };
+        assert_eq!(first, second, "warm-engine reuse changed the output");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn push_after_close_is_rejected() {
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc.open_session_default().unwrap();
+        assert!(h.push_frame(vec![Bbox::new(0.0, 0.0, 10.0, 20.0)]));
+        h.close();
+        assert!(!h.push_frame(vec![]), "push past close must be rejected");
+        let stats = h.join();
+        assert_eq!(stats.frames_in, 1);
+        assert_eq!(stats.frames_done, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn empty_session_opens_and_retires() {
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc.open_session_default().unwrap();
+        let stats = h.join();
+        assert!(stats.finished);
+        assert_eq!(stats.frames_in, 0);
+        let m = svc.shutdown();
+        assert_eq!(m.sessions_closed, 1);
+        assert_eq!(m.open_sessions, 0);
+    }
+
+    #[test]
+    fn drop_oldest_sheds_per_session_and_counts() {
+        // capacity-1 queue + a burst far ahead of the worker: drops
+        // land on *this* session's ledger and conservation holds
+        let s = seq("SVC-SHED", 200, 5);
+        let svc = TrackingService::start(ServiceConfig {
+            queue_capacity: 1,
+            push_policy: PushPolicy::DropOldest,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = svc.open_session_default().unwrap();
+        for frame in &s.frames {
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            assert!(h.push_frame(boxes));
+        }
+        let stats = h.join();
+        assert_eq!(stats.frames_in, 200);
+        assert_eq!(
+            stats.frames_done + stats.dropped,
+            200,
+            "every accepted frame is processed or counted shed"
+        );
+        let m = svc.shutdown();
+        assert_eq!(m.dropped, stats.dropped, "drops survive into service metrics");
+    }
+
+    #[test]
+    fn block_policy_is_lossless() {
+        let s = seq("SVC-BLOCK", 120, 9);
+        let svc = TrackingService::start(ServiceConfig {
+            queue_capacity: 2,
+            push_policy: PushPolicy::Block,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = svc.open_session_default().unwrap();
+        let rows = run_session(&h, &s);
+        let stats = h.stats();
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.frames_done, 120);
+        assert_eq!(rows, serial_rows(EngineKind::Native, &s));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_snapshot_is_live() {
+        let svc =
+            TrackingService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+        let a = svc.open_session_default().unwrap();
+        let b = svc.open_session_default().unwrap();
+        assert_eq!(svc.metrics().open_sessions, 2);
+        assert_ne!(a.worker(), b.worker(), "least-loaded spreads sessions");
+        a.push_frame(vec![Bbox::new(0.0, 0.0, 10.0, 20.0)]);
+        a.join();
+        b.join();
+        let m = svc.metrics();
+        assert_eq!(m.open_sessions, 0);
+        assert_eq!(m.sessions_closed, 2);
+        assert_eq!(m.frames_done, 1);
+        assert_eq!(m.per_worker.len(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_open_sessions() {
+        // sessions still open at shutdown are sealed and fully drained
+        let s = seq("SVC-DRAIN", 80, 13);
+        let svc = TrackingService::start(ServiceConfig {
+            push_policy: PushPolicy::Block,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = svc.open_session_default().unwrap();
+        for frame in &s.frames {
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            h.push_frame(boxes);
+        }
+        let m = svc.shutdown(); // no close(): shutdown seals it
+        assert_eq!(m.frames_done, 80, "queued frames drain before exit");
+        assert!(h.stats().finished);
+        assert!(!h.push_frame(vec![]), "post-shutdown pushes rejected");
+    }
+
+    #[test]
+    fn dropping_service_without_shutdown_does_not_hang() {
+        let svc = TrackingService::start(ServiceConfig { workers: 2, ..Default::default() })
+            .unwrap();
+        let h = svc.open_session_default().unwrap();
+        h.push_frame(vec![Bbox::new(0.0, 0.0, 10.0, 20.0)]);
+        drop(svc);
+        assert!(h.stats().finished, "drop must drain and retire sessions");
+    }
+
+    #[test]
+    fn service_engine_matches_run_sequence_counts() {
+        // cross-check against the shared batch runner used everywhere
+        let s = seq("SVC-XCHK", 70, 21);
+        let mut engine = EngineKind::Native.build(SessionParams::default().sort_params).unwrap();
+        let (_, want_tracks) = run_sequence(&mut *engine, &s);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc.open_session_default().unwrap();
+        let rows = run_session(&h, &s);
+        assert_eq!(rows.len() as u64, want_tracks);
+        svc.shutdown();
+    }
+}

@@ -24,9 +24,29 @@ pub enum Pacing {
 }
 
 impl Pacing {
+    /// Camera at `fps` frames/second — checked constructor.
+    ///
+    /// Rejects non-finite, zero and negative rates, and rates so small
+    /// the frame interval overflows a `Duration` — all of which would
+    /// otherwise panic deep inside stream pacing
+    /// (`Duration::from_secs_f64(1.0 / 0.0)`) long after the bad
+    /// config was accepted.
+    pub fn try_fps(fps: f64) -> crate::Result<Self> {
+        let secs = 1.0 / fps;
+        if !fps.is_finite() || fps <= 0.0 || !secs.is_finite() || secs >= u64::MAX as f64 {
+            anyhow::bail!("stream pacing fps must be a finite positive rate (got {fps})");
+        }
+        Ok(Pacing::Fixed { interval: Duration::from_secs_f64(secs) })
+    }
+
     /// Camera at `fps` frames/second.
+    ///
+    /// # Panics
+    /// On a non-finite or non-positive rate — at the constructor, with
+    /// the offending value in the message. Use [`Pacing::try_fps`]
+    /// when the rate comes from untrusted input (CLI flags, config).
     pub fn fps(fps: f64) -> Self {
-        Pacing::Fixed { interval: Duration::from_secs_f64(1.0 / fps) }
+        Self::try_fps(fps).expect("Pacing::fps")
     }
 }
 
@@ -163,5 +183,28 @@ mod tests {
         s.take();
         let d2 = s.next_due().unwrap();
         assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn try_fps_rejects_degenerate_rates() {
+        for bad in [0.0, -30.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 5e-324] {
+            assert!(Pacing::try_fps(bad).is_err(), "fps {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn try_fps_accepts_real_camera_rates() {
+        let p = Pacing::try_fps(30.0).unwrap();
+        let Pacing::Fixed { interval } = p else { panic!("expected Fixed") };
+        assert!((interval.as_secs_f64() - 1.0 / 30.0).abs() < 1e-12);
+        assert!(Pacing::try_fps(0.1).is_ok(), "slow time-lapse rates are valid");
+        assert!(Pacing::try_fps(1e6).is_ok(), "synthetic burst rates are valid");
+    }
+
+    #[test]
+    #[should_panic(expected = "finite positive rate")]
+    fn fps_zero_panics_at_the_constructor() {
+        // the panic must happen here, not frames later inside pacing
+        let _ = Pacing::fps(0.0);
     }
 }

@@ -184,16 +184,56 @@ pub enum EngineKind {
     Xla,
 }
 
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+
+    /// Parse a self-contained engine spec: `native` | `batch` |
+    /// `strong[:N]` | `xla`, where `N` is the strong backend's
+    /// fork-join width (`strong` alone defaults to 2, matching the
+    /// historical CLI default; widths below 1 clamp to 1).
+    ///
+    /// This is the preferred form everywhere an engine is named — the
+    /// spec carries its own parameters, so no side-channel `threads`
+    /// argument rides along (`"strong:8".parse()` replaces
+    /// `EngineKind::parse("strong", 8)`).
+    fn from_str(spec: &str) -> Result<EngineKind, Self::Err> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((name, arg)) => (name, Some(arg)),
+            None => (spec, None),
+        };
+        match (name, arg) {
+            ("native", None) => Ok(EngineKind::Native),
+            ("batch", None) => Ok(EngineKind::Batch),
+            ("xla", None) => Ok(EngineKind::Xla),
+            ("strong", None) => Ok(EngineKind::Strong { threads: 2 }),
+            ("strong", Some(n)) => {
+                let threads: usize = n.parse().map_err(|_| {
+                    anyhow::anyhow!("bad thread count '{n}' in engine spec '{spec}' (expected strong:N)")
+                })?;
+                Ok(EngineKind::Strong { threads: threads.max(1) })
+            }
+            _ => anyhow::bail!(
+                "unknown engine spec '{spec}' (expected native|batch|strong[:N]|xla)"
+            ),
+        }
+    }
+}
+
 impl EngineKind {
-    /// Parse a CLI `--engine` value. `threads` parameterizes the
+    /// Parse a CLI `--engine` value. `threads` parameterizes the bare
     /// `strong` backend (ignored by the others).
+    ///
+    /// Deprecated in favor of the [`std::str::FromStr`] spec form
+    /// (`"strong:8".parse()`), which needs no side-channel `threads`
+    /// argument; this two-arg form is kept so legacy
+    /// `--engine strong --threads N` invocations keep parsing.
+    /// Spec-form strings (anything containing `:`) are accepted here
+    /// too and take precedence over `threads`.
     pub fn parse(name: &str, threads: usize) -> crate::Result<EngineKind> {
         match name {
-            "native" => Ok(EngineKind::Native),
-            "batch" => Ok(EngineKind::Batch),
+            // the one case the legacy side-channel still decides
             "strong" => Ok(EngineKind::Strong { threads: threads.max(1) }),
-            "xla" => Ok(EngineKind::Xla),
-            other => anyhow::bail!("unknown engine '{other}' (expected native|batch|strong|xla)"),
+            spec => spec.parse(),
         }
     }
 
@@ -204,6 +244,15 @@ impl EngineKind {
             EngineKind::Batch => "batch",
             EngineKind::Strong { .. } => "strong",
             EngineKind::Xla => "xla",
+        }
+    }
+
+    /// Self-contained spec string that round-trips through
+    /// [`std::str::FromStr`]: `native` | `batch` | `strong:N` | `xla`.
+    pub fn spec(&self) -> String {
+        match self {
+            EngineKind::Strong { threads } => format!("strong:{threads}"),
+            other => other.label().to_string(),
         }
     }
 
@@ -275,12 +324,51 @@ mod tests {
 
     #[test]
     fn parse_all_kinds() {
+        // the legacy two-arg form keeps parsing unchanged
         assert_eq!(EngineKind::parse("native", 4).unwrap(), EngineKind::Native);
         assert_eq!(EngineKind::parse("batch", 4).unwrap(), EngineKind::Batch);
         assert_eq!(EngineKind::parse("strong", 4).unwrap(), EngineKind::Strong { threads: 4 });
         assert_eq!(EngineKind::parse("strong", 0).unwrap(), EngineKind::Strong { threads: 1 });
         assert_eq!(EngineKind::parse("xla", 1).unwrap(), EngineKind::Xla);
         assert!(EngineKind::parse("gpu", 1).is_err());
+    }
+
+    #[test]
+    fn from_str_specs_are_self_contained() {
+        assert_eq!("native".parse::<EngineKind>().unwrap(), EngineKind::Native);
+        assert_eq!("batch".parse::<EngineKind>().unwrap(), EngineKind::Batch);
+        assert_eq!("xla".parse::<EngineKind>().unwrap(), EngineKind::Xla);
+        assert_eq!("strong:8".parse::<EngineKind>().unwrap(), EngineKind::Strong { threads: 8 });
+        assert_eq!("strong:0".parse::<EngineKind>().unwrap(), EngineKind::Strong { threads: 1 });
+        // bare `strong` defaults to the historical CLI width of 2
+        assert_eq!("strong".parse::<EngineKind>().unwrap(), EngineKind::Strong { threads: 2 });
+    }
+
+    #[test]
+    fn from_str_rejects_malformed_specs() {
+        for bad in ["gpu", "strong:x", "strong:", "strong:4:2", "native:2", "batch:8", ""] {
+            assert!(bad.parse::<EngineKind>().is_err(), "spec '{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_through_from_str() {
+        for kind in EngineKind::all(8) {
+            let spec = kind.spec();
+            assert_eq!(spec.parse::<EngineKind>().unwrap(), kind, "spec '{spec}'");
+        }
+        assert_eq!(EngineKind::Strong { threads: 8 }.spec(), "strong:8");
+    }
+
+    #[test]
+    fn legacy_parse_accepts_spec_form_and_prefers_it() {
+        // a spec-form string through the old two-arg entry point wins
+        // over the side-channel threads argument
+        assert_eq!(
+            EngineKind::parse("strong:8", 3).unwrap(),
+            EngineKind::Strong { threads: 8 }
+        );
+        assert_eq!(EngineKind::parse("native", 0).unwrap(), EngineKind::Native);
     }
 
     #[test]

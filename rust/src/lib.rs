@@ -28,7 +28,9 @@
 //!   [`sort::BatchSort`], `strong` [`coordinator::ParallelSort`],
 //!   `xla` [`runtime::TrackerBank`]); everything downstream programs
 //!   against it.
-//! * [`coordinator`] — the multi-stream runtime: worker pool, the
+//! * [`coordinator`] — the multi-stream runtime: the session-oriented
+//!   [`coordinator::service::TrackingService`] serving front door
+//!   (runtime stream admission, live metrics), worker pool, the
 //!   scaling policies (strong / weak / throughput / sharded) as
 //!   first-class scheduler modes, the work-stealing
 //!   [`coordinator::scheduler::Scheduler`], backpressure, metrics.

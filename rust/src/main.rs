@@ -15,9 +15,9 @@
 use anyhow::{bail, Context, Result};
 use smalltrack::coordinator::policy::{run_policy_with_engine, ScalingPolicy};
 use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
-use smalltrack::coordinator::{serve, Pacing, ServerConfig, VideoStream};
+use smalltrack::coordinator::{serve, serve_observed, Pacing, ServerConfig, VideoStream};
 use smalltrack::data::mot::{read_det_file, write_det_file, write_track_file};
-use smalltrack::data::synth::{generate_suite, SynthSequence};
+use smalltrack::data::synth::{generate_sequence, generate_suite, SynthConfig, SynthSequence};
 use smalltrack::data::{replicate::replicate_suite, MOT15_PROPERTIES};
 use smalltrack::engine::{EngineKind, TrackerEngine};
 use smalltrack::simcore::{calibrate_workload, simulate, MachineProfile, SimPolicy};
@@ -71,8 +71,9 @@ impl Args {
         self.flags.contains_key(key)
     }
 
-    /// `--engine native|batch|strong|xla` (default native); `--threads N`
-    /// parameterizes the strong backend.
+    /// `--engine native|batch|strong[:N]|xla` (default native). The
+    /// self-contained spec form (`strong:8`) is preferred; the legacy
+    /// `--engine strong --threads N` side-channel keeps parsing.
     fn engine(&self) -> Result<EngineKind> {
         let threads: usize = self.num("threads", 2usize)?;
         EngineKind::parse(self.get("engine").unwrap_or("native"), threads)
@@ -113,18 +114,22 @@ COMMANDS
   track     --det FILE[,FILE..] [--out DIR] [--engine E]  track det.txt files, print timing
   suite     [--seed N]                              full Table I suite, in-memory
   serve     [--workers N] [--stream-fps F] [--seed N] [--engine E]
-            [--shard-policy pinned|stealing]        online serving demo (sharded batch
-                                                    mode when --shard-policy is given)
+            [--streams N --frames K]                online session serving with live
+            [--shard-policy pinned|stealing]        metrics (sharded batch mode when
+                                                    --shard-policy is given); --streams
+                                                    replaces the Table I suite with N
+                                                    synthetic K-frame streams
   scaling   [--policy strong|weak|throughput|sharded] [--p N] [--workers N]
             [--shard-policy pinned|stealing] [--processes] [--replicas K] [--engine E]
   simulate  [--machine skx6140|clx8280] [--replicas K] [--seed N]
   xla       [--seed N] [--frames N]                 track via the XLA bank path
 
-ENGINES (--engine, default native)
+ENGINES (--engine, default native; the spec form is self-contained)
   native    single-core structure-aware Sort (the paper's fast path)
   batch     batched SoA Sort: all trackers in structure-of-arrays
             lanes, fused per-frame loops, zero steady-state allocation
-  strong    intra-frame fork-join ParallelSort (--threads N, default 2)
+  strong:N  intra-frame fork-join ParallelSort with N threads (bare
+            `strong` defaults to 2; legacy --threads N still honored)
   xla       batched tracker bank (AOT kernels, or the built-in
             reference interpreter when `make artifacts` has not run)
 
@@ -245,27 +250,84 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed: u64 = args.num("seed", 7u64)?;
     let engine = args.engine()?;
     let shard = args.get("shard-policy").map(ShardPolicy::parse).transpose()?;
-    let suite = generate_suite(seed);
+    let n_streams: usize = args.num("streams", 0usize)?;
+    let frames: u32 = args.num("frames", 120u32)?;
+    // --streams N swaps the Table I suite for N synthetic streams of
+    // --frames K frames each (the CI smoke shape)
+    let sequences: Vec<smalltrack::data::mot::Sequence> = if n_streams > 0 {
+        (0..n_streams)
+            .map(|i| {
+                let cfg = SynthConfig::mot15(
+                    &format!("cam{i:02}"),
+                    frames,
+                    3 + (i as u32 % 5),
+                    seed + i as u64,
+                );
+                generate_sequence(&cfg).sequence
+            })
+            .collect()
+    } else {
+        generate_suite(seed).into_iter().map(|s| s.sequence).collect()
+    };
     // sharded batch mode drains at full speed; pacing only matters online
-    let pacing = if shard.is_some() { Pacing::Unpaced } else { Pacing::fps(stream_fps) };
-    let streams: Vec<VideoStream> = suite
+    let pacing = if shard.is_some() { Pacing::Unpaced } else { Pacing::try_fps(stream_fps)? };
+    let streams: Vec<VideoStream> = sequences
         .into_iter()
         .enumerate()
-        .map(|(i, s)| VideoStream::new(i, s.sequence, pacing))
+        .map(|(i, s)| VideoStream::new(i, s, pacing))
         .collect();
+    let n = streams.len();
     match shard {
-        Some(p) => println!(
-            "serving 11 streams sharded ({}) on {workers} workers ({} engine) ...",
-            p.label(),
-            engine.label()
-        ),
-        None => println!(
-            "serving 11 streams at {stream_fps} fps on {workers} workers ({} engine) ...",
-            engine.label()
-        ),
+        Some(p) => {
+            println!(
+                "serving {n} streams sharded ({}) on {workers} workers ({} engine) ...",
+                p.label(),
+                engine.spec()
+            );
+            let report =
+                serve(streams, ServerConfig { workers, engine, shard, ..Default::default() });
+            let (p50, p95, p99, max) = report.latency.summary();
+            println!(
+                "frames={} dropped={} wall={:.2}s agg_fps={:.0}",
+                report.frames_done,
+                report.dropped,
+                report.elapsed.as_secs_f64(),
+                report.fps()
+            );
+            println!("latency: p50={p50:?} p95={p95:?} p99={p99:?} max={max:?}");
+        }
+        None => {
+            println!(
+                "serving {n} streams at {stream_fps} fps on {workers} workers ({} engine) ...",
+                engine.spec()
+            );
+            serve_live(streams, workers, engine)?;
+        }
     }
-    let report = serve(streams, ServerConfig { workers, engine, shard, ..Default::default() });
-    let (p50, p95, p99, max) = report.latency.summary();
+    Ok(())
+}
+
+/// Online serving on the long-lived session runtime, with a live
+/// metrics snapshot printed at half-dispatch and a final per-worker
+/// roll-up — the same dispatcher as `serve()`, observed mid-flight.
+fn serve_live(streams: Vec<VideoStream>, workers: usize, engine: EngineKind) -> Result<()> {
+    let total: u64 = streams.iter().map(|s| s.remaining() as u64).sum();
+    let cfg = ServerConfig { workers, engine, sort_params: params_fast(), ..Default::default() };
+    let mut live_printed = false;
+    let (report, metrics) = serve_observed(streams, cfg, |dispatched, svc| {
+        if !live_printed && dispatched * 2 >= total {
+            let m = svc.metrics();
+            println!(
+                "live: sessions={} queued={} frames_done={} dropped={} busy_fps={:.0}",
+                m.open_sessions,
+                m.queue_depth(),
+                m.frames_done,
+                m.dropped,
+                m.aggregate_fps().fps()
+            );
+            live_printed = true;
+        }
+    });
     println!(
         "frames={} dropped={} wall={:.2}s agg_fps={:.0}",
         report.frames_done,
@@ -273,7 +335,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.elapsed.as_secs_f64(),
         report.fps()
     );
+    let (p50, p95, p99, max) = report.latency.summary();
     println!("latency: p50={p50:?} p95={p95:?} p99={p99:?} max={max:?}");
+    for (w, snap) in metrics.per_worker.iter().enumerate() {
+        println!(
+            "  worker {w}: frames={} sessions={} busy_fps={:.0}",
+            snap.frames_done,
+            snap.sessions_closed,
+            snap.fps.fps()
+        );
+    }
     Ok(())
 }
 

@@ -16,7 +16,10 @@ use super::scratch::FrameScratch;
 use super::tracker::KalmanBoxTracker;
 
 /// Tracker parameters (defaults = the original implementation's).
-#[derive(Debug, Clone, Copy)]
+///
+/// `PartialEq` so session runtimes can key warm-engine reuse on "same
+/// backend, same parameters".
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SortParams {
     /// Frames a tracker may coast unmatched before culling.
     pub max_age: u32,

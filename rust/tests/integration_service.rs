@@ -1,0 +1,299 @@
+//! Session-path equivalence: tracks produced through `TrackingService`
+//! sessions must be *byte-identical* (`f64::to_bits`) to a serial
+//! `Sort`-style run of the same engine on the same sequences — at
+//! 1/2/8 workers, for sessions opened up front, sessions that arrive
+//! while others are mid-stream, and sessions reopened on warm
+//! (`reset()`) engines.
+//!
+//! This is the determinism contract that makes runtime admission safe
+//! to deploy: *when* a stream attaches, *which* worker it lands on,
+//! and *what else* is in flight must never leak into tracking output.
+
+use smalltrack::coordinator::service::{
+    ServiceConfig, SessionHandle, SessionParams, TrackingService,
+};
+use smalltrack::coordinator::PushPolicy;
+use smalltrack::data::mot::Sequence;
+use smalltrack::data::synth::{generate_sequence, SynthConfig};
+use smalltrack::engine::EngineKind;
+use smalltrack::sort::{Bbox, SortParams};
+
+fn params() -> SortParams {
+    SortParams { timing: false, ..Default::default() }
+}
+
+fn session_params(engine: EngineKind) -> SessionParams {
+    SessionParams { engine, sort_params: params() }
+}
+
+/// Lossless service: equivalence demands every frame reaches its engine.
+fn service(workers: usize) -> TrackingService {
+    TrackingService::start(ServiceConfig {
+        workers,
+        push_policy: PushPolicy::Block,
+        ..Default::default()
+    })
+    .expect("start service")
+}
+
+/// A heterogeneous suite: ragged lengths and object counts so workers
+/// hold multiple concurrently-active sessions at 2 and 8 workers.
+fn suite(n: usize) -> Vec<Sequence> {
+    (0..n)
+        .map(|i| {
+            let frames = 30 + 45 * (i as u32 % 4);
+            let objects = 3 + (i as u32 % 5);
+            generate_sequence(&SynthConfig::mot15(&format!("SVC-{i}"), frames, objects, i as u64))
+                .sequence
+        })
+        .collect()
+}
+
+/// Serial reference: a fresh engine of the same kind, frames numbered
+/// by position (1-based) exactly like session numbering.
+fn serial_rows(kind: EngineKind, seq: &Sequence) -> Vec<(u32, u64, Bbox)> {
+    let mut engine = kind.build(params()).expect("build engine");
+    let mut rows = Vec::new();
+    for (i, frame) in seq.frames.iter().enumerate() {
+        let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+        for t in engine.update(&boxes) {
+            rows.push((i as u32 + 1, t.id, t.bbox));
+        }
+    }
+    rows
+}
+
+/// Bit-exact row comparison: ids must match and every bbox coordinate
+/// must be the *same f64 bit pattern*, not merely approximately equal.
+fn assert_rows_bit_identical(got: &[(u32, u64, Bbox)], want: &[(u32, u64, Bbox)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: row count");
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!((g.0, g.1), (w.0, w.1), "{ctx}: row {k} frame/id");
+        for (a, b) in [
+            (g.2.x1, w.2.x1),
+            (g.2.y1, w.2.y1),
+            (g.2.x2, w.2.x2),
+            (g.2.y2, w.2.y2),
+        ] {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{ctx}: row {k} bbox coordinate differs ({a} vs {b})"
+            );
+        }
+    }
+}
+
+fn push_all(h: &SessionHandle, seq: &Sequence) {
+    for frame in &seq.frames {
+        let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+        assert!(h.push_frame(boxes), "push rejected on an open session");
+    }
+}
+
+#[test]
+fn sessions_are_bit_identical_to_serial_at_1_2_8_workers() {
+    let suite = suite(10);
+    for kind in [EngineKind::Native, EngineKind::Batch] {
+        let reference: Vec<_> = suite.iter().map(|s| serial_rows(kind, s)).collect();
+        for workers in [1usize, 2, 8] {
+            let svc = service(workers);
+            // open all sessions first (concurrently live), then feed
+            // round-robin so sessions genuinely interleave on workers
+            let handles: Vec<SessionHandle> = suite
+                .iter()
+                .map(|_| svc.open_session(session_params(kind)).expect("open"))
+                .collect();
+            let mut cursors = vec![0usize; suite.len()];
+            loop {
+                let mut any = false;
+                for (i, seq) in suite.iter().enumerate() {
+                    let end = (cursors[i] + 8).min(seq.frames.len());
+                    for frame in &seq.frames[cursors[i]..end] {
+                        let boxes: Vec<Bbox> =
+                            frame.detections.iter().map(|d| d.bbox).collect();
+                        handles[i].push_frame(boxes);
+                    }
+                    any |= end > cursors[i];
+                    cursors[i] = end;
+                }
+                if !any {
+                    break;
+                }
+            }
+            for (i, h) in handles.iter().enumerate() {
+                let stats = h.join();
+                assert_eq!(stats.dropped, 0, "lossless service must not shed");
+                let rows = h.poll_tracks();
+                assert_rows_bit_identical(
+                    &rows,
+                    &reference[i],
+                    &format!("engine {} stream {i} w={workers}", kind.label()),
+                );
+            }
+            svc.shutdown();
+        }
+    }
+}
+
+#[test]
+fn mid_run_admission_does_not_perturb_inflight_sessions() {
+    // wave 1 streams to its midpoint, wave 2 attaches, everything
+    // interleaves to completion: every session still bit-matches its
+    // serial reference — for native AND batch engines mixed on one
+    // service
+    let wave1 = suite(6);
+    let wave2 = suite(5); // same generator, fresh sessions
+    let kinds = [EngineKind::Native, EngineKind::Batch];
+    for workers in [2usize, 8] {
+        let svc = service(workers);
+        let kind_of = |i: usize| kinds[i % kinds.len()];
+        let h1: Vec<SessionHandle> = (0..wave1.len())
+            .map(|i| svc.open_session(session_params(kind_of(i))).expect("open"))
+            .collect();
+        // stream wave 1 halfway
+        let mut cursors1: Vec<usize> = wave1.iter().map(|s| s.frames.len() / 2).collect();
+        for (i, seq) in wave1.iter().enumerate() {
+            for frame in &seq.frames[..cursors1[i]] {
+                let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+                h1[i].push_frame(boxes);
+            }
+        }
+        // wave 2 arrives mid-run
+        let h2: Vec<SessionHandle> = (0..wave2.len())
+            .map(|i| svc.open_session(session_params(kind_of(i + 1))).expect("open"))
+            .collect();
+        // interleave both waves to completion
+        let mut cursors2 = vec![0usize; wave2.len()];
+        loop {
+            let mut any = false;
+            for (i, seq) in wave1.iter().enumerate() {
+                let end = (cursors1[i] + 8).min(seq.frames.len());
+                for frame in &seq.frames[cursors1[i]..end] {
+                    let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+                    h1[i].push_frame(boxes);
+                }
+                any |= end > cursors1[i];
+                cursors1[i] = end;
+            }
+            for (i, seq) in wave2.iter().enumerate() {
+                let end = (cursors2[i] + 8).min(seq.frames.len());
+                for frame in &seq.frames[cursors2[i]..end] {
+                    let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+                    h2[i].push_frame(boxes);
+                }
+                any |= end > cursors2[i];
+                cursors2[i] = end;
+            }
+            if !any {
+                break;
+            }
+        }
+        for (i, h) in h1.iter().enumerate() {
+            h.join();
+            assert_rows_bit_identical(
+                &h.poll_tracks(),
+                &serial_rows(kind_of(i), &wave1[i]),
+                &format!("wave1 stream {i} w={workers}"),
+            );
+        }
+        for (i, h) in h2.iter().enumerate() {
+            h.join();
+            assert_rows_bit_identical(
+                &h.poll_tracks(),
+                &serial_rows(kind_of(i + 1), &wave2[i]),
+                &format!("wave2 stream {i} w={workers}"),
+            );
+        }
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn close_then_reopen_reuses_warm_engines_bit_identically() {
+    // generation g+1's sessions run on generation g's reset() engines
+    // (the single worker forces reuse); output must not change by a bit
+    let seqs = suite(3);
+    for kind in [EngineKind::Native, EngineKind::Batch] {
+        let svc = service(1);
+        let mut generations: Vec<Vec<Vec<(u32, u64, Bbox)>>> = Vec::new();
+        for _generation in 0..3 {
+            let mut outputs = Vec::new();
+            for seq in &seqs {
+                let h = svc.open_session(session_params(kind)).expect("open");
+                push_all(&h, seq);
+                h.join();
+                outputs.push(h.poll_tracks());
+            }
+            generations.push(outputs);
+        }
+        for (g, outputs) in generations.iter().enumerate() {
+            for (i, rows) in outputs.iter().enumerate() {
+                assert_rows_bit_identical(
+                    rows,
+                    &serial_rows(kind, &seqs[i]),
+                    &format!("engine {} generation {g} stream {i}", kind.label()),
+                );
+            }
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.sessions_closed, 9, "3 generations x 3 sessions");
+    }
+}
+
+#[test]
+fn serve_wrapper_equals_direct_sessions() {
+    // the compatibility wrapper and hand-driven sessions are the same
+    // machine: equal track totals on the same inputs
+    use smalltrack::coordinator::{serve, Pacing, ServerConfig, VideoStream};
+    let seqs = suite(6);
+    let direct: u64 = {
+        let svc = service(2);
+        let handles: Vec<SessionHandle> = seqs
+            .iter()
+            .map(|s| {
+                let h = svc.open_session(session_params(EngineKind::Native)).expect("open");
+                push_all(&h, s);
+                h
+            })
+            .collect();
+        let total = handles.iter().map(|h| h.join().tracks_out).sum();
+        svc.shutdown();
+        total
+    };
+    let streams: Vec<VideoStream> = seqs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| VideoStream::new(i, s.clone(), Pacing::Unpaced))
+        .collect();
+    let report = serve(
+        streams,
+        ServerConfig {
+            workers: 2,
+            push_policy: PushPolicy::Block,
+            sort_params: params(),
+            ..Default::default()
+        },
+    );
+    assert_eq!(report.dropped, 0);
+    assert_eq!(report.tracks_out, direct);
+}
+
+#[test]
+fn all_engines_run_through_sessions() {
+    // broader but lighter: every backend (incl. strong and the xla
+    // interpreter) serves through sessions with serial-identical rows
+    let seq = &suite(1)[0];
+    let svc = service(2);
+    for kind in EngineKind::all(2) {
+        let h = svc.open_session(session_params(kind)).expect("open");
+        push_all(&h, seq);
+        h.join();
+        assert_rows_bit_identical(
+            &h.poll_tracks(),
+            &serial_rows(kind, seq),
+            &format!("engine {}", kind.label()),
+        );
+    }
+    svc.shutdown();
+}
