@@ -2,7 +2,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts test test-nocounters bench fmt clippy
+.PHONY: artifacts test test-nocounters bench fmt clippy lab-smoke lab-baseline
 
 # Lower the JAX/Pallas tracker-bank graphs to HLO text + export the
 # golden parity/track JSONs and the manifest (requires python with jax;
@@ -20,6 +20,22 @@ test-nocounters:
 
 bench:
 	cargo bench
+
+# The CI perf path: smoke grid -> JSON -> gate vs the checked-in floor
+# baseline (see README "Performance tracking").
+lab-smoke:
+	cargo run --release -- lab run --smoke --json bench_smoke.json
+	cargo run --release -- lab gate artifacts/bench_baseline.json bench_smoke.json --margin 3.0
+
+# Regenerate the checked-in baseline. The measured numbers come from
+# THIS machine — review before committing and lower the fps medians to
+# conservative floors (the gate margin only absorbs ~3x machine
+# variance; the baseline's design is "any healthy build clears it").
+lab-baseline:
+	cargo run --release -- lab run --smoke --json artifacts/bench_baseline.json
+	@echo "NOTE: artifacts/bench_baseline.json now holds numbers measured on THIS"
+	@echo "machine. Review and floor the fps medians before committing (see"
+	@echo "README 'Performance tracking')."
 
 fmt:
 	cargo fmt --check

@@ -7,7 +7,7 @@
 //!  3. the original's fast-path (skip the assignment solve when the
 //!     thresholded IoU matrix is already a partial permutation).
 
-use smalltrack::benchkit::{bench, fmt_duration, BenchConfig, Table};
+use smalltrack::benchkit::{bench, fmt_duration, BenchArgs, BenchReport, Table};
 use smalltrack::coordinator::policy::run_sequence_serial;
 use smalltrack::data::synth::{generate_sequence, SynthConfig};
 use smalltrack::sort::kalman::{CovarianceForm, KalmanState, SortConstants};
@@ -55,17 +55,21 @@ fn id_switches(synth: &smalltrack::data::synth::SynthSequence, method: Associati
 }
 
 fn main() {
-    let cfg = BenchConfig::default();
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("ablations", &args);
+    let cfg = args.config();
+    let frames: u32 = if args.smoke { 120 } else { 400 };
+    let health_frames: usize = if args.smoke { 2_000 } else { 20_000 };
 
     // --- 1. association method
-    let crowded = generate_sequence(&SynthConfig::mot15("crowded", 400, 13, 99));
-    let hung_t = bench("hungarian suite", &cfg, 400, || {
+    let crowded = generate_sequence(&SynthConfig::mot15("crowded", frames, 13, 99));
+    let hung_t = bench("hungarian suite", &cfg, frames as u64, || {
         run_sequence_serial(
             &crowded,
             SortParams { method: AssociationMethod::Hungarian, timing: false, ..Default::default() },
         )
     });
-    let greedy_t = bench("greedy suite", &cfg, 400, || {
+    let greedy_t = bench("greedy suite", &cfg, frames as u64, || {
         run_sequence_serial(
             &crowded,
             SortParams { method: AssociationMethod::Greedy, timing: false, ..Default::default() },
@@ -76,11 +80,14 @@ fn main() {
 
     let mut t1 = Table::new(
         "E9.1 — association: Hungarian (SORT) vs greedy",
-        &["method", "time / 400 frames", "id switches (crowded, 13 obj)"],
+        &["method", "time / seq", "id switches (crowded, 13 obj)"],
     );
     t1.row(&["hungarian".into(), fmt_duration(hung_t.median()), format!("{sw_h}")]);
     t1.row(&["greedy".into(), fmt_duration(greedy_t.median()), format!("{sw_g}")]);
     t1.print();
+    report.add_table(&t1);
+    report.add_measurement(&hung_t);
+    report.add_measurement(&greedy_t);
     assert!(sw_h <= sw_g, "optimal assignment must not churn more than greedy");
 
     // --- 2. covariance form
@@ -102,7 +109,7 @@ fn main() {
     let asym = |form: CovarianceForm| {
         let mut s = KalmanState::from_measurement(&[100.0, 100.0, 2000.0, 0.5], &consts);
         let mut max_asym = 0.0f64;
-        for k in 0..20_000 {
+        for k in 0..health_frames {
             s.predict(&consts);
             s.update(
                 &[100.0 + (k % 7) as f64, 100.0, 2000.0 + (k % 13) as f64, 0.5],
@@ -118,44 +125,48 @@ fn main() {
 
     let mut t2 = Table::new(
         "E9.2 — covariance update: Joseph form (filterpy/SORT) vs simple",
-        &["form", "time / KF step", "max P asymmetry over 20k frames"],
+        &["form", "time / KF step", "max P asymmetry (long run)"],
     );
     t2.row(&["joseph".into(), fmt_duration(joseph_t.median()), format!("{asym_j:.2e}")]);
     t2.row(&["simple".into(), fmt_duration(simple_t.median()), format!("{asym_s:.2e}")]);
     t2.print();
+    report.add_table(&t2);
+    report.add_measurement(&joseph_t);
+    report.add_measurement(&simple_t);
     println!("(joseph costs ~2 extra 7x7 GEMMs per update — the price of guaranteed SPD)");
 
     // --- 3. fast path: sparse (unambiguous) vs crowded frames
-    let sparse = generate_sequence(&SynthConfig::mot15("sparse", 400, 3, 5));
-    let sparse_t = bench("sparse fast-path", &cfg, 400, || {
+    let sparse = generate_sequence(&SynthConfig::mot15("sparse", frames, 3, 5));
+    let sparse_t = bench("sparse fast-path", &cfg, frames as u64, || {
         run_sequence_serial(&sparse, SortParams { timing: false, ..Default::default() })
     });
-    let crowded_t = bench("crowded full-hungarian", &cfg, 400, || {
+    let crowded_t = bench("crowded full-hungarian", &cfg, frames as u64, || {
         run_sequence_serial(&crowded, SortParams { timing: false, ..Default::default() })
     });
     let mut t3 = Table::new(
         "E9.3 — assignment fast-path effect (sparse scenes skip the solver)",
-        &["scene", "objects", "time / 400 frames", "us/frame"],
+        &["scene", "objects", "time / seq", "us/frame"],
     );
     t3.row(&[
         "sparse".into(),
         "<=3".into(),
         fmt_duration(sparse_t.median()),
-        format!("{:.2}", sparse_t.median() * 1e6 / 400.0),
+        format!("{:.2}", sparse_t.median() * 1e6 / frames as f64),
     ]);
     t3.row(&[
         "crowded".into(),
         "<=13".into(),
         fmt_duration(crowded_t.median()),
-        format!("{:.2}", crowded_t.median() * 1e6 / 400.0),
+        format!("{:.2}", crowded_t.median() * 1e6 / frames as f64),
     ]);
     t3.print();
+    report.add_table(&t3);
 
     // --- 4. dense library kernels vs structure-aware fast path (§Perf)
-    let fast_t = bench("fast kernels", &cfg, 400, || {
+    let fast_t = bench("fast kernels", &cfg, frames as u64, || {
         run_sequence_serial(&crowded, SortParams { timing: false, ..Default::default() })
     });
-    let dense_t = bench("dense kernels", &cfg, 400, || {
+    let dense_t = bench("dense kernels", &cfg, frames as u64, || {
         run_sequence_serial(
             &crowded,
             SortParams { timing: false, dense_kernels: true, ..Default::default() },
@@ -173,7 +184,7 @@ fn main() {
     );
     let mut t4 = Table::new(
         "E9.4 — dense library GEMMs (paper's formulation) vs structure-aware kernels",
-        &["kernels", "time / 400 frames", "speedup", "MOTA", "id switches"],
+        &["kernels", "time / seq", "speedup", "MOTA", "id switches"],
     );
     t4.row(&[
         "dense (F,H as GEMMs)".into(),
@@ -190,6 +201,8 @@ fn main() {
         format!("{}", q_fast.id_switches),
     ]);
     t4.print();
+    report.add_table(&t4);
+    report.finish().unwrap();
     assert_eq!(q_fast, q_dense, "kernel choice must not change tracking output");
     assert!(fast_t.median() < dense_t.median(), "fast path must win");
 }

@@ -12,26 +12,20 @@
 //! the residual "off" tax below is the branch the feature deletes.)
 //!
 //! Run modes: `cargo bench --bench batch_vs_native` (full), or append
-//! `smoke` (CI) for a seconds-long pass with the same table shape.
+//! `smoke` (CI) for a seconds-long pass with the same table shape;
+//! `--json <path>` writes the table as a machine-readable report.
 
-use smalltrack::benchkit::{bench, fmt_duration, BenchConfig, Table};
+use smalltrack::benchkit::{bench, fmt_duration, BenchArgs, BenchConfig, BenchReport, Table};
 use smalltrack::data::synth::{generate_sequence, SynthConfig};
 use smalltrack::engine::{run_sequence, EngineKind, TrackerEngine};
 use smalltrack::linalg::set_counters_enabled;
 use smalltrack::sort::SortParams;
-use std::time::Duration;
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "smoke" || a == "--smoke");
-    let cfg = if smoke {
-        BenchConfig {
-            warmup: Duration::from_millis(30),
-            samples: 3,
-            min_sample_time: Duration::from_millis(2),
-        }
-    } else {
-        BenchConfig::quick()
-    };
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("batch_vs_native", &args);
+    let smoke = args.smoke;
+    let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
     let frames: u32 = if smoke { 120 } else { 300 };
     let params = SortParams { timing: false, ..Default::default() };
 
@@ -109,6 +103,8 @@ fn main() {
         set_counters_enabled(true);
     }
     table.print();
+    report.add_table(&table);
+    report.finish().unwrap();
     println!("\n'vs native' < 1.00x = the SoA lanes + one-record-per-frame win;");
     println!("'off' rows show the runtime counter tax (compile-time removal:");
     println!("cargo bench --no-default-features removes even the off-branch).");

@@ -3,16 +3,20 @@
 //! measured shard-scheduler counterpart (pinned vs stealing) on the
 //! same 77-file workload, the deployment form of the "weak" column.
 
-use smalltrack::benchkit::Table;
+use smalltrack::benchkit::{BenchArgs, BenchReport, Table};
 use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
 use smalltrack::data::replicate::replicate_suite;
 use smalltrack::simcore::{calibrate_workload, simulate, MachineProfile, SimPolicy};
 use smalltrack::sort::SortParams;
 
 fn main() {
-    // 7x replicated inputs, as in the paper
-    let suite = replicate_suite(7, 7);
-    assert_eq!(suite.len(), 77);
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("fig4_strong_vs_weak", &args);
+    // 7x replicated inputs, as in the paper (3x in smoke mode — the
+    // shape assertions only need heterogeneous multi-file input)
+    let replicas: u32 = if args.smoke { 3 } else { 7 };
+    let suite = replicate_suite(7, replicas);
+    assert_eq!(suite.len(), 11 * replicas as usize);
 
     // calibrate on a subset (the 11 base sequences) — replicas share
     // the cost model; then extend the workload to all 77
@@ -26,7 +30,10 @@ fn main() {
 
     let m = MachineProfile::clx8280();
     let mut table = Table::new(
-        "Fig 4 — strong vs weak scaling, 77 files, CLX-8280 profile (FPS)",
+        &format!(
+            "Fig 4 — strong vs weak scaling, {} files, CLX-8280 profile (FPS)",
+            suite.len()
+        ),
         &["Cores", "Strong", "Weak", "weak/strong"],
     );
     let mut series = Vec::new();
@@ -42,6 +49,7 @@ fn main() {
         ]);
     }
     table.print();
+    report.add_table(&table);
 
     // text chart
     println!("\nFig 4 (text form): FPS vs cores");
@@ -67,15 +75,17 @@ fn main() {
     // pinned shards finish ragged and stealing reclaims the idle tail.
     let params = SortParams { timing: false, ..Default::default() };
     let mut measured = Table::new(
-        "Fig 4 (measured) — shard scheduler on 77 files (FPS, wall-clock)",
+        &format!("Fig 4 (measured) — shard scheduler on {} files (FPS, wall-clock)", suite.len()),
         &["Workers", "Pinned", "Stealing", "stolen"],
     );
+    let workers: &[usize] = if args.smoke { &[1, 2] } else { &[1, 2, 4] };
+    let reps = if args.smoke { 1 } else { 2 };
     let mut anchor: Option<u64> = None;
-    for p in [1usize, 2, 4] {
+    for &p in workers {
         let mut fps = [0.0f64; 2];
         let mut stolen = 0u64;
         for (i, policy) in [ShardPolicy::Pinned, ShardPolicy::Stealing].iter().enumerate() {
-            for _ in 0..2 {
+            for _ in 0..reps {
                 let r = run_shards(
                     &suite,
                     SchedulerConfig {
@@ -104,4 +114,6 @@ fn main() {
         ]);
     }
     measured.print();
+    report.add_table(&measured);
+    report.finish().unwrap();
 }

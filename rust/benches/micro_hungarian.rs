@@ -2,15 +2,17 @@
 //! (2..13 objects — Table I's max is 13) plus the greedy baseline and
 //! the original's permutation fast-path.
 
-use smalltrack::benchkit::{bench, fmt_duration, BenchConfig, Table};
+use smalltrack::benchkit::{bench, fmt_duration, BenchArgs, BenchReport, Table};
 use smalltrack::linalg::set_counters_enabled;
 use smalltrack::prng::Rng;
 use smalltrack::sort::greedy::greedy_max_score;
 use smalltrack::sort::hungarian::{hungarian_min_cost, HungarianScratch};
 
 fn main() {
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("micro_hungarian", &args);
     set_counters_enabled(false);
-    let cfg = BenchConfig::default();
+    let cfg = args.config();
     let mut rng = Rng::new(0xBEEF);
 
     let mut table = Table::new(
@@ -35,6 +37,8 @@ fn main() {
         ]);
     }
     table.print();
+    report.add_table(&table);
+    report.finish().unwrap();
     println!("\neven at 13x13 (Table I max) the optimal solve is ~microseconds —");
     println!("assignment is 22% of frame time only because the frame itself is ~20us.");
     set_counters_enabled(true);

@@ -4,12 +4,14 @@
 //! GEMM is tens of nanoseconds — thousands of times smaller than a
 //! thread wake-up — so intra-frame parallelism can never pay.
 
-use smalltrack::benchkit::{bench, BenchConfig, Measurement, Table};
+use smalltrack::benchkit::{bench, BenchArgs, BenchReport, Measurement, Table};
 use smalltrack::linalg::{chol_inverse, cholesky, set_counters_enabled, Mat, Mat4, Mat4x7, Mat7};
 
 fn main() {
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("micro_linalg", &args);
     set_counters_enabled(false); // pure-speed numbers
-    let cfg = BenchConfig::default();
+    let cfg = args.config();
 
     let f = {
         let mut f = Mat7::eye();
@@ -64,6 +66,11 @@ fn main() {
         ]);
     }
     table.print();
+    report.add_table(&table);
+    for m in &rows {
+        report.add_measurement(m);
+    }
+    report.finish().unwrap();
 
     let gemm = rows[0].median();
     println!("\n7x7 GEMM = {}; a futex wake alone is ~2-10us — parallelizing", smalltrack::benchkit::fmt_duration(gemm));

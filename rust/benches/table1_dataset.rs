@@ -1,10 +1,14 @@
 //! E1 — regenerate the paper's Table I (dataset properties) from the
 //! synthetic suite and verify the generator hits the published numbers.
 
-use smalltrack::benchkit::Table;
+use smalltrack::benchkit::{BenchArgs, BenchReport, Table};
 use smalltrack::data::synth::{generate_suite, MOT15_PROPERTIES};
 
 fn main() {
+    // no timing here — smoke mode is identical; --json still archives
+    // the generated dataset properties next to the perf reports
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("table1_dataset", &args);
     let suite = generate_suite(7);
     let mut table = Table::new(
         "Table I — dataset properties (synthetic MOT-2015 substitution)",
@@ -42,6 +46,8 @@ fn main() {
         format!("{}", suite.iter().map(|s| s.sequence.n_detections()).sum::<usize>()),
     ]);
     table.print();
+    report.add_table(&table);
+    report.finish().unwrap();
     println!("\npaper: 11 files, 5500 frames, max 13 simultaneous objects");
     println!(
         "match: frames_total={} (want 5500), per-sequence properties {}",

@@ -2,14 +2,20 @@
 //! inside SORT, how often, and at what arithmetic intensity — counted
 //! live by the instrumented linalg layer over the full suite.
 
-use smalltrack::benchkit::Table;
+use smalltrack::benchkit::{BenchArgs, BenchReport, Table};
 use smalltrack::coordinator::policy::run_sequence_serial;
 use smalltrack::data::synth::generate_suite;
 use smalltrack::linalg::{reset_counters, snapshot, Kernel};
 use smalltrack::sort::SortParams;
 
 fn main() {
-    let suite = generate_suite(7);
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("table2_kernels", &args);
+    // counting is deterministic, so smoke only shrinks the workload
+    let mut suite = generate_suite(7);
+    if args.smoke {
+        suite.truncate(3);
+    }
     reset_counters();
     let mut frames = 0u64;
     for s in &suite {
@@ -22,7 +28,7 @@ fn main() {
     let counters = snapshot();
 
     let mut table = Table::new(
-        "Table II — frequently used kernels inside SORT (measured, full 5500-frame suite)",
+        &format!("Table II — frequently used kernels inside SORT (measured, {frames} frames)"),
         &["Kernel", "calls", "calls/frame", "flops", "bytes", "AI (f/B)"],
     );
     for k in Kernel::ALL {
@@ -49,6 +55,8 @@ fn main() {
         format!("{:.2}", t.ai()),
     ]);
     table.print();
+    report.add_table(&table);
+    report.finish().unwrap();
     println!("\npaper's Table II sizes: H[4][7] P[7][7] Q[7][7] B[7][4] R[4][4] x[7] u[4], det rows 1x10..13x10");
     println!("all kernels above operate on exactly those shapes (const-generic, see rust/src/linalg/)");
     assert!(counters.get(Kernel::Gemm).calls > 0);

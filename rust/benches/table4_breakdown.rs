@@ -2,12 +2,17 @@
 //! and Fig 3 (the cprofile-style breakdown of the Update function),
 //! from the live phase instrumentation.
 
-use smalltrack::benchkit::Table;
+use smalltrack::benchkit::{BenchArgs, BenchReport, Table};
 use smalltrack::data::synth::generate_suite;
 use smalltrack::sort::{Bbox, Phase, Sort, SortParams};
 
 fn main() {
-    let suite = generate_suite(7);
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("table4_breakdown", &args);
+    let mut suite = generate_suite(7);
+    if args.smoke {
+        suite.truncate(3);
+    }
     // one tracker reused per sequence (like the paper's runs), phases merged
     let mut merged = smalltrack::sort::PhaseTimer::new(true);
     let mut boxes: Vec<Bbox> = Vec::new();
@@ -46,6 +51,8 @@ fn main() {
         ]);
     }
     table.print();
+    report.add_table(&table);
+    report.finish().unwrap();
 
     // Fig 3: text bar chart of the Update-function profile
     println!("\nFig 3 — profile of the update function (this implementation):");

@@ -10,7 +10,7 @@
 //!  (c) the calibrated discrete-event simulation at the paper's core
 //!      counts on the SKX-6140 profile (see rust/src/simcore/).
 
-use smalltrack::benchkit::Table;
+use smalltrack::benchkit::{BenchArgs, BenchReport, Table};
 use smalltrack::coordinator::policy::{outcomes_consistent, run_policy, ScalingPolicy};
 use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
 use smalltrack::data::synth::generate_suite;
@@ -18,7 +18,18 @@ use smalltrack::simcore::{calibrate_workload, simulate, MachineProfile, SimPolic
 use smalltrack::sort::SortParams;
 
 fn main() {
-    let suite = generate_suite(7);
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("table6_scaling", &args);
+    let mut suite = generate_suite(7);
+    if args.smoke {
+        // first 4 sequences (795+71+179+1000 frames): heterogeneous
+        // enough for every shape assertion, seconds instead of minutes
+        suite.truncate(4);
+    }
+    let n_files = suite.len();
+    let n_frames: usize = suite.iter().map(|s| s.sequence.n_frames()).sum();
+    let reps: u32 = if args.smoke { 1 } else { 3 };
+    let thread_counts: &[usize] = if args.smoke { &[1, 2] } else { &[1, 2, 4] };
     let params = SortParams { timing: false, ..Default::default() };
 
     // (a) measured
@@ -26,18 +37,18 @@ fn main() {
         "Table VI(a) — measured on this testbed (FPS, wall-clock)",
         &["Threads", "files", "frames", "Strong", "Weak", "Throughput"],
     );
-    for p in [1usize, 2, 4] {
-        let mut row = vec![format!("{p}"), "11".into(), "5500".into()];
+    for &p in thread_counts {
+        let mut row = vec![format!("{p}"), format!("{n_files}"), format!("{n_frames}")];
         let mut outs = Vec::new();
         for policy in [
             ScalingPolicy::Strong { threads: p },
             ScalingPolicy::Weak { workers: p },
             ScalingPolicy::Throughput { workers: p },
         ] {
-            // best of 3 for stability
+            // best of N for stability
             let mut best_fps = 0.0f64;
             let mut last = None;
-            for _ in 0..3 {
+            for _ in 0..reps {
                 let o = run_policy(&suite, policy, params);
                 best_fps = best_fps.max(o.fps());
                 last = Some(o);
@@ -49,6 +60,7 @@ fn main() {
         measured.row(&row);
     }
     measured.print();
+    report.add_table(&measured);
 
     // (b) shard scheduler: pinned vs stealing across worker counts.
     // The Table I suite is heterogeneous (71..1000 frames), which is
@@ -61,12 +73,12 @@ fn main() {
         let o = run_policy(&suite, ScalingPolicy::Weak { workers: 1 }, params);
         o.tracks_out
     };
-    for p in [1usize, 2, 4] {
+    for &p in thread_counts {
         let mut fps = [0.0f64; 2];
         let mut stolen = 0u64;
         for (i, policy) in [ShardPolicy::Pinned, ShardPolicy::Stealing].iter().enumerate() {
-            // best of 3 for stability
-            for _ in 0..3 {
+            // best of N for stability
+            for _ in 0..reps {
                 let r = run_shards(
                     &suite,
                     SchedulerConfig {
@@ -97,9 +109,10 @@ fn main() {
         ]);
     }
     shards.print();
+    report.add_table(&shards);
 
     // (c) simulated at the paper's scale
-    let w = calibrate_workload(&suite, 3);
+    let w = calibrate_workload(&suite, reps);
     let m = MachineProfile::skx6140();
     let mut sim = Table::new(
         "Table VI(c) — calibrated simulation, SKX-6140 profile (paper's machine)",
@@ -117,14 +130,15 @@ fn main() {
         tp_series.push(tp);
         sim.row(&[
             format!("{p}"),
-            "11".into(),
-            "5500".into(),
+            format!("{n_files}"),
+            format!("{n_frames}"),
             format!("{s:.1}"),
             format!("{wk:.1}"),
             format!("{tp:.1}"),
         ]);
     }
     sim.print();
+    report.add_table(&sim);
 
     let mut paper = Table::new(
         "Table VI (paper, for comparison)",
@@ -146,6 +160,8 @@ fn main() {
         ]);
     }
     paper.print();
+    report.add_table(&paper);
+    report.finish().unwrap();
 
     // headline shape assertions
     println!("\nshape checks:");

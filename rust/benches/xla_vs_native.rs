@@ -14,7 +14,7 @@
 //! strong-scaling result); the bank amortizes as T grows, which is the
 //! accelerator analog of throughput scaling.
 
-use smalltrack::benchkit::{bench, fmt_duration, BenchConfig, Table};
+use smalltrack::benchkit::{bench, fmt_duration, BenchArgs, BenchConfig, BenchReport, Table};
 use smalltrack::data::synth::{generate_sequence, SynthConfig};
 use smalltrack::engine::{run_sequence, EngineKind, TrackerEngine};
 use smalltrack::runtime::{artifacts_available, XlaRuntime};
@@ -22,16 +22,19 @@ use smalltrack::sort::kalman::{KalmanState, SortConstants};
 use smalltrack::sort::SortParams;
 
 fn main() {
-    let cfg = BenchConfig::quick();
+    let args = BenchArgs::from_env();
+    let mut report = BenchReport::new("xla_vs_native", &args);
+    let cfg = if args.smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
+    let e2e_frames: u32 = if args.smoke { 100 } else { 300 };
     let params = SortParams { timing: false, ..Default::default() };
     let rt = XlaRuntime::new().expect("kernel runtime");
 
     // --- Part A: whole engines through the trait, one shared workload
-    let synth = generate_sequence(&SynthConfig::mot15("E8-e2e", 300, 8, 21));
+    let synth = generate_sequence(&SynthConfig::mot15("E8-e2e", e2e_frames, 8, 21));
     let frames = synth.sequence.n_frames() as u64;
     let mut table = Table::new(
         &format!(
-            "E8a — end-to-end engines on one 300-frame stream (xla backend: {})",
+            "E8a — end-to-end engines on one {e2e_frames}-frame stream (xla backend: {})",
             rt.platform()
         ),
         &["engine", "time/stream", "us/frame", "fps", "tracks"],
@@ -59,6 +62,7 @@ fn main() {
         ]);
     }
     table.print();
+    report.add_table(&table);
     println!("\ndispatch asymmetry at bank size ~8 IS the paper's thesis: per-item");
     println!("work this small cannot amortize a kernel (or thread) launch.");
 
@@ -73,7 +77,8 @@ fn main() {
         "E8b — batched Kalman predict: native loop vs bank kernel",
         &["bank T", "native/step", "bank/step", "native/tracker", "bank/tracker", "bank cost"],
     );
-    for t in [1usize, 4, 16, 64, 256] {
+    let bank_sizes: &[usize] = if args.smoke { &[1, 4, 16] } else { &[1, 4, 16, 64, 256] };
+    for &t in bank_sizes {
         // native: T sequential KalmanState::predict calls
         let mut states: Vec<KalmanState> = (0..t)
             .map(|i| {
@@ -115,6 +120,8 @@ fn main() {
         ]);
     }
     sweep.print();
+    report.add_table(&sweep);
+    report.finish().unwrap();
 
     println!("\nthe ratio shrinking with T is the paper's argument transposed to an");
     println!("accelerator: tiny per-item work cannot amortize dispatch — batch the");

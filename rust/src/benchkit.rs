@@ -6,7 +6,16 @@
 //! paper's tables. Methodology: N timed samples after a warm-up period,
 //! reporting median (primary), mean, stddev, min; medians make the
 //! numbers stable on a busy 1-core CI box.
+//!
+//! Every bench target shares one argument contract ([`BenchArgs`]):
+//! `-- smoke` selects a seconds-long CI-sized pass, and
+//! `-- --json <path>` writes everything the run printed (tables +
+//! raw measurements) as a machine-readable report ([`BenchReport`]) so
+//! the perf trajectory can be archived and diffed instead of read off
+//! a terminal.
 
+use crate::data::json::{write_json_file, Value};
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Samples + derived statistics for one measurement.
@@ -21,10 +30,12 @@ pub struct Measurement {
 }
 
 impl Measurement {
-    /// Median sample (seconds).
+    /// Median sample (seconds). NaN-safe (`total_cmp` ordering, NaN
+    /// sorts last) and defined for any sample count: 0.0 for an empty
+    /// set, the sample itself for n=1.
     pub fn median(&self) -> f64 {
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let n = s.len();
         if n == 0 {
             return 0.0;
@@ -44,7 +55,8 @@ impl Measurement {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
-    /// Sample standard deviation.
+    /// Sample standard deviation (0.0 for n < 2 — a single sample has
+    /// no spread, and the n-1 divisor must never be reached with n<=1).
     pub fn stddev(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {
@@ -54,8 +66,11 @@ impl Measurement {
         (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
-    /// Fastest sample.
+    /// Fastest sample (0.0 for an empty sample set).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
@@ -67,6 +82,20 @@ impl Measurement {
         } else {
             0.0
         }
+    }
+
+    /// Machine-readable form: derived statistics plus the raw samples.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("median_s", Value::Num(self.median())),
+            ("mean_s", Value::Num(self.mean())),
+            ("stddev_s", Value::Num(self.stddev())),
+            ("min_s", Value::Num(self.min())),
+            ("items_per_sample", Value::from_u64(self.items_per_sample)),
+            ("rate", Value::Num(self.rate())),
+            ("samples_s", Value::Arr(self.samples.iter().map(|s| Value::Num(*s)).collect())),
+        ])
     }
 
     /// One formatted summary line.
@@ -117,6 +146,147 @@ impl BenchConfig {
             min_sample_time: Duration::from_millis(5),
         }
     }
+
+    /// Seconds-long CI configuration — what `-- smoke` selects in
+    /// every bench target. Numbers are noisy at this size; smoke runs
+    /// exist to prove the path end to end and to feed the regression
+    /// gate's coarse (multi-x margin) checks, not to publish.
+    pub fn smoke() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(30),
+            samples: 3,
+            min_sample_time: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The uniform argument contract of every `rust/benches/*` target:
+/// `cargo bench --bench <t> -- [smoke] [--json <path>]`.
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    /// CI-sized pass (shrunk workloads + [`BenchConfig::smoke`]).
+    pub smoke: bool,
+    /// Where to write the machine-readable report, if requested.
+    pub json: Option<PathBuf>,
+}
+
+impl BenchArgs {
+    /// Parse from `std::env::args()`: accepts `smoke` / `--smoke` and
+    /// `--json <path>` / `--json=<path>` in any order; unknown
+    /// arguments (e.g. libtest's `--bench`) are ignored.
+    pub fn from_env() -> Self {
+        Self::from_args(std::env::args().skip(1))
+    }
+
+    /// [`Self::from_env`] over an explicit argument list (testable).
+    pub fn from_args(args: impl IntoIterator<Item = String>) -> Self {
+        let mut out = BenchArgs::default();
+        let mut args = args.into_iter();
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "smoke" | "--smoke" => out.smoke = true,
+                // a forgotten path must not silently disable the
+                // report (CI's artifact step would only fail much
+                // later, with no hint why) — nor swallow a following
+                // --flag as the path
+                "--json" => {
+                    let path = args
+                        .next()
+                        .filter(|p| !p.starts_with("--"))
+                        .expect("--json requires a <path> argument");
+                    out.json = Some(PathBuf::from(path));
+                }
+                _ => {
+                    if let Some(path) = a.strip_prefix("--json=") {
+                        out.json = Some(PathBuf::from(path));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The shared sampling configuration this invocation asked for.
+    pub fn config(&self) -> BenchConfig {
+        if self.smoke {
+            BenchConfig::smoke()
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// Collects what a bench run printed — tables and raw measurements —
+/// and writes it as one versioned JSON document when `--json <path>`
+/// was passed (a no-op otherwise, so targets call it unconditionally).
+#[derive(Debug)]
+pub struct BenchReport {
+    name: String,
+    smoke: bool,
+    json: Option<PathBuf>,
+    tables: Vec<Value>,
+    measurements: Vec<Value>,
+}
+
+impl BenchReport {
+    /// New report for the named bench target.
+    pub fn new(name: &str, args: &BenchArgs) -> Self {
+        BenchReport {
+            name: name.to_string(),
+            smoke: args.smoke,
+            json: args.json.clone(),
+            tables: Vec::new(),
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Record a printed table (call right after `table.print()`).
+    pub fn add_table(&mut self, t: &Table) {
+        self.tables.push(t.to_json());
+    }
+
+    /// Record a raw measurement (derived stats + samples).
+    pub fn add_measurement(&mut self, m: &Measurement) {
+        self.measurements.push(m.to_json());
+    }
+
+    /// The report body (also what `--json` writes).
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("schema", Value::from_u64(1)),
+            ("kind", Value::Str("bench".into())),
+            ("bench", Value::Str(self.name.clone())),
+            ("smoke", Value::Bool(self.smoke)),
+            ("features", feature_flags()),
+            ("tables", Value::Arr(self.tables.clone())),
+            ("measurements", Value::Arr(self.measurements.clone())),
+        ])
+    }
+
+    /// Write the report if `--json` was given; print where it went.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        if let Some(path) = &self.json {
+            write_json_file(path, &self.to_value())?;
+            println!("\nwrote {} report -> {}", self.name, path.display());
+        }
+        Ok(())
+    }
+}
+
+/// The compiled cargo features, `(name, enabled)` — the single source
+/// of truth every report manifest (bench and lab alike) derives from,
+/// so the two report kinds can never disagree about the build config.
+pub fn compiled_features() -> Vec<(&'static str, bool)> {
+    vec![("counters", cfg!(feature = "counters")), ("pjrt", cfg!(feature = "pjrt"))]
+}
+
+/// [`compiled_features`] as a JSON object, for report manifests (a
+/// perf number without its feature flags is not comparable to
+/// anything).
+pub fn feature_flags() -> Value {
+    Value::Obj(
+        compiled_features().into_iter().map(|(k, v)| (k.to_string(), Value::Bool(v))).collect(),
+    )
 }
 
 /// Measure `f`: warm up, then `samples` timed runs. `items` is the work
@@ -185,6 +355,16 @@ impl Table {
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count");
         self.rows.push(cells.to_vec());
+    }
+
+    /// Machine-readable form: title + headers + formatted cell rows.
+    pub fn to_json(&self) -> Value {
+        let strings = |v: &[String]| Value::Arr(v.iter().map(|s| Value::Str(s.clone())).collect());
+        Value::obj(vec![
+            ("title", Value::Str(self.title.clone())),
+            ("headers", strings(&self.headers)),
+            ("rows", Value::Arr(self.rows.iter().map(|r| strings(r)).collect())),
+        ])
     }
 
     /// Render to stdout.
@@ -275,5 +455,80 @@ mod tests {
     fn table_checks_columns() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(&["only one".to_string()]);
+    }
+
+    #[test]
+    fn stats_survive_degenerate_sample_sets() {
+        // n=0: everything defined, nothing panics or divides by zero
+        let empty = Measurement { name: "e".into(), samples: vec![], items_per_sample: 5 };
+        assert_eq!(empty.median(), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.stddev(), 0.0);
+        assert_eq!(empty.min(), 0.0);
+        assert_eq!(empty.rate(), 0.0);
+        // n=1: the single sample, zero spread
+        let one = Measurement { name: "o".into(), samples: vec![2.0], items_per_sample: 4 };
+        assert_eq!(one.median(), 2.0);
+        assert_eq!(one.mean(), 2.0);
+        assert_eq!(one.stddev(), 0.0);
+        assert_eq!(one.min(), 2.0);
+        assert_eq!(one.rate(), 2.0);
+    }
+
+    #[test]
+    fn median_is_nan_safe() {
+        // a NaN sample (clock glitch) must not panic the sort; total_cmp
+        // sorts NaN last, so finite samples still produce the median
+        let m = Measurement {
+            name: "n".into(),
+            samples: vec![3.0, f64::NAN, 1.0, 2.0, 4.0],
+            items_per_sample: 0,
+        };
+        assert_eq!(m.median(), 3.0);
+    }
+
+    #[test]
+    fn bench_args_parse_uniform_contract() {
+        let a = BenchArgs::from_args(["smoke".to_string(), "--json".to_string(), "x.json".into()]);
+        assert!(a.smoke);
+        assert_eq!(a.json.as_deref(), Some(std::path::Path::new("x.json")));
+        let b = BenchArgs::from_args(["--json=y.json".to_string(), "--smoke".to_string()]);
+        assert!(b.smoke);
+        assert_eq!(b.json.as_deref(), Some(std::path::Path::new("y.json")));
+        // libtest-style noise is ignored
+        let c = BenchArgs::from_args(["--bench".to_string()]);
+        assert!(!c.smoke);
+        assert!(c.json.is_none());
+        assert_eq!(c.config().samples, BenchConfig::default().samples);
+        assert_eq!(a.config().samples, BenchConfig::smoke().samples);
+    }
+
+    #[test]
+    fn bench_report_round_trips_through_json() {
+        use crate::data::json::parse;
+        let args = BenchArgs { smoke: true, json: None };
+        let mut report = BenchReport::new("unit", &args);
+        let mut t = Table::new("t", &["a"]);
+        t.row(&["1".to_string()]);
+        report.add_table(&t);
+        report.add_measurement(&Measurement {
+            name: "m".into(),
+            samples: vec![1.0, 2.0, 3.0],
+            items_per_sample: 2,
+        });
+        let v = parse(&report.to_value().to_json_pretty()).unwrap();
+        assert_eq!(v.req("schema").num(), 1.0);
+        assert_eq!(v.req("bench").str(), "unit");
+        assert_eq!(v.req("smoke"), &crate::data::json::Value::Bool(true));
+        assert_eq!(v.req("tables").arr().len(), 1);
+        assert_eq!(v.req("tables").arr()[0].req("rows").arr().len(), 1);
+        let m = &v.req("measurements").arr()[0];
+        assert_eq!(m.req("median_s").num(), 2.0);
+        assert_eq!(m.req("rate").num(), 1.0);
+        assert_eq!(m.req("samples_s").f64_vec(), vec![1.0, 2.0, 3.0]);
+        // features recorded so numbers are attributable to a build config
+        assert!(v.req("features").get("counters").is_some());
+        // finish() without --json is a no-op
+        report.finish().unwrap();
     }
 }

@@ -1,9 +1,12 @@
-//! Minimal JSON reader (recursive descent) — enough to load
-//! `artifacts/{parity,golden_tracks,manifest}.json` without serde.
+//! Minimal JSON reader *and writer* (recursive descent / pretty
+//! printer) — enough to load `artifacts/{parity,golden_tracks,
+//! manifest}.json` and to emit the lab/bench reports without serde.
 //!
 //! Supports the full JSON grammar except `\u` surrogate pairs (the
 //! artifacts contain none). Numbers parse as `f64`, which is exact for
-//! everything the Python exporters emit (they serialize f64s).
+//! everything the Python exporters emit (they serialize f64s), and for
+//! every counter this crate serializes (all < 2^53). Non-finite
+//! numbers serialize as `null` (JSON has no NaN/Inf).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -72,6 +75,156 @@ impl Value {
     pub fn f64_mat(&self) -> Vec<Vec<f64>> {
         self.arr().iter().map(Value::f64_vec).collect()
     }
+
+    /// Number, if this is one (non-panicking counterpart of [`Self::num`]).
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// String slice, if this is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is one.
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Boolean, if this is one.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Build an object from `(key, value)` pairs (writer-side helper).
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Lossless-enough `u64` wrapper (every counter this crate
+    /// serializes is < 2^53, where `f64` is exact).
+    pub fn from_u64(n: u64) -> Value {
+        Value::Num(n as f64)
+    }
+
+    /// Serialize compactly (one line, no spaces).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        write_value(&mut s, self, None, 0);
+        s
+    }
+
+    /// Serialize with 2-space indentation (the report format — diffs
+    /// and code review want stable, line-oriented JSON).
+    pub fn to_json_pretty(&self) -> String {
+        let mut s = String::new();
+        write_value(&mut s, self, Some(2), 0);
+        s.push('\n');
+        s
+    }
+}
+
+/// Write a value as pretty JSON to `path`, creating parent directories.
+pub fn write_json_file(path: &std::path::Path, v: &Value) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, v.to_json_pretty())?;
+    Ok(())
+}
+
+fn write_value(out: &mut String, v: &Value, indent: Option<usize>, depth: usize) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => {
+            if n.is_finite() {
+                // Display for f64 is shortest-roundtrip, so parse(to_json(v)) == v
+                out.push_str(&format!("{n}"));
+            } else {
+                out.push_str("null");
+            }
+        }
+        Value::Str(s) => write_string(out, s),
+        Value::Arr(items) => write_seq(out, indent, depth, b'[', items.len(), |out, i| {
+            write_value(out, &items[i], indent, depth + 1)
+        }),
+        Value::Obj(map) => {
+            let entries: Vec<(&String, &Value)> = map.iter().collect();
+            write_seq(out, indent, depth, b'{', entries.len(), |out, i| {
+                write_string(out, entries[i].0);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(out, entries[i].1, indent, depth + 1);
+            })
+        }
+    }
+}
+
+/// Shared `[...]` / `{...}` layout: compact when `indent` is `None`,
+/// one element per line otherwise.
+fn write_seq(
+    out: &mut String,
+    indent: Option<usize>,
+    depth: usize,
+    open: u8,
+    n: usize,
+    mut elem: impl FnMut(&mut String, usize),
+) {
+    let close = if open == b'[' { ']' } else { '}' };
+    out.push(open as char);
+    if n == 0 {
+        out.push(close);
+        return;
+    }
+    for i in 0..n {
+        if i > 0 {
+            out.push(',');
+        }
+        if let Some(w) = indent {
+            out.push('\n');
+            out.push_str(&" ".repeat(w * (depth + 1)));
+        }
+        elem(out, i);
+    }
+    if let Some(w) = indent {
+        out.push('\n');
+        out.push_str(&" ".repeat(w * depth));
+    }
+    out.push(close);
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse error with byte offset.
@@ -357,5 +510,50 @@ mod tests {
         assert_eq!(parse("1e-3").unwrap().num(), 0.001);
         assert_eq!(parse("42").unwrap().num(), 42.0);
         assert_eq!(parse("-0.25").unwrap().num(), -0.25);
+    }
+
+    #[test]
+    fn serializer_round_trips() {
+        let v = Value::obj(vec![
+            ("name", Value::Str("cell \"a\"\n".into())),
+            ("n", Value::from_u64(12345678901234)),
+            ("x", Value::Num(-0.125)),
+            ("ok", Value::Bool(true)),
+            ("none", Value::Null),
+            ("arr", Value::Arr(vec![Value::Num(1.5), Value::Str("s".into())])),
+            ("empty", Value::Arr(vec![])),
+        ]);
+        for text in [v.to_json(), v.to_json_pretty()] {
+            assert_eq!(parse(&text).unwrap(), v, "{text}");
+        }
+    }
+
+    #[test]
+    fn serializer_shortest_roundtrip_numbers() {
+        for x in [0.1f64, 1.0 / 3.0, 1e-12, 5500.0, 9.007199254740991e15] {
+            let text = Value::Num(x).to_json();
+            assert_eq!(parse(&text).unwrap().num(), x, "{text}");
+        }
+        // JSON has no NaN/Inf — they degrade to null
+        assert_eq!(Value::Num(f64::NAN).to_json(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_json(), "null");
+    }
+
+    #[test]
+    fn pretty_form_is_line_oriented() {
+        let v = Value::obj(vec![("a", Value::Arr(vec![Value::Num(1.0), Value::Num(2.0)]))]);
+        let text = v.to_json_pretty();
+        assert!(text.contains("\n  \"a\": [\n    1,\n    2\n  ]\n"), "{text}");
+        assert!(text.ends_with("}\n"));
+    }
+
+    #[test]
+    fn write_json_file_round_trips() {
+        let dir = std::env::temp_dir().join(format!("smalltrack_json_{}", std::process::id()));
+        let path = dir.join("nested").join("out.json");
+        let v = Value::obj(vec![("k", Value::Num(7.0))]);
+        write_json_file(&path, &v).unwrap();
+        assert_eq!(parse_file(&path).unwrap(), v);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

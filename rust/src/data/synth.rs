@@ -75,6 +75,21 @@ pub struct SynthConfig {
     pub jitter_px: f64,
     /// Expected false positives per frame.
     pub fp_rate: f64,
+    /// Per-object per-frame probability of *starting* an occlusion
+    /// burst: a stretch of frames where the object stays in the scene
+    /// (and in the ground truth) but the detector reports nothing —
+    /// the classic id-switch trigger. `0.0` (the default) draws no RNG
+    /// and leaves the generated stream bit-identical to the
+    /// pre-occlusion generator.
+    pub occlusion_rate: f64,
+    /// `(min, max)` occlusion-burst length in frames (inclusive).
+    pub occlusion_len: (u32, u32),
+    /// Spawn objects in crossing pairs: two objects approaching one
+    /// shared meet point from opposite sides, guaranteed to overlap
+    /// mid-trajectory — the association stress the random-walk
+    /// spawner almost never produces. `false` (the default) draws no
+    /// RNG and leaves the stream bit-identical.
+    pub crossing: bool,
 }
 
 impl SynthConfig {
@@ -90,6 +105,19 @@ impl SynthConfig {
             det_prob: 0.95,
             jitter_px: 1.5,
             fp_rate: 0.05,
+            occlusion_rate: 0.0,
+            occlusion_len: (5, 15),
+            crossing: false,
+        }
+    }
+
+    /// [`Self::mot15`] with the scenario-stress knobs on: occlusion
+    /// bursts plus crossing-pair spawns (the scenario lab's hard cell).
+    pub fn stress(name: &str, n_frames: u32, max_objects: u32, seed: u64) -> Self {
+        SynthConfig {
+            occlusion_rate: 0.02,
+            crossing: true,
+            ..SynthConfig::mot15(name, n_frames, max_objects, seed)
         }
     }
 }
@@ -122,6 +150,38 @@ struct ActiveObject {
     w: f64,
     h: f64,
     frames_left: u32,
+    /// Remaining frames of the current occlusion burst (0 = visible).
+    occluded_left: u32,
+}
+
+/// Register one newly-spawned object (shared by the random and
+/// crossing-pair spawn paths).
+#[allow(clippy::too_many_arguments)]
+fn spawn(
+    active: &mut Vec<ActiveObject>,
+    gt: &mut Vec<GtTrack>,
+    next_gt: &mut u64,
+    cx: f64,
+    cy: f64,
+    vx: f64,
+    vy: f64,
+    w: f64,
+    h: f64,
+    frames_left: u32,
+) {
+    active.push(ActiveObject {
+        gt_id: *next_gt,
+        cx,
+        cy,
+        vx,
+        vy,
+        w,
+        h,
+        frames_left,
+        occluded_left: 0,
+    });
+    gt.push(GtTrack { id: *next_gt, boxes: Vec::new() });
+    *next_gt += 1;
 }
 
 fn hash_name(name: &str) -> u64 {
@@ -169,6 +229,34 @@ pub fn generate_sequence(cfg: &SynthConfig) -> SynthSequence {
 
         // spawn up to target
         while (active.len() as u32) < target {
+            // crossing pairs: two objects aimed at one shared meet
+            // point from opposite sides, arriving on the same frame —
+            // a guaranteed mid-trajectory overlap
+            if cfg.crossing && (active.len() as u32) + 2 <= target && rng.chance(0.5) {
+                let meet_x = rng.range(0.35, 0.65) * cfg.width;
+                let meet_y = rng.range(0.25, 0.75) * cfg.height;
+                let speed = rng.range(2.0, 4.5);
+                let dist = rng.range(100.0, 300.0);
+                let steps = (dist / speed).ceil().max(1.0);
+                for dir in [1.0f64, -1.0] {
+                    let w = rng.range(30.0, 90.0);
+                    let h = w * rng.range(1.8, 2.6);
+                    let off = rng.range(5.0, 30.0);
+                    spawn(
+                        &mut active,
+                        &mut gt,
+                        &mut next_gt,
+                        meet_x - dir * dist,
+                        meet_y - dir * off,
+                        dir * speed,
+                        dir * off / steps,
+                        w,
+                        h,
+                        steps as u32 * 2 + 30,
+                    );
+                }
+                continue;
+            }
             let w = rng.range(30.0, 90.0);
             let h = w * rng.range(1.8, 2.6); // pedestrian aspect
             let (cx, cy, vx, vy) = match rng.below(4) {
@@ -192,18 +280,7 @@ pub fn generate_sequence(cfg: &SynthConfig) -> SynthSequence {
                 ),
             };
             let frames_left = 30 + rng.below(170) as u32;
-            active.push(ActiveObject {
-                gt_id: next_gt,
-                cx,
-                cy,
-                vx,
-                vy,
-                w,
-                h,
-                frames_left,
-            });
-            gt.push(GtTrack { id: next_gt, boxes: Vec::new() });
-            next_gt += 1;
+            spawn(&mut active, &mut gt, &mut next_gt, cx, cy, vx, vy, w, h, frames_left);
         }
 
         // advance + detect
@@ -228,7 +305,30 @@ pub fn generate_sequence(cfg: &SynthConfig) -> SynthSequence {
                     o.cy + o.h / 2.0,
                 );
                 gt[o.gt_id as usize].boxes.push((frame_idx, truth));
-                if rng.chance(cfg.det_prob) {
+                // occlusion bursts: the object stays in the scene (and
+                // in the ground truth — misses are scored) but the
+                // detector goes blind for a stretch. The knob-off path
+                // draws no RNG, keeping legacy streams bit-identical.
+                let occluded = if cfg.occlusion_rate > 0.0 {
+                    if o.occluded_left > 0 {
+                        o.occluded_left -= 1;
+                        true
+                    } else if rng.chance(cfg.occlusion_rate) {
+                        let (lo, hi) = cfg.occlusion_len;
+                        let span = hi.max(lo) - lo.min(hi);
+                        // draw ∈ [lo, hi] total burst frames; this
+                        // frame is the first of them, so the remainder
+                        // is draw - 1 (lo clamps to >= 1, no underflow)
+                        o.occluded_left =
+                            lo.min(hi).max(1) + rng.below(span as u64 + 1) as u32 - 1;
+                        true
+                    } else {
+                        false
+                    }
+                } else {
+                    false
+                };
+                if !occluded && rng.chance(cfg.det_prob) {
                     let j = cfg.jitter_px;
                     dets.push(Detection {
                         bbox: Bbox::new(
@@ -365,6 +465,82 @@ mod tests {
                 assert!(d.bbox.is_finite());
             }
         }
+    }
+
+    #[test]
+    fn occlusion_bursts_create_detection_gaps() {
+        let occ = SynthConfig {
+            occlusion_rate: 0.05,
+            fp_rate: 0.0,
+            ..SynthConfig::mot15("OCC", 300, 6, 11)
+        };
+        let s = generate_sequence(&occ);
+        let n_gt: usize = s.ground_truth.iter().map(|t| t.boxes.len()).sum();
+        let n_det = s.sequence.n_detections();
+        // occlusion hides objects from the *detector* only: ground
+        // truth keeps scoring them, so detections fall well below the
+        // plain 5%-dropout rate…
+        assert!((n_det as f64) < 0.85 * n_gt as f64, "{n_det} vs {n_gt}");
+        // …but bursts end, so the stream is not starved either
+        assert!((n_det as f64) > 0.3 * n_gt as f64, "{n_det} vs {n_gt}");
+        // deterministic in (name, seed) like every other knob
+        let again = generate_sequence(&occ);
+        assert_eq!(s.sequence.n_detections(), again.sequence.n_detections());
+        for (fa, fb) in s.sequence.frames.iter().zip(&again.sequence.frames) {
+            assert_eq!(fa.detections.len(), fb.detections.len());
+        }
+    }
+
+    #[test]
+    fn crossing_pairs_actually_cross() {
+        let cfg = SynthConfig {
+            crossing: true,
+            det_prob: 1.0,
+            fp_rate: 0.0,
+            ..SynthConfig::mot15("CROSS", 150, 6, 13)
+        };
+        let s = generate_sequence(&cfg);
+        // gather ground-truth boxes per frame and look for overlap
+        let mut by_frame: std::collections::HashMap<u32, Vec<Bbox>> = Default::default();
+        for t in &s.ground_truth {
+            for (f, b) in &t.boxes {
+                by_frame.entry(*f).or_default().push(*b);
+            }
+        }
+        let overlapping_frames = by_frame
+            .values()
+            .filter(|boxes| {
+                boxes.iter().enumerate().any(|(i, a)| {
+                    boxes[i + 1..].iter().any(|b| {
+                        let ix = (a.x2.min(b.x2) - a.x1.max(b.x1)).max(0.0);
+                        let iy = (a.y2.min(b.y2) - a.y1.max(b.y1)).max(0.0);
+                        ix * iy > 0.0
+                    })
+                })
+            })
+            .count();
+        // pairs are aimed at a shared meet point — overlap must occur,
+        // repeatedly (the random-walk spawner almost never does this)
+        assert!(overlapping_frames >= 5, "only {overlapping_frames} overlapping frames");
+    }
+
+    #[test]
+    fn stress_config_turns_both_knobs_on() {
+        let cfg = SynthConfig::stress("ST", 100, 5, 3);
+        assert!(cfg.occlusion_rate > 0.0);
+        assert!(cfg.crossing);
+        let a = generate_sequence(&cfg);
+        let b = generate_sequence(&cfg);
+        assert_eq!(a.sequence.n_detections(), b.sequence.n_detections());
+        assert_eq!(a.sequence.n_frames(), 100);
+        // stress generation still respects the occupancy bound
+        let mut per_frame = vec![0u32; 101];
+        for t in &a.ground_truth {
+            for (f, _) in &t.boxes {
+                per_frame[*f as usize] += 1;
+            }
+        }
+        assert!(per_frame.iter().all(|&n| n <= 5));
     }
 
     #[test]

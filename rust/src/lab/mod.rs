@@ -1,0 +1,97 @@
+//! Scenario lab: machine-readable perf + quality reports with a
+//! regression gate.
+//!
+//! The paper's contribution is a set of measured tables; this module
+//! is the machinery that keeps this repo's own tables honest. It runs
+//! a declarative scenario grid ([`scenario`]) — engine kind × tracker
+//! density × detector dropout/FP rate × occlusion stress × stream
+//! count, every cell built on `data::synth` and timed through either
+//! the serial engine loop or the full [`TrackingService`] session
+//! runtime — and emits one versioned JSON report ([`report`]) with
+//! per-cell FPS statistics, CLEAR-MOT quality and kernel counters.
+//! [`mod@compare`] diffs two reports under configurable noise margins
+//! and produces the pass/fail verdict CI gates on.
+//!
+//! CLI surface (`smalltrack lab …`):
+//!
+//! ```text
+//! smalltrack lab run [--smoke] [--seed N] [--json PATH]   # measure a grid
+//! smalltrack lab compare <base.json> <cur.json>           # human diff table
+//! smalltrack lab gate <base.json> <cur.json> --margin 2.0 # exit 1 on regression
+//! ```
+//!
+//! The checked-in `artifacts/bench_baseline.json` is a conservative
+//! floor baseline for the smoke grid; CI runs
+//! `lab run --smoke --json … && lab gate …` on every push. Refresh it
+//! with `cargo run --release -- lab run --smoke --json
+//! artifacts/bench_baseline.json` after an intentional perf change.
+//!
+//! [`TrackingService`]: crate::coordinator::TrackingService
+
+pub mod compare;
+pub mod report;
+pub mod scenario;
+
+pub use compare::{compare, CellDelta, CellStatus, Comparison, GateConfig};
+pub use report::{
+    CellReport, CounterTotals, FpsStats, KernelEntry, LabReport, Manifest, QualityStats,
+    SCHEMA_VERSION,
+};
+pub use scenario::{Scenario, ScenarioAxes};
+
+use crate::benchkit::BenchConfig;
+
+/// Run every cell of a grid and assemble the report. `smoke` is
+/// recorded in the manifest (and should match how `cfg` was sized).
+/// Progress goes to stderr so `--json -`-style piping stays clean.
+pub fn run_grid(axes: &ScenarioAxes, cfg: &BenchConfig, smoke: bool) -> crate::Result<LabReport> {
+    let cells = axes.cells();
+    let mut out = Vec::with_capacity(cells.len());
+    for (i, cell) in cells.iter().enumerate() {
+        eprintln!("[{}/{}] {}", i + 1, cells.len(), cell.id());
+        out.push(cell.run(cfg)?);
+    }
+    Ok(LabReport { manifest: Manifest::for_axes(axes, smoke), cells: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineKind;
+
+    #[test]
+    fn run_grid_produces_one_cell_per_scenario() {
+        // a deliberately tiny grid so the whole path (run -> report ->
+        // serialize -> parse -> compare) stays in unit-test budget
+        let axes = ScenarioAxes {
+            engines: vec![EngineKind::Native],
+            densities: vec![3],
+            det_probs: vec![0.95],
+            fp_rates: vec![0.05],
+            occlusion: vec![false],
+            stream_counts: vec![1],
+            frames: 30,
+            seed: 11,
+        };
+        let cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(1),
+            samples: 2,
+            min_sample_time: std::time::Duration::from_micros(100),
+        };
+        let report = run_grid(&axes, &cfg, true).expect("grid run");
+        assert_eq!(report.cells.len(), 1);
+        assert!(report.manifest.smoke);
+        assert_eq!(report.manifest.engines, vec!["native".to_string()]);
+        // a fresh identical run gates cleanly against itself even at a
+        // tight margin on everything deterministic (quality); fps gets
+        // the default noise margin
+        let again = run_grid(&axes, &cfg, true).expect("grid rerun");
+        assert_eq!(
+            report.cells[0].quality, again.cells[0].quality,
+            "quality must be deterministic in the grid seed"
+        );
+        assert_eq!(report.cells[0].counters, again.cells[0].counters);
+        let cmp = compare(&report, &again, &GateConfig { fps_margin: 50.0, mota_margin: 0.0 });
+        assert!(cmp.pass, "{}", cmp.summary());
+    }
+}

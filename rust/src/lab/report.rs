@@ -1,0 +1,600 @@
+//! The versioned lab-report schema and its JSON (de)serialization.
+//!
+//! A [`LabReport`] is one archived measurement run: a manifest (schema
+//! version, grid config, compiled feature flags — a perf number
+//! without its build configuration is not comparable to anything) plus
+//! one [`CellReport`] per scenario cell. Reports round-trip through
+//! the dependency-free `data::json` layer; `lab compare` / `lab gate`
+//! consume two of them.
+//!
+//! Schema changes MUST bump [`SCHEMA_VERSION`]; [`LabReport::load`]
+//! rejects mismatched versions instead of mis-reading old files.
+
+use crate::benchkit::Measurement;
+use crate::data::json::{parse_file, write_json_file, Value};
+use crate::linalg::{CounterSnapshot, Kernel};
+use crate::sort::MotMetrics;
+use anyhow::{anyhow, Context};
+use std::path::Path;
+
+use super::scenario::ScenarioAxes;
+
+/// Version of the report JSON schema (top-level `schema` field).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Frames-per-second statistics over the benchkit samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpsStats {
+    /// Median-sample FPS (the gate's primary number).
+    pub median: f64,
+    /// Mean-sample FPS.
+    pub mean: f64,
+    /// FPS standard deviation across samples.
+    pub stddev: f64,
+    /// Slowest-sample FPS.
+    pub min: f64,
+}
+
+impl FpsStats {
+    /// Convert a time-domain [`Measurement`] into per-sample FPS
+    /// statistics (each sample becomes `items / seconds`).
+    pub fn from_measurement(m: &Measurement) -> FpsStats {
+        let items = m.items_per_sample as f64;
+        let fps = Measurement {
+            name: m.name.clone(),
+            samples: m
+                .samples
+                .iter()
+                .map(|&t| if t > 0.0 { items / t } else { 0.0 })
+                .collect(),
+            items_per_sample: 0,
+        };
+        // min over FPS samples = the slowest sample's rate
+        FpsStats { median: fps.median(), mean: fps.mean(), stddev: fps.stddev(), min: fps.min() }
+    }
+
+    fn to_value(self) -> Value {
+        Value::obj(vec![
+            ("median", Value::Num(self.median)),
+            ("mean", Value::Num(self.mean)),
+            ("stddev", Value::Num(self.stddev)),
+            ("min", Value::Num(self.min)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<FpsStats> {
+        Ok(FpsStats {
+            median: req_num(v, "median")?,
+            mean: req_num(v, "mean")?,
+            stddev: req_num(v, "stddev")?,
+            min: req_num(v, "min")?,
+        })
+    }
+}
+
+/// CLEAR-MOT quality figures for one cell (derived values stored
+/// alongside the raw counts so reports are self-describing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QualityStats {
+    /// Multi-object tracking accuracy.
+    pub mota: f64,
+    /// Multi-object tracking precision (mean matched IoU).
+    pub motp: f64,
+    /// Detection precision.
+    pub precision: f64,
+    /// Detection recall.
+    pub recall: f64,
+    /// Ground-truth boxes scored.
+    pub n_gt: u64,
+    /// True positives.
+    pub tp: u64,
+    /// False positives.
+    pub fp: u64,
+    /// Misses.
+    pub fn_: u64,
+    /// Identity switches.
+    pub id_switches: u64,
+}
+
+impl QualityStats {
+    /// Derive the report row from accumulated metrics.
+    pub fn from_metrics(m: &MotMetrics) -> QualityStats {
+        QualityStats {
+            mota: m.mota(),
+            motp: m.motp(),
+            precision: m.precision(),
+            recall: m.recall(),
+            n_gt: m.n_gt,
+            tp: m.tp,
+            fp: m.fp,
+            fn_: m.fn_,
+            id_switches: m.id_switches,
+        }
+    }
+
+    fn to_value(self) -> Value {
+        Value::obj(vec![
+            ("mota", Value::Num(self.mota)),
+            ("motp", Value::Num(self.motp)),
+            ("precision", Value::Num(self.precision)),
+            ("recall", Value::Num(self.recall)),
+            ("n_gt", Value::from_u64(self.n_gt)),
+            ("tp", Value::from_u64(self.tp)),
+            ("fp", Value::from_u64(self.fp)),
+            ("fn", Value::from_u64(self.fn_)),
+            ("id_switches", Value::from_u64(self.id_switches)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<QualityStats> {
+        Ok(QualityStats {
+            mota: req_num(v, "mota")?,
+            motp: req_num(v, "motp")?,
+            precision: req_num(v, "precision")?,
+            recall: req_num(v, "recall")?,
+            n_gt: req_u64(v, "n_gt")?,
+            tp: req_u64(v, "tp")?,
+            fp: req_u64(v, "fp")?,
+            fn_: req_u64(v, "fn")?,
+            id_switches: req_u64(v, "id_switches")?,
+        })
+    }
+}
+
+/// One kernel's row in the counter snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEntry {
+    /// Kernel name (the paper's Table II row label).
+    pub kernel: String,
+    /// Invocations.
+    pub calls: u64,
+    /// Floating-point operations.
+    pub flops: u64,
+    /// Operand bytes moved.
+    pub bytes: u64,
+}
+
+/// Kernel-counter snapshot for one cell: totals plus the non-zero
+/// per-kernel rows (all zero when the `counters` feature is off — the
+/// manifest's feature flags say which).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CounterTotals {
+    /// Total kernel invocations.
+    pub total_calls: u64,
+    /// Total flops.
+    pub total_flops: u64,
+    /// Total operand bytes.
+    pub total_bytes: u64,
+    /// Per-kernel rows (only kernels with `calls > 0`).
+    pub per_kernel: Vec<KernelEntry>,
+}
+
+impl CounterTotals {
+    /// Collapse a [`CounterSnapshot`] into the report form.
+    pub fn from_snapshot(s: &CounterSnapshot) -> CounterTotals {
+        let t = s.total();
+        CounterTotals {
+            total_calls: t.calls,
+            total_flops: t.flops,
+            total_bytes: t.bytes,
+            per_kernel: Kernel::ALL
+                .iter()
+                .filter_map(|&k| {
+                    let ks = s.get(k);
+                    (ks.calls > 0).then(|| KernelEntry {
+                        kernel: k.name().to_string(),
+                        calls: ks.calls,
+                        flops: ks.flops,
+                        bytes: ks.bytes,
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("total_calls", Value::from_u64(self.total_calls)),
+            ("total_flops", Value::from_u64(self.total_flops)),
+            ("total_bytes", Value::from_u64(self.total_bytes)),
+            (
+                "per_kernel",
+                Value::Arr(
+                    self.per_kernel
+                        .iter()
+                        .map(|e| {
+                            Value::obj(vec![
+                                ("kernel", Value::Str(e.kernel.clone())),
+                                ("calls", Value::from_u64(e.calls)),
+                                ("flops", Value::from_u64(e.flops)),
+                                ("bytes", Value::from_u64(e.bytes)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<CounterTotals> {
+        let rows = v
+            .get("per_kernel")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("missing array 'per_kernel'"))?;
+        Ok(CounterTotals {
+            total_calls: req_u64(v, "total_calls")?,
+            total_flops: req_u64(v, "total_flops")?,
+            total_bytes: req_u64(v, "total_bytes")?,
+            per_kernel: rows
+                .iter()
+                .map(|r| {
+                    Ok(KernelEntry {
+                        kernel: req_str(r, "kernel")?.to_string(),
+                        calls: req_u64(r, "calls")?,
+                        flops: req_u64(r, "flops")?,
+                        bytes: req_u64(r, "bytes")?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// One scenario cell's measured row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellReport {
+    /// Stable cell id (the compare key).
+    pub id: String,
+    /// Engine spec string (`native` | `batch` | `strong:N` | `xla`).
+    pub engine: String,
+    /// Concurrent streams.
+    pub streams: usize,
+    /// Max simultaneous objects per stream.
+    pub max_objects: u32,
+    /// Detector reliability.
+    pub det_prob: f64,
+    /// Expected false positives per frame.
+    pub fp_rate: f64,
+    /// Occlusion/crossing stress on.
+    pub occlusion: bool,
+    /// Frames per stream.
+    pub frames: u64,
+    /// Frames per timing sample (streams × frames).
+    pub total_frames: u64,
+    /// Throughput statistics.
+    pub fps: FpsStats,
+    /// CLEAR-MOT quality.
+    pub quality: QualityStats,
+    /// Kernel-counter snapshot.
+    pub counters: CounterTotals,
+}
+
+impl CellReport {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("id", Value::Str(self.id.clone())),
+            ("engine", Value::Str(self.engine.clone())),
+            ("streams", Value::from_u64(self.streams as u64)),
+            ("max_objects", Value::from_u64(self.max_objects as u64)),
+            ("det_prob", Value::Num(self.det_prob)),
+            ("fp_rate", Value::Num(self.fp_rate)),
+            ("occlusion", Value::Bool(self.occlusion)),
+            ("frames", Value::from_u64(self.frames)),
+            ("total_frames", Value::from_u64(self.total_frames)),
+            ("fps", self.fps.to_value()),
+            ("quality", self.quality.to_value()),
+            ("counters", self.counters.to_value()),
+        ])
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<CellReport> {
+        Ok(CellReport {
+            id: req_str(v, "id")?.to_string(),
+            engine: req_str(v, "engine")?.to_string(),
+            streams: req_u64(v, "streams")? as usize,
+            max_objects: req_u64(v, "max_objects")? as u32,
+            det_prob: req_num(v, "det_prob")?,
+            fp_rate: req_num(v, "fp_rate")?,
+            occlusion: req_bool(v, "occlusion")?,
+            frames: req_u64(v, "frames")?,
+            total_frames: req_u64(v, "total_frames")?,
+            fps: FpsStats::from_value(v.get("fps").ok_or_else(|| anyhow!("missing 'fps'"))?)
+                .context("fps")?,
+            quality: QualityStats::from_value(
+                v.get("quality").ok_or_else(|| anyhow!("missing 'quality'"))?,
+            )
+            .context("quality")?,
+            counters: CounterTotals::from_value(
+                v.get("counters").ok_or_else(|| anyhow!("missing 'counters'"))?,
+            )
+            .context("counters")?,
+        })
+    }
+}
+
+/// The run manifest: what produced the numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Producing tool (always `smalltrack-lab`).
+    pub tool: String,
+    /// Whether this was a smoke-sized run.
+    pub smoke: bool,
+    /// Grid master seed.
+    pub seed: u64,
+    /// Frames per stream.
+    pub frames: u32,
+    /// Engine specs swept.
+    pub engines: Vec<String>,
+    /// Compiled cargo feature flags, `(name, enabled)`.
+    pub features: Vec<(String, bool)>,
+    /// Free-form note (e.g. "conservative floor baseline").
+    pub note: String,
+}
+
+impl Manifest {
+    /// Manifest for a run over `axes`.
+    pub fn for_axes(axes: &ScenarioAxes, smoke: bool) -> Manifest {
+        Manifest {
+            tool: "smalltrack-lab".to_string(),
+            smoke,
+            seed: axes.seed,
+            frames: axes.frames,
+            engines: axes.engines.iter().map(|e| e.spec()).collect(),
+            features: current_features(),
+            note: String::new(),
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("tool", Value::Str(self.tool.clone())),
+            ("smoke", Value::Bool(self.smoke)),
+            ("seed", Value::from_u64(self.seed)),
+            ("frames", Value::from_u64(self.frames as u64)),
+            (
+                "engines",
+                Value::Arr(self.engines.iter().map(|e| Value::Str(e.clone())).collect()),
+            ),
+            (
+                "features",
+                Value::Obj(
+                    self.features
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Value::Bool(*v)))
+                        .collect(),
+                ),
+            ),
+            ("note", Value::Str(self.note.clone())),
+        ])
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<Manifest> {
+        let engines = v
+            .get("engines")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("missing array 'engines'"))?
+            .iter()
+            .map(|e| e.as_str().map(str::to_string).ok_or_else(|| anyhow!("non-string engine")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let features = match v.get("features") {
+            Some(Value::Obj(m)) => m
+                .iter()
+                .map(|(k, val)| {
+                    val.as_bool()
+                        .map(|b| (k.clone(), b))
+                        .ok_or_else(|| anyhow!("non-bool feature '{k}'"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            _ => return Err(anyhow!("missing object 'features'")),
+        };
+        Ok(Manifest {
+            tool: req_str(v, "tool")?.to_string(),
+            smoke: req_bool(v, "smoke")?,
+            seed: req_u64(v, "seed")?,
+            frames: req_u64(v, "frames")? as u32,
+            engines,
+            features,
+            note: v.get("note").and_then(Value::as_str).unwrap_or("").to_string(),
+        })
+    }
+}
+
+/// A full lab run: manifest + per-cell rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LabReport {
+    /// What produced the numbers.
+    pub manifest: Manifest,
+    /// One row per scenario cell.
+    pub cells: Vec<CellReport>,
+}
+
+impl LabReport {
+    /// Serialize to the versioned JSON document.
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("schema", Value::from_u64(SCHEMA_VERSION)),
+            ("kind", Value::Str("lab".into())),
+            ("manifest", self.manifest.to_value()),
+            ("cells", Value::Arr(self.cells.iter().map(CellReport::to_value).collect())),
+        ])
+    }
+
+    /// Parse a report document, rejecting unknown schema versions.
+    pub fn from_value(v: &Value) -> anyhow::Result<LabReport> {
+        let schema = req_u64(v, "schema")?;
+        if schema != SCHEMA_VERSION {
+            return Err(anyhow!(
+                "unsupported lab-report schema {schema} (this build reads {SCHEMA_VERSION})"
+            ));
+        }
+        if req_str(v, "kind")? != "lab" {
+            return Err(anyhow!("not a lab report (kind != \"lab\")"));
+        }
+        Ok(LabReport {
+            manifest: Manifest::from_value(
+                v.get("manifest").ok_or_else(|| anyhow!("missing 'manifest'"))?,
+            )
+            .context("manifest")?,
+            cells: v
+                .get("cells")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("missing array 'cells'"))?
+                .iter()
+                .map(CellReport::from_value)
+                .collect::<anyhow::Result<Vec<_>>>()
+                .context("cells")?,
+        })
+    }
+
+    /// Write as pretty JSON.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        write_json_file(path, &self.to_value())
+    }
+
+    /// Load and validate a report file.
+    pub fn load(path: &Path) -> anyhow::Result<LabReport> {
+        LabReport::from_value(&parse_file(path)?)
+            .with_context(|| format!("invalid lab report {}", path.display()))
+    }
+
+    /// Cell lookup by id.
+    pub fn cell(&self, id: &str) -> Option<&CellReport> {
+        self.cells.iter().find(|c| c.id == id)
+    }
+}
+
+/// Compiled cargo feature flags, `(name, enabled)` — recorded in every
+/// manifest so reports from different build configs never get compared
+/// silently. Delegates to [`crate::benchkit::compiled_features`], the
+/// one list both report kinds share.
+pub fn current_features() -> Vec<(String, bool)> {
+    crate::benchkit::compiled_features().into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+fn req_num(v: &Value, key: &str) -> anyhow::Result<f64> {
+    v.get(key).and_then(Value::as_num).ok_or_else(|| anyhow!("missing number '{key}'"))
+}
+
+fn req_u64(v: &Value, key: &str) -> anyhow::Result<u64> {
+    let n = req_num(v, key)?;
+    if n < 0.0 || n.fract() != 0.0 {
+        return Err(anyhow!("'{key}' = {n} is not a non-negative integer"));
+    }
+    Ok(n as u64)
+}
+
+fn req_str<'a>(v: &'a Value, key: &str) -> anyhow::Result<&'a str> {
+    v.get(key).and_then(Value::as_str).ok_or_else(|| anyhow!("missing string '{key}'"))
+}
+
+fn req_bool(v: &Value, key: &str) -> anyhow::Result<bool> {
+    v.get(key).and_then(Value::as_bool).ok_or_else(|| anyhow!("missing bool '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::json::parse;
+
+    /// A small fully-populated report for serialization tests.
+    pub(crate) fn sample_report() -> LabReport {
+        LabReport {
+            manifest: Manifest {
+                tool: "smalltrack-lab".into(),
+                smoke: true,
+                seed: 7,
+                frames: 80,
+                engines: vec!["native".into(), "batch".into()],
+                features: current_features(),
+                note: "unit fixture".into(),
+            },
+            cells: vec![CellReport {
+                id: "native-d5-dp90-fp5-occ-s1".into(),
+                engine: "native".into(),
+                streams: 1,
+                max_objects: 5,
+                det_prob: 0.9,
+                fp_rate: 0.05,
+                occlusion: true,
+                frames: 80,
+                total_frames: 80,
+                fps: FpsStats { median: 1000.0, mean: 990.0, stddev: 25.0, min: 950.0 },
+                quality: QualityStats {
+                    mota: 0.62,
+                    motp: 0.9,
+                    precision: 0.97,
+                    recall: 0.8,
+                    n_gt: 400,
+                    tp: 320,
+                    fp: 10,
+                    fn_: 80,
+                    id_switches: 3,
+                },
+                counters: CounterTotals {
+                    total_calls: 1000,
+                    total_flops: 50000,
+                    total_bytes: 80000,
+                    per_kernel: vec![KernelEntry {
+                        kernel: "Matrix-Matrix Multiplication".into(),
+                        calls: 100,
+                        flops: 40000,
+                        bytes: 60000,
+                    }],
+                },
+            }],
+        }
+    }
+
+    #[test]
+    fn report_round_trips_exactly() {
+        let r = sample_report();
+        let text = r.to_value().to_json_pretty();
+        let back = LabReport::from_value(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let dir = std::env::temp_dir().join(format!("smalltrack_lab_{}", std::process::id()));
+        let path = dir.join("r.json");
+        let r = sample_report();
+        r.save(&path).unwrap();
+        let back = LabReport::load(&path).unwrap();
+        assert_eq!(back, r);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let mut v = sample_report().to_value();
+        if let Value::Obj(m) = &mut v {
+            m.insert("schema".into(), Value::Num(99.0));
+        }
+        let err = LabReport::from_value(&v).unwrap_err();
+        assert!(err.to_string().contains("schema 99"), "{err}");
+    }
+
+    #[test]
+    fn missing_fields_error_instead_of_panicking() {
+        let v = parse(r#"{"schema": 1, "kind": "lab"}"#).unwrap();
+        assert!(LabReport::from_value(&v).is_err());
+        let v2 = parse(r#"{"schema": 1, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
+        assert!(LabReport::from_value(&v2).is_err());
+    }
+
+    #[test]
+    fn fps_stats_convert_time_samples_to_rates() {
+        let m = Measurement {
+            name: "f".into(),
+            samples: vec![0.1, 0.2, 0.4],
+            items_per_sample: 100,
+        };
+        let f = FpsStats::from_measurement(&m);
+        assert_eq!(f.median, 500.0);
+        assert_eq!(f.min, 250.0); // the slowest sample's rate
+        assert!(f.mean > f.min && f.mean < 1000.0);
+        // degenerate: zero-duration samples don't divide by zero
+        let z = Measurement { name: "z".into(), samples: vec![0.0], items_per_sample: 10 };
+        assert_eq!(FpsStats::from_measurement(&z).median, 0.0);
+    }
+}

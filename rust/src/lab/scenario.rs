@@ -1,0 +1,389 @@
+//! Declarative scenario grids and the cell runner.
+//!
+//! A [`ScenarioAxes`] is the cartesian product of the dimensions the
+//! paper's measurement tables vary — engine kind, tracker density,
+//! detector dropout / false-positive rate, occlusion stress, stream
+//! count — and [`Scenario::run`] turns one cell of that grid into a
+//! [`CellReport`]: median/mean/stddev FPS from `benchkit`, CLEAR-MOT
+//! quality from `sort::quality`, and a kernel-counter snapshot.
+//!
+//! Single-stream cells time the serial engine loop
+//! ([`crate::engine::run_sequence`]); multi-stream cells drive the
+//! full session runtime ([`TrackingService`]: open N sessions, push
+//! frames round-robin, drain) so a regression anywhere in the serving
+//! stack — not just the tracker core — moves the number.
+//!
+//! Everything is deterministic in the grid seed: cell ids, per-stream
+//! synthetic sequences, and therefore every quality figure. Timing is
+//! the only nondeterministic output, which is exactly what the compare
+//! margin in [`mod@crate::lab::compare`] absorbs.
+
+use crate::benchkit::{bench, BenchConfig, Measurement};
+use crate::coordinator::{PushPolicy, ServiceConfig, SessionParams, TrackingService};
+use crate::data::synth::{generate_sequence, SynthConfig, SynthSequence};
+use crate::engine::{run_sequence, EngineKind, TrackerEngine};
+use crate::linalg::snapshot;
+use crate::runtime::XlaRuntime;
+use crate::sort::quality::evaluate_engine;
+use crate::sort::{MotMetrics, SortParams};
+
+use super::report::{CellReport, CounterTotals, FpsStats, QualityStats};
+
+/// The grid: one scenario per element of the cartesian product of the
+/// axes. Keep axes short — cells multiply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioAxes {
+    /// Tracker backends to sweep.
+    pub engines: Vec<EngineKind>,
+    /// Tracker density: max simultaneous objects per stream.
+    pub densities: Vec<u32>,
+    /// Detector reliability (probability a live object is detected —
+    /// the dropout axis; 1.0 = perfect detector).
+    pub det_probs: Vec<f64>,
+    /// Expected detector false positives per frame.
+    pub fp_rates: Vec<f64>,
+    /// Scenario stress: `true` adds occlusion bursts *and*
+    /// crossing-pair trajectories (`data::synth`'s stress knobs).
+    pub occlusion: Vec<bool>,
+    /// Concurrent streams per cell: 1 = serial engine loop, >1 = the
+    /// cell runs through [`TrackingService`] sessions.
+    pub stream_counts: Vec<usize>,
+    /// Frames per stream.
+    pub frames: u32,
+    /// Master seed (drives every cell's synthetic data).
+    pub seed: u64,
+}
+
+impl ScenarioAxes {
+    /// The default full grid: both production engines plus the two
+    /// comparison backends, light and crowded scenes, clean and noisy
+    /// detectors, with and without occlusion stress, serial and
+    /// 4-stream serving. 64 cells — minutes, not hours.
+    pub fn default_grid() -> Self {
+        ScenarioAxes {
+            engines: vec![
+                EngineKind::Native,
+                EngineKind::Batch,
+                EngineKind::Strong { threads: 2 },
+                EngineKind::Xla,
+            ],
+            densities: vec![4, 10],
+            det_probs: vec![0.95, 0.7],
+            fp_rates: vec![0.05],
+            occlusion: vec![false, true],
+            stream_counts: vec![1, 4],
+            frames: 200,
+            seed: 7,
+        }
+    }
+
+    /// The CI smoke grid: 4 cells, seconds-long, exercising both
+    /// production engines, the occlusion/crossing stress path and both
+    /// the serial and the session-serving runners. This is the grid the
+    /// checked-in `artifacts/bench_baseline.json` pins.
+    pub fn smoke() -> Self {
+        ScenarioAxes {
+            engines: vec![EngineKind::Native, EngineKind::Batch],
+            densities: vec![5],
+            det_probs: vec![0.9],
+            fp_rates: vec![0.05],
+            occlusion: vec![true],
+            stream_counts: vec![1, 4],
+            frames: 80,
+            seed: 7,
+        }
+    }
+
+    /// Expand the axes into concrete cells (deterministic order:
+    /// engines outermost, stream counts innermost).
+    pub fn cells(&self) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        for &engine in &self.engines {
+            for &max_objects in &self.densities {
+                for &det_prob in &self.det_probs {
+                    for &fp_rate in &self.fp_rates {
+                        for &occlusion in &self.occlusion {
+                            for &streams in &self.stream_counts {
+                                out.push(Scenario {
+                                    engine,
+                                    max_objects,
+                                    det_prob,
+                                    fp_rate,
+                                    occlusion,
+                                    streams,
+                                    frames: self.frames,
+                                    seed: self.seed,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One cell of the grid: a fully-specified workload for one engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scenario {
+    /// Tracker backend under test.
+    pub engine: EngineKind,
+    /// Max simultaneous objects per stream.
+    pub max_objects: u32,
+    /// Detector reliability (see [`ScenarioAxes::det_probs`]).
+    pub det_prob: f64,
+    /// Expected false positives per frame.
+    pub fp_rate: f64,
+    /// Occlusion bursts + crossing pairs on.
+    pub occlusion: bool,
+    /// Concurrent streams (1 = serial loop, >1 = session runtime).
+    pub streams: usize,
+    /// Frames per stream.
+    pub frames: u32,
+    /// Grid seed.
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Stable cell identifier — the compare key between reports.
+    pub fn id(&self) -> String {
+        format!(
+            "{}-d{}-dp{}-fp{}-{}-s{}",
+            self.engine.spec().replace(':', ""),
+            self.max_objects,
+            (self.det_prob * 100.0).round() as u32,
+            (self.fp_rate * 100.0).round() as u32,
+            if self.occlusion { "occ" } else { "clr" },
+            self.streams
+        )
+    }
+
+    /// Generator config for one of this cell's streams. Stress cells
+    /// use [`SynthConfig::stress`] so the lab and every other consumer
+    /// of the canonical stress profile stay in agreement.
+    pub fn synth_config(&self, stream: usize) -> SynthConfig {
+        let name = format!("{}-cam{stream}", self.id());
+        let mut cfg = if self.occlusion {
+            SynthConfig::stress(&name, self.frames, self.max_objects, self.seed)
+        } else {
+            SynthConfig::mot15(&name, self.frames, self.max_objects, self.seed)
+        };
+        cfg.det_prob = self.det_prob;
+        cfg.fp_rate = self.fp_rate;
+        cfg
+    }
+
+    /// Generate this cell's synthetic streams (deterministic in the
+    /// grid seed — byte-identical across runs and machines).
+    pub fn sequences(&self) -> Vec<SynthSequence> {
+        (0..self.streams).map(|i| generate_sequence(&self.synth_config(i))).collect()
+    }
+
+    /// Run the cell: timing (via `benchkit`), quality (CLEAR-MOT vs
+    /// the generator's ground truth), and a kernel-counter snapshot
+    /// (one serial pass — the counters are thread-local, so the
+    /// snapshot always comes from the calling thread regardless of the
+    /// cell's stream count).
+    pub fn run(&self, cfg: &BenchConfig) -> crate::Result<CellReport> {
+        let id = self.id();
+        let seqs = self.sequences();
+        let params = SortParams { timing: false, ..Default::default() };
+        // one shared kernel runtime for all of this cell's bank
+        // engines (cheap today, an HLO compilation each under a real
+        // PJRT backend); non-xla kinds don't need one
+        let rt = match self.engine {
+            EngineKind::Xla => Some(XlaRuntime::new()?),
+            _ => None,
+        };
+        let build_engine = || -> crate::Result<Box<dyn TrackerEngine>> {
+            match &rt {
+                Some(rt) => self.engine.build_with_runtime(rt, params),
+                None => self.engine.build(params),
+            }
+        };
+
+        // quality: serial per stream, counts merged (MOT protocol)
+        let mut quality = MotMetrics::default();
+        {
+            let mut engine = build_engine()?;
+            for s in &seqs {
+                engine.reset();
+                quality.merge(&evaluate_engine(s, &mut *engine, 0.5));
+            }
+        }
+
+        // kernel counters: delta around one serial pass of stream 0
+        let counters = {
+            let mut engine = build_engine()?;
+            let before = snapshot();
+            run_sequence(&mut *engine, &seqs[0].sequence);
+            snapshot().delta(&before)
+        };
+
+        // timing
+        let total_frames = (seqs.len() as u64) * self.frames as u64;
+        let m: Measurement = if self.streams <= 1 {
+            let mut engine = build_engine()?;
+            bench(&id, cfg, total_frames, || {
+                engine.reset();
+                run_sequence(&mut *engine, &seqs[0].sequence);
+            })
+        } else {
+            let svc = TrackingService::start(ServiceConfig {
+                workers: self.streams.min(2),
+                queue_capacity: 64,
+                push_policy: PushPolicy::Block,
+                session_defaults: SessionParams { engine: self.engine, sort_params: params },
+                ..Default::default()
+            })?;
+            let m = bench(&id, cfg, total_frames, || {
+                let handles: Vec<_> = (0..self.streams)
+                    .map(|_| svc.open_session_default().expect("open session"))
+                    .collect();
+                for f in 0..self.frames as usize {
+                    for (h, s) in handles.iter().zip(&seqs) {
+                        let frame = &s.sequence.frames[f];
+                        h.push_frame(frame.detections.iter().map(|d| d.bbox).collect());
+                    }
+                }
+                for h in &handles {
+                    h.close();
+                }
+                for h in &handles {
+                    h.join();
+                }
+            });
+            svc.shutdown();
+            m
+        };
+
+        Ok(CellReport {
+            id,
+            engine: self.engine.spec(),
+            streams: self.streams,
+            max_objects: self.max_objects,
+            det_prob: self.det_prob,
+            fp_rate: self.fp_rate,
+            occlusion: self.occlusion,
+            frames: self.frames as u64,
+            total_frames,
+            fps: FpsStats::from_measurement(&m),
+            quality: QualityStats::from_metrics(&quality),
+            counters: CounterTotals::from_snapshot(&counters),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_shape_is_pinned() {
+        // the checked-in bench baseline keys on these ids — changing
+        // the smoke grid means regenerating artifacts/bench_baseline.json
+        let ids: Vec<String> = ScenarioAxes::smoke().cells().iter().map(|c| c.id()).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "native-d5-dp90-fp5-occ-s1",
+                "native-d5-dp90-fp5-occ-s4",
+                "batch-d5-dp90-fp5-occ-s1",
+                "batch-d5-dp90-fp5-occ-s4",
+            ]
+        );
+    }
+
+    #[test]
+    fn cells_are_deterministic() {
+        let a = ScenarioAxes::default_grid().cells();
+        let b = ScenarioAxes::default_grid().cells();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+        // ids are unique (they are the compare keys)
+        let mut ids: Vec<String> = a.iter().map(|c| c.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), a.len());
+    }
+
+    #[test]
+    fn sequences_are_deterministic_and_ragged_free() {
+        let cell = ScenarioAxes::smoke().cells().pop().unwrap();
+        let a = cell.sequences();
+        let b = cell.sequences();
+        assert_eq!(a.len(), cell.streams);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sequence.n_frames(), cell.frames as usize);
+            assert_eq!(x.sequence.n_detections(), y.sequence.n_detections());
+            for (fx, fy) in x.sequence.frames.iter().zip(&y.sequence.frames) {
+                assert_eq!(fx.detections.len(), fy.detections.len());
+                for (dx, dy) in fx.detections.iter().zip(&fy.detections) {
+                    assert_eq!(dx.bbox, dy.bbox);
+                }
+            }
+        }
+        // different streams of one cell are genuinely different
+        // footage (the per-stream name suffix seeds distinct RNG
+        // streams) — without this, multi-stream cells would just
+        // track N copies of the same video
+        assert_ne!(a[0].sequence.n_detections(), 0);
+        let differs = a[0].sequence.frames.iter().zip(&a[1].sequence.frames).any(|(x, y)| {
+            x.detections.len() != y.detections.len()
+                || x.detections.iter().zip(&y.detections).any(|(dx, dy)| dx.bbox != dy.bbox)
+        });
+        assert!(differs, "streams of one cell must not be identical footage");
+    }
+
+    #[test]
+    fn serial_cell_runs_end_to_end() {
+        let cell = Scenario {
+            engine: EngineKind::Native,
+            max_objects: 4,
+            det_prob: 0.95,
+            fp_rate: 0.05,
+            occlusion: true,
+            streams: 1,
+            frames: 40,
+            seed: 3,
+        };
+        let cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(1),
+            samples: 2,
+            min_sample_time: std::time::Duration::from_micros(100),
+        };
+        let r = cell.run(&cfg).expect("cell run");
+        assert_eq!(r.id, cell.id());
+        assert_eq!(r.total_frames, 40);
+        assert!(r.fps.median > 0.0);
+        assert!(r.quality.n_gt > 0);
+        assert!(r.quality.mota > 0.0, "MOTA {}", r.quality.mota);
+        #[cfg(feature = "counters")]
+        assert!(r.counters.total_calls > 0);
+    }
+
+    #[test]
+    fn service_cell_runs_end_to_end() {
+        let cell = Scenario {
+            engine: EngineKind::Batch,
+            max_objects: 4,
+            det_prob: 0.95,
+            fp_rate: 0.05,
+            occlusion: false,
+            streams: 3,
+            frames: 30,
+            seed: 5,
+        };
+        let cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(1),
+            samples: 2,
+            min_sample_time: std::time::Duration::from_micros(100),
+        };
+        let r = cell.run(&cfg).expect("cell run");
+        assert_eq!(r.streams, 3);
+        assert_eq!(r.total_frames, 90);
+        assert!(r.fps.median > 0.0);
+        assert!(r.quality.n_gt > 0);
+    }
+}

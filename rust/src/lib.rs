@@ -41,9 +41,14 @@
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
 //!   tracker-bank kernels (`artifacts/*.hlo.txt`) from Rust.
 //! * [`perfmodel`] — analytic hardware-counter model for Table III.
+//! * [`lab`] — the scenario lab: declarative perf+quality grids over
+//!   engines × densities × detector noise × occlusion × stream counts,
+//!   versioned JSON reports, and the baseline-vs-current regression
+//!   gate CI runs (`smalltrack lab run|compare|gate`).
 //! * [`benchkit`] / [`proptest_lite`] — offline-friendly measurement and
 //!   property-testing harnesses (criterion/proptest are not available in
-//!   the build sandbox).
+//!   the build sandbox); every bench target shares `benchkit`'s
+//!   `-- smoke` / `--json <path>` argument contract.
 //!
 //! ## Quickstart
 //!
@@ -70,6 +75,7 @@ pub mod benchkit;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod lab;
 pub mod linalg;
 pub mod perfmodel;
 pub mod prng;

@@ -8,6 +8,8 @@
 //!   scaling    strong/weak/throughput scaling (threads or processes)
 //!   simulate   calibrated multicore simulation (Table VI / Fig 4)
 //!   xla        track a sequence on the XLA tracker-bank path
+//!   lab        scenario lab: run a perf+quality grid, compare/gate
+//!              two JSON reports (the CI regression gate)
 //!
 //! Argument parsing is hand-rolled (`--key value` / `--flag`); the
 //! offline build environment has no clap.
@@ -29,7 +31,6 @@ use std::time::Instant;
 /// Parsed `--key value` arguments + positionals.
 struct Args {
     flags: HashMap<String, String>,
-    #[allow(dead_code)]
     positional: Vec<String>,
 }
 
@@ -95,6 +96,7 @@ fn main() -> Result<()> {
         "scaling" => cmd_scaling(&args),
         "simulate" => cmd_simulate(&args),
         "xla" => cmd_xla(&args),
+        "lab" => cmd_lab(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -123,6 +125,14 @@ COMMANDS
             [--shard-policy pinned|stealing] [--processes] [--replicas K] [--engine E]
   simulate  [--machine skx6140|clx8280] [--replicas K] [--seed N]
   xla       [--seed N] [--frames N]                 track via the XLA bank path
+  lab run     [--smoke] [--seed N] [--frames K] [--json PATH]
+                                                    measure the scenario grid
+                                                    (engines x density x detector
+                                                    noise x occlusion x streams)
+  lab compare BASE.json CUR.json [--margin M] [--mota-margin Q]
+                                                    print the delta table
+  lab gate    BASE.json CUR.json [--margin 2.0] [--mota-margin 0.1]
+                                                    same, exit 1 on regression
 
 ENGINES (--engine, default native; the spec form is self-contained)
   native    single-core structure-aware Sort (the paper's fast path)
@@ -522,6 +532,104 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `lab run | compare | gate` — the scenario lab and its CI gate.
+fn cmd_lab(args: &Args) -> Result<()> {
+    use smalltrack::benchkit::{BenchConfig, Table};
+    use smalltrack::lab::{compare, run_grid, GateConfig, LabReport, ScenarioAxes};
+    let sub = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("lab needs a subcommand: run | compare | gate")?;
+    match sub {
+        "run" => {
+            let smoke = args.has("smoke");
+            let mut axes = if smoke { ScenarioAxes::smoke() } else { ScenarioAxes::default_grid() };
+            axes.seed = args.num("seed", axes.seed)?;
+            axes.frames = args.num("frames", axes.frames)?;
+            let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
+            let report = run_grid(&axes, &cfg, smoke)?;
+            let mut table = Table::new(
+                &format!(
+                    "lab report — {} cells{}",
+                    report.cells.len(),
+                    if smoke { " (smoke)" } else { "" }
+                ),
+                &["cell", "fps (median)", "fps ±", "MOTA", "MOTP", "IDsw", "kernel calls"],
+            );
+            for c in &report.cells {
+                table.row(&[
+                    c.id.clone(),
+                    format!("{:.0}", c.fps.median),
+                    format!("{:.0}", c.fps.stddev),
+                    format!("{:.3}", c.quality.mota),
+                    format!("{:.3}", c.quality.motp),
+                    format!("{}", c.quality.id_switches),
+                    format!("{}", c.counters.total_calls),
+                ]);
+            }
+            table.print();
+            if let Some(path) = args.get("json") {
+                // the flag parser stores "true" for a valueless flag —
+                // a forgotten path must error, not write ./true
+                if path == "true" {
+                    bail!("--json requires a <path> argument");
+                }
+                report.save(std::path::Path::new(path))?;
+                println!("\nwrote lab report -> {path}");
+            }
+            Ok(())
+        }
+        "compare" | "gate" => {
+            let (base, cur) = match &args.positional[1..] {
+                [b, c] => (b.as_str(), c.as_str()),
+                _ => bail!("usage: lab {sub} BASE.json CUR.json [--margin M] [--mota-margin Q]"),
+            };
+            let gate = GateConfig {
+                fps_margin: args.num("margin", GateConfig::default().fps_margin)?,
+                mota_margin: args.num("mota-margin", GateConfig::default().mota_margin)?,
+            };
+            let b = LabReport::load(std::path::Path::new(base))?;
+            let c = LabReport::load(std::path::Path::new(cur))?;
+            if b.manifest.features != c.manifest.features {
+                println!(
+                    "note: reports come from different feature sets (base {:?}, current {:?}) — numbers are only advisorily comparable",
+                    b.manifest.features, c.manifest.features
+                );
+            }
+            // same-id cells from different seeds/sizes are different
+            // workloads: the tight quality margin would then compare
+            // apples to oranges, so say so up front
+            if (b.manifest.seed, b.manifest.frames, b.manifest.smoke)
+                != (c.manifest.seed, c.manifest.frames, c.manifest.smoke)
+            {
+                println!(
+                    "note: reports measured different workloads (base seed={} frames={} smoke={}, current seed={} frames={} smoke={}) — quality deltas are not meaningful",
+                    b.manifest.seed,
+                    b.manifest.frames,
+                    b.manifest.smoke,
+                    c.manifest.seed,
+                    c.manifest.frames,
+                    c.manifest.smoke
+                );
+            }
+            let cmp = compare(&b, &c, &gate);
+            cmp.table().print();
+            println!(
+                "\n{} (fps margin {:.2}x, MOTA margin {:.3})",
+                cmp.summary(),
+                gate.fps_margin,
+                gate.mota_margin
+            );
+            if sub == "gate" && !cmp.pass {
+                bail!("lab gate failed");
+            }
+            Ok(())
+        }
+        other => bail!("unknown lab subcommand '{other}' (run | compare | gate)"),
+    }
 }
 
 fn cmd_xla(args: &Args) -> Result<()> {

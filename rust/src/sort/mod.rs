@@ -40,7 +40,7 @@ pub use bbox::Bbox;
 pub use hungarian::hungarian_min_cost;
 pub use kalman::{KalmanState, SortConstants};
 pub use phases::{Phase, PhaseStats, PhaseTimer};
-pub use quality::{evaluate, evaluate_sort, MotMetrics};
+pub use quality::{evaluate, evaluate_engine, evaluate_sort, MotMetrics};
 pub use scratch::FrameScratch;
 pub use sort::{Sort, SortParams, Track};
 pub use tracker::KalmanBoxTracker;

@@ -72,6 +72,18 @@ impl MotMetrics {
         }
         self.tp as f64 / denom as f64
     }
+
+    /// Accumulate another sequence's counts into this one (multi-stream
+    /// aggregation: MOTA over the union is computed from summed counts,
+    /// exactly like the MOT benchmark's multi-sequence protocol).
+    pub fn merge(&mut self, other: &MotMetrics) {
+        self.n_gt += other.n_gt;
+        self.tp += other.tp;
+        self.fp += other.fp;
+        self.fn_ += other.fn_;
+        self.id_switches += other.id_switches;
+        self.iou_sum += other.iou_sum;
+    }
 }
 
 /// Evaluate a whole sequence (frames in order).
@@ -90,7 +102,7 @@ pub fn evaluate(frames: &[EvalFrame], iou_threshold: f64) -> MotMetrics {
                 }
             }
         }
-        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
         let mut gt_used = vec![false; f.gt.len()];
         let mut trk_used = vec![false; f.tracks.len()];
         let mut matched = 0u64;
@@ -118,14 +130,15 @@ pub fn evaluate(frames: &[EvalFrame], iou_threshold: f64) -> MotMetrics {
     m
 }
 
-/// Run SORT over a synthetic sequence and score it against its own
-/// ground truth (convenience for ablations and tests).
-pub fn evaluate_sort(
+/// Run any [`TrackerEngine`](crate::engine::TrackerEngine) over a
+/// synthetic sequence and score it against its own ground truth — the
+/// scenario lab's quality probe (every backend is scored through the
+/// identical loop).
+pub fn evaluate_engine(
     synth: &crate::data::synth::SynthSequence,
-    params: super::sort::SortParams,
+    engine: &mut dyn crate::engine::TrackerEngine,
     iou_threshold: f64,
 ) -> MotMetrics {
-    let mut sort = super::sort::Sort::new(params);
     let mut gt_by_frame: HashMap<u32, Vec<(u64, Bbox)>> = HashMap::new();
     for t in &synth.ground_truth {
         for (f, b) in &t.boxes {
@@ -137,13 +150,25 @@ pub fn evaluate_sort(
     for frame in &synth.sequence.frames {
         boxes.clear();
         boxes.extend(frame.detections.iter().map(|d| d.bbox));
-        let tracks: Vec<(u64, Bbox)> = sort.update(&boxes).iter().map(|t| (t.id, t.bbox)).collect();
+        let tracks: Vec<(u64, Bbox)> =
+            engine.update(&boxes).iter().map(|t| (t.id, t.bbox)).collect();
         frames.push(EvalFrame {
             gt: gt_by_frame.get(&frame.index).cloned().unwrap_or_default(),
             tracks,
         });
     }
     evaluate(&frames, iou_threshold)
+}
+
+/// Run SORT over a synthetic sequence and score it against its own
+/// ground truth (convenience for ablations and tests).
+pub fn evaluate_sort(
+    synth: &crate::data::synth::SynthSequence,
+    params: super::sort::SortParams,
+    iou_threshold: f64,
+) -> MotMetrics {
+    let mut sort = super::sort::Sort::new(params);
+    evaluate_engine(synth, &mut sort, iou_threshold)
 }
 
 #[cfg(test)]
@@ -210,6 +235,113 @@ mod tests {
         let m = evaluate(&[], 0.5);
         assert_eq!(m.mota(), 0.0);
         assert_eq!(m.motp(), 0.0);
+    }
+
+    #[test]
+    fn empty_gt_frames_count_only_false_positives() {
+        // nothing to track, tracker reports anyway: every box is FP,
+        // and the GT-normalized rates stay defined (no divide by zero)
+        let frames = vec![
+            EvalFrame { gt: vec![], tracks: vec![(7, b(0.0)), (8, b(50.0))] },
+            EvalFrame { gt: vec![], tracks: vec![(7, b(1.0))] },
+        ];
+        let m = evaluate(&frames, 0.5);
+        assert_eq!(m.n_gt, 0);
+        assert_eq!(m.tp, 0);
+        assert_eq!(m.fp, 3);
+        assert_eq!(m.fn_, 0);
+        assert_eq!(m.id_switches, 0);
+        assert_eq!(m.mota(), 0.0);
+        assert_eq!(m.recall(), 0.0);
+        assert_eq!(m.precision(), 0.0);
+    }
+
+    #[test]
+    fn empty_track_frames_count_only_misses() {
+        let frames = vec![
+            EvalFrame { gt: vec![(1, b(0.0)), (2, b(50.0))], tracks: vec![] },
+            EvalFrame { gt: vec![(1, b(1.0))], tracks: vec![] },
+        ];
+        let m = evaluate(&frames, 0.5);
+        assert_eq!(m.n_gt, 3);
+        assert_eq!(m.fn_, 3);
+        assert_eq!(m.tp, 0);
+        assert_eq!(m.fp, 0);
+        assert_eq!(m.mota(), 0.0); // 1 - 3/3
+        assert_eq!(m.motp(), 0.0); // no matches -> defined, zero
+    }
+
+    #[test]
+    fn id_switch_counted_across_a_gap() {
+        // CLEAR counts a switch when the identity's matched track id
+        // changes across an unmatched stretch (occlusion gap), not
+        // only between consecutive frames
+        let frames = vec![
+            EvalFrame { gt: vec![(1, b(0.0))], tracks: vec![(7, b(0.0))] },
+            EvalFrame { gt: vec![], tracks: vec![] }, // object occluded
+            EvalFrame { gt: vec![], tracks: vec![] },
+            EvalFrame { gt: vec![(1, b(3.0))], tracks: vec![(9, b(3.0))] }, // new id
+        ];
+        let m = evaluate(&frames, 0.5);
+        assert_eq!(m.id_switches, 1, "{m:?}");
+        // …and keeping the id across the gap is not a switch
+        let stable = vec![
+            EvalFrame { gt: vec![(1, b(0.0))], tracks: vec![(7, b(0.0))] },
+            EvalFrame { gt: vec![], tracks: vec![] },
+            EvalFrame { gt: vec![(1, b(2.0))], tracks: vec![(7, b(2.0))] },
+        ];
+        assert_eq!(evaluate(&stable, 0.5).id_switches, 0);
+    }
+
+    #[test]
+    fn known_answer_mota_fixture() {
+        // hand-counted: GT=6, TP=4, FN=2, FP=1, IDSW=1
+        //   frame 1: gt {1,2}, tracks {7 on 1} -> TP=1, FN=1
+        //   frame 2: gt {1,2}, tracks {7 on 1, 8 on 2, 9 ghost} -> TP=2, FP=1
+        //   frame 3: gt {1,2}, tracks {5 on 1} -> TP=1 (id 7->5: IDSW), FN=1
+        let frames = vec![
+            EvalFrame { gt: vec![(1, b(0.0)), (2, b(100.0))], tracks: vec![(7, b(0.0))] },
+            EvalFrame {
+                gt: vec![(1, b(1.0)), (2, b(101.0))],
+                tracks: vec![(7, b(1.0)), (8, b(101.0)), (9, b(500.0))],
+            },
+            EvalFrame { gt: vec![(1, b(2.0)), (2, b(102.0))], tracks: vec![(5, b(2.0))] },
+        ];
+        let m = evaluate(&frames, 0.5);
+        assert_eq!((m.n_gt, m.tp, m.fn_, m.fp, m.id_switches), (6, 4, 2, 1, 1));
+        // MOTA = 1 - (2 + 1 + 1)/6 = 1/3
+        assert!((m.mota() - 1.0 / 3.0).abs() < 1e-12, "{}", m.mota());
+        assert!((m.recall() - 4.0 / 6.0).abs() < 1e-12);
+        assert!((m.precision() - 4.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates_counts() {
+        let a = MotMetrics { n_gt: 10, tp: 8, fp: 1, fn_: 2, id_switches: 1, iou_sum: 6.0 };
+        let b = MotMetrics { n_gt: 5, tp: 5, fp: 0, fn_: 0, id_switches: 0, iou_sum: 4.5 };
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.n_gt, 15);
+        assert_eq!(m.tp, 13);
+        assert_eq!(m.fn_, 2);
+        // merged MOTA comes from summed counts: 1 - (2+1+1)/15
+        assert!((m.mota() - (1.0 - 4.0 / 15.0)).abs() < 1e-12);
+        assert!((m.motp() - 10.5 / 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evaluate_engine_matches_evaluate_sort_for_every_backend() {
+        use crate::data::synth::{generate_sequence, SynthConfig};
+        use crate::engine::EngineKind;
+        use crate::sort::SortParams;
+        let synth = generate_sequence(&SynthConfig::mot15("QE", 120, 6, 19));
+        let params = SortParams { timing: false, ..Default::default() };
+        let want = evaluate_sort(&synth, params, 0.5);
+        for kind in EngineKind::all(2) {
+            let mut engine = kind.build(params).expect("build");
+            let got = evaluate_engine(&synth, &mut *engine, 0.5);
+            assert_eq!(got, want, "engine {} diverged in quality", kind.label());
+        }
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Scenario-lab integration: the CLI `lab run → gate` path end to end,
+//! report schema round-trip through real files, gate pass/fail on
+//! synthetic deltas, determinism of scenario generation, and the
+//! checked-in CI baseline's consistency with the smoke grid.
+
+use smalltrack::lab::{LabReport, ScenarioAxes};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_smalltrack"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("smalltrack_lab_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Path to the checked-in floor baseline (tests run from the repo root).
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("bench_baseline.json")
+}
+
+#[test]
+fn checked_in_baseline_matches_the_smoke_grid() {
+    // the CI gate compares cells by id — if the smoke grid and the
+    // baseline drift apart, the gate would fail on MISSING cells, so
+    // pin their agreement here (regenerate the baseline when this
+    // fires: `cargo run --release -- lab run --smoke --json
+    // artifacts/bench_baseline.json`)
+    let base = LabReport::load(&baseline_path()).expect("baseline parses");
+    let want: Vec<String> = ScenarioAxes::smoke().cells().iter().map(|c| c.id()).collect();
+    let got: Vec<String> = base.cells.iter().map(|c| c.id.clone()).collect();
+    assert_eq!(got, want, "baseline cells drifted from ScenarioAxes::smoke()");
+    assert!(base.manifest.smoke);
+    assert_eq!(base.manifest.tool, "smalltrack-lab");
+}
+
+#[test]
+fn scenario_generation_is_deterministic() {
+    for cell in ScenarioAxes::smoke().cells() {
+        let a = cell.sequences();
+        let b = cell.sequences();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sequence.n_frames(), y.sequence.n_frames());
+            for (fx, fy) in x.sequence.frames.iter().zip(&y.sequence.frames) {
+                assert_eq!(fx.detections.len(), fy.detections.len(), "{}", cell.id());
+                for (dx, dy) in fx.detections.iter().zip(&fy.detections) {
+                    assert_eq!(dx.bbox, dy.bbox, "{}", cell.id());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lab_run_smoke_emits_schema_valid_report_and_gates_against_baseline() {
+    let dir = tmpdir("run");
+    let out = dir.join("bench_smoke.json");
+
+    // --- lab run --smoke --json <path>
+    let run = bin()
+        .args(["lab", "run", "--smoke", "--json"])
+        .arg(&out)
+        .output()
+        .expect("spawn lab run");
+    assert!(run.status.success(), "lab run failed: {}", String::from_utf8_lossy(&run.stderr));
+    let report = LabReport::load(&out).expect("schema-valid report");
+
+    // manifest + one cell per smoke scenario, in grid order
+    assert!(report.manifest.smoke);
+    let want: Vec<String> = ScenarioAxes::smoke().cells().iter().map(|c| c.id()).collect();
+    let got: Vec<String> = report.cells.iter().map(|c| c.id.clone()).collect();
+    assert_eq!(got, want);
+    assert!(report.manifest.features.iter().any(|(k, _)| k == "counters"));
+
+    for c in &report.cells {
+        assert!(c.fps.median > 0.0, "{}: no throughput measured", c.id);
+        assert!(c.quality.n_gt > 0, "{}: no ground truth scored", c.id);
+        assert!(c.quality.mota > 0.05, "{}: implausible MOTA {}", c.id, c.quality.mota);
+        assert_eq!(c.total_frames, c.frames * c.streams as u64);
+        #[cfg(feature = "counters")]
+        assert!(c.counters.total_calls > 0, "{}: no kernels counted", c.id);
+    }
+
+    // --- lab gate <checked-in baseline> <fresh run> passes (floor
+    // baseline: any healthy build clears it at the default margins)
+    let gate = bin()
+        .args(["lab", "gate"])
+        .arg(baseline_path())
+        .arg(&out)
+        .output()
+        .expect("spawn lab gate");
+    let stdout = String::from_utf8_lossy(&gate.stdout);
+    assert!(
+        gate.status.success(),
+        "gate failed against the floor baseline:\n{stdout}\n{}",
+        String::from_utf8_lossy(&gate.stderr)
+    );
+    assert!(stdout.contains("GATE PASS"), "{stdout}");
+
+    // --- lab compare prints the same table without gating
+    let cmp = bin()
+        .args(["lab", "compare"])
+        .arg(baseline_path())
+        .arg(&out)
+        .output()
+        .expect("spawn lab compare");
+    assert!(cmp.status.success());
+    assert!(String::from_utf8_lossy(&cmp.stdout).contains("lab compare"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Doctor one cell of the baseline and check the gate's verdicts on
+/// the synthetic delta.
+fn doctored(name: &str, mutate: impl Fn(&mut LabReport)) -> (PathBuf, PathBuf, PathBuf) {
+    let dir = tmpdir(name);
+    let base = LabReport::load(&baseline_path()).unwrap();
+    let mut cur = base.clone();
+    mutate(&mut cur);
+    let base_path = dir.join("base.json");
+    let cur_path = dir.join("cur.json");
+    base.save(&base_path).unwrap();
+    cur.save(&cur_path).unwrap();
+    (dir, base_path, cur_path)
+}
+
+fn run_gate(base: &Path, cur: &Path, extra: &[&str]) -> (bool, String) {
+    let out = bin()
+        .args(["lab", "gate"])
+        .arg(base)
+        .arg(cur)
+        .args(extra)
+        .output()
+        .expect("spawn lab gate");
+    (out.status.success(), String::from_utf8_lossy(&out.stdout).into_owned())
+}
+
+#[test]
+fn gate_fails_on_synthetic_fps_regression_and_margin_loosens_it() {
+    let (dir, base, cur) = doctored("fps", |r| {
+        // 10x slower than baseline in one cell
+        r.cells[0].fps.median /= 10.0;
+    });
+    let (ok, stdout) = run_gate(&base, &cur, &[]);
+    assert!(!ok, "10x fps drop must fail the default 2x margin:\n{stdout}");
+    assert!(stdout.contains("FPS REGRESSED"), "{stdout}");
+    // a margin wider than the regression passes
+    let (ok_loose, _) = run_gate(&base, &cur, &["--margin", "20.0"]);
+    assert!(ok_loose);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gate_fails_on_synthetic_quality_regression() {
+    let (dir, base, cur) = doctored("mota", |r| {
+        r.cells[1].quality.mota -= 0.5;
+    });
+    let (ok, stdout) = run_gate(&base, &cur, &[]);
+    assert!(!ok, "0.5 MOTA drop must fail the default 0.1 margin:\n{stdout}");
+    assert!(stdout.contains("MOTA REGRESSED"), "{stdout}");
+    let (ok_loose, _) = run_gate(&base, &cur, &["--mota-margin", "0.9"]);
+    assert!(ok_loose);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gate_fails_on_missing_cell_but_tolerates_new_cells() {
+    let (dir, base, cur) = doctored("cover", |r| {
+        let mut extra = r.cells[0].clone();
+        extra.id = "native-d99-extra-s1".into();
+        r.cells.push(extra);
+        r.cells.remove(1);
+    });
+    let (ok, stdout) = run_gate(&base, &cur, &[]);
+    assert!(!ok, "a dropped scenario is a coverage regression:\n{stdout}");
+    assert!(stdout.contains("MISSING"), "{stdout}");
+    assert!(stdout.contains("new"), "{stdout}");
+
+    // additions alone pass
+    let (dir2, base2, cur2) = doctored("cover2", |r| {
+        let mut extra = r.cells[0].clone();
+        extra.id = "native-d99-extra-s1".into();
+        r.cells.push(extra);
+    });
+    let (ok2, stdout2) = run_gate(&base2, &cur2, &[]);
+    assert!(ok2, "{stdout2}");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+#[test]
+fn gate_rejects_malformed_and_mismatched_schema_files() {
+    let dir = tmpdir("bad");
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{\"schema\": 99, \"kind\": \"lab\"}").unwrap();
+    let out = bin()
+        .args(["lab", "gate"])
+        .arg(baseline_path())
+        .arg(&bad)
+        .output()
+        .expect("spawn lab gate");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("schema"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
