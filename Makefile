@@ -2,7 +2,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts test test-nocounters bench fmt clippy lab-smoke lab-baseline
+.PHONY: artifacts test test-nocounters bench bench-lanes fmt clippy lab-smoke lab-baseline
 
 # Lower the JAX/Pallas tracker-bank graphs to HLO text + export the
 # golden parity/track JSONs and the manifest (requires python with jax;
@@ -20,6 +20,12 @@ test-nocounters:
 
 bench:
 	cargo bench
+
+# Lane-width x precision ablation (scalar/4-wide/8-wide, f64/f32) —
+# the second table of batch_vs_native, which also gates every f64 lane
+# width bitwise against the native engine before timing.
+bench-lanes:
+	cargo bench --bench batch_vs_native
 
 # The CI perf path: smoke grid -> JSON -> gate vs the checked-in floor
 # baseline (see README "Performance tracking").

@@ -11,15 +11,21 @@
 //! `--no-default-features` to remove the instrumentation entirely —
 //! the residual "off" tax below is the branch the feature deletes.)
 //!
+//! A second table ablates the batch engine's execution knobs: lane
+//! width (scalar / 4-wide / 8-wide blocks) × precision tier (f64 /
+//! f32), against the scalar-f64 row as reference. Every f64 row is
+//! gated bitwise against the native engine before any timing — lane
+//! width is a pure execution detail and must never move a bit.
+//!
 //! Run modes: `cargo bench --bench batch_vs_native` (full), or append
 //! `smoke` (CI) for a seconds-long pass with the same table shape;
 //! `--json <path>` writes the table as a machine-readable report.
 
 use smalltrack::benchkit::{bench, fmt_duration, BenchArgs, BenchConfig, BenchReport, Table};
-use smalltrack::data::synth::{generate_sequence, SynthConfig};
+use smalltrack::data::synth::{generate_sequence, SynthConfig, SynthSequence};
 use smalltrack::engine::{run_sequence, EngineKind, TrackerEngine};
-use smalltrack::linalg::set_counters_enabled;
-use smalltrack::sort::SortParams;
+use smalltrack::linalg::{set_counters_enabled, LaneWidth, Precision};
+use smalltrack::sort::{BatchSort, SortParams};
 
 fn main() {
     let args = BenchArgs::from_env();
@@ -104,8 +110,100 @@ fn main() {
     }
     table.print();
     report.add_table(&table);
+
+    // --- lane-width × precision ablation ---------------------------
+    let n_obj: u32 = if smoke { 8 } else { 32 };
+    let synth =
+        generate_sequence(&SynthConfig::mot15(&format!("LANES-{n_obj}"), frames, n_obj, 21));
+
+    // equality gate before any timing: the f64 tier must be
+    // byte-identical to native at EVERY lane width on this workload
+    let native_rows = {
+        let mut native = EngineKind::Native.build(params).expect("native");
+        collect_rows(&mut *native, &synth)
+    };
+    for width in LaneWidth::ALL {
+        let mut e = BatchSort::<f64>::with_lane_width(params, width);
+        let rows = collect_rows(&mut e, &synth);
+        assert_eq!(
+            rows,
+            native_rows,
+            "f64 lanes ({}) diverged from native — lane width moved a bit",
+            width.label()
+        );
+    }
+
+    set_counters_enabled(true);
+    let mut lanes_table = Table::new(
+        &format!(
+            "lane-width × precision ablation — {n_obj} objects, {frames}-frame single stream{}",
+            if smoke { " (smoke mode)" } else { "" }
+        ),
+        &["precision", "lanes", "time/frame", "fps", "vs scalar-f64", "tracks"],
+    );
+    let mut scalar_f64 = 0.0f64;
+    for width in LaneWidth::ALL {
+        time_width::<f64>(&synth, &cfg, params, width, &mut lanes_table, &mut scalar_f64);
+    }
+    for width in LaneWidth::ALL {
+        time_width::<f32>(&synth, &cfg, params, width, &mut lanes_table, &mut scalar_f64);
+    }
+    lanes_table.print();
+    report.add_table(&lanes_table);
+
     report.finish().unwrap();
     println!("\n'vs native' < 1.00x = the SoA lanes + one-record-per-frame win;");
     println!("'off' rows show the runtime counter tax (compile-time removal:");
     println!("cargo bench --no-default-features removes even the off-branch).");
+    println!("ablation: 'vs scalar-f64' < 1.00x = the explicit lane blocks win;");
+    println!("f32 rows ride twice the lane width at half the state traffic.");
+}
+
+/// One engine pass over a sequence, recording every emitted track as
+/// comparable bits (frame, id, box-bit-pattern).
+fn collect_rows(engine: &mut dyn TrackerEngine, synth: &SynthSequence) -> Vec<(u32, u64, [u64; 4])> {
+    let mut rows = Vec::new();
+    let mut boxes = Vec::new();
+    for frame in &synth.sequence.frames {
+        boxes.clear();
+        boxes.extend(frame.detections.iter().map(|d| d.bbox));
+        for t in engine.update(&boxes) {
+            rows.push((frame.index, t.id, t.bbox.to_array().map(f64::to_bits)));
+        }
+    }
+    rows
+}
+
+/// Time one (precision, lane-width) cell of the ablation; the first
+/// cell timed (scalar f64) becomes the reference ratio.
+fn time_width<P: Precision>(
+    synth: &SynthSequence,
+    cfg: &BenchConfig,
+    params: SortParams,
+    width: LaneWidth,
+    table: &mut Table,
+    scalar_f64: &mut f64,
+) where
+    BatchSort<P>: TrackerEngine,
+{
+    let n_frames = synth.sequence.n_frames() as u64;
+    let mut engine = BatchSort::<P>::with_lane_width(params, width);
+    let mut tracks = 0u64;
+    let label = format!("{}-{}", P::TIER.label(), width.label());
+    let m = bench(&label, cfg, n_frames, || {
+        engine.reset();
+        tracks = run_sequence(&mut engine, &synth.sequence).1;
+    });
+    let per_frame = m.median() / n_frames as f64;
+    if *scalar_f64 == 0.0 {
+        *scalar_f64 = per_frame;
+    }
+    table.row(&[
+        P::TIER.label().to_string(),
+        width.label().to_string(),
+        fmt_duration(per_frame),
+        format!("{:.0}", m.rate()),
+        format!("{:.2}x", per_frame / *scalar_f64),
+        format!("{tracks}"),
+    ]);
 }

@@ -1,14 +1,20 @@
 //! `TrackerEngine` — the one abstraction every tracker backend sits
 //! behind.
 //!
-//! The repo grew four tracker implementations with identical semantics
-//! but different execution strategies:
+//! The repo grew five tracker backends with identical semantics but
+//! different execution strategies (and, for one, a different numeric
+//! tier):
 //!
 //! * [`Sort`] (`native`) — the single-core structure-aware pipeline,
 //!   the paper's "well-optimized serial C" analog;
 //! * [`BatchSort`] (`batch`) — the same math over structure-of-arrays
-//!   lanes: fused predict/update loops over all trackers at once, one
-//!   counter event per frame, zero steady-state allocation;
+//!   lanes swept by explicit SIMD lane kernels, one counter event per
+//!   frame, zero steady-state allocation, bit-identical to `native`;
+//! * [`BatchSortF32`] (`batchf32`) — the batch engine's f32 precision
+//!   tier: ~half the state traffic and twice the lane width, guarded
+//!   by per-tracker f64 re-linearization on large innovation
+//!   residuals (approximate, not bit-identical — see
+//!   [`crate::linalg::lanes`]);
 //! * [`ParallelSort`] (`strong`) — intra-frame fork-join parallelism,
 //!   the paper's (losing) OpenMP strong-scaling port;
 //! * [`TrackerBank`] (`xla`) — fixed-slot state arrays with the dense
@@ -20,12 +26,13 @@
 //! constructed inline. Adding a backend (GPU, simulator-driven) means
 //! implementing four methods and one enum arm.
 //!
-//! Equivalence between all four engines on shared inputs is pinned by
-//! `rust/tests/integration_engines.rs`.
+//! Equivalence between the f64 engines on shared inputs is pinned by
+//! `rust/tests/integration_engines.rs` (the f32 tier is pinned there
+//! too, to determinism and loose agreement rather than equality).
 
 use crate::coordinator::strong::ParallelSort;
 use crate::runtime::{TrackerBank, XlaRuntime};
-use crate::sort::{BatchSort, Bbox, PhaseTimer, Sort, SortParams, Track};
+use crate::sort::{BatchSort, BatchSortF32, Bbox, PhaseTimer, Sort, SortParams, Track};
 
 /// A multi-object tracker backend for one video stream.
 ///
@@ -68,7 +75,8 @@ pub trait TrackerEngine: Send {
     /// buffers, so a worker can reuse one engine across streams.
     fn reset(&mut self);
 
-    /// Stable backend name (`native` | `batch` | `strong` | `xla`).
+    /// Stable backend name (`native` | `batch` | `batchf32` |
+    /// `strong` | `xla`).
     fn name(&self) -> &'static str;
 }
 
@@ -113,6 +121,28 @@ impl TrackerEngine for BatchSort {
 
     fn name(&self) -> &'static str {
         "batch"
+    }
+}
+
+impl TrackerEngine for BatchSortF32 {
+    fn update(&mut self, dets: &[Bbox]) -> &[Track] {
+        BatchSortF32::update(self, dets)
+    }
+
+    fn n_trackers(&self) -> usize {
+        BatchSortF32::n_trackers(self)
+    }
+
+    fn phases(&self) -> Option<&PhaseTimer> {
+        Some(&self.phases)
+    }
+
+    fn reset(&mut self) {
+        BatchSortF32::reset(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "batchf32"
     }
 }
 
@@ -172,9 +202,14 @@ impl TrackerEngine for TrackerBank {
 pub enum EngineKind {
     /// Single-core structure-aware `Sort`.
     Native,
-    /// Batched SoA `BatchSort` (fused per-frame loops over all
-    /// trackers, zero steady-state allocation).
+    /// Batched SoA `BatchSort` (explicit SIMD lane sweeps over all
+    /// trackers, zero steady-state allocation, bit-identical to
+    /// `Native`).
     Batch,
+    /// The batch engine's opt-in f32 precision tier (`BatchSortF32`):
+    /// faster and half the state traffic, approximate rather than
+    /// bit-identical, with residual-gated per-tracker f64 fallback.
+    BatchF32,
     /// Intra-frame fork-join `ParallelSort` with `threads` threads.
     Strong {
         /// Fork-join width per frame.
@@ -188,7 +223,7 @@ impl std::str::FromStr for EngineKind {
     type Err = anyhow::Error;
 
     /// Parse a self-contained engine spec: `native` | `batch` |
-    /// `strong[:N]` | `xla`, where `N` is the strong backend's
+    /// `batchf32` | `strong[:N]` | `xla`, where `N` is the strong backend's
     /// fork-join width (`strong` alone defaults to 2, matching the
     /// historical CLI default; widths below 1 clamp to 1).
     ///
@@ -204,6 +239,7 @@ impl std::str::FromStr for EngineKind {
         match (name, arg) {
             ("native", None) => Ok(EngineKind::Native),
             ("batch", None) => Ok(EngineKind::Batch),
+            ("batchf32", None) => Ok(EngineKind::BatchF32),
             ("xla", None) => Ok(EngineKind::Xla),
             ("strong", None) => Ok(EngineKind::Strong { threads: 2 }),
             ("strong", Some(n)) => {
@@ -213,7 +249,7 @@ impl std::str::FromStr for EngineKind {
                 Ok(EngineKind::Strong { threads: threads.max(1) })
             }
             _ => anyhow::bail!(
-                "unknown engine spec '{spec}' (expected native|batch|strong[:N]|xla)"
+                "unknown engine spec '{spec}' (expected native|batch|batchf32|strong[:N]|xla)"
             ),
         }
     }
@@ -242,13 +278,15 @@ impl EngineKind {
         match self {
             EngineKind::Native => "native",
             EngineKind::Batch => "batch",
+            EngineKind::BatchF32 => "batchf32",
             EngineKind::Strong { .. } => "strong",
             EngineKind::Xla => "xla",
         }
     }
 
     /// Self-contained spec string that round-trips through
-    /// [`std::str::FromStr`]: `native` | `batch` | `strong:N` | `xla`.
+    /// [`std::str::FromStr`]: `native` | `batch` | `batchf32` |
+    /// `strong:N` | `xla`.
     pub fn spec(&self) -> String {
         match self {
             EngineKind::Strong { threads } => format!("strong:{threads}"),
@@ -266,7 +304,8 @@ impl EngineKind {
     pub fn build(&self, params: SortParams) -> crate::Result<Box<dyn TrackerEngine>> {
         Ok(match self {
             EngineKind::Native => Box::new(Sort::new(params)),
-            EngineKind::Batch => Box::new(BatchSort::new(params)),
+            EngineKind::Batch => Box::new(BatchSort::<f64>::new(params)),
+            EngineKind::BatchF32 => Box::new(BatchSortF32::new(params)),
             EngineKind::Strong { threads } => Box::new(ParallelSort::new(params, *threads)),
             EngineKind::Xla => Box::new(TrackerBank::new(&XlaRuntime::new()?, params)?),
         })
@@ -285,11 +324,27 @@ impl EngineKind {
         }
     }
 
-    /// All four kinds (test/bench sweeps).
+    /// The four f64 kinds (test/bench equivalence sweeps — every one
+    /// of these must emit identical tracks on shared inputs; the
+    /// approximate f32 tier is deliberately excluded, see
+    /// [`Self::all_tiers`]).
     pub fn all(threads: usize) -> [EngineKind; 4] {
         [
             EngineKind::Native,
             EngineKind::Batch,
+            EngineKind::Strong { threads },
+            EngineKind::Xla,
+        ]
+    }
+
+    /// Every backend including the approximate f32 tier — for sweeps
+    /// that only need each engine to be self-consistent (build, track,
+    /// reset-reproducibility), not cross-engine identical.
+    pub fn all_tiers(threads: usize) -> [EngineKind; 5] {
+        [
+            EngineKind::Native,
+            EngineKind::Batch,
+            EngineKind::BatchF32,
             EngineKind::Strong { threads },
             EngineKind::Xla,
         ]
@@ -327,6 +382,7 @@ mod tests {
         // the legacy two-arg form keeps parsing unchanged
         assert_eq!(EngineKind::parse("native", 4).unwrap(), EngineKind::Native);
         assert_eq!(EngineKind::parse("batch", 4).unwrap(), EngineKind::Batch);
+        assert_eq!(EngineKind::parse("batchf32", 4).unwrap(), EngineKind::BatchF32);
         assert_eq!(EngineKind::parse("strong", 4).unwrap(), EngineKind::Strong { threads: 4 });
         assert_eq!(EngineKind::parse("strong", 0).unwrap(), EngineKind::Strong { threads: 1 });
         assert_eq!(EngineKind::parse("xla", 1).unwrap(), EngineKind::Xla);
@@ -337,6 +393,7 @@ mod tests {
     fn from_str_specs_are_self_contained() {
         assert_eq!("native".parse::<EngineKind>().unwrap(), EngineKind::Native);
         assert_eq!("batch".parse::<EngineKind>().unwrap(), EngineKind::Batch);
+        assert_eq!("batchf32".parse::<EngineKind>().unwrap(), EngineKind::BatchF32);
         assert_eq!("xla".parse::<EngineKind>().unwrap(), EngineKind::Xla);
         assert_eq!("strong:8".parse::<EngineKind>().unwrap(), EngineKind::Strong { threads: 8 });
         assert_eq!("strong:0".parse::<EngineKind>().unwrap(), EngineKind::Strong { threads: 1 });
@@ -346,14 +403,16 @@ mod tests {
 
     #[test]
     fn from_str_rejects_malformed_specs() {
-        for bad in ["gpu", "strong:x", "strong:", "strong:4:2", "native:2", "batch:8", ""] {
+        for bad in
+            ["gpu", "strong:x", "strong:", "strong:4:2", "native:2", "batch:8", "batchf32:2", ""]
+        {
             assert!(bad.parse::<EngineKind>().is_err(), "spec '{bad}' must be rejected");
         }
     }
 
     #[test]
     fn spec_round_trips_through_from_str() {
-        for kind in EngineKind::all(8) {
+        for kind in EngineKind::all_tiers(8) {
             let spec = kind.spec();
             assert_eq!(spec.parse::<EngineKind>().unwrap(), kind, "spec '{spec}'");
         }
@@ -380,9 +439,18 @@ mod tests {
     }
 
     #[test]
+    fn batchf32_engine_exposes_phases_and_its_own_name() {
+        let mut e = EngineKind::BatchF32.build(SortParams::default()).unwrap();
+        assert_eq!(e.name(), "batchf32");
+        e.update(&[Bbox::new(0.0, 0.0, 10.0, 20.0)]);
+        let phases = e.phases().expect("batchf32 collects phases");
+        assert_eq!(phases.get(crate::sort::Phase::Predict).count, 1);
+    }
+
+    #[test]
     fn every_kind_builds_and_tracks() {
         let synth = generate_sequence(&SynthConfig::mot15("ENG", 40, 5, 3));
-        for kind in EngineKind::all(2) {
+        for kind in EngineKind::all_tiers(2) {
             let mut e = kind.build(params()).expect("build");
             assert_eq!(e.name(), kind.label());
             let (frames, tracks) = run_sequence(&mut *e, &synth.sequence);
@@ -397,7 +465,7 @@ mod tests {
     #[test]
     fn reset_restarts_ids() {
         let synth = generate_sequence(&SynthConfig::mot15("RST", 30, 4, 9));
-        for kind in EngineKind::all(2) {
+        for kind in EngineKind::all_tiers(2) {
             let mut e = kind.build(params()).expect("build");
             let (_, first) = run_sequence(&mut *e, &synth.sequence);
             e.reset();

@@ -11,6 +11,12 @@
 //! Coverage is part of the contract: a baseline cell missing from the
 //! current report fails the gate (a deleted scenario is a silent
 //! regression), while current-only cells are reported as new and pass.
+//!
+//! The precision axis has its own bound: every `batchf32-*` cell in
+//! the **current** report is paired with its `batch-*` sibling (same
+//! scenario, f64 tier) and fails when its MOTA trails the sibling by
+//! more than [`GateConfig::f32_mota_delta`] — the reduced-precision
+//! tier is allowed to be approximate, not to change tracking behavior.
 
 use crate::benchkit::Table;
 
@@ -24,11 +30,15 @@ pub struct GateConfig {
     pub fps_margin: f64,
     /// Absolute MOTA margin: fail when `cur_mota < base_mota - mota_margin`.
     pub mota_margin: f64,
+    /// Precision-tier bound: a current `batchf32-*` cell fails when
+    /// its MOTA trails its `batch-*` sibling's (same current report)
+    /// by more than this.
+    pub f32_mota_delta: f64,
 }
 
 impl Default for GateConfig {
     fn default() -> Self {
-        GateConfig { fps_margin: 2.0, mota_margin: 0.1 }
+        GateConfig { fps_margin: 2.0, mota_margin: 0.1, f32_mota_delta: 0.05 }
     }
 }
 
@@ -43,6 +53,9 @@ pub enum CellStatus {
     QualityRegressed,
     /// Cell exists in the baseline but not in the current report.
     Missing,
+    /// An f32-tier cell trails its f64 sibling's MOTA by more than
+    /// `f32_mota_delta` in the current report.
+    PrecisionGap,
     /// Cell exists only in the current report (informational).
     New,
 }
@@ -55,6 +68,7 @@ impl CellStatus {
             CellStatus::FpsRegressed => "FPS REGRESSED",
             CellStatus::QualityRegressed => "MOTA REGRESSED",
             CellStatus::Missing => "MISSING",
+            CellStatus::PrecisionGap => "F32 MOTA GAP",
             CellStatus::New => "new",
         }
     }
@@ -63,7 +77,10 @@ impl CellStatus {
     pub fn fails(&self) -> bool {
         matches!(
             self,
-            CellStatus::FpsRegressed | CellStatus::QualityRegressed | CellStatus::Missing
+            CellStatus::FpsRegressed
+                | CellStatus::QualityRegressed
+                | CellStatus::Missing
+                | CellStatus::PrecisionGap
         )
     }
 }
@@ -193,6 +210,21 @@ pub fn compare(base: &LabReport, cur: &LabReport, gate: &GateConfig) -> Comparis
                 mota_delta: c.quality.mota,
                 status: CellStatus::New,
             });
+        }
+    }
+    // precision-tier bound: each current f32 cell vs its f64 sibling
+    // *in the current report* (a property of this build, not a delta
+    // vs the baseline — so it applies to new cells too); a cell that
+    // already fails keeps its more specific status
+    for c in &cur.cells {
+        let Some(rest) = c.id.strip_prefix("batchf32-") else { continue };
+        let Some(sibling) = cur.cell(&format!("batch-{rest}")) else { continue };
+        if c.quality.mota < sibling.quality.mota - gate.f32_mota_delta {
+            if let Some(d) = cells.iter_mut().find(|d| d.id == c.id) {
+                if !d.status.fails() {
+                    d.status = CellStatus::PrecisionGap;
+                }
+            }
         }
     }
     let pass = cells.iter().all(|c| !c.status.fails());
@@ -330,6 +362,43 @@ mod tests {
         // and the table renders it as "-"
         let t = cmp.table();
         let _ = t; // rendering is exercised via print in the CLI path
+    }
+
+    #[test]
+    fn f32_tier_trailing_its_sibling_fails_the_gate() {
+        let base =
+            report_with(vec![("batch-d5-occ-s1", 1000.0, 0.60), ("batchf32-d5-occ-s1", 1500.0, 0.58)]);
+        // within the default 0.05 delta -> pass
+        assert!(compare(&base, &base, &GateConfig::default()).pass);
+        // f32 MOTA drops 0.10 below the f64 sibling -> fail, even
+        // though the vs-baseline mota_margin (0.1) alone would pass it
+        let gapped =
+            report_with(vec![("batch-d5-occ-s1", 1000.0, 0.60), ("batchf32-d5-occ-s1", 1500.0, 0.50)]);
+        let cmp = compare(&base, &gapped, &GateConfig::default());
+        assert!(!cmp.pass);
+        let f32_cell = cmp.cells.iter().find(|c| c.id.starts_with("batchf32")).unwrap();
+        assert_eq!(f32_cell.status, CellStatus::PrecisionGap);
+        assert!(f32_cell.status.fails());
+        assert_eq!(f32_cell.status.label(), "F32 MOTA GAP");
+        // a looser delta admits the same gap
+        let loose = GateConfig { f32_mota_delta: 0.2, ..GateConfig::default() };
+        assert!(compare(&base, &gapped, &loose).pass);
+    }
+
+    #[test]
+    fn f32_gap_applies_to_new_cells_and_needs_a_sibling() {
+        // baseline predates the f32 tier: the f32 cell is "new", but
+        // the precision bound still applies within the current report
+        let base = report_with(vec![("batch-x", 1000.0, 0.60)]);
+        let gapped = report_with(vec![("batch-x", 1000.0, 0.60), ("batchf32-x", 1500.0, 0.40)]);
+        let cmp = compare(&base, &gapped, &GateConfig::default());
+        assert!(!cmp.pass, "a gapped new f32 cell must fail");
+        // without a batch- sibling in the current report there is
+        // nothing to pair against: stays informational
+        let orphan = report_with(vec![("batchf32-x", 1500.0, 0.10)]);
+        let cmp = compare(&report_with(vec![]), &orphan, &GateConfig::default());
+        assert!(cmp.pass);
+        assert_eq!(cmp.cells[0].status, CellStatus::New);
     }
 
     #[test]

@@ -55,15 +55,17 @@ pub struct ScenarioAxes {
 }
 
 impl ScenarioAxes {
-    /// The default full grid: both production engines plus the two
-    /// comparison backends, light and crowded scenes, clean and noisy
-    /// detectors, with and without occlusion stress, serial and
-    /// 4-stream serving. 64 cells — minutes, not hours.
+    /// The default full grid: both production engines, the f32
+    /// precision tier, and the two comparison backends, light and
+    /// crowded scenes, clean and noisy detectors, with and without
+    /// occlusion stress, serial and 4-stream serving. 80 cells —
+    /// minutes, not hours.
     pub fn default_grid() -> Self {
         ScenarioAxes {
             engines: vec![
                 EngineKind::Native,
                 EngineKind::Batch,
+                EngineKind::BatchF32,
                 EngineKind::Strong { threads: 2 },
                 EngineKind::Xla,
             ],
@@ -77,13 +79,15 @@ impl ScenarioAxes {
         }
     }
 
-    /// The CI smoke grid: 4 cells, seconds-long, exercising both
-    /// production engines, the occlusion/crossing stress path and both
-    /// the serial and the session-serving runners. This is the grid the
-    /// checked-in `artifacts/bench_baseline.json` pins.
+    /// The CI smoke grid: 6 cells, seconds-long, exercising both
+    /// production engines plus the f32 precision tier (so the
+    /// precision axis and its MOTA-delta gate run on every CI push),
+    /// the occlusion/crossing stress path and both the serial and the
+    /// session-serving runners. This is the grid the checked-in
+    /// `artifacts/bench_baseline.json` pins.
     pub fn smoke() -> Self {
         ScenarioAxes {
-            engines: vec![EngineKind::Native, EngineKind::Batch],
+            engines: vec![EngineKind::Native, EngineKind::Batch, EngineKind::BatchF32],
             densities: vec![5],
             det_probs: vec![0.9],
             fp_rates: vec![0.05],
@@ -291,6 +295,8 @@ mod tests {
                 "native-d5-dp90-fp5-occ-s4",
                 "batch-d5-dp90-fp5-occ-s1",
                 "batch-d5-dp90-fp5-occ-s4",
+                "batchf32-d5-dp90-fp5-occ-s1",
+                "batchf32-d5-dp90-fp5-occ-s4",
             ]
         );
     }
@@ -300,7 +306,7 @@ mod tests {
         let a = ScenarioAxes::default_grid().cells();
         let b = ScenarioAxes::default_grid().cells();
         assert_eq!(a, b);
-        assert_eq!(a.len(), 64);
+        assert_eq!(a.len(), 80);
         // ids are unique (they are the compare keys)
         let mut ids: Vec<String> = a.iter().map(|c| c.id()).collect();
         ids.sort();

@@ -112,6 +112,109 @@ pub fn chol_inverse_raw<const N: usize>(a: &Mat<N, N>) -> Option<Mat<N, N>> {
     Some(inv)
 }
 
+/// Lane-parallel 4×4 Cholesky factorization: `W` independent SPD
+/// matrices at once, one per lane, in either precision tier.
+///
+/// `a` holds the matrices as element-major lane blocks (`a[r*4+c][w]`
+/// is element `(r,c)` of lane `w`'s matrix). Per lane the operation
+/// sequence is exactly [`cholesky_raw`], so the `f64` instantiation
+/// factors each lane bit-identically to the scalar kernel; the `f32`
+/// instantiation is the reduced-precision tier's variant.
+///
+/// Instead of early-returning on a bad pivot (which would abandon the
+/// healthy lanes sharing the block), a failed lane clears its `ok`
+/// flag and keeps computing — its factor is garbage (NaN/inf) that
+/// callers must discard, matching the native `None` semantics per
+/// lane. Lanes entering with `ok[w] == false` stay failed.
+pub fn cholesky4_lanes<P: crate::linalg::lanes::Precision, const W: usize>(
+    a: &[[P; W]; 16],
+    ok: &mut [bool; W],
+) -> [[P; W]; 16] {
+    let mut l = [[P::ZERO; W]; 16];
+    for i in 0..4 {
+        for j in 0..=i {
+            let mut sum = a[i * 4 + j];
+            for k in 0..j {
+                for w in 0..W {
+                    sum[w] -= l[i * 4 + k][w] * l[j * 4 + k][w];
+                }
+            }
+            if i == j {
+                for w in 0..W {
+                    if sum[w] <= P::ZERO || !sum[w].is_finite() {
+                        ok[w] = false;
+                    }
+                    l[i * 4 + i][w] = sum[w].sqrt();
+                }
+            } else {
+                for w in 0..W {
+                    l[i * 4 + j][w] = sum[w] / l[j * 4 + j][w];
+                }
+            }
+        }
+    }
+    l
+}
+
+/// Lane-parallel forward/backward substitution against a
+/// [`cholesky4_lanes`] factor: solves `L L^T x = b` per lane, in the
+/// exact per-lane operation order of [`chol_solve_raw`].
+pub fn chol_solve4_lanes<P: crate::linalg::lanes::Precision, const W: usize>(
+    l: &[[P; W]; 16],
+    b: &[[P; W]; 4],
+) -> [[P; W]; 4] {
+    // L y = b
+    let mut y = [[P::ZERO; W]; 4];
+    for i in 0..4 {
+        let mut sum = b[i];
+        for k in 0..i {
+            for w in 0..W {
+                sum[w] -= l[i * 4 + k][w] * y[k][w];
+            }
+        }
+        for w in 0..W {
+            y[i][w] = sum[w] / l[i * 4 + i][w];
+        }
+    }
+    // L^T x = y
+    let mut x = [[P::ZERO; W]; 4];
+    for i in (0..4).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..4 {
+            for w in 0..W {
+                sum[w] -= l[k * 4 + i][w] * x[k][w];
+            }
+        }
+        for w in 0..W {
+            x[i][w] = sum[w] / l[i * 4 + i][w];
+        }
+    }
+    x
+}
+
+/// Lane-parallel SPD inverse via Cholesky, column by unit-basis column
+/// — the lane variant of [`chol_inverse_raw`] (same per-lane operation
+/// order, so bit-identical results per healthy `f64` lane). Failed
+/// lanes clear `ok` and must be discarded by the caller; like the
+/// `_raw` scalars, this records no counter events (batched callers
+/// account one aggregate event per frame).
+pub fn chol_inverse4_lanes<P: crate::linalg::lanes::Precision, const W: usize>(
+    a: &[[P; W]; 16],
+    ok: &mut [bool; W],
+) -> [[P; W]; 16] {
+    let l = cholesky4_lanes(a, ok);
+    let mut inv = [[P::ZERO; W]; 16];
+    for c in 0..4 {
+        let mut e = [[P::ZERO; W]; 4];
+        e[c] = [P::ONE; W];
+        let col = chol_solve4_lanes(&l, &e);
+        for r in 0..4 {
+            inv[r * 4 + c] = col[r];
+        }
+    }
+    inv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,6 +289,75 @@ mod tests {
         assert_eq!(s.get(Kernel::Inverse).calls, 1);
         assert_eq!(s.get(Kernel::Cholesky).calls, 0, "inner work suppressed");
         assert_eq!(s.get(Kernel::TriSolve).calls, 0);
+    }
+
+    #[test]
+    fn lane_cholesky_matches_scalar_bitwise_per_lane() {
+        let a = spd4();
+        let mut blk = [[0.0f64; 2]; 16];
+        for r in 0..4 {
+            for c in 0..4 {
+                blk[r * 4 + c] = [a[(r, c)], a[(r, c)] * 2.0];
+            }
+        }
+        let mut ok = [true; 2];
+        let l = cholesky4_lanes(&blk, &mut ok);
+        assert_eq!(ok, [true; 2]);
+        let want0 = cholesky_raw(&a).unwrap();
+        let want1 = cholesky_raw(&a.scale(2.0)).unwrap();
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(l[r * 4 + c][0].to_bits(), want0[(r, c)].to_bits(), "({r},{c})");
+                assert_eq!(l[r * 4 + c][1].to_bits(), want1[(r, c)].to_bits(), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_inverse_matches_scalar_bitwise_and_masks_bad_lanes() {
+        let a = spd4();
+        let mut blk = [[0.0f64; 4]; 16];
+        for r in 0..4 {
+            for c in 0..4 {
+                blk[r * 4 + c] = [a[(r, c)]; 4];
+            }
+        }
+        // poison lane 2: not SPD (negative diagonal)
+        for e in 0..16 {
+            blk[e][2] = -1.0;
+        }
+        let mut ok = [true; 4];
+        let inv = chol_inverse4_lanes(&blk, &mut ok);
+        assert_eq!(ok, [true, true, false, true]);
+        let want = chol_inverse_raw(&a).unwrap();
+        for r in 0..4 {
+            for c in 0..4 {
+                for w in [0usize, 1, 3] {
+                    assert_eq!(inv[r * 4 + c][w].to_bits(), want[(r, c)].to_bits(), "lane {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_solve_in_f32_recovers_known_x() {
+        let a = spd4();
+        let x_true = [1.0, -2.0, 3.0, 0.25];
+        let b = a.matvec(&x_true);
+        let mut blk = [[0.0f32; 1]; 16];
+        for r in 0..4 {
+            for c in 0..4 {
+                blk[r * 4 + c] = [a[(r, c)] as f32];
+            }
+        }
+        let mut ok = [true];
+        let l = cholesky4_lanes(&blk, &mut ok);
+        assert!(ok[0]);
+        let bb = b.map(|v| [v as f32]);
+        let x = chol_solve4_lanes(&l, &bb);
+        for i in 0..4 {
+            assert!((f64::from(x[i][0]) - x_true[i]).abs() < 1e-4, "{x:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,611 @@
+//! Portable SIMD lane abstraction for the batched tracker sweeps.
+//!
+//! The paper's central measurement is that SORT's matrices (7×7, 4×7)
+//! are far too small for per-matrix parallelism — the batch-of-trackers
+//! axis is the only one worth vectorizing. This module makes that axis
+//! *explicit*: kernels operate on fixed-width lane blocks where **lane
+//! `w` is tracker `w`** and every lane runs the exact scalar operation
+//! sequence of the native Kalman kernels. No dependencies, no
+//! intrinsics — the blocks are `[P; W]` arrays with `W` known at
+//! compile time, which is the shape LLVM's vectorizer turns into packed
+//! SIMD without being asked twice.
+//!
+//! Two properties follow from "lanes are independent trackers":
+//!
+//! * **Bit-identity.** A lane never mixes with its neighbours, every
+//!   per-lane operation appears in the same order as in
+//!   [`KalmanState`](crate::sort::kalman::KalmanState), and Rust never
+//!   contracts separate mul/add into FMA — so the `f64` instantiation
+//!   is `f64::to_bits`-identical to the native engine at *any* lane
+//!   width (pinned by the tests here and in `sort/batch.rs`).
+//! * **Precision polymorphism.** The kernels are generic over the
+//!   sealed [`Precision`] trait, so the same source instantiates the
+//!   bit-exact `f64` tier and the opt-in `f32` tier (`--engine
+//!   batchf32`), which trades the last ~7 significant digits for twice
+//!   the lane throughput and half the memory traffic.
+//!
+//! Failed lanes (non-SPD innovation covariance) are handled by *mask,
+//! not branch*: the lane keeps computing garbage harmlessly and the
+//! caller skips scattering it back, which reproduces the native
+//! engine's "skip this tracker" semantics without breaking the SIMD
+//! shape for its neighbours.
+
+use super::cholesky::chol_inverse4_lanes;
+
+/// Numeric tier a batched engine runs its Kalman kernels in.
+///
+/// Selected by [`EngineKind`](crate::engine::EngineKind) (`batch` =
+/// f64, `batchf32` = f32) and reported back through
+/// [`SortParams::precision`](crate::sort::SortParams::precision) so
+/// harnesses can see what actually ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PrecisionTier {
+    /// IEEE binary64 — bit-identical to the native scalar engine.
+    #[default]
+    F64,
+    /// IEEE binary32 — ~2× lane throughput, half the bytes, with
+    /// per-tracker f64 re-linearization when innovation residuals
+    /// exceed [`SortParams::f32_residual_bound`](crate::sort::SortParams::f32_residual_bound).
+    F32,
+}
+
+impl PrecisionTier {
+    /// Stable lowercase name (`f64` | `f32`), used in bench tables and
+    /// lab reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            PrecisionTier::F64 => "f64",
+            PrecisionTier::F32 => "f32",
+        }
+    }
+}
+
+/// How many trackers one lane block carries through the fused sweeps.
+///
+/// `W4`/`W8` map onto one AVX2/AVX-512 register of f64 (or half / one
+/// register of f32); `Scalar` is the degenerate width used for tails
+/// and for the lane-width ablation in the `batch_vs_native` bench.
+/// Because lanes are independent trackers, **the width never changes
+/// the numbers** — it only changes how many trackers move per
+/// instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LaneWidth {
+    /// One tracker at a time (the PR 3 scalar-sweep shape).
+    Scalar,
+    /// 4 trackers per block (256-bit f64 / 128-bit f32 vectors).
+    W4,
+    /// 8 trackers per block (512-bit f64 / 256-bit f32 vectors).
+    W8,
+}
+
+impl LaneWidth {
+    /// Number of lanes in a block.
+    pub fn lanes(self) -> usize {
+        match self {
+            LaneWidth::Scalar => 1,
+            LaneWidth::W4 => 4,
+            LaneWidth::W8 => 8,
+        }
+    }
+
+    /// Stable lowercase name (`scalar` | `w4` | `w8`).
+    pub fn label(self) -> &'static str {
+        match self {
+            LaneWidth::Scalar => "scalar",
+            LaneWidth::W4 => "w4",
+            LaneWidth::W8 => "w8",
+        }
+    }
+
+    /// All widths, for ablation sweeps.
+    pub const ALL: [LaneWidth; 3] = [LaneWidth::Scalar, LaneWidth::W4, LaneWidth::W8];
+}
+
+mod sealed {
+    /// Closes [`super::Precision`] over `f64`/`f32`: the bit-identity
+    /// and counter-accounting contracts are per-type, so downstream
+    /// code must not add tiers.
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// Scalar element type of a lane block — the precision-polymorphism
+/// seam every batched kernel is generic over.
+///
+/// Implemented for `f64` (the bit-exact tier) and `f32` (the reduced
+/// tier) only; the trait is sealed because the engines' byte-identity
+/// and counter-parity contracts are stated per tier.
+pub trait Precision:
+    sealed::Sealed
+    + Copy
+    + std::fmt::Debug
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+{
+    /// Which tier this scalar implements.
+    const TIER: PrecisionTier;
+    /// Lane width the batched engine defaults to: one 512-bit vector's
+    /// worth of elements (4× f64, 8× f32).
+    const DEFAULT_WIDTH: LaneWidth;
+    /// `size_of::<Self>()` as the counter layer's byte unit — the f32
+    /// tier records exactly half the bytes of the f64 tier.
+    const BYTES: u64;
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+
+    /// Narrow (or pass through) an `f64` constant/measurement.
+    fn from_f64(v: f64) -> Self;
+    /// Widen to `f64` (exact for both tiers).
+    fn to_f64(self) -> f64;
+    /// IEEE square root — correctly rounded, so per-lane exact.
+    fn sqrt(self) -> Self;
+    /// `true` unless NaN or ±inf.
+    fn is_finite(self) -> bool;
+}
+
+impl Precision for f64 {
+    const TIER: PrecisionTier = PrecisionTier::F64;
+    const DEFAULT_WIDTH: LaneWidth = LaneWidth::W4;
+    const BYTES: u64 = 8;
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+}
+
+impl Precision for f32 {
+    const TIER: PrecisionTier = PrecisionTier::F32;
+    const DEFAULT_WIDTH: LaneWidth = LaneWidth::W8;
+    const BYTES: u64 = 4;
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+
+    fn to_f64(self) -> f64 {
+        f64::from(self)
+    }
+
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+/// `dst[i] += src[i]` over equal-length lanes, in `W`-wide blocks with
+/// a scalar tail — the position-update sweep of batched predict
+/// (`u += du`, `v += dv`, `s += ds`).
+///
+/// Elementwise, so the result is identical at every width; the width
+/// only picks the vector shape handed to the code generator.
+pub fn add_assign_sweep<P: Precision>(dst: &mut [P], src: &[P], width: LaneWidth) {
+    match width {
+        LaneWidth::Scalar => add_assign_blocks::<P, 1>(dst, src),
+        LaneWidth::W4 => add_assign_blocks::<P, 4>(dst, src),
+        LaneWidth::W8 => add_assign_blocks::<P, 8>(dst, src),
+    }
+}
+
+fn add_assign_blocks<P: Precision, const W: usize>(dst: &mut [P], src: &[P]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut d = dst.chunks_exact_mut(W);
+    let mut s = src.chunks_exact(W);
+    for (db, sb) in (&mut d).zip(&mut s) {
+        for w in 0..W {
+            db[w] += sb[w];
+        }
+    }
+    for (dt, st) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *dt += *st;
+    }
+}
+
+/// SORT's negative-area guard as a lane sweep: zero the area velocity
+/// wherever `area_vel + area <= 0` (the prediction would drive the box
+/// area non-positive). Compiles to a compare + blend per block; same
+/// comparison, same order as the native guard.
+pub fn zero_area_guard<P: Precision>(area_vel: &mut [P], area: &[P]) {
+    debug_assert_eq!(area_vel.len(), area.len());
+    for (dv, a) in area_vel.iter_mut().zip(area) {
+        if *dv + *a <= P::ZERO {
+            *dv = P::ZERO;
+        }
+    }
+}
+
+/// In-place `P' = F P F' + Q` on one packed row-major 7×7 covariance
+/// panel, exploiting `F = I + E` (three velocity couplings): a
+/// contiguous 21-element row shift, a strided column shift, then `+Q`.
+/// Same operation order as `KalmanState::predict`, so bit-identical;
+/// every pass is elementwise over contiguous memory, which is the
+/// vectorizer's best case.
+pub fn predict_panel<P: Precision>(pan: &mut [P], q: &[P; 49]) {
+    debug_assert_eq!(pan.len(), 49);
+    // rows 0..3 += rows 4..7: dst elements 0..21, src elements 28..49
+    let (head, tail) = pan.split_at_mut(28);
+    for e in 0..21 {
+        head[e] += tail[e];
+    }
+    // cols 0..3 += cols 4..7, row by row
+    for row in pan.chunks_exact_mut(7) {
+        row[0] += row[4];
+        row[1] += row[5];
+        row[2] += row[6];
+    }
+    // + Q
+    for e in 0..49 {
+        pan[e] += q[e];
+    }
+}
+
+/// Fused masked Kalman measurement update on one lane block of `W`
+/// trackers (lane `w` = tracker `w`).
+///
+/// Inputs are element-major lane blocks: `x[c][w]` is state component
+/// `c` of lane `w`, `pan[e][w]` is packed-panel element `e` of lane
+/// `w`, `z[c][w]` the measurement, `rd` the (lane-splat-free) diagonal
+/// of `R`. `joseph` selects the Joseph-form covariance update
+/// (`CovarianceForm::Joseph`) vs the simple form.
+///
+/// Per lane this is *exactly* `KalmanState::update`: innovation, `S =
+/// H P H' + R`, Cholesky inverse, gain, state and covariance updates,
+/// in the native operation order — so the `f64` instantiation is
+/// bit-identical to the scalar engine at every `W`.
+///
+/// Returns the SPD mask: `ok[w] == false` means lane `w`'s innovation
+/// covariance failed the Cholesky pivot test (the native path skips
+/// such trackers). Failed lanes still flow through the arithmetic —
+/// their results are garbage and **must not be scattered back**; the
+/// caller keeps the pre-update state for them, which is what native
+/// does.
+pub fn update_block<P: Precision, const W: usize>(
+    x: &mut [[P; W]; 7],
+    pan: &mut [[P; W]; 49],
+    z: &[[P; W]; 4],
+    rd: &[P; 4],
+    joseph: bool,
+) -> [bool; W] {
+    // y = z - H x
+    let mut y = [[P::ZERO; W]; 4];
+    for c in 0..4 {
+        for w in 0..W {
+            y[c][w] = z[c][w] - x[c][w];
+        }
+    }
+    // S = P[0..4][0..4] + diag(R)
+    let mut s = [[P::ZERO; W]; 16];
+    for r in 0..4 {
+        for c in 0..4 {
+            s[r * 4 + c] = pan[r * 7 + c];
+        }
+        for w in 0..W {
+            s[r * 4 + r][w] += rd[r];
+        }
+    }
+    let mut ok = [true; W];
+    let s_inv = chol_inverse4_lanes(&s, &mut ok);
+    // K = P[:,0..4] S^-1
+    let mut k = [[P::ZERO; W]; 28];
+    for r in 0..7 {
+        for c in 0..4 {
+            let mut acc = [P::ZERO; W];
+            for j in 0..4 {
+                for w in 0..W {
+                    acc[w] += pan[r * 7 + j][w] * s_inv[j * 4 + c][w];
+                }
+            }
+            k[r * 4 + c] = acc;
+        }
+    }
+    // x' = x + K y (same single-expression sum as native)
+    for r in 0..7 {
+        for w in 0..W {
+            x[r][w] += k[r * 4][w] * y[0][w]
+                + k[r * 4 + 1][w] * y[1][w]
+                + k[r * 4 + 2][w] * y[2][w]
+                + k[r * 4 + 3][w] * y[3][w];
+        }
+    }
+    // A = (I - K H) P
+    let mut a = [[P::ZERO; W]; 49];
+    for r in 0..7 {
+        for c in 0..7 {
+            let mut acc = pan[r * 7 + c];
+            for j in 0..4 {
+                for w in 0..W {
+                    acc[w] -= k[r * 4 + j][w] * pan[j * 7 + c][w];
+                }
+            }
+            a[r * 7 + c] = acc;
+        }
+    }
+    if joseph {
+        // P' = A (I-KH)' + K R K', lower triangle + mirror. Reads only
+        // `a` and `k`, so writing `pan` in place is safe.
+        for r in 0..7 {
+            for c in 0..=r {
+                let mut acc = a[r * 7 + c];
+                for j in 0..4 {
+                    for w in 0..W {
+                        acc[w] -= a[r * 7 + j][w] * k[c * 4 + j][w];
+                    }
+                }
+                for j in 0..4 {
+                    for w in 0..W {
+                        acc[w] += k[r * 4 + j][w] * rd[j] * k[c * 4 + j][w];
+                    }
+                }
+                pan[r * 7 + c] = acc;
+                pan[c * 7 + r] = acc;
+            }
+        }
+    } else {
+        *pan = a;
+    }
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::kalman::{CovarianceForm, KalmanState, SortConstants};
+
+    fn consts() -> SortConstants {
+        SortConstants::sort_defaults()
+    }
+
+    /// A deterministic, mildly conditioned tracker state: seed from a
+    /// measurement, then run a few native predict/update rounds.
+    fn warm_state(seed: u64) -> KalmanState {
+        let c = consts();
+        let f = seed as f64;
+        let z0 = [100.0 + f, 80.0 + 2.0 * f, 900.0 + 10.0 * f, 0.5];
+        let mut st = KalmanState::from_measurement(&z0, &c);
+        for k in 0..3 {
+            st.predict(&c);
+            let kk = k as f64;
+            let z = [102.0 + f + 3.0 * kk, 81.0 + 2.0 * f + kk, 910.0 + 10.0 * f + 5.0 * kk, 0.5];
+            st.update(&z, &c, CovarianceForm::Joseph);
+        }
+        st
+    }
+
+    fn pack(st: &KalmanState) -> ([f64; 7], [f64; 49]) {
+        let mut pan = [0.0; 49];
+        st.p.write_to(&mut pan);
+        (st.x, pan)
+    }
+
+    #[test]
+    fn update_block_scalar_matches_native_update_bitwise() {
+        let c = consts();
+        let rd = c.r.diagonal();
+        for (joseph, form) in [(true, CovarianceForm::Joseph), (false, CovarianceForm::Simple)] {
+            let mut st = warm_state(3);
+            let (x0, p0) = pack(&st);
+            let z = [107.0, 85.0, 930.0, 0.52];
+
+            let mut xb = x0.map(|v| [v]);
+            let mut pb = p0.map(|v| [v]);
+            let zb = z.map(|v| [v]);
+            let ok = update_block::<f64, 1>(&mut xb, &mut pb, &zb, &rd, joseph);
+            assert!(ok[0]);
+
+            assert!(st.update(&z, &c, form));
+            let (xn, pn) = pack(&st);
+            for r in 0..7 {
+                assert_eq!(xb[r][0].to_bits(), xn[r].to_bits(), "x[{r}] ({form:?})");
+            }
+            for e in 0..49 {
+                assert_eq!(pb[e][0].to_bits(), pn[e].to_bits(), "p[{e}] ({form:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_width_never_changes_the_bits() {
+        // the same trackers through W=1, W=4 and W=8 blocks must agree
+        // to the last bit — lanes are independent by construction
+        let c = consts();
+        let rd = c.r.diagonal();
+        let states: Vec<KalmanState> = (0..8).map(warm_state).collect();
+        let zs: Vec<[f64; 4]> = (0..8)
+            .map(|i| {
+                let f = i as f64;
+                [104.0 + f, 83.0 + 2.0 * f, 925.0 + 10.0 * f, 0.51]
+            })
+            .collect();
+
+        // W=1 reference
+        let mut want = Vec::new();
+        for (st, z) in states.iter().zip(&zs) {
+            let (x0, p0) = pack(st);
+            let mut xb = x0.map(|v| [v]);
+            let mut pb = p0.map(|v| [v]);
+            assert!(update_block::<f64, 1>(&mut xb, &mut pb, &z.map(|v| [v]), &rd, true)[0]);
+            want.push((xb, pb));
+        }
+
+        // one W=8 block carrying all 8 trackers
+        let mut x8 = [[0.0; 8]; 7];
+        let mut p8 = [[0.0; 8]; 49];
+        let mut z8 = [[0.0; 8]; 4];
+        for (w, (st, z)) in states.iter().zip(&zs).enumerate() {
+            let (x0, p0) = pack(st);
+            for r in 0..7 {
+                x8[r][w] = x0[r];
+            }
+            for e in 0..49 {
+                p8[e][w] = p0[e];
+            }
+            for r in 0..4 {
+                z8[r][w] = z[r];
+            }
+        }
+        let ok = update_block::<f64, 8>(&mut x8, &mut p8, &z8, &rd, true);
+        assert_eq!(ok, [true; 8]);
+        for w in 0..8 {
+            for r in 0..7 {
+                assert_eq!(x8[r][w].to_bits(), want[w].0[r][0].to_bits(), "lane {w} x[{r}]");
+            }
+            for e in 0..49 {
+                assert_eq!(p8[e][w].to_bits(), want[w].1[e][0].to_bits(), "lane {w} p[{e}]");
+            }
+        }
+    }
+
+    #[test]
+    fn failed_lane_is_masked_without_poisoning_neighbours() {
+        let c = consts();
+        let rd = c.r.diagonal();
+        let good = warm_state(1);
+        let (gx, gp) = pack(&good);
+        let mut x4 = [[0.0; 4]; 7];
+        let mut p4 = [[0.0; 4]; 49];
+        let mut z4 = [[0.0; 4]; 4];
+        for w in 0..4 {
+            for r in 0..7 {
+                x4[r][w] = gx[r];
+            }
+            for e in 0..49 {
+                p4[e][w] = gp[e];
+            }
+            for r in 0..4 {
+                z4[r][w] = 105.0 + r as f64;
+            }
+        }
+        // poison lane 2: drive S strongly negative-definite
+        for e in 0..49 {
+            p4[e][2] = -1e9;
+        }
+        let ok = update_block::<f64, 4>(&mut x4, &mut p4, &z4, &rd, true);
+        assert_eq!(ok, [true, true, false, true]);
+        // surviving lanes agree with a clean scalar run
+        let mut xb = gx.map(|v| [v]);
+        let mut pb = gp.map(|v| [v]);
+        let zb: [[f64; 1]; 4] = [[105.0], [106.0], [107.0], [108.0]];
+        assert!(update_block::<f64, 1>(&mut xb, &mut pb, &zb, &rd, true)[0]);
+        for w in [0usize, 1, 3] {
+            for r in 0..7 {
+                assert_eq!(x4[r][w].to_bits(), xb[r][0].to_bits(), "lane {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_instantiation_tracks_the_f64_result() {
+        let c = consts();
+        let rd64 = c.r.diagonal();
+        let rd32 = rd64.map(|v| v as f32);
+        let st = warm_state(5);
+        let (x0, p0) = pack(&st);
+        let z = [106.0, 86.0, 940.0, 0.5];
+
+        let mut x64 = x0.map(|v| [v]);
+        let mut p64 = p0.map(|v| [v]);
+        assert!(update_block::<f64, 1>(&mut x64, &mut p64, &z.map(|v| [v]), &rd64, true)[0]);
+
+        let mut x32 = x0.map(|v| [v as f32]);
+        let mut p32 = p0.map(|v| [v as f32]);
+        let z32 = z.map(|v| [v as f32]);
+        assert!(update_block::<f32, 1>(&mut x32, &mut p32, &z32, &rd32, true)[0]);
+
+        for r in 0..7 {
+            let rel = (f64::from(x32[r][0]) - x64[r][0]).abs() / x64[r][0].abs().max(1.0);
+            assert!(rel < 1e-4, "x[{r}]: f32 {} vs f64 {}", x32[r][0], x64[r][0]);
+        }
+    }
+
+    #[test]
+    fn sweeps_are_width_invariant_and_cover_tails() {
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 31] {
+            let src: Vec<f64> = (0..n).map(|i| 0.25 * i as f64 - 1.0).collect();
+            let base: Vec<f64> = (0..n).map(|i| 10.0 + i as f64).collect();
+            let mut want = base.clone();
+            for (d, s) in want.iter_mut().zip(&src) {
+                *d += *s;
+            }
+            for width in LaneWidth::ALL {
+                let mut got = base.clone();
+                add_assign_sweep(&mut got, &src, width);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "n={n} width={}",
+                    width.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_area_guard_matches_native_comparison() {
+        let mut dv = [-5.0, -3.0, 0.0, 2.0];
+        let area = [4.0, 3.0, -1.0, 1.0];
+        zero_area_guard(&mut dv, &area);
+        // -5+4<=0 → 0; -3+3<=0 → 0; 0-1<=0 → 0; 2+1>0 → kept
+        assert_eq!(dv, [0.0, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn predict_panel_matches_native_predict_bitwise() {
+        let c = consts();
+        let mut st = warm_state(2);
+        let mut pan = [0.0; 49];
+        st.p.write_to(&mut pan);
+        let mut q = [0.0; 49];
+        c.q.write_to(&mut q);
+        predict_panel(&mut pan, &q);
+        st.predict(&c);
+        let mut want = [0.0; 49];
+        st.p.write_to(&mut want);
+        for e in 0..49 {
+            assert_eq!(pan[e].to_bits(), want[e].to_bits(), "p[{e}]");
+        }
+    }
+
+    #[test]
+    fn labels_and_lane_counts_are_stable() {
+        assert_eq!(PrecisionTier::F64.label(), "f64");
+        assert_eq!(PrecisionTier::F32.label(), "f32");
+        assert_eq!(PrecisionTier::default(), PrecisionTier::F64);
+        assert_eq!(LaneWidth::W4.lanes(), 4);
+        assert_eq!(LaneWidth::W8.lanes(), 8);
+        assert_eq!(LaneWidth::Scalar.lanes(), 1);
+        assert_eq!(<f64 as Precision>::BYTES, 8);
+        assert_eq!(<f32 as Precision>::BYTES, 4);
+        assert_eq!(<f64 as Precision>::DEFAULT_WIDTH, LaneWidth::W4);
+        assert_eq!(<f32 as Precision>::DEFAULT_WIDTH, LaneWidth::W8);
+    }
+}

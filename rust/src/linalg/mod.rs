@@ -8,6 +8,11 @@
 //! fully-unrollable loop nest over const-generic stack arrays. No heap,
 //! no dispatch, no aliasing: the optimizer sees every bound.
 //!
+//! The [`lanes`] module adds the batch-of-trackers axis on top: the
+//! same scalar kernels restated over fixed-width lane blocks (lane =
+//! tracker), generic over the [`Precision`] tier (`f64` bit-exact,
+//! `f32` reduced) — see its docs for the bit-identity argument.
+//!
 //! Every kernel is *instrumented*: each invocation bumps a thread-local
 //! counter of calls / flops / bytes keyed by [`Kernel`]. The counters
 //! are what regenerate the paper's Table II (kernel inventory), Table IV
@@ -18,11 +23,14 @@
 
 pub mod cholesky;
 pub mod counters;
+pub mod lanes;
 pub mod matrix;
 
 pub use cholesky::{
-    chol_inverse, chol_inverse_raw, chol_solve, chol_solve_raw, cholesky, cholesky_raw,
+    chol_inverse, chol_inverse_raw, chol_inverse4_lanes, chol_solve, chol_solve_raw,
+    chol_solve4_lanes, cholesky, cholesky_raw, cholesky4_lanes,
 };
+pub use lanes::{LaneWidth, Precision, PrecisionTier};
 pub use counters::{
     counters_enabled, reset_counters, set_counters_enabled, snapshot, CounterSnapshot, Kernel,
     KernelStats,

@@ -130,14 +130,18 @@ COMMANDS
                                                     (engines x density x detector
                                                     noise x occlusion x streams)
   lab compare BASE.json CUR.json [--margin M] [--mota-margin Q]
-                                                    print the delta table
+            [--f32-mota-delta D]                    print the delta table
   lab gate    BASE.json CUR.json [--margin 2.0] [--mota-margin 0.1]
-                                                    same, exit 1 on regression
+            [--f32-mota-delta 0.05]                 same, exit 1 on regression
 
 ENGINES (--engine, default native; the spec form is self-contained)
   native    single-core structure-aware Sort (the paper's fast path)
   batch     batched SoA Sort: all trackers in structure-of-arrays
-            lanes, fused per-frame loops, zero steady-state allocation
+            lanes swept by explicit SIMD lane kernels, zero
+            steady-state allocation, bit-identical to native
+  batchf32  the batch engine's opt-in f32 tier: wider lanes and half
+            the state traffic, approximate (per-tracker f64 fallback
+            on large innovation residuals)
   strong:N  intra-frame fork-join ParallelSort with N threads (bare
             `strong` defaults to 2; legacy --threads N still honored)
   xla       batched tracker bank (AOT kernels, or the built-in
@@ -585,11 +589,14 @@ fn cmd_lab(args: &Args) -> Result<()> {
         "compare" | "gate" => {
             let (base, cur) = match &args.positional[1..] {
                 [b, c] => (b.as_str(), c.as_str()),
-                _ => bail!("usage: lab {sub} BASE.json CUR.json [--margin M] [--mota-margin Q]"),
+                _ => bail!(
+                    "usage: lab {sub} BASE.json CUR.json [--margin M] [--mota-margin Q] [--f32-mota-delta D]"
+                ),
             };
             let gate = GateConfig {
                 fps_margin: args.num("margin", GateConfig::default().fps_margin)?,
                 mota_margin: args.num("mota-margin", GateConfig::default().mota_margin)?,
+                f32_mota_delta: args.num("f32-mota-delta", GateConfig::default().f32_mota_delta)?,
             };
             let b = LabReport::load(std::path::Path::new(base))?;
             let c = LabReport::load(std::path::Path::new(cur))?;
@@ -618,10 +625,11 @@ fn cmd_lab(args: &Args) -> Result<()> {
             let cmp = compare(&b, &c, &gate);
             cmp.table().print();
             println!(
-                "\n{} (fps margin {:.2}x, MOTA margin {:.3})",
+                "\n{} (fps margin {:.2}x, MOTA margin {:.3}, f32 MOTA delta {:.3})",
                 cmp.summary(),
                 gate.fps_margin,
-                gate.mota_margin
+                gate.mota_margin,
+                gate.f32_mota_delta
             );
             if sub == "gate" && !cmp.pass {
                 bail!("lab gate failed");

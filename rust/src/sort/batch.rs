@@ -1,4 +1,6 @@
-//! `BatchSort` — structure-of-arrays SORT engine (`--engine batch`).
+//! `BatchSort<P>` — structure-of-arrays SORT engine with explicit SIMD
+//! lane sweeps and a precision tier (`--engine batch` = f64,
+//! `--engine batchf32` = f32).
 //!
 //! The paper's core observation is that SORT's matrices are so small
 //! (7×7, 4×7) that per-call overhead, not arithmetic, dominates the
@@ -12,20 +14,39 @@
 //!   contiguous lane per component, and
 //! * `p[t*49 ..]` — tracker-major packed 7×7 covariance panels —
 //!
-//! so predict and update run as fused loops over all trackers at once:
-//! contiguous memory the compiler can auto-vectorize, and **one**
-//! kernel-counter [`record`] per kernel kind per frame instead of one
-//! per tracker.
+//! and the hot sweeps run through the explicit lane kernels in
+//! [`crate::linalg::lanes`]: predict as width-blocked elementwise
+//! sweeps, the measurement update as a **fused masked block kernel**
+//! over the matched set ([`lanes::update_block`]) that carries
+//! [`LaneWidth`] trackers per block — lane = tracker, the only
+//! parallel axis these matrices have. One kernel-counter [`record`]
+//! per kernel kind per frame instead of one per tracker, in
+//! [`Precision::BYTES`] units (the f32 tier records exactly half the
+//! bytes of native, same flops).
 //!
 //! Per tracker, the scalar operation sequence is *exactly* the one
 //! [`KalmanState`](super::kalman::KalmanState) performs (same guard,
 //! same structure-aware `F P F'` shifts, same Joseph chain, same
-//! rounding order), so the emitted tracks are byte-identical to
-//! `--engine native` — pinned by `rust/tests/integration_engines.rs`
-//! on randomized streams, standalone and under the sharded scheduler.
+//! rounding order) and lanes never mix — so the `f64` instantiation
+//! emits tracks byte-identical to `--engine native` **at every lane
+//! width** — pinned by `rust/tests/integration_engines.rs` on
+//! randomized streams, standalone and under the sharded scheduler.
+//!
+//! The `f32` instantiation ([`BatchSortF32`]) trades that guarantee
+//! for ~2× lane throughput and half the state traffic. Its guardrail
+//! is per-tracker **f64 re-linearization**: before folding a matched
+//! detection in, the relative innovation residual
+//! `max_c |z_c - x_c| / max(1, |z_c|)` is checked against
+//! [`SortParams::f32_residual_bound`]; a tracker over the bound has
+//! its update promoted to f64 (widen state + panel, run the scalar
+//! f64 block kernel, narrow back) so one bad association or teleport
+//! cannot poison the reduced-precision state. Fallbacks are counted
+//! ([`BatchSort::precision_fallbacks`]); the steady state stays
+//! allocation-free in both tiers (`rust/tests/integration_alloc.rs`).
 //!
 //! [`KalmanBoxTracker`]: super::tracker::KalmanBoxTracker
 //! [`record`]: crate::linalg::counters::record
+//! [`lanes::update_block`]: crate::linalg::lanes::update_block
 
 use super::association::associate_into;
 use super::bbox::Bbox;
@@ -34,28 +55,40 @@ use super::phases::{Phase, PhaseTimer};
 use super::scratch::FrameScratch;
 use super::sort::{SortParams, Track};
 use crate::linalg::counters::{record, Kernel};
-use crate::linalg::{chol_inverse_raw, Mat4};
+use crate::linalg::lanes::{self, LaneWidth, Precision, PrecisionTier};
 
-/// Batched SoA multi-object tracker state for one video stream.
+/// Batched SoA multi-object tracker state for one video stream, in
+/// precision tier `P` (`f64` default — bit-identical to native — or
+/// `f32` via [`BatchSortF32`]).
 ///
 /// Same semantics and parameters as [`super::sort::Sort`]; the
-/// difference is purely the execution strategy (state layout, fused
-/// loops, aggregated counter accounting). There is no dense-GEMM
-/// formulation of the SoA path, so `dense_kernels` is normalized to
-/// `false` at construction ([`Self::params`] reflects what actually
+/// difference is purely the execution strategy (state layout, explicit
+/// lane sweeps, aggregated counter accounting) plus, for the f32 tier,
+/// the residual-gated f64 fallback described in the module docs. There
+/// is no dense-GEMM formulation of the SoA path, so `dense_kernels` is
+/// normalized to `false` at construction, and `precision` is
+/// normalized to `P`'s tier ([`Self::params`] reflects what actually
 /// runs) — dense-accounting sweeps (Table II/IV, ablation E9.4)
 /// should use the `native` engine.
 #[derive(Debug)]
-pub struct BatchSort {
+pub struct BatchSort<P: Precision = f64> {
     params: SortParams,
-    consts: SortConstants,
-    /// Dense row-major panel of `consts.q` (added to every covariance).
-    q: [f64; 49],
-    /// Dense row-major panel of `consts.p0` (seed covariance).
-    p0: [f64; 49],
+    /// Dense row-major panel of `Q` (added to every covariance).
+    q: [P; 49],
+    /// Dense row-major panel of `P0` (seed covariance).
+    p0: [P; 49],
+    /// `diag(R)` in tier precision (the only part of `R` the
+    /// measurement update reads).
+    rd: [P; 4],
+    /// `diag(R)` in f64, for the f32 tier's fallback re-linearization.
+    rd64: [f64; 4],
+    /// Trackers per lane block in the hot sweeps.
+    lane_width: LaneWidth,
+    /// f32 tier: matched updates promoted to f64 so far (0 for f64).
+    fallbacks: u64,
     // --- SoA tracker lanes (index = live tracker slot, in birth order)
-    x: [Vec<f64>; 7],
-    p: Vec<f64>,
+    x: [Vec<P>; 7],
+    p: Vec<P>,
     id: Vec<u64>,
     time_since_update: Vec<u32>,
     hits: Vec<u32>,
@@ -72,25 +105,46 @@ pub struct BatchSort {
     out: Vec<Track>,
 }
 
-impl BatchSort {
-    /// New batched tracker pipeline.
-    ///
-    /// `params.dense_kernels` is normalized to `false` (see the struct
-    /// docs): the byte-identity contract is against the native engine's
-    /// structure-aware formulation, which is the only one this engine
-    /// implements.
+/// The opt-in reduced-precision tier (`--engine batchf32`): same
+/// kernels as [`BatchSort`], instantiated at f32, with per-tracker f64
+/// re-linearization when innovation residuals exceed
+/// [`SortParams::f32_residual_bound`].
+pub type BatchSortF32 = BatchSort<f32>;
+
+impl<P: Precision> BatchSort<P> {
+    /// New batched tracker pipeline at `P`'s default lane width
+    /// (one 512-bit vector: 4 lanes for f64, 8 for f32).
     pub fn new(params: SortParams) -> Self {
-        let params = SortParams { dense_kernels: false, ..params };
+        Self::with_lane_width(params, P::DEFAULT_WIDTH)
+    }
+
+    /// [`Self::new`] with an explicit lane width (ablation harnesses).
+    ///
+    /// The width never changes the emitted tracks — lanes are
+    /// independent trackers — only how many move per instruction.
+    ///
+    /// `params.dense_kernels` is normalized to `false` and
+    /// `params.precision` to `P`'s tier (see the struct docs): the
+    /// byte-identity contract is against the native engine's
+    /// structure-aware f64 formulation, which is the only one this
+    /// engine implements.
+    pub fn with_lane_width(params: SortParams, lane_width: LaneWidth) -> Self {
+        let params =
+            SortParams { dense_kernels: false, precision: P::TIER, ..params };
         let consts = SortConstants::sort_defaults();
-        let mut q = [0.0; 49];
-        consts.q.write_to(&mut q);
-        let mut p0 = [0.0; 49];
-        consts.p0.write_to(&mut p0);
+        let mut q64 = [0.0; 49];
+        consts.q.write_to(&mut q64);
+        let mut p064 = [0.0; 49];
+        consts.p0.write_to(&mut p064);
+        let rd64 = consts.r.diagonal();
         BatchSort {
             params,
-            consts,
-            q,
-            p0,
+            q: q64.map(P::from_f64),
+            p0: p064.map(P::from_f64),
+            rd: rd64.map(P::from_f64),
+            rd64,
+            lane_width,
+            fallbacks: 0,
             x: std::array::from_fn(|_| Vec::with_capacity(32)),
             p: Vec::with_capacity(32 * 49),
             id: Vec::with_capacity(32),
@@ -117,9 +171,27 @@ impl BatchSort {
         self.frame_count
     }
 
-    /// Tracker parameters.
+    /// Tracker parameters (with `precision` normalized to the tier
+    /// that actually runs).
     pub fn params(&self) -> &SortParams {
         &self.params
+    }
+
+    /// Trackers per lane block in the hot sweeps.
+    pub fn lane_width(&self) -> LaneWidth {
+        self.lane_width
+    }
+
+    /// The numeric tier this instantiation runs in.
+    pub fn precision(&self) -> PrecisionTier {
+        P::TIER
+    }
+
+    /// f32 tier: how many matched updates were promoted to f64 because
+    /// the innovation residual exceeded
+    /// [`SortParams::f32_residual_bound`]. Always 0 for the f64 tier.
+    pub fn precision_fallbacks(&self) -> u64 {
+        self.fallbacks
     }
 
     /// Process one frame of detections; same contract as
@@ -128,9 +200,12 @@ impl BatchSort {
         self.frame_count += 1;
         let BatchSort {
             params,
-            consts,
             q,
             p0,
+            rd,
+            rd64,
+            lane_width,
+            fallbacks,
             x,
             p,
             id,
@@ -146,60 +221,39 @@ impl BatchSort {
             out,
         } = self;
         let params = *params;
-        let consts: &SortConstants = consts;
+        let width = *lane_width;
         let frame_count = *frame_count;
 
-        // --- 6.2 predict: fused SoA loops over all trackers, then one
-        // ordered compaction pass culling non-finite predictions.
+        // --- 6.2 predict: explicit lane sweeps over all trackers, then
+        // one ordered compaction pass culling non-finite predictions.
         phases.time(Phase::Predict, || {
             let n = id.len();
             // negative-area guard, then x' = F x: positions += velocities
             // (lane split: lo = components 0..4, hi = 4..7)
             let (lo, hi) = x.split_at_mut(4);
-            for t in 0..n {
-                if hi[2][t] + lo[2][t] <= 0.0 {
-                    hi[2][t] = 0.0;
-                }
-            }
-            for t in 0..n {
-                lo[0][t] += hi[0][t];
-            }
-            for t in 0..n {
-                lo[1][t] += hi[1][t];
-            }
-            for t in 0..n {
-                lo[2][t] += hi[2][t];
-            }
+            lanes::zero_area_guard(&mut hi[2], &lo[2]);
+            lanes::add_assign_sweep(&mut lo[0], &hi[0], width);
+            lanes::add_assign_sweep(&mut lo[1], &hi[1], width);
+            lanes::add_assign_sweep(&mut lo[2], &hi[2], width);
             // P' = F P F' + Q, in place per packed panel: F = I + E with
             // three velocity couplings, so the product reduces to row
             // shifts then column shifts (same op order as
             // KalmanState::predict, so bitwise-identical results).
             for pan in p.chunks_exact_mut(49) {
-                for r in 0..3 {
-                    for c in 0..7 {
-                        pan[r * 7 + c] += pan[(r + 4) * 7 + c];
-                    }
-                }
-                for r in 0..7 {
-                    for c in 0..3 {
-                        pan[r * 7 + c] += pan[r * 7 + c + 4];
-                    }
-                }
-                for e in 0..49 {
-                    pan[e] += q[e];
-                }
+                lanes::predict_panel(pan, q);
             }
             // one aggregate counter event per kernel kind per frame —
-            // same per-tracker accounting as the native path, 1 call
+            // same per-tracker accounting as the native path, 1 call,
+            // bytes in tier units (f32 = exactly half of native)
             if n > 0 {
                 let n = n as u64;
                 record(
                     Kernel::Gemm,
                     n * (2 * (3 * 7 + 7 * 3 + 3 * 3) as u64 + 49 + 3),
-                    n * (2 * 49 + 49) * 8,
+                    n * (2 * 49 + 49) * P::BYTES,
                 );
-                record(Kernel::EwMatMat, n * 49, n * (3 * 49 * 8));
-                record(Kernel::Sqrt, n * 2, n * 56);
+                record(Kernel::EwMatMat, n * 49, n * 3 * 49 * P::BYTES);
+                record(Kernel::Sqrt, n * 2, n * 7 * P::BYTES);
             }
             // lifecycle + predicted boxes (same order as
             // KalmanBoxTracker::predict_with / Bbox::from_state)
@@ -213,7 +267,13 @@ impl BatchSort {
                 // velocities are unused by the conversion; zeros keep
                 // the call shape without gathering the hi lanes
                 predicted.push(Bbox::from_state_raw(&[
-                    lo[0][t], lo[1][t], lo[2][t], lo[3][t], 0.0, 0.0, 0.0,
+                    lo[0][t].to_f64(),
+                    lo[1][t].to_f64(),
+                    lo[2][t].to_f64(),
+                    lo[3][t].to_f64(),
+                    0.0,
+                    0.0,
+                    0.0,
                 ]));
             }
             // ordered compaction: drop trackers whose prediction went
@@ -251,10 +311,10 @@ impl BatchSort {
             }
         });
         let n_trk = id.len() as u64;
-        phases.add_ws(Phase::Predict, n_trk * 56 * 8 + 98 * 8);
+        phases.add_ws(Phase::Predict, n_trk * 56 * P::BYTES + 98 * P::BYTES);
 
-        // --- 6.3 assignment (shared with the native engine: identical
-        // inputs produce identical results)
+        // --- 6.3 assignment (shared with the native engine, on f64
+        // boxes in both tiers: identical inputs, identical results)
         let predicted: &Vec<Bbox> = predicted;
         phases.time(Phase::Assign, || {
             associate_into(dets, predicted, params.iou_threshold, params.method, scratch);
@@ -263,113 +323,70 @@ impl BatchSort {
         phases.add_ws(Phase::Assign, (4 * nd + 4 * nt + nd * nt) * 8);
         let result = &scratch.result;
 
-        // --- 6.4 fold matched detections in, one fused loop over the
-        // matched set (same scalar sequence as KalmanState::update)
+        // --- 6.4 fold matched detections in: lifecycle bumps, then the
+        // fused masked block kernel over the matched set, `width`
+        // trackers per block with a scalar tail (same per-lane scalar
+        // sequence as KalmanState::update)
         phases.time(Phase::Update, || {
-            // pairs surviving the SPD check — the native path records
-            // the gain/covariance GEMMs only for those
-            let mut n_ok = 0u64;
-            for &(d, t) in &result.matched {
+            for &(_, t) in &result.matched {
                 time_since_update[t] = 0;
                 hits[t] += 1;
                 hit_streak[t] += 1;
-
-                let z = dets[d].to_z_raw();
-                let pan = &mut p[t * 49..(t + 1) * 49];
-                // y = z - H x
-                let y = [z[0] - x[0][t], z[1] - x[1][t], z[2] - x[2][t], z[3] - x[3][t]];
-                // S = P[0..4][0..4] + diag(R)
-                let mut s = Mat4::zeros();
-                for r in 0..4 {
-                    for c in 0..4 {
-                        s[(r, c)] = pan[r * 7 + c];
-                    }
-                    s[(r, r)] += consts.r[(r, r)];
-                }
-                let s_inv = match chol_inverse_raw(&s) {
-                    Some(inv) => inv,
-                    // non-SPD innovation: state untouched (the
-                    // lifecycle bump above matches the native path,
-                    // whose update_with also ignores the failure)
-                    None => continue,
-                };
-                n_ok += 1;
-                // K = P[:,0..4] S^-1
-                let mut k = [[0.0f64; 4]; 7];
-                for r in 0..7 {
-                    for c in 0..4 {
-                        let mut acc = 0.0;
-                        for j in 0..4 {
-                            acc += pan[r * 7 + j] * s_inv[(j, c)];
-                        }
-                        k[r][c] = acc;
-                    }
-                }
-                // x' = x + K y
-                for (r, lane) in x.iter_mut().enumerate() {
-                    lane[t] +=
-                        k[r][0] * y[0] + k[r][1] * y[1] + k[r][2] * y[2] + k[r][3] * y[3];
-                }
-                // A = (I - K H) P
-                let mut a = [0.0f64; 49];
-                for r in 0..7 {
-                    for c in 0..7 {
-                        let mut acc = pan[r * 7 + c];
-                        for j in 0..4 {
-                            acc -= k[r][j] * pan[j * 7 + c];
-                        }
-                        a[r * 7 + c] = acc;
-                    }
-                }
-                match params.cov_form {
-                    CovarianceForm::Joseph => {
-                        // P' = A (I-KH)' + K R K', lower triangle + mirror
-                        let rd = consts.r.diagonal();
-                        for r in 0..7 {
-                            for c in 0..=r {
-                                let mut acc = a[r * 7 + c];
-                                for j in 0..4 {
-                                    acc -= a[r * 7 + j] * k[c][j];
-                                }
-                                for j in 0..4 {
-                                    acc += k[r][j] * rd[j] * k[c][j];
-                                }
-                                pan[r * 7 + c] = acc;
-                                pan[c * 7 + r] = acc;
-                            }
-                        }
-                    }
-                    CovarianceForm::Simple => pan.copy_from_slice(&a),
-                }
             }
+            let mut fold = MatchedFold {
+                x: &mut *x,
+                p: &mut *p,
+                dets,
+                rd: &*rd,
+                rd64: &*rd64,
+                joseph: matches!(params.cov_form, CovarianceForm::Joseph),
+                residual_bound: params.f32_residual_bound,
+                fallbacks: &mut *fallbacks,
+            };
+            // pairs surviving the SPD check — the native path records
+            // the gain/covariance GEMMs only for those
+            let n_ok = match width {
+                LaneWidth::Scalar => fold.run::<1>(&result.matched),
+                LaneWidth::W4 => fold.run::<4>(&result.matched),
+                LaneWidth::W8 => fold.run::<8>(&result.matched),
+            };
             // z conversion and the Inverse attempt happen for every
             // matched pair; the gain/covariance GEMMs only for the
-            // n_ok that passed the SPD check — same as native.
+            // n_ok that passed the SPD check — same as native. The f32
+            // tier's rare f64 fallbacks are accounted at nominal tier
+            // cost (they replace, not add to, the lane work).
             let n_m = result.matched.len() as u64;
             if n_m > 0 {
-                record(Kernel::EwVecVec, n_m * 8, n_m * 64);
-                record(Kernel::Inverse, n_m * ((2 * 64) / 3), n_m * (2 * 16 * 8));
+                record(Kernel::EwVecVec, n_m * 8, n_m * 8 * P::BYTES);
+                record(Kernel::Inverse, n_m * ((2 * 64) / 3), n_m * 2 * 16 * P::BYTES);
             }
             if n_ok > 0 {
-                record(Kernel::Gemm, n_ok * 2 * (7 * 4 * 4), n_ok * (7 * 4 + 16 + 7 * 4) * 8);
+                record(
+                    Kernel::Gemm,
+                    n_ok * 2 * (7 * 4 * 4),
+                    n_ok * (7 * 4 + 16 + 7 * 4) * P::BYTES,
+                );
                 record(
                     Kernel::Gemm,
                     n_ok * match params.cov_form {
                         CovarianceForm::Joseph => 3 * 2 * (7 * 7 * 4) as u64,
                         CovarianceForm::Simple => 2 * (7 * 7 * 4) as u64,
                     },
-                    n_ok * (49 + 28 + 49) * 8,
+                    n_ok * (49 + 28 + 49) * P::BYTES,
                 );
             }
         });
-        phases.add_ws(Phase::Update, result.matched.len() as u64 * 60 * 8 + 44 * 8);
+        phases.add_ws(
+            Phase::Update,
+            result.matched.len() as u64 * 60 * P::BYTES + 44 * P::BYTES,
+        );
 
         // --- 6.6 seed new trackers from unmatched detections
         phases.time(Phase::CreateNew, || {
             for &d in &result.unmatched_dets {
                 let z = dets[d].to_z_raw();
                 for (l, lane) in x.iter_mut().enumerate() {
-                    lane.push(if l < 4 { z[l] } else { 0.0 });
+                    lane.push(if l < 4 { P::from_f64(z[l]) } else { P::ZERO });
                 }
                 p.extend_from_slice(&p0[..]);
                 id.push(*next_id);
@@ -381,10 +398,10 @@ impl BatchSort {
             }
             let n_new = result.unmatched_dets.len() as u64;
             if n_new > 0 {
-                record(Kernel::EwVecVec, n_new * 8, n_new * 64);
+                record(Kernel::EwVecVec, n_new * 8, n_new * 8 * P::BYTES);
             }
         });
-        phases.add_ws(Phase::CreateNew, result.unmatched_dets.len() as u64 * 60 * 8);
+        phases.add_ws(Phase::CreateNew, result.unmatched_dets.len() as u64 * 60 * P::BYTES);
 
         // --- 6.7 prepare output + cull expired trackers (reverse walk
         // with ordered removal, exactly like the native loop)
@@ -399,7 +416,13 @@ impl BatchSort {
                     out.push(Track {
                         id: id[i] + 1,
                         bbox: Bbox::from_state_raw(&[
-                            x[0][i], x[1][i], x[2][i], x[3][i], 0.0, 0.0, 0.0,
+                            x[0][i].to_f64(),
+                            x[1][i].to_f64(),
+                            x[2][i].to_f64(),
+                            x[3][i].to_f64(),
+                            0.0,
+                            0.0,
+                            0.0,
                         ]),
                     });
                 }
@@ -417,11 +440,11 @@ impl BatchSort {
             }
             let n_out = out.len() as u64;
             if n_out > 0 {
-                record(Kernel::Sqrt, n_out * 2, n_out * 56);
+                record(Kernel::Sqrt, n_out * 2, n_out * 7 * P::BYTES);
             }
         });
         let n_after = id.len() as u64;
-        phases.add_ws(Phase::Output, n_after * 11 * 8);
+        phases.add_ws(Phase::Output, n_after * 11 * P::BYTES);
         out
     }
 
@@ -440,7 +463,139 @@ impl BatchSort {
         self.out.clear();
         self.frame_count = 0;
         self.next_id = 0;
+        self.fallbacks = 0;
         self.phases.reset();
+    }
+}
+
+/// One frame's matched-set fold: gathers matched trackers into lane
+/// blocks, runs [`lanes::update_block`], and scatters surviving lanes
+/// back — with the f32 tier's residual-gated f64 promotion. Fixed-size
+/// block buffers only: no allocation at any width.
+struct MatchedFold<'a, P: Precision> {
+    x: &'a mut [Vec<P>; 7],
+    p: &'a mut Vec<P>,
+    dets: &'a [Bbox],
+    rd: &'a [P; 4],
+    rd64: &'a [f64; 4],
+    joseph: bool,
+    residual_bound: f64,
+    fallbacks: &'a mut u64,
+}
+
+impl<P: Precision> MatchedFold<'_, P> {
+    /// Fold every matched `(det, tracker)` pair in, `W` per block with
+    /// a scalar (`W = 1`) tail; returns how many passed the SPD check.
+    fn run<const W: usize>(&mut self, matched: &[(usize, usize)]) -> u64 {
+        let mut n_ok = 0u64;
+        let mut pend = [(0usize, 0usize); W];
+        let mut n_pend = 0usize;
+        for &(d, t) in matched {
+            // monomorphizes out entirely for the f64 tier
+            if P::TIER == PrecisionTier::F32 && self.residual_exceeds_bound(d, t) {
+                *self.fallbacks += 1;
+                if self.update_one_f64(d, t) {
+                    n_ok += 1;
+                }
+                continue;
+            }
+            pend[n_pend] = (d, t);
+            n_pend += 1;
+            if n_pend == W {
+                n_ok += self.update_lanes::<W>(&pend);
+                n_pend = 0;
+            }
+        }
+        for &pair in &pend[..n_pend] {
+            n_ok += self.update_lanes::<1>(&[pair]);
+        }
+        n_ok
+    }
+
+    /// f32 guardrail: relative innovation residual
+    /// `max_c |z_c - x_c| / max(1, |z_c|)`, measured in the tier's own
+    /// precision (it gates *that* arithmetic) then widened; `true`
+    /// also for non-finite residuals, so NaN/inf state re-linearizes.
+    fn residual_exceeds_bound(&self, d: usize, t: usize) -> bool {
+        let z = self.dets[d].to_z_raw();
+        let mut rel: f64 = 0.0;
+        for (c, &zc64) in z.iter().enumerate() {
+            let zc = P::from_f64(zc64);
+            let y = (zc - self.x[c][t]).to_f64().abs();
+            rel = rel.max(y / zc.to_f64().abs().max(1.0));
+        }
+        rel > self.residual_bound || !rel.is_finite()
+    }
+
+    /// Per-tracker f64 re-linearization: widen state + panel, run the
+    /// scalar f64 block kernel, narrow back. Skips the scatter when
+    /// even the f64 innovation covariance fails the SPD check (the
+    /// native skip semantics).
+    fn update_one_f64(&mut self, d: usize, t: usize) -> bool {
+        let z = self.dets[d].to_z_raw();
+        let mut xb = [[0.0f64; 1]; 7];
+        for (c, lane) in self.x.iter().enumerate() {
+            xb[c][0] = lane[t].to_f64();
+        }
+        let mut pb = [[0.0f64; 1]; 49];
+        let pan = &self.p[t * 49..(t + 1) * 49];
+        for e in 0..49 {
+            pb[e][0] = pan[e].to_f64();
+        }
+        let zb = z.map(|v| [v]);
+        let ok = lanes::update_block::<f64, 1>(&mut xb, &mut pb, &zb, self.rd64, self.joseph);
+        if !ok[0] {
+            return false;
+        }
+        for (c, lane) in self.x.iter_mut().enumerate() {
+            lane[t] = P::from_f64(xb[c][0]);
+        }
+        let pan = &mut self.p[t * 49..(t + 1) * 49];
+        for e in 0..49 {
+            pan[e] = P::from_f64(pb[e][0]);
+        }
+        true
+    }
+
+    /// Gather `W` matched trackers into element-major lane blocks, run
+    /// the fused masked update, scatter back the lanes that passed the
+    /// SPD check; returns how many did.
+    fn update_lanes<const W: usize>(&mut self, pairs: &[(usize, usize); W]) -> u64 {
+        let mut xb = [[P::ZERO; W]; 7];
+        let mut pb = [[P::ZERO; W]; 49];
+        let mut zb = [[P::ZERO; W]; 4];
+        for (w, &(d, t)) in pairs.iter().enumerate() {
+            for (c, lane) in self.x.iter().enumerate() {
+                xb[c][w] = lane[t];
+            }
+            let pan = &self.p[t * 49..(t + 1) * 49];
+            for e in 0..49 {
+                pb[e][w] = pan[e];
+            }
+            let z = self.dets[d].to_z_raw();
+            for (c, &zc) in z.iter().enumerate() {
+                zb[c][w] = P::from_f64(zc);
+            }
+        }
+        let ok = lanes::update_block::<P, W>(&mut xb, &mut pb, &zb, self.rd, self.joseph);
+        let mut n_ok = 0u64;
+        for (w, &(_, t)) in pairs.iter().enumerate() {
+            if !ok[w] {
+                // non-SPD innovation: state untouched (the lifecycle
+                // bump already happened, matching the native path,
+                // whose update_with also ignores the failure)
+                continue;
+            }
+            n_ok += 1;
+            for (c, lane) in self.x.iter_mut().enumerate() {
+                lane[t] = xb[c][w];
+            }
+            let pan = &mut self.p[t * 49..(t + 1) * 49];
+            for e in 0..49 {
+                pan[e] = pb[e][w];
+            }
+        }
+        n_ok
     }
 }
 
@@ -475,33 +630,43 @@ mod tests {
     }
 
     /// The defining contract: bit-identical output to the native
-    /// engine, frame by frame, including coasting and culling.
+    /// engine, frame by frame, including coasting and culling — at
+    /// every lane width (lanes are independent trackers).
     #[test]
-    fn bitwise_identical_to_native_sort() {
-        let mut native = Sort::new(SortParams::default());
-        let mut batch = BatchSort::new(SortParams::default());
-        for k in 0..60 {
-            let mut boxes = frame_boxes(k);
-            if k % 11 == 5 {
-                boxes.pop(); // dropout
+    fn bitwise_identical_to_native_sort_at_every_lane_width() {
+        for width in LaneWidth::ALL {
+            let mut native = Sort::new(SortParams::default());
+            let mut batch = BatchSort::<f64>::with_lane_width(SortParams::default(), width);
+            for k in 0..60 {
+                let mut boxes = frame_boxes(k);
+                if k % 11 == 5 {
+                    boxes.pop(); // dropout
+                }
+                if k % 17 == 9 {
+                    boxes.push(b(700.0 + k as f64, 700.0, 760.0 + k as f64, 800.0)); // newcomer
+                }
+                let want = native.update(&boxes).to_vec();
+                let got = batch.update(&boxes).to_vec();
+                assert_eq!(want.len(), got.len(), "frame {k} ({})", width.label());
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(w.id, g.id, "frame {k}");
+                    assert_eq!(
+                        w.bbox.to_array().map(f64::to_bits),
+                        g.bbox.to_array().map(f64::to_bits),
+                        "frame {k} id {} ({})",
+                        w.id,
+                        width.label()
+                    );
+                }
+                assert_eq!(native.n_trackers(), batch.n_trackers(), "frame {k}");
             }
-            if k % 17 == 9 {
-                boxes.push(b(700.0 + k as f64, 700.0, 760.0 + k as f64, 800.0)); // newcomer
-            }
-            let want = native.update(&boxes).to_vec();
-            let got = batch.update(&boxes).to_vec();
-            assert_eq!(want.len(), got.len(), "frame {k}");
-            for (w, g) in want.iter().zip(&got) {
-                assert_eq!(w.id, g.id, "frame {k}");
-                assert_eq!(w.bbox.to_array().map(f64::to_bits), g.bbox.to_array().map(f64::to_bits), "frame {k} id {}", w.id);
-            }
-            assert_eq!(native.n_trackers(), batch.n_trackers(), "frame {k}");
+            assert_eq!(batch.precision_fallbacks(), 0, "f64 tier never falls back");
         }
     }
 
     #[test]
     fn empty_frames_kill_trackers_after_max_age() {
-        let mut s = BatchSort::new(SortParams { min_hits: 1, ..Default::default() });
+        let mut s = BatchSort::<f64>::new(SortParams { min_hits: 1, ..Default::default() });
         for k in 0..5 {
             s.update(&frame_boxes(k));
         }
@@ -514,7 +679,7 @@ mod tests {
 
     #[test]
     fn reset_clears_state_and_restarts_ids() {
-        let mut s = BatchSort::new(SortParams::default());
+        let mut s = BatchSort::<f64>::new(SortParams::default());
         s.update(&frame_boxes(0));
         assert!(s.n_trackers() > 0);
         s.reset();
@@ -527,7 +692,7 @@ mod tests {
 
     #[test]
     fn phase_timer_records_all_phases() {
-        let mut s = BatchSort::new(SortParams::default());
+        let mut s = BatchSort::<f64>::new(SortParams::default());
         for k in 0..10 {
             s.update(&frame_boxes(k));
         }
@@ -541,44 +706,111 @@ mod tests {
         }
     }
 
+    #[test]
+    fn params_report_the_executed_precision_tier() {
+        let asked = SortParams { precision: PrecisionTier::F32, ..Default::default() };
+        let e64 = BatchSort::<f64>::new(asked);
+        assert_eq!(e64.params().precision, PrecisionTier::F64);
+        assert_eq!(e64.precision(), PrecisionTier::F64);
+        assert_eq!(e64.lane_width(), LaneWidth::W4);
+        let e32 = BatchSortF32::new(SortParams::default());
+        assert_eq!(e32.params().precision, PrecisionTier::F32);
+        assert_eq!(e32.precision(), PrecisionTier::F32);
+        assert_eq!(e32.lane_width(), LaneWidth::W8);
+    }
+
+    /// The f32 guardrail: a teleporting matched detection blows the
+    /// relative innovation residual past the bound, which must promote
+    /// that tracker's update to f64 (and only then).
+    #[test]
+    fn f32_residual_blowup_triggers_f64_relinearization() {
+        // iou_threshold 0 keeps even zero-overlap Hungarian pairs
+        // matched (the post-filter drops iou < threshold), so the
+        // teleported detection stays matched to the lone tracker
+        let params = SortParams { iou_threshold: 0.0, min_hits: 1, ..Default::default() };
+        let frames = [
+            b(100.0, 100.0, 160.0, 220.0),
+            b(103.0, 101.0, 163.0, 221.0),
+            b(5000.0, 5000.0, 5060.0, 5120.0), // teleport
+        ];
+        let mut e = BatchSortF32::new(params);
+        e.update(&frames[..1]);
+        e.update(&frames[1..2]);
+        assert_eq!(e.precision_fallbacks(), 0, "nearby updates stay in f32");
+        let tracks = e.update(&frames[2..3]).to_vec();
+        assert!(e.precision_fallbacks() >= 1, "teleport must re-linearize in f64");
+        assert_eq!(e.n_trackers(), 1);
+        assert!(tracks.iter().all(|t| t.bbox.is_finite()));
+
+        // a bound nothing exceeds never falls back on the same frames
+        let loose = SortParams { f32_residual_bound: 1e30, ..params };
+        let mut e2 = BatchSortF32::new(loose);
+        for f in &frames {
+            e2.update(std::slice::from_ref(f));
+        }
+        assert_eq!(e2.precision_fallbacks(), 0);
+    }
+
     /// The aggregate accounting must agree with the native per-call
     /// accounting: identical flop and byte totals per kernel kind (the
-    /// Table II–IV numbers), with far fewer counter events. This is
-    /// the tripwire for anyone editing a `record()` constant in
-    /// kalman.rs/bbox.rs without updating the batch aggregates.
+    /// Table II–IV numbers), with far fewer counter events — at every
+    /// lane width, and with exactly half the bytes (same flops) for
+    /// the f32 tier. This is the tripwire for anyone editing a
+    /// `record()` constant in kalman.rs/bbox.rs without updating the
+    /// batch aggregates.
     #[test]
     #[cfg(feature = "counters")]
     fn aggregate_counters_match_native_totals() {
-        use crate::linalg::counters::{reset_counters, snapshot};
-        let run = |engine_is_batch: bool| {
+        use crate::linalg::counters::{reset_counters, snapshot, CounterSnapshot};
+        let params = SortParams { timing: false, ..Default::default() };
+        let native: CounterSnapshot = {
             reset_counters();
-            let params = SortParams { timing: false, ..Default::default() };
-            if engine_is_batch {
-                let mut e = BatchSort::new(params);
-                for k in 0..40 {
-                    e.update(&frame_boxes(k));
-                }
-            } else {
-                let mut e = Sort::new(params);
-                for k in 0..40 {
-                    e.update(&frame_boxes(k));
-                }
+            let mut e = Sort::new(params);
+            for k in 0..40 {
+                e.update(&frame_boxes(k));
             }
             snapshot()
         };
-        let native = run(false);
-        let batch = run(true);
-        for kernel in Kernel::ALL {
-            let (n, b) = (native.get(kernel), batch.get(kernel));
-            assert_eq!(n.flops, b.flops, "{kernel:?} flop totals diverge");
-            assert_eq!(n.bytes, b.bytes, "{kernel:?} byte totals diverge");
+        for width in LaneWidth::ALL {
+            reset_counters();
+            let mut e = BatchSort::<f64>::with_lane_width(params, width);
+            for k in 0..40 {
+                e.update(&frame_boxes(k));
+            }
+            let batch = snapshot();
+            for kernel in Kernel::ALL {
+                let (n, b) = (native.get(kernel), batch.get(kernel));
+                assert_eq!(n.flops, b.flops, "{kernel:?} flops ({})", width.label());
+                assert_eq!(n.bytes, b.bytes, "{kernel:?} bytes ({})", width.label());
+            }
+            assert!(
+                batch.total().calls < native.total().calls,
+                "batching must reduce counter events ({} vs {})",
+                batch.total().calls,
+                native.total().calls
+            );
         }
-        assert!(
-            batch.total().calls < native.total().calls,
-            "batching must reduce counter events ({} vs {})",
-            batch.total().calls,
-            native.total().calls
-        );
+        // f32 tier: identical association decisions on this benign
+        // scenario → same flop totals everywhere, and exactly half the
+        // bytes on the Kalman kernels it records in tier units
+        reset_counters();
+        let mut e = BatchSortF32::new(params);
+        for k in 0..40 {
+            e.update(&frame_boxes(k));
+        }
+        let f32_run = snapshot();
+        assert_eq!(e.precision_fallbacks(), 0, "benign scenario must not fall back");
+        let halved =
+            [Kernel::Gemm, Kernel::EwMatMat, Kernel::EwVecVec, Kernel::Inverse, Kernel::Sqrt];
+        for kernel in Kernel::ALL {
+            let (n, f) = (native.get(kernel), f32_run.get(kernel));
+            assert_eq!(n.flops, f.flops, "{kernel:?} flops (f32)");
+            if halved.contains(&kernel) {
+                assert_eq!(n.bytes, 2 * f.bytes, "{kernel:?} bytes must halve (f32)");
+            } else {
+                assert_eq!(n.bytes, f.bytes, "{kernel:?} bytes (f32, f64 geometry)");
+            }
+        }
     }
 
     #[test]
@@ -586,7 +818,7 @@ mod tests {
         // drive one tracker's area negative so from_state yields NaN:
         // native culls it during predict; batch must do the same
         let mut native = Sort::new(SortParams { min_hits: 1, ..Default::default() });
-        let mut batch = BatchSort::new(SortParams { min_hits: 1, ..Default::default() });
+        let mut batch = BatchSort::<f64>::new(SortParams { min_hits: 1, ..Default::default() });
         // shrinking box: area velocity goes strongly negative
         for k in 0..12 {
             let shrink = 30.0 - 2.9 * k as f64;
@@ -605,6 +837,28 @@ mod tests {
             let got = batch.update(&[]).to_vec();
             assert_eq!(want, got, "coast frame {k}");
             assert_eq!(native.n_trackers(), batch.n_trackers(), "coast frame {k}");
+        }
+    }
+
+    /// The f32 tier is an approximation, not a reimplementation: on a
+    /// clean scenario it must make the same lifecycle decisions as
+    /// native and land within loose float tolerance.
+    #[test]
+    fn f32_tier_tracks_native_closely_on_clean_scenario() {
+        let mut native = Sort::new(SortParams::default());
+        let mut f32e = BatchSortF32::new(SortParams::default());
+        for k in 0..60 {
+            let boxes = frame_boxes(k);
+            let want = native.update(&boxes).to_vec();
+            let got = f32e.update(&boxes).to_vec();
+            assert_eq!(want.len(), got.len(), "frame {k}");
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.id, g.id, "frame {k}");
+                for (a, b) in w.bbox.to_array().iter().zip(g.bbox.to_array()) {
+                    let rel = (a - b).abs() / a.abs().max(1.0);
+                    assert!(rel < 1e-3, "frame {k} id {}: {a} vs {b}", w.id);
+                }
+            }
         }
     }
 }

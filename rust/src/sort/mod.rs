@@ -17,7 +17,8 @@
 //! * [`scratch`] — [`FrameScratch`], the reused per-frame hot-loop buffers
 //! * [`tracker`] — per-object lifecycle (`max_age`, `min_hits`, streaks)
 //! * [`sort`] — the per-frame update loop (Algorithm 1 of the paper)
-//! * [`batch`] — the batched SoA engine (all trackers in fused lanes)
+//! * [`batch`] — the batched SoA engine (explicit SIMD lane sweeps over
+//!   all trackers, f64 bit-exact or opt-in f32 with f64 fallback)
 //! * [`phases`] — per-phase timing (Table IV / Fig 3 instrumentation)
 //! * [`quality`] — CLEAR-MOT metrics vs ground truth (ablation guardrail)
 
@@ -35,7 +36,7 @@ pub mod sort;
 pub mod tracker;
 
 pub use association::{associate, AssociationMethod, AssociationResult};
-pub use batch::BatchSort;
+pub use batch::{BatchSort, BatchSortF32};
 pub use bbox::Bbox;
 pub use hungarian::hungarian_min_cost;
 pub use kalman::{KalmanState, SortConstants};

@@ -14,6 +14,7 @@ use super::kalman::{CovarianceForm, SortConstants};
 use super::phases::{Phase, PhaseTimer};
 use super::scratch::FrameScratch;
 use super::tracker::KalmanBoxTracker;
+use crate::linalg::lanes::PrecisionTier;
 
 /// Tracker parameters (defaults = the original implementation's).
 ///
@@ -37,6 +38,17 @@ pub struct SortParams {
     /// Use dense library-style GEMM kernels instead of the structure-
     /// aware fast path (paper-style accounting; E9.4 ablation).
     pub dense_kernels: bool,
+    /// Numeric tier the Kalman kernels run in. Informational: each
+    /// engine normalizes it at construction to what it actually
+    /// executes (`BatchSort<f32>` sets `F32`, every f64 engine sets
+    /// `F64`), so `params()` reports the tier that ran. The selector
+    /// is [`EngineKind`](crate::engine::EngineKind), not this field.
+    pub precision: PrecisionTier,
+    /// f32 tier only: relative innovation-residual bound above which a
+    /// matched tracker's measurement update is re-run in f64
+    /// (per-tracker re-linearization — see `sort/batch.rs`). Ignored
+    /// by the f64 engines.
+    pub f32_residual_bound: f64,
 }
 
 impl Default for SortParams {
@@ -49,6 +61,8 @@ impl Default for SortParams {
             cov_form: CovarianceForm::Joseph,
             timing: true,
             dense_kernels: false,
+            precision: PrecisionTier::F64,
+            f32_residual_bound: 0.5,
         }
     }
 }

@@ -1,5 +1,5 @@
 //! Allocation regression: the steady-state frame loop must be
-//! allocation-free for the `native` and `batch` engines.
+//! allocation-free for the `native`, `batch` and `batchf32` engines.
 //!
 //! The paper's regime is "low actual work, high overhead" — a single
 //! heap allocation costs more than the 7×7 arithmetic it would feed,
@@ -121,10 +121,19 @@ fn batch_engine_steady_state_is_allocation_free() {
 }
 
 #[test]
+fn batchf32_engine_steady_state_is_allocation_free() {
+    // the f32 tier's lane blocks and gather/scatter buffers are all
+    // fixed-size stack arrays — same zero-alloc contract as f64
+    let mut engine = EngineKind::BatchF32.build(params()).expect("build");
+    let n = count_steady_state_allocs(&mut *engine, separated_objects, 60, 200);
+    assert_eq!(n, 0, "batchf32 engine allocated {n} times in 140 steady-state frames");
+}
+
+#[test]
 fn hungarian_slow_path_is_allocation_free() {
     // the contested scenario defeats the partial-permutation fast path,
     // so this pins the Hungarian solver + its transpose-free scratch
-    for kind in [EngineKind::Native, EngineKind::Batch] {
+    for kind in [EngineKind::Native, EngineKind::Batch, EngineKind::BatchF32] {
         let mut engine = kind.build(params()).expect("build");
         let n = count_steady_state_allocs(&mut *engine, contested_objects, 60, 200);
         assert_eq!(

@@ -1,20 +1,28 @@
-//! Engine equivalence: all four [`TrackerEngine`] backends must emit
+//! Engine equivalence: every f64 [`TrackerEngine`] backend must emit
 //! identical track ids and boxes on shared deterministic input.
 //!
 //! This is the contract that makes the backends interchangeable behind
 //! the coordinator: `native` is the reference; `batch` runs the exact
-//! same scalar sequence over structure-of-arrays lanes (asserted
-//! *byte-identical*, `f64::to_bits`); `strong` runs the same math
-//! under fork-join parallelism; `xla` runs it through the batched
-//! tracker-bank kernels. The bank's reference interpreter reuses the
-//! native Kalman kernels, so agreement is expected to be bitwise on the
-//! state path (asserted here at 1e-9 to stay robust if the compiled
-//! PJRT backend — dense formulation, ~1e-9 agreement — is swapped in).
+//! same scalar sequence over explicit SIMD lane blocks (asserted
+//! *byte-identical*, `f64::to_bits`, at every lane width — lane width
+//! is an execution detail, never a numeric one); `strong` runs the
+//! same math under fork-join parallelism; `xla` runs it through the
+//! batched tracker-bank kernels. The bank's reference interpreter
+//! reuses the native Kalman kernels, so agreement is expected to be
+//! bitwise on the state path (asserted here at 1e-9 to stay robust if
+//! the compiled PJRT backend — dense formulation, ~1e-9 agreement — is
+//! swapped in).
+//!
+//! The `batchf32` tier is exempt from cross-engine equality by design
+//! (reduced precision); it is pinned to determinism and scheduler
+//! self-consistency instead: serial f32 rows are the reference, and
+//! the sharded scheduler must reproduce them bit for bit.
 
 use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
 use smalltrack::data::synth::{generate_sequence, SynthConfig, SynthSequence};
 use smalltrack::engine::{EngineKind, TrackerEngine};
-use smalltrack::sort::{Bbox, SortParams, Track};
+use smalltrack::linalg::LaneWidth;
+use smalltrack::sort::{BatchSort, Bbox, SortParams, Track};
 
 fn params() -> SortParams {
     SortParams { timing: false, ..Default::default() }
@@ -116,6 +124,66 @@ fn batch_is_byte_identical_to_native_on_randomized_streams() {
 }
 
 #[test]
+fn every_lane_width_is_byte_identical_to_native_on_randomized_streams() {
+    // lanes are independent trackers: widening the blocks from scalar
+    // to 4- or 8-wide must not move a single bit of any track
+    for (i, &(frames, objects, seed)) in
+        [(200u32, 8u32, 23u64), (150, 13, 7), (300, 6, 2024)].iter().enumerate()
+    {
+        let synth = generate_sequence(&SynthConfig::mot15(&format!("LW-{i}"), frames, objects, seed));
+        let mut native = EngineKind::Native.build(params()).expect("native");
+        let want = track_all(&mut *native, &synth);
+        for width in LaneWidth::ALL {
+            let mut batch = BatchSort::<f64>::with_lane_width(params(), width);
+            let got = track_all(&mut batch, &synth);
+            assert_byte_identical(&format!("stream {i} width {}", width.label()), &got, &want);
+        }
+    }
+}
+
+#[test]
+fn batchf32_is_deterministic_and_tracks_native_closely() {
+    // the f32 tier gives up bit-identity to native, not determinism:
+    // two runs must agree bit for bit, and stay within loose float
+    // tolerance of the native reference on a benign stream
+    let synth = generate_sequence(&SynthConfig::mot15("F32D", 150, 6, 77));
+    let mut a = EngineKind::BatchF32.build(params()).expect("batchf32");
+    let mut b = EngineKind::BatchF32.build(params()).expect("batchf32");
+    let ra = track_all(&mut *a, &synth);
+    let rb = track_all(&mut *b, &synth);
+    assert_byte_identical("batchf32 determinism", &ra, &rb);
+    // vs native: lifecycle near-ties may legitimately resolve
+    // differently in reduced precision, so compare in aggregate (track
+    // volume) plus box agreement on the frames whose id sets match —
+    // which should be essentially all of them
+    let mut native = EngineKind::Native.build(params()).expect("native");
+    let want = track_all(&mut *native, &synth);
+    let (total, native_total): (usize, usize) =
+        (ra.iter().map(Vec::len).sum(), want.iter().map(Vec::len).sum());
+    let volume_gap = (total as f64 - native_total as f64).abs() / native_total as f64;
+    assert!(volume_gap < 0.01, "batchf32 track volume diverged: {total} vs {native_total}");
+    let mut compared = 0usize;
+    for (k, (g, w)) in ra.iter().zip(&want).enumerate() {
+        let ids = |v: &[Track]| v.iter().map(|t| t.id).collect::<Vec<_>>();
+        if ids(g) != ids(w) {
+            continue;
+        }
+        compared += 1;
+        for (a, b) in g.iter().zip(w) {
+            for (x, y) in a.bbox.to_array().iter().zip(b.bbox.to_array()) {
+                let rel = (x - y).abs() / x.abs().max(1.0);
+                assert!(rel < 1e-2, "frame {k} id {} box {x} vs {y}", a.id);
+            }
+        }
+    }
+    assert!(
+        compared * 10 >= want.len() * 9,
+        "batchf32 id sets matched native on only {compared}/{} frames",
+        want.len()
+    );
+}
+
+#[test]
 fn batch_is_byte_identical_under_sharded_scheduler() {
     // the scheduler must be a pure throughput transform for the batch
     // engine too: pinned/stealing shards at 1, 2 and 8 workers emit the
@@ -169,6 +237,69 @@ fn batch_is_byte_identical_under_sharded_scheduler() {
                         ba.to_array().map(f64::to_bits),
                         bb.to_array().map(f64::to_bits),
                         "stream {} w={workers} {} diverged from serial native",
+                        out.stream_id,
+                        policy.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batchf32_is_byte_identical_to_its_serial_self_under_sharded_scheduler() {
+    // the f32 tier's contract under the scheduler: not equality with
+    // native (reduced precision), but exact reproduction of its own
+    // serial rows at any worker count and shard policy
+    let suite: Vec<SynthSequence> = (0..4)
+        .map(|i| {
+            generate_sequence(&SynthConfig::mot15(
+                &format!("F32SCH-{i}"),
+                60 + 30 * (i as u32 % 3),
+                3 + (i as u32 % 4),
+                i as u64,
+            ))
+        })
+        .collect();
+    // serial batchf32 reference rows, one fresh engine per stream
+    let reference: Vec<Vec<(u32, u64, Bbox)>> = suite
+        .iter()
+        .map(|s| {
+            let mut engine = EngineKind::BatchF32.build(params()).expect("build");
+            let mut rows = Vec::new();
+            let mut boxes: Vec<Bbox> = Vec::new();
+            for frame in &s.sequence.frames {
+                boxes.clear();
+                boxes.extend(frame.detections.iter().map(|d| d.bbox));
+                for t in engine.update(&boxes) {
+                    rows.push((frame.index, t.id, t.bbox));
+                }
+            }
+            rows
+        })
+        .collect();
+    for workers in [1usize, 2, 8] {
+        for policy in [ShardPolicy::Pinned, ShardPolicy::Stealing] {
+            let report = run_shards(
+                &suite,
+                SchedulerConfig {
+                    workers,
+                    shard_policy: policy,
+                    engine: EngineKind::BatchF32,
+                    sort_params: params(),
+                    collect_tracks: true,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(report.outputs.len(), suite.len());
+            for (out, want) in report.outputs.iter().zip(&reference) {
+                assert_eq!(out.rows.len(), want.len());
+                for ((fa, ia, ba), (fb, ib, bb)) in out.rows.iter().zip(want) {
+                    assert_eq!((fa, ia), (fb, ib), "stream {} w={workers}", out.stream_id);
+                    assert_eq!(
+                        ba.to_array().map(f64::to_bits),
+                        bb.to_array().map(f64::to_bits),
+                        "stream {} w={workers} {} diverged from serial batchf32",
                         out.stream_id,
                         policy.label()
                     );

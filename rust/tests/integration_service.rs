@@ -93,8 +93,11 @@ fn push_all(h: &SessionHandle, seq: &Sequence) {
 
 #[test]
 fn sessions_are_bit_identical_to_serial_at_1_2_8_workers() {
+    // batchf32 rides the same contract self-consistently: its session
+    // rows must reproduce its own serial rows bit for bit (equality
+    // with native is deliberately not part of the f32 tier's contract)
     let suite = suite(10);
-    for kind in [EngineKind::Native, EngineKind::Batch] {
+    for kind in [EngineKind::Native, EngineKind::Batch, EngineKind::BatchF32] {
         let reference: Vec<_> = suite.iter().map(|s| serial_rows(kind, s)).collect();
         for workers in [1usize, 2, 8] {
             let svc = service(workers);
@@ -214,7 +217,7 @@ fn close_then_reopen_reuses_warm_engines_bit_identically() {
     // generation g+1's sessions run on generation g's reset() engines
     // (the single worker forces reuse); output must not change by a bit
     let seqs = suite(3);
-    for kind in [EngineKind::Native, EngineKind::Batch] {
+    for kind in [EngineKind::Native, EngineKind::Batch, EngineKind::BatchF32] {
         let svc = service(1);
         let mut generations: Vec<Vec<Vec<(u32, u64, Bbox)>>> = Vec::new();
         for _generation in 0..3 {
@@ -281,11 +284,12 @@ fn serve_wrapper_equals_direct_sessions() {
 
 #[test]
 fn all_engines_run_through_sessions() {
-    // broader but lighter: every backend (incl. strong and the xla
-    // interpreter) serves through sessions with serial-identical rows
+    // broader but lighter: every backend (incl. strong, the xla
+    // interpreter and the f32 tier) serves through sessions with
+    // serial-identical rows
     let seq = &suite(1)[0];
     let svc = service(2);
-    for kind in EngineKind::all(2) {
+    for kind in EngineKind::all_tiers(2) {
         let h = svc.open_session(session_params(kind)).expect("open");
         push_all(&h, seq);
         h.join();
