@@ -134,6 +134,25 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Remove up to `n` items from the *front* of the queue (the
+    /// stalest entries) without delivering them; returns how many were
+    /// removed. Used by deadline-aware load shedding: unlike a
+    /// `DropOldest` eviction this does NOT touch the queue-full
+    /// [`Self::dropped`] ledger — the caller accounts the removals in
+    /// its own deadline-drop counter so the two shed reasons stay
+    /// attributable.
+    pub fn drain_front(&self, n: usize) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let take = n.min(g.queue.len());
+        for _ in 0..take {
+            g.queue.pop_front();
+        }
+        if take > 0 {
+            self.not_full.notify_all();
+        }
+        take
+    }
+
     /// Close: producers fail, consumers drain then get `None`.
     pub fn close(&self) {
         let mut g = self.inner.lock().unwrap();
@@ -277,6 +296,32 @@ mod tests {
         assert_eq!(q.try_pop_status(), TryPop::Item(8), "closed queues drain first");
         assert_eq!(q.try_pop_status(), TryPop::Done, "closed+drained is Done");
         assert_eq!(q.try_pop_status(), TryPop::Done, "Done is terminal");
+    }
+
+    #[test]
+    fn drain_front_removes_stalest_without_touching_drop_ledger() {
+        let q = BoundedQueue::new(8, PushPolicy::DropOldest);
+        for i in 0..5 {
+            q.push(i);
+        }
+        assert_eq!(q.drain_front(2), 2, "removes exactly what was asked");
+        assert_eq!(q.dropped(), 0, "drain is not a queue-full drop");
+        assert_eq!(q.pop(), Some(2), "the stalest survivors remain in order");
+        assert_eq!(q.drain_front(10), 2, "clamped to the current depth");
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.drain_front(1), 0, "empty queue drains nothing");
+    }
+
+    #[test]
+    fn drain_front_unblocks_a_full_block_producer() {
+        let q = Arc::new(BoundedQueue::new(1, PushPolicy::Block));
+        q.push(1);
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.push(2));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.drain_front(1), 1);
+        assert!(h.join().unwrap(), "drain must wake the blocked producer");
+        assert_eq!(q.pop(), Some(2));
     }
 
     #[test]

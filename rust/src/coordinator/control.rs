@@ -1,0 +1,564 @@
+//! SLO-aware adaptive control loop for the [`TrackingService`].
+//!
+//! The paper's pitch is real-time tracking on small machines; serving
+//! keeps that promise only while load stays under capacity. This
+//! module closes the loop: it periodically samples [`ServiceMetrics`]
+//! and, when sessions start missing their [`Slo`] deadlines, walks an
+//! escalation ladder — each rung trades a little more quality or
+//! capacity for latency, and every rung is undone when headroom
+//! returns:
+//!
+//! ```text
+//!   breach (p99 > deadline, or queue ≥ high watermark), sustained
+//!   for `breach_ticks` samples:
+//!     1. scale up    — widen the active worker set (more cores)
+//!     2. migrate     — move the worst session to the f32 tier
+//!                      (cheaper frames, bounded MOTA loss)
+//!     3. shed        — drop the stalest frames of the lowest-priority
+//!                      session (counted as deadline drops)
+//!   headroom (everything under the low watermark), sustained for
+//!   `headroom_ticks` samples:
+//!     1. restore     — migrate degraded sessions back to their
+//!                      original tier (most recent first)
+//!     2. scale down  — shrink the active worker set
+//! ```
+//!
+//! The controller is a *pure decision function*: [`Controller::plan`]
+//! maps `(virtual time, metrics snapshot)` to at most one [`Action`]
+//! per tick, with hysteresis (streak thresholds in both directions)
+//! and a cooldown between actions so it cannot flap. Side effects live
+//! entirely in [`TrackingService::apply_action`]. That split is what
+//! makes the overload behavior testable without threads or sleeps:
+//! the decision table below drives `plan` with scripted snapshots and
+//! a hand-advanced clock.
+//!
+//! [`Slo`]: super::service::Slo
+
+use super::metrics::ServiceMetrics;
+use super::service::TrackingService;
+use crate::engine::EngineKind;
+use std::time::Duration;
+
+/// Anything that can produce a live [`ServiceMetrics`] snapshot — the
+/// running service in production, a scripted sequence in tests.
+pub trait MetricsSource {
+    /// Sample the current state.
+    fn sample(&mut self) -> ServiceMetrics;
+}
+
+impl MetricsSource for &TrackingService {
+    fn sample(&mut self) -> ServiceMetrics {
+        self.metrics()
+    }
+}
+
+/// Controller tuning. Watermarks are per-session queue depths;
+/// tick thresholds are consecutive samples, so the effective reaction
+/// time is `ticks × sample period`.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlConfig {
+    /// Never shrink the active worker set below this.
+    pub min_workers: usize,
+    /// Never grow the active worker set above this (the spawned pool).
+    pub max_workers: usize,
+    /// Per-session queue depth that counts as overload.
+    pub queue_high: usize,
+    /// Per-session queue depth below which a session counts as idle.
+    pub queue_low: usize,
+    /// Consecutive breached samples before escalating.
+    pub breach_ticks: u32,
+    /// Consecutive healthy samples before relaxing.
+    pub headroom_ticks: u32,
+    /// Minimum time between consecutive actions.
+    pub cooldown: Duration,
+    /// Frames shed per shed action.
+    pub shed_batch: usize,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            min_workers: 1,
+            max_workers: 1,
+            queue_high: 48,
+            queue_low: 8,
+            breach_ticks: 2,
+            headroom_ticks: 3,
+            cooldown: Duration::from_millis(500),
+            shed_batch: 8,
+        }
+    }
+}
+
+/// One controller decision. At most one is emitted per tick.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Widen the active worker set to `to`.
+    ScaleUp {
+        /// New active-worker bound.
+        to: usize,
+    },
+    /// Shrink the active worker set to `to`.
+    ScaleDown {
+        /// New active-worker bound.
+        to: usize,
+    },
+    /// Migrate a session to another engine tier (downgrade under
+    /// overload, restore under headroom).
+    Migrate {
+        /// Session to move.
+        session: u64,
+        /// Target tier.
+        to: EngineKind,
+    },
+    /// Shed up to `max_frames` of a session's stalest queued frames.
+    Shed {
+        /// Session to shed from.
+        session: u64,
+        /// Shed budget for this action.
+        max_frames: usize,
+    },
+}
+
+/// The decision loop (see module docs). Holds only hysteresis state —
+/// all observation comes in through [`Controller::plan`], all
+/// actuation goes out through the returned [`Action`]s.
+#[derive(Debug)]
+pub struct Controller {
+    cfg: ControlConfig,
+    breach_streak: u32,
+    healthy_streak: u32,
+    last_action_at: Option<Duration>,
+    /// Sessions this controller moved off their original tier, newest
+    /// last: `(session, original kind)` — the restore worklist.
+    degraded: Vec<(u64, EngineKind)>,
+}
+
+impl Controller {
+    /// Controller with the given tuning.
+    pub fn new(cfg: ControlConfig) -> Self {
+        Controller {
+            cfg,
+            breach_streak: 0,
+            healthy_streak: 0,
+            last_action_at: None,
+            degraded: Vec::new(),
+        }
+    }
+
+    /// Sessions currently running below their original tier.
+    pub fn degraded(&self) -> &[(u64, EngineKind)] {
+        &self.degraded
+    }
+
+    /// Sample `src` and decide — the production entry point
+    /// (`svc.control_tick(...)` samples, plans, and applies in one
+    /// call).
+    pub fn tick(&mut self, now: Duration, src: &mut dyn MetricsSource) -> Vec<Action> {
+        let m = src.sample();
+        self.plan(now, &m)
+    }
+
+    /// Pure decision step: update hysteresis with one snapshot and
+    /// emit at most one action. `now` is whatever monotonic clock the
+    /// caller uses — the controller only compares differences against
+    /// the cooldown, so tests drive it with a hand-advanced virtual
+    /// clock.
+    pub fn plan(&mut self, now: Duration, m: &ServiceMetrics) -> Vec<Action> {
+        // forget degraded sessions that have retired
+        self.degraded.retain(|(id, _)| m.sessions.iter().any(|s| s.id == *id));
+
+        let overloaded = |s: &super::metrics::SessionSnapshot| {
+            s.deadline.is_some_and(|d| s.latency_p99 > d) || s.queue_depth >= self.cfg.queue_high
+        };
+        let breach = m.sessions.iter().any(overloaded);
+        let healthy = m.sessions.iter().all(|s| {
+            !s.deadline.is_some_and(|d| s.latency_p99 > d) && s.queue_depth <= self.cfg.queue_low
+        });
+        if breach {
+            self.breach_streak += 1;
+            self.healthy_streak = 0;
+        } else if healthy {
+            self.healthy_streak += 1;
+            self.breach_streak = 0;
+        } else {
+            // in between the watermarks: hold position
+            self.breach_streak = 0;
+            self.healthy_streak = 0;
+        }
+
+        if let Some(t) = self.last_action_at {
+            if now < t + self.cfg.cooldown {
+                return Vec::new();
+            }
+        }
+
+        if self.breach_streak >= self.cfg.breach_ticks {
+            let action = self.escalate(m);
+            if action.is_some() {
+                self.breach_streak = 0;
+                self.last_action_at = Some(now);
+            }
+            return action.into_iter().collect();
+        }
+        if self.healthy_streak >= self.cfg.headroom_ticks {
+            let action = self.relax(m);
+            if action.is_some() {
+                self.healthy_streak = 0;
+                self.last_action_at = Some(now);
+            }
+            return action.into_iter().collect();
+        }
+        Vec::new()
+    }
+
+    /// Overload ladder: scale up, then migrate the worst offender to
+    /// the f32 tier, then shed from the lowest-priority session.
+    fn escalate(&mut self, m: &ServiceMetrics) -> Option<Action> {
+        if m.active_workers < self.cfg.max_workers {
+            return Some(Action::ScaleUp { to: m.active_workers + 1 });
+        }
+        // candidate for tier downgrade: an overloaded session still on
+        // an f64 tier that can exchange state. Worst first: lowest
+        // priority, then deepest queue, then highest p99, then id.
+        let mut candidates: Vec<_> = m
+            .sessions
+            .iter()
+            .filter(|s| {
+                (s.deadline.is_some_and(|d| s.latency_p99 > d)
+                    || s.queue_depth >= self.cfg.queue_high)
+                    && s.engine != EngineKind::BatchF32
+                    && s.engine.supports_migration()
+            })
+            .collect();
+        candidates.sort_by(|a, b| {
+            a.priority
+                .cmp(&b.priority)
+                .then(b.queue_depth.cmp(&a.queue_depth))
+                .then(b.latency_p99.cmp(&a.latency_p99))
+                .then(a.id.cmp(&b.id))
+        });
+        if let Some(s) = candidates.first() {
+            self.degraded.push((s.id, s.engine));
+            return Some(Action::Migrate { session: s.id, to: EngineKind::BatchF32 });
+        }
+        // everyone eligible is already on f32: shed the stalest frames
+        // of the lowest-priority backed-up session
+        let victim = m
+            .sessions
+            .iter()
+            .filter(|s| s.queue_depth > 0)
+            .min_by(|a, b| {
+                a.priority
+                    .cmp(&b.priority)
+                    .then(b.queue_depth.cmp(&a.queue_depth))
+                    .then(a.id.cmp(&b.id))
+            })?;
+        Some(Action::Shed { session: victim.id, max_frames: self.cfg.shed_batch })
+    }
+
+    /// Headroom ladder: restore the most recently degraded session,
+    /// then shrink the active worker set.
+    fn relax(&mut self, m: &ServiceMetrics) -> Option<Action> {
+        if let Some((session, original)) = self.degraded.pop() {
+            return Some(Action::Migrate { session, to: original });
+        }
+        if m.active_workers > self.cfg.min_workers {
+            return Some(Action::ScaleDown { to: m.active_workers - 1 });
+        }
+        None
+    }
+}
+
+impl TrackingService {
+    /// Actuate one controller decision. Best-effort: a session that
+    /// retired between sample and actuation makes the action a no-op.
+    pub fn apply_action(&self, action: &Action) {
+        match action {
+            Action::ScaleUp { to } | Action::ScaleDown { to } => {
+                self.set_active_workers(*to);
+            }
+            Action::Migrate { session, to } => {
+                let _ = self.migrate_session(*session, *to);
+            }
+            Action::Shed { session, max_frames } => {
+                self.shed_stale(*session, *max_frames);
+            }
+        }
+    }
+
+    /// One full control-loop iteration: sample own metrics, plan, and
+    /// apply every emitted action. Returns the actions for logging.
+    pub fn control_tick(&self, ctl: &mut Controller, now: Duration) -> Vec<Action> {
+        let m = self.metrics();
+        let actions = ctl.plan(now, &m);
+        for a in &actions {
+            self.apply_action(a);
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Deterministic decision table: scripted metrics snapshots plus a
+    //! hand-advanced virtual clock drive [`Controller::plan`] — no
+    //! threads, no sleeps, no real service.
+
+    use super::super::metrics::SessionSnapshot;
+    use super::*;
+
+    /// Scripted [`MetricsSource`]: replays a fixed snapshot sequence
+    /// (holds the last one once exhausted).
+    struct Scripted {
+        frames: Vec<ServiceMetrics>,
+        next: usize,
+    }
+
+    impl MetricsSource for Scripted {
+        fn sample(&mut self) -> ServiceMetrics {
+            let i = self.next.min(self.frames.len() - 1);
+            self.next += 1;
+            self.frames[i].clone()
+        }
+    }
+
+    fn session(id: u64, engine: EngineKind, priority: u8, p99_ms: u64, depth: usize) -> SessionSnapshot {
+        SessionSnapshot {
+            id,
+            worker: 0,
+            engine,
+            priority,
+            deadline: Some(Duration::from_millis(100)),
+            queue_depth: depth,
+            frames_in: 0,
+            frames_done: 0,
+            dropped_queue: 0,
+            dropped_deadline: 0,
+            deadline_hits: 0,
+            deadline_misses: 0,
+            migrations: 0,
+            latency_p50: Duration::from_millis(p99_ms / 2),
+            latency_p99: Duration::from_millis(p99_ms),
+        }
+    }
+
+    fn snapshot(active: usize, sessions: Vec<SessionSnapshot>) -> ServiceMetrics {
+        ServiceMetrics {
+            per_worker: Vec::new(),
+            sessions,
+            active_workers: active,
+            open_sessions: 0,
+            sessions_closed: 0,
+            frames_done: 0,
+            tracks_out: 0,
+            dropped_queue: 0,
+            dropped_deadline: 0,
+            migrations: 0,
+        }
+    }
+
+    fn cfg() -> ControlConfig {
+        ControlConfig {
+            min_workers: 1,
+            max_workers: 4,
+            queue_high: 32,
+            queue_low: 4,
+            breach_ticks: 2,
+            headroom_ticks: 3,
+            cooldown: Duration::from_millis(100),
+            shed_batch: 8,
+        }
+    }
+
+    fn at(ms: u64) -> Duration {
+        Duration::from_millis(ms)
+    }
+
+    /// A breached session: p99 (250 ms) over its 100 ms deadline.
+    fn late(id: u64, engine: EngineKind, priority: u8) -> SessionSnapshot {
+        session(id, engine, priority, 250, 0)
+    }
+
+    /// A healthy session: p99 under deadline, queue under low mark.
+    fn fine(id: u64) -> SessionSnapshot {
+        session(id, EngineKind::Batch, 1, 10, 0)
+    }
+
+    #[test]
+    fn scale_up_after_sustained_breach_not_before() {
+        let mut c = Controller::new(cfg());
+        let m = snapshot(1, vec![late(0, EngineKind::Batch, 1)]);
+        assert!(c.plan(at(0), &m).is_empty(), "one breached tick is not a trend");
+        assert_eq!(
+            c.plan(at(200), &m),
+            vec![Action::ScaleUp { to: 2 }],
+            "second consecutive breach scales up by one worker"
+        );
+    }
+
+    #[test]
+    fn queue_watermark_alone_is_a_breach() {
+        let mut c = Controller::new(cfg());
+        // on-time latency, but the queue is past the high watermark
+        let m = snapshot(1, vec![session(0, EngineKind::Batch, 1, 10, 40)]);
+        c.plan(at(0), &m);
+        assert_eq!(c.plan(at(200), &m), vec![Action::ScaleUp { to: 2 }]);
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_actions() {
+        let mut c = Controller::new(cfg());
+        let m = snapshot(1, vec![late(0, EngineKind::Batch, 1)]);
+        c.plan(at(0), &m);
+        assert_eq!(c.plan(at(50), &m), vec![Action::ScaleUp { to: 2 }]);
+        // breach continues, but we acted 10 ms ago (cooldown 100 ms)
+        assert!(c.plan(at(60), &m).is_empty(), "cooldown holds");
+        assert!(c.plan(at(120), &m).is_empty(), "still inside the 100 ms cooldown");
+        assert_eq!(
+            c.plan(at(250), &m),
+            vec![Action::ScaleUp { to: 2 }],
+            "after cooldown + renewed streak it acts again"
+        );
+    }
+
+    #[test]
+    fn migrates_worst_session_when_pool_is_maxed() {
+        let mut c = Controller::new(cfg());
+        // active == max: next rung is a tier downgrade. Session 2 has
+        // the lowest priority — it degrades first despite session 1
+        // being equally late.
+        let m = snapshot(
+            4,
+            vec![fine(0), late(1, EngineKind::Batch, 2), late(2, EngineKind::Batch, 1)],
+        );
+        c.plan(at(0), &m);
+        assert_eq!(
+            c.plan(at(200), &m),
+            vec![Action::Migrate { session: 2, to: EngineKind::BatchF32 }]
+        );
+        assert_eq!(c.degraded(), &[(2, EngineKind::Batch)], "restore target remembered");
+    }
+
+    #[test]
+    fn sheds_lowest_priority_when_all_on_f32() {
+        let mut c = Controller::new(cfg());
+        let mut s1 = late(1, EngineKind::BatchF32, 2);
+        s1.queue_depth = 40;
+        let mut s2 = late(2, EngineKind::BatchF32, 1);
+        s2.queue_depth = 20;
+        let m = snapshot(4, vec![s1, s2]);
+        c.plan(at(0), &m);
+        assert_eq!(
+            c.plan(at(200), &m),
+            vec![Action::Shed { session: 2, max_frames: 8 }],
+            "priority outranks queue depth in victim choice"
+        );
+    }
+
+    #[test]
+    fn xla_sessions_are_never_migration_candidates() {
+        let mut c = Controller::new(cfg());
+        let mut s = late(0, EngineKind::Xla, 1);
+        s.queue_depth = 40;
+        let m = snapshot(4, vec![s]);
+        c.plan(at(0), &m);
+        assert_eq!(
+            c.plan(at(200), &m),
+            vec![Action::Shed { session: 0, max_frames: 8 }],
+            "non-migratable tiers skip straight to shedding"
+        );
+    }
+
+    #[test]
+    fn headroom_restores_migrations_before_scaling_down() {
+        let mut c = Controller::new(cfg());
+        let over = snapshot(4, vec![late(7, EngineKind::Batch, 1)]);
+        c.plan(at(0), &over);
+        assert_eq!(
+            c.plan(at(200), &over),
+            vec![Action::Migrate { session: 7, to: EngineKind::BatchF32 }]
+        );
+        // recovery: three healthy ticks → restore the degraded session
+        let mut calm_session = fine(7);
+        calm_session.engine = EngineKind::BatchF32;
+        let calm = snapshot(4, vec![calm_session]);
+        assert!(c.plan(at(400), &calm).is_empty());
+        assert!(c.plan(at(600), &calm).is_empty());
+        assert_eq!(
+            c.plan(at(800), &calm),
+            vec![Action::Migrate { session: 7, to: EngineKind::Batch }],
+            "restore to the original tier comes before scale-down"
+        );
+        assert!(c.degraded().is_empty());
+        // continued calm: now the pool shrinks, one worker per window
+        assert!(c.plan(at(1000), &calm).is_empty());
+        assert!(c.plan(at(1200), &calm).is_empty());
+        assert_eq!(c.plan(at(1400), &calm), vec![Action::ScaleDown { to: 3 }]);
+    }
+
+    #[test]
+    fn scale_down_stops_at_min_workers() {
+        let mut c = Controller::new(cfg());
+        let calm = snapshot(1, vec![fine(0)]);
+        for k in 0..10 {
+            assert!(
+                c.plan(at(200 * k), &calm).is_empty(),
+                "at min_workers with nothing to restore there is nothing to relax"
+            );
+        }
+    }
+
+    #[test]
+    fn alternating_load_never_flaps() {
+        // breach, calm, breach, calm … neither streak ever reaches its
+        // threshold, so a noisy boundary produces zero actions
+        let mut c = Controller::new(cfg());
+        let over = snapshot(1, vec![late(0, EngineKind::Batch, 1)]);
+        let calm = snapshot(1, vec![fine(0)]);
+        for k in 0..20u64 {
+            let m = if k % 2 == 0 { &over } else { &calm };
+            assert!(c.plan(at(200 * k), m).is_empty(), "tick {k} must not act");
+        }
+    }
+
+    #[test]
+    fn middle_ground_holds_position() {
+        let mut c = Controller::new(cfg());
+        // not breached (p99 under deadline, queue under high), but not
+        // healthy either (queue over the low watermark): both streaks
+        // reset, so nothing ever fires
+        let m = snapshot(2, vec![session(0, EngineKind::Batch, 1, 10, 16)]);
+        for k in 0..10u64 {
+            assert!(c.plan(at(200 * k), &m).is_empty());
+        }
+    }
+
+    #[test]
+    fn retired_sessions_drop_off_the_restore_list() {
+        let mut c = Controller::new(cfg());
+        let over = snapshot(4, vec![late(3, EngineKind::Batch, 1)]);
+        c.plan(at(0), &over);
+        c.plan(at(200), &over);
+        assert_eq!(c.degraded().len(), 1);
+        // the session closes; calm snapshots no longer list it
+        let calm = snapshot(4, vec![]);
+        assert!(c.plan(at(400), &calm).is_empty());
+        assert!(c.degraded().is_empty(), "purged on the first sample without it");
+        assert!(c.plan(at(600), &calm).is_empty());
+        assert_eq!(
+            c.plan(at(800), &calm),
+            vec![Action::ScaleDown { to: 3 }],
+            "relaxation proceeds to scale-down, not a dangling restore"
+        );
+    }
+
+    #[test]
+    fn scripted_source_drives_tick() {
+        let mut c = Controller::new(cfg());
+        let over = snapshot(1, vec![late(0, EngineKind::Batch, 1)]);
+        let mut src = Scripted { frames: vec![over.clone(), over], next: 0 };
+        assert!(c.tick(at(0), &mut src).is_empty());
+        assert_eq!(c.tick(at(200), &mut src), vec![Action::ScaleUp { to: 2 }]);
+    }
+}

@@ -12,6 +12,8 @@
 
 use std::time::Duration;
 
+use crate::engine::EngineKind;
+
 /// Frames-per-second accumulator.
 #[derive(Debug, Clone, Default)]
 pub struct FpsCounter {
@@ -113,8 +115,67 @@ pub struct WorkerSnapshot {
     pub queue_depth: usize,
     /// Sessions this worker has fully drained and retired.
     pub sessions_closed: u64,
-    /// Frames shed by backpressure on this worker's sessions.
-    pub dropped: u64,
+    /// Frames shed because a session queue was full (`DropOldest`).
+    pub dropped_queue: u64,
+    /// Frames shed because they aged past their session deadline
+    /// (stale at dequeue, or removed by the controller's shed action).
+    pub dropped_deadline: u64,
+}
+
+impl WorkerSnapshot {
+    /// Total frames shed on this worker, regardless of reason.
+    pub fn dropped(&self) -> u64 {
+        self.dropped_queue + self.dropped_deadline
+    }
+}
+
+/// One open session's slice of a live [`ServiceMetrics`] snapshot —
+/// the controller's per-session view (SLO attainment, staleness,
+/// which engine tier the session currently runs).
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    /// Session id.
+    pub id: u64,
+    /// Worker the session is pinned to.
+    pub worker: usize,
+    /// Engine tier currently running the session (post-migration).
+    pub engine: EngineKind,
+    /// Scheduling priority class (higher sheds later).
+    pub priority: u8,
+    /// Per-frame deadline, if the session declared one.
+    pub deadline: Option<Duration>,
+    /// Frames queued right now (gauge).
+    pub queue_depth: usize,
+    /// Frames accepted into the queue.
+    pub frames_in: u64,
+    /// Frames fully processed.
+    pub frames_done: u64,
+    /// Frames shed because the queue was full.
+    pub dropped_queue: u64,
+    /// Frames shed for missing the deadline.
+    pub dropped_deadline: u64,
+    /// Processed frames delivered within the deadline.
+    pub deadline_hits: u64,
+    /// Processed frames delivered late (still delivered, but past due).
+    pub deadline_misses: u64,
+    /// Engine migrations applied so far.
+    pub migrations: u64,
+    /// Median push-to-poll latency.
+    pub latency_p50: Duration,
+    /// Tail (p99) push-to-poll latency.
+    pub latency_p99: Duration,
+}
+
+impl SessionSnapshot {
+    /// Fraction of *processed* frames that met the deadline
+    /// (`1.0` when the session has no deadline or no frames yet).
+    pub fn deadline_hit_ratio(&self) -> f64 {
+        let judged = self.deadline_hits + self.deadline_misses;
+        if judged == 0 {
+            return 1.0;
+        }
+        self.deadline_hits as f64 / judged as f64
+    }
 }
 
 /// Live service-wide snapshot — the in-flight answer to "how is the
@@ -124,6 +185,10 @@ pub struct WorkerSnapshot {
 pub struct ServiceMetrics {
     /// Per-worker slices, indexed by worker id.
     pub per_worker: Vec<WorkerSnapshot>,
+    /// Per-open-session slices (the controller's decision input).
+    pub sessions: Vec<SessionSnapshot>,
+    /// Workers currently receiving new sessions (≤ `per_worker.len()`).
+    pub active_workers: usize,
     /// Sessions currently open across all workers (gauge).
     pub open_sessions: usize,
     /// Sessions fully drained and retired.
@@ -132,11 +197,20 @@ pub struct ServiceMetrics {
     pub frames_done: u64,
     /// Confirmed track-frames emitted.
     pub tracks_out: u64,
-    /// Frames shed by backpressure.
-    pub dropped: u64,
+    /// Frames shed because a session queue was full.
+    pub dropped_queue: u64,
+    /// Frames shed for missing a session deadline.
+    pub dropped_deadline: u64,
+    /// Engine migrations applied across all sessions (incl. retired).
+    pub migrations: u64,
 }
 
 impl ServiceMetrics {
+    /// Total frames shed, regardless of reason.
+    pub fn dropped(&self) -> u64 {
+        self.dropped_queue + self.dropped_deadline
+    }
+
     /// All workers' busy-time FPS counters folded into one.
     pub fn aggregate_fps(&self) -> FpsCounter {
         let mut agg = FpsCounter::default();
@@ -332,23 +406,55 @@ mod tests {
             open_sessions: 2,
             queue_depth: 3,
             sessions_closed: 1,
-            dropped: 5,
+            dropped_queue: 3,
+            dropped_deadline: 2,
         };
         w0.fps.record(100, Duration::from_secs(1));
+        assert_eq!(w0.dropped(), 5, "worker total folds both shed reasons");
         let mut w1 = w0.clone();
         w1.queue_depth = 7;
         let m = ServiceMetrics {
             per_worker: vec![w0, w1],
+            sessions: Vec::new(),
+            active_workers: 2,
             open_sessions: 4,
             sessions_closed: 2,
             frames_done: 200,
             tracks_out: 80,
-            dropped: 10,
+            dropped_queue: 6,
+            dropped_deadline: 4,
+            migrations: 0,
         };
         assert_eq!(m.queue_depth(), 10);
+        assert_eq!(m.dropped(), 10);
         let agg = m.aggregate_fps();
         assert_eq!(agg.frames(), 200);
         assert!((agg.fps() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn session_snapshot_hit_ratio() {
+        let mut s = SessionSnapshot {
+            id: 1,
+            worker: 0,
+            engine: EngineKind::Batch,
+            priority: 1,
+            deadline: Some(Duration::from_millis(50)),
+            queue_depth: 0,
+            frames_in: 10,
+            frames_done: 8,
+            dropped_queue: 1,
+            dropped_deadline: 1,
+            deadline_hits: 6,
+            deadline_misses: 2,
+            migrations: 0,
+            latency_p50: Duration::from_millis(1),
+            latency_p99: Duration::from_millis(9),
+        };
+        assert!((s.deadline_hit_ratio() - 0.75).abs() < 1e-12);
+        s.deadline_hits = 0;
+        s.deadline_misses = 0;
+        assert_eq!(s.deadline_hit_ratio(), 1.0, "no judged frames => vacuously met");
     }
 
     #[test]

@@ -25,6 +25,10 @@
 //! * [`service`] — **the serving front door**: the long-lived
 //!   [`service::TrackingService`] — sessions open/close at runtime,
 //!   frames push incrementally, metrics are live (E10)
+//! * [`control`] — the SLO-aware adaptive control loop: deadline
+//!   breach detection, worker-pool scaling, engine-tier migration,
+//!   deadline-aware load shedding (pure decisions, tested on a
+//!   virtual clock)
 //! * [`server`] — run-to-completion compatibility wrappers
 //!   ([`server::serve`]) over the session runtime; also fronts the
 //!   sharded batch mode
@@ -32,6 +36,7 @@
 //!   scheduler counters, live service snapshots
 
 pub mod backpressure;
+pub mod control;
 pub mod metrics;
 pub mod policy;
 pub mod pool;
@@ -43,7 +48,10 @@ pub mod stream;
 pub mod strong;
 
 pub use backpressure::{BoundedQueue, PushPolicy, TryPop};
-pub use metrics::{FpsCounter, LatencyHistogram, ServiceMetrics, WorkerCounters, WorkerSnapshot};
+pub use control::{Action, ControlConfig, Controller, MetricsSource};
+pub use metrics::{
+    FpsCounter, LatencyHistogram, ServiceMetrics, SessionSnapshot, WorkerCounters, WorkerSnapshot,
+};
 pub use policy::{run_policy, run_policy_with_engine, ScalingOutcome, ScalingPolicy};
 pub use pool::WorkerPool;
 pub use router::{RoutePolicy, Router};
@@ -52,7 +60,7 @@ pub use scheduler::{
 };
 pub use server::{serve, serve_observed, ServerConfig, ServerReport};
 pub use service::{
-    ServiceConfig, SessionHandle, SessionParams, SessionStats, TrackingService,
+    ServiceConfig, SessionHandle, SessionParams, SessionStats, Slo, TrackingService,
 };
 pub use stream::{FrameJob, Pacing, VideoStream};
 pub use strong::ParallelSort;

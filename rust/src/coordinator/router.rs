@@ -24,21 +24,37 @@ pub enum RoutePolicy {
 #[derive(Debug)]
 pub struct Router {
     workers: usize,
+    /// New streams route only to workers `0..active` (the adaptive
+    /// runtime's scale-down mechanism); existing pins are untouched.
+    active: usize,
     policy: RoutePolicy,
     pinned: HashMap<usize, usize>,
     load: Vec<usize>,
 }
 
 impl Router {
-    /// Router over `workers` workers.
+    /// Router over `workers` workers, all initially active.
     pub fn new(workers: usize, policy: RoutePolicy) -> Self {
         assert!(workers > 0);
-        Router { workers, policy, pinned: HashMap::new(), load: vec![0; workers] }
+        Router { workers, active: workers, policy, pinned: HashMap::new(), load: vec![0; workers] }
     }
 
-    /// Worker count.
+    /// Worker count (the spawned pool size, not the active bound).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Workers currently receiving *new* streams (`1..=workers`).
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    /// Bound new-stream routing to workers `0..n` (clamped to
+    /// `1..=workers`). Sessions already pinned to a deactivated worker
+    /// stay there — the Kalman chain owner never moves — so a
+    /// scale-down takes effect as those sessions retire.
+    pub fn set_active(&mut self, n: usize) {
+        self.active = n.clamp(1, self.workers);
     }
 
     /// Register (or look up) the worker for a stream.
@@ -47,11 +63,12 @@ impl Router {
             return w;
         }
         let w = match self.policy {
-            RoutePolicy::HashMod => stream_id % self.workers,
+            RoutePolicy::HashMod => stream_id % self.active,
             RoutePolicy::LeastLoaded => {
-                // min load; ties -> lowest worker id (determinism)
+                // min load among the active set; ties -> lowest worker
+                // id (determinism)
                 let mut best = 0usize;
-                for i in 1..self.workers {
+                for i in 1..self.active {
                     if self.load[i] < self.load[best] {
                         best = i;
                     }
@@ -164,6 +181,36 @@ mod tests {
         assert_eq!(r.loads(), &[2, 2, 2]);
         // and the one after that ties-break to the lowest id again
         assert_eq!(r.route(12), 0);
+    }
+
+    #[test]
+    fn active_bound_confines_new_routes_and_keeps_old_pins() {
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        let pre: Vec<usize> = (0..8).map(|s| r.route(s)).collect();
+        assert!(pre.contains(&3), "all four workers used at full width");
+        r.set_active(2);
+        assert_eq!(r.active(), 2);
+        for s in 0..8 {
+            assert_eq!(r.route(s), pre[s], "existing pin survives scale-down");
+        }
+        for s in 100..108 {
+            assert!(r.route(s) < 2, "new streams confined to the active set");
+        }
+        r.set_active(4);
+        assert_eq!(r.active(), 4);
+        // the deactivated-then-reactivated workers are the least loaded
+        assert!(r.route(200) >= 2);
+    }
+
+    #[test]
+    fn active_bound_clamps_and_applies_to_hashmod() {
+        let mut r = Router::new(4, RoutePolicy::HashMod);
+        r.set_active(0);
+        assert_eq!(r.active(), 1, "clamped to at least one worker");
+        assert_eq!(r.route(7), 0, "hashmod routes modulo the active set");
+        r.set_active(99);
+        assert_eq!(r.active(), 4, "clamped to the spawned pool");
+        assert_eq!(r.route(10), 2);
     }
 
     #[test]

@@ -40,7 +40,7 @@ use super::backpressure::PushPolicy;
 use super::metrics::{FpsCounter, LatencyHistogram, ServiceMetrics};
 use super::router::RoutePolicy;
 use super::scheduler::ShardPolicy;
-use super::service::{ServiceConfig, SessionHandle, SessionParams, TrackingService};
+use super::service::{ServiceConfig, SessionHandle, SessionParams, Slo, TrackingService};
 use super::stream::VideoStream;
 use crate::engine::EngineKind;
 use crate::sort::SortParams;
@@ -53,6 +53,10 @@ use std::time::{Duration, Instant};
 pub struct ServerConfig {
     /// Worker threads (each owns a disjoint set of sessions).
     pub workers: usize,
+    /// Worker threads spawned for the adaptive controller to grow into
+    /// (`0` ⇒ same as `workers`; see
+    /// [`super::service::ServiceConfig::max_workers`]).
+    pub max_workers: usize,
     /// Per-session queue capacity (frames).
     pub queue_capacity: usize,
     /// Queue-full behavior.
@@ -65,6 +69,9 @@ pub struct ServerConfig {
     pub engine: EngineKind,
     /// Tracker parameters.
     pub sort_params: SortParams,
+    /// Service-level objective applied to every stream's session
+    /// (per-frame deadline, priority class, MOTA budget).
+    pub slo: Slo,
     /// `Some(policy)` switches the server into sharded batch mode:
     /// pacing is ignored and whole streams are pushed at full speed.
     /// `None` (default) serves online.
@@ -75,11 +82,13 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             workers: 1,
+            max_workers: 0,
             queue_capacity: 64,
             push_policy: PushPolicy::DropOldest,
             route_policy: RoutePolicy::LeastLoaded,
             engine: EngineKind::Native,
             sort_params: SortParams { timing: false, ..Default::default() },
+            slo: Slo::default(),
             shard: None,
         }
     }
@@ -118,10 +127,15 @@ impl ServerReport {
 fn start_service(cfg: &ServerConfig, route: RoutePolicy) -> TrackingService {
     TrackingService::start(ServiceConfig {
         workers: cfg.workers,
+        max_workers: cfg.max_workers,
         queue_capacity: cfg.queue_capacity,
         push_policy: cfg.push_policy,
         route_policy: route,
-        session_defaults: SessionParams { engine: cfg.engine, sort_params: cfg.sort_params },
+        session_defaults: SessionParams {
+            engine: cfg.engine,
+            sort_params: cfg.sort_params,
+            slo: cfg.slo,
+        },
     })
     .expect("start tracking service")
 }
@@ -146,7 +160,7 @@ fn drain_into_report(
         let stats = h.join();
         report.frames_done += stats.frames_done;
         report.tracks_out += stats.tracks_out;
-        report.dropped += stats.dropped;
+        report.dropped += stats.dropped();
         report.latency.merge(&stats.latency);
     }
     let metrics = svc.shutdown();
@@ -182,7 +196,8 @@ pub fn serve_observed(
     }
     let svc = start_service(&cfg, cfg.route_policy);
     let t0 = Instant::now();
-    let params = SessionParams { engine: cfg.engine, sort_params: cfg.sort_params };
+    let params =
+        SessionParams { engine: cfg.engine, sort_params: cfg.sort_params, slo: cfg.slo };
 
     // dispatcher (this thread): earliest-due-frame simulation
     let mut sessions: HashMap<usize, SessionHandle> = HashMap::new();
@@ -242,10 +257,17 @@ fn serve_sharded(
         ShardPolicy::Pinned => RoutePolicy::HashMod,
         ShardPolicy::Stealing => RoutePolicy::LeastLoaded,
     };
-    let cfg = ServerConfig { push_policy: PushPolicy::Block, ..cfg };
+    // lossless implies no deadline either: stale-frame shedding would
+    // silently change batch results just like DropOldest would
+    let cfg = ServerConfig {
+        push_policy: PushPolicy::Block,
+        slo: Slo { deadline: None, ..cfg.slo },
+        ..cfg
+    };
     let svc = start_service(&cfg, route);
     let t0 = Instant::now();
-    let params = SessionParams { engine: cfg.engine, sort_params: cfg.sort_params };
+    let params =
+        SessionParams { engine: cfg.engine, sort_params: cfg.sort_params, slo: cfg.slo };
 
     // open every stream up front, then feed frames round-robin so all
     // workers stay busy even when queues are shallow

@@ -56,20 +56,26 @@
 //! [`VideoStream`]: super::stream::VideoStream
 
 use super::backpressure::{BoundedQueue, PushPolicy, TryPop};
-use super::metrics::{FpsCounter, LatencyHistogram, ServiceMetrics, WorkerSnapshot};
+use super::metrics::{FpsCounter, LatencyHistogram, ServiceMetrics, SessionSnapshot, WorkerSnapshot};
 use super::router::{RoutePolicy, Router};
 use crate::engine::{EngineKind, TrackerEngine};
 use crate::sort::{Bbox, SortParams, Track};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Service-wide configuration, fixed at [`TrackingService::start`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServiceConfig {
-    /// Worker threads; sessions are pinned across them.
+    /// Workers initially *active* (receiving new sessions).
     pub workers: usize,
+    /// Worker threads spawned (`0` ⇒ same as `workers`). The adaptive
+    /// controller can grow/shrink the active set within
+    /// `1..=max_workers` via [`TrackingService::set_active_workers`]
+    /// without spawning or joining threads mid-flight.
+    pub max_workers: usize,
     /// Per-session frame-queue capacity.
     pub queue_capacity: usize,
     /// What a full session queue does to `push_frame`.
@@ -85,11 +91,40 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             workers: 1,
+            max_workers: 0,
             queue_capacity: 64,
             push_policy: PushPolicy::DropOldest,
             route_policy: RoutePolicy::LeastLoaded,
             session_defaults: SessionParams::default(),
         }
+    }
+}
+
+/// Per-session service-level objective: what "on time" means for this
+/// stream and how much quality the owner will trade to stay on time.
+///
+/// The deadline is judged on *push-to-poll* latency (frame arrival to
+/// engine completion). Frames already past due when the worker
+/// dequeues them are shed without running the engine and counted in
+/// [`SessionStats::dropped_deadline`]; frames that finish late are
+/// still delivered but counted as deadline misses. `priority` orders
+/// controller shedding (lowest class sheds first); `mota_budget` is
+/// the MOTA degradation the owner accepts from adaptive actions
+/// (f32 migration, shedding) — enforced by the lab gate, advisory at
+/// runtime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Per-frame push-to-poll deadline; `None` = best-effort.
+    pub deadline: Option<Duration>,
+    /// Scheduling priority class; higher classes shed later.
+    pub priority: u8,
+    /// Acceptable MOTA degradation (absolute) under adaptive actions.
+    pub mota_budget: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        Slo { deadline: None, priority: 1, mota_budget: 0.05 }
     }
 }
 
@@ -100,6 +135,8 @@ pub struct SessionParams {
     pub engine: EngineKind,
     /// Tracker parameters.
     pub sort_params: SortParams,
+    /// Service-level objective (deadline, priority, quality budget).
+    pub slo: Slo,
 }
 
 impl Default for SessionParams {
@@ -107,6 +144,7 @@ impl Default for SessionParams {
         SessionParams {
             engine: EngineKind::Native,
             sort_params: SortParams { timing: false, ..Default::default() },
+            slo: Slo::default(),
         }
     }
 }
@@ -120,13 +158,31 @@ pub struct SessionStats {
     /// Frames fully processed by the engine.
     pub frames_done: u64,
     /// Frames shed by this session's queue (`DropOldest` only).
-    pub dropped: u64,
+    pub dropped_queue: u64,
+    /// Frames shed for missing the session deadline (stale at dequeue,
+    /// or removed by the controller's shed action).
+    pub dropped_deadline: u64,
+    /// Processed frames that finished within the deadline.
+    pub deadline_hits: u64,
+    /// Processed frames that finished late (delivered, but past due).
+    pub deadline_misses: u64,
+    /// Engine migrations applied to this session.
+    pub migrations: u64,
     /// Confirmed track-frames emitted.
     pub tracks_out: u64,
     /// Push→completion latency distribution.
     pub latency: LatencyHistogram,
     /// True once the worker has drained and retired the session.
     pub finished: bool,
+}
+
+impl SessionStats {
+    /// Total frames shed, regardless of reason. Conservation holds at
+    /// every quiescent point:
+    /// `frames_in == frames_done + dropped_queue + dropped_deadline`.
+    pub fn dropped(&self) -> u64 {
+        self.dropped_queue + self.dropped_deadline
+    }
 }
 
 /// One frame queued for a session's engine.
@@ -142,8 +198,26 @@ struct SessionSink {
     rows: Vec<(u32, u64, Bbox)>,
     frames_done: u64,
     tracks_out: u64,
+    /// Frames shed for staleness (past-due at dequeue + controller
+    /// sheds) — accounted separately from queue-full drops.
+    dropped_deadline: u64,
+    deadline_hits: u64,
+    deadline_misses: u64,
+    migrations: u64,
     latency: LatencyHistogram,
     finished: bool,
+}
+
+/// A session's engine-tier state: which tier is running now, plus
+/// migrations staged but not yet applied by the owning worker.
+struct MigrationState {
+    /// Engine tier currently (or about to be) executing frames.
+    current: EngineKind,
+    /// Staged migrations `(after, target)`: frames numbered `<= after`
+    /// run on the pre-migration engine, later frames on `target`. The
+    /// worker applies these lazily at dequeue, so the handoff is
+    /// seq-exact without stalling the pipeline.
+    pending: VecDeque<(u64, EngineKind)>,
 }
 
 /// Shared per-session state (handle side + worker side).
@@ -157,6 +231,7 @@ struct SessionShared {
     /// Present while the session is live; taken (reset, pooled) at
     /// retirement. Only the owning worker touches it after open.
     engine: Mutex<Option<Box<dyn TrackerEngine>>>,
+    migration: Mutex<MigrationState>,
     sink: Mutex<SessionSink>,
     /// Signalled (with `sink`) when the worker retires the session.
     done: Condvar,
@@ -185,21 +260,54 @@ struct WorkerStats {
     frames_done: u64,
     tracks_out: u64,
     sessions_closed: u64,
-    /// Drop counts inherited from already-retired sessions (live
-    /// sessions report through their own queues).
-    dropped_retired: u64,
+    /// Counters inherited from already-retired sessions (live
+    /// sessions report through their own queues/sinks).
+    dropped_queue_retired: u64,
+    dropped_deadline_retired: u64,
+    migrations_retired: u64,
 }
 
 struct ServiceInner {
     cfg: ServiceConfig,
     workers: Vec<Arc<WorkerShared>>,
     router: Mutex<Router>,
-    /// Warm engines from retired sessions, keyed by parameters.
-    /// Bounded (see `retire_session`) so session churn can't grow it
-    /// without limit.
-    engine_pool: Mutex<Vec<(SessionParams, Box<dyn TrackerEngine>)>>,
+    /// Warm engines from retired sessions (and migrated-away tiers),
+    /// keyed by `(EngineKind, SortParams)` — the SLO is not part of
+    /// the key, engines are SLO-agnostic. Bounded (see
+    /// `retire_session`) so session churn can't grow it without limit.
+    engine_pool: Mutex<Vec<(EngineKind, SortParams, Box<dyn TrackerEngine>)>>,
     next_session: AtomicU64,
     closed: AtomicBool,
+}
+
+/// Take a warm engine matching `(kind, sort_params)` out of the pool,
+/// if one is parked there.
+fn take_pooled(
+    inner: &ServiceInner,
+    kind: EngineKind,
+    sort_params: SortParams,
+) -> Option<Box<dyn TrackerEngine>> {
+    let mut pool = inner.engine_pool.lock().unwrap();
+    pool.iter()
+        .position(|(k, p, _)| *k == kind && *p == sort_params)
+        .map(|i| pool.swap_remove(i).2)
+}
+
+/// Park an engine in the warm pool under `(kind, sort_params)`,
+/// respecting the pool bound. The engine must already be reset.
+fn park_pooled(inner: &ServiceInner, kind: EngineKind, sort_params: SortParams, engine: Box<dyn TrackerEngine>) {
+    let cap = (inner.n_workers() * 2).max(8);
+    let mut pool = inner.engine_pool.lock().unwrap();
+    if pool.len() < cap {
+        pool.push((kind, sort_params, engine));
+    }
+}
+
+impl ServiceInner {
+    /// Spawned worker-thread count (the `max_workers` pool size).
+    fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
 }
 
 /// The long-lived multi-stream tracking runtime (see module docs).
@@ -242,7 +350,11 @@ impl TrackingService {
         if cfg.queue_capacity == 0 {
             anyhow::bail!("TrackingService needs a session queue capacity of at least 1");
         }
-        let workers: Vec<Arc<WorkerShared>> = (0..cfg.workers)
+        // spawn the full pool up front; `workers` is just the initial
+        // active bound. Parked workers cost one idle thread each and
+        // let the controller scale up without mid-flight spawns.
+        let n_spawn = if cfg.max_workers == 0 { cfg.workers } else { cfg.max_workers.max(cfg.workers) };
+        let workers: Vec<Arc<WorkerShared>> = (0..n_spawn)
             .map(|_| {
                 Arc::new(WorkerShared {
                     state: Mutex::new(WorkerState {
@@ -255,16 +367,18 @@ impl TrackingService {
                 })
             })
             .collect();
+        let mut router = Router::new(n_spawn, cfg.route_policy);
+        router.set_active(cfg.workers);
         let inner = Arc::new(ServiceInner {
             cfg,
             workers,
-            router: Mutex::new(Router::new(cfg.workers, cfg.route_policy)),
+            router: Mutex::new(router),
             engine_pool: Mutex::new(Vec::new()),
             next_session: AtomicU64::new(0),
             closed: AtomicBool::new(false),
         });
-        let mut handles = Vec::with_capacity(cfg.workers);
-        for w in 0..cfg.workers {
+        let mut handles = Vec::with_capacity(n_spawn);
+        for w in 0..n_spawn {
             let inner = Arc::clone(&inner);
             let me = Arc::clone(&inner.workers[w]);
             handles.push(
@@ -303,13 +417,7 @@ impl TrackingService {
         // build with the pool lock RELEASED — engine construction can
         // be slow (the xla backend opens a runtime) and must not stall
         // concurrent opens or worker-side retirements.
-        let pooled = {
-            let mut pool = self.inner.engine_pool.lock().unwrap();
-            pool.iter()
-                .position(|(p, _)| *p == params)
-                .map(|i| pool.swap_remove(i).1)
-        };
-        let engine = match pooled {
+        let engine = match take_pooled(&self.inner, params.engine, params.sort_params) {
             Some(engine) => engine,
             None => params.engine.build(params.sort_params)?,
         };
@@ -322,10 +430,18 @@ impl TrackingService {
             queue: BoundedQueue::new(self.inner.cfg.queue_capacity, self.inner.cfg.push_policy),
             frames_in: AtomicU64::new(0),
             engine: Mutex::new(Some(engine)),
+            migration: Mutex::new(MigrationState {
+                current: params.engine,
+                pending: VecDeque::new(),
+            }),
             sink: Mutex::new(SessionSink {
                 rows: Vec::new(),
                 frames_done: 0,
                 tracks_out: 0,
+                dropped_deadline: 0,
+                deadline_hits: 0,
+                deadline_misses: 0,
+                migrations: 0,
                 latency: LatencyHistogram::new(),
                 finished: false,
             }),
@@ -358,22 +474,49 @@ impl TrackingService {
         let mut per_worker = Vec::with_capacity(self.inner.workers.len());
         let mut agg = ServiceMetrics {
             per_worker: Vec::new(),
+            sessions: Vec::new(),
+            active_workers: self.inner.router.lock().unwrap().active(),
             open_sessions: 0,
             sessions_closed: 0,
             frames_done: 0,
             tracks_out: 0,
-            dropped: 0,
+            dropped_queue: 0,
+            dropped_deadline: 0,
+            migrations: 0,
         };
-        for wsh in &self.inner.workers {
-            let (open_sessions, queue_depth, live_drops) = {
+        for (w, wsh) in self.inner.workers.iter().enumerate() {
+            let (open_sessions, queue_depth, live_q, live_d, live_m) = {
                 let st = wsh.state.lock().unwrap();
                 let mut depth = 0usize;
-                let mut drops = 0u64;
+                let (mut q, mut d, mut m) = (0u64, 0u64, 0u64);
                 for s in &st.sessions {
-                    depth += s.queue.len();
-                    drops += s.queue.dropped();
+                    let s_depth = s.queue.len();
+                    let s_q = s.queue.dropped();
+                    depth += s_depth;
+                    q += s_q;
+                    let sink = s.sink.lock().unwrap();
+                    d += sink.dropped_deadline;
+                    m += sink.migrations;
+                    let (p50, _p95, p99, _max) = sink.latency.summary();
+                    agg.sessions.push(SessionSnapshot {
+                        id: s.id,
+                        worker: w,
+                        engine: s.migration.lock().unwrap().current,
+                        priority: s.params.slo.priority,
+                        deadline: s.params.slo.deadline,
+                        queue_depth: s_depth,
+                        frames_in: s.frames_in.load(Ordering::Relaxed),
+                        frames_done: sink.frames_done,
+                        dropped_queue: s_q,
+                        dropped_deadline: sink.dropped_deadline,
+                        deadline_hits: sink.deadline_hits,
+                        deadline_misses: sink.deadline_misses,
+                        migrations: sink.migrations,
+                        latency_p50: p50,
+                        latency_p99: p99,
+                    });
                 }
-                (st.sessions.len(), depth, drops)
+                (st.sessions.len(), depth, q, d, m)
             };
             let stats = wsh.stats.lock().unwrap();
             let snap = WorkerSnapshot {
@@ -383,17 +526,72 @@ impl TrackingService {
                 open_sessions,
                 queue_depth,
                 sessions_closed: stats.sessions_closed,
-                dropped: stats.dropped_retired + live_drops,
+                dropped_queue: stats.dropped_queue_retired + live_q,
+                dropped_deadline: stats.dropped_deadline_retired + live_d,
             };
+            agg.migrations += stats.migrations_retired + live_m;
             agg.open_sessions += snap.open_sessions;
             agg.sessions_closed += snap.sessions_closed;
             agg.frames_done += snap.frames_done;
             agg.tracks_out += snap.tracks_out;
-            agg.dropped += snap.dropped;
+            agg.dropped_queue += snap.dropped_queue;
+            agg.dropped_deadline += snap.dropped_deadline;
             per_worker.push(snap);
         }
         agg.per_worker = per_worker;
         agg
+    }
+
+    /// Bound new-session routing to the first `n` workers (clamped to
+    /// `1..=max_workers`); returns the applied bound. Sessions pinned
+    /// to a deactivated worker keep draining there — scale-down takes
+    /// effect as sessions retire. The adaptive controller's
+    /// scale-up/scale-down lever.
+    pub fn set_active_workers(&self, n: usize) -> usize {
+        let mut router = self.inner.router.lock().unwrap();
+        router.set_active(n);
+        router.active()
+    }
+
+    /// Workers currently receiving new sessions.
+    pub fn active_workers(&self) -> usize {
+        self.inner.router.lock().unwrap().active()
+    }
+
+    /// Stage an engine migration for an open session by id — the
+    /// service-side twin of [`SessionHandle::migrate_engine`], used by
+    /// the adaptive controller. Fails if no such session is open.
+    pub fn migrate_session(&self, session_id: u64, target: EngineKind) -> crate::Result<()> {
+        let s = self
+            .find_session(session_id)
+            .ok_or_else(|| anyhow::anyhow!("no open session {session_id}"))?;
+        request_migration(&s, target)
+    }
+
+    /// Shed up to `max` of the *stalest* queued frames of an open
+    /// session, counting them in `dropped_deadline` (not the
+    /// queue-full ledger). Returns how many frames were shed; `0` for
+    /// unknown sessions. The controller's deadline-aware load-shedding
+    /// lever.
+    pub fn shed_stale(&self, session_id: u64, max: usize) -> usize {
+        let Some(s) = self.find_session(session_id) else {
+            return 0;
+        };
+        let shed = s.queue.drain_front(max);
+        if shed > 0 {
+            s.sink.lock().unwrap().dropped_deadline += shed as u64;
+        }
+        shed
+    }
+
+    fn find_session(&self, session_id: u64) -> Option<Arc<SessionShared>> {
+        for wsh in &self.inner.workers {
+            let st = wsh.state.lock().unwrap();
+            if let Some(s) = st.sessions.iter().find(|s| s.id == session_id) {
+                return Some(Arc::clone(s));
+            }
+        }
+        None
     }
 
     /// Graceful shutdown: seal every session's intake, drain all
@@ -482,11 +680,35 @@ impl SessionHandle {
         SessionStats {
             frames_in: self.session.frames_in.load(Ordering::Relaxed),
             frames_done: sink.frames_done,
-            dropped: self.session.queue.dropped(),
+            dropped_queue: self.session.queue.dropped(),
+            dropped_deadline: sink.dropped_deadline,
+            deadline_hits: sink.deadline_hits,
+            deadline_misses: sink.deadline_misses,
+            migrations: sink.migrations,
             tracks_out: sink.tracks_out,
             latency: sink.latency.clone(),
             finished: sink.finished,
         }
+    }
+
+    /// Engine tier currently running this session (post-migration).
+    pub fn engine_kind(&self) -> EngineKind {
+        self.session.migration.lock().unwrap().current
+    }
+
+    /// Stage a migration of this session to the `target` engine tier.
+    ///
+    /// The handoff is *seq-exact and lazy*: frames already numbered at
+    /// the time of this call finish on the current engine; the first
+    /// later frame triggers the worker to snapshot the tracker state
+    /// ([`crate::engine::EngineState`]), warm-hand it to the target
+    /// engine, and
+    /// continue — no frame is lost or reordered, and for f64→f64 tier
+    /// pairs the track output is bit-identical to never migrating.
+    /// Fails for tiers that cannot exchange state (the `xla` bank
+    /// keeps device-resident state), either as source or target.
+    pub fn migrate_engine(&self, target: EngineKind) -> crate::Result<()> {
+        request_migration(&self.session, target)
     }
 
     /// Seal the session's intake: further `push_frame` calls return
@@ -544,7 +766,10 @@ fn worker_loop(inner: &ServiceInner, me: &WorkerShared) {
                 let mut stats = me.stats.lock().unwrap();
                 for s in &retired {
                     stats.sessions_closed += 1;
-                    stats.dropped_retired += s.queue.dropped();
+                    stats.dropped_queue_retired += s.queue.dropped();
+                    let sink = s.sink.lock().unwrap();
+                    stats.dropped_deadline_retired += sink.dropped_deadline;
+                    stats.migrations_retired += sink.migrations;
                 }
             }
         }
@@ -560,16 +785,95 @@ fn worker_loop(inner: &ServiceInner, me: &WorkerShared) {
             retire_session(inner, s);
         }
         if let Some((s, msg)) = found {
-            process_frame(me, &s, msg);
+            process_frame(inner, me, &s, msg);
         }
         st = me.state.lock().unwrap();
     }
 }
 
+/// Stage a migration request on a session (shared by
+/// [`SessionHandle::migrate_engine`] and
+/// [`TrackingService::migrate_session`]). Validated against the tier
+/// the session will be running once already-staged migrations apply.
+fn request_migration(s: &SessionShared, target: EngineKind) -> crate::Result<()> {
+    if !target.supports_migration() {
+        anyhow::bail!("engine {} cannot import migrated state", target.label());
+    }
+    let mut mig = s.migration.lock().unwrap();
+    let effective = mig.pending.back().map(|&(_, k)| k).unwrap_or(mig.current);
+    if !effective.supports_migration() {
+        anyhow::bail!("engine {} cannot export state for migration", effective.label());
+    }
+    if target == effective {
+        return Ok(()); // already (heading) there — idempotent
+    }
+    let after = s.frames_in.load(Ordering::Relaxed);
+    mig.pending.push_back((after, target));
+    Ok(())
+}
+
+/// Apply every staged migration due before frame `seq`: snapshot the
+/// current engine, warm-hand the state to the target tier, park the
+/// old engine. Returns how many migrations were applied.
+fn apply_due_migrations(
+    inner: &ServiceInner,
+    s: &SessionShared,
+    seq: u32,
+    slot: &mut Option<Box<dyn TrackerEngine>>,
+) -> u64 {
+    let mut applied = 0u64;
+    let mut mig = s.migration.lock().unwrap();
+    while let Some(&(after, target)) = mig.pending.front() {
+        if u64::from(seq) <= after {
+            break;
+        }
+        mig.pending.pop_front();
+        if target == mig.current {
+            continue;
+        }
+        let old = slot.as_mut().expect("live session owns an engine");
+        let Some(state) = old.export_state() else {
+            continue; // source cannot export (validated at request, but races are tolerated)
+        };
+        let mut fresh = match take_pooled(inner, target, s.params.sort_params) {
+            Some(engine) => engine,
+            None => match target.build(s.params.sort_params) {
+                Ok(engine) => engine,
+                Err(_) => continue, // target unavailable: keep running the current tier
+            },
+        };
+        if !fresh.import_state(&state) {
+            continue;
+        }
+        let mut old = slot.replace(fresh).expect("live session owns an engine");
+        old.reset();
+        park_pooled(inner, mig.current, s.params.sort_params, old);
+        mig.current = target;
+        applied += 1;
+    }
+    applied
+}
+
 /// Run one frame through its session's engine and publish the output.
-fn process_frame(me: &WorkerShared, s: &SessionShared, msg: FrameMsg) {
+///
+/// Applies staged engine migrations due before this frame first, then
+/// enforces the session deadline: a frame already past due at dequeue
+/// is shed (`dropped_deadline`) without running the engine; a
+/// processed frame is judged hit/miss on its push-to-poll latency.
+fn process_frame(inner: &ServiceInner, me: &WorkerShared, s: &SessionShared, msg: FrameMsg) {
     let t0 = Instant::now();
     let mut slot = s.engine.lock().unwrap();
+    let migrated = apply_due_migrations(inner, s, msg.seq, &mut slot);
+    let deadline = s.params.slo.deadline;
+    if let Some(d) = deadline {
+        if msg.arrival.elapsed() > d {
+            drop(slot);
+            let mut sink = s.sink.lock().unwrap();
+            sink.migrations += migrated;
+            sink.dropped_deadline += 1;
+            return;
+        }
+    }
     let engine = slot.as_mut().expect("live session owns an engine");
     let tracks: &[Track] = engine.update(&msg.boxes);
     let n_tracks = tracks.len() as u64;
@@ -578,7 +882,16 @@ fn process_frame(me: &WorkerShared, s: &SessionShared, msg: FrameMsg) {
         sink.rows.extend(tracks.iter().map(|t| (msg.seq, t.id, t.bbox)));
         sink.frames_done += 1;
         sink.tracks_out += n_tracks;
-        sink.latency.record(msg.arrival.elapsed());
+        sink.migrations += migrated;
+        let waited = msg.arrival.elapsed();
+        sink.latency.record(waited);
+        if let Some(d) = deadline {
+            if waited <= d {
+                sink.deadline_hits += 1;
+            } else {
+                sink.deadline_misses += 1;
+            }
+        }
     }
     drop(slot);
     let busy = t0.elapsed();
@@ -625,12 +938,10 @@ fn retire_session(inner: &ServiceInner, s: &SessionShared) {
         // bounded warm pool: keep enough engines to re-admit a full
         // complement of sessions instantly, drop the rest — an
         // always-on service churning heterogeneous sessions must not
-        // retain every engine it ever built
-        let cap = (inner.cfg.workers * 2).max(8);
-        let mut pool = inner.engine_pool.lock().unwrap();
-        if pool.len() < cap {
-            pool.push((s.params, engine));
-        }
+        // retain every engine it ever built. Keyed by the tier the
+        // session actually ended on (migrations may have swapped it).
+        let kind = s.migration.lock().unwrap().current;
+        park_pooled(inner, kind, s.params.sort_params, engine);
     }
     inner.router.lock().unwrap().release(s.id as usize);
     let mut sink = s.sink.lock().unwrap();
@@ -685,7 +996,7 @@ mod tests {
         assert!(stats.finished);
         assert_eq!(stats.frames_in, 60);
         assert_eq!(stats.frames_done, 60);
-        assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.dropped(), 0);
         assert_eq!(stats.tracks_out, rows.len() as u64);
         assert_eq!(stats.latency.count(), 60);
         svc.shutdown();
@@ -775,12 +1086,14 @@ mod tests {
         let stats = h.join();
         assert_eq!(stats.frames_in, 200);
         assert_eq!(
-            stats.frames_done + stats.dropped,
+            stats.frames_done + stats.dropped(),
             200,
             "every accepted frame is processed or counted shed"
         );
+        assert_eq!(stats.dropped_deadline, 0, "no deadline set: all drops are queue-full");
         let m = svc.shutdown();
-        assert_eq!(m.dropped, stats.dropped, "drops survive into service metrics");
+        assert_eq!(m.dropped_queue, stats.dropped_queue, "drops survive into service metrics");
+        assert_eq!(m.dropped_deadline, 0);
     }
 
     #[test]
@@ -795,7 +1108,7 @@ mod tests {
         let h = svc.open_session_default().unwrap();
         let rows = run_session(&h, &s);
         let stats = h.stats();
-        assert_eq!(stats.dropped, 0);
+        assert_eq!(stats.dropped(), 0);
         assert_eq!(stats.frames_done, 120);
         assert_eq!(rows, serial_rows(EngineKind::Native, &s));
         svc.shutdown();
@@ -848,6 +1161,158 @@ mod tests {
         h.push_frame(vec![Bbox::new(0.0, 0.0, 10.0, 20.0)]);
         drop(svc);
         assert!(h.stats().finished, "drop must drain and retire sessions");
+    }
+
+    #[test]
+    fn zero_deadline_sheds_every_frame_and_conserves() {
+        // an unmeetable deadline: every frame is past due at dequeue,
+        // so the engine never runs and every accepted frame lands in
+        // dropped_deadline — conservation still balances exactly
+        let s = seq("SVC-SLO", 50, 17);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc
+            .open_session(SessionParams {
+                slo: Slo { deadline: Some(Duration::ZERO), ..Default::default() },
+                ..Default::default()
+            })
+            .unwrap();
+        let rows = run_session(&h, &s);
+        assert!(rows.is_empty(), "shed frames never reach the engine");
+        let stats = h.stats();
+        assert_eq!(stats.frames_in, 50);
+        assert_eq!(stats.frames_done + stats.dropped_queue + stats.dropped_deadline, 50);
+        assert_eq!(stats.frames_done, 0);
+        assert_eq!(stats.deadline_hits + stats.deadline_misses, 0, "shed frames are not judged");
+        let m = svc.shutdown();
+        assert_eq!(m.dropped_deadline, stats.dropped_deadline);
+    }
+
+    #[test]
+    fn generous_deadline_judges_every_frame_a_hit() {
+        let s = seq("SVC-HIT", 40, 19);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc
+            .open_session(SessionParams {
+                slo: Slo { deadline: Some(Duration::from_secs(3600)), ..Default::default() },
+                ..Default::default()
+            })
+            .unwrap();
+        let rows = run_session(&h, &s);
+        assert_eq!(rows, serial_rows(EngineKind::Native, &s), "deadline bookkeeping is inert");
+        let stats = h.stats();
+        assert_eq!(stats.deadline_hits, 40);
+        assert_eq!(stats.deadline_misses, 0);
+        assert_eq!(stats.dropped_deadline, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn migration_mid_session_is_invisible_in_f64_output() {
+        // native → batch are bit-identical tiers: migrating between
+        // them mid-stream must leave the row stream exactly equal to
+        // an unmigrated run, and count exactly one migration
+        let s = seq("SVC-MIG", 60, 23);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc.open_session_default().unwrap();
+        for (i, frame) in s.frames.iter().enumerate() {
+            if i == 30 {
+                h.migrate_engine(EngineKind::Batch).unwrap();
+            }
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            assert!(h.push_frame(boxes));
+        }
+        h.join();
+        let rows = h.poll_tracks();
+        assert_eq!(rows, serial_rows(EngineKind::Native, &s));
+        let stats = h.stats();
+        assert_eq!(stats.migrations, 1);
+        assert_eq!(h.engine_kind(), EngineKind::Batch);
+        let m = svc.shutdown();
+        assert_eq!(m.migrations, 1, "migration survives into retired-session metrics");
+    }
+
+    #[test]
+    fn migration_is_idempotent_and_service_side_works() {
+        let s = seq("SVC-MIG2", 30, 29);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc.open_session_default().unwrap();
+        h.migrate_engine(EngineKind::Native).unwrap(); // no-op: already there
+        svc.migrate_session(h.id(), EngineKind::Batch).unwrap();
+        svc.migrate_session(h.id(), EngineKind::Batch).unwrap(); // no-op: already staged
+        assert!(svc.migrate_session(999_999, EngineKind::Batch).is_err(), "unknown session");
+        let rows = run_session(&h, &s);
+        assert_eq!(rows, serial_rows(EngineKind::Native, &s));
+        assert_eq!(h.stats().migrations, 1, "idempotent requests collapse to one handoff");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn migration_involving_xla_is_rejected() {
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc.open_session_default().unwrap();
+        assert!(h.migrate_engine(EngineKind::Xla).is_err(), "xla cannot import state");
+        let hx = svc
+            .open_session(SessionParams { engine: EngineKind::Xla, ..Default::default() })
+            .unwrap();
+        assert!(hx.migrate_engine(EngineKind::Batch).is_err(), "xla cannot export state");
+        h.join();
+        hx.join();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn active_worker_bound_confines_new_sessions() {
+        let svc = TrackingService::start(ServiceConfig {
+            workers: 1,
+            max_workers: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(svc.active_workers(), 1);
+        let a = svc.open_session_default().unwrap();
+        let b = svc.open_session_default().unwrap();
+        assert_eq!(a.worker(), 0);
+        assert_eq!(b.worker(), 0, "parked workers receive nothing");
+        assert_eq!(svc.set_active_workers(4), 4);
+        let c = svc.open_session_default().unwrap();
+        assert_ne!(c.worker(), 0, "scale-up routes new sessions to freed workers");
+        assert_eq!(svc.set_active_workers(99), 4, "clamped to the spawned pool");
+        assert_eq!(svc.metrics().active_workers, 4);
+        a.join();
+        b.join();
+        c.join();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shed_stale_counts_as_deadline_drops_and_conserves() {
+        let s = seq("SVC-SHEDOP", 300, 31);
+        let svc = TrackingService::start(ServiceConfig {
+            queue_capacity: 256,
+            push_policy: PushPolicy::Block,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = svc.open_session_default().unwrap();
+        let mut shed_total = 0usize;
+        for (i, frame) in s.frames.iter().enumerate() {
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            assert!(h.push_frame(boxes));
+            if i % 50 == 49 {
+                shed_total += svc.shed_stale(h.id(), 5);
+            }
+        }
+        assert_eq!(svc.shed_stale(999_999, 5), 0, "unknown session sheds nothing");
+        let stats = h.join();
+        assert_eq!(stats.frames_in, 300);
+        assert_eq!(stats.dropped_deadline, shed_total as u64, "sheds land in the deadline ledger");
+        assert_eq!(stats.dropped_queue, 0, "Block policy: no queue-full drops");
+        assert_eq!(
+            stats.frames_done + stats.dropped_queue + stats.dropped_deadline,
+            300,
+            "conservation under controller shedding"
+        );
+        svc.shutdown();
     }
 
     #[test]

@@ -82,6 +82,28 @@ impl ParallelSort {
         self.phases.reset();
     }
 
+    /// Snapshot the full tracking state (engine migration; exact —
+    /// see [`crate::sort::snapshot`]).
+    pub fn export_state(&self) -> crate::sort::EngineState {
+        crate::sort::EngineState {
+            frame_count: self.frame_count,
+            next_id: self.next_id,
+            trackers: self
+                .trackers
+                .iter()
+                .map(crate::sort::TrackerSnapshot::from_tracker)
+                .collect(),
+        }
+    }
+
+    /// Replace all tracking state with `state` (scratch buffers kept).
+    pub fn import_state(&mut self, state: &crate::sort::EngineState) {
+        self.trackers.clear();
+        self.trackers.extend(state.trackers.iter().map(|s| s.to_tracker()));
+        self.frame_count = state.frame_count;
+        self.next_id = state.next_id;
+    }
+
     /// Process one frame (parallel phases; same semantics as `Sort`).
     pub fn update(&mut self, dets: &[Bbox]) -> &[Track] {
         self.frame_count += 1;

@@ -34,6 +34,8 @@ use crate::coordinator::strong::ParallelSort;
 use crate::runtime::{TrackerBank, XlaRuntime};
 use crate::sort::{BatchSort, BatchSortF32, Bbox, PhaseTimer, Sort, SortParams, Track};
 
+pub use crate::sort::{EngineState, TrackerSnapshot};
+
 /// A multi-object tracker backend for one video stream.
 ///
 /// Implementations own all per-stream state (filter states, lifecycle
@@ -78,6 +80,25 @@ pub trait TrackerEngine: Send {
     /// Stable backend name (`native` | `batch` | `batchf32` |
     /// `strong` | `xla`).
     fn name(&self) -> &'static str;
+
+    /// Snapshot the full tracking state in engine-neutral form
+    /// ([`EngineState`]) so a live stream can migrate to another
+    /// backend mid-run. `None` when the backend does not support
+    /// migration (the fixed-slot `xla` bank keeps state device-side).
+    ///
+    /// f64 backends export exactly (every value crosses by bits); the
+    /// f32 tier widens losslessly.
+    fn export_state(&self) -> Option<EngineState> {
+        None
+    }
+
+    /// Replace this engine's tracking state with `state` (the receiving
+    /// half of a migration); scratch buffers are kept warm. Returns
+    /// `false` when the backend does not support migration — the
+    /// engine's state is untouched in that case.
+    fn import_state(&mut self, _state: &EngineState) -> bool {
+        false
+    }
 }
 
 impl TrackerEngine for Sort {
@@ -99,6 +120,15 @@ impl TrackerEngine for Sort {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn export_state(&self) -> Option<EngineState> {
+        Some(Sort::export_state(self))
+    }
+
+    fn import_state(&mut self, state: &EngineState) -> bool {
+        Sort::import_state(self, state);
+        true
     }
 }
 
@@ -122,6 +152,15 @@ impl TrackerEngine for BatchSort {
     fn name(&self) -> &'static str {
         "batch"
     }
+
+    fn export_state(&self) -> Option<EngineState> {
+        Some(BatchSort::export_state(self))
+    }
+
+    fn import_state(&mut self, state: &EngineState) -> bool {
+        BatchSort::import_state(self, state);
+        true
+    }
 }
 
 impl TrackerEngine for BatchSortF32 {
@@ -144,6 +183,15 @@ impl TrackerEngine for BatchSortF32 {
     fn name(&self) -> &'static str {
         "batchf32"
     }
+
+    fn export_state(&self) -> Option<EngineState> {
+        Some(BatchSortF32::export_state(self))
+    }
+
+    fn import_state(&mut self, state: &EngineState) -> bool {
+        BatchSortF32::import_state(self, state);
+        true
+    }
 }
 
 impl TrackerEngine for ParallelSort {
@@ -165,6 +213,15 @@ impl TrackerEngine for ParallelSort {
 
     fn name(&self) -> &'static str {
         "strong"
+    }
+
+    fn export_state(&self) -> Option<EngineState> {
+        Some(ParallelSort::export_state(self))
+    }
+
+    fn import_state(&mut self, state: &EngineState) -> bool {
+        ParallelSort::import_state(self, state);
+        true
     }
 }
 
@@ -282,6 +339,15 @@ impl EngineKind {
             EngineKind::Strong { .. } => "strong",
             EngineKind::Xla => "xla",
         }
+    }
+
+    /// Whether this tier can exchange tracker state with other tiers
+    /// via [`EngineState`] — i.e. whether it is a valid source *and*
+    /// target for a live session migration. Everything but the XLA
+    /// bank qualifies; the bank keeps device-resident state it cannot
+    /// export or import.
+    pub fn supports_migration(&self) -> bool {
+        !matches!(self, EngineKind::Xla)
     }
 
     /// Self-contained spec string that round-trips through
@@ -486,6 +552,83 @@ mod tests {
         // non-bank kinds accept (and ignore) the runtime
         let mut n = EngineKind::Native.build_with_runtime(&rt, params()).expect("native");
         assert_eq!(run_sequence(&mut *n, &synth.sequence), ra);
+    }
+
+    #[test]
+    fn migration_between_f64_engines_is_bit_exact_mid_stream() {
+        // run 25 frames on native, export at frame 25, import into
+        // batch, continue both; the migrated run must stay
+        // f64::to_bits-identical to the unmigrated one
+        let synth = generate_sequence(&SynthConfig::mot15("MIG", 60, 6, 11));
+        let mut reference = EngineKind::Native.build(params()).unwrap();
+        let mut source = EngineKind::Native.build(params()).unwrap();
+        let mut boxes: Vec<Bbox> = Vec::new();
+        for frame in &synth.sequence.frames[..25] {
+            boxes.clear();
+            boxes.extend(frame.detections.iter().map(|d| d.bbox));
+            reference.update(&boxes);
+            source.update(&boxes);
+        }
+        let state = source.export_state().expect("native exports");
+        let mut target = EngineKind::Batch.build(params()).unwrap();
+        assert!(target.import_state(&state), "batch imports");
+        assert_eq!(target.n_trackers(), reference.n_trackers());
+        for frame in &synth.sequence.frames[25..] {
+            boxes.clear();
+            boxes.extend(frame.detections.iter().map(|d| d.bbox));
+            let want = reference.update(&boxes).to_vec();
+            let got = target.update(&boxes).to_vec();
+            assert_eq!(want.len(), got.len(), "frame {}", frame.index);
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.id, g.id, "frame {}", frame.index);
+                assert_eq!(
+                    w.bbox.to_array().map(f64::to_bits),
+                    g.bbox.to_array().map(f64::to_bits),
+                    "frame {} id {}",
+                    frame.index,
+                    w.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn xla_bank_does_not_support_migration() {
+        let mut e = EngineKind::Xla.build(params()).unwrap();
+        e.update(&[Bbox::new(0.0, 0.0, 10.0, 20.0)]);
+        assert!(e.export_state().is_none());
+        assert!(!e.import_state(&EngineState::default()));
+        assert_eq!(e.n_trackers(), 1, "failed import leaves state untouched");
+    }
+
+    #[test]
+    fn f32_round_trip_through_f64_state_is_deterministic() {
+        let synth = generate_sequence(&SynthConfig::mot15("M32", 40, 5, 13));
+        let run = || {
+            let mut e = EngineKind::Batch.build(params()).unwrap();
+            let mut rows = Vec::new();
+            let mut boxes: Vec<Bbox> = Vec::new();
+            for (k, frame) in synth.sequence.frames.iter().enumerate() {
+                boxes.clear();
+                boxes.extend(frame.detections.iter().map(|d| d.bbox));
+                if k == 15 {
+                    let s = e.export_state().unwrap();
+                    let mut f32e = EngineKind::BatchF32.build(params()).unwrap();
+                    assert!(f32e.import_state(&s));
+                    e = f32e;
+                } else if k == 30 {
+                    let s = e.export_state().unwrap();
+                    let mut f64e = EngineKind::Batch.build(params()).unwrap();
+                    assert!(f64e.import_state(&s));
+                    e = f64e;
+                }
+                for t in e.update(&boxes) {
+                    rows.push((t.id, t.bbox.to_array().map(f64::to_bits)));
+                }
+            }
+            rows
+        };
+        assert_eq!(run(), run(), "batch→batchf32→batch must be run-to-run deterministic");
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! scenario, f64 tier) and fails when its MOTA trails the sibling by
 //! more than [`GateConfig::f32_mota_delta`] — the reduced-precision
 //! tier is allowed to be approximate, not to change tracking behavior.
+//!
+//! Overload cells (those carrying an `slo` block) are gated on their
+//! *declared SLO*, within the current report: p99 push-to-poll latency
+//! must hold under the session deadline, and delivered-row MOTA may
+//! trail the cell's 1x sibling (same id sans the `-a{N}x` suffix) by
+//! at most the session's MOTA budget. Their MOTA is timing-coupled
+//! (drops depend on load), so the ordinary vs-baseline MOTA margin is
+//! *not* applied to them — the budget-vs-sibling bound is the
+//! contract.
 
 use crate::benchkit::Table;
 
@@ -56,6 +65,12 @@ pub enum CellStatus {
     /// An f32-tier cell trails its f64 sibling's MOTA by more than
     /// `f32_mota_delta` in the current report.
     PrecisionGap,
+    /// An overload cell's p99 push-to-poll latency exceeded the
+    /// session deadline it declared.
+    DeadlineMissed,
+    /// An overload cell's delivered-row MOTA trails its 1x sibling by
+    /// more than the session's declared MOTA budget.
+    OverloadQualityGap,
     /// Cell exists only in the current report (informational).
     New,
 }
@@ -69,6 +84,8 @@ impl CellStatus {
             CellStatus::QualityRegressed => "MOTA REGRESSED",
             CellStatus::Missing => "MISSING",
             CellStatus::PrecisionGap => "F32 MOTA GAP",
+            CellStatus::DeadlineMissed => "DEADLINE MISSED",
+            CellStatus::OverloadQualityGap => "OVERLOAD MOTA GAP",
             CellStatus::New => "new",
         }
     }
@@ -81,6 +98,8 @@ impl CellStatus {
                 | CellStatus::QualityRegressed
                 | CellStatus::Missing
                 | CellStatus::PrecisionGap
+                | CellStatus::DeadlineMissed
+                | CellStatus::OverloadQualityGap
         )
     }
 }
@@ -176,9 +195,13 @@ pub fn compare(base: &LabReport, cur: &LabReport, gate: &GateConfig) -> Comparis
                     f64::INFINITY
                 };
                 let mota_delta = c.quality.mota - b.quality.mota;
+                // overload cells: MOTA is timing-coupled (drops
+                // depend on load), so the vs-baseline quality margin
+                // doesn't apply — the SLO pass below bounds them
+                // against their 1x sibling instead
                 let status = if ratio < 1.0 / fps_margin {
                     CellStatus::FpsRegressed
-                } else if mota_delta < -gate.mota_margin {
+                } else if c.slo.is_none() && mota_delta < -gate.mota_margin {
                     CellStatus::QualityRegressed
                 } else {
                     CellStatus::Pass
@@ -227,15 +250,51 @@ pub fn compare(base: &LabReport, cur: &LabReport, gate: &GateConfig) -> Comparis
             }
         }
     }
+    // SLO bound: every overload cell in the current report is held to
+    // the SLO it declared — p99 under the deadline, delivered-row
+    // MOTA within the budget of its 1x sibling (same current report,
+    // same footage). Like the precision bound, this is a property of
+    // this build, so it applies to new cells too.
+    for c in &cur.cells {
+        let Some(slo) = &c.slo else { continue };
+        let verdict = if slo.deadline_ms > 0.0 && slo.p99_ms > slo.deadline_ms {
+            Some(CellStatus::DeadlineMissed)
+        } else if let Some(sib) =
+            overload_sibling_id(&c.id).and_then(|base| cur.cell(&base))
+        {
+            (c.quality.mota < sib.quality.mota - slo.mota_budget)
+                .then_some(CellStatus::OverloadQualityGap)
+        } else {
+            None
+        };
+        if let Some(status) = verdict {
+            if let Some(d) = cells.iter_mut().find(|d| d.id == c.id) {
+                if !d.status.fails() {
+                    d.status = status;
+                }
+            }
+        }
+    }
     let pass = cells.iter().all(|c| !c.status.fails());
     Comparison { cells, pass }
+}
+
+/// The 1x sibling's id for an overload cell id: strips a trailing
+/// `-a{N}x` admission suffix (`batch-…-s4-a2x` → `batch-…-s4`).
+/// Returns `None` when the id carries no admission suffix.
+fn overload_sibling_id(id: &str) -> Option<String> {
+    let (base, tail) = id.rsplit_once("-a")?;
+    let digits = tail.strip_suffix('x')?;
+    let numeric =
+        !digits.is_empty() && digits.chars().all(|ch| ch.is_ascii_digit() || ch == '.');
+    numeric.then(|| base.to_string())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::lab::report::{
-        CellReport, CounterTotals, FpsStats, LabReport, Manifest, QualityStats,
+        CellReport, CounterTotals, FpsStats, LabReport, Manifest, QualityStats, SloReport,
     };
 
     fn report_with(cells: Vec<(&str, f64, f64)>) -> LabReport {
@@ -274,8 +333,30 @@ mod tests {
                         id_switches: 2,
                     },
                     counters: CounterTotals::default(),
+                    slo: None,
                 })
                 .collect(),
+        }
+    }
+
+    /// A healthy SLO block for overload-cell tests; tweak fields to
+    /// construct violations.
+    fn slo_ok() -> SloReport {
+        SloReport {
+            admission: 2.0,
+            sustainable_fps: 10_000.0,
+            deadline_ms: 20.0,
+            mota_budget: 0.35,
+            p50_ms: 0.5,
+            p99_ms: 4.0,
+            deadline_hit_ratio: 0.99,
+            delivered: 280,
+            dropped_queue: 30,
+            dropped_deadline: 10,
+            scale_ups: 1,
+            scale_downs: 0,
+            migrations: 2,
+            sheds: 1,
         }
     }
 
@@ -399,6 +480,68 @@ mod tests {
         let cmp = compare(&report_with(vec![]), &orphan, &GateConfig::default());
         assert!(cmp.pass);
         assert_eq!(cmp.cells[0].status, CellStatus::New);
+    }
+
+    #[test]
+    fn overload_cell_missing_its_deadline_fails() {
+        let mk = |p99_ms: f64| {
+            let mut r = report_with(vec![("batch-x-s4", 1000.0, 0.60), ("batch-x-s4-a2x", 900.0, 0.50)]);
+            r.cells[1].slo = Some(SloReport { p99_ms, ..slo_ok() });
+            r
+        };
+        // p99 under the declared 20 ms deadline -> pass
+        let good = mk(12.0);
+        assert!(compare(&good, &good, &GateConfig::default()).pass);
+        // p99 over the deadline -> fail, even against itself
+        let late = mk(35.0);
+        let cmp = compare(&late, &late, &GateConfig::default());
+        assert!(!cmp.pass);
+        let cell = cmp.cells.iter().find(|c| c.id.ends_with("-a2x")).unwrap();
+        assert_eq!(cell.status, CellStatus::DeadlineMissed);
+        assert_eq!(cell.status.label(), "DEADLINE MISSED");
+    }
+
+    #[test]
+    fn overload_mota_outside_the_budget_fails_within_passes() {
+        let mk = |over_mota: f64| {
+            let mut r =
+                report_with(vec![("batch-x-s4", 1000.0, 0.60), ("batch-x-s4-a2x", 900.0, over_mota)]);
+            r.cells[1].slo = Some(slo_ok()); // budget 0.35
+            r
+        };
+        // trails the sibling by 0.30 <= budget -> pass (note the
+        // plain vs-baseline MOTA margin of 0.1 would have failed this
+        // if it applied to SLO cells)
+        let within = mk(0.30);
+        let base = mk(0.55);
+        assert!(compare(&base, &within, &GateConfig::default()).pass);
+        // trails by 0.40 > budget -> fail
+        let outside = mk(0.19);
+        let cmp = compare(&base, &outside, &GateConfig::default());
+        assert!(!cmp.pass);
+        let cell = cmp.cells.iter().find(|c| c.id.ends_with("-a2x")).unwrap();
+        assert_eq!(cell.status, CellStatus::OverloadQualityGap);
+        // a new overload cell (absent from the baseline) is still held
+        // to its budget
+        let empty = report_with(vec![("batch-x-s4", 1000.0, 0.60)]);
+        let cmp = compare(&empty, &outside, &GateConfig::default());
+        assert!(!cmp.pass, "budget applies to new cells too");
+        // without a 1x sibling there is nothing to pair against
+        let mut orphan = report_with(vec![("batch-x-s4-a2x", 900.0, 0.10)]);
+        orphan.cells[0].slo = Some(slo_ok());
+        assert!(compare(&report_with(vec![]), &orphan, &GateConfig::default()).pass);
+    }
+
+    #[test]
+    fn overload_sibling_id_strips_only_admission_suffixes() {
+        assert_eq!(
+            overload_sibling_id("batch-d5-dp90-fp5-occ-s4-a2x").as_deref(),
+            Some("batch-d5-dp90-fp5-occ-s4")
+        );
+        assert_eq!(overload_sibling_id("batch-d5-dp90-fp5-occ-s4-a1.5x").as_deref(),
+            Some("batch-d5-dp90-fp5-occ-s4"));
+        assert_eq!(overload_sibling_id("batch-d5-dp90-fp5-occ-s4"), None);
+        assert_eq!(overload_sibling_id("native-axx"), None);
     }
 
     #[test]

@@ -9,8 +9,15 @@
 //! the serial engine loop or the full [`TrackingService`] session
 //! runtime — and emits one versioned JSON report ([`report`]) with
 //! per-cell FPS statistics, CLEAR-MOT quality and kernel counters.
-//! [`mod@compare`] diffs two reports under configurable noise margins
-//! and produces the pass/fail verdict CI gates on.
+//! The admission axis adds *overload* cells: footage re-admitted at a
+//! multiple of the cell's measured sustainable rate through the
+//! SLO-aware adaptive runtime, reported with latency percentiles,
+//! deadline-hit ratio, the split drop ledger and controller actions
+//! ([`SloReport`]). [`mod@compare`] diffs two reports under
+//! configurable noise margins — plus the SLO criteria: overload p99
+//! must hold under the session deadline and delivered-row MOTA within
+//! the declared budget of the 1x sibling — and produces the pass/fail
+//! verdict CI gates on.
 //!
 //! CLI surface (`smalltrack lab …`):
 //!
@@ -35,23 +42,34 @@ pub mod scenario;
 pub use compare::{compare, CellDelta, CellStatus, Comparison, GateConfig};
 pub use report::{
     CellReport, CounterTotals, FpsStats, KernelEntry, LabReport, Manifest, QualityStats,
-    SCHEMA_VERSION,
+    SloReport, SCHEMA_VERSION,
 };
 pub use scenario::{Scenario, ScenarioAxes};
 
 use crate::benchkit::BenchConfig;
 
-/// Run every cell of a grid and assemble the report. `smoke` is
-/// recorded in the manifest (and should match how `cfg` was sized).
-/// Progress goes to stderr so `--json -`-style piping stays clean.
-pub fn run_grid(axes: &ScenarioAxes, cfg: &BenchConfig, smoke: bool) -> crate::Result<LabReport> {
-    let cells = axes.cells();
+/// Run an explicit cell list under a prebuilt manifest. This is the
+/// primitive behind [`run_grid`]; callers with a non-cartesian suite
+/// (e.g. the smoke grid plus its one overload cell,
+/// [`ScenarioAxes::smoke_cells`]) use it directly. Progress goes to
+/// stderr so `--json -`-style piping stays clean.
+pub fn run_cells(
+    cells: &[Scenario],
+    manifest: Manifest,
+    cfg: &BenchConfig,
+) -> crate::Result<LabReport> {
     let mut out = Vec::with_capacity(cells.len());
     for (i, cell) in cells.iter().enumerate() {
         eprintln!("[{}/{}] {}", i + 1, cells.len(), cell.id());
         out.push(cell.run(cfg)?);
     }
-    Ok(LabReport { manifest: Manifest::for_axes(axes, smoke), cells: out })
+    Ok(LabReport { manifest, cells: out })
+}
+
+/// Run every cell of a grid and assemble the report. `smoke` is
+/// recorded in the manifest (and should match how `cfg` was sized).
+pub fn run_grid(axes: &ScenarioAxes, cfg: &BenchConfig, smoke: bool) -> crate::Result<LabReport> {
+    run_cells(&axes.cells(), Manifest::for_axes(axes, smoke), cfg)
 }
 
 #[cfg(test)]
@@ -70,6 +88,7 @@ mod tests {
             fp_rates: vec![0.05],
             occlusion: vec![false],
             stream_counts: vec![1],
+            admissions: vec![1.0],
             frames: 30,
             seed: 11,
         };
@@ -91,7 +110,11 @@ mod tests {
             "quality must be deterministic in the grid seed"
         );
         assert_eq!(report.cells[0].counters, again.cells[0].counters);
-        let cmp = compare(&report, &again, &GateConfig { fps_margin: 50.0, mota_margin: 0.0 });
+        let cmp = compare(
+            &report,
+            &again,
+            &GateConfig { fps_margin: 50.0, mota_margin: 0.0, ..GateConfig::default() },
+        );
         assert!(cmp.pass, "{}", cmp.summary());
     }
 }

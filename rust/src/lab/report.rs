@@ -20,7 +20,8 @@ use std::path::Path;
 use super::scenario::ScenarioAxes;
 
 /// Version of the report JSON schema (top-level `schema` field).
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2 added the optional per-cell `slo` block (overload cells).
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Frames-per-second statistics over the benchkit samples.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -240,6 +241,84 @@ impl CounterTotals {
     }
 }
 
+/// SLO figures for an overload cell: what was admitted, what the
+/// session SLO demanded, and how the adaptive runtime held up.
+/// Present only on cells with `admission > 1` — classic cells have no
+/// deadline to judge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloReport {
+    /// Admission-rate multiplier vs the measured sustainable rate.
+    pub admission: f64,
+    /// Measured sustainable rate (frames/s, one active worker).
+    pub sustainable_fps: f64,
+    /// Per-frame push-to-poll deadline the sessions carried (ms).
+    pub deadline_ms: f64,
+    /// MOTA degradation budget vs the 1x sibling (gate criterion).
+    pub mota_budget: f64,
+    /// Median push-to-poll latency over delivered frames (ms).
+    pub p50_ms: f64,
+    /// p99 push-to-poll latency over delivered frames (ms) — the gate
+    /// asserts this holds under the deadline.
+    pub p99_ms: f64,
+    /// Delivered frames that met their deadline / all delivered.
+    pub deadline_hit_ratio: f64,
+    /// Frames fully processed and delivered.
+    pub delivered: u64,
+    /// Frames shed by full queues (`DropOldest`).
+    pub dropped_queue: u64,
+    /// Frames shed for staleness (past-due at dequeue + controller
+    /// shed actions) — accounted separately from queue drops.
+    pub dropped_deadline: u64,
+    /// Controller scale-up actions issued during the run.
+    pub scale_ups: u64,
+    /// Controller scale-down actions issued during the run.
+    pub scale_downs: u64,
+    /// Engine-tier migrations actually applied to sessions.
+    pub migrations: u64,
+    /// Controller shed actions issued during the run.
+    pub sheds: u64,
+}
+
+impl SloReport {
+    fn to_value(self) -> Value {
+        Value::obj(vec![
+            ("admission", Value::Num(self.admission)),
+            ("sustainable_fps", Value::Num(self.sustainable_fps)),
+            ("deadline_ms", Value::Num(self.deadline_ms)),
+            ("mota_budget", Value::Num(self.mota_budget)),
+            ("p50_ms", Value::Num(self.p50_ms)),
+            ("p99_ms", Value::Num(self.p99_ms)),
+            ("deadline_hit_ratio", Value::Num(self.deadline_hit_ratio)),
+            ("delivered", Value::from_u64(self.delivered)),
+            ("dropped_queue", Value::from_u64(self.dropped_queue)),
+            ("dropped_deadline", Value::from_u64(self.dropped_deadline)),
+            ("scale_ups", Value::from_u64(self.scale_ups)),
+            ("scale_downs", Value::from_u64(self.scale_downs)),
+            ("migrations", Value::from_u64(self.migrations)),
+            ("sheds", Value::from_u64(self.sheds)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<SloReport> {
+        Ok(SloReport {
+            admission: req_num(v, "admission")?,
+            sustainable_fps: req_num(v, "sustainable_fps")?,
+            deadline_ms: req_num(v, "deadline_ms")?,
+            mota_budget: req_num(v, "mota_budget")?,
+            p50_ms: req_num(v, "p50_ms")?,
+            p99_ms: req_num(v, "p99_ms")?,
+            deadline_hit_ratio: req_num(v, "deadline_hit_ratio")?,
+            delivered: req_u64(v, "delivered")?,
+            dropped_queue: req_u64(v, "dropped_queue")?,
+            dropped_deadline: req_u64(v, "dropped_deadline")?,
+            scale_ups: req_u64(v, "scale_ups")?,
+            scale_downs: req_u64(v, "scale_downs")?,
+            migrations: req_u64(v, "migrations")?,
+            sheds: req_u64(v, "sheds")?,
+        })
+    }
+}
+
 /// One scenario cell's measured row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellReport {
@@ -267,11 +346,13 @@ pub struct CellReport {
     pub quality: QualityStats,
     /// Kernel-counter snapshot.
     pub counters: CounterTotals,
+    /// SLO figures — overload cells only.
+    pub slo: Option<SloReport>,
 }
 
 impl CellReport {
     fn to_value(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("id", Value::Str(self.id.clone())),
             ("engine", Value::Str(self.engine.clone())),
             ("streams", Value::from_u64(self.streams as u64)),
@@ -284,7 +365,11 @@ impl CellReport {
             ("fps", self.fps.to_value()),
             ("quality", self.quality.to_value()),
             ("counters", self.counters.to_value()),
-        ])
+        ];
+        if let Some(slo) = self.slo {
+            fields.push(("slo", slo.to_value()));
+        }
+        Value::obj(fields)
     }
 
     fn from_value(v: &Value) -> anyhow::Result<CellReport> {
@@ -308,6 +393,7 @@ impl CellReport {
                 v.get("counters").ok_or_else(|| anyhow!("missing 'counters'"))?,
             )
             .context("counters")?,
+            slo: v.get("slo").map(SloReport::from_value).transpose().context("slo")?,
         })
     }
 }
@@ -541,6 +627,47 @@ mod tests {
                         bytes: 60000,
                     }],
                 },
+                slo: None,
+            },
+            CellReport {
+                id: "batch-d5-dp90-fp5-occ-s4-a2x".into(),
+                engine: "batch".into(),
+                streams: 4,
+                max_objects: 5,
+                det_prob: 0.9,
+                fp_rate: 0.05,
+                occlusion: true,
+                frames: 80,
+                total_frames: 320,
+                fps: FpsStats { median: 800.0, mean: 800.0, stddev: 0.0, min: 800.0 },
+                quality: QualityStats {
+                    mota: 0.5,
+                    motp: 0.88,
+                    precision: 0.96,
+                    recall: 0.7,
+                    n_gt: 1600,
+                    tp: 1120,
+                    fp: 40,
+                    fn_: 480,
+                    id_switches: 12,
+                },
+                counters: CounterTotals::default(),
+                slo: Some(SloReport {
+                    admission: 2.0,
+                    sustainable_fps: 50_000.0,
+                    deadline_ms: 20.0,
+                    mota_budget: 0.35,
+                    p50_ms: 0.4,
+                    p99_ms: 3.5,
+                    deadline_hit_ratio: 0.995,
+                    delivered: 280,
+                    dropped_queue: 25,
+                    dropped_deadline: 15,
+                    scale_ups: 2,
+                    scale_downs: 1,
+                    migrations: 3,
+                    sheds: 1,
+                }),
             }],
         }
     }
@@ -576,9 +703,9 @@ mod tests {
 
     #[test]
     fn missing_fields_error_instead_of_panicking() {
-        let v = parse(r#"{"schema": 1, "kind": "lab"}"#).unwrap();
+        let v = parse(r#"{"schema": 2, "kind": "lab"}"#).unwrap();
         assert!(LabReport::from_value(&v).is_err());
-        let v2 = parse(r#"{"schema": 1, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
+        let v2 = parse(r#"{"schema": 2, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
         assert!(LabReport::from_value(&v2).is_err());
     }
 

@@ -13,21 +13,34 @@
 //! frames round-robin, drain) so a regression anywhere in the serving
 //! stack — not just the tracker core — moves the number.
 //!
-//! Everything is deterministic in the grid seed: cell ids, per-stream
-//! synthetic sequences, and therefore every quality figure. Timing is
-//! the only nondeterministic output, which is exactly what the compare
-//! margin in [`mod@crate::lab::compare`] absorbs.
+//! The admission axis turns a cell into an *overload* cell: frames
+//! are paced at `admission ×` the cell's measured sustainable rate
+//! against a deadline-carrying service with adaptive-control headroom,
+//! and the report row gains an [`SloReport`] (latency percentiles,
+//! deadline-hit ratio, drop ledger split, controller actions) that
+//! `lab gate` holds to the session's declared SLO.
+//!
+//! Everything except timing-coupled overload figures is deterministic
+//! in the grid seed: cell ids, per-stream synthetic sequences, and
+//! therefore every 1x-admission quality figure. Timing is the
+//! nondeterministic output, which is exactly what the compare margins
+//! in [`mod@crate::lab::compare`] absorb.
 
 use crate::benchkit::{bench, BenchConfig, Measurement};
-use crate::coordinator::{PushPolicy, ServiceConfig, SessionParams, TrackingService};
+use crate::coordinator::{
+    Action, ControlConfig, Controller, PushPolicy, ServiceConfig, SessionParams, SessionStats, Slo,
+    TrackingService,
+};
 use crate::data::synth::{generate_sequence, SynthConfig, SynthSequence};
 use crate::engine::{run_sequence, EngineKind, TrackerEngine};
 use crate::linalg::snapshot;
 use crate::runtime::XlaRuntime;
-use crate::sort::quality::evaluate_engine;
-use crate::sort::{MotMetrics, SortParams};
+use crate::sort::quality::{evaluate, evaluate_engine, EvalFrame};
+use crate::sort::{Bbox, MotMetrics, SortParams};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
-use super::report::{CellReport, CounterTotals, FpsStats, QualityStats};
+use super::report::{CellReport, CounterTotals, FpsStats, QualityStats, SloReport};
 
 /// The grid: one scenario per element of the cartesian product of the
 /// axes. Keep axes short — cells multiply.
@@ -48,6 +61,12 @@ pub struct ScenarioAxes {
     /// Concurrent streams per cell: 1 = serial engine loop, >1 = the
     /// cell runs through [`TrackingService`] sessions.
     pub stream_counts: Vec<usize>,
+    /// Admission-rate multipliers vs the cell's measured sustainable
+    /// rate. `1.0` = the classic throughput cell; `> 1.0` = an
+    /// overload cell driven through the SLO-aware adaptive runtime
+    /// (multi-stream only — single-stream cells skip overload
+    /// multipliers, there is no serving stack to overload).
+    pub admissions: Vec<f64>,
     /// Frames per stream.
     pub frames: u32,
     /// Master seed (drives every cell's synthetic data).
@@ -74,6 +93,7 @@ impl ScenarioAxes {
             fp_rates: vec![0.05],
             occlusion: vec![false, true],
             stream_counts: vec![1, 4],
+            admissions: vec![1.0],
             frames: 200,
             seed: 7,
         }
@@ -93,13 +113,29 @@ impl ScenarioAxes {
             fp_rates: vec![0.05],
             occlusion: vec![true],
             stream_counts: vec![1, 4],
+            admissions: vec![1.0],
             frames: 80,
             seed: 7,
         }
     }
 
+    /// The CI smoke *suite*: the smoke grid plus one overload cell —
+    /// the 4-stream f64-batch smoke cell re-admitted at 2x its
+    /// sustainable rate through the adaptive runtime. This is the cell
+    /// the deadline/budget gate criteria bite on in CI.
+    pub fn smoke_cells() -> Vec<Scenario> {
+        let mut cells = ScenarioAxes::smoke().cells();
+        let base = cells
+            .iter()
+            .find(|c| c.engine == EngineKind::Batch && c.streams > 1)
+            .copied()
+            .expect("smoke grid always has a multi-stream batch cell");
+        cells.push(Scenario { admission: 2.0, ..base });
+        cells
+    }
+
     /// Expand the axes into concrete cells (deterministic order:
-    /// engines outermost, stream counts innermost).
+    /// engines outermost, admission multipliers innermost).
     pub fn cells(&self) -> Vec<Scenario> {
         let mut out = Vec::new();
         for &engine in &self.engines {
@@ -108,16 +144,23 @@ impl ScenarioAxes {
                     for &fp_rate in &self.fp_rates {
                         for &occlusion in &self.occlusion {
                             for &streams in &self.stream_counts {
-                                out.push(Scenario {
-                                    engine,
-                                    max_objects,
-                                    det_prob,
-                                    fp_rate,
-                                    occlusion,
-                                    streams,
-                                    frames: self.frames,
-                                    seed: self.seed,
-                                });
+                                for &admission in &self.admissions {
+                                    // overload needs a serving stack
+                                    if admission > 1.0 && streams <= 1 {
+                                        continue;
+                                    }
+                                    out.push(Scenario {
+                                        engine,
+                                        max_objects,
+                                        det_prob,
+                                        fp_rate,
+                                        occlusion,
+                                        streams,
+                                        admission,
+                                        frames: self.frames,
+                                        seed: self.seed,
+                                    });
+                                }
                             }
                         }
                     }
@@ -143,6 +186,9 @@ pub struct Scenario {
     pub occlusion: bool,
     /// Concurrent streams (1 = serial loop, >1 = session runtime).
     pub streams: usize,
+    /// Admission-rate multiplier vs the measured sustainable rate
+    /// (`1.0` = classic cell, `> 1.0` = overload cell).
+    pub admission: f64,
     /// Frames per stream.
     pub frames: u32,
     /// Grid seed.
@@ -151,8 +197,11 @@ pub struct Scenario {
 
 impl Scenario {
     /// Stable cell identifier — the compare key between reports.
+    /// Overload cells append `-a{N}x`; the id without that suffix is
+    /// the cell's 1x sibling (same footage, unpaced admission), which
+    /// the gate's MOTA-budget criterion pairs against.
     pub fn id(&self) -> String {
-        format!(
+        let mut id = format!(
             "{}-d{}-dp{}-fp{}-{}-s{}",
             self.engine.spec().replace(':', ""),
             self.max_objects,
@@ -160,14 +209,25 @@ impl Scenario {
             (self.fp_rate * 100.0).round() as u32,
             if self.occlusion { "occ" } else { "clr" },
             self.streams
-        )
+        );
+        if self.admission != 1.0 {
+            if self.admission.fract() == 0.0 {
+                id.push_str(&format!("-a{}x", self.admission as u32));
+            } else {
+                id.push_str(&format!("-a{}x", self.admission));
+            }
+        }
+        id
     }
 
     /// Generator config for one of this cell's streams. Stress cells
     /// use [`SynthConfig::stress`] so the lab and every other consumer
-    /// of the canonical stress profile stay in agreement.
+    /// of the canonical stress profile stay in agreement. The name is
+    /// keyed on the *1x sibling's* id: an overload cell tracks
+    /// byte-identical footage to its unpaced sibling, so any MOTA gap
+    /// between the two is adaptation cost, not different video.
     pub fn synth_config(&self, stream: usize) -> SynthConfig {
-        let name = format!("{}-cam{stream}", self.id());
+        let name = format!("{}-cam{stream}", Scenario { admission: 1.0, ..*self }.id());
         let mut cfg = if self.occlusion {
             SynthConfig::stress(&name, self.frames, self.max_objects, self.seed)
         } else {
@@ -190,6 +250,9 @@ impl Scenario {
     /// snapshot always comes from the calling thread regardless of the
     /// cell's stream count).
     pub fn run(&self, cfg: &BenchConfig) -> crate::Result<CellReport> {
+        if self.admission > 1.0 {
+            return self.run_overload();
+        }
         let id = self.id();
         let seqs = self.sequences();
         let params = SortParams { timing: false, ..Default::default() };
@@ -238,7 +301,11 @@ impl Scenario {
                 workers: self.streams.min(2),
                 queue_capacity: 64,
                 push_policy: PushPolicy::Block,
-                session_defaults: SessionParams { engine: self.engine, sort_params: params },
+                session_defaults: SessionParams {
+                    engine: self.engine,
+                    sort_params: params,
+                    ..Default::default()
+                },
                 ..Default::default()
             })?;
             let m = bench(&id, cfg, total_frames, || {
@@ -275,8 +342,235 @@ impl Scenario {
             fps: FpsStats::from_measurement(&m),
             quality: QualityStats::from_metrics(&quality),
             counters: CounterTotals::from_snapshot(&counters),
+            slo: None,
         })
     }
+
+    /// Run the cell as an *overload* experiment: measure the cell's
+    /// sustainable rate (unpaced, one active worker, lossless `Block`
+    /// admission), then re-admit the same footage paced at
+    /// `admission ×` that rate into a deadline-carrying service with
+    /// adaptive-control headroom (spawned-but-idle workers, the f32
+    /// engine tier, deadline shedding). Quality is scored on what the
+    /// service actually *delivered* — dropped frames count as misses —
+    /// so the MOTA figure prices the adaptation, and the [`SloReport`]
+    /// records the latency percentiles, deadline-hit ratio, split drop
+    /// ledger and controller actions the gate checks.
+    fn run_overload(&self) -> crate::Result<CellReport> {
+        let id = self.id();
+        let seqs = self.sequences();
+        let params = SortParams { timing: false, ..Default::default() };
+        let total_frames = (seqs.len() as u64) * self.frames as u64;
+        let base_params =
+            SessionParams { engine: self.engine, sort_params: params, ..Default::default() };
+
+        // kernel counters: delta around one serial pass of stream 0
+        // (same protocol as the 1x runner — thread-local counters)
+        let counters = {
+            let mut engine = self.engine.build(params)?;
+            let before = snapshot();
+            run_sequence(&mut *engine, &seqs[0].sequence);
+            snapshot().delta(&before)
+        };
+
+        // --- phase 1: sustainable rate of one active worker ---------
+        let sustainable_fps = {
+            let svc = TrackingService::start(ServiceConfig {
+                workers: 1,
+                max_workers: 1,
+                queue_capacity: 64,
+                push_policy: PushPolicy::Block,
+                session_defaults: base_params,
+                ..Default::default()
+            })?;
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..self.streams)
+                .map(|_| svc.open_session_default())
+                .collect::<crate::Result<_>>()?;
+            push_round_robin(&handles, &seqs, self.frames, None, |_| {});
+            for h in &handles {
+                h.join();
+            }
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            svc.shutdown();
+            (total_frames as f64 / wall).max(1.0)
+        };
+
+        // --- phase 2: paced overload through the adaptive runtime ---
+        // Deadline: ~two queue-drains' worth of frame-times, floored
+        // so OS scheduling jitter can't flake the gate. The budget is
+        // what the overload smoke baseline tolerates: delivered-row
+        // MOTA may trail the 1x sibling by up to this much.
+        let deadline =
+            Duration::from_secs_f64((64.0 / sustainable_fps).clamp(0.020, 0.500));
+        let mota_budget = 0.35;
+        let queue_capacity = 32;
+        let svc = TrackingService::start(ServiceConfig {
+            workers: 2.min(self.streams),
+            max_workers: 4.max(self.streams.min(8)),
+            queue_capacity,
+            push_policy: PushPolicy::DropOldest,
+            session_defaults: base_params,
+            ..Default::default()
+        })?;
+        let mut ctl = Controller::new(ControlConfig {
+            min_workers: 1,
+            max_workers: 4.max(self.streams.min(8)),
+            queue_high: queue_capacity * 3 / 4,
+            queue_low: queue_capacity / 8,
+            breach_ticks: 2,
+            headroom_ticks: 3,
+            cooldown: Duration::from_micros(200),
+            shed_batch: 8,
+        });
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..self.streams)
+            .map(|i| {
+                svc.open_session(SessionParams {
+                    slo: Slo {
+                        deadline: Some(deadline),
+                        // stream 0 is the premium feed: the controller
+                        // sheds the lower class first
+                        priority: if i == 0 { 2 } else { 1 },
+                        mota_budget,
+                    },
+                    ..base_params
+                })
+            })
+            .collect::<crate::Result<_>>()?;
+        let rate = sustainable_fps * self.admission;
+        let mut actions: Vec<Action> = Vec::new();
+        push_round_robin(&handles, &seqs, self.frames, Some((t0, rate)), |pushed| {
+            if pushed % 16 == 0 {
+                actions.extend(svc.control_tick(&mut ctl, t0.elapsed()));
+            }
+        });
+        let stats: Vec<SessionStats> = handles.iter().map(|h| h.join()).collect();
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let rows: Vec<Vec<(u32, u64, Bbox)>> = handles.iter().map(|h| h.poll_tracks()).collect();
+        svc.shutdown();
+
+        // --- score + assemble --------------------------------------
+        let mut quality = MotMetrics::default();
+        for (s, r) in seqs.iter().zip(&rows) {
+            quality.merge(&delivered_quality(s, r, self.frames));
+        }
+        let mut latency = crate::coordinator::LatencyHistogram::new();
+        let (mut delivered, mut dq, mut dd, mut hits, mut misses, mut migrations) =
+            (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+        for st in &stats {
+            latency.merge(&st.latency);
+            delivered += st.frames_done;
+            dq += st.dropped_queue;
+            dd += st.dropped_deadline;
+            hits += st.deadline_hits;
+            misses += st.deadline_misses;
+            migrations += st.migrations;
+        }
+        let (p50, _, p99, _) = latency.summary();
+        let judged = hits + misses;
+        let fps = delivered as f64 / wall;
+        let count = |f: fn(&Action) -> bool| actions.iter().filter(|a| f(a)).count() as u64;
+        let slo = SloReport {
+            admission: self.admission,
+            sustainable_fps,
+            deadline_ms: deadline.as_secs_f64() * 1e3,
+            mota_budget,
+            p50_ms: p50.as_secs_f64() * 1e3,
+            p99_ms: p99.as_secs_f64() * 1e3,
+            deadline_hit_ratio: if judged == 0 { 1.0 } else { hits as f64 / judged as f64 },
+            delivered,
+            dropped_queue: dq,
+            dropped_deadline: dd,
+            scale_ups: count(|a| matches!(a, Action::ScaleUp { .. })),
+            scale_downs: count(|a| matches!(a, Action::ScaleDown { .. })),
+            migrations,
+            sheds: count(|a| matches!(a, Action::Shed { .. })),
+        };
+        Ok(CellReport {
+            id,
+            engine: self.engine.spec(),
+            streams: self.streams,
+            max_objects: self.max_objects,
+            det_prob: self.det_prob,
+            fp_rate: self.fp_rate,
+            occlusion: self.occlusion,
+            frames: self.frames as u64,
+            total_frames,
+            fps: FpsStats { median: fps, mean: fps, stddev: 0.0, min: fps },
+            quality: QualityStats::from_metrics(&quality),
+            counters: CounterTotals::from_snapshot(&counters),
+            slo: Some(slo),
+        })
+    }
+}
+
+/// Push every stream's frames round-robin. With `pace = Some((t0,
+/// rate))` the k-th push is held until `t0 + k / rate` (sleep for the
+/// bulk of the wait, spin the sub-millisecond tail — frame-times here
+/// are far below sleep granularity); `None` pushes flat out. `on_push`
+/// runs after every accepted push (the overload runner ticks the
+/// controller there), and sessions are closed before returning.
+fn push_round_robin(
+    handles: &[crate::coordinator::SessionHandle],
+    seqs: &[SynthSequence],
+    frames: u32,
+    pace: Option<(Instant, f64)>,
+    mut on_push: impl FnMut(u64),
+) {
+    let mut k = 0u64;
+    for f in 0..frames as usize {
+        for (h, s) in handles.iter().zip(seqs) {
+            if let Some((t0, rate)) = pace {
+                let due = t0 + Duration::from_secs_f64(k as f64 / rate);
+                loop {
+                    let now = Instant::now();
+                    if now >= due {
+                        break;
+                    }
+                    let left = due - now;
+                    if left > Duration::from_millis(2) {
+                        std::thread::sleep(left - Duration::from_millis(1));
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+            let frame = &s.sequence.frames[f];
+            h.push_frame(frame.detections.iter().map(|d| d.bbox).collect());
+            k += 1;
+            on_push(k);
+        }
+    }
+    for h in handles {
+        h.close();
+    }
+}
+
+/// CLEAR-MOT over what the service *delivered* for one stream: every
+/// ground-truth box of every frame is in the denominator, so frames
+/// the runtime shed (queue or deadline) score as misses — delivered
+/// quality prices the drops, unlike the 1x protocol which scores the
+/// engine on every frame.
+fn delivered_quality(seq: &SynthSequence, rows: &[(u32, u64, Bbox)], frames: u32) -> MotMetrics {
+    let mut gt_by_frame: HashMap<u32, Vec<(u64, Bbox)>> = HashMap::new();
+    for t in &seq.ground_truth {
+        for &(f, b) in &t.boxes {
+            gt_by_frame.entry(f).or_default().push((t.id, b));
+        }
+    }
+    let mut tracks_by_frame: HashMap<u32, Vec<(u64, Bbox)>> = HashMap::new();
+    for &(seq_no, tid, b) in rows {
+        // service rows are 1-based push numbers; GT frames are 0-based
+        tracks_by_frame.entry(seq_no - 1).or_default().push((tid, b));
+    }
+    let eval: Vec<EvalFrame> = (0..frames)
+        .map(|f| EvalFrame {
+            gt: gt_by_frame.remove(&f).unwrap_or_default(),
+            tracks: tracks_by_frame.remove(&f).unwrap_or_default(),
+        })
+        .collect();
+    evaluate(&eval, 0.5)
 }
 
 #[cfg(test)]
@@ -351,6 +645,7 @@ mod tests {
             fp_rate: 0.05,
             occlusion: true,
             streams: 1,
+            admission: 1.0,
             frames: 40,
             seed: 3,
         };
@@ -378,6 +673,7 @@ mod tests {
             fp_rate: 0.05,
             occlusion: false,
             streams: 3,
+            admission: 1.0,
             frames: 30,
             seed: 5,
         };
@@ -391,5 +687,88 @@ mod tests {
         assert_eq!(r.total_frames, 90);
         assert!(r.fps.median > 0.0);
         assert!(r.quality.n_gt > 0);
+        assert!(r.slo.is_none(), "1x cells carry no SLO block");
+    }
+
+    #[test]
+    fn overload_cells_share_footage_with_their_1x_sibling() {
+        let base = Scenario {
+            engine: EngineKind::Batch,
+            max_objects: 5,
+            det_prob: 0.9,
+            fp_rate: 0.05,
+            occlusion: true,
+            streams: 4,
+            admission: 1.0,
+            frames: 80,
+            seed: 7,
+        };
+        let over = Scenario { admission: 2.0, ..base };
+        assert_eq!(base.id(), "batch-d5-dp90-fp5-occ-s4");
+        assert_eq!(over.id(), "batch-d5-dp90-fp5-occ-s4-a2x");
+        // same generator name + seed => byte-identical synthetic streams
+        assert_eq!(over.synth_config(2).name, base.synth_config(2).name);
+        assert_eq!(over.synth_config(2).seed, base.synth_config(2).seed);
+    }
+
+    #[test]
+    fn smoke_suite_is_the_smoke_grid_plus_one_overload_cell() {
+        let cells = ScenarioAxes::smoke_cells();
+        let grid = ScenarioAxes::smoke().cells();
+        assert_eq!(cells.len(), grid.len() + 1);
+        assert_eq!(cells[..grid.len()], grid[..]);
+        let over = cells.last().unwrap();
+        assert_eq!(over.id(), "batch-d5-dp90-fp5-occ-s4-a2x");
+        assert_eq!(over.admission, 2.0);
+    }
+
+    #[test]
+    fn admission_axis_expands_multi_stream_cells_only() {
+        let axes = ScenarioAxes {
+            admissions: vec![1.0, 2.0],
+            ..ScenarioAxes::smoke()
+        };
+        let cells = axes.cells();
+        // 3 engines x (s1 a1 | s4 a1 | s4 a2) — no s1 overload cells
+        assert_eq!(cells.len(), 9);
+        assert!(cells.iter().all(|c| !(c.streams == 1 && c.admission > 1.0)));
+        assert_eq!(cells.iter().filter(|c| c.admission > 1.0).count(), 3);
+    }
+
+    #[test]
+    fn overload_cell_runs_end_to_end_and_conserves_frames() {
+        let cell = Scenario {
+            engine: EngineKind::Batch,
+            max_objects: 4,
+            det_prob: 0.95,
+            fp_rate: 0.05,
+            occlusion: false,
+            streams: 2,
+            admission: 2.0,
+            frames: 40,
+            seed: 5,
+        };
+        let cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(1),
+            samples: 2,
+            min_sample_time: std::time::Duration::from_micros(100),
+        };
+        let r = cell.run(&cfg).expect("overload run");
+        assert_eq!(r.id, "batch-d4-dp95-fp5-clr-s2-a2x");
+        assert_eq!(r.total_frames, 80);
+        let slo = r.slo.expect("overload cells carry an SLO block");
+        assert_eq!(slo.admission, 2.0);
+        assert!(slo.sustainable_fps >= 1.0);
+        assert!(slo.deadline_ms >= 20.0 && slo.deadline_ms <= 500.0);
+        // conservation: everything admitted was delivered or is in
+        // one of the two drop ledgers
+        assert_eq!(
+            slo.delivered + slo.dropped_queue + slo.dropped_deadline,
+            r.total_frames,
+            "{slo:?}"
+        );
+        assert!((0.0..=1.0).contains(&slo.deadline_hit_ratio));
+        assert!(r.fps.median > 0.0);
+        assert!(r.quality.n_gt > 0, "delivered-row scoring keeps the full GT denominator");
     }
 }

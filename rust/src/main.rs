@@ -17,7 +17,10 @@
 use anyhow::{bail, Context, Result};
 use smalltrack::coordinator::policy::{run_policy_with_engine, ScalingPolicy};
 use smalltrack::coordinator::scheduler::{run_shards, SchedulerConfig, ShardPolicy};
-use smalltrack::coordinator::{serve, serve_observed, Pacing, ServerConfig, VideoStream};
+use smalltrack::coordinator::{
+    serve, serve_observed, Action, ControlConfig, Controller, Pacing, ServerConfig, Slo,
+    VideoStream,
+};
 use smalltrack::data::mot::{read_det_file, write_det_file, write_track_file};
 use smalltrack::data::synth::{generate_sequence, generate_suite, SynthConfig, SynthSequence};
 use smalltrack::data::{replicate::replicate_suite, MOT15_PROPERTIES};
@@ -26,7 +29,7 @@ use smalltrack::simcore::{calibrate_workload, simulate, MachineProfile, SimPolic
 use smalltrack::sort::{Bbox, SortParams};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Parsed `--key value` arguments + positionals.
 struct Args {
@@ -118,9 +121,13 @@ COMMANDS
   serve     [--workers N] [--stream-fps F] [--seed N] [--engine E]
             [--streams N --frames K]                online session serving with live
             [--shard-policy pinned|stealing]        metrics (sharded batch mode when
-                                                    --shard-policy is given); --streams
-                                                    replaces the Table I suite with N
-                                                    synthetic K-frame streams
+            [--deadline-ms D] [--priority P]        --shard-policy is given); --streams
+            [--adaptive [--max-workers M]]          replaces the Table I suite with N
+                                                    synthetic K-frame streams;
+                                                    --deadline-ms sets the per-frame SLO
+                                                    (late frames are shed + counted),
+                                                    --adaptive runs the SLO controller
+                                                    (scale/migrate/shed within M workers)
   scaling   [--policy strong|weak|throughput|sharded] [--p N] [--workers N]
             [--shard-policy pinned|stealing] [--processes] [--replicas K] [--engine E]
   simulate  [--machine skx6140|clx8280] [--replicas K] [--seed N]
@@ -128,11 +135,17 @@ COMMANDS
   lab run     [--smoke] [--seed N] [--frames K] [--json PATH]
                                                     measure the scenario grid
                                                     (engines x density x detector
-                                                    noise x occlusion x streams)
+                                                    noise x occlusion x streams x
+                                                    admission; --smoke adds one 2x-
+                                                    admission overload cell driven
+                                                    through the adaptive runtime)
   lab compare BASE.json CUR.json [--margin M] [--mota-margin Q]
             [--f32-mota-delta D]                    print the delta table
   lab gate    BASE.json CUR.json [--margin 2.0] [--mota-margin 0.1]
-            [--f32-mota-delta 0.05]                 same, exit 1 on regression
+            [--f32-mota-delta 0.05]                 same, exit 1 on regression;
+                                                    overload cells also gate on
+                                                    p99-under-deadline and the
+                                                    MOTA budget vs their 1x sibling
 
 ENGINES (--engine, default native; the spec form is self-contained)
   native    single-core structure-aware Sort (the paper's fast path)
@@ -264,6 +277,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed: u64 = args.num("seed", 7u64)?;
     let engine = args.engine()?;
     let shard = args.get("shard-policy").map(ShardPolicy::parse).transpose()?;
+    let deadline_ms: f64 = args.num("deadline-ms", 0.0f64)?;
+    let priority: u8 = args.num("priority", 1u8)?;
+    let adaptive = args.has("adaptive");
+    let max_workers: usize =
+        args.num("max-workers", if adaptive { workers * 2 } else { workers })?;
+    let slo = Slo {
+        deadline: (deadline_ms > 0.0).then(|| Duration::from_secs_f64(deadline_ms / 1000.0)),
+        priority,
+        ..Default::default()
+    };
     let n_streams: usize = args.num("streams", 0usize)?;
     let frames: u32 = args.num("frames", 120u32)?;
     // --streams N swaps the Table I suite for N synthetic streams of
@@ -312,10 +335,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => {
             println!(
-                "serving {n} streams at {stream_fps} fps on {workers} workers ({} engine) ...",
-                engine.spec()
+                "serving {n} streams at {stream_fps} fps on {workers} workers ({} engine{}) ...",
+                engine.spec(),
+                if adaptive { ", adaptive" } else { "" }
             );
-            serve_live(streams, workers, engine)?;
+            let cfg = ServerConfig {
+                workers,
+                max_workers,
+                engine,
+                sort_params: params_fast(),
+                slo,
+                ..Default::default()
+            };
+            serve_live(streams, cfg, adaptive)?;
         }
     }
     Ok(())
@@ -324,11 +356,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Online serving on the long-lived session runtime, with a live
 /// metrics snapshot printed at half-dispatch and a final per-worker
 /// roll-up — the same dispatcher as `serve()`, observed mid-flight.
-fn serve_live(streams: Vec<VideoStream>, workers: usize, engine: EngineKind) -> Result<()> {
+/// With `adaptive`, an SLO [`Controller`] ticks every 16 dispatched
+/// frames and its actions are summarized at the end.
+fn serve_live(streams: Vec<VideoStream>, cfg: ServerConfig, adaptive: bool) -> Result<()> {
     let total: u64 = streams.iter().map(|s| s.remaining() as u64).sum();
-    let cfg = ServerConfig { workers, engine, sort_params: params_fast(), ..Default::default() };
+    let mut ctl = adaptive.then(|| {
+        Controller::new(ControlConfig {
+            min_workers: 1,
+            max_workers: cfg.max_workers.max(cfg.workers),
+            queue_high: (cfg.queue_capacity * 3 / 4).max(1),
+            queue_low: (cfg.queue_capacity / 8).max(1),
+            ..Default::default()
+        })
+    });
+    let t0 = Instant::now();
+    let mut actions: Vec<Action> = Vec::new();
     let mut live_printed = false;
     let (report, metrics) = serve_observed(streams, cfg, |dispatched, svc| {
+        if let Some(ctl) = ctl.as_mut() {
+            if dispatched % 16 == 0 {
+                actions.extend(svc.control_tick(ctl, t0.elapsed()));
+            }
+        }
         if !live_printed && dispatched * 2 >= total {
             let m = svc.metrics();
             println!(
@@ -336,19 +385,33 @@ fn serve_live(streams: Vec<VideoStream>, workers: usize, engine: EngineKind) -> 
                 m.open_sessions,
                 m.queue_depth(),
                 m.frames_done,
-                m.dropped,
+                m.dropped(),
                 m.aggregate_fps().fps()
             );
             live_printed = true;
         }
     });
     println!(
-        "frames={} dropped={} wall={:.2}s agg_fps={:.0}",
+        "frames={} dropped={} (queue={} deadline={}) wall={:.2}s agg_fps={:.0}",
         report.frames_done,
         report.dropped,
+        metrics.dropped_queue,
+        metrics.dropped_deadline,
         report.elapsed.as_secs_f64(),
         report.fps()
     );
+    if adaptive {
+        let count = |f: fn(&Action) -> bool| actions.iter().filter(|a| f(a)).count();
+        println!(
+            "controller: {} actions (scale-up={} scale-down={} migrate={} shed={}), migrations applied={}",
+            actions.len(),
+            count(|a| matches!(a, Action::ScaleUp { .. })),
+            count(|a| matches!(a, Action::ScaleDown { .. })),
+            count(|a| matches!(a, Action::Migrate { .. })),
+            count(|a| matches!(a, Action::Shed { .. })),
+            metrics.migrations
+        );
+    }
     let (p50, p95, p99, max) = report.latency.summary();
     println!("latency: p50={p50:?} p95={p95:?} p99={p99:?} max={max:?}");
     for (w, snap) in metrics.per_worker.iter().enumerate() {
@@ -541,7 +604,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// `lab run | compare | gate` — the scenario lab and its CI gate.
 fn cmd_lab(args: &Args) -> Result<()> {
     use smalltrack::benchkit::{BenchConfig, Table};
-    use smalltrack::lab::{compare, run_grid, GateConfig, LabReport, ScenarioAxes};
+    use smalltrack::lab::{compare, run_cells, GateConfig, LabReport, Manifest, ScenarioAxes};
     let sub = args
         .positional
         .first()
@@ -553,8 +616,16 @@ fn cmd_lab(args: &Args) -> Result<()> {
             let mut axes = if smoke { ScenarioAxes::smoke() } else { ScenarioAxes::default_grid() };
             axes.seed = args.num("seed", axes.seed)?;
             axes.frames = args.num("frames", axes.frames)?;
+            // smoke runs the suite (grid + the overload cell) so the
+            // SLO gate criteria have a cell to bite on in CI
+            let mut cells =
+                if smoke { ScenarioAxes::smoke_cells() } else { axes.cells() };
+            for c in &mut cells {
+                c.seed = axes.seed;
+                c.frames = axes.frames;
+            }
             let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
-            let report = run_grid(&axes, &cfg, smoke)?;
+            let report = run_cells(&cells, Manifest::for_axes(&axes, smoke), &cfg)?;
             let mut table = Table::new(
                 &format!(
                     "lab report — {} cells{}",
@@ -575,6 +646,28 @@ fn cmd_lab(args: &Args) -> Result<()> {
                 ]);
             }
             table.print();
+            for c in &report.cells {
+                if let Some(s) = c.slo {
+                    println!(
+                        "\n{}: admitted {:.1}x sustainable ({:.0} fps) — p50 {:.2} ms, p99 {:.2} ms (deadline {:.0} ms), hit ratio {:.3}, delivered {}/{} (dropped: queue {}, deadline {}), controller: {} up / {} down / {} migrations / {} sheds",
+                        c.id,
+                        s.admission,
+                        s.sustainable_fps,
+                        s.p50_ms,
+                        s.p99_ms,
+                        s.deadline_ms,
+                        s.deadline_hit_ratio,
+                        s.delivered,
+                        c.total_frames,
+                        s.dropped_queue,
+                        s.dropped_deadline,
+                        s.scale_ups,
+                        s.scale_downs,
+                        s.migrations,
+                        s.sheds
+                    );
+                }
+            }
             if let Some(path) = args.get("json") {
                 // the flag parser stores "true" for a valueless flag —
                 // a forgotten path must error, not write ./true

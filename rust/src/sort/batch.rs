@@ -448,6 +448,68 @@ impl<P: Precision> BatchSort<P> {
         out
     }
 
+    /// Snapshot the full tracking state (engine migration; see
+    /// [`super::snapshot`]). The SoA lanes gather into per-tracker
+    /// snapshots in slot (= birth) order; for the f64 tier every value
+    /// crosses exactly, for the f32 tier it widens losslessly.
+    pub fn export_state(&self) -> super::snapshot::EngineState {
+        let n = self.id.len();
+        let mut trackers = Vec::with_capacity(n);
+        for t in 0..n {
+            let mut x = [0.0; 7];
+            for (c, lane) in self.x.iter().enumerate() {
+                x[c] = lane[t].to_f64();
+            }
+            let mut p = [0.0; 49];
+            let pan = &self.p[t * 49..(t + 1) * 49];
+            for (e, v) in pan.iter().enumerate() {
+                p[e] = v.to_f64();
+            }
+            trackers.push(super::snapshot::TrackerSnapshot {
+                id: self.id[t],
+                x,
+                p,
+                time_since_update: self.time_since_update[t],
+                hits: self.hits[t],
+                hit_streak: self.hit_streak[t],
+                age: self.age[t],
+            });
+        }
+        super::snapshot::EngineState {
+            frame_count: self.frame_count,
+            next_id: self.next_id,
+            trackers,
+        }
+    }
+
+    /// Replace all tracking state with `state` (scratch buffers kept).
+    /// Scatters into the SoA lanes in snapshot order; the f32 tier
+    /// narrows each value deterministically.
+    pub fn import_state(&mut self, state: &super::snapshot::EngineState) {
+        for lane in self.x.iter_mut() {
+            lane.clear();
+        }
+        self.p.clear();
+        self.id.clear();
+        self.time_since_update.clear();
+        self.hits.clear();
+        self.hit_streak.clear();
+        self.age.clear();
+        for s in &state.trackers {
+            for (c, lane) in self.x.iter_mut().enumerate() {
+                lane.push(P::from_f64(s.x[c]));
+            }
+            self.p.extend(s.p.iter().map(|&v| P::from_f64(v)));
+            self.id.push(s.id);
+            self.time_since_update.push(s.time_since_update);
+            self.hits.push(s.hits);
+            self.hit_streak.push(s.hit_streak);
+            self.age.push(s.age);
+        }
+        self.frame_count = state.frame_count;
+        self.next_id = state.next_id;
+    }
+
     /// Drop all tracker state but keep scratch buffers (stream reuse).
     pub fn reset(&mut self) {
         for lane in self.x.iter_mut() {

@@ -19,6 +19,8 @@
 //! * [`sort`] — the per-frame update loop (Algorithm 1 of the paper)
 //! * [`batch`] — the batched SoA engine (explicit SIMD lane sweeps over
 //!   all trackers, f64 bit-exact or opt-in f32 with f64 fallback)
+//! * [`snapshot`] — engine-neutral tracking-state snapshots (the
+//!   interchange format for live engine migration)
 //! * [`phases`] — per-phase timing (Table IV / Fig 3 instrumentation)
 //! * [`quality`] — CLEAR-MOT metrics vs ground truth (ablation guardrail)
 
@@ -32,6 +34,7 @@ pub mod kalman;
 pub mod phases;
 pub mod quality;
 pub mod scratch;
+pub mod snapshot;
 pub mod sort;
 pub mod tracker;
 
@@ -43,5 +46,6 @@ pub use kalman::{KalmanState, SortConstants};
 pub use phases::{Phase, PhaseStats, PhaseTimer};
 pub use quality::{evaluate, evaluate_engine, evaluate_sort, MotMetrics};
 pub use scratch::FrameScratch;
+pub use snapshot::{EngineState, TrackerSnapshot};
 pub use sort::{Sort, SortParams, Track};
 pub use tracker::KalmanBoxTracker;

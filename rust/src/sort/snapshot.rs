@@ -1,0 +1,151 @@
+//! Engine-neutral tracking-state snapshots — the interchange format
+//! behind live engine migration.
+//!
+//! The adaptive runtime (ROADMAP item 3) swaps a session's engine tier
+//! under load (`batch` → `batchf32` when deadlines slip, back when
+//! headroom returns). For that to be a *continuation* rather than a
+//! restart, the full per-stream tracking state must cross the engine
+//! boundary: every live tracker's Kalman mean + covariance and
+//! lifecycle counters, plus the stream's frame counter and id
+//! allocator. [`EngineState`] is that state in a layout no engine uses
+//! internally (plain `f64` arrays, row-major covariance panels) so any
+//! backend can gather into it and scatter out of it.
+//!
+//! Fidelity contract, pinned by `rust/tests/integration_engines.rs`:
+//! between two f64 engines the round trip is exact — every `f64`
+//! crosses by value, so a `native → batch` migration mid-stream
+//! continues `f64::to_bits`-identical to an unmigrated run. Into the
+//! f32 tier the import narrows (that is the point of the tier); the
+//! narrowing is deterministic, so migrated runs stay bitwise
+//! reproducible run-to-run.
+
+use super::kalman::KalmanState;
+use super::tracker::KalmanBoxTracker;
+use crate::linalg::Mat7;
+
+/// One tracker's full state in engine-neutral form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrackerSnapshot {
+    /// Internal (0-based) tracker id; output ids are `id + 1`.
+    pub id: u64,
+    /// Kalman state mean `[u, v, s, r, du, dv, ds]`.
+    pub x: [f64; 7],
+    /// Kalman state covariance, row-major 7×7 panel.
+    pub p: [f64; 49],
+    /// Frames since the last matched detection.
+    pub time_since_update: u32,
+    /// Total matched detections over the track's life.
+    pub hits: u32,
+    /// Consecutive matched frames ending now.
+    pub hit_streak: u32,
+    /// Total frames since birth.
+    pub age: u32,
+}
+
+impl TrackerSnapshot {
+    /// Gather from a native per-object tracker.
+    pub fn from_tracker(t: &KalmanBoxTracker) -> Self {
+        let mut p = [0.0; 49];
+        t.kf.p.write_to(&mut p);
+        TrackerSnapshot {
+            id: t.id,
+            x: t.kf.x,
+            p,
+            time_since_update: t.time_since_update,
+            hits: t.hits,
+            hit_streak: t.hit_streak,
+            age: t.age,
+        }
+    }
+
+    /// Scatter back into a native per-object tracker.
+    pub fn to_tracker(&self) -> KalmanBoxTracker {
+        let mut p = Mat7::zeros();
+        for r in 0..7 {
+            for c in 0..7 {
+                p[(r, c)] = self.p[r * 7 + c];
+            }
+        }
+        KalmanBoxTracker {
+            id: self.id,
+            kf: KalmanState { x: self.x, p },
+            time_since_update: self.time_since_update,
+            hits: self.hits,
+            hit_streak: self.hit_streak,
+            age: self.age,
+        }
+    }
+}
+
+/// A full stream's tracking state, detached from any engine.
+///
+/// Trackers are in birth order — the storage order every engine keeps
+/// (AoS vector for `native`/`strong`, SoA slot order for the batch
+/// tiers) — so a round trip preserves the iteration order the output
+/// and culling loops depend on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineState {
+    /// Frames processed so far on this stream.
+    pub frame_count: u64,
+    /// Next internal tracker id to allocate.
+    pub next_id: u64,
+    /// Live trackers (confirmed or tentative), in birth order.
+    pub trackers: Vec<TrackerSnapshot>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::bbox::Bbox;
+    use crate::sort::kalman::{CovarianceForm, SortConstants};
+
+    #[test]
+    fn tracker_round_trip_is_bit_exact() {
+        let consts = SortConstants::sort_defaults();
+        let mut t = KalmanBoxTracker::new(5, &Bbox::new(10.0, 20.0, 60.0, 140.0), &consts);
+        for k in 0..7 {
+            t.predict(&consts);
+            let b = Bbox::new(11.0 + k as f64, 20.5, 61.0 + k as f64, 140.5);
+            t.update(&b, &consts, CovarianceForm::Joseph);
+        }
+        let snap = TrackerSnapshot::from_tracker(&t);
+        let back = snap.to_tracker();
+        assert_eq!(back.id, t.id);
+        assert_eq!(back.kf.x.map(f64::to_bits), t.kf.x.map(f64::to_bits));
+        for r in 0..7 {
+            for c in 0..7 {
+                assert_eq!(
+                    back.kf.p[(r, c)].to_bits(),
+                    t.kf.p[(r, c)].to_bits(),
+                    "P[{r},{c}]"
+                );
+            }
+        }
+        assert_eq!(
+            (back.time_since_update, back.hits, back.hit_streak, back.age),
+            (t.time_since_update, t.hits, t.hit_streak, t.age)
+        );
+    }
+
+    #[test]
+    fn snapshot_panel_layout_is_row_major() {
+        let consts = SortConstants::sort_defaults();
+        let t = KalmanBoxTracker::new(0, &Bbox::new(0.0, 0.0, 10.0, 20.0), &consts);
+        let snap = TrackerSnapshot::from_tracker(&t);
+        // fresh tracker carries P0 = diag(10,10,10,10,1e4,1e4,1e4)
+        for r in 0..7 {
+            for c in 0..7 {
+                let want = if r == c {
+                    if r < 4 {
+                        10.0
+                    } else {
+                        10000.0
+                    }
+                } else {
+                    0.0
+                };
+                assert_eq!(snap.p[r * 7 + c], want, "P[{r},{c}]");
+            }
+        }
+    }
+}

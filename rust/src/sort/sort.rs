@@ -219,6 +219,28 @@ impl Sort {
         self.next_id = 0;
         self.phases.reset();
     }
+
+    /// Snapshot the full tracking state (engine migration; see
+    /// [`super::snapshot`]). Exact: every `f64` crosses by value.
+    pub fn export_state(&self) -> super::snapshot::EngineState {
+        super::snapshot::EngineState {
+            frame_count: self.frame_count,
+            next_id: self.next_id,
+            trackers: self
+                .trackers
+                .iter()
+                .map(super::snapshot::TrackerSnapshot::from_tracker)
+                .collect(),
+        }
+    }
+
+    /// Replace all tracking state with `state` (scratch buffers kept).
+    pub fn import_state(&mut self, state: &super::snapshot::EngineState) {
+        self.trackers.clear();
+        self.trackers.extend(state.trackers.iter().map(|s| s.to_tracker()));
+        self.frame_count = state.frame_count;
+        self.next_id = state.next_id;
+    }
 }
 
 #[cfg(test)]

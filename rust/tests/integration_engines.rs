@@ -309,6 +309,218 @@ fn batchf32_is_byte_identical_to_its_serial_self_under_sharded_scheduler() {
     }
 }
 
+/// Bit-exact comparison for service rows `(frame, id, bbox)`.
+fn assert_rows_bit_identical(got: &[(u32, u64, Bbox)], want: &[(u32, u64, Bbox)], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: row count");
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!((g.0, g.1), (w.0, w.1), "{ctx}: row {k} frame/id");
+        assert_eq!(
+            g.2.to_array().map(f64::to_bits),
+            w.2.to_array().map(f64::to_bits),
+            "{ctx}: row {k} bbox bits diverge"
+        );
+    }
+}
+
+/// Serial unmigrated reference: rows numbered 1-based like sessions.
+fn serial_session_rows(kind: EngineKind, synth: &SynthSequence) -> Vec<(u32, u64, Bbox)> {
+    let mut engine = kind.build(params()).expect("build");
+    let mut rows = Vec::new();
+    let mut boxes: Vec<Bbox> = Vec::new();
+    for (k, frame) in synth.sequence.frames.iter().enumerate() {
+        boxes.clear();
+        boxes.extend(frame.detections.iter().map(|d| d.bbox));
+        for t in engine.update(&boxes) {
+            rows.push((k as u32 + 1, t.id, t.bbox));
+        }
+    }
+    rows
+}
+
+#[test]
+fn mid_stream_migration_is_byte_identical_to_never_migrating() {
+    // the warm-handoff promise that makes the controller's tier moves
+    // safe: for f64↔f64 pairs (native/batch share exact scalar math) a
+    // session migrated at an arbitrary mid-stream frame must emit the
+    // same rows, bit for bit, as a serial run that never migrates — at
+    // 1, 2 and 8 workers, with every session's handoff staged while
+    // the others are still in flight
+    use smalltrack::coordinator::service::{
+        ServiceConfig, SessionHandle, SessionParams, TrackingService,
+    };
+    use smalltrack::coordinator::PushPolicy;
+
+    let suite: Vec<SynthSequence> = (0..4)
+        .map(|i| {
+            generate_sequence(&SynthConfig::mot15(
+                &format!("MIG-{i}"),
+                90 + 20 * (i as u32 % 3),
+                3 + (i as u32 % 4),
+                40 + i as u64,
+            ))
+        })
+        .collect();
+    let reference: Vec<Vec<(u32, u64, Bbox)>> =
+        suite.iter().map(|s| serial_session_rows(EngineKind::Native, s)).collect();
+    for workers in [1usize, 2, 8] {
+        let svc = TrackingService::start(ServiceConfig {
+            workers,
+            push_policy: PushPolicy::Block,
+            ..Default::default()
+        })
+        .expect("start service");
+        // alternate the starting tier; each session later migrates to
+        // the opposite f64 tier at its own cut point
+        let from = |i: usize| if i % 2 == 0 { EngineKind::Native } else { EngineKind::Batch };
+        let to = |i: usize| if i % 2 == 0 { EngineKind::Batch } else { EngineKind::Native };
+        let handles: Vec<SessionHandle> = (0..suite.len())
+            .map(|i| {
+                svc.open_session(SessionParams {
+                    engine: from(i),
+                    sort_params: params(),
+                    ..Default::default()
+                })
+                .expect("open")
+            })
+            .collect();
+        // ragged cut points: early, mid and late handoffs in one run
+        let cuts: Vec<usize> = suite
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.sequence.frames.len() * (i + 1) / (suite.len() + 1))
+            .collect();
+        let push_range = |i: usize, lo: usize, hi: usize| {
+            for frame in &suite[i].sequence.frames[lo..hi] {
+                let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+                assert!(handles[i].push_frame(boxes));
+            }
+        };
+        // interleave first halves so sessions are concurrently live,
+        // then stage every migration, then interleave the remainders
+        let mut cursors = vec![0usize; suite.len()];
+        loop {
+            let mut any = false;
+            for i in 0..suite.len() {
+                let end = (cursors[i] + 8).min(cuts[i]);
+                push_range(i, cursors[i], end);
+                any |= end > cursors[i];
+                cursors[i] = end;
+            }
+            if !any {
+                break;
+            }
+        }
+        for (i, h) in handles.iter().enumerate() {
+            h.migrate_engine(to(i)).expect("stage migration");
+        }
+        loop {
+            let mut any = false;
+            for i in 0..suite.len() {
+                let end = (cursors[i] + 8).min(suite[i].sequence.frames.len());
+                push_range(i, cursors[i], end);
+                any |= end > cursors[i];
+                cursors[i] = end;
+            }
+            if !any {
+                break;
+            }
+        }
+        for (i, h) in handles.iter().enumerate() {
+            let st = h.join();
+            assert_eq!(st.migrations, 1, "stream {i} w={workers}: handoff not applied");
+            assert_eq!(h.engine_kind(), to(i), "stream {i} w={workers}: wrong tier after join");
+            assert_rows_bit_identical(
+                &h.poll_tracks(),
+                &reference[i],
+                &format!("{}→{} stream {i} w={workers}", from(i).label(), to(i).label()),
+            );
+        }
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn f32_round_trip_migration_is_deterministic_and_inside_the_lab_budget() {
+    // the controller's demote/promote cycle: batch→batchf32 under
+    // overload, back to batch when headroom returns. Bit-identity with
+    // the unmigrated f64 run is forfeited in the f32 segment (and the
+    // divergence legitimately persists after promotion — tracker state
+    // carries its history), so the contract is the one the lab gates:
+    // run-to-run bit determinism, and MOTA within the precision tier's
+    // budget of the pure-f64 run
+    use smalltrack::coordinator::service::{ServiceConfig, SessionParams, TrackingService};
+    use smalltrack::coordinator::PushPolicy;
+    use smalltrack::lab::GateConfig;
+    use smalltrack::sort::quality::{evaluate, EvalFrame};
+    use std::collections::HashMap;
+
+    let synth = generate_sequence(&SynthConfig::mot15("F32MIG", 150, 6, 77));
+    let frames = synth.sequence.frames.len();
+    let run_round_trip = || -> (Vec<(u32, u64, Bbox)>, u64) {
+        let svc = TrackingService::start(ServiceConfig {
+            workers: 2,
+            push_policy: PushPolicy::Block,
+            ..Default::default()
+        })
+        .expect("start service");
+        let h = svc
+            .open_session(SessionParams {
+                engine: EngineKind::Batch,
+                sort_params: params(),
+                ..Default::default()
+            })
+            .expect("open");
+        for (k, frame) in synth.sequence.frames.iter().enumerate() {
+            // thirds: f64 warmup, f32 overload segment, f64 again
+            if k == frames / 3 {
+                h.migrate_engine(EngineKind::BatchF32).expect("demote");
+            }
+            if k == 2 * frames / 3 {
+                h.migrate_engine(EngineKind::Batch).expect("promote");
+            }
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            assert!(h.push_frame(boxes));
+        }
+        let st = h.join();
+        assert_eq!(h.engine_kind(), EngineKind::Batch, "round trip must land on f64");
+        let rows = h.poll_tracks();
+        svc.shutdown();
+        (rows, st.migrations)
+    };
+    let (ra, ma) = run_round_trip();
+    let (rb, mb) = run_round_trip();
+    assert_eq!((ma, mb), (2, 2), "both handoffs must apply in both runs");
+    assert_rows_bit_identical(&ra, &rb, "f32 round trip determinism");
+    // quality: migrated rows vs the pure-f64 serial run, judged on the
+    // synth ground truth under the lab's own precision-tier budget
+    let mota = |rows: &[(u32, u64, Bbox)]| {
+        let mut gt_by_frame: HashMap<u32, Vec<(u64, Bbox)>> = HashMap::new();
+        for t in &synth.ground_truth {
+            for &(f, b) in &t.boxes {
+                gt_by_frame.entry(f).or_default().push((t.id, b));
+            }
+        }
+        let mut tracks_by_frame: HashMap<u32, Vec<(u64, Bbox)>> = HashMap::new();
+        for &(seq_no, tid, b) in rows {
+            tracks_by_frame.entry(seq_no - 1).or_default().push((tid, b));
+        }
+        let eval: Vec<EvalFrame> = (0..frames as u32)
+            .map(|f| EvalFrame {
+                gt: gt_by_frame.remove(&f).unwrap_or_default(),
+                tracks: tracks_by_frame.remove(&f).unwrap_or_default(),
+            })
+            .collect();
+        evaluate(&eval, 0.5).mota()
+    };
+    let pure = mota(&serial_session_rows(EngineKind::Batch, &synth));
+    let migrated = mota(&ra);
+    let budget = GateConfig::default().f32_mota_delta;
+    assert!(
+        migrated >= pure - budget,
+        "round-trip MOTA {migrated:.4} trails pure f64 {pure:.4} beyond the budget {budget}"
+    );
+}
+
 #[test]
 fn equivalence_holds_across_reset() {
     // engines reused via reset() (the worker-pool pattern) must match

@@ -31,16 +31,20 @@ fn checked_in_baseline_matches_the_smoke_grid() {
     // fires: `cargo run --release -- lab run --smoke --json
     // artifacts/bench_baseline.json`)
     let base = LabReport::load(&baseline_path()).expect("baseline parses");
-    let want: Vec<String> = ScenarioAxes::smoke().cells().iter().map(|c| c.id()).collect();
+    let want: Vec<String> = ScenarioAxes::smoke_cells().iter().map(|c| c.id()).collect();
     let got: Vec<String> = base.cells.iter().map(|c| c.id.clone()).collect();
-    assert_eq!(got, want, "baseline cells drifted from ScenarioAxes::smoke()");
+    assert_eq!(got, want, "baseline cells drifted from ScenarioAxes::smoke_cells()");
     assert!(base.manifest.smoke);
     assert_eq!(base.manifest.tool, "smalltrack-lab");
+    // exactly the overload cell carries an SLO block
+    for c in &base.cells {
+        assert_eq!(c.slo.is_some(), c.id.ends_with("-a2x"), "{}", c.id);
+    }
 }
 
 #[test]
 fn scenario_generation_is_deterministic() {
-    for cell in ScenarioAxes::smoke().cells() {
+    for cell in ScenarioAxes::smoke_cells() {
         let a = cell.sequences();
         let b = cell.sequences();
         assert_eq!(a.len(), b.len());
@@ -70,9 +74,9 @@ fn lab_run_smoke_emits_schema_valid_report_and_gates_against_baseline() {
     assert!(run.status.success(), "lab run failed: {}", String::from_utf8_lossy(&run.stderr));
     let report = LabReport::load(&out).expect("schema-valid report");
 
-    // manifest + one cell per smoke scenario, in grid order
+    // manifest + one cell per smoke scenario (grid + overload), in order
     assert!(report.manifest.smoke);
-    let want: Vec<String> = ScenarioAxes::smoke().cells().iter().map(|c| c.id()).collect();
+    let want: Vec<String> = ScenarioAxes::smoke_cells().iter().map(|c| c.id()).collect();
     let got: Vec<String> = report.cells.iter().map(|c| c.id.clone()).collect();
     assert_eq!(got, want);
     assert!(report.manifest.features.iter().any(|(k, _)| k == "counters"));
@@ -85,6 +89,16 @@ fn lab_run_smoke_emits_schema_valid_report_and_gates_against_baseline() {
         #[cfg(feature = "counters")]
         assert!(c.counters.total_calls > 0, "{}: no kernels counted", c.id);
     }
+
+    // the overload cell measured a real SLO: a positive deadline, a
+    // conserved frame ledger, and every frame either delivered or in
+    // one of the two drop buckets
+    let slo_cells: Vec<_> = report.cells.iter().filter(|c| c.slo.is_some()).collect();
+    assert_eq!(slo_cells.len(), 1, "smoke suite carries exactly one overload cell");
+    let (c, s) = (slo_cells[0], slo_cells[0].slo.unwrap());
+    assert!(s.admission > 1.0 && s.sustainable_fps > 0.0 && s.deadline_ms > 0.0);
+    assert_eq!(s.delivered + s.dropped_queue + s.dropped_deadline, c.total_frames, "{}", c.id);
+    assert!((0.0..=1.0).contains(&s.deadline_hit_ratio), "{}", c.id);
 
     // --- lab gate <checked-in baseline> <fresh run> passes (floor
     // baseline: any healthy build clears it at the default margins)

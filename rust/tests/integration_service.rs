@@ -23,7 +23,7 @@ fn params() -> SortParams {
 }
 
 fn session_params(engine: EngineKind) -> SessionParams {
-    SessionParams { engine, sort_params: params() }
+    SessionParams { engine, sort_params: params(), ..Default::default() }
 }
 
 /// Lossless service: equivalence demands every frame reaches its engine.
@@ -126,7 +126,7 @@ fn sessions_are_bit_identical_to_serial_at_1_2_8_workers() {
             }
             for (i, h) in handles.iter().enumerate() {
                 let stats = h.join();
-                assert_eq!(stats.dropped, 0, "lossless service must not shed");
+                assert_eq!(stats.dropped(), 0, "lossless service must not shed");
                 let rows = h.poll_tracks();
                 assert_rows_bit_identical(
                     &rows,
@@ -280,6 +280,154 @@ fn serve_wrapper_equals_direct_sessions() {
     );
     assert_eq!(report.dropped, 0);
     assert_eq!(report.tracks_out, direct);
+}
+
+#[test]
+fn frame_conservation_holds_under_random_slo_schedules() {
+    // satellite invariant of the SLO runtime: no frame is ever lost or
+    // double-counted. For every randomized schedule of priorities,
+    // deadlines, queue capacities, push policies and mid-stream
+    // controller sheds:
+    //   frames_in == frames_done + dropped_queue + dropped_deadline
+    // per session, and the ServiceMetrics totals agree with the sum of
+    // the per-session ledgers after every session has retired.
+    use smalltrack::coordinator::Slo;
+    use smalltrack::proptest_lite::{ensure, run_named, Config};
+    use std::time::Duration;
+
+    #[derive(Debug)]
+    struct Case {
+        workers: usize,
+        queue_capacity: usize,
+        drop_oldest: bool,
+        shed_every: u64,
+        // (engine, priority, deadline, frames)
+        sessions: Vec<(EngineKind, u8, Option<Duration>, u32)>,
+    }
+
+    run_named(
+        "slo frame conservation",
+        Config { cases: 24, seed: 0xC0_5EED },
+        |r| Case {
+            workers: 1 + r.below(3) as usize,
+            queue_capacity: 2 + r.below(14) as usize,
+            drop_oldest: r.chance(0.5),
+            shed_every: 3 + r.below(20),
+            sessions: (0..1 + r.below(4))
+                .map(|_| {
+                    let engine =
+                        if r.chance(0.5) { EngineKind::Native } else { EngineKind::Batch };
+                    let deadline = match r.below(3) {
+                        0 => None,
+                        // zero: every dequeued frame is already stale
+                        1 => Some(Duration::ZERO),
+                        // generous: nothing is ever stale
+                        _ => Some(Duration::from_secs(3600)),
+                    };
+                    (engine, 1 + r.below(3) as u8, deadline, 10 + r.below(60) as u32)
+                })
+                .collect(),
+        },
+        |case| {
+            let svc = TrackingService::start(ServiceConfig {
+                workers: case.workers,
+                queue_capacity: case.queue_capacity,
+                push_policy: if case.drop_oldest {
+                    PushPolicy::DropOldest
+                } else {
+                    PushPolicy::Block
+                },
+                ..Default::default()
+            })
+            .map_err(|e| e.to_string())?;
+            let handles: Vec<SessionHandle> = case
+                .sessions
+                .iter()
+                .map(|&(engine, priority, deadline, _)| {
+                    svc.open_session(SessionParams {
+                        engine,
+                        sort_params: params(),
+                        slo: Slo { deadline, priority, mota_budget: 0.05 },
+                    })
+                    .expect("open")
+                })
+                .collect();
+            // round-robin pushes with controller-style sheds mixed in
+            let mut pushed = vec![0u64; handles.len()];
+            let mut total_pushed = 0u64;
+            let max_frames = case.sessions.iter().map(|s| s.3).max().unwrap_or(0);
+            for f in 0..max_frames {
+                for (i, h) in handles.iter().enumerate() {
+                    if u64::from(f) >= u64::from(case.sessions[i].3) {
+                        continue;
+                    }
+                    let x = 10.0 + f64::from(f % 50);
+                    assert!(h.push_frame(vec![Bbox::new(x, 10.0, x + 30.0, 80.0)]));
+                    pushed[i] += 1;
+                    total_pushed += 1;
+                    if total_pushed % case.shed_every == 0 {
+                        // sheds on a live session: frames drained here
+                        // must land in dropped_deadline, not vanish
+                        svc.shed_stale(h.id(), 2);
+                    }
+                }
+            }
+            let stats: Vec<_> = handles.iter().map(|h| h.join()).collect();
+            let m = svc.shutdown();
+            for (i, st) in stats.iter().enumerate() {
+                ensure(
+                    st.frames_in == pushed[i],
+                    format!("session {i}: frames_in {} != pushed {}", st.frames_in, pushed[i]),
+                )?;
+                ensure(
+                    st.frames_in == st.frames_done + st.dropped_queue + st.dropped_deadline,
+                    format!(
+                        "session {i}: {} != {} + {} + {}",
+                        st.frames_in, st.frames_done, st.dropped_queue, st.dropped_deadline
+                    ),
+                )?;
+                if !case.drop_oldest {
+                    ensure(
+                        st.dropped_queue == 0,
+                        format!("session {i}: Block policy shed {} frames", st.dropped_queue),
+                    )?;
+                }
+                let judged = st.deadline_hits + st.deadline_misses;
+                match case.sessions[i].2 {
+                    // no deadline: processed frames are never judged
+                    None => ensure(judged == 0, format!("session {i}: judged {judged}"))?,
+                    // with a deadline every *processed* frame gets a
+                    // hit-or-miss verdict (shed frames are not judged)
+                    Some(_) => ensure(
+                        judged == st.frames_done,
+                        format!("session {i}: judged {judged} != done {}", st.frames_done),
+                    )?,
+                }
+            }
+            let sum = |f: fn(&smalltrack::coordinator::SessionStats) -> u64| {
+                stats.iter().map(f).sum::<u64>()
+            };
+            ensure(
+                m.frames_done == sum(|s| s.frames_done),
+                format!("metrics frames_done {} != session sum", m.frames_done),
+            )?;
+            ensure(
+                m.dropped_queue == sum(|s| s.dropped_queue),
+                format!("metrics dropped_queue {} != session sum", m.dropped_queue),
+            )?;
+            ensure(
+                m.dropped_deadline == sum(|s| s.dropped_deadline),
+                format!("metrics dropped_deadline {} != session sum", m.dropped_deadline),
+            )?;
+            ensure(
+                total_pushed == m.frames_done + m.dropped_queue + m.dropped_deadline,
+                format!(
+                    "service conservation: {total_pushed} != {} + {} + {}",
+                    m.frames_done, m.dropped_queue, m.dropped_deadline
+                ),
+            )
+        },
+    );
 }
 
 #[test]
