@@ -2,7 +2,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts test test-nocounters bench bench-lanes fmt clippy lab-smoke lab-baseline
+.PHONY: artifacts test test-nocounters bench bench-lanes fmt clippy lab-smoke lab-baseline wire-smoke
 
 # Lower the JAX/Pallas tracker-bank graphs to HLO text + export the
 # golden parity/track JSONs and the manifest (requires python with jax;
@@ -32,6 +32,13 @@ bench-lanes:
 lab-smoke:
 	cargo run --release -- lab run --smoke --json bench_smoke.json
 	cargo run --release -- lab gate artifacts/bench_baseline.json bench_smoke.json --margin 3.0
+
+# The CI wire path: netload under the seeded aggressive fault schedule
+# (exit 1 unless the frame ledger conserves and the delivered tracks
+# are bit-identical to an in-process run of the same engine).
+wire-smoke:
+	cargo run --release -- netload --streams 4 --frames 80 --engine batch \
+		--faults aggressive --cuts 4 --seed 7 --json wire_report.json
 
 # Regenerate the checked-in baseline. The measured numbers come from
 # THIS machine — review before committing and lower the fps medians to

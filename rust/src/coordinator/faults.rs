@@ -1,0 +1,409 @@
+//! Deterministic seeded fault injection for the TCP front door.
+//!
+//! A [`FaultProxy`] sits between a [`super::net`] client and server as
+//! an in-process TCP forwarder and applies a [`FaultPlan`]: byte
+//! corruption, connection cuts, and forwarding delays, all scheduled by
+//! **absolute byte offset** on each direction's cumulative stream.
+//! Offset-keyed schedules are what make the layer deterministic — the
+//! same seed hits the same logical bytes no matter how the OS chunks
+//! reads and writes, so a failing fault schedule replays exactly under
+//! `--seed`.
+//!
+//! ```text
+//! client ──TCP──► FaultProxy ──TCP──► WireServer
+//!                   │  c→s: corrupt@{o₁…}, cut@{o₂…}, delay@{o₃…}
+//!                   │  s→c: its own independent schedule
+//!                   └─ offsets accumulate ACROSS reconnects: cut a
+//!                      connection and the next one continues the
+//!                      same global schedule
+//! ```
+//!
+//! The proxy never parses frames. Corruption lands on whatever byte
+//! occupies the scheduled offset — length prefixes, checksums, bbox
+//! payloads — which is exactly the point: the wire checksum
+//! ([`super::wire::checksum`]) must catch all of it, and the
+//! reconnect-and-replay protocol must recover to bit-identical tracks.
+
+use crate::prng::Rng;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Faults for one direction of the byte stream, keyed by absolute
+/// offset (cumulative across reconnects).
+#[derive(Debug, Clone, Default)]
+pub struct DirectionPlan {
+    /// Offsets whose byte is XOR-flipped (`^ 0xFF`) in flight.
+    pub corrupt_at: Vec<u64>,
+    /// Offsets at which the connection is severed (bytes before the
+    /// cut are delivered, the cut byte and everything after are not).
+    pub cut_at: Vec<u64>,
+    /// `(offset, delay)` pairs: forwarding pauses for `delay` once the
+    /// offset streams past (slow-peer emulation; keep delays well under
+    /// the server read timeout unless a stall is the point).
+    pub delay_at: Vec<(u64, Duration)>,
+}
+
+impl DirectionPlan {
+    fn sorted(mut self) -> DirectionPlan {
+        self.corrupt_at.sort_unstable();
+        self.cut_at.sort_unstable();
+        self.delay_at.sort_unstable_by_key(|&(o, _)| o);
+        self
+    }
+}
+
+/// A complete two-direction fault schedule.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Faults applied to client→server bytes.
+    pub to_server: DirectionPlan,
+    /// Faults applied to server→client bytes.
+    pub to_client: DirectionPlan,
+}
+
+impl FaultPlan {
+    /// The identity plan: a transparent forwarder.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// An aggressive seeded schedule sized for a conversation of
+    /// roughly `approx_bytes` client→server bytes: at least `cuts`
+    /// connection cuts plus corrupted bytes in both directions and a
+    /// couple of short stalls.
+    ///
+    /// Offsets are drawn from the middle of the byte budget so the
+    /// handshake of the *first* connection usually survives, while
+    /// resends push the true total past `approx_bytes` — later
+    /// scheduled faults keep firing during recovery traffic, which is
+    /// the aggressive part.
+    pub fn aggressive(seed: u64, approx_bytes: u64, cuts: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let span = approx_bytes.max(1024);
+        let mut to_server = DirectionPlan::default();
+        let mut to_client = DirectionPlan::default();
+        for _ in 0..cuts {
+            to_server.cut_at.push(span / 10 + rng.below(span * 8 / 10));
+        }
+        for _ in 0..cuts.max(2) {
+            to_server.corrupt_at.push(span / 10 + rng.below(span * 8 / 10));
+            // the server→client stream (acks + track rows) is usually
+            // larger; scale its offsets by the same fraction of a
+            // bigger budget
+            to_client.corrupt_at.push(span / 5 + rng.below(span * 2));
+        }
+        for _ in 0..2 {
+            let delay = Duration::from_millis(5 + rng.below(20));
+            to_server.delay_at.push((span / 10 + rng.below(span * 8 / 10), delay));
+        }
+        FaultPlan { to_server: to_server.sorted(), to_client: to_client.sorted() }
+    }
+}
+
+/// Mutable per-direction schedule state shared by every connection the
+/// proxy carries (offsets are global, not per connection).
+struct DirectionState {
+    plan: DirectionPlan,
+    offset: u64,
+    /// Cursors into the sorted schedules.
+    next_corrupt: usize,
+    next_cut: usize,
+    next_delay: usize,
+}
+
+impl DirectionState {
+    /// Apply faults to `buf` (the bytes about to stream at the current
+    /// offset). Returns `(deliver_len, delay, cut)`: deliver the first
+    /// `deliver_len` bytes (corrupted in place), sleep `delay` first if
+    /// set, and sever the connection after delivering when `cut`.
+    fn apply(&mut self, buf: &mut [u8]) -> (usize, Option<Duration>, bool) {
+        let start = self.offset;
+        let end = start + buf.len() as u64;
+        let mut deliver = buf.len();
+        let mut cut = false;
+        if let Some(&cut_off) = self.plan.cut_at.get(self.next_cut) {
+            if cut_off < end {
+                deliver = (cut_off.saturating_sub(start)) as usize;
+                cut = true;
+                self.next_cut += 1;
+            }
+        }
+        let deliver_end = start + deliver as u64;
+        while let Some(&off) = self.plan.corrupt_at.get(self.next_corrupt) {
+            if off >= deliver_end {
+                break;
+            }
+            if off >= start {
+                buf[(off - start) as usize] ^= 0xFF;
+            }
+            self.next_corrupt += 1;
+        }
+        let mut delay = None;
+        while let Some(&(off, d)) = self.plan.delay_at.get(self.next_delay) {
+            if off >= deliver_end {
+                break;
+            }
+            if off >= start {
+                delay = Some(delay.unwrap_or(Duration::ZERO) + d);
+            }
+            self.next_delay += 1;
+        }
+        // even when a cut truncates this chunk, the global offset
+        // advances by what the client actually wrote — the schedule is
+        // keyed to *sent* bytes so it stays deterministic
+        self.offset = end;
+        (deliver, delay, cut)
+    }
+}
+
+/// In-process fault-injecting TCP proxy (see module docs).
+pub struct FaultProxy {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<thread::JoinHandle<()>>,
+}
+
+/// One-direction pump: read from `src`, apply `dir` faults, write to
+/// `dst`; on a scheduled cut, sever both sockets so the peer notices.
+fn pump(
+    mut src: TcpStream,
+    mut dst: TcpStream,
+    dir: Arc<Mutex<DirectionState>>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut buf = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let n = match src.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        let (deliver, delay, cut) = dir.lock().unwrap().apply(&mut buf[..n]);
+        if let Some(d) = delay {
+            thread::sleep(d);
+        }
+        if deliver > 0 && dst.write_all(&buf[..deliver]).is_err() {
+            break;
+        }
+        if cut {
+            break;
+        }
+    }
+    // sever both halves: a cut (or upstream EOF) must look like a real
+    // network failure to both peers, not a half-open socket
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}
+
+impl FaultProxy {
+    /// Start a proxy on an ephemeral loopback port, forwarding every
+    /// accepted connection to `upstream` under `plan`.
+    pub fn start(upstream: SocketAddr, plan: FaultPlan) -> crate::Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let to_server = Arc::new(Mutex::new(DirectionState {
+            plan: plan.to_server.sorted(),
+            offset: 0,
+            next_corrupt: 0,
+            next_cut: 0,
+            next_delay: 0,
+        }));
+        let to_client = Arc::new(Mutex::new(DirectionState {
+            plan: plan.to_client.sorted(),
+            offset: 0,
+            next_corrupt: 0,
+            next_cut: 0,
+            next_delay: 0,
+        }));
+        let flag = Arc::clone(&shutdown);
+        let accept_handle = thread::Builder::new()
+            .name("smalltrack-fault-proxy".into())
+            .spawn(move || {
+                let mut pumps: Vec<thread::JoinHandle<()>> = Vec::new();
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(client) = conn else { break };
+                    let Ok(server) = TcpStream::connect(upstream) else {
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    };
+                    let (Ok(c2), Ok(s2)) = (client.try_clone(), server.try_clone()) else {
+                        continue;
+                    };
+                    // per-connection stop flag links the two pumps: a
+                    // cut in one direction kills both
+                    let stop = Arc::new(AtomicBool::new(false));
+                    let (d_up, d_down) = (Arc::clone(&to_server), Arc::clone(&to_client));
+                    let (st_a, st_b) = (Arc::clone(&stop), stop);
+                    pumps.push(thread::spawn(move || pump(client, server, d_up, st_a)));
+                    pumps.push(thread::spawn(move || pump(s2, c2, d_down, st_b)));
+                }
+                for p in pumps {
+                    let _ = p.join();
+                }
+            })
+            .expect("spawn fault-proxy acceptor");
+        Ok(FaultProxy { addr, shutdown, accept_handle: Some(accept_handle) })
+    }
+
+    /// Address clients should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, sever live connections, join the pump threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        // unblock the acceptor with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        if self.accept_handle.is_some() {
+            self.stop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    /// Echo server: accepts one connection at a time, echoes bytes.
+    fn echo_server() -> (SocketAddr, thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut s) = conn else { break };
+                let mut buf = [0u8; 1024];
+                loop {
+                    match s.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            if buf[..n] == [0xEE] {
+                                return; // poison pill stops the server
+                            }
+                            if s.write_all(&buf[..n]).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn transparent_plan_forwards_bytes_unchanged() {
+        let (up, server) = echo_server();
+        let proxy = FaultProxy::start(up, FaultPlan::none()).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let msg = b"hello through the proxy";
+        c.write_all(msg).unwrap();
+        let mut got = vec![0u8; msg.len()];
+        c.read_exact(&mut got).unwrap();
+        assert_eq!(&got, msg);
+        let mut k = TcpStream::connect(up).unwrap();
+        let _ = k.write_all(&[0xEE]);
+        drop(k);
+        proxy.shutdown();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn corruption_flips_exactly_the_scheduled_byte() {
+        let (up, server) = echo_server();
+        let plan = FaultPlan {
+            to_server: DirectionPlan { corrupt_at: vec![3], ..Default::default() },
+            to_client: DirectionPlan::default(),
+        };
+        let proxy = FaultProxy::start(up, plan).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c.write_all(&[0u8; 8]).unwrap();
+        let mut got = [0u8; 8];
+        c.read_exact(&mut got).unwrap();
+        assert_eq!(got, [0, 0, 0, 0xFF, 0, 0, 0, 0], "only offset 3 flips");
+        let mut k = TcpStream::connect(up).unwrap();
+        let _ = k.write_all(&[0xEE]);
+        drop(k);
+        proxy.shutdown();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn cut_severs_the_connection_and_offsets_survive_reconnect() {
+        let (up, server) = echo_server();
+        let plan = FaultPlan {
+            to_server: DirectionPlan { cut_at: vec![6], ..Default::default() },
+            to_client: DirectionPlan::default(),
+        };
+        let proxy = FaultProxy::start(up, plan).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // 4 bytes pass (offsets 0..4), echoed fine
+        c.write_all(&[1u8; 4]).unwrap();
+        let mut got = [0u8; 4];
+        c.read_exact(&mut got).unwrap();
+        // next 4 bytes cross the cut at offset 6: at most the 2 bytes
+        // before the cut echo back, then the connection dies
+        let _ = c.write_all(&[2u8; 4]);
+        let mut end = [0u8; 8];
+        let mut echoed = 0usize;
+        loop {
+            match c.read(&mut end) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => echoed += n,
+            }
+        }
+        assert!(echoed <= 2, "bytes past the cut must never arrive (saw {echoed})");
+        // a reconnect works and the (exhausted) schedule stays quiet
+        let mut c2 = TcpStream::connect(proxy.addr()).unwrap();
+        c2.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c2.write_all(&[3u8; 4]).unwrap();
+        let mut got2 = [0u8; 4];
+        c2.read_exact(&mut got2).unwrap();
+        assert_eq!(got2, [3u8; 4], "post-cut reconnect is clean");
+        let mut k = TcpStream::connect(up).unwrap();
+        let _ = k.write_all(&[0xEE]);
+        drop(k);
+        proxy.shutdown();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn aggressive_plan_is_deterministic_and_sized() {
+        let a = FaultPlan::aggressive(7, 10_000, 3);
+        let b = FaultPlan::aggressive(7, 10_000, 3);
+        assert_eq!(a.to_server.cut_at, b.to_server.cut_at, "same seed, same schedule");
+        assert_eq!(a.to_server.corrupt_at, b.to_server.corrupt_at);
+        assert_eq!(a.to_client.corrupt_at, b.to_client.corrupt_at);
+        assert_eq!(a.to_server.cut_at.len(), 3);
+        assert!(a.to_server.corrupt_at.len() >= 3);
+        let c = FaultPlan::aggressive(8, 10_000, 3);
+        assert_ne!(a.to_server.cut_at, c.to_server.cut_at, "different seed, different schedule");
+        assert!(a.to_server.cut_at.windows(2).all(|w| w[0] <= w[1]), "sorted for the cursor walk");
+    }
+}

@@ -226,6 +226,47 @@ impl ServiceMetrics {
     }
 }
 
+/// Connection-level counters for the TCP front door
+/// ([`crate::coordinator::net`]).
+///
+/// Kept by the wire server across every connection it has carried;
+/// the netload client keeps its own instance for its side of the
+/// conversation. Merged for fleet-level reporting like the other
+/// counter types here.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WireCounters {
+    /// TCP connections accepted (or, client-side, attempted).
+    pub connections: u64,
+    /// Sessions opened fresh (`OPEN` accepted).
+    pub sessions_opened: u64,
+    /// Sessions reattached after a disconnect (`RESUME` accepted).
+    pub reconnects: u64,
+    /// Frames replayed into a restored engine during resume.
+    pub replays: u64,
+    /// Frames rejected at the protocol boundary (corrupt, over caps,
+    /// out of sequence) — each one also poisons its connection.
+    pub rejected_frames: u64,
+    /// Idempotent re-acks of already-accepted frames (dup pushes
+    /// after a resume rewind).
+    pub dup_acks: u64,
+    /// Connections torn down without a clean `CLOSE` (timeout, EOF,
+    /// poison) — the sessions survive for resume.
+    pub dirty_disconnects: u64,
+}
+
+impl WireCounters {
+    /// Merge another instance (fleet roll-ups).
+    pub fn merge(&mut self, other: &WireCounters) {
+        self.connections += other.connections;
+        self.sessions_opened += other.sessions_opened;
+        self.reconnects += other.reconnects;
+        self.replays += other.replays;
+        self.rejected_frames += other.rejected_frames;
+        self.dup_acks += other.dup_acks;
+        self.dirty_disconnects += other.dirty_disconnects;
+    }
+}
+
 /// Log-bucketed latency histogram.
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
@@ -455,6 +496,27 @@ mod tests {
         s.deadline_hits = 0;
         s.deadline_misses = 0;
         assert_eq!(s.deadline_hit_ratio(), 1.0, "no judged frames => vacuously met");
+    }
+
+    #[test]
+    fn wire_counters_merge_fieldwise() {
+        let mut a = WireCounters {
+            connections: 3,
+            sessions_opened: 1,
+            reconnects: 2,
+            replays: 9,
+            rejected_frames: 1,
+            dup_acks: 4,
+            dirty_disconnects: 2,
+        };
+        let b = a.clone();
+        a.merge(&b);
+        assert_eq!(a.connections, 6);
+        assert_eq!(a.replays, 18);
+        assert_eq!(a.dirty_disconnects, 4);
+        let mut z = WireCounters::default();
+        z.merge(&b);
+        assert_eq!(z, b, "merge into default is identity");
     }
 
     #[test]

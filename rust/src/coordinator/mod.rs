@@ -34,10 +34,20 @@
 //!   sharded batch mode
 //! * [`metrics`] — FPS counters, latency histograms, per-worker
 //!   scheduler counters, live service snapshots
+//! * [`wire`] — the versioned length-prefixed binary protocol (codec
+//!   only: frames, checksums, hard caps)
+//! * [`net`] — the TCP front door over [`wire`]: the `WireServer`
+//!   mapping connections onto service sessions with
+//!   checkpoint/resume/replay recovery, and the backoff-governed
+//!   `NetClient` / netload harness
+//! * [`faults`] — deterministic seeded fault injection (an in-process
+//!   proxy applying byte-offset-keyed corrupt/cut/delay schedules)
 
 pub mod backpressure;
 pub mod control;
+pub mod faults;
 pub mod metrics;
+pub mod net;
 pub mod policy;
 pub mod pool;
 pub mod router;
@@ -46,11 +56,18 @@ pub mod server;
 pub mod service;
 pub mod stream;
 pub mod strong;
+pub mod wire;
 
 pub use backpressure::{BoundedQueue, PushPolicy, TryPop};
 pub use control::{Action, ControlConfig, Controller, MetricsSource};
+pub use faults::{DirectionPlan, FaultPlan, FaultProxy};
 pub use metrics::{
-    FpsCounter, LatencyHistogram, ServiceMetrics, SessionSnapshot, WorkerCounters, WorkerSnapshot,
+    FpsCounter, LatencyHistogram, ServiceMetrics, SessionSnapshot, WireCounters, WorkerCounters,
+    WorkerSnapshot,
+};
+pub use net::{
+    netload_run, ClientLedger, NetClient, NetClientConfig, NetRunOutcome, NetloadOptions,
+    NetloadOutcome, WireServer, WireServerConfig,
 };
 pub use policy::{run_policy, run_policy_with_engine, ScalingOutcome, ScalingPolicy};
 pub use pool::WorkerPool;
@@ -60,7 +77,8 @@ pub use scheduler::{
 };
 pub use server::{serve, serve_observed, ServerConfig, ServerReport};
 pub use service::{
-    ServiceConfig, SessionHandle, SessionParams, SessionStats, Slo, TrackingService,
+    ServiceConfig, ServiceError, SessionHandle, SessionParams, SessionStats, Slo, TrackingService,
 };
 pub use stream::{FrameJob, Pacing, VideoStream};
 pub use strong::ParallelSort;
+pub use wire::{Frame, TrackRow};

@@ -1,0 +1,1255 @@
+//! The TCP front door: [`WireServer`] maps connections onto
+//! [`TrackingService`] sessions, [`NetClient`] drives a stream over the
+//! wire with reconnect-and-replay recovery, and [`netload_run`] is the
+//! closed-loop harness the lab and CLI share.
+//!
+//! ## Recovery model
+//!
+//! The server keeps a *wire session* per client-chosen `session_key`
+//! that outlives any one TCP connection. Alongside the live service
+//! [`SessionHandle`] it banks three things:
+//!
+//! * a **complete row log** — every track row ever produced, so a
+//!   client can re-poll from any index after a disconnect;
+//! * the latest **engine checkpoint** ([`EngineState`] at a wire frame
+//!   number), refreshed at the session's [`CheckpointCadence`];
+//! * a **replay buffer** of the accepted frames *after* that
+//!   checkpoint (everything, when the backend cannot checkpoint).
+//!
+//! A dirty disconnect tears the service session down losslessly (the
+//! push policy is forced to [`PushPolicy::Block`], so every acked frame
+//! was queued; close-then-join drains the queue). On `RESUME` the
+//! server re-opens the engine from the checkpoint and replays the
+//! buffered frames; regenerated rows are deduplicated against the
+//! `rows_through` watermark — the engines are deterministic, so the
+//! copies are bit-identical and either may be served. The client, for
+//! its part, retries with exponential backoff plus seeded jitter and
+//! resumes pushing from `resume_from`; the acceptance contract (pinned
+//! by `rust/tests/integration_wire.rs`) is that the delivered rows are
+//! `f64::to_bits`-identical to an in-process run of the same engine,
+//! no matter how hostile the fault schedule.
+//!
+//! ## Connection hygiene
+//!
+//! Every connection carries read *and* write deadlines (slow-loris
+//! defense), a malformed or over-cap frame poisons only the offending
+//! connection (an [`error_code::MALFORMED`] reply, then the socket
+//! closes), and a `generation` counter on the wire session makes a
+//! superseded connection's teardown a no-op — a fast-reconnecting
+//! client can never have its restored session closed out from under it
+//! by the stale socket it abandoned.
+
+use super::backpressure::PushPolicy;
+use super::faults::FaultProxy;
+use super::metrics::{LatencyHistogram, ServiceMetrics, WireCounters};
+use super::service::{ServiceConfig, SessionHandle, SessionParams, TrackingService};
+use super::wire::{self, error_code, Frame, TrackRow};
+use crate::engine::{EngineKind, EngineState};
+use crate::prng::Rng;
+use crate::sort::{Bbox, CheckpointCadence};
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// How long the server waits for a wedged session to drain at
+/// teardown/close before giving up on its remaining rows.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Server-side configuration for [`WireServer::bind`].
+#[derive(Debug, Clone, Copy)]
+pub struct WireServerConfig {
+    /// The tracking service under the front door. `push_policy` is
+    /// forced to [`PushPolicy::Block`] at bind — a `PushAck` promises
+    /// the frame will be processed, so ingestion must be lossless.
+    pub service: ServiceConfig,
+    /// Per-connection read deadline (slow-loris defense): a connection
+    /// that sends nothing for this long is dropped.
+    pub read_timeout: Duration,
+    /// Per-connection write deadline: a peer that stops draining its
+    /// socket is dropped.
+    pub write_timeout: Duration,
+    /// Checkpoint cadence (frames) for sessions whose `Open` left it 0.
+    pub default_checkpoint_every: u32,
+}
+
+impl Default for WireServerConfig {
+    fn default() -> Self {
+        WireServerConfig {
+            service: ServiceConfig::default(),
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            default_checkpoint_every: 16,
+        }
+    }
+}
+
+/// One wire session: the per-`session_key` state that outlives TCP
+/// connections (see module docs).
+struct WireSession {
+    /// Service parameters the session was admitted with.
+    params: SessionParams,
+    /// Live service session, absent between teardown and restore.
+    handle: Option<SessionHandle>,
+    /// Ownership guard: bumped on every (re)bind; a connection whose
+    /// generation is stale must not touch the session.
+    generation: u64,
+    /// Wire frame number the current service session started after:
+    /// `wire_seq = base + service_seq`.
+    base: u64,
+    /// Highest wire frame number accepted so far.
+    highest: u64,
+    /// Latest `(wire_seq, state)` recovery anchor.
+    checkpoint: Option<(u64, EngineState)>,
+    /// Accepted frames newer than the checkpoint, for replay.
+    replay: VecDeque<(u64, Vec<Bbox>)>,
+    /// Complete row log, served by `Poll { from_row }`.
+    rows: Vec<TrackRow>,
+    /// Highest wire frame whose rows are banked in `rows` — the
+    /// dedupe watermark for rows regenerated during replay.
+    rows_through: u64,
+    /// Set by `Close`; the session is drained and immutable.
+    closed: bool,
+}
+
+/// State shared between the acceptor, connections, and [`WireServer`].
+struct ServerShared {
+    cfg: WireServerConfig,
+    /// The service, consumed by shutdown.
+    svc: Mutex<Option<TrackingService>>,
+    registry: Mutex<HashMap<u64, Arc<Mutex<WireSession>>>>,
+    counters: Mutex<WireCounters>,
+    shutdown: AtomicBool,
+    conns: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+/// The TCP front door over the [`wire`] protocol (see module docs).
+pub struct WireServer {
+    addr: SocketAddr,
+    inner: Arc<ServerShared>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Start the service, bind `addr` (use `"127.0.0.1:0"` for an
+    /// ephemeral test port), and begin accepting connections.
+    pub fn bind(addr: &str, mut cfg: WireServerConfig) -> crate::Result<WireServer> {
+        // a PushAck is a processing promise: block, never shed
+        cfg.service.push_policy = PushPolicy::Block;
+        let svc = TrackingService::start(cfg.service)?;
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let inner = Arc::new(ServerShared {
+            cfg,
+            svc: Mutex::new(Some(svc)),
+            registry: Mutex::new(HashMap::new()),
+            counters: Mutex::new(WireCounters::default()),
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let acc = Arc::clone(&inner);
+        let accept = thread::Builder::new()
+            .name("smalltrack-wire-accept".into())
+            .spawn(move || loop {
+                match acc.listener_accept(&listener) {
+                    Some(stream) => {
+                        let conn = Arc::clone(&acc);
+                        let h = thread::Builder::new()
+                            .name("smalltrack-wire-conn".into())
+                            .spawn(move || serve_conn(&conn, stream))
+                            .expect("spawn wire connection");
+                        acc.conns.lock().unwrap().push(h);
+                    }
+                    None => return,
+                }
+            })
+            .expect("spawn wire acceptor");
+        Ok(WireServer { addr: local, inner, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live wire-layer counters snapshot.
+    pub fn wire_counters(&self) -> WireCounters {
+        self.inner.counters.lock().unwrap().clone()
+    }
+
+    /// Graceful drain: stop accepting, join live connections, tear
+    /// down every wire session (close + drain its service session),
+    /// shut the service down, and return the final metrics.
+    pub fn shutdown(mut self) -> (ServiceMetrics, WireCounters) {
+        self.stop_accepting();
+        let conns = std::mem::take(&mut *self.inner.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+        let sessions: Vec<_> = self.inner.registry.lock().unwrap().values().cloned().collect();
+        for s in sessions {
+            teardown(&mut s.lock().unwrap());
+        }
+        let svc = self.inner.svc.lock().unwrap().take();
+        let metrics = svc.expect("wire server owns its service until shutdown").shutdown();
+        let counters = self.inner.counters.lock().unwrap().clone();
+        (metrics, counters)
+    }
+
+    fn stop_accepting(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        // unblock the acceptor with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        // a dropped-without-shutdown server must not leak the acceptor;
+        // the TrackingService joins its own workers on drop
+        if self.accept.is_some() {
+            self.stop_accepting();
+            let conns = std::mem::take(&mut *self.inner.conns.lock().unwrap());
+            for h in conns {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl ServerShared {
+    /// Accept one connection, or `None` once shutdown is flagged.
+    fn listener_accept(&self, listener: &TcpListener) -> Option<TcpStream> {
+        match listener.accept() {
+            Ok((stream, _)) if !self.shutdown.load(Ordering::Acquire) => Some(stream),
+            _ => None,
+        }
+    }
+}
+
+/// Bank newly-produced rows from the service sink, deduplicating
+/// against the `rows_through` watermark (rows regenerated by a replay
+/// are bit-identical copies of rows already banked).
+fn drain_handle_rows(ws: &mut WireSession, h: &SessionHandle) {
+    let drained = h.poll_tracks();
+    let mut through = ws.rows_through;
+    for (f, id, bbox) in drained {
+        let wf = ws.base + u64::from(f);
+        if wf > ws.rows_through {
+            ws.rows.push(TrackRow { frame: wf as u32, id, bbox });
+            through = through.max(wf);
+        }
+    }
+    ws.rows_through = through;
+}
+
+/// Adopt the service session's latest checkpoint (if newer than the
+/// banked one) and trim the replay buffer to the frames after it.
+fn refresh_checkpoint(ws: &mut WireSession, h: &SessionHandle) {
+    if let Some((svc_seq, state)) = h.latest_checkpoint() {
+        let wf = ws.base + svc_seq;
+        let newer = match &ws.checkpoint {
+            Some((have, _)) => wf > *have,
+            None => true,
+        };
+        if newer {
+            ws.checkpoint = Some((wf, state));
+            while ws.replay.front().is_some_and(|(s, _)| *s <= wf) {
+                ws.replay.pop_front();
+            }
+        }
+    }
+}
+
+/// Close and drain the wire session's service session (lossless under
+/// `Block`: every acked frame was queued, close-then-join processes
+/// them all), then bank its rows and final checkpoint. Idempotent.
+fn teardown(ws: &mut WireSession) {
+    if let Some(h) = ws.handle.take() {
+        h.close();
+        if h.join_timeout(DRAIN_TIMEOUT).is_some() {
+            refresh_checkpoint(ws, &h);
+        }
+        drain_handle_rows(ws, &h);
+    }
+}
+
+/// Ensure the wire session has a live service session: re-open from
+/// the checkpoint (or from scratch when there is none — the universal
+/// fallback for backends that cannot export state) and replay the
+/// buffered frames after it. Returns how many frames were replayed;
+/// a no-op when a handle is already live or the session is closed.
+fn restore(shared: &ServerShared, ws: &mut WireSession) -> crate::Result<u64> {
+    if ws.closed || ws.handle.is_some() {
+        return Ok(0);
+    }
+    let h = {
+        let svc_guard = shared.svc.lock().unwrap();
+        let svc = svc_guard
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("wire server is shut down"))?;
+        match &ws.checkpoint {
+            Some((ckpt_seq, state)) => {
+                let h = svc.open_session_with_state(ws.params, state)?;
+                ws.base = *ckpt_seq;
+                h
+            }
+            None => {
+                let h = svc.open_session(ws.params)?;
+                ws.base = 0;
+                h
+            }
+        }
+    };
+    let mut replayed = 0u64;
+    for (seq, boxes) in &ws.replay {
+        if *seq > ws.base {
+            if !h.push_frame(boxes.clone()) {
+                anyhow::bail!("session sealed during replay");
+            }
+            replayed += 1;
+        }
+    }
+    ws.handle = Some(h);
+    Ok(replayed)
+}
+
+/// A connection's binding to a wire session: key, session, and the
+/// generation this connection owns.
+type Binding = (u64, Arc<Mutex<WireSession>>, u64);
+
+/// End-of-connection cleanup: if this connection still owns a live,
+/// unclosed session, the disconnect was dirty — tear the service
+/// session down (losslessly) so a later `RESUME` restores it.
+fn end_conn(shared: &ServerShared, bound: &Option<Binding>) {
+    if let Some((_, ws_arc, my_gen)) = bound {
+        let mut ws = ws_arc.lock().unwrap();
+        if ws.generation == *my_gen && !ws.closed && ws.handle.is_some() {
+            shared.counters.lock().unwrap().dirty_disconnects += 1;
+            teardown(&mut ws);
+        }
+    }
+}
+
+/// Reply helper: mirror the request's seq, ignore transport errors
+/// (the read side will notice the dead socket).
+fn reply(stream: &mut TcpStream, seq: u64, frame: &Frame) {
+    let _ = wire::write_frame(stream, seq, frame);
+}
+
+/// Reply with a protocol error. The caller closes the connection —
+/// every error poisons only the connection it happened on.
+fn reply_err(stream: &mut TcpStream, seq: u64, code: u16, detail: impl Into<String>) {
+    reply(stream, seq, &Frame::Error { code, detail: detail.into() });
+}
+
+/// Serve one connection: strict request-response over the state
+/// machine described in the module docs.
+fn serve_conn(shared: &ServerShared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    shared.counters.lock().unwrap().connections += 1;
+    let mut bound: Option<Binding> = None;
+    let mut hello_done = false;
+    loop {
+        let (seq, frame) = match wire::read_frame(&mut stream) {
+            Ok(Ok(pair)) => pair,
+            Ok(Err(e)) => {
+                // malformed bytes: reject, poison this connection only
+                shared.counters.lock().unwrap().rejected_frames += 1;
+                reply_err(&mut stream, 0, error_code::MALFORMED, e.to_string());
+                end_conn(shared, &bound);
+                return;
+            }
+            Err(_) => {
+                // transport error or EOF (clean or dirty — end_conn
+                // distinguishes by whether a live session is bound)
+                end_conn(shared, &bound);
+                return;
+            }
+        };
+        if !hello_done {
+            match frame {
+                Frame::Hello { magic, version }
+                    if magic == wire::MAGIC && version == wire::VERSION =>
+                {
+                    reply(&mut stream, seq, &Frame::HelloAck { version: wire::VERSION });
+                    hello_done = true;
+                    continue;
+                }
+                _ => {
+                    reply_err(
+                        &mut stream,
+                        seq,
+                        error_code::BAD_HANDSHAKE,
+                        "expected HELLO with matching magic and version",
+                    );
+                    end_conn(shared, &bound);
+                    return;
+                }
+            }
+        }
+        match frame {
+            Frame::Hello { .. } => {
+                reply_err(&mut stream, seq, error_code::BAD_HANDSHAKE, "duplicate HELLO");
+                end_conn(shared, &bound);
+                return;
+            }
+            Frame::Open { session_key, engine_spec, checkpoint_every } => {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    reply_err(&mut stream, seq, error_code::SHUTTING_DOWN, "server is draining");
+                    end_conn(shared, &bound);
+                    return;
+                }
+                let kind: EngineKind = match engine_spec.parse() {
+                    Ok(k) => k,
+                    Err(e) => {
+                        reply_err(&mut stream, seq, error_code::REJECTED, e.to_string());
+                        end_conn(shared, &bound);
+                        return;
+                    }
+                };
+                let mut params = shared.cfg.service.session_defaults;
+                params.engine = kind;
+                let every = if checkpoint_every > 0 {
+                    checkpoint_every
+                } else {
+                    shared.cfg.default_checkpoint_every
+                };
+                params.checkpoint = CheckpointCadence::every(u64::from(every));
+                let (ws_arc, fresh) = {
+                    let mut reg = shared.registry.lock().unwrap();
+                    match reg.get(&session_key) {
+                        Some(ws) => (Arc::clone(ws), false),
+                        None => {
+                            let ws = Arc::new(Mutex::new(WireSession {
+                                params,
+                                handle: None,
+                                generation: 0,
+                                base: 0,
+                                highest: 0,
+                                checkpoint: None,
+                                replay: VecDeque::new(),
+                                rows: Vec::new(),
+                                rows_through: 0,
+                                closed: false,
+                            }));
+                            reg.insert(session_key, Arc::clone(&ws));
+                            (ws, true)
+                        }
+                    }
+                };
+                let mut ws = ws_arc.lock().unwrap();
+                if !fresh && ws.params.engine != kind {
+                    // re-OPEN (lost ack) must agree with the original
+                    reply_err(
+                        &mut stream,
+                        seq,
+                        error_code::REJECTED,
+                        format!("session key already open with engine {}", ws.params.engine.label()),
+                    );
+                    end_conn(shared, &bound);
+                    return;
+                }
+                if let Err(e) = restore(shared, &mut ws) {
+                    reply_err(&mut stream, seq, error_code::REJECTED, e.to_string());
+                    end_conn(shared, &bound);
+                    return;
+                }
+                ws.generation += 1;
+                let generation = ws.generation;
+                drop(ws);
+                if fresh {
+                    shared.counters.lock().unwrap().sessions_opened += 1;
+                }
+                bound = Some((session_key, ws_arc, generation));
+                reply(&mut stream, seq, &Frame::OpenAck { session_key });
+            }
+            Frame::Resume { session_key, rows_received: _ } => {
+                // the client re-polls from its own row count, so
+                // rows_received is informational
+                let Some(ws_arc) = shared.registry.lock().unwrap().get(&session_key).cloned()
+                else {
+                    reply_err(
+                        &mut stream,
+                        seq,
+                        error_code::UNKNOWN_SESSION,
+                        format!("no session with key {session_key}"),
+                    );
+                    end_conn(shared, &bound);
+                    return;
+                };
+                let mut ws = ws_arc.lock().unwrap();
+                match restore(shared, &mut ws) {
+                    Ok(replayed) => {
+                        let mut c = shared.counters.lock().unwrap();
+                        c.reconnects += 1;
+                        c.replays += replayed;
+                    }
+                    Err(e) => {
+                        reply_err(&mut stream, seq, error_code::REJECTED, e.to_string());
+                        end_conn(shared, &bound);
+                        return;
+                    }
+                }
+                ws.generation += 1;
+                let ack = Frame::ResumeAck {
+                    resume_from: ws.highest + 1,
+                    rows_total: ws.rows.len() as u64,
+                };
+                let generation = ws.generation;
+                drop(ws);
+                bound = Some((session_key, ws_arc, generation));
+                reply(&mut stream, seq, &ack);
+            }
+            Frame::Push { boxes } => {
+                let Some((_, ws_arc, my_gen)) = &bound else {
+                    reply_err(&mut stream, seq, error_code::REJECTED, "no session bound");
+                    return;
+                };
+                let mut ws = ws_arc.lock().unwrap();
+                if ws.generation != *my_gen {
+                    drop(ws);
+                    reply_err(&mut stream, seq, error_code::REJECTED, "connection superseded");
+                    return;
+                }
+                if ws.closed {
+                    drop(ws);
+                    reply_err(&mut stream, seq, error_code::REJECTED, "session is closed");
+                    end_conn(shared, &bound);
+                    return;
+                }
+                if seq == 0 || seq > ws.highest + 1 {
+                    let highest = ws.highest;
+                    drop(ws);
+                    shared.counters.lock().unwrap().rejected_frames += 1;
+                    reply_err(
+                        &mut stream,
+                        seq,
+                        error_code::SEQ_GAP,
+                        format!("push seq {seq} does not extend accepted prefix {highest}"),
+                    );
+                    end_conn(shared, &bound);
+                    return;
+                }
+                if seq <= ws.highest {
+                    // duplicate of an already-accepted frame (our ack
+                    // was lost): re-ack, do not re-run
+                    drop(ws);
+                    shared.counters.lock().unwrap().dup_acks += 1;
+                    reply(&mut stream, seq, &Frame::PushAck);
+                    continue;
+                }
+                if ws.handle.is_none() {
+                    if let Err(e) = restore(shared, &mut ws) {
+                        drop(ws);
+                        reply_err(&mut stream, seq, error_code::REJECTED, e.to_string());
+                        end_conn(shared, &bound);
+                        return;
+                    }
+                }
+                let h = ws.handle.take().expect("restore leaves a live handle");
+                if !h.push_frame(boxes.clone()) {
+                    ws.handle = Some(h);
+                    drop(ws);
+                    reply_err(&mut stream, seq, error_code::SHUTTING_DOWN, "session sealed");
+                    end_conn(shared, &bound);
+                    return;
+                }
+                ws.replay.push_back((seq, boxes));
+                ws.highest = seq;
+                let period = ws.params.checkpoint.period();
+                if period != 0 && (seq - ws.base) % period == 0 {
+                    refresh_checkpoint(&mut ws, &h);
+                }
+                drain_handle_rows(&mut ws, &h);
+                ws.handle = Some(h);
+                drop(ws);
+                reply(&mut stream, seq, &Frame::PushAck);
+            }
+            Frame::Poll { from_row } => {
+                let Some((_, ws_arc, my_gen)) = &bound else {
+                    reply_err(&mut stream, seq, error_code::REJECTED, "no session bound");
+                    return;
+                };
+                let mut ws = ws_arc.lock().unwrap();
+                if ws.generation != *my_gen {
+                    drop(ws);
+                    reply_err(&mut stream, seq, error_code::REJECTED, "connection superseded");
+                    return;
+                }
+                if let Some(h) = ws.handle.take() {
+                    drain_handle_rows(&mut ws, &h);
+                    ws.handle = Some(h);
+                }
+                let total = ws.rows.len() as u64;
+                let from = from_row.min(total) as usize;
+                let end = (from + wire::MAX_TRACK_ROWS).min(total as usize);
+                let done = ws.closed && ws.handle.is_none() && end as u64 == total;
+                let tracks =
+                    Frame::Tracks { rows: ws.rows[from..end].to_vec(), total, done };
+                drop(ws);
+                reply(&mut stream, seq, &tracks);
+            }
+            Frame::Close => {
+                let Some((_, ws_arc, my_gen)) = &bound else {
+                    reply_err(&mut stream, seq, error_code::REJECTED, "no session bound");
+                    return;
+                };
+                let mut ws = ws_arc.lock().unwrap();
+                if ws.generation != *my_gen {
+                    drop(ws);
+                    reply_err(&mut stream, seq, error_code::REJECTED, "connection superseded");
+                    return;
+                }
+                if !ws.closed {
+                    teardown(&mut ws);
+                    ws.closed = true;
+                    ws.replay.clear();
+                    ws.checkpoint = None;
+                }
+                let ack = Frame::CloseAck { total_rows: ws.rows.len() as u64 };
+                drop(ws);
+                reply(&mut stream, seq, &ack);
+            }
+            // server-to-client frames arriving at the server are a
+            // protocol violation
+            Frame::HelloAck { .. }
+            | Frame::OpenAck { .. }
+            | Frame::PushAck
+            | Frame::Tracks { .. }
+            | Frame::CloseAck { .. }
+            | Frame::ResumeAck { .. }
+            | Frame::Error { .. } => {
+                shared.counters.lock().unwrap().rejected_frames += 1;
+                reply_err(&mut stream, seq, error_code::MALFORMED, "unexpected frame direction");
+                end_conn(shared, &bound);
+                return;
+            }
+        }
+    }
+}
+
+/// Client-side configuration for [`NetClient`].
+#[derive(Debug, Clone)]
+pub struct NetClientConfig {
+    /// Server (or fault-proxy) address.
+    pub addr: SocketAddr,
+    /// Stable session key — the handle `RESUME` recovers by.
+    pub session_key: u64,
+    /// Engine spec sent in `Open` (`native` | `batch` | `batchf32` |
+    /// `strong:N` | `xla`).
+    pub engine_spec: String,
+    /// Requested checkpoint cadence (0 = server default).
+    pub checkpoint_every: u32,
+    /// Socket read deadline.
+    pub read_timeout: Duration,
+    /// Socket write deadline.
+    pub write_timeout: Duration,
+    /// First reconnect backoff; doubles per consecutive failure.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Consecutive failures tolerated before giving up — both for
+    /// reaching the server at all and for re-pushing one frame.
+    pub max_failures: u32,
+    /// Seed for the backoff jitter.
+    pub seed: u64,
+}
+
+impl NetClientConfig {
+    /// Defaults against `addr`: native engine, server-side checkpoint
+    /// cadence, 2s deadlines, 10ms..500ms backoff, 8 retries.
+    pub fn new(addr: SocketAddr) -> NetClientConfig {
+        NetClientConfig {
+            addr,
+            session_key: 1,
+            engine_spec: "native".into(),
+            checkpoint_every: 0,
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(500),
+            max_failures: 8,
+            seed: 1,
+        }
+    }
+}
+
+/// The client's frame-conservation ledger. At every quiescent point:
+/// `frames_sent == frames_acked + rejected + in_flight_at_close`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientLedger {
+    /// Unique frames handed to the wire (highest seq attempted).
+    pub frames_sent: u64,
+    /// Frames the server acknowledged.
+    pub frames_acked: u64,
+    /// Frames abandoned after exhausting per-frame retries.
+    pub rejected: u64,
+    /// Frames sent but neither acked nor rejected when the run ended.
+    pub in_flight_at_close: u64,
+    /// Duplicate transmissions (retries of already-sent frames).
+    pub resent: u64,
+    /// Successful session re-establishments after a connection died.
+    pub reconnects: u64,
+    /// Track rows received.
+    pub rows_received: u64,
+}
+
+impl ClientLedger {
+    /// The frame-conservation equation (see type docs).
+    pub fn conserves(&self) -> bool {
+        self.frames_sent == self.frames_acked + self.rejected + self.in_flight_at_close
+    }
+
+    /// Field-wise sum, for aggregating per-stream ledgers.
+    pub fn merge(&mut self, other: &ClientLedger) {
+        self.frames_sent += other.frames_sent;
+        self.frames_acked += other.frames_acked;
+        self.rejected += other.rejected;
+        self.in_flight_at_close += other.in_flight_at_close;
+        self.resent += other.resent;
+        self.reconnects += other.reconnects;
+        self.rows_received += other.rows_received;
+    }
+}
+
+/// What one client stream produced.
+#[derive(Debug, Clone)]
+pub struct NetRunOutcome {
+    /// Every track row received, in wire frame order.
+    pub rows: Vec<TrackRow>,
+    /// Frame-conservation accounting.
+    pub ledger: ClientLedger,
+    /// Push-to-poll round-trip latency per delivered frame.
+    pub latency: LatencyHistogram,
+    /// Wall-clock for the whole stream, reconnects included.
+    pub wall: Duration,
+    /// Whether the stream ran to a clean close with all rows drained.
+    pub completed: bool,
+}
+
+/// Why one request-response exchange failed.
+enum RpcFail {
+    /// Transport or retryable protocol failure: reconnect and resume.
+    Retry,
+    /// The server refused in a way retrying cannot fix.
+    Fatal(anyhow::Error),
+}
+
+/// One request-response exchange on an established connection.
+fn rpc(stream: &mut TcpStream, seq: u64, frame: &Frame) -> Result<Frame, RpcFail> {
+    if wire::write_frame(stream, seq, frame).is_err() {
+        return Err(RpcFail::Retry);
+    }
+    match wire::read_frame(stream) {
+        Err(_) | Ok(Err(_)) => Err(RpcFail::Retry),
+        Ok(Ok((_, Frame::Error { code, detail }))) => match code {
+            // a poisoned connection (corruption en route) or a gap the
+            // resume handshake will heal: reconnect
+            error_code::MALFORMED | error_code::SEQ_GAP => Err(RpcFail::Retry),
+            _ => Err(RpcFail::Fatal(anyhow::anyhow!("server error {code}: {detail}"))),
+        },
+        Ok(Ok((rseq, reply))) => {
+            if rseq != seq {
+                // a response to some other request: the conversation
+                // is out of step, start a fresh connection
+                return Err(RpcFail::Retry);
+            }
+            Ok(reply)
+        }
+    }
+}
+
+/// A backoff-governed wire client driving one stream (see module docs).
+pub struct NetClient {
+    cfg: NetClientConfig,
+    rng: Rng,
+}
+
+impl NetClient {
+    /// Build a client; the config seed fixes the backoff jitter.
+    pub fn new(cfg: NetClientConfig) -> NetClient {
+        let rng = Rng::new(cfg.seed);
+        NetClient { cfg, rng }
+    }
+
+    /// Exponential backoff with jitter for the `n`-th consecutive
+    /// failure.
+    fn backoff(&mut self, failures: u32) -> Duration {
+        let exp = failures.saturating_sub(1).min(10);
+        let base = self.cfg.backoff_base.as_secs_f64() * f64::from(1u32 << exp);
+        let jittered = base * (1.0 + self.rng.uniform());
+        Duration::from_secs_f64(jittered.min(self.cfg.backoff_max.as_secs_f64()))
+    }
+
+    /// Push `frames` (1-based wire seqs `1..=frames.len()`) through the
+    /// server, riding out disconnects via RESUME, and drain every track
+    /// row. Fails only on fatal server refusals or when the server
+    /// stays unreachable past `max_failures` consecutive attempts.
+    pub fn run_stream(&mut self, frames: &[Vec<Bbox>]) -> crate::Result<NetRunOutcome> {
+        let t0 = Instant::now();
+        let mut rows: Vec<TrackRow> = Vec::new();
+        let mut ledger = ClientLedger::default();
+        let mut latency = LatencyHistogram::new();
+        let mut next_seq: u64 = 1;
+        let mut acked: u64 = 0;
+        let mut sent_high: u64 = 0;
+        let mut failures: u32 = 0;
+        // (seq, consecutive failed attempts) for the per-frame stall cap
+        let mut stalled: (u64, u32) = (0, 0);
+        // non-push requests use a distinct seq space so a stale push
+        // ack can never satisfy a poll's mirror check
+        let mut req: u64 = 1 << 32;
+        let mut opened = false;
+        let mut completed = false;
+        'conn: loop {
+            if failures > self.cfg.max_failures {
+                anyhow::bail!(
+                    "gave up on {} after {} consecutive failures",
+                    self.cfg.addr,
+                    failures - 1
+                );
+            }
+            if failures > 0 {
+                thread::sleep(self.backoff(failures));
+            }
+            let mut stream =
+                match TcpStream::connect_timeout(&self.cfg.addr, self.cfg.read_timeout) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        failures += 1;
+                        continue 'conn;
+                    }
+                };
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_read_timeout(Some(self.cfg.read_timeout));
+            let _ = stream.set_write_timeout(Some(self.cfg.write_timeout));
+            req += 1;
+            match rpc(&mut stream, req, &Frame::hello()) {
+                Ok(Frame::HelloAck { .. }) => {}
+                Ok(_) | Err(RpcFail::Retry) => {
+                    failures += 1;
+                    continue 'conn;
+                }
+                Err(RpcFail::Fatal(e)) => return Err(e),
+            }
+            if opened {
+                req += 1;
+                let resume = Frame::Resume {
+                    session_key: self.cfg.session_key,
+                    rows_received: rows.len() as u64,
+                };
+                match rpc(&mut stream, req, &resume) {
+                    Ok(Frame::ResumeAck { resume_from, .. }) => {
+                        let resume_from = resume_from.max(1);
+                        acked = acked.max(resume_from - 1);
+                        next_seq = resume_from;
+                    }
+                    Ok(_) | Err(RpcFail::Retry) => {
+                        failures += 1;
+                        continue 'conn;
+                    }
+                    Err(RpcFail::Fatal(e)) => return Err(e),
+                }
+                ledger.reconnects += 1;
+            } else {
+                req += 1;
+                let open = Frame::Open {
+                    session_key: self.cfg.session_key,
+                    engine_spec: self.cfg.engine_spec.clone(),
+                    checkpoint_every: self.cfg.checkpoint_every,
+                };
+                match rpc(&mut stream, req, &open) {
+                    Ok(Frame::OpenAck { .. }) => opened = true,
+                    Ok(_) | Err(RpcFail::Retry) => {
+                        failures += 1;
+                        continue 'conn;
+                    }
+                    Err(RpcFail::Fatal(e)) => return Err(e),
+                }
+            }
+            failures = 0;
+            while next_seq <= frames.len() as u64 {
+                let idx = (next_seq - 1) as usize;
+                if next_seq > sent_high {
+                    sent_high = next_seq;
+                } else {
+                    ledger.resent += 1;
+                }
+                let t_push = Instant::now();
+                match rpc(&mut stream, next_seq, &Frame::Push { boxes: frames[idx].clone() }) {
+                    Ok(Frame::PushAck) => {
+                        acked = acked.max(next_seq);
+                        if stalled.0 == next_seq {
+                            stalled = (0, 0);
+                        }
+                        next_seq += 1;
+                    }
+                    Ok(_) | Err(RpcFail::Retry) => {
+                        if stalled.0 == next_seq {
+                            stalled.1 += 1;
+                        } else {
+                            stalled = (next_seq, 1);
+                        }
+                        if stalled.1 > self.cfg.max_failures {
+                            // this frame cannot get through; it cannot
+                            // be skipped either (the server accepts
+                            // only prefix extensions) — abandon the
+                            // rest of the stream
+                            ledger.rejected += 1;
+                            break 'conn;
+                        }
+                        failures = 1;
+                        continue 'conn;
+                    }
+                    Err(RpcFail::Fatal(e)) => return Err(e),
+                }
+                req += 1;
+                match rpc(&mut stream, req, &Frame::Poll { from_row: rows.len() as u64 }) {
+                    Ok(Frame::Tracks { rows: got, .. }) => {
+                        rows.extend(got);
+                        latency.record(t_push.elapsed());
+                    }
+                    Ok(_) | Err(RpcFail::Retry) => {
+                        failures = 1;
+                        continue 'conn;
+                    }
+                    Err(RpcFail::Fatal(e)) => return Err(e),
+                }
+            }
+            req += 1;
+            let total = match rpc(&mut stream, req, &Frame::Close) {
+                Ok(Frame::CloseAck { total_rows }) => total_rows,
+                Ok(_) | Err(RpcFail::Retry) => {
+                    failures = 1;
+                    continue 'conn;
+                }
+                Err(RpcFail::Fatal(e)) => return Err(e),
+            };
+            while (rows.len() as u64) < total {
+                req += 1;
+                match rpc(&mut stream, req, &Frame::Poll { from_row: rows.len() as u64 }) {
+                    Ok(Frame::Tracks { rows: got, .. }) => {
+                        if got.is_empty() {
+                            break;
+                        }
+                        rows.extend(got);
+                    }
+                    Ok(_) | Err(RpcFail::Retry) => {
+                        failures = 1;
+                        continue 'conn;
+                    }
+                    Err(RpcFail::Fatal(e)) => return Err(e),
+                }
+            }
+            completed = true;
+            break 'conn;
+        }
+        ledger.frames_sent = sent_high;
+        ledger.frames_acked = acked.min(sent_high);
+        ledger.in_flight_at_close = sent_high.saturating_sub(ledger.frames_acked + ledger.rejected);
+        ledger.rows_received = rows.len() as u64;
+        Ok(NetRunOutcome { rows, ledger, latency, wall: t0.elapsed(), completed })
+    }
+}
+
+/// Options for [`netload_run`].
+#[derive(Debug, Clone)]
+pub struct NetloadOptions {
+    /// Tracker backend every stream's session runs on.
+    pub engine: EngineKind,
+    /// Checkpoint cadence requested in `Open` (0 = server default).
+    pub checkpoint_every: u32,
+    /// Base seed for client backoff jitter (stream `i` uses
+    /// `seed + 7919·i`).
+    pub seed: u64,
+    /// Fault schedule injected between clients and server, if any.
+    pub faults: Option<super::faults::FaultPlan>,
+    /// Server configuration (self-serve mode).
+    pub server: WireServerConfig,
+    /// Target an already-running server instead of self-serving.
+    pub remote: Option<SocketAddr>,
+}
+
+impl NetloadOptions {
+    /// Self-serve defaults on `engine`: checkpoint every 8 frames, no
+    /// faults, default server config.
+    pub fn new(engine: EngineKind) -> NetloadOptions {
+        NetloadOptions {
+            engine,
+            checkpoint_every: 8,
+            seed: 1,
+            faults: None,
+            server: WireServerConfig::default(),
+            remote: None,
+        }
+    }
+}
+
+/// What a whole netload run produced, per stream and merged.
+#[derive(Debug, Clone)]
+pub struct NetloadOutcome {
+    /// Streams driven.
+    pub streams: usize,
+    /// Per-stream delivered rows, in wire frame order.
+    pub rows: Vec<Vec<TrackRow>>,
+    /// Per-stream conservation ledgers.
+    pub per_stream: Vec<ClientLedger>,
+    /// Merged ledger across streams.
+    pub ledger: ClientLedger,
+    /// Merged push-to-poll latency across streams.
+    pub latency: LatencyHistogram,
+    /// Whether every stream's rows are `f64::to_bits`-identical to an
+    /// in-process run of the same engine on the same frames.
+    pub bit_identical: bool,
+    /// Completed sessions per wall-clock second.
+    pub sessions_per_sec: f64,
+    /// Wall clock for the whole run.
+    pub wall: Duration,
+    /// Server-side wire counters (self-serve mode only).
+    pub server_counters: Option<WireCounters>,
+}
+
+/// Extract per-frame detection boxes from a MOT sequence — the shape
+/// [`NetClient::run_stream`] consumes.
+pub fn detection_frames(seq: &crate::data::mot::Sequence) -> Vec<Vec<Bbox>> {
+    seq.frames
+        .iter()
+        .map(|f| f.detections.iter().map(|d| d.bbox).collect())
+        .collect()
+}
+
+/// Approximate client→server byte volume for a fault-free run of
+/// `frames` — the budget [`super::faults::FaultPlan::aggressive`]
+/// sizes its offset schedule against.
+pub fn approx_upstream_bytes(frames: &[Vec<Bbox>]) -> u64 {
+    let mut total = 96u64; // handshake + open + close
+    for boxes in frames {
+        total += 4 + wire::HEADER_LEN as u64 + 2 + 32 * boxes.len() as u64; // push
+        total += 4 + wire::HEADER_LEN as u64 + 8; // poll
+    }
+    total
+}
+
+/// Compare two row logs by bits: same frames, ids, and exact
+/// `f64::to_bits` box coordinates.
+pub fn rows_bit_identical(a: &[TrackRow], b: &[TrackRow]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.frame == y.frame
+                && x.id == y.id
+                && x.bbox.to_array().map(f64::to_bits) == y.bbox.to_array().map(f64::to_bits)
+        })
+}
+
+/// In-process reference run: the rows a wire stream must reproduce
+/// bit-for-bit.
+pub fn serial_reference(
+    kind: EngineKind,
+    params: &SessionParams,
+    frames: &[Vec<Bbox>],
+) -> crate::Result<Vec<TrackRow>> {
+    let mut engine = kind.build(params.sort_params)?;
+    let mut rows = Vec::new();
+    for (fi, boxes) in frames.iter().enumerate() {
+        for t in engine.update(boxes) {
+            rows.push(TrackRow { frame: fi as u32 + 1, id: t.id, bbox: t.bbox });
+        }
+    }
+    Ok(rows)
+}
+
+/// Drive `streams` (one `Vec<Vec<Bbox>>` per client) through a wire
+/// server — self-served unless `opts.remote` targets one — optionally
+/// through a fault proxy, one thread per client. Verifies bit-identity
+/// against in-process reference runs and merges the ledgers.
+pub fn netload_run(
+    opts: NetloadOptions,
+    streams: &[Vec<Vec<Bbox>>],
+) -> crate::Result<NetloadOutcome> {
+    let server = match opts.remote {
+        Some(_) => None,
+        None => Some(WireServer::bind("127.0.0.1:0", opts.server)?),
+    };
+    let upstream = match opts.remote {
+        Some(addr) => addr,
+        None => server.as_ref().expect("self-serve binds a server").addr(),
+    };
+    let proxy = match opts.faults {
+        Some(plan) => Some(FaultProxy::start(upstream, plan)?),
+        None => None,
+    };
+    let addr = proxy.as_ref().map(FaultProxy::addr).unwrap_or(upstream);
+    let t0 = Instant::now();
+    let results: Vec<crate::Result<NetRunOutcome>> = thread::scope(|scope| {
+        let handles: Vec<_> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, frames)| {
+                let mut cfg = NetClientConfig::new(addr);
+                cfg.session_key = 0xC0FF_EE00 + i as u64;
+                cfg.engine_spec = opts.engine.spec();
+                cfg.checkpoint_every = opts.checkpoint_every;
+                cfg.seed = opts.seed.wrapping_add(7919 * i as u64);
+                scope.spawn(move || NetClient::new(cfg).run_stream(frames))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("netload client thread panicked")))
+            })
+            .collect()
+    });
+    let wall = t0.elapsed();
+    if let Some(p) = proxy {
+        p.shutdown();
+    }
+    let server_counters = server.map(|s| s.shutdown().1);
+    let mut outcomes = Vec::with_capacity(results.len());
+    for r in results {
+        outcomes.push(r?);
+    }
+    let mut bit_identical = true;
+    for (out, frames) in outcomes.iter().zip(streams) {
+        let reference = serial_reference(opts.engine, &opts.server.service.session_defaults, frames)?;
+        if !out.completed || !rows_bit_identical(&out.rows, &reference) {
+            bit_identical = false;
+        }
+    }
+    let mut ledger = ClientLedger::default();
+    let mut latency = LatencyHistogram::new();
+    for out in &outcomes {
+        ledger.merge(&out.ledger);
+        latency.merge(&out.latency);
+    }
+    let secs = wall.as_secs_f64();
+    let sessions_per_sec = if secs > 0.0 { streams.len() as f64 / secs } else { 0.0 };
+    Ok(NetloadOutcome {
+        streams: streams.len(),
+        per_stream: outcomes.iter().map(|o| o.ledger).collect(),
+        rows: outcomes.into_iter().map(|o| o.rows).collect(),
+        ledger,
+        latency,
+        bit_identical,
+        sessions_per_sec,
+        wall,
+        server_counters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::faults::{DirectionPlan, FaultPlan};
+    use super::*;
+    use crate::data::synth::{generate_sequence, SynthConfig};
+
+    fn synth_frames(n_frames: u32, objects: u32, seed: u64) -> Vec<Vec<Bbox>> {
+        let cfg = SynthConfig::mot15("wire-net-test", n_frames, objects, seed);
+        detection_frames(&generate_sequence(&cfg).sequence)
+    }
+
+    #[test]
+    fn clean_self_serve_run_is_bit_identical_and_conserves() {
+        let frames = synth_frames(40, 3, 7);
+        let out = netload_run(NetloadOptions::new(EngineKind::Batch), &[frames]).unwrap();
+        assert!(out.bit_identical, "wire rows must match the in-process run by bits");
+        assert!(out.ledger.conserves());
+        assert_eq!(out.ledger.frames_sent, 40);
+        assert_eq!(out.ledger.frames_acked, 40);
+        assert_eq!(out.ledger.in_flight_at_close, 0);
+        assert_eq!(out.ledger.rejected, 0);
+        assert_eq!(out.ledger.reconnects, 0);
+        assert!(out.ledger.rows_received > 0, "a 3-object stream must deliver rows");
+        let c = out.server_counters.as_ref().unwrap();
+        assert_eq!(c.sessions_opened, 1);
+        assert_eq!(c.reconnects, 0);
+        assert_eq!(c.dirty_disconnects, 0);
+        assert!(out.sessions_per_sec > 0.0);
+        assert_eq!(out.latency.count(), 40);
+    }
+
+    #[test]
+    fn multiple_streams_share_one_server_and_stay_isolated() {
+        let streams: Vec<Vec<Vec<Bbox>>> =
+            (0..3).map(|i| synth_frames(25, 2, 100 + i)).collect();
+        let mut opts = NetloadOptions::new(EngineKind::Native);
+        opts.server.service.workers = 2;
+        let out = netload_run(opts, &streams).unwrap();
+        assert!(out.bit_identical);
+        assert!(out.ledger.conserves());
+        assert_eq!(out.ledger.frames_sent, 75);
+        assert_eq!(out.server_counters.as_ref().unwrap().sessions_opened, 3);
+        assert_eq!(out.per_stream.len(), 3);
+        assert!(out.per_stream.iter().all(|l| l.conserves()));
+    }
+
+    #[test]
+    fn a_mid_stream_cut_recovers_bit_identically_via_resume() {
+        let frames = synth_frames(60, 3, 11);
+        let mut opts = NetloadOptions::new(EngineKind::Batch);
+        opts.checkpoint_every = 8;
+        let cut = approx_upstream_bytes(&frames) / 2;
+        opts.faults = Some(FaultPlan {
+            to_server: DirectionPlan { cut_at: vec![cut], ..DirectionPlan::default() },
+            to_client: DirectionPlan::default(),
+        });
+        let out = netload_run(opts, &[frames]).unwrap();
+        assert!(out.bit_identical, "recovery must be invisible in the delivered rows");
+        assert!(out.ledger.conserves());
+        assert!(out.ledger.reconnects >= 1, "the cut must force at least one reconnect");
+        let c = out.server_counters.as_ref().unwrap();
+        assert!(c.reconnects >= 1);
+        assert!(c.dirty_disconnects >= 1);
+    }
+
+    #[test]
+    fn corrupted_bytes_poison_only_the_connection_not_the_session() {
+        let frames = synth_frames(50, 3, 13);
+        let span = approx_upstream_bytes(&frames);
+        let mut opts = NetloadOptions::new(EngineKind::Native);
+        opts.faults = Some(FaultPlan {
+            to_server: DirectionPlan {
+                corrupt_at: vec![span / 3, span / 2],
+                ..DirectionPlan::default()
+            },
+            to_client: DirectionPlan { corrupt_at: vec![span / 4], ..DirectionPlan::default() },
+        });
+        let out = netload_run(opts, &[frames]).unwrap();
+        assert!(out.bit_identical);
+        assert!(out.ledger.conserves());
+        assert!(out.ledger.reconnects >= 1);
+    }
+
+    #[test]
+    fn open_with_a_bad_engine_spec_is_a_fatal_rejection() {
+        let server = WireServer::bind("127.0.0.1:0", WireServerConfig::default()).unwrap();
+        let mut cfg = NetClientConfig::new(server.addr());
+        cfg.engine_spec = "warp-drive".into();
+        let err = NetClient::new(cfg).run_stream(&synth_frames(5, 1, 3)).unwrap_err();
+        assert!(err.to_string().contains("server error"), "got: {err}");
+        let (_, counters) = server.shutdown();
+        assert_eq!(counters.sessions_opened, 0);
+    }
+
+    #[test]
+    fn reference_helpers_agree_with_themselves() {
+        let frames = synth_frames(20, 2, 5);
+        let params = SessionParams::default();
+        let a = serial_reference(EngineKind::Native, &params, &frames).unwrap();
+        let b = serial_reference(EngineKind::Batch, &params, &frames).unwrap();
+        assert!(rows_bit_identical(&a, &b), "f64 tiers agree by bits");
+        assert!(!a.is_empty());
+        let mut c = a.clone();
+        c[0].bbox = Bbox::new(0.0, 0.0, 1.0, 1.0);
+        assert!(!rows_bit_identical(&a, &c));
+    }
+}

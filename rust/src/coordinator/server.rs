@@ -109,6 +109,10 @@ pub struct ServerReport {
     pub latency: LatencyHistogram,
     /// Per-worker FPS counters.
     pub per_worker_fps: Vec<FpsCounter>,
+    /// Sessions that failed to drain within the bounded join window —
+    /// their stats are a live snapshot, not final, and a non-zero
+    /// count means a worker is wedged.
+    pub stalled_sessions: u64,
 }
 
 impl ServerReport {
@@ -135,14 +139,25 @@ fn start_service(cfg: &ServerConfig, route: RoutePolicy) -> TrackingService {
             engine: cfg.engine,
             sort_params: cfg.sort_params,
             slo: cfg.slo,
+            ..Default::default()
         },
     })
     .expect("start tracking service")
 }
 
+/// Bounded per-session drain window in [`drain_into_report`]: far
+/// above any healthy drain, small enough that a wedged worker surfaces
+/// as a stall report instead of a hung process.
+const SESSION_DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
 /// Drain every session and fold its stats plus the service's
 /// per-worker counters into a [`ServerReport`]; returns the final
 /// [`ServiceMetrics`] snapshot alongside it.
+///
+/// Sessions are joined with a bounded wait ([`SESSION_DRAIN_TIMEOUT`])
+/// so one wedged worker cannot hang the whole report; stalled sessions
+/// are counted in [`ServerReport::stalled_sessions`] and contribute
+/// their live (non-final) stats.
 fn drain_into_report(
     svc: TrackingService,
     handles: impl IntoIterator<Item = SessionHandle>,
@@ -155,9 +170,16 @@ fn drain_into_report(
         elapsed: Duration::ZERO,
         latency: LatencyHistogram::new(),
         per_worker_fps: Vec::new(),
+        stalled_sessions: 0,
     };
     for h in handles {
-        let stats = h.join();
+        let stats = match h.join_timeout(SESSION_DRAIN_TIMEOUT) {
+            Some(stats) => stats,
+            None => {
+                report.stalled_sessions += 1;
+                h.stats()
+            }
+        };
         report.frames_done += stats.frames_done;
         report.tracks_out += stats.tracks_out;
         report.dropped += stats.dropped();
@@ -197,7 +219,7 @@ pub fn serve_observed(
     let svc = start_service(&cfg, cfg.route_policy);
     let t0 = Instant::now();
     let params =
-        SessionParams { engine: cfg.engine, sort_params: cfg.sort_params, slo: cfg.slo };
+        SessionParams { engine: cfg.engine, sort_params: cfg.sort_params, slo: cfg.slo, ..Default::default() };
 
     // dispatcher (this thread): earliest-due-frame simulation
     let mut sessions: HashMap<usize, SessionHandle> = HashMap::new();
@@ -267,7 +289,7 @@ fn serve_sharded(
     let svc = start_service(&cfg, route);
     let t0 = Instant::now();
     let params =
-        SessionParams { engine: cfg.engine, sort_params: cfg.sort_params, slo: cfg.slo };
+        SessionParams { engine: cfg.engine, sort_params: cfg.sort_params, slo: cfg.slo, ..Default::default() };
 
     // open every stream up front, then feed frames round-robin so all
     // workers stay busy even when queues are shallow
@@ -327,6 +349,7 @@ mod tests {
         assert_eq!(report.frames_done + report.dropped, 4 * 50);
         assert!(report.fps() > 0.0);
         assert!(report.latency.count() > 0);
+        assert_eq!(report.stalled_sessions, 0, "healthy workers drain within the bound");
     }
 
     #[test]

@@ -58,13 +58,68 @@
 use super::backpressure::{BoundedQueue, PushPolicy, TryPop};
 use super::metrics::{FpsCounter, LatencyHistogram, ServiceMetrics, SessionSnapshot, WorkerSnapshot};
 use super::router::{RoutePolicy, Router};
-use crate::engine::{EngineKind, TrackerEngine};
-use crate::sort::{Bbox, SortParams, Track};
+use crate::engine::{EngineKind, EngineState, TrackerEngine};
+use crate::sort::{Bbox, CheckpointCadence, SortParams, Track};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
+
+/// Why the service refused a configuration or session at the boundary.
+///
+/// `start` and `open_session` validate *before* admitting: a
+/// zero-capacity queue would deadlock every push, a zero deadline sheds
+/// every frame without running the engine, and a negative or non-finite
+/// MOTA budget makes every adaptive-controller comparison vacuous.
+/// Surfacing these as a typed error (downcastable from the `anyhow`
+/// chain) lets the TCP front door map them onto protocol error frames
+/// instead of guessing from strings.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServiceError {
+    /// `ServiceConfig::workers` was 0 — nothing would ever run.
+    NoWorkers,
+    /// `ServiceConfig::queue_capacity` was 0 — every push would fail.
+    ZeroQueueCapacity,
+    /// `Slo::deadline` was `Some(0)` — every frame is born past due.
+    /// Use `None` for best-effort instead.
+    ZeroDeadline,
+    /// `Slo::mota_budget` was negative or non-finite.
+    InvalidMotaBudget(
+        /// The rejected value.
+        f64,
+    ),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::NoWorkers => write!(f, "TrackingService needs at least 1 worker"),
+            ServiceError::ZeroQueueCapacity => {
+                write!(f, "TrackingService needs a session queue capacity of at least 1")
+            }
+            ServiceError::ZeroDeadline => {
+                write!(f, "session deadline must be positive (use None for best-effort)")
+            }
+            ServiceError::InvalidMotaBudget(v) => {
+                write!(f, "session mota_budget must be finite and non-negative (got {v})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Validate session parameters at the admission boundary.
+fn validate_session_params(p: &SessionParams) -> Result<(), ServiceError> {
+    if p.slo.deadline == Some(Duration::ZERO) {
+        return Err(ServiceError::ZeroDeadline);
+    }
+    if !p.slo.mota_budget.is_finite() || p.slo.mota_budget < 0.0 {
+        return Err(ServiceError::InvalidMotaBudget(p.slo.mota_budget));
+    }
+    Ok(())
+}
 
 /// Service-wide configuration, fixed at [`TrackingService::start`].
 #[derive(Debug, Clone, Copy)]
@@ -137,6 +192,13 @@ pub struct SessionParams {
     pub sort_params: SortParams,
     /// Service-level objective (deadline, priority, quality budget).
     pub slo: Slo,
+    /// How often the worker snapshots the engine state
+    /// ([`EngineState`]) into the session's checkpoint slot — the
+    /// recovery anchor the TCP front door resumes from after a
+    /// disconnect. Disabled by default (checkpoints cost one full
+    /// state export); backends that cannot export (`xla`) simply never
+    /// fill the slot.
+    pub checkpoint: CheckpointCadence,
 }
 
 impl Default for SessionParams {
@@ -145,6 +207,7 @@ impl Default for SessionParams {
             engine: EngineKind::Native,
             sort_params: SortParams { timing: false, ..Default::default() },
             slo: Slo::default(),
+            checkpoint: CheckpointCadence::disabled(),
         }
     }
 }
@@ -233,6 +296,9 @@ struct SessionShared {
     engine: Mutex<Option<Box<dyn TrackerEngine>>>,
     migration: Mutex<MigrationState>,
     sink: Mutex<SessionSink>,
+    /// Latest `(frame_seq, state)` checkpoint, refreshed by the worker
+    /// at the session's [`CheckpointCadence`].
+    checkpoint: Mutex<Option<(u64, EngineState)>>,
     /// Signalled (with `sink`) when the worker retires the session.
     done: Condvar,
 }
@@ -345,11 +411,12 @@ impl TrackingService {
     /// (or drop) and serve every session opened later.
     pub fn start(cfg: ServiceConfig) -> crate::Result<TrackingService> {
         if cfg.workers == 0 {
-            anyhow::bail!("TrackingService needs at least 1 worker");
+            return Err(ServiceError::NoWorkers.into());
         }
         if cfg.queue_capacity == 0 {
-            anyhow::bail!("TrackingService needs a session queue capacity of at least 1");
+            return Err(ServiceError::ZeroQueueCapacity.into());
         }
+        validate_session_params(&cfg.session_defaults)?;
         // spawn the full pool up front; `workers` is just the initial
         // active bound. Parked workers cost one idle thread each and
         // let the controller scale up without mid-flight spawns.
@@ -409,18 +476,54 @@ impl TrackingService {
     /// Fails if the engine cannot be built or the service is shut
     /// down. Cheap enough to call mid-flight — admission is the point.
     pub fn open_session(&self, params: SessionParams) -> crate::Result<SessionHandle> {
+        self.open_session_inner(params, None)
+    }
+
+    /// [`Self::open_session`], but the engine starts from `state`
+    /// instead of empty — the resume half of checkpoint/restore: the
+    /// TCP front door re-opens a disconnected stream's session from its
+    /// last checkpoint, then replays only the frames pushed after it.
+    ///
+    /// The state import is exact for f64 backends (the continued run is
+    /// `f64::to_bits`-identical to one that never stopped); fails for
+    /// backends that cannot import state (`xla`) — callers fall back to
+    /// a fresh session plus a full replay.
+    pub fn open_session_with_state(
+        &self,
+        params: SessionParams,
+        state: &EngineState,
+    ) -> crate::Result<SessionHandle> {
+        self.open_session_inner(params, Some(state))
+    }
+
+    fn open_session_inner(
+        &self,
+        params: SessionParams,
+        initial: Option<&EngineState>,
+    ) -> crate::Result<SessionHandle> {
         if self.inner.closed.load(Ordering::Acquire) {
             anyhow::bail!("TrackingService is shut down");
         }
+        validate_session_params(&params)?;
         // warm pool first: a retired engine with identical parameters
         // resumes with its scratch buffers already grown. On a miss,
         // build with the pool lock RELEASED — engine construction can
         // be slow (the xla backend opens a runtime) and must not stall
         // concurrent opens or worker-side retirements.
-        let engine = match take_pooled(&self.inner, params.engine, params.sort_params) {
+        let mut engine = match take_pooled(&self.inner, params.engine, params.sort_params) {
             Some(engine) => engine,
             None => params.engine.build(params.sort_params)?,
         };
+        if let Some(state) = initial {
+            if !engine.import_state(state) {
+                // put the (still clean) engine back for the next open
+                park_pooled(&self.inner, params.engine, params.sort_params, engine);
+                anyhow::bail!(
+                    "engine {} cannot import checkpoint state",
+                    params.engine.label()
+                );
+            }
+        }
         let id = self.inner.next_session.fetch_add(1, Ordering::Relaxed);
         let worker = self.inner.router.lock().unwrap().route(id as usize);
         let session = Arc::new(SessionShared {
@@ -445,6 +548,7 @@ impl TrackingService {
                 latency: LatencyHistogram::new(),
                 finished: false,
             }),
+            checkpoint: Mutex::new(None),
             done: Condvar::new(),
         });
         let wsh = Arc::clone(&self.inner.workers[worker]);
@@ -732,6 +836,35 @@ impl SessionHandle {
         drop(sink);
         self.stats()
     }
+
+    /// [`Self::join`] with a bound: close, then wait at most `timeout`
+    /// for the worker to drain and retire the session. Returns `None`
+    /// on timeout — the session stays sealed and keeps draining in the
+    /// background, so a wedged worker can never hang the caller
+    /// forever; call again (or fall back to [`Self::stats`]) later.
+    pub fn join_timeout(&self, timeout: Duration) -> Option<SessionStats> {
+        self.close();
+        let sink = self.session.sink.lock().unwrap();
+        let (sink, res) = self
+            .session
+            .done
+            .wait_timeout_while(sink, timeout, |s| !s.finished)
+            .unwrap();
+        let finished = sink.finished;
+        drop(sink);
+        if res.timed_out() && !finished {
+            return None;
+        }
+        Some(self.stats())
+    }
+
+    /// Latest engine-state checkpoint `(frame_seq, state)` the worker
+    /// exported for this session, if the session's
+    /// [`CheckpointCadence`] has produced one yet. Valid after
+    /// [`Self::join`] too — the recovery anchor outlives the drain.
+    pub fn latest_checkpoint(&self) -> Option<(u64, EngineState)> {
+        self.session.checkpoint.lock().unwrap().clone()
+    }
 }
 
 /// Worker thread: round-robin over pinned sessions — pop one frame,
@@ -877,6 +1010,11 @@ fn process_frame(inner: &ServiceInner, me: &WorkerShared, s: &SessionShared, msg
     let engine = slot.as_mut().expect("live session owns an engine");
     let tracks: &[Track] = engine.update(&msg.boxes);
     let n_tracks = tracks.len() as u64;
+    if s.params.checkpoint.is_due(u64::from(msg.seq)) {
+        if let Some(state) = engine.export_state() {
+            *s.checkpoint.lock().unwrap() = Some((u64::from(msg.seq), state));
+        }
+    }
     {
         let mut sink = s.sink.lock().unwrap();
         sink.rows.extend(tracks.iter().map(|t| (msg.seq, t.id, t.bbox)));
@@ -1164,15 +1302,16 @@ mod tests {
     }
 
     #[test]
-    fn zero_deadline_sheds_every_frame_and_conserves() {
-        // an unmeetable deadline: every frame is past due at dequeue,
-        // so the engine never runs and every accepted frame lands in
-        // dropped_deadline — conservation still balances exactly
+    fn unmeetable_deadline_sheds_every_frame_and_conserves() {
+        // a 1 ns deadline: every frame is past due at dequeue, so the
+        // engine never runs and every accepted frame lands in
+        // dropped_deadline — conservation still balances exactly (a
+        // literal zero deadline is rejected at the boundary now)
         let s = seq("SVC-SLO", 50, 17);
         let svc = TrackingService::start(ServiceConfig::default()).unwrap();
         let h = svc
             .open_session(SessionParams {
-                slo: Slo { deadline: Some(Duration::ZERO), ..Default::default() },
+                slo: Slo { deadline: Some(Duration::from_nanos(1)), ..Default::default() },
                 ..Default::default()
             })
             .unwrap();
@@ -1312,6 +1451,173 @@ mod tests {
             300,
             "conservation under controller shedding"
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected_with_typed_errors() {
+        let err = TrackingService::start(ServiceConfig { workers: 0, ..Default::default() })
+            .unwrap_err();
+        assert_eq!(err.downcast_ref::<ServiceError>(), Some(&ServiceError::NoWorkers));
+        let err =
+            TrackingService::start(ServiceConfig { queue_capacity: 0, ..Default::default() })
+                .unwrap_err();
+        assert_eq!(err.downcast_ref::<ServiceError>(), Some(&ServiceError::ZeroQueueCapacity));
+        // bad session defaults are caught at start, not at first open
+        let bad = SessionParams {
+            slo: Slo { deadline: Some(Duration::ZERO), ..Default::default() },
+            ..Default::default()
+        };
+        let err =
+            TrackingService::start(ServiceConfig { session_defaults: bad, ..Default::default() })
+                .unwrap_err();
+        assert_eq!(err.downcast_ref::<ServiceError>(), Some(&ServiceError::ZeroDeadline));
+    }
+
+    #[test]
+    fn invalid_session_params_are_rejected_at_open() {
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let zero = SessionParams {
+            slo: Slo { deadline: Some(Duration::ZERO), ..Default::default() },
+            ..Default::default()
+        };
+        let err = svc.open_session(zero).unwrap_err();
+        assert_eq!(err.downcast_ref::<ServiceError>(), Some(&ServiceError::ZeroDeadline));
+        for bad in [-0.1, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let p = SessionParams {
+                slo: Slo { mota_budget: bad, ..Default::default() },
+                ..Default::default()
+            };
+            let err = svc.open_session(p).unwrap_err();
+            assert!(
+                matches!(
+                    err.downcast_ref::<ServiceError>(),
+                    Some(ServiceError::InvalidMotaBudget(_))
+                ),
+                "mota_budget {bad} must be rejected"
+            );
+        }
+        // a rejected open leaves the service fully usable
+        let h = svc.open_session_default().unwrap();
+        assert!(h.push_frame(vec![Bbox::new(0.0, 0.0, 10.0, 20.0)]));
+        assert_eq!(h.join().frames_done, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn join_timeout_bounds_the_wait_and_recovers() {
+        let s = seq("SVC-JT", 30, 37);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc.open_session_default().unwrap();
+        // wedge the worker deterministically: hold the session's
+        // engine lock so process_frame blocks on its first frame
+        let wedge = h.session.engine.lock().unwrap();
+        assert!(h.push_frame(vec![Bbox::new(0.0, 0.0, 10.0, 20.0)]));
+        assert!(
+            h.join_timeout(Duration::from_millis(50)).is_none(),
+            "a wedged worker must time out, not hang"
+        );
+        drop(wedge); // un-wedge; the sealed session drains normally
+        let stats = h.join_timeout(Duration::from_secs(30)).expect("drains after un-wedge");
+        assert!(stats.finished);
+        assert_eq!(stats.frames_done, 1);
+        // the bounded join is equivalent to join() on a healthy session
+        let h2 = svc.open_session_default().unwrap();
+        for frame in &s.frames {
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            assert!(h2.push_frame(boxes));
+        }
+        let stats = h2.join_timeout(Duration::from_secs(30)).expect("healthy session joins");
+        assert_eq!(stats.frames_done, 30);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn checkpoint_cadence_exports_engine_state() {
+        let s = seq("SVC-CKPT", 35, 41);
+        let svc = TrackingService::start(ServiceConfig::default()).unwrap();
+        let h = svc
+            .open_session(SessionParams {
+                checkpoint: CheckpointCadence::every(10),
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(h.latest_checkpoint().is_none(), "no checkpoint before any frame");
+        run_session(&h, &s);
+        let (seq_no, state) = h.latest_checkpoint().expect("cadence 10 over 35 frames");
+        assert_eq!(seq_no, 30, "latest due checkpoint");
+        assert_eq!(state.frame_count, 30);
+        assert!(!state.trackers.is_empty(), "live trackers are captured");
+        // a session whose backend cannot export state never checkpoints
+        let hx = svc
+            .open_session(SessionParams {
+                engine: EngineKind::Xla,
+                checkpoint: CheckpointCadence::every(5),
+                ..Default::default()
+            })
+            .unwrap();
+        run_session(&hx, &s);
+        assert!(hx.latest_checkpoint().is_none(), "xla cannot fill the checkpoint slot");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn resume_from_checkpoint_is_bit_identical_to_uninterrupted_run() {
+        // the TCP front door's recovery path, exercised service-side:
+        // run 45 frames with cadence 10, "disconnect", re-open from the
+        // checkpoint, replay frames 41..=45, continue 46..=60 — rows
+        // must match an uninterrupted serial run bit-for-bit
+        let s = seq("SVC-RESUME", 60, 43);
+        let want = serial_rows(EngineKind::Batch, &s);
+        let params = SessionParams {
+            engine: EngineKind::Batch,
+            checkpoint: CheckpointCadence::every(10),
+            ..Default::default()
+        };
+        let svc = TrackingService::start(ServiceConfig {
+            push_policy: PushPolicy::Block,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = svc.open_session(params).unwrap();
+        for frame in &s.frames[..45] {
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            assert!(h.push_frame(boxes));
+        }
+        h.join();
+        let mut rows = h.poll_tracks();
+        let (ckpt_seq, state) = h.latest_checkpoint().expect("checkpoint at 40");
+        assert_eq!(ckpt_seq, 40);
+        // drop the original rows for frames past the checkpoint
+        // (41..=45): the restored engine replays those frames and must
+        // regenerate the rows bit-identically (the front door keeps
+        // whichever copy it holds — the two are interchangeable)
+        rows.retain(|&(f, _, _)| u64::from(f) <= ckpt_seq);
+        let h2 = svc.open_session_with_state(params, &state).unwrap();
+        for frame in &s.frames[ckpt_seq as usize..] {
+            let boxes: Vec<Bbox> = frame.detections.iter().map(|d| d.bbox).collect();
+            assert!(h2.push_frame(boxes));
+        }
+        h2.join();
+        rows.extend(
+            h2.poll_tracks()
+                .into_iter()
+                .map(|(f, id, b)| (f + ckpt_seq as u32, id, b)),
+        );
+        assert_eq!(rows.len(), want.len());
+        for (got, want) in rows.iter().zip(&want) {
+            assert_eq!((got.0, got.1), (want.0, want.1));
+            assert_eq!(
+                got.2.to_array().map(f64::to_bits),
+                want.2.to_array().map(f64::to_bits),
+                "frame {} id {} diverged across resume",
+                got.0,
+                got.1
+            );
+        }
+        // xla cannot import: the caller's fallback is a full replay
+        let xp = SessionParams { engine: EngineKind::Xla, ..Default::default() };
+        assert!(svc.open_session_with_state(xp, &state).is_err());
         svc.shutdown();
     }
 

@@ -1,0 +1,707 @@
+//! The versioned binary wire protocol behind the TCP front door.
+//!
+//! This module is the *codec only*: pure functions between [`Frame`]
+//! values and length-prefixed byte buffers, unit-testable without a
+//! socket in sight. The transport loop (connection handling, session
+//! registry, resume/replay) lives in [`super::net`]; the deterministic
+//! fault layer that this codec must survive lives in [`super::faults`].
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! [u32 len][u32 checksum][u8 tag][u64 seq][body…]
+//!  └ bytes after the len prefix (len = 13 + body length)
+//!           └ FNV-1a over tag+seq+body — a single corrupted byte
+//!             anywhere after the len prefix is always detected
+//! ```
+//!
+//! All integers are little-endian; every `f64` crosses as its IEEE-754
+//! bit pattern (`f64::to_bits`), so a delivered bbox is *bit-identical*
+//! to the one the engine emitted — the fault-recovery acceptance test
+//! compares tracks by bits, and the codec must never be the layer that
+//! loses a ULP.
+//!
+//! ## Hard caps
+//!
+//! A peer can declare any length it likes; the codec refuses frames
+//! over [`MAX_FRAME_LEN`], pushes over [`MAX_DETECTIONS`] boxes, and
+//! track responses over [`MAX_TRACK_ROWS`] rows. The caps bound the
+//! memory one connection can pin regardless of what arrives on the
+//! wire; a violation is a protocol error that poisons only the
+//! offending connection (see [`super::net`]).
+//!
+//! ## Conversation shape
+//!
+//! The protocol is strict request-response: the client speaks first
+//! (HELLO), and every client frame is answered by exactly one server
+//! frame. Sequence numbers ride in the fixed header; for `Push` the
+//! header seq *is* the 1-based frame number the ack/resume machinery
+//! keys on, for every other frame it is free (clients echo a request
+//! counter, the server mirrors the request's seq back).
+
+use crate::sort::Bbox;
+use std::io::{Read, Write};
+
+/// Protocol magic carried by `Hello` ("smTW" little-endian).
+pub const MAGIC: u32 = 0x5754_6D73;
+/// Protocol version carried by `Hello` / `HelloAck`.
+pub const VERSION: u16 = 1;
+/// Hard cap on the byte length of one frame (after the len prefix).
+pub const MAX_FRAME_LEN: usize = 1 << 20;
+/// Hard cap on detections in one `Push`.
+pub const MAX_DETECTIONS: usize = 4096;
+/// Hard cap on rows in one `Tracks` response (poll again for more).
+pub const MAX_TRACK_ROWS: usize = 4096;
+/// Fixed bytes after the len prefix: checksum + tag + seq.
+pub const HEADER_LEN: usize = 4 + 1 + 8;
+
+/// Error codes carried by [`Frame::Error`].
+pub mod error_code {
+    /// Handshake failed: bad magic or unsupported version.
+    pub const BAD_HANDSHAKE: u16 = 1;
+    /// Frame failed to decode (checksum, caps, structure).
+    pub const MALFORMED: u16 = 2;
+    /// `Push` seq skipped ahead of the accepted prefix.
+    pub const SEQ_GAP: u16 = 3;
+    /// `Resume` named a session the server does not know.
+    pub const UNKNOWN_SESSION: u16 = 4;
+    /// Request rejected (bad engine spec, duplicate key, bad params).
+    pub const REJECTED: u16 = 5;
+    /// Server is draining; no new work accepted.
+    pub const SHUTTING_DOWN: u16 = 6;
+}
+
+/// One delivered track row: which (wire) frame, which track, where.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrackRow {
+    /// 1-based wire frame number the row belongs to.
+    pub frame: u32,
+    /// Track id (stable across the session, 1-based).
+    pub id: u64,
+    /// Track bbox, bit-exact.
+    pub bbox: Bbox,
+}
+
+/// Every message either side can put on the wire.
+///
+/// The header `seq` is *not* part of this enum — it rides beside the
+/// frame in [`encode`] / [`decode`], because for `Push` it is protocol
+/// state (the frame number) rather than payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client hello: magic + highest version the client speaks.
+    Hello {
+        /// Must equal [`MAGIC`].
+        magic: u32,
+        /// Client protocol version.
+        version: u16,
+    },
+    /// Server accepts the handshake at `version`.
+    HelloAck {
+        /// Version the connection will speak.
+        version: u16,
+    },
+    /// Open a fresh wire session.
+    Open {
+        /// Client-chosen stable key, the handle for later `Resume`.
+        session_key: u64,
+        /// Engine spec (`native` | `batch` | … ), parsed server-side.
+        engine_spec: String,
+        /// Engine-state checkpoint cadence in frames (0 = server default).
+        checkpoint_every: u32,
+    },
+    /// Session admitted.
+    OpenAck {
+        /// Echo of the client's key.
+        session_key: u64,
+    },
+    /// One frame of detections; the header seq is the 1-based frame
+    /// number.
+    Push {
+        /// Detections for this frame (may be empty).
+        boxes: Vec<Bbox>,
+    },
+    /// Frame accepted (or already accepted — acks are idempotent).
+    PushAck,
+    /// Fetch delivered rows starting at `from_row`.
+    Poll {
+        /// 0-based index into the session's row log.
+        from_row: u64,
+    },
+    /// Row log slice in response to `Poll`.
+    Tracks {
+        /// Rows `[from_row ..)` — at most [`MAX_TRACK_ROWS`].
+        rows: Vec<TrackRow>,
+        /// Total rows in the log so far.
+        total: u64,
+        /// True once the session is closed *and* this response reaches
+        /// the end of the log — the client has everything.
+        done: bool,
+    },
+    /// Seal the session: no more pushes; drain and finalize.
+    Close,
+    /// Session drained; the row log is final.
+    CloseAck {
+        /// Final row-log length (poll until you have them all).
+        total_rows: u64,
+    },
+    /// Reattach to an existing session after a disconnect.
+    Resume {
+        /// The key given at `Open`.
+        session_key: u64,
+        /// Rows the client already holds (server resends from here).
+        rows_received: u64,
+    },
+    /// Session restored (checkpoint import + replay happened
+    /// server-side).
+    ResumeAck {
+        /// Next frame seq the server expects (= highest accepted + 1);
+        /// the client rewinds its cursor here.
+        resume_from: u64,
+        /// Current row-log length.
+        rows_total: u64,
+    },
+    /// Terminal protocol error; the sender closes the connection after
+    /// this frame.
+    Error {
+        /// One of [`error_code`].
+        code: u16,
+        /// Human-readable detail (diagnostics only, never parsed).
+        detail: String,
+    },
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_OPEN: u8 = 3;
+const TAG_OPEN_ACK: u8 = 4;
+const TAG_PUSH: u8 = 5;
+const TAG_PUSH_ACK: u8 = 6;
+const TAG_POLL: u8 = 7;
+const TAG_TRACKS: u8 = 8;
+const TAG_CLOSE: u8 = 9;
+const TAG_CLOSE_ACK: u8 = 10;
+const TAG_RESUME: u8 = 11;
+const TAG_RESUME_ACK: u8 = 12;
+const TAG_ERROR: u8 = 13;
+
+/// Why a received frame was rejected. Any decode error is terminal for
+/// the connection that produced it (the stream cursor can no longer be
+/// trusted) — but only for that connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Fewer bytes than the fixed header, or a body shorter than its
+    /// own structure declares.
+    Truncated,
+    /// Declared frame length exceeds [`MAX_FRAME_LEN`].
+    TooLong(usize),
+    /// Checksum mismatch — bytes were corrupted in flight.
+    Checksum {
+        /// Checksum the frame carried.
+        want: u32,
+        /// Checksum of the bytes that actually arrived.
+        got: u32,
+    },
+    /// Unknown frame tag.
+    UnknownTag(u8),
+    /// A per-frame hard cap was exceeded (detections, rows, string).
+    CapExceeded(&'static str),
+    /// Body structure invalid (bad lengths, non-UTF-8 strings, trailing
+    /// bytes).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated => write!(f, "frame truncated"),
+            DecodeError::TooLong(n) => {
+                write!(f, "frame length {n} exceeds cap {MAX_FRAME_LEN}")
+            }
+            DecodeError::Checksum { want, got } => {
+                write!(f, "checksum mismatch (carried {want:#010x}, computed {got:#010x})")
+            }
+            DecodeError::UnknownTag(t) => write!(f, "unknown frame tag {t}"),
+            DecodeError::CapExceeded(what) => write!(f, "cap exceeded: {what}"),
+            DecodeError::Malformed(what) => write!(f, "malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// FNV-1a (32-bit) over a byte slice.
+///
+/// Chosen over CRC for simplicity; what matters here is that the
+/// absorb step `h = (h ^ b) * PRIME` is injective in `h` for fixed `b`
+/// (odd multiplier, mod 2³²), so changing exactly one byte *always*
+/// changes the digest — the seeded fault layer corrupts single bytes,
+/// and detection of those must be certain, not probabilistic.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= u32::from(b);
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize);
+    put_u16(buf, s.len() as u16);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_bbox(buf: &mut Vec<u8>, b: &Bbox) {
+    put_f64(buf, b.x1);
+    put_f64(buf, b.y1);
+    put_f64(buf, b.x2);
+    put_f64(buf, b.y2);
+}
+
+/// Byte-slice reader for frame bodies.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.i + n > self.b.len() {
+            return Err(DecodeError::Truncated);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String, DecodeError> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| DecodeError::Malformed("string is not UTF-8"))
+    }
+
+    fn bbox(&mut self) -> Result<Bbox, DecodeError> {
+        Ok(Bbox::new(self.f64()?, self.f64()?, self.f64()?, self.f64()?))
+    }
+
+    fn finish(&self) -> Result<(), DecodeError> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(DecodeError::Malformed("trailing bytes after body"))
+        }
+    }
+}
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => TAG_HELLO,
+            Frame::HelloAck { .. } => TAG_HELLO_ACK,
+            Frame::Open { .. } => TAG_OPEN,
+            Frame::OpenAck { .. } => TAG_OPEN_ACK,
+            Frame::Push { .. } => TAG_PUSH,
+            Frame::PushAck => TAG_PUSH_ACK,
+            Frame::Poll { .. } => TAG_POLL,
+            Frame::Tracks { .. } => TAG_TRACKS,
+            Frame::Close => TAG_CLOSE,
+            Frame::CloseAck { .. } => TAG_CLOSE_ACK,
+            Frame::Resume { .. } => TAG_RESUME,
+            Frame::ResumeAck { .. } => TAG_RESUME_ACK,
+            Frame::Error { .. } => TAG_ERROR,
+        }
+    }
+
+    /// The client `Hello` every conversation starts with.
+    pub fn hello() -> Frame {
+        Frame::Hello { magic: MAGIC, version: VERSION }
+    }
+
+    fn put_body(&self, buf: &mut Vec<u8>) {
+        match self {
+            Frame::Hello { magic, version } => {
+                put_u32(buf, *magic);
+                put_u16(buf, *version);
+            }
+            Frame::HelloAck { version } => put_u16(buf, *version),
+            Frame::Open { session_key, engine_spec, checkpoint_every } => {
+                put_u64(buf, *session_key);
+                put_u32(buf, *checkpoint_every);
+                put_str(buf, engine_spec);
+            }
+            Frame::OpenAck { session_key } => put_u64(buf, *session_key),
+            Frame::Push { boxes } => {
+                debug_assert!(boxes.len() <= MAX_DETECTIONS);
+                put_u16(buf, boxes.len() as u16);
+                for b in boxes {
+                    put_bbox(buf, b);
+                }
+            }
+            Frame::PushAck | Frame::Close => {}
+            Frame::Poll { from_row } => put_u64(buf, *from_row),
+            Frame::Tracks { rows, total, done } => {
+                debug_assert!(rows.len() <= MAX_TRACK_ROWS);
+                put_u64(buf, *total);
+                buf.push(u8::from(*done));
+                put_u16(buf, rows.len() as u16);
+                for r in rows {
+                    put_u32(buf, r.frame);
+                    put_u64(buf, r.id);
+                    put_bbox(buf, &r.bbox);
+                }
+            }
+            Frame::CloseAck { total_rows } => put_u64(buf, *total_rows),
+            Frame::Resume { session_key, rows_received } => {
+                put_u64(buf, *session_key);
+                put_u64(buf, *rows_received);
+            }
+            Frame::ResumeAck { resume_from, rows_total } => {
+                put_u64(buf, *resume_from);
+                put_u64(buf, *rows_total);
+            }
+            Frame::Error { code, detail } => {
+                put_u16(buf, *code);
+                put_str(buf, detail);
+            }
+        }
+    }
+
+    fn from_body(tag: u8, c: &mut Cursor<'_>) -> Result<Frame, DecodeError> {
+        let frame = match tag {
+            TAG_HELLO => Frame::Hello { magic: c.u32()?, version: c.u16()? },
+            TAG_HELLO_ACK => Frame::HelloAck { version: c.u16()? },
+            TAG_OPEN => {
+                let session_key = c.u64()?;
+                let checkpoint_every = c.u32()?;
+                let engine_spec = c.str()?;
+                Frame::Open { session_key, engine_spec, checkpoint_every }
+            }
+            TAG_OPEN_ACK => Frame::OpenAck { session_key: c.u64()? },
+            TAG_PUSH => {
+                let n = c.u16()? as usize;
+                if n > MAX_DETECTIONS {
+                    return Err(DecodeError::CapExceeded("detections per push"));
+                }
+                let mut boxes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    boxes.push(c.bbox()?);
+                }
+                Frame::Push { boxes }
+            }
+            TAG_PUSH_ACK => Frame::PushAck,
+            TAG_POLL => Frame::Poll { from_row: c.u64()? },
+            TAG_TRACKS => {
+                let total = c.u64()?;
+                let done = match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(DecodeError::Malformed("done flag out of range")),
+                };
+                let n = c.u16()? as usize;
+                if n > MAX_TRACK_ROWS {
+                    return Err(DecodeError::CapExceeded("rows per tracks response"));
+                }
+                let mut rows = Vec::with_capacity(n);
+                for _ in 0..n {
+                    rows.push(TrackRow { frame: c.u32()?, id: c.u64()?, bbox: c.bbox()? });
+                }
+                Frame::Tracks { rows, total, done }
+            }
+            TAG_CLOSE => Frame::Close,
+            TAG_CLOSE_ACK => Frame::CloseAck { total_rows: c.u64()? },
+            TAG_RESUME => Frame::Resume { session_key: c.u64()?, rows_received: c.u64()? },
+            TAG_RESUME_ACK => {
+                Frame::ResumeAck { resume_from: c.u64()?, rows_total: c.u64()? }
+            }
+            TAG_ERROR => Frame::Error { code: c.u16()?, detail: c.str()? },
+            other => return Err(DecodeError::UnknownTag(other)),
+        };
+        Ok(frame)
+    }
+}
+
+/// Encode `frame` (with header `seq`) into full wire bytes — len
+/// prefix, checksum, header, body — appended to `buf`.
+pub fn encode(seq: u64, frame: &Frame, buf: &mut Vec<u8>) {
+    let start = buf.len();
+    put_u32(buf, 0); // len, patched below
+    put_u32(buf, 0); // checksum, patched below
+    buf.push(frame.tag());
+    put_u64(buf, seq);
+    frame.put_body(buf);
+    let payload_len = buf.len() - start - 4;
+    debug_assert!(payload_len <= MAX_FRAME_LEN, "encoded frame exceeds MAX_FRAME_LEN");
+    let sum = checksum(&buf[start + 8..]);
+    buf[start..start + 4].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    buf[start + 4..start + 8].copy_from_slice(&sum.to_le_bytes());
+}
+
+/// Decode one frame payload (the bytes *after* the len prefix).
+/// Returns the header seq and the frame.
+pub fn decode(payload: &[u8]) -> Result<(u64, Frame), DecodeError> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(DecodeError::TooLong(payload.len()));
+    }
+    if payload.len() < HEADER_LEN {
+        return Err(DecodeError::Truncated);
+    }
+    let want = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+    let got = checksum(&payload[4..]);
+    if want != got {
+        return Err(DecodeError::Checksum { want, got });
+    }
+    let tag = payload[4];
+    let seq = u64::from_le_bytes(payload[5..13].try_into().unwrap());
+    let mut c = Cursor { b: &payload[13..], i: 0 };
+    let frame = Frame::from_body(tag, &mut c)?;
+    c.finish()?;
+    Ok((seq, frame))
+}
+
+/// Write one frame to a stream (blocking; honors the stream's write
+/// timeout).
+pub fn write_frame<W: Write>(w: &mut W, seq: u64, frame: &Frame) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(64);
+    encode(seq, frame, &mut buf);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Read one frame from a stream (blocking; honors the stream's read
+/// timeout).
+///
+/// The outer `io::Result` is transport failure (timeout, EOF, reset);
+/// the inner `Result` is protocol failure (corruption, caps, bad
+/// structure). Transport failures may be retried by reconnecting;
+/// protocol failures poison the connection that produced them. A
+/// declared length over [`MAX_FRAME_LEN`] is reported *without*
+/// reading the body, so an adversarial length cannot make the reader
+/// allocate or wait for a megabyte that never comes.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Result<(u64, Frame), DecodeError>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_LEN {
+        return Ok(Err(DecodeError::TooLong(len)));
+    }
+    if len < HEADER_LEN {
+        return Ok(Err(DecodeError::Truncated));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(decode(&payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_frames() -> Vec<(u64, Frame)> {
+        vec![
+            (0, Frame::hello()),
+            (0, Frame::HelloAck { version: VERSION }),
+            (
+                1,
+                Frame::Open {
+                    session_key: 0xdead_beef,
+                    engine_spec: "strong:4".into(),
+                    checkpoint_every: 16,
+                },
+            ),
+            (1, Frame::OpenAck { session_key: 0xdead_beef }),
+            (
+                7,
+                Frame::Push {
+                    boxes: vec![
+                        Bbox::new(1.5, -2.25, 10.0, 20.0),
+                        Bbox::new(f64::MIN_POSITIVE, 0.1 + 0.2, 1e300, -0.0),
+                    ],
+                },
+            ),
+            (7, Frame::PushAck),
+            (8, Frame::Poll { from_row: 42 }),
+            (
+                8,
+                Frame::Tracks {
+                    rows: vec![TrackRow {
+                        frame: 7,
+                        id: 3,
+                        bbox: Bbox::new(0.25, 0.5, 0.75, 1.0),
+                    }],
+                    total: 43,
+                    done: true,
+                },
+            ),
+            (9, Frame::Close),
+            (9, Frame::CloseAck { total_rows: 43 }),
+            (0, Frame::Resume { session_key: 5, rows_received: 12 }),
+            (0, Frame::ResumeAck { resume_from: 31, rows_total: 40 }),
+            (2, Frame::Error { code: error_code::SEQ_GAP, detail: "gap at 9".into() }),
+        ]
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        for (seq, frame) in all_frames() {
+            let mut buf = Vec::new();
+            encode(seq, &frame, &mut buf);
+            let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+            assert_eq!(len, buf.len() - 4, "{frame:?}: len prefix covers the payload");
+            let (got_seq, got) = decode(&buf[4..]).expect("round trip");
+            assert_eq!(got_seq, seq, "{frame:?}");
+            assert_eq!(got, frame);
+        }
+    }
+
+    #[test]
+    fn bboxes_round_trip_by_bits() {
+        let odd = Bbox::new(0.1 + 0.2, f64::MIN_POSITIVE, -0.0, 1e-300);
+        let mut buf = Vec::new();
+        encode(3, &Frame::Push { boxes: vec![odd] }, &mut buf);
+        let (_, frame) = decode(&buf[4..]).unwrap();
+        let Frame::Push { boxes } = frame else { panic!("wrong frame") };
+        assert_eq!(
+            boxes[0].to_array().map(f64::to_bits),
+            odd.to_array().map(f64::to_bits),
+            "bbox must cross the wire bit-exactly"
+        );
+    }
+
+    #[test]
+    fn single_byte_corruption_is_always_detected() {
+        // XOR-flip every byte position after the len prefix, one at a
+        // time — exactly what the fault proxy does — and require the
+        // decoder to refuse every variant. Byte 0..4 (the len prefix)
+        // is the reader's problem, not the checksum's.
+        for (seq, frame) in all_frames() {
+            let mut buf = Vec::new();
+            encode(seq, &frame, &mut buf);
+            for i in 4..buf.len() {
+                let mut bad = buf.clone();
+                bad[i] ^= 0xFF;
+                assert!(
+                    decode(&bad[4..]).is_err(),
+                    "{frame:?}: corruption at byte {i} slipped through"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_is_detected_at_every_length() {
+        let mut buf = Vec::new();
+        encode(5, &Frame::Push { boxes: vec![Bbox::new(0.0, 0.0, 1.0, 1.0)] }, &mut buf);
+        for keep in 0..buf.len() - 4 {
+            assert!(decode(&buf[4..4 + keep]).is_err(), "truncated to {keep} bytes");
+        }
+    }
+
+    #[test]
+    fn caps_are_enforced_on_decode() {
+        // hand-build a PUSH declaring more boxes than the cap; the
+        // count field alone must trigger rejection before any
+        // allocation proportional to it
+        let mut body = Vec::new();
+        put_u16(&mut body, (MAX_DETECTIONS + 1) as u16);
+        let mut payload = vec![0u8; 4];
+        payload.push(TAG_PUSH);
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.extend_from_slice(&body);
+        let sum = checksum(&payload[4..]);
+        payload[0..4].copy_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode(&payload), Err(DecodeError::CapExceeded("detections per push")));
+    }
+
+    #[test]
+    fn oversize_and_trailing_bytes_are_rejected() {
+        let oversize = vec![0u8; MAX_FRAME_LEN + 1];
+        assert!(matches!(decode(&oversize), Err(DecodeError::TooLong(_))));
+        // valid frame + one trailing byte, re-checksummed: structure
+        // must still be rejected
+        let mut buf = Vec::new();
+        encode(1, &Frame::Close, &mut buf);
+        let mut payload = buf[4..].to_vec();
+        payload.push(0xAB);
+        let sum = checksum(&payload[4..]);
+        payload[0..4].copy_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode(&payload), Err(DecodeError::Malformed("trailing bytes after body")));
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        let mut payload = vec![0u8; 4];
+        payload.push(200);
+        payload.extend_from_slice(&0u64.to_le_bytes());
+        let sum = checksum(&payload[4..]);
+        payload[0..4].copy_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode(&payload), Err(DecodeError::UnknownTag(200)));
+    }
+
+    #[test]
+    fn stream_reader_round_trips_and_rejects_oversize_without_reading_body() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 9, &Frame::Poll { from_row: 3 }).unwrap();
+        write_frame(&mut wire, 10, &Frame::Close).unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), (9, Frame::Poll { from_row: 3 }));
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), (10, Frame::Close));
+        assert!(read_frame(&mut r).unwrap_err().kind() == std::io::ErrorKind::UnexpectedEof);
+        // a huge declared length with no body behind it: rejected from
+        // the prefix alone
+        let mut evil = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+        evil.extend_from_slice(&[0u8; 8]);
+        let mut r = &evil[..];
+        assert!(matches!(read_frame(&mut r).unwrap(), Err(DecodeError::TooLong(_))));
+    }
+
+    #[test]
+    fn checksum_changes_for_any_single_byte_change() {
+        let base = b"smalltrack wire frame".to_vec();
+        let h0 = checksum(&base);
+        for i in 0..base.len() {
+            for flip in [0x01u8, 0xFF] {
+                let mut m = base.clone();
+                m[i] ^= flip;
+                assert_ne!(checksum(&m), h0, "byte {i} flip {flip:#x}");
+            }
+        }
+    }
+}

@@ -7,6 +7,13 @@
 //! everything the Python exporters emit (they serialize f64s), and for
 //! every counter this crate serializes (all < 2^53). Non-finite
 //! numbers serialize as `null` (JSON has no NaN/Inf).
+//!
+//! The reader is strict where it matters for files that cross a trust
+//! boundary (reports uploaded from CI, wire-smoke artifacts): nesting
+//! deeper than [`MAX_DEPTH`] is rejected instead of overflowing the
+//! stack, duplicate object keys are an error instead of silently
+//! last-wins, and numbers that overflow `f64` (`1e999`) are rejected
+//! instead of smuggling an infinity past the grammar.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -244,9 +251,15 @@ impl fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Maximum container nesting depth the parser accepts. Recursive
+/// descent means input depth is stack depth — a bound turns a
+/// crafted-input stack overflow (an abort) into an ordinary
+/// [`ParseError`]. Every legitimate artifact in this repo nests < 10.
+pub const MAX_DEPTH: usize = 512;
+
 /// Parse a complete JSON document.
 pub fn parse(input: &str) -> Result<Value, ParseError> {
-    let mut p = Parser { b: input.as_bytes(), i: 0 };
+    let mut p = Parser { b: input.as_bytes(), i: 0, depth: 0 };
     p.ws();
     let v = p.value()?;
     p.ws();
@@ -265,6 +278,7 @@ pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Value> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -313,12 +327,25 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Bounded-recursion guard — called on entering a container.
+    /// Parse errors abort the whole parse, so only the success paths
+    /// need the matching decrement.
+    fn descend(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting deeper than 512 levels"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Value, ParseError> {
         self.eat(b'{')?;
+        self.descend()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Value::Obj(m));
         }
         loop {
@@ -328,12 +355,16 @@ impl<'a> Parser<'a> {
             self.eat(b':')?;
             self.ws();
             let v = self.value()?;
+            if m.contains_key(&k) {
+                return Err(self.err(&format!("duplicate key '{k}'")));
+            }
             m.insert(k, v);
             self.ws();
             match self.peek() {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Value::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -343,10 +374,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Value, ParseError> {
         self.eat(b'[')?;
+        self.descend()?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Value::Arr(v));
         }
         loop {
@@ -357,6 +390,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Value::Arr(v));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -442,9 +476,13 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        text.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| self.err("bad number"))
+        match text.parse::<f64>() {
+            // overflow parses "successfully" to ±inf — reject it, the
+            // grammar has no way to write a non-finite value on purpose
+            Ok(n) if n.is_finite() => Ok(Value::Num(n)),
+            Ok(_) => Err(self.err("number overflows f64")),
+            Err(_) => Err(self.err("bad number")),
+        }
     }
 }
 
@@ -510,6 +548,62 @@ mod tests {
         assert_eq!(parse("1e-3").unwrap().num(), 0.001);
         assert_eq!(parse("42").unwrap().num(), 42.0);
         assert_eq!(parse("-0.25").unwrap().num(), -0.25);
+    }
+
+    #[test]
+    fn truncated_inputs_error_at_the_cut() {
+        // every prefix of a valid document must error, never panic or
+        // silently succeed
+        let full = r#"{"a": [1, 2.5, {"b": "x\n"}], "c": true}"#;
+        for cut in 1..full.len() {
+            let prefix = &full[..cut];
+            if prefix.is_char_boundary(cut) {
+                assert!(parse(prefix).is_err(), "prefix {prefix:?} parsed");
+            }
+        }
+        for bad in ["{\"a\"", "{\"a\":", "[1,", "\"abc", "12e", "-", "tru", "{\"a\":1,"] {
+            let e = parse(bad).unwrap_err();
+            assert!(e.at <= bad.len(), "{bad:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn nesting_deeper_than_the_cap_is_rejected_not_a_stack_overflow() {
+        // comfortably inside the cap: fine
+        let deep_ok = format!("{}0{}", "[".repeat(100), "]".repeat(100));
+        assert!(parse(&deep_ok).is_ok());
+        // one past the cap: a clean ParseError (an unbounded recursive
+        // descent would abort the process here long before 100k)
+        let deep_bad = format!("{}0{}", "[".repeat(100_000), "]".repeat(100_000));
+        let e = parse(&deep_bad).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{e}");
+        // mixed object/array nesting counts against the same budget
+        let mixed = "{\"k\":".repeat(MAX_DEPTH + 1) + "0" + &"}".repeat(MAX_DEPTH + 1);
+        assert!(parse(&mixed).unwrap_err().msg.contains("nesting"));
+        // and the counter unwinds: a sequence of sibling containers at
+        // legal depth parses no matter how many there are
+        let siblings = format!("[{}0]", "[[[0]]],".repeat(1000));
+        assert!(parse(&siblings).is_ok());
+    }
+
+    #[test]
+    fn non_finite_literals_and_overflow_are_rejected() {
+        for bad in ["NaN", "Infinity", "-Infinity", "nan", "inf", "1e999", "-1e999"] {
+            assert!(parse(bad).is_err(), "{bad:?} parsed");
+        }
+        // near-max but finite still parses
+        assert!(parse("1.7e308").unwrap().num().is_finite());
+    }
+
+    #[test]
+    fn duplicate_object_keys_are_an_error_not_last_wins() {
+        let e = parse(r#"{"a": 1, "a": 2}"#).unwrap_err();
+        assert!(e.msg.contains("duplicate key 'a'"), "{e}");
+        // same key in *different* objects is of course fine
+        let v = parse(r#"[{"a": 1}, {"a": 2}]"#).unwrap();
+        assert_eq!(v.arr()[1].req("a").num(), 2.0);
+        // nested duplicate is caught too
+        assert!(parse(r#"{"x": {"b": 1, "b": 1}}"#).is_err());
     }
 
     #[test]

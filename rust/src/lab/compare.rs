@@ -26,6 +26,11 @@
 //! (drops depend on load), so the ordinary vs-baseline MOTA margin is
 //! *not* applied to them — the budget-vs-sibling bound is the
 //! contract.
+//!
+//! Wire cells (those carrying a `wire` block) add two marginless
+//! correctness criteria, again within the current report: the netload
+//! frame ledger must conserve, and the tracks delivered over the
+//! socket must match the in-process reference run bit-for-bit.
 
 use crate::benchkit::Table;
 
@@ -71,6 +76,12 @@ pub enum CellStatus {
     /// An overload cell's delivered-row MOTA trails its 1x sibling by
     /// more than the session's declared MOTA budget.
     OverloadQualityGap,
+    /// A wire cell's frame ledger does not conserve
+    /// (`frames_sent != frames_acked + rejected + in_flight_at_close`).
+    WireLedgerViolation,
+    /// A wire cell's delivered tracks diverged from the in-process
+    /// reference run (bit-identity check failed).
+    WireMismatch,
     /// Cell exists only in the current report (informational).
     New,
 }
@@ -86,6 +97,8 @@ impl CellStatus {
             CellStatus::PrecisionGap => "F32 MOTA GAP",
             CellStatus::DeadlineMissed => "DEADLINE MISSED",
             CellStatus::OverloadQualityGap => "OVERLOAD MOTA GAP",
+            CellStatus::WireLedgerViolation => "WIRE LEDGER",
+            CellStatus::WireMismatch => "WIRE MISMATCH",
             CellStatus::New => "new",
         }
     }
@@ -100,6 +113,8 @@ impl CellStatus {
                 | CellStatus::PrecisionGap
                 | CellStatus::DeadlineMissed
                 | CellStatus::OverloadQualityGap
+                | CellStatus::WireLedgerViolation
+                | CellStatus::WireMismatch
         )
     }
 }
@@ -275,6 +290,29 @@ pub fn compare(base: &LabReport, cur: &LabReport, gate: &GateConfig) -> Comparis
             }
         }
     }
+    // wire bound: every wire cell in the current report must conserve
+    // its frame ledger and match the in-process reference run
+    // bit-for-bit. Both are correctness invariants of this build (no
+    // baseline involved, no margins — transport either delivered the
+    // exact engine output or it didn't), so they apply to new cells
+    // too.
+    for c in &cur.cells {
+        let Some(w) = &c.wire else { continue };
+        let verdict = if !w.conserves() {
+            Some(CellStatus::WireLedgerViolation)
+        } else if !w.bit_identical {
+            Some(CellStatus::WireMismatch)
+        } else {
+            None
+        };
+        if let Some(status) = verdict {
+            if let Some(d) = cells.iter_mut().find(|d| d.id == c.id) {
+                if !d.status.fails() {
+                    d.status = status;
+                }
+            }
+        }
+    }
     let pass = cells.iter().all(|c| !c.status.fails());
     Comparison { cells, pass }
 }
@@ -295,6 +333,7 @@ mod tests {
     use super::*;
     use crate::lab::report::{
         CellReport, CounterTotals, FpsStats, LabReport, Manifest, QualityStats, SloReport,
+        WireReport,
     };
 
     fn report_with(cells: Vec<(&str, f64, f64)>) -> LabReport {
@@ -334,6 +373,7 @@ mod tests {
                     },
                     counters: CounterTotals::default(),
                     slo: None,
+                    wire: None,
                 })
                 .collect(),
         }
@@ -530,6 +570,72 @@ mod tests {
         let mut orphan = report_with(vec![("batch-x-s4-a2x", 900.0, 0.10)]);
         orphan.cells[0].slo = Some(slo_ok());
         assert!(compare(&report_with(vec![]), &orphan, &GateConfig::default()).pass);
+    }
+
+    /// A healthy wire block for wire-cell tests; tweak fields to
+    /// construct violations.
+    fn wire_ok() -> WireReport {
+        WireReport {
+            sessions_per_sec: 10.0,
+            p50_ms: 0.4,
+            p99_ms: 3.0,
+            frames_sent: 320,
+            frames_acked: 320,
+            rejected: 0,
+            in_flight_at_close: 0,
+            reconnects: 0,
+            replays: 0,
+            rejected_frames: 0,
+            bit_identical: true,
+        }
+    }
+
+    #[test]
+    fn wire_ledger_violation_fails_the_gate() {
+        let mk = |wire: WireReport| {
+            let mut r = report_with(vec![("batch-x-s4-wire", 900.0, 0.60)]);
+            r.cells[0].wire = Some(wire);
+            r
+        };
+        let good = mk(wire_ok());
+        assert!(compare(&good, &good, &GateConfig::default()).pass);
+        // 5 frames vanished: sent != acked + rejected + in-flight
+        let leaky = mk(WireReport { frames_acked: 315, ..wire_ok() });
+        let cmp = compare(&good, &leaky, &GateConfig::default());
+        assert!(!cmp.pass, "a non-conserving ledger must fail the gate");
+        assert_eq!(cmp.cells[0].status, CellStatus::WireLedgerViolation);
+        assert_eq!(cmp.cells[0].status.label(), "WIRE LEDGER");
+        // a conserving ledger with retries/rejections still passes —
+        // conservation is the invariant, not losslessness
+        let rough = mk(WireReport {
+            frames_acked: 310,
+            rejected: 6,
+            in_flight_at_close: 4,
+            reconnects: 3,
+            ..wire_ok()
+        });
+        assert!(compare(&good, &rough, &GateConfig::default()).pass);
+    }
+
+    #[test]
+    fn wire_divergence_fails_even_on_new_cells() {
+        let base = report_with(vec![("batch-x-s4", 1000.0, 0.60)]);
+        let mut cur = report_with(vec![("batch-x-s4", 1000.0, 0.60), ("batch-x-s4-wire", 900.0, 0.60)]);
+        cur.cells[1].wire = Some(WireReport { bit_identical: false, ..wire_ok() });
+        // the wire cell is new vs this baseline, but the bit-identity
+        // bound is a property of the current build and applies anyway
+        let cmp = compare(&base, &cur, &GateConfig::default());
+        assert!(!cmp.pass, "diverged wire tracks must fail the gate");
+        let cell = cmp.cells.iter().find(|c| c.id.ends_with("-wire")).unwrap();
+        assert_eq!(cell.status, CellStatus::WireMismatch);
+        assert_eq!(cell.status.label(), "WIRE MISMATCH");
+        assert!(cell.status.fails());
+        // ledger violation takes precedence over divergence
+        cur.cells[1].wire =
+            Some(WireReport { bit_identical: false, frames_sent: 999, ..wire_ok() });
+        let cmp = compare(&base, &cur, &GateConfig::default());
+        let cell = cmp.cells.iter().find(|c| c.id.ends_with("-wire")).unwrap();
+        assert_eq!(cell.status, CellStatus::WireLedgerViolation);
     }
 
     #[test]

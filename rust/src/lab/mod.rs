@@ -13,11 +13,16 @@
 //! multiple of the cell's measured sustainable rate through the
 //! SLO-aware adaptive runtime, reported with latency percentiles,
 //! deadline-hit ratio, the split drop ledger and controller actions
-//! ([`SloReport`]). [`mod@compare`] diffs two reports under
+//! ([`SloReport`]). The smoke suite also carries one *wire* cell:
+//! the same footage driven over a loopback TCP socket through the
+//! `WireServer` front door, reported with the netload client ledger,
+//! socket round-trip percentiles and the bit-identity verdict
+//! ([`WireReport`]). [`mod@compare`] diffs two reports under
 //! configurable noise margins — plus the SLO criteria: overload p99
 //! must hold under the session deadline and delivered-row MOTA within
-//! the declared budget of the 1x sibling — and produces the pass/fail
-//! verdict CI gates on.
+//! the declared budget of the 1x sibling — plus the marginless wire
+//! criteria (ledger conservation, bit-identity) — and produces the
+//! pass/fail verdict CI gates on.
 //!
 //! CLI surface (`smalltrack lab …`):
 //!
@@ -42,7 +47,7 @@ pub mod scenario;
 pub use compare::{compare, CellDelta, CellStatus, Comparison, GateConfig};
 pub use report::{
     CellReport, CounterTotals, FpsStats, KernelEntry, LabReport, Manifest, QualityStats,
-    SloReport, SCHEMA_VERSION,
+    SloReport, WireReport, SCHEMA_VERSION,
 };
 pub use scenario::{Scenario, ScenarioAxes};
 

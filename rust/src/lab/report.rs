@@ -20,8 +20,9 @@ use std::path::Path;
 use super::scenario::ScenarioAxes;
 
 /// Version of the report JSON schema (top-level `schema` field).
-/// v2 added the optional per-cell `slo` block (overload cells).
-pub const SCHEMA_VERSION: u64 = 2;
+/// v2 added the optional per-cell `slo` block (overload cells);
+/// v3 added the optional per-cell `wire` block (TCP front-door cells).
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// Frames-per-second statistics over the benchkit samples.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -319,6 +320,77 @@ impl SloReport {
     }
 }
 
+/// Wire figures for a TCP front-door cell: the netload client ledger,
+/// push-to-poll latency over the socket, and the transport-correctness
+/// verdicts the gate enforces. Present only on cells that ran through
+/// the `WireServer` loopback path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireReport {
+    /// Sessions opened and drained per wall-clock second.
+    pub sessions_per_sec: f64,
+    /// Median push-to-poll round-trip over the socket (ms).
+    pub p50_ms: f64,
+    /// p99 push-to-poll round-trip over the socket (ms).
+    pub p99_ms: f64,
+    /// Distinct frames the clients attempted (ledger left side).
+    pub frames_sent: u64,
+    /// Frames the server acknowledged.
+    pub frames_acked: u64,
+    /// Frames abandoned after the per-frame retry cap.
+    pub rejected: u64,
+    /// Frames still unacknowledged when the stream ended.
+    pub in_flight_at_close: u64,
+    /// Client reconnect-and-resume cycles.
+    pub reconnects: u64,
+    /// Frames the server replayed from checkpoints during resumes.
+    pub replays: u64,
+    /// Frames the server rejected as malformed or out of sequence.
+    pub rejected_frames: u64,
+    /// Whether the delivered tracks matched the in-process reference
+    /// run bit-for-bit (`f64::to_bits` equality).
+    pub bit_identical: bool,
+}
+
+impl WireReport {
+    /// The frame-conservation invariant the gate enforces:
+    /// `frames_sent == frames_acked + rejected + in_flight_at_close`.
+    pub fn conserves(&self) -> bool {
+        self.frames_sent == self.frames_acked + self.rejected + self.in_flight_at_close
+    }
+
+    fn to_value(self) -> Value {
+        Value::obj(vec![
+            ("sessions_per_sec", Value::Num(self.sessions_per_sec)),
+            ("p50_ms", Value::Num(self.p50_ms)),
+            ("p99_ms", Value::Num(self.p99_ms)),
+            ("frames_sent", Value::from_u64(self.frames_sent)),
+            ("frames_acked", Value::from_u64(self.frames_acked)),
+            ("rejected", Value::from_u64(self.rejected)),
+            ("in_flight_at_close", Value::from_u64(self.in_flight_at_close)),
+            ("reconnects", Value::from_u64(self.reconnects)),
+            ("replays", Value::from_u64(self.replays)),
+            ("rejected_frames", Value::from_u64(self.rejected_frames)),
+            ("bit_identical", Value::Bool(self.bit_identical)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<WireReport> {
+        Ok(WireReport {
+            sessions_per_sec: req_num(v, "sessions_per_sec")?,
+            p50_ms: req_num(v, "p50_ms")?,
+            p99_ms: req_num(v, "p99_ms")?,
+            frames_sent: req_u64(v, "frames_sent")?,
+            frames_acked: req_u64(v, "frames_acked")?,
+            rejected: req_u64(v, "rejected")?,
+            in_flight_at_close: req_u64(v, "in_flight_at_close")?,
+            reconnects: req_u64(v, "reconnects")?,
+            replays: req_u64(v, "replays")?,
+            rejected_frames: req_u64(v, "rejected_frames")?,
+            bit_identical: req_bool(v, "bit_identical")?,
+        })
+    }
+}
+
 /// One scenario cell's measured row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellReport {
@@ -348,6 +420,8 @@ pub struct CellReport {
     pub counters: CounterTotals,
     /// SLO figures — overload cells only.
     pub slo: Option<SloReport>,
+    /// Wire figures — TCP front-door cells only.
+    pub wire: Option<WireReport>,
 }
 
 impl CellReport {
@@ -368,6 +442,9 @@ impl CellReport {
         ];
         if let Some(slo) = self.slo {
             fields.push(("slo", slo.to_value()));
+        }
+        if let Some(wire) = self.wire {
+            fields.push(("wire", wire.to_value()));
         }
         Value::obj(fields)
     }
@@ -394,6 +471,7 @@ impl CellReport {
             )
             .context("counters")?,
             slo: v.get("slo").map(SloReport::from_value).transpose().context("slo")?,
+            wire: v.get("wire").map(WireReport::from_value).transpose().context("wire")?,
         })
     }
 }
@@ -628,6 +706,19 @@ mod tests {
                     }],
                 },
                 slo: None,
+                wire: Some(WireReport {
+                    sessions_per_sec: 12.0,
+                    p50_ms: 0.3,
+                    p99_ms: 2.1,
+                    frames_sent: 80,
+                    frames_acked: 80,
+                    rejected: 0,
+                    in_flight_at_close: 0,
+                    reconnects: 1,
+                    replays: 4,
+                    rejected_frames: 2,
+                    bit_identical: true,
+                }),
             },
             CellReport {
                 id: "batch-d5-dp90-fp5-occ-s4-a2x".into(),
@@ -668,6 +759,7 @@ mod tests {
                     migrations: 3,
                     sheds: 1,
                 }),
+                wire: None,
             }],
         }
     }
@@ -703,9 +795,9 @@ mod tests {
 
     #[test]
     fn missing_fields_error_instead_of_panicking() {
-        let v = parse(r#"{"schema": 2, "kind": "lab"}"#).unwrap();
+        let v = parse(r#"{"schema": 3, "kind": "lab"}"#).unwrap();
         assert!(LabReport::from_value(&v).is_err());
-        let v2 = parse(r#"{"schema": 2, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
+        let v2 = parse(r#"{"schema": 3, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
         assert!(LabReport::from_value(&v2).is_err());
     }
 

@@ -40,7 +40,7 @@ use crate::sort::{Bbox, MotMetrics, SortParams};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use super::report::{CellReport, CounterTotals, FpsStats, QualityStats, SloReport};
+use super::report::{CellReport, CounterTotals, FpsStats, QualityStats, SloReport, WireReport};
 
 /// The grid: one scenario per element of the cartesian product of the
 /// axes. Keep axes short — cells multiply.
@@ -121,8 +121,11 @@ impl ScenarioAxes {
 
     /// The CI smoke *suite*: the smoke grid plus one overload cell —
     /// the 4-stream f64-batch smoke cell re-admitted at 2x its
-    /// sustainable rate through the adaptive runtime. This is the cell
-    /// the deadline/budget gate criteria bite on in CI.
+    /// sustainable rate through the adaptive runtime (the cell the
+    /// deadline/budget gate criteria bite on) — plus one *wire* cell:
+    /// the same 4-stream batch cell driven over a loopback TCP socket
+    /// through the `WireServer`, which the gate holds to ledger
+    /// conservation and bit-identity with the in-process run.
     pub fn smoke_cells() -> Vec<Scenario> {
         let mut cells = ScenarioAxes::smoke().cells();
         let base = cells
@@ -131,6 +134,7 @@ impl ScenarioAxes {
             .copied()
             .expect("smoke grid always has a multi-stream batch cell");
         cells.push(Scenario { admission: 2.0, ..base });
+        cells.push(Scenario { wire: true, ..base });
         cells
     }
 
@@ -157,6 +161,7 @@ impl ScenarioAxes {
                                         occlusion,
                                         streams,
                                         admission,
+                                        wire: false,
                                         frames: self.frames,
                                         seed: self.seed,
                                     });
@@ -189,6 +194,10 @@ pub struct Scenario {
     /// Admission-rate multiplier vs the measured sustainable rate
     /// (`1.0` = classic cell, `> 1.0` = overload cell).
     pub admission: f64,
+    /// Run the cell through the TCP front door: frames travel over a
+    /// loopback socket to a `WireServer` instead of in-process session
+    /// handles, and the report row gains a [`WireReport`].
+    pub wire: bool,
     /// Frames per stream.
     pub frames: u32,
     /// Grid seed.
@@ -217,17 +226,23 @@ impl Scenario {
                 id.push_str(&format!("-a{}x", self.admission));
             }
         }
+        if self.wire {
+            id.push_str("-wire");
+        }
         id
     }
 
     /// Generator config for one of this cell's streams. Stress cells
     /// use [`SynthConfig::stress`] so the lab and every other consumer
     /// of the canonical stress profile stay in agreement. The name is
-    /// keyed on the *1x sibling's* id: an overload cell tracks
-    /// byte-identical footage to its unpaced sibling, so any MOTA gap
-    /// between the two is adaptation cost, not different video.
+    /// keyed on the *1x in-process sibling's* id: an overload cell
+    /// tracks byte-identical footage to its unpaced sibling (any MOTA
+    /// gap is adaptation cost, not different video), and a wire cell
+    /// tracks byte-identical footage to its in-process sibling (any
+    /// delivery gap is transport cost).
     pub fn synth_config(&self, stream: usize) -> SynthConfig {
-        let name = format!("{}-cam{stream}", Scenario { admission: 1.0, ..*self }.id());
+        let name =
+            format!("{}-cam{stream}", Scenario { admission: 1.0, wire: false, ..*self }.id());
         let mut cfg = if self.occlusion {
             SynthConfig::stress(&name, self.frames, self.max_objects, self.seed)
         } else {
@@ -250,6 +265,9 @@ impl Scenario {
     /// snapshot always comes from the calling thread regardless of the
     /// cell's stream count).
     pub fn run(&self, cfg: &BenchConfig) -> crate::Result<CellReport> {
+        if self.wire {
+            return self.run_wire();
+        }
         if self.admission > 1.0 {
             return self.run_overload();
         }
@@ -343,6 +361,7 @@ impl Scenario {
             quality: QualityStats::from_metrics(&quality),
             counters: CounterTotals::from_snapshot(&counters),
             slo: None,
+            wire: None,
         })
     }
 
@@ -501,6 +520,84 @@ impl Scenario {
             quality: QualityStats::from_metrics(&quality),
             counters: CounterTotals::from_snapshot(&counters),
             slo: Some(slo),
+            wire: None,
+        })
+    }
+
+    /// Run the cell through the TCP front door: every stream's frames
+    /// travel over a loopback socket to a self-served [`WireServer`]
+    /// (netload harness, clean schedule — fault-recovery has its own
+    /// integration coverage), quality is scored on the rows the wire
+    /// actually delivered, and the report row gains a [`WireReport`]
+    /// with the client ledger, socket round-trip percentiles and the
+    /// bit-identity verdict vs the in-process reference run.
+    fn run_wire(&self) -> crate::Result<CellReport> {
+        use crate::coordinator::net::{detection_frames, netload_run, NetloadOptions};
+        let id = self.id();
+        let seqs = self.sequences();
+        let params = SortParams { timing: false, ..Default::default() };
+        let total_frames = (seqs.len() as u64) * self.frames as u64;
+
+        // kernel counters: delta around one serial pass of stream 0
+        // (same protocol as the other runners — thread-local counters,
+        // so the snapshot must come from the calling thread)
+        let counters = {
+            let mut engine = self.engine.build(params)?;
+            let before = snapshot();
+            run_sequence(&mut *engine, &seqs[0].sequence);
+            snapshot().delta(&before)
+        };
+
+        let streams: Vec<Vec<Vec<Bbox>>> =
+            seqs.iter().map(|s| detection_frames(&s.sequence)).collect();
+        let mut opts = NetloadOptions::new(self.engine);
+        opts.seed = self.seed;
+        opts.server.service.workers = self.streams.min(2);
+        opts.server.service.session_defaults.engine = self.engine;
+        opts.server.service.session_defaults.sort_params = params;
+        let out = netload_run(opts, &streams)?;
+
+        // quality over what the wire delivered: the full GT denominator,
+        // so any transport loss would price itself as misses (a clean
+        // schedule delivers everything — bit_identical pins that)
+        let mut quality = MotMetrics::default();
+        for (s, rows) in seqs.iter().zip(&out.rows) {
+            let tuples: Vec<(u32, u64, Bbox)> =
+                rows.iter().map(|r| (r.frame, r.id, r.bbox)).collect();
+            quality.merge(&delivered_quality(s, &tuples, self.frames));
+        }
+
+        let (p50, _, p99, _) = out.latency.summary();
+        let fps = total_frames as f64 / out.wall.as_secs_f64().max(1e-9);
+        let sc = out.server_counters.clone().unwrap_or_default();
+        let wire = WireReport {
+            sessions_per_sec: out.sessions_per_sec,
+            p50_ms: p50.as_secs_f64() * 1e3,
+            p99_ms: p99.as_secs_f64() * 1e3,
+            frames_sent: out.ledger.frames_sent,
+            frames_acked: out.ledger.frames_acked,
+            rejected: out.ledger.rejected,
+            in_flight_at_close: out.ledger.in_flight_at_close,
+            reconnects: out.ledger.reconnects,
+            replays: sc.replays,
+            rejected_frames: sc.rejected_frames,
+            bit_identical: out.bit_identical,
+        };
+        Ok(CellReport {
+            id,
+            engine: self.engine.spec(),
+            streams: self.streams,
+            max_objects: self.max_objects,
+            det_prob: self.det_prob,
+            fp_rate: self.fp_rate,
+            occlusion: self.occlusion,
+            frames: self.frames as u64,
+            total_frames,
+            fps: FpsStats { median: fps, mean: fps, stddev: 0.0, min: fps },
+            quality: QualityStats::from_metrics(&quality),
+            counters: CounterTotals::from_snapshot(&counters),
+            slo: None,
+            wire: Some(wire),
         })
     }
 }
@@ -646,6 +743,7 @@ mod tests {
             occlusion: true,
             streams: 1,
             admission: 1.0,
+            wire: false,
             frames: 40,
             seed: 3,
         };
@@ -674,6 +772,7 @@ mod tests {
             occlusion: false,
             streams: 3,
             admission: 1.0,
+            wire: false,
             frames: 30,
             seed: 5,
         };
@@ -700,6 +799,7 @@ mod tests {
             occlusion: true,
             streams: 4,
             admission: 1.0,
+            wire: false,
             frames: 80,
             seed: 7,
         };
@@ -712,14 +812,57 @@ mod tests {
     }
 
     #[test]
-    fn smoke_suite_is_the_smoke_grid_plus_one_overload_cell() {
+    fn smoke_suite_is_the_smoke_grid_plus_overload_and_wire_cells() {
         let cells = ScenarioAxes::smoke_cells();
         let grid = ScenarioAxes::smoke().cells();
-        assert_eq!(cells.len(), grid.len() + 1);
+        assert_eq!(cells.len(), grid.len() + 2);
         assert_eq!(cells[..grid.len()], grid[..]);
-        let over = cells.last().unwrap();
+        let over = &cells[grid.len()];
         assert_eq!(over.id(), "batch-d5-dp90-fp5-occ-s4-a2x");
         assert_eq!(over.admission, 2.0);
+        let wire = cells.last().unwrap();
+        assert_eq!(wire.id(), "batch-d5-dp90-fp5-occ-s4-wire");
+        assert!(wire.wire);
+        assert_eq!(wire.admission, 1.0, "the wire cell is unpaced");
+        // the wire cell tracks the same footage as its in-process
+        // sibling — any quality gap would be pure transport cost
+        let sibling = grid.iter().find(|c| c.id() == "batch-d5-dp90-fp5-occ-s4").unwrap();
+        assert_eq!(wire.synth_config(1).name, sibling.synth_config(1).name);
+        assert_eq!(wire.synth_config(1).seed, sibling.synth_config(1).seed);
+    }
+
+    #[test]
+    fn wire_cell_runs_end_to_end_and_is_bit_identical() {
+        let cell = Scenario {
+            engine: EngineKind::Batch,
+            max_objects: 4,
+            det_prob: 0.95,
+            fp_rate: 0.05,
+            occlusion: false,
+            streams: 2,
+            admission: 1.0,
+            wire: true,
+            frames: 30,
+            seed: 5,
+        };
+        let cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(1),
+            samples: 2,
+            min_sample_time: std::time::Duration::from_micros(100),
+        };
+        let r = cell.run(&cfg).expect("wire cell run");
+        assert_eq!(r.id, "batch-d4-dp95-fp5-clr-s2-wire");
+        assert_eq!(r.total_frames, 60);
+        assert!(r.slo.is_none(), "wire cells carry no SLO block");
+        let w = r.wire.expect("wire cells carry a wire block");
+        assert!(w.bit_identical, "clean loopback run must match the in-process reference");
+        assert!(w.conserves(), "{w:?}");
+        assert_eq!(w.frames_sent, 60);
+        assert_eq!(w.frames_acked, 60);
+        assert_eq!(w.reconnects, 0, "no faults, no reconnects");
+        assert!(w.sessions_per_sec > 0.0);
+        assert!(r.fps.median > 0.0);
+        assert!(r.quality.n_gt > 0, "delivered-row scoring keeps the full GT denominator");
     }
 
     #[test]
@@ -745,6 +888,7 @@ mod tests {
             occlusion: false,
             streams: 2,
             admission: 2.0,
+            wire: false,
             frames: 40,
             seed: 5,
         };

@@ -10,6 +10,11 @@
 //!   xla        track a sequence on the XLA tracker-bank path
 //!   lab        scenario lab: run a perf+quality grid, compare/gate
 //!              two JSON reports (the CI regression gate)
+//!   track-serve  TCP front door: serve tracking sessions over the
+//!              versioned wire protocol (checkpoint/resume recovery)
+//!   netload    drive synthetic streams against a wire server (self-
+//!              served by default) with optional seeded fault
+//!              injection; verifies ledger conservation + bit-identity
 //!
 //! Argument parsing is hand-rolled (`--key value` / `--flag`); the
 //! offline build environment has no clap.
@@ -100,6 +105,8 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "xla" => cmd_xla(&args),
         "lab" => cmd_lab(&args),
+        "track-serve" => cmd_track_serve(&args),
+        "netload" => cmd_netload(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -146,6 +153,20 @@ COMMANDS
                                                     overload cells also gate on
                                                     p99-under-deadline and the
                                                     MOTA budget vs their 1x sibling
+  track-serve [--addr H:P] [--workers N] [--run-secs S]
+            [--checkpoint-every K]                  TCP front door on the wire
+                                                    protocol; --run-secs drains
+                                                    gracefully after S seconds
+                                                    (default: run until killed)
+  netload   [--streams N] [--frames K] [--engine E] [--seed N]
+            [--faults none|aggressive [--cuts C]] [--workers W]
+            [--checkpoint-every K] [--addr H:P] [--json PATH]
+                                                    replay synthetic streams over
+                                                    the wire (self-served unless
+                                                    --addr targets a server);
+                                                    exits non-zero if the frame
+                                                    ledger leaks or tracks differ
+                                                    from the in-process run
 
 ENGINES (--engine, default native; the spec form is self-contained)
   native    single-core structure-aware Sort (the paper's fast path)
@@ -332,6 +353,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 report.fps()
             );
             println!("latency: p50={p50:?} p95={p95:?} p99={p99:?} max={max:?}");
+            if report.stalled_sessions > 0 {
+                eprintln!(
+                    "WARNING: {} session(s) did not drain within the bounded join window — stats are live snapshots, a worker may be wedged",
+                    report.stalled_sessions
+                );
+            }
         }
         None => {
             println!(
@@ -400,6 +427,12 @@ fn serve_live(streams: Vec<VideoStream>, cfg: ServerConfig, adaptive: bool) -> R
         report.elapsed.as_secs_f64(),
         report.fps()
     );
+    if report.stalled_sessions > 0 {
+        eprintln!(
+            "WARNING: {} session(s) did not drain within the bounded join window — stats are live snapshots, a worker may be wedged",
+            report.stalled_sessions
+        );
+    }
     if adaptive {
         let count = |f: fn(&Action) -> bool| actions.iter().filter(|a| f(a)).count();
         println!(
@@ -757,5 +790,163 @@ fn cmd_xla(args: &Args) -> Result<()> {
         frames as f64 / dt
     );
     println!("(the native path is far faster at bank size 16 — that dispatch asymmetry IS the paper's thesis; see `cargo bench --bench xla_vs_native`)");
+    Ok(())
+}
+
+/// `track-serve` — the TCP front door over the wire protocol.
+fn cmd_track_serve(args: &Args) -> Result<()> {
+    use smalltrack::coordinator::{WireServer, WireServerConfig};
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7606");
+    let workers: usize = args.num("workers", 2usize)?;
+    let run_secs: f64 = args.num("run-secs", 0.0f64)?;
+    let mut cfg = WireServerConfig::default();
+    cfg.service.workers = workers;
+    cfg.service.session_defaults.sort_params = params_fast();
+    cfg.default_checkpoint_every = args.num("checkpoint-every", cfg.default_checkpoint_every)?;
+    let server = WireServer::bind(addr, cfg)?;
+    println!(
+        "track-serve listening on {} ({workers} workers, checkpoints every {} frames)",
+        server.addr(),
+        cfg.default_checkpoint_every
+    );
+    if run_secs > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(run_secs));
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let (metrics, wc) = server.shutdown();
+    println!(
+        "drained: sessions_opened={} reconnects={} replays={} dup_acks={} rejected_frames={} dirty_disconnects={} frames_done={}",
+        wc.sessions_opened,
+        wc.reconnects,
+        wc.replays,
+        wc.dup_acks,
+        wc.rejected_frames,
+        wc.dirty_disconnects,
+        metrics.frames_done
+    );
+    Ok(())
+}
+
+/// `netload` — replay synthetic streams over the wire and verify the
+/// recovery contract (ledger conservation + bit-identical tracks).
+fn cmd_netload(args: &Args) -> Result<()> {
+    use smalltrack::coordinator::faults::FaultPlan;
+    use smalltrack::coordinator::net::{
+        approx_upstream_bytes, detection_frames, netload_run, NetloadOptions,
+    };
+    let n_streams: usize = args.num("streams", 4usize)?;
+    let frames: u32 = args.num("frames", 80u32)?;
+    let seed: u64 = args.num("seed", 7u64)?;
+    let engine = args.engine()?;
+    let streams: Vec<Vec<Vec<Bbox>>> = (0..n_streams)
+        .map(|i| {
+            let cfg = SynthConfig::mot15(
+                &format!("net{i:02}"),
+                frames,
+                3 + (i as u32 % 5),
+                seed + i as u64,
+            );
+            detection_frames(&generate_sequence(&cfg).sequence)
+        })
+        .collect();
+    let mut opts = NetloadOptions::new(engine);
+    opts.seed = seed;
+    opts.checkpoint_every = args.num("checkpoint-every", opts.checkpoint_every)?;
+    opts.server.service.workers = args.num("workers", 2usize)?;
+    opts.server.service.session_defaults.sort_params = params_fast();
+    opts.remote = args.get("addr").map(|a| a.parse()).transpose().context("--addr: bad host:port")?;
+    match args.get("faults").unwrap_or("none") {
+        "none" => {}
+        "aggressive" => {
+            let cuts: usize = args.num("cuts", 3usize)?;
+            let span: u64 = streams.iter().map(|s| approx_upstream_bytes(s)).sum();
+            opts.faults = Some(FaultPlan::aggressive(seed, span, cuts));
+        }
+        other => bail!("--faults must be none|aggressive (got '{other}')"),
+    }
+    let faulted = opts.faults.is_some();
+    println!(
+        "netload: {n_streams} streams x {frames} frames over {} ({} engine, faults: {})",
+        opts.remote.map_or_else(|| "self-served loopback".into(), |a| a.to_string()),
+        engine.spec(),
+        if faulted { "aggressive" } else { "none" }
+    );
+    let out = netload_run(opts, &streams)?;
+    let l = &out.ledger;
+    let (p50, _, p99, _) = out.latency.summary();
+    println!(
+        "client: frames_sent={} acked={} resent={} rejected={} in_flight_at_close={} reconnects={} rows={}",
+        l.frames_sent, l.frames_acked, l.resent, l.rejected, l.in_flight_at_close, l.reconnects, l.rows_received
+    );
+    if let Some(c) = &out.server_counters {
+        println!(
+            "server: connections={} sessions={} reconnects={} replays={} dup_acks={} rejected_frames={} dirty_disconnects={}",
+            c.connections,
+            c.sessions_opened,
+            c.reconnects,
+            c.replays,
+            c.dup_acks,
+            c.rejected_frames,
+            c.dirty_disconnects
+        );
+    }
+    println!(
+        "wall={:.2}s sessions/s={:.2} push-to-poll p50={:.2}ms p99={:.2}ms bit_identical={} conserves={}",
+        out.wall.as_secs_f64(),
+        out.sessions_per_sec,
+        p50.as_secs_f64() * 1e3,
+        p99.as_secs_f64() * 1e3,
+        out.bit_identical,
+        l.conserves()
+    );
+    if let Some(path) = args.get("json") {
+        if path == "true" {
+            bail!("--json requires a <path> argument");
+        }
+        let sc = out.server_counters.clone().unwrap_or_default();
+        let json = format!(
+            "{{\"streams\": {}, \"frames_per_stream\": {}, \"engine\": \"{}\", \"faulted\": {}, \"frames_sent\": {}, \"frames_acked\": {}, \"resent\": {}, \"rejected\": {}, \"in_flight_at_close\": {}, \"client_reconnects\": {}, \"rows_received\": {}, \"server_reconnects\": {}, \"server_replays\": {}, \"dup_acks\": {}, \"rejected_frames\": {}, \"dirty_disconnects\": {}, \"wall_secs\": {:.6}, \"sessions_per_sec\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"bit_identical\": {}, \"conserves\": {}}}",
+            out.streams,
+            frames,
+            engine.spec(),
+            faulted,
+            l.frames_sent,
+            l.frames_acked,
+            l.resent,
+            l.rejected,
+            l.in_flight_at_close,
+            l.reconnects,
+            l.rows_received,
+            sc.reconnects,
+            sc.replays,
+            sc.dup_acks,
+            sc.rejected_frames,
+            sc.dirty_disconnects,
+            out.wall.as_secs_f64(),
+            out.sessions_per_sec,
+            p50.as_secs_f64() * 1e3,
+            p99.as_secs_f64() * 1e3,
+            out.bit_identical,
+            l.conserves()
+        );
+        std::fs::write(path, json)?;
+        println!("wrote netload report -> {path}");
+    }
+    if !l.conserves() {
+        bail!(
+            "frame-conservation ledger violated: {} sent != {} acked + {} rejected + {} in flight",
+            l.frames_sent,
+            l.frames_acked,
+            l.rejected,
+            l.in_flight_at_close
+        );
+    }
+    if !out.bit_identical {
+        bail!("wire tracks diverged from the in-process reference run");
+    }
+    println!("OK: ledger conserves and tracks are bit-identical to the in-process run");
     Ok(())
 }

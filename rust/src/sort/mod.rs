@@ -46,6 +46,6 @@ pub use kalman::{KalmanState, SortConstants};
 pub use phases::{Phase, PhaseStats, PhaseTimer};
 pub use quality::{evaluate, evaluate_engine, evaluate_sort, MotMetrics};
 pub use scratch::FrameScratch;
-pub use snapshot::{EngineState, TrackerSnapshot};
+pub use snapshot::{CheckpointCadence, EngineState, TrackerSnapshot};
 pub use sort::{Sort, SortParams, Track};
 pub use tracker::KalmanBoxTracker;

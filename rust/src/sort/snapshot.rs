@@ -93,11 +93,72 @@ pub struct EngineState {
     pub trackers: Vec<TrackerSnapshot>,
 }
 
+/// How often a long-running stream snapshots its engine into an
+/// [`EngineState`] checkpoint.
+///
+/// A checkpoint is the recovery anchor for disconnect/resume (the TCP
+/// front door restores a session's engine from its last checkpoint and
+/// replays only the frames after it), so the cadence trades export
+/// cost against replay length: checkpoint every `n` frames and a
+/// recovery replays at most `n - 1` frames. `disabled()` never
+/// checkpoints — recovery then means replaying the stream from the
+/// start, which is the universal fallback for backends that cannot
+/// export state at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointCadence {
+    /// Checkpoint period in frames; 0 = never.
+    every: u64,
+}
+
+impl CheckpointCadence {
+    /// Checkpoint after every `n` frames (`n == 0` means disabled).
+    pub fn every(n: u64) -> CheckpointCadence {
+        CheckpointCadence { every: n }
+    }
+
+    /// Never checkpoint.
+    pub fn disabled() -> CheckpointCadence {
+        CheckpointCadence { every: 0 }
+    }
+
+    /// Whether a checkpoint is due right after processing 1-based
+    /// frame `seq`.
+    pub fn is_due(&self, seq: u64) -> bool {
+        self.every != 0 && seq > 0 && seq % self.every == 0
+    }
+
+    /// The configured period (0 = disabled).
+    pub fn period(&self) -> u64 {
+        self.every
+    }
+}
+
+impl Default for CheckpointCadence {
+    fn default() -> Self {
+        CheckpointCadence::disabled()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sort::bbox::Bbox;
     use crate::sort::kalman::{CovarianceForm, SortConstants};
+
+    #[test]
+    fn cadence_due_points_are_exact_multiples() {
+        let c = CheckpointCadence::every(10);
+        assert!(!c.is_due(0));
+        assert!(!c.is_due(9));
+        assert!(c.is_due(10));
+        assert!(!c.is_due(11));
+        assert!(c.is_due(20));
+        assert_eq!(c.period(), 10);
+        let off = CheckpointCadence::disabled();
+        assert!((0..100).all(|s| !off.is_due(s)));
+        assert_eq!(off, CheckpointCadence::default());
+        assert_eq!(off, CheckpointCadence::every(0));
+    }
 
     #[test]
     fn tracker_round_trip_is_bit_exact() {

@@ -36,9 +36,11 @@ fn checked_in_baseline_matches_the_smoke_grid() {
     assert_eq!(got, want, "baseline cells drifted from ScenarioAxes::smoke_cells()");
     assert!(base.manifest.smoke);
     assert_eq!(base.manifest.tool, "smalltrack-lab");
-    // exactly the overload cell carries an SLO block
+    // exactly the overload cell carries an SLO block, and exactly the
+    // wire cell carries a wire block
     for c in &base.cells {
         assert_eq!(c.slo.is_some(), c.id.ends_with("-a2x"), "{}", c.id);
+        assert_eq!(c.wire.is_some(), c.id.ends_with("-wire"), "{}", c.id);
     }
 }
 
@@ -99,6 +101,18 @@ fn lab_run_smoke_emits_schema_valid_report_and_gates_against_baseline() {
     assert!(s.admission > 1.0 && s.sustainable_fps > 0.0 && s.deadline_ms > 0.0);
     assert_eq!(s.delivered + s.dropped_queue + s.dropped_deadline, c.total_frames, "{}", c.id);
     assert!((0.0..=1.0).contains(&s.deadline_hit_ratio), "{}", c.id);
+
+    // the wire cell ran the real TCP loopback path: a conserved frame
+    // ledger, every frame acknowledged, and tracks bit-identical to
+    // the in-process reference run
+    let wire_cells: Vec<_> = report.cells.iter().filter(|c| c.wire.is_some()).collect();
+    assert_eq!(wire_cells.len(), 1, "smoke suite carries exactly one wire cell");
+    let (c, w) = (wire_cells[0], wire_cells[0].wire.unwrap());
+    assert!(w.conserves(), "{}: {w:?}", c.id);
+    assert_eq!(w.frames_sent, c.total_frames, "{}", c.id);
+    assert_eq!(w.frames_acked, c.total_frames, "{}", c.id);
+    assert!(w.bit_identical, "{}: wire tracks diverged from the in-process run", c.id);
+    assert!(w.sessions_per_sec > 0.0 && w.p99_ms >= w.p50_ms, "{}", c.id);
 
     // --- lab gate <checked-in baseline> <fresh run> passes (floor
     // baseline: any healthy build clears it at the default margins)

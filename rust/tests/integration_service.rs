@@ -348,6 +348,7 @@ fn frame_conservation_holds_under_random_slo_schedules() {
                         engine,
                         sort_params: params(),
                         slo: Slo { deadline, priority, mota_budget: 0.05 },
+                        ..Default::default()
                     })
                     .expect("open")
                 })

@@ -1,0 +1,191 @@
+//! Wire front-door integration: the recovery contract end to end.
+//!
+//! The contract under test (the robustness tentpole's acceptance
+//! criteria): after mid-stream disconnects and corrupted frames, the
+//! reconnect-and-replay protocol must deliver tracks **bit-identical**
+//! (`f64::to_bits`) to an in-process run of the same engine, and the
+//! client's frame-conservation ledger must balance
+//! (`frames_sent == frames_acked + rejected + in_flight_at_close`).
+//! Covered at three levels: an explicit deterministic fault schedule
+//! with three mid-stream cuts plus corruption in both directions, the
+//! seeded `FaultPlan::aggressive` schedule over multiple streams, and
+//! the `netload` / `track-serve` CLI binaries over real loopback TCP.
+
+use smalltrack::coordinator::faults::{DirectionPlan, FaultPlan};
+use smalltrack::coordinator::net::{
+    approx_upstream_bytes, detection_frames, netload_run, NetloadOptions,
+};
+use smalltrack::data::synth::{generate_sequence, SynthConfig};
+use smalltrack::engine::EngineKind;
+use smalltrack::sort::Bbox;
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+
+fn synth_stream(name: &str, frames: u32, objects: u32, seed: u64) -> Vec<Vec<Bbox>> {
+    let cfg = SynthConfig::mot15(name, frames, objects, seed);
+    detection_frames(&generate_sequence(&cfg).sequence)
+}
+
+#[test]
+fn three_cuts_and_corruption_recover_bit_identically() {
+    // One stream, and a hand-placed schedule instead of the seeded
+    // one, so every fault is *mid-stream* by construction: three cuts
+    // at 25/50/75% of the upstream byte budget (the handshake and the
+    // tail are clear of them) plus corrupted bytes in both directions.
+    let frames = synth_stream("wire-int-cuts", 120, 6, 11);
+    let approx = approx_upstream_bytes(&frames);
+    let plan = FaultPlan {
+        to_server: DirectionPlan {
+            corrupt_at: vec![approx * 35 / 100, approx * 65 / 100, approx * 85 / 100],
+            cut_at: vec![approx / 4, approx / 2, approx * 3 / 4],
+            delay_at: vec![],
+        },
+        // acks + track rows make the downstream stream the bigger one;
+        // offsets sized accordingly
+        to_client: DirectionPlan {
+            corrupt_at: vec![approx / 2, approx],
+            cut_at: vec![],
+            delay_at: vec![],
+        },
+    };
+    let mut opts = NetloadOptions::new(EngineKind::Batch);
+    opts.seed = 11;
+    opts.checkpoint_every = 8;
+    opts.faults = Some(plan);
+    let out = netload_run(opts, std::slice::from_ref(&frames)).expect("netload run");
+
+    // the acceptance criteria: bit-identity and a conserved ledger
+    assert!(out.bit_identical, "tracks diverged from the in-process reference run");
+    let l = &out.ledger;
+    assert!(l.conserves(), "{l:?}");
+    // every frame eventually got through — faults cost retries, never
+    // frames (the per-frame retry budget is far above this schedule)
+    assert_eq!(l.frames_sent, 120, "{l:?}");
+    assert_eq!(l.frames_acked, 120, "{l:?}");
+    assert_eq!(l.rejected, 0, "{l:?}");
+    assert_eq!(l.in_flight_at_close, 0, "{l:?}");
+    // three mid-stream cuts force at least three reconnect+resume
+    // cycles (corruption-poisoned connections add more)
+    assert!(l.reconnects >= 3, "expected >= 3 reconnects, got {}", l.reconnects);
+    assert!(l.resent > 0, "recovery must have replayed unacked frames over the wire");
+
+    let sc = out.server_counters.as_ref().expect("self-served run reports server counters");
+    assert!(sc.dirty_disconnects >= 3, "{sc:?}");
+    assert!(sc.reconnects >= 3, "{sc:?}");
+    assert!(sc.replays >= 1, "resume must replay frames past the last checkpoint: {sc:?}");
+    assert!(sc.rejected_frames >= 1, "corrupted upstream bytes must be rejected: {sc:?}");
+    assert_eq!(sc.sessions_opened, 1, "one logical session across every reconnect: {sc:?}");
+}
+
+#[test]
+fn aggressive_seeded_faults_over_multiple_streams_conserve_and_match() {
+    let streams: Vec<Vec<Vec<Bbox>>> = (0..3)
+        .map(|i| synth_stream(&format!("wire-int-aggr{i}"), 60, 4 + i, 23 + i as u64))
+        .collect();
+    let span: u64 = streams.iter().map(|s| approx_upstream_bytes(s)).sum();
+    let mut opts = NetloadOptions::new(EngineKind::Batch);
+    opts.seed = 23;
+    opts.checkpoint_every = 8;
+    opts.server.service.workers = 2;
+    opts.faults = Some(FaultPlan::aggressive(23, span, 4));
+    let out = netload_run(opts, &streams).expect("netload run");
+
+    assert!(out.bit_identical, "tracks diverged under the aggressive schedule");
+    assert!(out.ledger.conserves(), "{:?}", out.ledger);
+    assert_eq!(out.ledger.frames_sent, 180, "{:?}", out.ledger);
+    assert_eq!(out.ledger.frames_acked, 180, "{:?}", out.ledger);
+    for (i, l) in out.per_stream.iter().enumerate() {
+        assert!(l.conserves(), "stream {i}: {l:?}");
+        assert_eq!(l.frames_sent, 60, "stream {i}: {l:?}");
+    }
+    assert!(out.ledger.reconnects >= 1, "{:?}", out.ledger);
+    let sc = out.server_counters.as_ref().unwrap();
+    assert_eq!(sc.sessions_opened, 3, "one logical session per stream: {sc:?}");
+    assert_eq!(out.rows.len(), 3);
+    assert!(out.latency.count() > 0, "push-to-poll latency must be sampled");
+}
+
+// --- CLI level -----------------------------------------------------------
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_smalltrack"))
+}
+
+#[test]
+fn netload_cli_enforces_the_contract_and_writes_the_report() {
+    let dir = std::env::temp_dir().join(format!("smalltrack_wire_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let json = dir.join("wire.json");
+    let out = bin()
+        .args(["netload", "--streams", "2", "--frames", "50", "--engine", "batch"])
+        .args(["--faults", "aggressive", "--cuts", "3", "--seed", "9", "--json"])
+        .arg(&json)
+        .output()
+        .expect("spawn netload");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "netload failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("OK: ledger conserves"), "{stdout}");
+
+    let report = smalltrack::data::json::parse(&std::fs::read_to_string(&json).unwrap())
+        .expect("wire report is valid JSON");
+    assert_eq!(report.req("streams").num(), 2.0);
+    assert_eq!(report.req("frames_per_stream").num(), 50.0);
+    assert_eq!(report.req("faulted").as_bool(), Some(true));
+    assert_eq!(report.req("bit_identical").as_bool(), Some(true));
+    assert_eq!(report.req("conserves").as_bool(), Some(true));
+    assert_eq!(report.req("frames_sent").num(), 100.0);
+    assert_eq!(report.req("frames_acked").num(), 100.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kills the serve child even when an assert unwinds.
+struct KillOnDrop(Child);
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn netload_cli_reaches_a_track_serve_process_over_loopback() {
+    // real two-process deployment: `track-serve` on an OS-assigned
+    // port, `netload --addr` pointed at it
+    let child = bin()
+        .args(["track-serve", "--addr", "127.0.0.1:0", "--workers", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn track-serve");
+    let mut guard = KillOnDrop(child);
+    let stdout = guard.0.stdout.take().expect("piped stdout");
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let banner = lines
+        .next()
+        .expect("track-serve printed nothing")
+        .expect("read track-serve banner");
+    // "track-serve listening on 127.0.0.1:PORT (...)"
+    let addr = banner
+        .split_whitespace()
+        .find(|w| w.starts_with("127.0.0.1:"))
+        .unwrap_or_else(|| panic!("no address in banner: {banner}"))
+        .to_string();
+    assert_ne!(addr, "127.0.0.1:0", "server must report the real port");
+
+    let out = bin()
+        .args(["netload", "--streams", "2", "--frames", "40", "--engine", "batch", "--addr"])
+        .arg(&addr)
+        .output()
+        .expect("spawn netload");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "netload vs track-serve failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("OK: ledger conserves"), "{stdout}");
+}
