@@ -2,7 +2,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts test test-nocounters bench bench-lanes fmt clippy lab-smoke lab-baseline wire-smoke
+.PHONY: artifacts test test-nocounters bench bench-lanes fmt clippy lab-smoke lab-baseline wire-smoke ingest-smoke
 
 # Lower the JAX/Pallas tracker-bank graphs to HLO text + export the
 # golden parity/track JSONs and the manifest (requires python with jax;
@@ -39,6 +39,23 @@ lab-smoke:
 wire-smoke:
 	cargo run --release -- netload --streams 4 --frames 80 --engine batch \
 		--faults aggressive --cuts 4 --seed 7 --json wire_report.json
+
+# The CI ingest path: the seeded parser fuzzer, then the convert CLI
+# re-serializes the checked-in fixtures onto themselves (byte identity
+# pinned by `git diff --exit-code`), then a real tracked+scored run of
+# `track --input` over the same fixtures.
+INGEST_FIXTURES = rust/tests/fixtures/ingest
+ingest-smoke:
+	cargo run --release -- ingest-fuzz --iters 10000 --seed 7
+	cargo run --release -- convert --input $(INGEST_FIXTURES)/tiny.det.txt \
+		--to coco --out $(INGEST_FIXTURES)/tiny.coco.json
+	cargo run --release -- convert --input $(INGEST_FIXTURES)/tiny.coco.json \
+		--to mot --out $(INGEST_FIXTURES)/tiny.det.txt
+	cargo run --release -- convert --input $(INGEST_FIXTURES)/tiny.gt.txt \
+		--to mot-gt --out $(INGEST_FIXTURES)/tiny.gt.txt
+	git diff --exit-code $(INGEST_FIXTURES)
+	cargo run --release -- track --input $(INGEST_FIXTURES)/tiny.det.txt \
+		--format auto --gt $(INGEST_FIXTURES)/tiny.gt.txt --engine batch
 
 # Regenerate the checked-in baseline. The measured numbers come from
 # THIS machine — review before committing and lower the fps medians to

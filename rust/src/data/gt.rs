@@ -5,61 +5,72 @@
 //! this format so external MOT tooling (and our `quality` module) can
 //! score any tracker output against the same files.
 
+use super::ingest::{self, IrEntry, IrFrame, IrSequence, ParseMode, SourceFormat};
 use super::synth::{GtTrack, SynthSequence};
 use crate::sort::Bbox;
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
 /// Write ground-truth trajectories as MOT `gt.txt`.
+///
+/// Rows go through the canonical [`ingest::write_mot_gt`] writer:
+/// frame-major order, shortest-roundtrip numbers (no `{:.2}`
+/// truncation), per-entry `conf,class,visibility` preserved (the
+/// synth [`GtTrack`] carries none, so they take the MOT defaults
+/// `1,1,1`). gt → IR → gt re-serialization is byte-stable.
 pub fn write_gt_file(tracks: &[GtTrack], path: &Path) -> anyhow::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    // MOT gt files are frame-major sorted
+    // MOT gt files are frame-major sorted, ids 1-based on disk
     let mut rows: Vec<(u32, u64, Bbox)> = Vec::new();
     for t in tracks {
         for (f, b) in &t.boxes {
-            rows.push((*f, t.id + 1, *b)); // 1-based ids on disk
+            rows.push((*f, t.id + 1, *b));
         }
     }
     rows.sort_by_key(|r| (r.0, r.1));
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    let max_frame = rows.iter().map(|r| r.0).max().unwrap_or(0);
+    let mut frames: Vec<IrFrame> =
+        (1..=max_frame).map(|i| IrFrame { index: i, entries: Vec::new() }).collect();
     for (frame, id, b) in rows {
-        writeln!(
-            w,
-            "{},{},{:.2},{:.2},{:.2},{:.2},1,1,1.0",
-            frame,
-            id,
-            b.x1,
-            b.y1,
-            b.w(),
-            b.h()
-        )?;
+        frames[(frame - 1) as usize].entries.push(IrEntry {
+            track_id: Some(id),
+            ltwh: [b.x1, b.y1, b.w(), b.h()],
+            score: None,
+            class: None,
+            visibility: None,
+        });
     }
+    let seq = IrSequence {
+        name: "gt".to_string(),
+        source: SourceFormat::MotGt,
+        image_size: None,
+        frames,
+    };
+    std::fs::write(path, ingest::write_mot_gt(&seq))?;
     Ok(())
 }
 
-/// Read a MOT `gt.txt` back into trajectories.
+/// Read a MOT `gt.txt` back into trajectories (delegates parsing to
+/// [`ingest::parse_mot_gt`]; conf/class/visibility live in the IR for
+/// callers that need them — [`GtTrack`] keeps only the boxes).
 pub fn read_gt_file(path: &Path) -> anyhow::Result<Vec<GtTrack>> {
-    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let ir = ingest::parse_mot_gt(&text, "gt", ParseMode::Lenient)
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
     let mut by_id: BTreeMap<u64, Vec<(u32, Bbox)>> = BTreeMap::new();
-    for (lineno, line) in std::io::BufReader::new(file).lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
+    for f in &ir.frames {
+        for e in &f.entries {
+            let id = match e.track_id {
+                Some(0) | None => {
+                    bail!("{path:?}: frame {}: gt rows need a 1-based track id", f.index)
+                }
+                Some(id) => id - 1, // 0-based internally
+            };
+            by_id.entry(id).or_default().push((f.index, e.bbox()));
         }
-        let f: Vec<&str> = line.split(',').map(str::trim).collect();
-        if f.len() < 6 {
-            bail!("{path:?}:{}: expected >=6 fields", lineno + 1);
-        }
-        let frame: u32 = f[0].parse::<f64>()? as u32;
-        let id: u64 = f[1].parse::<f64>()? as u64;
-        let (l, t, w, h): (f64, f64, f64, f64) =
-            (f[2].parse()?, f[3].parse()?, f[4].parse()?, f[5].parse()?);
-        by_id.entry(id - 1).or_default().push((frame, Bbox::from_ltwh(l, t, w, h)));
     }
     Ok(by_id
         .into_iter()
@@ -103,9 +114,23 @@ mod tests {
         assert_eq!(got.boxes.len(), orig.boxes.len());
         for ((f1, b1), (f2, b2)) in orig.boxes.iter().zip(&got.boxes) {
             assert_eq!(f1, f2);
-            assert!((b1.x1 - b2.x1).abs() < 0.011); // %.2f quantization
-            assert!((b1.y2 - b2.y2).abs() < 0.021);
+            // shortest-roundtrip numbers: the old %.2f writer only
+            // managed 0.011 here, now l/t/w/h survive bit-exactly
+            assert_eq!(b1.x1.to_bits(), b2.x1.to_bits());
+            assert_eq!(b1.y1.to_bits(), b2.y1.to_bits());
+            assert!((b1.y2 - b2.y2).abs() < 1e-12); // y2 re-derived from t + h
         }
+    }
+
+    #[test]
+    fn gt_file_reserializes_byte_identically_through_the_ir() {
+        use crate::data::ingest::{self, ParseMode};
+        let synth = generate_sequence(&SynthConfig::mot15("GTB", 40, 4, 9));
+        let p = tmp("gt_bytes.txt");
+        write_gt_file(&synth.ground_truth, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let ir = ingest::parse_mot_gt(&text, "GTB", ParseMode::Strict).unwrap();
+        assert_eq!(ingest::write_mot_gt(&ir), text, "gt -> IR -> gt must be byte-stable");
     }
 
     #[test]

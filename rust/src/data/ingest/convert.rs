@@ -1,0 +1,611 @@
+//! Parsers and byte-stable writers: IR ↔ MOT text, IR ↔ COCO JSON.
+//!
+//! Every writer is *canonical*: rows are frame-major, numbers use
+//! Rust's shortest-roundtrip `Display` (never exponent form), JSON
+//! keys are sorted and pretty-printed by [`crate::data::json`]. A
+//! canonical document therefore parses and re-serializes to the exact
+//! same bytes — `write(parse(write(ir))) == write(ir)` holds for every
+//! parseable input (the fuzz harness pins this), and files produced by
+//! these writers round-trip byte-identically. Because the IR stores
+//! boxes as on-disk `[l, t, w, h]` (see [`super::ir`]), no float is
+//! ever re-derived between parse and write.
+//!
+//! Parsing has two modes. [`ParseMode::Lenient`] accepts everything
+//! the pre-ingest `data/mot.rs` reader accepted (fractional frame
+//! numbers, unordered rows, non-finite box fields) and is what synth
+//! round-trips use; it still refuses the inputs that used to crash
+//! that reader (frame index `< 1`, frame index past
+//! [`MAX_FRAME_INDEX`]). [`ParseMode::Strict`] is for untrusted files:
+//! integer-only frame indices, sorted rows, finite fields, and a full
+//! [`super::validate`] pass whose error-severity findings fail the
+//! parse.
+
+use super::ir::{IrEntry, IrFrame, IrSequence, SourceFormat, MAX_FRAME_INDEX};
+use super::IngestError;
+use crate::data::json::{self, Value};
+
+/// How forgiving parsing is (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParseMode {
+    /// Legacy-compatible: accept what `read_det_file` always accepted.
+    Lenient,
+    /// Untrusted-input mode: reject non-finite/degenerate data,
+    /// unsorted rows, non-integer frames; runs [`super::validate`].
+    Strict,
+}
+
+/// Shortest-roundtrip number text (`format!("{x}")`): `parse(fmt(x))`
+/// recovers `x` bit-exactly, integral values print without a trailing
+/// `.0`, and exponent form is never used. Non-finite values print as
+/// `NaN` / `inf` / `-inf`, which Rust's `f64` parser reads back.
+fn fmt_num(x: f64) -> String {
+    format!("{x}")
+}
+
+/// Disk form of an optional track id (`None` ⇔ `-1`).
+fn fmt_id(id: Option<u64>) -> String {
+    match id {
+        Some(i) => i.to_string(),
+        None => "-1".to_string(),
+    }
+}
+
+/// Validate a 1-based frame index parsed as `f64` and truncate.
+fn frame_from_f64(v: f64, lineno: usize) -> Result<u32, IngestError> {
+    if !v.is_finite() {
+        return Err(IngestError::at(lineno, format!("non-finite frame index '{v}'")));
+    }
+    if v < 1.0 {
+        return Err(IngestError::at(lineno, format!("frame index {v} < 1 (frames are 1-based)")));
+    }
+    if v > MAX_FRAME_INDEX as f64 {
+        return Err(IngestError::at(
+            lineno,
+            format!("frame index {v} exceeds the cap of {MAX_FRAME_INDEX}"),
+        ));
+    }
+    Ok(v as u32)
+}
+
+fn densify(
+    name: &str,
+    source: SourceFormat,
+    rows: Vec<(u32, IrEntry)>,
+    max_frame: u32,
+) -> IrSequence {
+    let mut frames: Vec<IrFrame> = (1..=max_frame)
+        .map(|i| IrFrame { index: i, entries: Vec::new() })
+        .collect();
+    for (frame, entry) in rows {
+        frames[(frame - 1) as usize].entries.push(entry);
+    }
+    IrSequence { name: name.to_string(), source, image_size: None, frames }
+}
+
+/// Run the validation pass and fail on error-severity findings
+/// (strict-mode epilogue; warnings stay non-fatal).
+fn reject_invalid(seq: IrSequence) -> Result<IrSequence, IngestError> {
+    let report = super::validate::validate(&seq);
+    if report.has_errors() {
+        let first = report
+            .issues
+            .iter()
+            .find(|i| i.severity == super::validate::Severity::Error)
+            .expect("has_errors implies an error issue");
+        return Err(IngestError::whole(format!(
+            "validation failed ({}): {first}",
+            report.summary()
+        )));
+    }
+    Ok(seq)
+}
+
+/// Shared MOT CSV parser; `gt` selects det.txt vs gt.txt column rules.
+fn parse_mot(
+    text: &str,
+    name: &str,
+    gt: bool,
+    mode: ParseMode,
+) -> Result<IrSequence, IngestError> {
+    let source = if gt { SourceFormat::MotGt } else { SourceFormat::MotDet };
+    let min_fields = match (gt, mode) {
+        (false, _) => 7,               // frame,id,l,t,w,h,score
+        (true, ParseMode::Lenient) => 6, // conf/class/visibility optional
+        (true, ParseMode::Strict) => 9,
+    };
+    let mut rows: Vec<(u32, IrEntry)> = Vec::new();
+    let mut max_frame = 0u32;
+    let mut last_frame = 0u32;
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() < min_fields {
+            return Err(IngestError::at(
+                lineno,
+                format!("expected >={min_fields} fields, got {}", fields.len()),
+            ));
+        }
+        let num = |idx: usize, what: &str| -> Result<f64, IngestError> {
+            let v: f64 = fields[idx]
+                .parse()
+                .map_err(|_| IngestError::at(lineno, format!("bad {what} '{}'", fields[idx])))?;
+            if mode == ParseMode::Strict && !v.is_finite() {
+                return Err(IngestError::at(lineno, format!("non-finite {what} '{}'", fields[idx])));
+            }
+            Ok(v)
+        };
+        let frame = match mode {
+            ParseMode::Lenient => frame_from_f64(num(0, "frame index")?, lineno)?,
+            ParseMode::Strict => {
+                let n: u32 = fields[0].parse().map_err(|_| {
+                    IngestError::at(lineno, format!("non-integer frame index '{}'", fields[0]))
+                })?;
+                frame_from_f64(n as f64, lineno)?
+            }
+        };
+        if mode == ParseMode::Strict && frame < last_frame {
+            return Err(IngestError::at(
+                lineno,
+                format!("unsorted frames: {frame} after {last_frame}"),
+            ));
+        }
+        last_frame = last_frame.max(frame);
+        let track_id = match mode {
+            ParseMode::Lenient => {
+                // det files never errored on the id column historically;
+                // gt files always required a numeric id
+                match fields[1].parse::<f64>() {
+                    Ok(v) if v.is_finite() && v >= 0.0 => Some(v as u64),
+                    Ok(_) => None,
+                    Err(_) if gt => {
+                        return Err(IngestError::at(
+                            lineno,
+                            format!("bad track id '{}'", fields[1]),
+                        ))
+                    }
+                    Err(_) => None,
+                }
+            }
+            ParseMode::Strict => {
+                let v: i64 = fields[1].parse().map_err(|_| {
+                    IngestError::at(lineno, format!("non-integer track id '{}'", fields[1]))
+                })?;
+                match v {
+                    -1 => None,
+                    v if v >= 0 => Some(v as u64),
+                    v => {
+                        return Err(IngestError::at(lineno, format!("negative track id {v}")))
+                    }
+                }
+            }
+        };
+        let ltwh = [num(2, "left")?, num(3, "top")?, num(4, "width")?, num(5, "height")?];
+        let score = if fields.len() > 6 {
+            match mode {
+                ParseMode::Strict => Some(num(6, if gt { "conf" } else { "score" })?),
+                ParseMode::Lenient if gt => fields[6].parse::<f64>().ok(),
+                ParseMode::Lenient => Some(num(6, "score")?),
+            }
+        } else {
+            None
+        };
+        let class = if gt && fields.len() > 7 {
+            match mode {
+                ParseMode::Strict => Some(fields[7].parse::<i64>().map_err(|_| {
+                    IngestError::at(lineno, format!("non-integer class '{}'", fields[7]))
+                })?),
+                ParseMode::Lenient => fields[7].parse::<f64>().ok().map(|v| v as i64),
+            }
+        } else {
+            None
+        };
+        let visibility = if gt && fields.len() > 8 {
+            match mode {
+                ParseMode::Strict => Some(num(8, "visibility")?),
+                ParseMode::Lenient => fields[8].parse::<f64>().ok(),
+            }
+        } else {
+            None
+        };
+        max_frame = max_frame.max(frame);
+        rows.push((frame, IrEntry { track_id, ltwh, score, class, visibility }));
+    }
+    let seq = densify(name, source, rows, max_frame);
+    match mode {
+        ParseMode::Lenient => Ok(seq),
+        ParseMode::Strict => reject_invalid(seq),
+    }
+}
+
+/// Parse MOT Challenge `det.txt` text.
+pub fn parse_mot_det(text: &str, name: &str, mode: ParseMode) -> Result<IrSequence, IngestError> {
+    parse_mot(text, name, false, mode)
+}
+
+/// Parse MOT Challenge `gt.txt` text (preserves conf/class/visibility).
+pub fn parse_mot_gt(text: &str, name: &str, mode: ParseMode) -> Result<IrSequence, IngestError> {
+    parse_mot(text, name, true, mode)
+}
+
+/// Canonical MOT `det.txt` writer:
+/// `frame,id,l,t,w,h,score,-1,-1,-1`, frame-major, shortest-roundtrip
+/// numbers (`id` is `-1` for entries without identity, score defaults
+/// to `1`).
+pub fn write_mot_det(seq: &IrSequence) -> String {
+    let mut out = String::new();
+    for f in &seq.frames {
+        for e in &f.entries {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},-1,-1,-1\n",
+                f.index,
+                fmt_id(e.track_id),
+                fmt_num(e.ltwh[0]),
+                fmt_num(e.ltwh[1]),
+                fmt_num(e.ltwh[2]),
+                fmt_num(e.ltwh[3]),
+                fmt_num(e.score.unwrap_or(1.0)),
+            ));
+        }
+    }
+    out
+}
+
+/// Canonical MOT `gt.txt` writer:
+/// `frame,id,l,t,w,h,conf,class,visibility` with per-entry values
+/// preserved (defaults `1,1,1` only where the IR has `None`).
+pub fn write_mot_gt(seq: &IrSequence) -> String {
+    let mut out = String::new();
+    for f in &seq.frames {
+        for e in &f.entries {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{}\n",
+                f.index,
+                fmt_id(e.track_id),
+                fmt_num(e.ltwh[0]),
+                fmt_num(e.ltwh[1]),
+                fmt_num(e.ltwh[2]),
+                fmt_num(e.ltwh[3]),
+                fmt_num(e.score.unwrap_or(1.0)),
+                e.class.unwrap_or(1),
+                fmt_num(e.visibility.unwrap_or(1.0)),
+            ));
+        }
+    }
+    out
+}
+
+/// Extract a 1-based frame index from a JSON number.
+fn frame_from_value(v: Option<&Value>, what: &str) -> Result<u32, IngestError> {
+    let n = v
+        .and_then(Value::as_num)
+        .ok_or_else(|| IngestError::whole(format!("{what}: missing or non-numeric")))?;
+    if n.fract() != 0.0 {
+        return Err(IngestError::whole(format!("{what}: non-integer value {n}")));
+    }
+    frame_from_f64(n, 0).map_err(|e| IngestError::whole(format!("{what}: {}", e.msg)))
+}
+
+/// Parse COCO-detection JSON: either a full object with `images` /
+/// `annotations` arrays or a bare array of annotation objects. The
+/// image id doubles as the 1-based frame index (the writer emits one
+/// image per frame, so this is lossless for video-style data).
+pub fn parse_coco(text: &str, name: &str, mode: ParseMode) -> Result<IrSequence, IngestError> {
+    let v = json::parse(text).map_err(|e| IngestError::whole(e.to_string()))?;
+    let (images, annotations): (Option<&[Value]>, &[Value]) = match &v {
+        Value::Obj(_) => {
+            let anns = v
+                .get("annotations")
+                .ok_or_else(|| IngestError::whole("COCO object lacks an 'annotations' key"))?
+                .as_arr()
+                .ok_or_else(|| IngestError::whole("'annotations' is not an array"))?;
+            let imgs = match v.get("images") {
+                Some(iv) => Some(
+                    iv.as_arr()
+                        .ok_or_else(|| IngestError::whole("'images' is not an array"))?,
+                ),
+                None => None,
+            };
+            (imgs, anns)
+        }
+        Value::Arr(a) => (None, a.as_slice()),
+        _ => {
+            return Err(IngestError::whole(
+                "top-level JSON is neither a COCO object nor an annotation array",
+            ))
+        }
+    };
+    let mut max_frame = 0u32;
+    let mut image_size: Option<(f64, f64)> = None;
+    let mut sizes_agree = true;
+    if let Some(imgs) = images {
+        let mut seen: Vec<u32> = Vec::new();
+        for (i, img) in imgs.iter().enumerate() {
+            let id = frame_from_value(img.get("id"), &format!("images[{i}].id"))?;
+            if seen.contains(&id) {
+                return Err(IngestError::whole(format!("duplicate image id {id}")));
+            }
+            seen.push(id);
+            max_frame = max_frame.max(id);
+            if let (Some(w), Some(h)) = (
+                img.get("width").and_then(Value::as_num),
+                img.get("height").and_then(Value::as_num),
+            ) {
+                match image_size {
+                    None => image_size = Some((w, h)),
+                    Some(prev) if prev != (w, h) => sizes_agree = false,
+                    Some(_) => {}
+                }
+            }
+        }
+    }
+    let mut rows: Vec<(u32, IrEntry)> = Vec::with_capacity(annotations.len());
+    for (i, ann) in annotations.iter().enumerate() {
+        if !matches!(ann, Value::Obj(_)) {
+            return Err(IngestError::whole(format!("annotations[{i}] is not an object")));
+        }
+        let frame = frame_from_value(ann.get("image_id"), &format!("annotations[{i}].image_id"))?;
+        let bbox = ann
+            .get("bbox")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| IngestError::whole(format!("annotations[{i}].bbox: missing array")))?;
+        if bbox.len() != 4 {
+            return Err(IngestError::whole(format!(
+                "annotations[{i}].bbox: expected 4 numbers, got {}",
+                bbox.len()
+            )));
+        }
+        let mut ltwh = [0.0f64; 4];
+        for (k, v) in bbox.iter().enumerate() {
+            ltwh[k] = v.as_num().ok_or_else(|| {
+                IngestError::whole(format!("annotations[{i}].bbox[{k}]: not a number"))
+            })?;
+        }
+        let opt_num = |key: &str| -> Result<Option<f64>, IngestError> {
+            match ann.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_num().ok_or_else(|| {
+                    IngestError::whole(format!("annotations[{i}].{key}: not a number"))
+                })?)),
+            }
+        };
+        let score = opt_num("score")?;
+        let class = match opt_num("category_id")? {
+            Some(c) if c.fract() == 0.0 => Some(c as i64),
+            Some(c) => {
+                return Err(IngestError::whole(format!(
+                    "annotations[{i}].category_id: non-integer value {c}"
+                )))
+            }
+            None => None,
+        };
+        let track_id = match opt_num("track_id")? {
+            Some(t) if t.fract() == 0.0 && t >= 0.0 => Some(t as u64),
+            Some(t) => {
+                return Err(IngestError::whole(format!(
+                    "annotations[{i}].track_id: not a non-negative integer ({t})"
+                )))
+            }
+            None => None,
+        };
+        max_frame = max_frame.max(frame);
+        rows.push((frame, IrEntry { track_id, ltwh, score, class, visibility: None }));
+    }
+    let mut seq = densify(name, SourceFormat::Coco, rows, max_frame);
+    if sizes_agree {
+        seq.image_size = image_size;
+    }
+    match mode {
+        ParseMode::Lenient => Ok(seq),
+        ParseMode::Strict => reject_invalid(seq),
+    }
+}
+
+/// Canonical COCO writer: one `images` entry per frame (id == frame
+/// index, plus width/height when known), annotations frame-major with
+/// running ids, `categories` derived from the classes present. Keys
+/// are sorted and the output is pretty-printed — byte-stable.
+///
+/// Non-finite IR values would serialize as JSON `null` (the grammar
+/// has no NaN) and not reparse; run [`super::validate`] first when the
+/// IR came from a lenient parse.
+pub fn write_coco(seq: &IrSequence) -> String {
+    let mut images = Vec::with_capacity(seq.frames.len());
+    for f in &seq.frames {
+        let mut pairs = vec![("id", Value::from_u64(f.index as u64))];
+        if let Some((w, h)) = seq.image_size {
+            pairs.push(("width", Value::Num(w)));
+            pairs.push(("height", Value::Num(h)));
+        }
+        images.push(Value::obj(pairs));
+    }
+    let mut annotations = Vec::new();
+    let mut classes: Vec<i64> = Vec::new();
+    let mut next_id = 1u64;
+    for f in &seq.frames {
+        for e in &f.entries {
+            let mut pairs = vec![
+                ("id", Value::from_u64(next_id)),
+                ("image_id", Value::from_u64(f.index as u64)),
+                ("bbox", Value::Arr(e.ltwh.iter().map(|&v| Value::Num(v)).collect())),
+            ];
+            if let Some(s) = e.score {
+                pairs.push(("score", Value::Num(s)));
+            }
+            if let Some(c) = e.class {
+                pairs.push(("category_id", Value::Num(c as f64)));
+                if !classes.contains(&c) {
+                    classes.push(c);
+                }
+            }
+            if let Some(t) = e.track_id {
+                pairs.push(("track_id", Value::from_u64(t)));
+            }
+            annotations.push(Value::obj(pairs));
+            next_id += 1;
+        }
+    }
+    classes.sort_unstable();
+    let categories = classes
+        .into_iter()
+        .map(|c| {
+            Value::obj(vec![
+                ("id", Value::Num(c as f64)),
+                ("name", Value::Str(format!("class-{c}"))),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("annotations", Value::Arr(annotations)),
+        ("categories", Value::Arr(categories)),
+        ("images", Value::Arr(images)),
+    ])
+    .to_json_pretty()
+}
+
+/// Parse `text` as the given concrete format.
+pub fn parse_str(
+    text: &str,
+    format: SourceFormat,
+    name: &str,
+    mode: ParseMode,
+) -> Result<IrSequence, IngestError> {
+    match format {
+        SourceFormat::MotDet => parse_mot_det(text, name, mode),
+        SourceFormat::MotGt => parse_mot_gt(text, name, mode),
+        SourceFormat::Coco => parse_coco(text, name, mode),
+    }
+}
+
+/// Serialize `seq` as the given target format (the sequence's own
+/// `source` is provenance only; any IR writes as any format).
+pub fn write_str(seq: &IrSequence, format: SourceFormat) -> String {
+    match format {
+        SourceFormat::MotDet => write_mot_det(seq),
+        SourceFormat::MotGt => write_mot_gt(seq),
+        SourceFormat::Coco => write_coco(seq),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DET: &str = "1,-1,10.5,20,30,40,0.9,-1,-1,-1\n\
+                       1,-1,50,60,7.25,8,0.5,-1,-1,-1\n\
+                       3,-1,1,2,3,4,1,-1,-1,-1\n";
+    const GT: &str = "1,1,10.5,20,30,40,1,1,1\n\
+                      1,2,50,60,7.25,8,1,7,0.75\n\
+                      2,1,11,21,30,40,0,1,0.5\n";
+
+    #[test]
+    fn mot_det_round_trip_is_byte_identical() {
+        let ir = parse_mot_det(DET, "t", ParseMode::Strict).unwrap();
+        assert_eq!(ir.n_frames(), 3);
+        assert_eq!(ir.n_entries(), 3);
+        assert_eq!(write_mot_det(&ir), DET);
+    }
+
+    #[test]
+    fn mot_gt_round_trip_preserves_conf_class_visibility() {
+        let ir = parse_mot_gt(GT, "t", ParseMode::Strict).unwrap();
+        assert_eq!(write_mot_gt(&ir), GT);
+        let e = &ir.frames[0].entries[1];
+        assert_eq!(e.track_id, Some(2));
+        assert_eq!(e.class, Some(7));
+        assert_eq!(e.visibility, Some(0.75));
+        // conf == 0 rows are kept in the IR but excluded from scoring
+        assert_eq!(ir.frames[1].entries[0].score, Some(0.0));
+        assert!(ir.eval_gt()[1].is_empty());
+    }
+
+    #[test]
+    fn mot_to_coco_to_mot_is_byte_identical() {
+        let ir = parse_mot_det(DET, "t", ParseMode::Strict).unwrap();
+        let coco = write_coco(&ir);
+        let back = parse_coco(&coco, "t", ParseMode::Strict).unwrap();
+        assert_eq!(write_mot_det(&back), DET);
+        // and the COCO text is itself a fixed point
+        assert_eq!(write_coco(&back), coco);
+    }
+
+    #[test]
+    fn lenient_accepts_legacy_quirks() {
+        // fractional frame index, unsorted rows, NaN box field, junk id
+        let text = "2.0,-1,1,2,3,4,0.5\n1,zz,NaN,0,5,5,1\n";
+        let ir = parse_mot_det(text, "t", ParseMode::Lenient).unwrap();
+        assert_eq!(ir.n_frames(), 2);
+        assert_eq!(ir.frames[0].entries[0].track_id, None);
+        assert!(ir.frames[0].entries[0].ltwh[0].is_nan());
+    }
+
+    #[test]
+    fn both_modes_reject_what_used_to_crash() {
+        // frame 0 used to underflow-index; frame 1e12 used to allocate
+        for bad in ["0,-1,1,2,3,4,1\n", "NaN,-1,1,2,3,4,1\n", "1e12,-1,1,2,3,4,1\n"] {
+            for mode in [ParseMode::Lenient, ParseMode::Strict] {
+                assert!(parse_mot_det(bad, "t", mode).is_err(), "{bad:?} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn strict_rejects_untrusted_input_classes() {
+        let cases = [
+            ("1,-1,NaN,2,3,4,1\n", "non-finite field"),
+            ("1,-1,1,2,-3,4,1\n", "negative width"),
+            ("1,-1,1,2,0,4,1\n", "zero width"),
+            ("2,-1,1,2,3,4,1\n1,-1,1,2,3,4,1\n", "unsorted frames"),
+            ("1.5,-1,1,2,3,4,1\n", "fractional frame"),
+            ("1,x,1,2,3,4,1\n", "non-integer id"),
+            ("1,-1,1,2,3,4,inf\n", "non-finite score"),
+        ];
+        for (text, why) in cases {
+            assert!(parse_mot_det(text, "t", ParseMode::Strict).is_err(), "{why}");
+            // every strict error is still a clean typed error leniently
+            // or parses; never a panic
+            let _ = parse_mot_det(text, "t", ParseMode::Lenient);
+        }
+    }
+
+    #[test]
+    fn coco_object_and_bare_array_both_parse() {
+        let obj = r#"{"images": [{"id": 1, "width": 640, "height": 480}],
+                      "annotations": [{"id": 1, "image_id": 1, "bbox": [1, 2, 3, 4], "score": 0.5}]}"#;
+        let ir = parse_coco(obj, "t", ParseMode::Strict).unwrap();
+        assert_eq!(ir.image_size, Some((640.0, 480.0)));
+        assert_eq!(ir.frames[0].entries[0].ltwh, [1.0, 2.0, 3.0, 4.0]);
+        let arr = r#"[{"image_id": 2, "bbox": [1, 2, 3, 4]}]"#;
+        let ir = parse_coco(arr, "t", ParseMode::Lenient).unwrap();
+        assert_eq!(ir.n_frames(), 2);
+    }
+
+    #[test]
+    fn coco_structural_errors_are_typed() {
+        for bad in [
+            "{\"images\": []}",
+            "[{\"bbox\": [1,2,3,4]}]",
+            "[{\"image_id\": 1, \"bbox\": [1,2,3]}]",
+            "[{\"image_id\": 0, \"bbox\": [1,2,3,4]}]",
+            "[{\"image_id\": 1.5, \"bbox\": [1,2,3,4]}]",
+            "[{\"image_id\": 1, \"bbox\": [1,2,3,\"x\"]}]",
+            "[{\"image_id\": 4000000000, \"bbox\": [1,2,3,4]}]",
+            "42",
+            "{not json",
+        ] {
+            assert!(parse_coco(bad, "t", ParseMode::Lenient).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn writers_quote_shortest_roundtrip_numbers() {
+        // 0.1 + 0.2 style values survive because ltwh is stored, not
+        // re-derived from corners
+        let text = "1,-1,0.1,0.2,0.30000000000000004,0.7,0.9,-1,-1,-1\n";
+        let ir = parse_mot_det(text, "t", ParseMode::Strict).unwrap();
+        assert_eq!(write_mot_det(&ir), text);
+    }
+}

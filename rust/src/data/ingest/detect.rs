@@ -1,0 +1,222 @@
+//! Format auto-detection from file *content* (never the extension).
+//!
+//! The probe is magic/shape based: a leading `{` / `[` routes through
+//! the JSON parser and checks for COCO shape (`annotations` key, or
+//! annotation-objects with `image_id` + `bbox`); anything else is
+//! probed as MOT CSV over the first [`PROBE_LINES`] non-empty lines,
+//! with the id column (`-1` everywhere ⇒ det, real ids ⇒ gt) deciding
+//! the dialect. Ambiguous or garbage input returns a typed
+//! [`IngestError`] — detection never panics and never guesses on
+//! evidence it cannot defend (the confidence of a defensible guess is
+//! still reported in [`FormatGuess`]).
+
+use super::ir::SourceFormat;
+use super::IngestError;
+use crate::data::json::{self, Value};
+
+/// How many leading non-empty lines (or array elements) the probe
+/// inspects before committing to a guess.
+pub const PROBE_LINES: usize = 32;
+
+/// Probe strength behind a [`FormatGuess`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Confidence {
+    /// Multiple independent rows/objects agreed.
+    High,
+    /// Only a single row/object was available to probe.
+    Low,
+}
+
+impl Confidence {
+    /// Stable lowercase label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Confidence::High => "high",
+            Confidence::Low => "low",
+        }
+    }
+}
+
+/// A successful detection verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FormatGuess {
+    /// The detected format.
+    pub format: SourceFormat,
+    /// Probe strength.
+    pub confidence: Confidence,
+    /// What the probe saw (for logs / CLI output).
+    pub detail: String,
+}
+
+/// Detect the format of `text`, or return a typed error for input that
+/// is empty, ambiguous, or matches no known format.
+pub fn detect_format(text: &str) -> Result<FormatGuess, IngestError> {
+    let trimmed = text.trim_start();
+    if trimmed.is_empty() {
+        return Err(IngestError::whole("empty input"));
+    }
+    if trimmed.starts_with('{') || trimmed.starts_with('[') {
+        return detect_json(text);
+    }
+    detect_mot(text)
+}
+
+fn detect_json(text: &str) -> Result<FormatGuess, IngestError> {
+    let v = json::parse(text)
+        .map_err(|e| IngestError::whole(format!("looks like JSON but does not parse: {e}")))?;
+    match &v {
+        Value::Obj(_) => {
+            if v.get("annotations").and_then(Value::as_arr).is_some() {
+                Ok(FormatGuess {
+                    format: SourceFormat::Coco,
+                    confidence: Confidence::High,
+                    detail: "JSON object with an 'annotations' array".into(),
+                })
+            } else {
+                Err(IngestError::whole(
+                    "JSON object without an 'annotations' array is not COCO",
+                ))
+            }
+        }
+        Value::Arr(items) => {
+            if items.is_empty() {
+                return Err(IngestError::whole(
+                    "empty JSON array is ambiguous (no annotation shape to probe)",
+                ));
+            }
+            let probed = items.len().min(PROBE_LINES);
+            for (i, item) in items.iter().take(probed).enumerate() {
+                let shaped = item.get("image_id").is_some() && item.get("bbox").is_some();
+                if !shaped {
+                    return Err(IngestError::whole(format!(
+                        "JSON array element {i} lacks image_id/bbox — not a COCO annotation list",
+                    )));
+                }
+            }
+            Ok(FormatGuess {
+                format: SourceFormat::Coco,
+                confidence: if probed > 1 { Confidence::High } else { Confidence::Low },
+                detail: format!("JSON array of {probed} annotation-shaped objects"),
+            })
+        }
+        _ => Err(IngestError::whole("top-level JSON scalar is not a detection format")),
+    }
+}
+
+fn detect_mot(text: &str) -> Result<FormatGuess, IngestError> {
+    let mut det_votes = 0usize;
+    let mut gt_votes = 0usize;
+    let mut probed = 0usize;
+    for (i, raw) in text.lines().enumerate() {
+        if probed >= PROBE_LINES {
+            break;
+        }
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() < 7 {
+            return Err(IngestError::at(
+                i + 1,
+                format!("{} comma-separated fields (MOT rows have >=7)", fields.len()),
+            ));
+        }
+        for (k, f) in fields.iter().take(7).enumerate() {
+            if f.parse::<f64>().is_err() {
+                return Err(IngestError::at(
+                    i + 1,
+                    format!("field {k} '{f}' is not numeric — not a MOT row"),
+                ));
+            }
+        }
+        if fields[1] == "-1" {
+            det_votes += 1;
+        } else {
+            gt_votes += 1;
+        }
+        probed += 1;
+    }
+    if probed == 0 {
+        return Err(IngestError::whole("no non-empty lines to probe"));
+    }
+    let confidence = if probed > 1 { Confidence::High } else { Confidence::Low };
+    match (det_votes, gt_votes) {
+        (_, 0) => Ok(FormatGuess {
+            format: SourceFormat::MotDet,
+            confidence,
+            detail: format!("{probed} MOT rows, id column all -1"),
+        }),
+        (0, _) => Ok(FormatGuess {
+            format: SourceFormat::MotGt,
+            confidence,
+            detail: format!("{probed} MOT rows with real track ids"),
+        }),
+        (d, g) => Err(IngestError::whole(format!(
+            "ambiguous MOT id column: {d} det-style rows (-1) vs {g} gt-style rows",
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_each_format_from_content() {
+        let det = "1,-1,1,2,3,4,0.9,-1,-1,-1\n2,-1,1,2,3,4,0.8,-1,-1,-1\n";
+        let g = detect_format(det).unwrap();
+        assert_eq!(g.format, SourceFormat::MotDet);
+        assert_eq!(g.confidence, Confidence::High);
+
+        let gt = "1,1,1,2,3,4,1,1,1\n1,2,5,6,7,8,1,1,1\n";
+        assert_eq!(detect_format(gt).unwrap().format, SourceFormat::MotGt);
+
+        let coco = r#"{"annotations": [], "images": []}"#;
+        assert_eq!(detect_format(coco).unwrap().format, SourceFormat::Coco);
+
+        let bare = r#"[{"image_id": 1, "bbox": [1,2,3,4]}]"#;
+        let g = detect_format(bare).unwrap();
+        assert_eq!(g.format, SourceFormat::Coco);
+        assert_eq!(g.confidence, Confidence::Low);
+    }
+
+    #[test]
+    fn single_row_is_low_confidence() {
+        let g = detect_format("1,-1,1,2,3,4,0.9\n").unwrap();
+        assert_eq!(g.confidence, Confidence::Low);
+    }
+
+    #[test]
+    fn garbage_and_ambiguous_inputs_are_typed_errors() {
+        for bad in [
+            "",
+            "   \n\n",
+            "hello world\n",
+            "1,2,3\n",
+            "1,-1,a,b,c,d,e\n",
+            "{\"foo\": 1}",
+            "[1, 2, 3]",
+            "[]",
+            "[{\"x\": 1}]",
+            "{broken",
+            "true",
+        ] {
+            assert!(detect_format(bad).is_err(), "{bad:?} should not detect");
+        }
+        // mixed id column: some rows det-style, some gt-style
+        let mixed = "1,-1,1,2,3,4,1\n1,5,1,2,3,4,1\n";
+        let e = detect_format(mixed).unwrap_err();
+        assert!(e.msg.contains("ambiguous"), "{e}");
+    }
+
+    #[test]
+    fn probe_is_bounded() {
+        // a huge file only reads the first PROBE_LINES lines
+        let mut text = String::new();
+        for i in 1..=10_000 {
+            text.push_str(&format!("{i},-1,1,2,3,4,0.5\n"));
+        }
+        assert_eq!(detect_format(&text).unwrap().format, SourceFormat::MotDet);
+    }
+}

@@ -1,0 +1,441 @@
+//! Deterministic structure-aware fuzzing of every ingest parser.
+//!
+//! The offline sandbox has no cargo-fuzz, so this follows the
+//! [`crate::proptest_lite`] philosophy instead: a seeded
+//! [SplitMix64](crate::prng::Rng) stream drives mutations of a small
+//! canonical corpus (MOT det/gt text, COCO JSON, report-style JSON) —
+//! token splices (`NaN`, `1e999`, stray quotes/braces), line
+//! shuffles/duplications, truncation, digit-run rewrites, char flips
+//! and document doubling — and every mutant is fed to
+//! [`detect_format`](super::detect::detect_format), both parse modes
+//! of every parser, and `data/json.rs`.
+//!
+//! The contract asserted on every mutant:
+//!
+//! 1. **No panic** — parsers return typed errors, nothing unwinds
+//!    (nothing here uses `catch_unwind`; a panic fails the run).
+//! 2. **Error or valid IR** — when a parse succeeds, the IR
+//!    re-serializes canonically, the canonical text reparses, and a
+//!    second write is byte-identical (`write ∘ parse` idempotence),
+//!    plus a [`super::validate`] pass runs without panicking.
+//! 3. **JSON round trip** — any mutant `data/json.rs` accepts must
+//!    survive `parse(to_json_pretty(v)) == v`.
+//!
+//! Same seed ⇒ same mutants ⇒ same verdict, so the CI job
+//! (`ingest-smoke`) and the pinned 10k-iteration test are exactly
+//! reproducible.
+
+use super::convert::{
+    parse_coco, parse_mot_det, parse_mot_gt, write_coco, write_mot_det, write_mot_gt, ParseMode,
+};
+use super::detect::detect_format;
+use super::ir::IrSequence;
+use super::IngestError;
+use crate::data::json;
+use crate::prng::Rng;
+
+/// Tally of one fuzz run (all counters over all iterations).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FuzzStats {
+    /// Iterations executed.
+    pub iterations: u64,
+    /// Lenient MOT det parses that succeeded.
+    pub mot_det_ok: u64,
+    /// Lenient MOT det parses rejected with a typed error.
+    pub mot_det_rejected: u64,
+    /// Lenient MOT gt parses that succeeded.
+    pub mot_gt_ok: u64,
+    /// Lenient MOT gt parses rejected with a typed error.
+    pub mot_gt_rejected: u64,
+    /// COCO parses that succeeded.
+    pub coco_ok: u64,
+    /// COCO parses rejected with a typed error.
+    pub coco_rejected: u64,
+    /// Strict-mode parses (all formats) that succeeded.
+    pub strict_ok: u64,
+    /// Strict-mode parses (all formats) rejected with a typed error.
+    pub strict_rejected: u64,
+    /// Raw `data/json.rs` parses that succeeded.
+    pub json_ok: u64,
+    /// Raw `data/json.rs` parses rejected with a typed error.
+    pub json_rejected: u64,
+    /// Auto-detect probes that returned a format.
+    pub detect_ok: u64,
+    /// Auto-detect probes that returned a typed error.
+    pub detect_rejected: u64,
+    /// Write→parse→write idempotence checks performed (and passed —
+    /// a failure panics).
+    pub roundtrips: u64,
+}
+
+impl FuzzStats {
+    /// Total successful parses across parsers and modes.
+    pub fn total_ok(&self) -> u64 {
+        self.mot_det_ok + self.mot_gt_ok + self.coco_ok + self.strict_ok + self.json_ok
+    }
+
+    /// Total typed rejections across parsers and modes.
+    pub fn total_rejected(&self) -> u64 {
+        self.mot_det_rejected
+            + self.mot_gt_rejected
+            + self.coco_rejected
+            + self.strict_rejected
+            + self.json_rejected
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} iterations: {} parses ok, {} typed rejections, {} round-trips verified, detect {}/{}",
+            self.iterations,
+            self.total_ok(),
+            self.total_rejected(),
+            self.roundtrips,
+            self.detect_ok,
+            self.detect_ok + self.detect_rejected,
+        )
+    }
+}
+
+/// Canonical seed corpus: one small document per supported grammar.
+/// Each is writer-canonical so unmutated iterations exercise the
+/// round-trip path, and small enough that 10k debug-mode iterations
+/// stay in test budget.
+pub fn corpus() -> [&'static str; 4] {
+    [
+        // MOT det.txt
+        "1,-1,10.5,20,30,40,0.9,-1,-1,-1\n\
+         1,-1,50,60.25,7,8,0.5,-1,-1,-1\n\
+         2,-1,11,21,30,40,0.875,-1,-1,-1\n\
+         3,-1,1,2,3,4,1,-1,-1,-1\n\
+         3,-1,5.5,6,7,8,0.25,-1,-1,-1\n",
+        // MOT gt.txt
+        "1,1,10.5,20,30,40,1,1,1\n\
+         1,2,50,60.25,7,8,1,7,0.75\n\
+         2,1,11,21,30,40,1,1,1\n\
+         2,2,51,61,7,8,0,7,0.5\n\
+         3,1,12,22,30,40,1,1,0.25\n",
+        // COCO detection JSON
+        r#"{"annotations": [{"bbox": [10.5, 20, 30, 40], "id": 1, "image_id": 1, "score": 0.9},
+ {"bbox": [50, 60.25, 7, 8], "category_id": 3, "id": 2, "image_id": 2, "track_id": 4}],
+ "categories": [{"id": 3, "name": "class-3"}],
+ "images": [{"height": 480, "id": 1, "width": 640}, {"height": 480, "id": 2, "width": 640}]}"#,
+        // report-style JSON (exercises data/json.rs shapes the lab emits)
+        r#"{"schema": 4, "kind": "lab", "cells": [{"id": "native-d5", "fps": {"median": 120.5},
+ "quality": {"mota": 0.42, "fn": 3}, "flags": [true, false, null]}], "note": "fuzz \"seed\"\n"}"#,
+    ]
+}
+
+const TOKENS: &[&str] = &[
+    "NaN", "inf", "-inf", "1e999", "-1e999", "-1", "0", ",", ",,", "\n", "\"", "{", "}", "[",
+    "]", ":", " ", "4294967296", "-0.0", "true", "null", "1e-999", "\u{0}", "𝒳",
+    "999999999999999999999999",
+];
+
+const FLIP_CHARS: &[char] = &[
+    ',', '-', '.', '0', '9', 'a', 'e', 'E', '{', '}', '[', ']', ':', '"', '\n', '\r', '\t',
+    '\u{0}', 'x', ' ', '+',
+];
+
+/// Upper bound on mutant size (keeps repeated doubling in budget).
+const MAX_MUTANT_LEN: usize = 8 * 1024;
+
+/// Byte indices where a char may be split (every boundary incl. end).
+fn boundaries(s: &str) -> Vec<usize> {
+    let mut b: Vec<usize> = s.char_indices().map(|(i, _)| i).collect();
+    b.push(s.len());
+    b
+}
+
+fn pick(rng: &mut Rng, b: &[usize]) -> usize {
+    b[rng.below(b.len() as u64) as usize]
+}
+
+fn random_number_text(rng: &mut Rng) -> String {
+    match rng.below(6) {
+        0 => rng.below(100_000).to_string(),
+        1 => format!("-{}", rng.below(1000)),
+        2 => "NaN".to_string(),
+        3 => "1e999".to_string(),
+        4 => format!("{}", rng.range(-1000.0, 1000.0)),
+        _ => "18446744073709551616".to_string(),
+    }
+}
+
+/// Apply one structure-aware mutation. Deterministic in `rng`; always
+/// returns valid UTF-8 (all edits happen on char boundaries).
+pub fn mutate(rng: &mut Rng, text: &str) -> String {
+    let mut out = match rng.below(8) {
+        // splice a grammar-relevant token at a random position
+        0 => {
+            let b = boundaries(text);
+            let at = pick(rng, &b);
+            let tok = TOKENS[rng.below(TOKENS.len() as u64) as usize];
+            format!("{}{}{}", &text[..at], tok, &text[at..])
+        }
+        // truncate
+        1 => {
+            let b = boundaries(text);
+            text[..pick(rng, &b)].to_string()
+        }
+        // delete a span
+        2 => {
+            let b = boundaries(text);
+            let (mut lo, mut hi) = (pick(rng, &b), pick(rng, &b));
+            if lo > hi {
+                std::mem::swap(&mut lo, &mut hi);
+            }
+            format!("{}{}", &text[..lo], &text[hi..])
+        }
+        // duplicate a line
+        3 => {
+            let lines: Vec<&str> = text.lines().collect();
+            if lines.is_empty() {
+                return text.to_string();
+            }
+            let k = rng.below(lines.len() as u64) as usize;
+            let mut lines: Vec<String> = lines.iter().map(|l| l.to_string()).collect();
+            lines.insert(k, lines[k].clone());
+            lines.join("\n") + "\n"
+        }
+        // swap two lines
+        4 => {
+            let mut lines: Vec<&str> = text.lines().collect();
+            if lines.len() < 2 {
+                return text.to_string();
+            }
+            let a = rng.below(lines.len() as u64) as usize;
+            let b = rng.below(lines.len() as u64) as usize;
+            lines.swap(a, b);
+            lines.join("\n") + "\n"
+        }
+        // rewrite a digit run
+        5 => {
+            let runs: Vec<(usize, usize)> = {
+                let mut runs = Vec::new();
+                let mut start: Option<usize> = None;
+                for (i, c) in text.char_indices() {
+                    if c.is_ascii_digit() {
+                        start.get_or_insert(i);
+                    } else if let Some(s) = start.take() {
+                        runs.push((s, i));
+                    }
+                }
+                if let Some(s) = start {
+                    runs.push((s, text.len()));
+                }
+                runs
+            };
+            if runs.is_empty() {
+                return text.to_string();
+            }
+            let (lo, hi) = runs[rng.below(runs.len() as u64) as usize];
+            format!("{}{}{}", &text[..lo], random_number_text(rng), &text[hi..])
+        }
+        // flip one char
+        6 => {
+            let b: Vec<usize> = text.char_indices().map(|(i, _)| i).collect();
+            if b.is_empty() {
+                return text.to_string();
+            }
+            let at = b[rng.below(b.len() as u64) as usize];
+            let c = FLIP_CHARS[rng.below(FLIP_CHARS.len() as u64) as usize];
+            let mut s = String::with_capacity(text.len() + 4);
+            s.push_str(&text[..at]);
+            s.push(c);
+            let rest = &text[at..];
+            let skip = rest.chars().next().map_or(0, char::len_utf8);
+            s.push_str(&rest[skip..]);
+            s
+        }
+        // double the document (repeated sections / trailing data)
+        _ => format!("{text}{text}"),
+    };
+    if out.len() > MAX_MUTANT_LEN {
+        let mut cut = MAX_MUTANT_LEN;
+        while !out.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        out.truncate(cut);
+    }
+    out
+}
+
+/// Parse, and on success check canonical-write idempotence:
+/// `write(parse(write(ir))) == write(ir)`. Panics (failing the fuzz
+/// run) if canonical text does not reparse or is not a fixed point.
+fn check_roundtrip<P, W>(text: &str, label: &str, ctx: (u64, u64), parse: P, write: W) -> bool
+where
+    P: Fn(&str) -> Result<IrSequence, IngestError>,
+    W: Fn(&IrSequence) -> String,
+{
+    match parse(text) {
+        Err(_) => false,
+        Ok(ir) => {
+            // the validation pass must hold up on arbitrary accepted IR
+            let _ = super::validate::validate(&ir);
+            let t1 = write(&ir);
+            let ir2 = parse(&t1).unwrap_or_else(|e| {
+                panic!(
+                    "fuzz seed {} iter {}: canonical {label} text failed to reparse: {e}\n--\n{t1}",
+                    ctx.0, ctx.1
+                )
+            });
+            let t2 = write(&ir2);
+            assert_eq!(
+                t1, t2,
+                "fuzz seed {} iter {}: {label} write is not idempotent",
+                ctx.0, ctx.1
+            );
+            true
+        }
+    }
+}
+
+/// Run `iterations` fuzz iterations from `seed`. Deterministic; any
+/// contract violation panics with the seed and iteration number.
+pub fn run(seed: u64, iterations: u64) -> FuzzStats {
+    let docs = corpus();
+    let mut rng = Rng::new(seed);
+    let mut stats = FuzzStats::default();
+    for it in 0..iterations {
+        let mut text = docs[rng.below(docs.len() as u64) as usize].to_string();
+        for _ in 0..rng.below(4) {
+            text = mutate(&mut rng, &text);
+        }
+        let ctx = (seed, it);
+        match detect_format(&text) {
+            Ok(_) => stats.detect_ok += 1,
+            Err(_) => stats.detect_rejected += 1,
+        }
+        if check_roundtrip(
+            &text,
+            "mot-det",
+            ctx,
+            |t| parse_mot_det(t, "fz", ParseMode::Lenient),
+            write_mot_det,
+        ) {
+            stats.mot_det_ok += 1;
+            stats.roundtrips += 1;
+        } else {
+            stats.mot_det_rejected += 1;
+        }
+        if check_roundtrip(
+            &text,
+            "mot-gt",
+            ctx,
+            |t| parse_mot_gt(t, "fz", ParseMode::Lenient),
+            write_mot_gt,
+        ) {
+            stats.mot_gt_ok += 1;
+            stats.roundtrips += 1;
+        } else {
+            stats.mot_gt_rejected += 1;
+        }
+        if check_roundtrip(
+            &text,
+            "coco",
+            ctx,
+            |t| parse_coco(t, "fz", ParseMode::Lenient),
+            write_coco,
+        ) {
+            stats.coco_ok += 1;
+            stats.roundtrips += 1;
+        } else {
+            stats.coco_rejected += 1;
+        }
+        for (label, fmt) in [
+            ("mot-det-strict", 0u8),
+            ("mot-gt-strict", 1),
+            ("coco-strict", 2),
+        ] {
+            let ok = match fmt {
+                0 => check_roundtrip(
+                    &text,
+                    label,
+                    ctx,
+                    |t| parse_mot_det(t, "fz", ParseMode::Strict),
+                    write_mot_det,
+                ),
+                1 => check_roundtrip(
+                    &text,
+                    label,
+                    ctx,
+                    |t| parse_mot_gt(t, "fz", ParseMode::Strict),
+                    write_mot_gt,
+                ),
+                _ => check_roundtrip(
+                    &text,
+                    label,
+                    ctx,
+                    |t| parse_coco(t, "fz", ParseMode::Strict),
+                    write_coco,
+                ),
+            };
+            if ok {
+                stats.strict_ok += 1;
+                stats.roundtrips += 1;
+            } else {
+                stats.strict_rejected += 1;
+            }
+        }
+        match json::parse(&text) {
+            Ok(v) => {
+                let pretty = v.to_json_pretty();
+                let back = json::parse(&pretty).unwrap_or_else(|e| {
+                    panic!("fuzz seed {seed} iter {it}: pretty JSON failed to reparse: {e}")
+                });
+                assert_eq!(back, v, "fuzz seed {seed} iter {it}: JSON round trip changed value");
+                stats.json_ok += 1;
+                stats.roundtrips += 1;
+            }
+            Err(_) => stats.json_rejected += 1,
+        }
+    }
+    stats.iterations = iterations;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_documents_are_canonical_and_parse() {
+        let [det, gt, coco, report] = corpus();
+        let ir = parse_mot_det(det, "c", ParseMode::Strict).unwrap();
+        assert_eq!(write_mot_det(&ir), det);
+        let ir = parse_mot_gt(gt, "c", ParseMode::Strict).unwrap();
+        assert_eq!(write_mot_gt(&ir), gt);
+        assert!(parse_coco(coco, "c", ParseMode::Strict).is_ok());
+        assert!(json::parse(report).is_ok());
+    }
+
+    #[test]
+    fn mutations_preserve_utf8_and_determinism() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let doc = corpus()[2];
+        for _ in 0..500 {
+            let ma = mutate(&mut a, doc);
+            let mb = mutate(&mut b, doc);
+            assert_eq!(ma, mb);
+            assert!(ma.len() <= super::MAX_MUTANT_LEN);
+            assert!(std::str::from_utf8(ma.as_bytes()).is_ok());
+        }
+    }
+
+    #[test]
+    fn short_run_is_deterministic_and_hits_both_outcomes() {
+        let a = run(7, 300);
+        let b = run(7, 300);
+        assert_eq!(a, b, "same seed must give identical stats");
+        assert_eq!(a.iterations, 300);
+        assert!(a.mot_det_ok > 0, "{a:?}");
+        assert!(a.mot_gt_ok > 0, "{a:?}");
+        assert!(a.coco_ok > 0, "{a:?}");
+        assert!(a.json_ok > 0, "{a:?}");
+        assert!(a.total_rejected() > 0, "{a:?}");
+        assert!(a.roundtrips > 0, "{a:?}");
+    }
+}

@@ -1,0 +1,256 @@
+//! Typed interchange IR for detection/annotation files.
+//!
+//! Every supported on-disk format (MOT Challenge det/gt text, COCO
+//! detection JSON) parses into the same hierarchy —
+//!
+//! ```text
+//! IrDataset ─▶ IrSequence ─▶ IrFrame (dense, 1-based) ─▶ IrEntry
+//! ```
+//!
+//! — and every writer serializes back out of it, so conversion between
+//! any two formats is one parse plus one write. The IR stores boxes in
+//! `[left, top, width, height]` form **exactly as read from disk**
+//! (both MOT and COCO are ltwh formats): no corner-form round trip
+//! ever re-derives `width` as `x2 - x1`, which is what makes
+//! parse→write byte-stable for canonical input. Conversion to the
+//! tracker's corner-form [`Bbox`] happens once, at the
+//! [`IrSequence::to_sequence`] boundary.
+
+use crate::data::mot::{Detection, FrameDets, Sequence};
+use crate::sort::Bbox;
+use std::fmt;
+
+/// Hard cap on accepted 1-based frame indices (≈ 9.7 hours at 30 fps).
+///
+/// Sequences are densified to `1..=max_frame`, so an untrusted file
+/// claiming frame `4e9` would otherwise allocate a multi-gigabyte
+/// frame vector before a single detection is stored. Both lenient and
+/// strict parsers reject indices above this bound.
+pub const MAX_FRAME_INDEX: u32 = 1 << 20;
+
+/// Which on-disk format a sequence was parsed from (provenance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceFormat {
+    /// MOT Challenge detection text (`det.txt`): id column is `-1`.
+    MotDet,
+    /// MOT Challenge ground-truth text (`gt.txt`): real track ids plus
+    /// `conf, class, visibility` columns.
+    MotGt,
+    /// COCO detection JSON (`images` / `annotations` object, or a bare
+    /// array of annotation objects).
+    Coco,
+}
+
+impl SourceFormat {
+    /// Stable lowercase label (used in reports and CLI output).
+    pub fn label(self) -> &'static str {
+        match self {
+            SourceFormat::MotDet => "mot",
+            SourceFormat::MotGt => "mot-gt",
+            SourceFormat::Coco => "coco",
+        }
+    }
+
+    /// Parse a CLI / report label. Accepts the aliases `mot`/`mot-det`
+    /// and `gt`/`mot-gt`; returns `None` for anything else (including
+    /// `auto`, which is not a concrete format).
+    pub fn parse(s: &str) -> Option<SourceFormat> {
+        match s {
+            "mot" | "mot-det" | "det" => Some(SourceFormat::MotDet),
+            "mot-gt" | "gt" => Some(SourceFormat::MotGt),
+            "coco" => Some(SourceFormat::Coco),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for SourceFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One detection or ground-truth annotation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IrEntry {
+    /// Track identity as written on disk (`None` ⇔ `-1` / absent:
+    /// plain detections carry no identity).
+    pub track_id: Option<u64>,
+    /// Box in `[left, top, width, height]` form, verbatim from disk.
+    pub ltwh: [f64; 4],
+    /// Detector confidence (det files) or the gt `conf` flag, where
+    /// `0` means "ignore this annotation when scoring".
+    pub score: Option<f64>,
+    /// Object class / COCO category id.
+    pub class: Option<i64>,
+    /// MOT gt visibility ratio in `[0, 1]`.
+    pub visibility: Option<f64>,
+}
+
+impl IrEntry {
+    /// A bare detection: box + score, no identity/class/visibility.
+    pub fn detection(ltwh: [f64; 4], score: f64) -> IrEntry {
+        IrEntry { track_id: None, ltwh, score: Some(score), class: None, visibility: None }
+    }
+
+    /// Corner-form box for the tracker (`x2 = l + w`, `y2 = t + h`).
+    pub fn bbox(&self) -> Bbox {
+        Bbox::from_ltwh(self.ltwh[0], self.ltwh[1], self.ltwh[2], self.ltwh[3])
+    }
+}
+
+/// All entries of one frame.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IrFrame {
+    /// 1-based frame index.
+    pub index: u32,
+    /// Entries in file order (possibly empty — trackers still step).
+    pub entries: Vec<IrEntry>,
+}
+
+/// One sequence: named, dense in frames (`frames[i].index == i + 1`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IrSequence {
+    /// Sequence name (usually derived from the file path).
+    pub name: String,
+    /// Format this sequence was parsed from.
+    pub source: SourceFormat,
+    /// Image rect `(width, height)` when the source declares one
+    /// (COCO `images` entries); used by bounds validation.
+    pub image_size: Option<(f64, f64)>,
+    /// Dense frame list, `1..=n_frames`.
+    pub frames: Vec<IrFrame>,
+}
+
+impl IrSequence {
+    /// An empty sequence (no frames) with the given provenance.
+    pub fn empty(name: &str, source: SourceFormat) -> IrSequence {
+        IrSequence { name: name.to_string(), source, image_size: None, frames: Vec::new() }
+    }
+
+    /// Number of frames.
+    pub fn n_frames(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Total entries across all frames.
+    pub fn n_entries(&self) -> usize {
+        self.frames.iter().map(|f| f.entries.len()).sum()
+    }
+
+    /// Convert to the tracker-facing [`Sequence`] (corner-form boxes;
+    /// entries without a score get `1.0`, matching MOT gt convention).
+    pub fn to_sequence(&self) -> Sequence {
+        Sequence {
+            name: self.name.clone(),
+            frames: self
+                .frames
+                .iter()
+                .map(|f| FrameDets {
+                    index: f.index,
+                    detections: f
+                        .entries
+                        .iter()
+                        .map(|e| Detection { bbox: e.bbox(), score: e.score.unwrap_or(1.0) })
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Ground-truth boxes per frame for CLEAR-MOT scoring: element `i`
+    /// holds frame `i + 1`. Entries without a track id are skipped, as
+    /// are entries with `conf == 0` (the MOT gt "ignore" marker).
+    pub fn eval_gt(&self) -> Vec<Vec<(u64, Bbox)>> {
+        self.frames
+            .iter()
+            .map(|f| {
+                f.entries
+                    .iter()
+                    .filter(|e| e.score != Some(0.0))
+                    .filter_map(|e| e.track_id.map(|id| (id, e.bbox())))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// A group of sequences ingested together (one per `--input` file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IrDataset {
+    /// Dataset name.
+    pub name: String,
+    /// Member sequences.
+    pub sequences: Vec<IrSequence>,
+}
+
+impl IrDataset {
+    /// Wrap already-parsed sequences.
+    pub fn from_sequences(name: &str, sequences: Vec<IrSequence>) -> IrDataset {
+        IrDataset { name: name.to_string(), sequences }
+    }
+
+    /// Total frames across member sequences.
+    pub fn n_frames(&self) -> usize {
+        self.sequences.iter().map(IrSequence::n_frames).sum()
+    }
+
+    /// Total entries across member sequences.
+    pub fn n_entries(&self) -> usize {
+        self.sequences.iter().map(IrSequence::n_entries).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_with(entries: Vec<IrEntry>) -> IrSequence {
+        IrSequence {
+            name: "t".into(),
+            source: SourceFormat::MotDet,
+            image_size: None,
+            frames: vec![IrFrame { index: 1, entries }],
+        }
+    }
+
+    #[test]
+    fn ltwh_is_preserved_verbatim_through_bbox() {
+        let e = IrEntry::detection([10.0, 20.0, 30.0, 40.0], 0.9);
+        let b = e.bbox();
+        assert_eq!((b.x1, b.y1, b.x2, b.y2), (10.0, 20.0, 40.0, 60.0));
+    }
+
+    #[test]
+    fn to_sequence_defaults_missing_scores_to_one() {
+        let mut e = IrEntry::detection([0.0, 0.0, 5.0, 5.0], 0.25);
+        e.score = None;
+        let s = seq_with(vec![e]).to_sequence();
+        assert_eq!(s.frames[0].detections[0].score, 1.0);
+    }
+
+    #[test]
+    fn eval_gt_skips_unidentified_and_ignored_entries() {
+        let keep = IrEntry {
+            track_id: Some(4),
+            ltwh: [0.0, 0.0, 5.0, 5.0],
+            score: Some(1.0),
+            class: Some(1),
+            visibility: None,
+        };
+        let no_id = IrEntry::detection([1.0, 1.0, 2.0, 2.0], 0.9);
+        let ignored = IrEntry { score: Some(0.0), ..keep };
+        let gt = seq_with(vec![keep, no_id, ignored]).eval_gt();
+        assert_eq!(gt.len(), 1);
+        assert_eq!(gt[0].len(), 1);
+        assert_eq!(gt[0][0].0, 4);
+    }
+
+    #[test]
+    fn format_labels_round_trip() {
+        for f in [SourceFormat::MotDet, SourceFormat::MotGt, SourceFormat::Coco] {
+            assert_eq!(SourceFormat::parse(f.label()), Some(f));
+        }
+        assert_eq!(SourceFormat::parse("auto"), None);
+    }
+}

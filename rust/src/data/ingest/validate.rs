@@ -1,0 +1,321 @@
+//! Validation pass over parsed [`IrSequence`]s.
+//!
+//! Issues are *collected*, never panicked: untrusted files get one
+//! pass that reports everything wrong at once, each finding a typed
+//! [`ValidationIssue`] with a severity. [`Severity::Error`] marks data
+//! the tracker cannot consume meaningfully (non-finite or degenerate
+//! boxes, duplicate identities in a frame, a non-dense frame list);
+//! [`Severity::Warning`] marks suspicious-but-usable data (boxes
+//! outside the declared image rect, out-of-range scores/visibility,
+//! mostly-empty sequences). The strict parse mode
+//! ([`super::convert::ParseMode::Strict`]) and the `track --input` /
+//! `convert` CLI paths both delegate here rather than re-implementing
+//! checks.
+
+use super::ir::IrSequence;
+use std::fmt;
+
+/// How bad a finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Suspicious but consumable (reported, not fatal).
+    Warning,
+    /// Not meaningfully consumable by the tracker.
+    Error,
+}
+
+impl Severity {
+    /// Stable lowercase label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// What kind of defect a [`ValidationIssue`] reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IssueKind {
+    /// A box coordinate is NaN or ±∞.
+    NonFiniteBox,
+    /// Box width or height is zero or negative.
+    DegenerateBox,
+    /// Box extends outside the declared image rect.
+    OutOfBounds,
+    /// Score / confidence outside `[0, 1]`.
+    ScoreOutOfRange,
+    /// Visibility outside `[0, 1]`.
+    VisibilityOutOfRange,
+    /// The same track id appears twice in one frame.
+    DuplicateTrackId,
+    /// `frames[i].index != i + 1` (the IR contract is dense 1-based).
+    NonDenseFrames,
+    /// More than half of all frames carry no entries.
+    SparseSequence,
+    /// The sequence has no frames at all.
+    EmptySequence,
+}
+
+impl IssueKind {
+    /// Stable kebab-case label.
+    pub fn label(self) -> &'static str {
+        match self {
+            IssueKind::NonFiniteBox => "non-finite-box",
+            IssueKind::DegenerateBox => "degenerate-box",
+            IssueKind::OutOfBounds => "out-of-bounds",
+            IssueKind::ScoreOutOfRange => "score-out-of-range",
+            IssueKind::VisibilityOutOfRange => "visibility-out-of-range",
+            IssueKind::DuplicateTrackId => "duplicate-track-id",
+            IssueKind::NonDenseFrames => "non-dense-frames",
+            IssueKind::SparseSequence => "sparse-sequence",
+            IssueKind::EmptySequence => "empty-sequence",
+        }
+    }
+
+    /// The severity this kind always carries.
+    pub fn severity(self) -> Severity {
+        match self {
+            IssueKind::NonFiniteBox
+            | IssueKind::DegenerateBox
+            | IssueKind::DuplicateTrackId
+            | IssueKind::NonDenseFrames => Severity::Error,
+            IssueKind::OutOfBounds
+            | IssueKind::ScoreOutOfRange
+            | IssueKind::VisibilityOutOfRange
+            | IssueKind::SparseSequence
+            | IssueKind::EmptySequence => Severity::Warning,
+        }
+    }
+}
+
+/// One validation finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValidationIssue {
+    /// Defect category.
+    pub kind: IssueKind,
+    /// Severity (always `kind.severity()`).
+    pub severity: Severity,
+    /// 1-based frame the finding anchors to, when frame-local.
+    pub frame: Option<u32>,
+    /// Human-readable specifics (values, indices).
+    pub detail: String,
+}
+
+impl fmt::Display for ValidationIssue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.frame {
+            Some(fr) => {
+                write!(f, "[{}] {} (frame {fr}): {}", self.severity.label(), self.kind.label(), self.detail)
+            }
+            None => write!(f, "[{}] {}: {}", self.severity.label(), self.kind.label(), self.detail),
+        }
+    }
+}
+
+/// All findings for one sequence.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ValidationReport {
+    /// Findings in frame order (sequence-level findings first).
+    pub issues: Vec<ValidationIssue>,
+}
+
+impl ValidationReport {
+    /// Number of error-severity findings.
+    pub fn n_errors(&self) -> usize {
+        self.issues.iter().filter(|i| i.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-severity findings.
+    pub fn n_warnings(&self) -> usize {
+        self.issues.iter().filter(|i| i.severity == Severity::Warning).count()
+    }
+
+    /// True when any error-severity finding exists.
+    pub fn has_errors(&self) -> bool {
+        self.n_errors() > 0
+    }
+
+    /// One-line summary, e.g. `"2 errors, 1 warning"`.
+    pub fn summary(&self) -> String {
+        format!("{} errors, {} warnings", self.n_errors(), self.n_warnings())
+    }
+
+    fn push(&mut self, kind: IssueKind, frame: Option<u32>, detail: String) {
+        self.issues.push(ValidationIssue { kind, severity: kind.severity(), frame, detail });
+    }
+}
+
+/// Validate a parsed sequence, collecting every finding.
+pub fn validate(seq: &IrSequence) -> ValidationReport {
+    let mut report = ValidationReport::default();
+    if seq.frames.is_empty() {
+        report.push(IssueKind::EmptySequence, None, format!("sequence '{}' has no frames", seq.name));
+        return report;
+    }
+    for (i, frame) in seq.frames.iter().enumerate() {
+        if frame.index as usize != i + 1 {
+            report.push(
+                IssueKind::NonDenseFrames,
+                Some(frame.index),
+                format!("frame at position {} has index {} (expected {})", i, frame.index, i + 1),
+            );
+        }
+    }
+    let mut empty_frames = 0usize;
+    for frame in &seq.frames {
+        if frame.entries.is_empty() {
+            empty_frames += 1;
+        }
+        let mut seen_ids: Vec<u64> = Vec::new();
+        for (k, e) in frame.entries.iter().enumerate() {
+            let [l, t, w, h] = e.ltwh;
+            if !e.ltwh.iter().all(|v| v.is_finite()) {
+                report.push(
+                    IssueKind::NonFiniteBox,
+                    Some(frame.index),
+                    format!("entry {k}: ltwh [{l}, {t}, {w}, {h}]"),
+                );
+            } else {
+                if w <= 0.0 || h <= 0.0 {
+                    report.push(
+                        IssueKind::DegenerateBox,
+                        Some(frame.index),
+                        format!("entry {k}: width {w} x height {h}"),
+                    );
+                }
+                if let Some((img_w, img_h)) = seq.image_size {
+                    if l < 0.0 || t < 0.0 || l + w > img_w || t + h > img_h {
+                        report.push(
+                            IssueKind::OutOfBounds,
+                            Some(frame.index),
+                            format!("entry {k}: ltwh [{l}, {t}, {w}, {h}] vs image {img_w}x{img_h}"),
+                        );
+                    }
+                }
+            }
+            if let Some(s) = e.score {
+                if !(0.0..=1.0).contains(&s) {
+                    report.push(
+                        IssueKind::ScoreOutOfRange,
+                        Some(frame.index),
+                        format!("entry {k}: score {s}"),
+                    );
+                }
+            }
+            if let Some(v) = e.visibility {
+                if !(0.0..=1.0).contains(&v) {
+                    report.push(
+                        IssueKind::VisibilityOutOfRange,
+                        Some(frame.index),
+                        format!("entry {k}: visibility {v}"),
+                    );
+                }
+            }
+            if let Some(id) = e.track_id {
+                if seen_ids.contains(&id) {
+                    report.push(
+                        IssueKind::DuplicateTrackId,
+                        Some(frame.index),
+                        format!("track id {id} appears more than once"),
+                    );
+                } else {
+                    seen_ids.push(id);
+                }
+            }
+        }
+    }
+    if seq.frames.len() >= 10 && empty_frames * 2 > seq.frames.len() {
+        report.push(
+            IssueKind::SparseSequence,
+            None,
+            format!("{empty_frames} of {} frames are empty", seq.frames.len()),
+        );
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ingest::ir::{IrEntry, IrFrame, SourceFormat};
+
+    fn seq(frames: Vec<IrFrame>) -> IrSequence {
+        IrSequence { name: "v".into(), source: SourceFormat::MotDet, image_size: None, frames }
+    }
+
+    #[test]
+    fn clean_sequence_is_clean() {
+        let s = seq(vec![IrFrame {
+            index: 1,
+            entries: vec![IrEntry::detection([0.0, 0.0, 10.0, 10.0], 0.9)],
+        }]);
+        let r = validate(&s);
+        assert!(r.issues.is_empty(), "{:?}", r.issues);
+        assert!(!r.has_errors());
+    }
+
+    #[test]
+    fn nan_and_degenerate_boxes_are_errors() {
+        let s = seq(vec![IrFrame {
+            index: 1,
+            entries: vec![
+                IrEntry::detection([f64::NAN, 0.0, 10.0, 10.0], 0.9),
+                IrEntry::detection([0.0, 0.0, -5.0, 10.0], 0.9),
+            ],
+        }]);
+        let r = validate(&s);
+        assert_eq!(r.n_errors(), 2);
+        assert_eq!(r.issues[0].kind, IssueKind::NonFiniteBox);
+        assert_eq!(r.issues[1].kind, IssueKind::DegenerateBox);
+    }
+
+    #[test]
+    fn bounds_and_score_checks_warn() {
+        let mut s = seq(vec![IrFrame {
+            index: 1,
+            entries: vec![IrEntry::detection([90.0, 0.0, 20.0, 10.0], 1.5)],
+        }]);
+        s.image_size = Some((100.0, 100.0));
+        let r = validate(&s);
+        assert_eq!(r.n_errors(), 0);
+        assert_eq!(r.n_warnings(), 2);
+        assert!(r.issues.iter().any(|i| i.kind == IssueKind::OutOfBounds));
+        assert!(r.issues.iter().any(|i| i.kind == IssueKind::ScoreOutOfRange));
+    }
+
+    #[test]
+    fn duplicate_ids_and_non_dense_frames_are_errors() {
+        let e = IrEntry {
+            track_id: Some(3),
+            ltwh: [0.0, 0.0, 5.0, 5.0],
+            score: Some(1.0),
+            class: None,
+            visibility: None,
+        };
+        let s = seq(vec![IrFrame { index: 2, entries: vec![e, e] }]);
+        let r = validate(&s);
+        assert!(r.issues.iter().any(|i| i.kind == IssueKind::NonDenseFrames));
+        assert!(r.issues.iter().any(|i| i.kind == IssueKind::DuplicateTrackId));
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn empty_and_sparse_sequences_warn() {
+        let r = validate(&seq(vec![]));
+        assert_eq!(r.issues[0].kind, IssueKind::EmptySequence);
+        assert!(!r.has_errors());
+        let mostly_empty: Vec<IrFrame> = (1..=12)
+            .map(|i| IrFrame {
+                index: i,
+                entries: if i == 1 {
+                    vec![IrEntry::detection([0.0, 0.0, 1.0, 1.0], 0.5)]
+                } else {
+                    vec![]
+                },
+            })
+            .collect();
+        let r = validate(&seq(mostly_empty));
+        assert!(r.issues.iter().any(|i| i.kind == IssueKind::SparseSequence));
+    }
+}

@@ -1,5 +1,6 @@
 //! Data layer: MOT-format I/O, the synthetic MOT-2015-like dataset
-//! generator, input replication, and a dependency-free JSON reader.
+//! generator, input replication, a dependency-free JSON reader, and
+//! the real-data ingest subsystem.
 //!
 //! The paper evaluates on the 11 sequences of the MOT-2015 benchmark
 //! (Table I). The benchmark itself is not redistributable, so
@@ -8,14 +9,22 @@
 //! the real MOT `det.txt` wire format ([`mot`]); every consumer
 //! (tracker, baseline, benches) reads the same files the original
 //! would. [`replicate`] implements the paper's "replicated the input
-//! files 7 times" protocol for Fig 4.
+//! files 7 times" protocol for Fig 4. [`ingest`] is the trust
+//! boundary for *real* files: a typed interchange IR with format
+//! auto-detection, MOT/COCO converters, a collected-issue validation
+//! pass and a seeded parser fuzzer — [`mot`] and [`gt`] delegate
+//! their parsing onto it.
 
 pub mod gt;
+pub mod ingest;
 pub mod json;
 pub mod mot;
 pub mod replicate;
 pub mod synth;
 
 pub use gt::{export_mot_layout, read_gt_file, write_gt_file};
-pub use mot::{read_det_file, write_det_file, write_track_file, Detection, FrameDets, Sequence};
+pub use mot::{
+    read_det_file, read_det_file_strict, write_det_file, write_track_file, Detection, FrameDets,
+    Sequence,
+};
 pub use synth::{generate_sequence, generate_suite, SynthConfig, MOT15_PROPERTIES};

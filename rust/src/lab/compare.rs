@@ -31,6 +31,13 @@
 //! correctness criteria, again within the current report: the netload
 //! frame ledger must conserve, and the tracks delivered over the
 //! socket must match the in-process reference run bit-for-bit.
+//!
+//! Ingest cells (those carrying an `ingest` block) run real checked-in
+//! detection files instead of the synthetic generator, so their MOTA is
+//! a property of the fixture, not of the grid seed — the vs-baseline
+//! MOTA margin is not applied to them. They gate on FPS only; their
+//! tracking correctness is pinned separately by the byte-identity and
+//! bit-identity tests over the same fixtures.
 
 use crate::benchkit::Table;
 
@@ -213,10 +220,15 @@ pub fn compare(base: &LabReport, cur: &LabReport, gate: &GateConfig) -> Comparis
                 // overload cells: MOTA is timing-coupled (drops
                 // depend on load), so the vs-baseline quality margin
                 // doesn't apply — the SLO pass below bounds them
-                // against their 1x sibling instead
+                // against their 1x sibling instead. Ingest cells gate
+                // on FPS only: their MOTA is a fixture property pinned
+                // by the ingest byte/bit-identity tests.
                 let status = if ratio < 1.0 / fps_margin {
                     CellStatus::FpsRegressed
-                } else if c.slo.is_none() && mota_delta < -gate.mota_margin {
+                } else if c.slo.is_none()
+                    && c.ingest.is_none()
+                    && mota_delta < -gate.mota_margin
+                {
                     CellStatus::QualityRegressed
                 } else {
                     CellStatus::Pass
@@ -332,8 +344,8 @@ fn overload_sibling_id(id: &str) -> Option<String> {
 mod tests {
     use super::*;
     use crate::lab::report::{
-        CellReport, CounterTotals, FpsStats, LabReport, Manifest, QualityStats, SloReport,
-        WireReport,
+        CellReport, CounterTotals, FpsStats, IngestReport, LabReport, Manifest, QualityStats,
+        SloReport, WireReport,
     };
 
     fn report_with(cells: Vec<(&str, f64, f64)>) -> LabReport {
@@ -374,6 +386,7 @@ mod tests {
                     counters: CounterTotals::default(),
                     slo: None,
                     wire: None,
+                    ingest: None,
                 })
                 .collect(),
         }
@@ -570,6 +583,43 @@ mod tests {
         let mut orphan = report_with(vec![("batch-x-s4-a2x", 900.0, 0.10)]);
         orphan.cells[0].slo = Some(slo_ok());
         assert!(compare(&report_with(vec![]), &orphan, &GateConfig::default()).pass);
+    }
+
+    #[test]
+    fn ingest_cells_gate_on_fps_only() {
+        let ingest_block = || IngestReport {
+            format: "mot".into(),
+            frames: 60,
+            detections: 322,
+            warnings: 0,
+            gt_tracks: 6,
+        };
+        let mk = |fps: f64, mota: f64| {
+            let mut r = report_with(vec![("batch-ingest-tiny", fps, mota)]);
+            r.cells[0].ingest = Some(ingest_block());
+            r
+        };
+        let base = mk(1000.0, 0.60);
+        // MOTA collapse alone passes: fixture quality is pinned by the
+        // byte/bit-identity tests, not by the baseline margin
+        let worse_mota = mk(1000.0, 0.10);
+        let cmp = compare(&base, &worse_mota, &GateConfig::default());
+        assert!(cmp.pass, "ingest MOTA drop must not fail the gate: {cmp:?}");
+        assert_eq!(cmp.cells[0].status, CellStatus::Pass);
+        // the same MOTA drop on an ordinary cell (no ingest block)
+        // fails under the same config
+        let plain_base = report_with(vec![("batch-ingest-tiny", 1000.0, 0.60)]);
+        let plain_worse = report_with(vec![("batch-ingest-tiny", 1000.0, 0.10)]);
+        assert!(!compare(&plain_base, &plain_worse, &GateConfig::default()).pass);
+        // FPS still gates ingest cells
+        let slow = mk(400.0, 0.60);
+        let cmp = compare(&base, &slow, &GateConfig::default());
+        assert!(!cmp.pass);
+        assert_eq!(cmp.cells[0].status, CellStatus::FpsRegressed);
+        // and deleting the ingest cell fails like any other cell
+        let cmp = compare(&base, &report_with(vec![]), &GateConfig::default());
+        assert!(!cmp.pass);
+        assert_eq!(cmp.cells[0].status, CellStatus::Missing);
     }
 
     /// A healthy wire block for wire-cell tests; tweak fields to

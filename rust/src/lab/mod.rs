@@ -17,12 +17,19 @@
 //! the same footage driven over a loopback TCP socket through the
 //! `WireServer` front door, reported with the netload client ledger,
 //! socket round-trip percentiles and the bit-identity verdict
-//! ([`WireReport`]). [`mod@compare`] diffs two reports under
+//! ([`WireReport`]), and one *real-input* cell: the checked-in ingest
+//! fixtures (`rust/tests/fixtures/ingest/`) parsed through the typed
+//! interchange IR, tracked, and scored against their ground truth
+//! ([`IngestReport`]) — the one place the lab measures real files
+//! instead of the synthetic generator. [`mod@compare`] diffs two
+//! reports under
 //! configurable noise margins — plus the SLO criteria: overload p99
 //! must hold under the session deadline and delivered-row MOTA within
 //! the declared budget of the 1x sibling — plus the marginless wire
 //! criteria (ledger conservation, bit-identity) — and produces the
-//! pass/fail verdict CI gates on.
+//! pass/fail verdict CI gates on. Ingest cells gate on FPS only: their
+//! MOTA is a fixture property pinned by the ingest identity tests, not
+//! a seed-deterministic grid output.
 //!
 //! CLI surface (`smalltrack lab …`):
 //!
@@ -46,8 +53,8 @@ pub mod scenario;
 
 pub use compare::{compare, CellDelta, CellStatus, Comparison, GateConfig};
 pub use report::{
-    CellReport, CounterTotals, FpsStats, KernelEntry, LabReport, Manifest, QualityStats,
-    SloReport, WireReport, SCHEMA_VERSION,
+    CellReport, CounterTotals, FpsStats, IngestReport, KernelEntry, LabReport, Manifest,
+    QualityStats, SloReport, WireReport, SCHEMA_VERSION,
 };
 pub use scenario::{Scenario, ScenarioAxes};
 

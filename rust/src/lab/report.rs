@@ -21,8 +21,9 @@ use super::scenario::ScenarioAxes;
 
 /// Version of the report JSON schema (top-level `schema` field).
 /// v2 added the optional per-cell `slo` block (overload cells);
-/// v3 added the optional per-cell `wire` block (TCP front-door cells).
-pub const SCHEMA_VERSION: u64 = 3;
+/// v3 added the optional per-cell `wire` block (TCP front-door cells);
+/// v4 added the optional per-cell `ingest` block (real-input cells).
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// Frames-per-second statistics over the benchkit samples.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -391,6 +392,48 @@ impl WireReport {
     }
 }
 
+/// Provenance figures for a *real-input* (ingest) cell: what the
+/// `data::ingest` pipeline read off disk before the engine ran.
+/// Present only on cells that ran on the checked-in fixture files —
+/// synthetic cells describe their workload with the scenario axes
+/// instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IngestReport {
+    /// Detected source format label (`mot` | `mot-gt` | `coco`).
+    pub format: String,
+    /// Frames parsed from the detection file.
+    pub frames: u64,
+    /// Detections parsed from the detection file.
+    pub detections: u64,
+    /// Warning-severity validation findings across det + gt files
+    /// (error-severity findings fail the strict parse outright).
+    pub warnings: u64,
+    /// Distinct ground-truth identities in the gt file.
+    pub gt_tracks: u64,
+}
+
+impl IngestReport {
+    fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("format", Value::Str(self.format.clone())),
+            ("frames", Value::from_u64(self.frames)),
+            ("detections", Value::from_u64(self.detections)),
+            ("warnings", Value::from_u64(self.warnings)),
+            ("gt_tracks", Value::from_u64(self.gt_tracks)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> anyhow::Result<IngestReport> {
+        Ok(IngestReport {
+            format: req_str(v, "format")?.to_string(),
+            frames: req_u64(v, "frames")?,
+            detections: req_u64(v, "detections")?,
+            warnings: req_u64(v, "warnings")?,
+            gt_tracks: req_u64(v, "gt_tracks")?,
+        })
+    }
+}
+
 /// One scenario cell's measured row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellReport {
@@ -422,6 +465,8 @@ pub struct CellReport {
     pub slo: Option<SloReport>,
     /// Wire figures — TCP front-door cells only.
     pub wire: Option<WireReport>,
+    /// Ingest figures — real-input cells only.
+    pub ingest: Option<IngestReport>,
 }
 
 impl CellReport {
@@ -445,6 +490,9 @@ impl CellReport {
         }
         if let Some(wire) = self.wire {
             fields.push(("wire", wire.to_value()));
+        }
+        if let Some(ingest) = &self.ingest {
+            fields.push(("ingest", ingest.to_value()));
         }
         Value::obj(fields)
     }
@@ -472,6 +520,7 @@ impl CellReport {
             .context("counters")?,
             slo: v.get("slo").map(SloReport::from_value).transpose().context("slo")?,
             wire: v.get("wire").map(WireReport::from_value).transpose().context("wire")?,
+            ingest: v.get("ingest").map(IngestReport::from_value).transpose().context("ingest")?,
         })
     }
 }
@@ -719,6 +768,13 @@ mod tests {
                     rejected_frames: 2,
                     bit_identical: true,
                 }),
+                ingest: Some(IngestReport {
+                    format: "mot".into(),
+                    frames: 60,
+                    detections: 322,
+                    warnings: 0,
+                    gt_tracks: 6,
+                }),
             },
             CellReport {
                 id: "batch-d5-dp90-fp5-occ-s4-a2x".into(),
@@ -760,6 +816,7 @@ mod tests {
                     sheds: 1,
                 }),
                 wire: None,
+                ingest: None,
             }],
         }
     }
@@ -795,9 +852,9 @@ mod tests {
 
     #[test]
     fn missing_fields_error_instead_of_panicking() {
-        let v = parse(r#"{"schema": 3, "kind": "lab"}"#).unwrap();
+        let v = parse(r#"{"schema": 4, "kind": "lab"}"#).unwrap();
         assert!(LabReport::from_value(&v).is_err());
-        let v2 = parse(r#"{"schema": 3, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
+        let v2 = parse(r#"{"schema": 4, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
         assert!(LabReport::from_value(&v2).is_err());
     }
 

@@ -40,7 +40,9 @@ use crate::sort::{Bbox, MotMetrics, SortParams};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use super::report::{CellReport, CounterTotals, FpsStats, QualityStats, SloReport, WireReport};
+use super::report::{
+    CellReport, CounterTotals, FpsStats, IngestReport, QualityStats, SloReport, WireReport,
+};
 
 /// The grid: one scenario per element of the cartesian product of the
 /// axes. Keep axes short — cells multiply.
@@ -126,6 +128,12 @@ impl ScenarioAxes {
     /// the same 4-stream batch cell driven over a loopback TCP socket
     /// through the `WireServer`, which the gate holds to ledger
     /// conservation and bit-identity with the in-process run.
+    /// The suite also appends one *ingest* cell: the batch engine run
+    /// on the checked-in real-format fixture files
+    /// (`rust/tests/fixtures/ingest/tiny.{det,gt}.txt`) through the
+    /// full `data::ingest` pipeline — strict parse, validation,
+    /// CLEAR-MOT against the fixture's own ground truth. Real footage
+    /// has no synthetic sibling, so ingest cells gate on FPS only.
     pub fn smoke_cells() -> Vec<Scenario> {
         let mut cells = ScenarioAxes::smoke().cells();
         let base = cells
@@ -135,6 +143,7 @@ impl ScenarioAxes {
             .expect("smoke grid always has a multi-stream batch cell");
         cells.push(Scenario { admission: 2.0, ..base });
         cells.push(Scenario { wire: true, ..base });
+        cells.push(Scenario { ingest: true, streams: 1, ..base });
         cells
     }
 
@@ -162,6 +171,7 @@ impl ScenarioAxes {
                                         streams,
                                         admission,
                                         wire: false,
+                                        ingest: false,
                                         frames: self.frames,
                                         seed: self.seed,
                                     });
@@ -198,6 +208,14 @@ pub struct Scenario {
     /// loopback socket to a `WireServer` instead of in-process session
     /// handles, and the report row gains a [`WireReport`].
     pub wire: bool,
+    /// Run the cell on the checked-in *real-input* fixture files
+    /// instead of synthetic footage: the full `data::ingest` pipeline
+    /// (strict parse, validation, IR → sequence) feeds the engine and
+    /// CLEAR-MOT scores against the fixture's gt. The report row gains
+    /// an [`IngestReport`]. Ingest cells ignore the synthetic axes
+    /// (`max_objects`, `det_prob`, `fp_rate`, `occlusion`, `frames`) —
+    /// the fixture defines the workload.
+    pub ingest: bool,
     /// Frames per stream.
     pub frames: u32,
     /// Grid seed.
@@ -210,6 +228,11 @@ impl Scenario {
     /// the cell's 1x sibling (same footage, unpaced admission), which
     /// the gate's MOTA-budget criterion pairs against.
     pub fn id(&self) -> String {
+        if self.ingest {
+            // real-input cells are keyed on the fixture, not the
+            // synthetic axes (which they ignore)
+            return format!("{}-ingest-tiny", self.engine.spec().replace(':', ""));
+        }
         let mut id = format!(
             "{}-d{}-dp{}-fp{}-{}-s{}",
             self.engine.spec().replace(':', ""),
@@ -241,8 +264,10 @@ impl Scenario {
     /// tracks byte-identical footage to its in-process sibling (any
     /// delivery gap is transport cost).
     pub fn synth_config(&self, stream: usize) -> SynthConfig {
-        let name =
-            format!("{}-cam{stream}", Scenario { admission: 1.0, wire: false, ..*self }.id());
+        let name = format!(
+            "{}-cam{stream}",
+            Scenario { admission: 1.0, wire: false, ingest: false, ..*self }.id()
+        );
         let mut cfg = if self.occlusion {
             SynthConfig::stress(&name, self.frames, self.max_objects, self.seed)
         } else {
@@ -265,6 +290,9 @@ impl Scenario {
     /// snapshot always comes from the calling thread regardless of the
     /// cell's stream count).
     pub fn run(&self, cfg: &BenchConfig) -> crate::Result<CellReport> {
+        if self.ingest {
+            return self.run_ingest(cfg);
+        }
         if self.wire {
             return self.run_wire();
         }
@@ -362,6 +390,7 @@ impl Scenario {
             counters: CounterTotals::from_snapshot(&counters),
             slo: None,
             wire: None,
+            ingest: None,
         })
     }
 
@@ -521,6 +550,7 @@ impl Scenario {
             counters: CounterTotals::from_snapshot(&counters),
             slo: Some(slo),
             wire: None,
+            ingest: None,
         })
     }
 
@@ -598,6 +628,105 @@ impl Scenario {
             counters: CounterTotals::from_snapshot(&counters),
             slo: None,
             wire: Some(wire),
+            ingest: None,
+        })
+    }
+
+    /// Run the cell on the checked-in ingest fixtures: parse
+    /// `tiny.det.txt` / `tiny.gt.txt` strictly through `data::ingest`,
+    /// validate both (warning counts land in the report), feed the
+    /// detections to this cell's engine, and score the emitted tracks
+    /// against the fixture's ground truth with CLEAR-MOT. Timing uses
+    /// the same `benchkit` protocol as synthetic serial cells, and the
+    /// report row gains an [`IngestReport`]. The synthetic axes are
+    /// ignored — the fixture defines frames, density and noise.
+    fn run_ingest(&self, cfg: &BenchConfig) -> crate::Result<CellReport> {
+        use crate::data::ingest::{self, ParseMode, SourceFormat};
+        let id = self.id();
+        let dir =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/ingest");
+        let (det_ir, guess) =
+            ingest::load_path(&dir.join("tiny.det.txt"), None, ParseMode::Strict)?;
+        let (gt_ir, _) =
+            ingest::load_path(&dir.join("tiny.gt.txt"), Some(SourceFormat::MotGt), ParseMode::Strict)?;
+        let warnings =
+            (ingest::validate(&det_ir).n_warnings() + ingest::validate(&gt_ir).n_warnings()) as u64;
+        let detections = det_ir.n_entries() as u64;
+        let frames = det_ir.n_frames() as u64;
+        let mut gt_ids: Vec<u64> = gt_ir
+            .frames
+            .iter()
+            .flat_map(|f| f.entries.iter().filter_map(|e| e.track_id))
+            .collect();
+        gt_ids.sort_unstable();
+        gt_ids.dedup();
+        let seq = det_ir.to_sequence();
+        let params = SortParams { timing: false, ..Default::default() };
+        let rt = match self.engine {
+            EngineKind::Xla => Some(XlaRuntime::new()?),
+            _ => None,
+        };
+        let build_engine = || -> crate::Result<Box<dyn TrackerEngine>> {
+            match &rt {
+                Some(rt) => self.engine.build_with_runtime(rt, params),
+                None => self.engine.build(params),
+            }
+        };
+
+        // quality: one serial pass collecting (frame, id, box) rows
+        let quality = {
+            let mut engine = build_engine()?;
+            let mut rows: Vec<(u32, u64, Bbox)> = Vec::new();
+            let mut boxes: Vec<Bbox> = Vec::new();
+            for frame in &seq.frames {
+                boxes.clear();
+                boxes.extend(frame.detections.iter().map(|d| d.bbox));
+                for t in engine.update(&boxes) {
+                    rows.push((frame.index, t.id, t.bbox));
+                }
+            }
+            ingest::score_tracks(&gt_ir, &rows, 0.5)
+        };
+
+        // kernel counters: delta around one serial pass
+        let counters = {
+            let mut engine = build_engine()?;
+            let before = snapshot();
+            run_sequence(&mut *engine, &seq);
+            snapshot().delta(&before)
+        };
+
+        // timing: the serial engine loop over the fixture
+        let m: Measurement = {
+            let mut engine = build_engine()?;
+            bench(&id, cfg, frames, || {
+                engine.reset();
+                run_sequence(&mut *engine, &seq);
+            })
+        };
+
+        Ok(CellReport {
+            id,
+            engine: self.engine.spec(),
+            streams: 1,
+            max_objects: seq.max_objects() as u32,
+            det_prob: 1.0,
+            fp_rate: 0.0,
+            occlusion: false,
+            frames,
+            total_frames: frames,
+            fps: FpsStats::from_measurement(&m),
+            quality: QualityStats::from_metrics(&quality),
+            counters: CounterTotals::from_snapshot(&counters),
+            slo: None,
+            wire: None,
+            ingest: Some(IngestReport {
+                format: guess.format.label().to_string(),
+                frames,
+                detections,
+                warnings,
+                gt_tracks: gt_ids.len() as u64,
+            }),
         })
     }
 }
@@ -744,6 +873,7 @@ mod tests {
             streams: 1,
             admission: 1.0,
             wire: false,
+            ingest: false,
             frames: 40,
             seed: 3,
         };
@@ -773,6 +903,7 @@ mod tests {
             streams: 3,
             admission: 1.0,
             wire: false,
+            ingest: false,
             frames: 30,
             seed: 5,
         };
@@ -800,6 +931,7 @@ mod tests {
             streams: 4,
             admission: 1.0,
             wire: false,
+            ingest: false,
             frames: 80,
             seed: 7,
         };
@@ -815,12 +947,16 @@ mod tests {
     fn smoke_suite_is_the_smoke_grid_plus_overload_and_wire_cells() {
         let cells = ScenarioAxes::smoke_cells();
         let grid = ScenarioAxes::smoke().cells();
-        assert_eq!(cells.len(), grid.len() + 2);
+        assert_eq!(cells.len(), grid.len() + 3);
         assert_eq!(cells[..grid.len()], grid[..]);
         let over = &cells[grid.len()];
         assert_eq!(over.id(), "batch-d5-dp90-fp5-occ-s4-a2x");
         assert_eq!(over.admission, 2.0);
-        let wire = cells.last().unwrap();
+        let ingest = cells.last().unwrap();
+        assert_eq!(ingest.id(), "batch-ingest-tiny");
+        assert!(ingest.ingest);
+        assert_eq!(ingest.streams, 1, "the ingest cell times the serial loop");
+        let wire = &cells[grid.len() + 1];
         assert_eq!(wire.id(), "batch-d5-dp90-fp5-occ-s4-wire");
         assert!(wire.wire);
         assert_eq!(wire.admission, 1.0, "the wire cell is unpaced");
@@ -842,6 +978,7 @@ mod tests {
             streams: 2,
             admission: 1.0,
             wire: true,
+            ingest: false,
             frames: 30,
             seed: 5,
         };
@@ -863,6 +1000,36 @@ mod tests {
         assert!(w.sessions_per_sec > 0.0);
         assert!(r.fps.median > 0.0);
         assert!(r.quality.n_gt > 0, "delivered-row scoring keeps the full GT denominator");
+    }
+
+    #[test]
+    fn ingest_cell_runs_end_to_end_on_the_fixtures() {
+        let cell = *ScenarioAxes::smoke_cells().last().unwrap();
+        assert!(cell.ingest);
+        let cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(1),
+            samples: 2,
+            min_sample_time: std::time::Duration::from_micros(100),
+        };
+        let r = cell.run(&cfg).expect("ingest cell run");
+        assert_eq!(r.id, "batch-ingest-tiny");
+        // the fixture defines the workload — these values are pinned
+        // by the checked-in files, not the scenario axes
+        assert_eq!(r.frames, 60);
+        assert_eq!(r.total_frames, 60);
+        assert_eq!(r.streams, 1);
+        let ing = r.ingest.expect("ingest cells carry an ingest block");
+        assert_eq!(ing.format, "mot");
+        assert_eq!(ing.frames, 60);
+        assert_eq!(ing.detections, 322);
+        assert_eq!(ing.warnings, 0, "the checked-in fixtures validate clean");
+        assert_eq!(ing.gt_tracks, 6);
+        assert!(r.slo.is_none() && r.wire.is_none());
+        assert!(r.fps.median > 0.0);
+        assert!(r.quality.n_gt > 0);
+        assert!(r.quality.mota > 0.2, "real-input MOTA {}", r.quality.mota);
+        #[cfg(feature = "counters")]
+        assert!(r.counters.total_calls > 0);
     }
 
     #[test]
@@ -889,6 +1056,7 @@ mod tests {
             streams: 2,
             admission: 2.0,
             wire: false,
+            ingest: false,
             frames: 40,
             seed: 5,
         };

@@ -22,7 +22,12 @@
 //!   [`sort::FrameScratch`], the reused buffers that keep the
 //!   steady-state frame loop allocation-free.
 //! * [`data`] — MOT-format I/O plus a synthetic MOT-2015-like dataset
-//!   generator reproducing Table I's properties.
+//!   generator reproducing Table I's properties; [`data::ingest`] is
+//!   the typed interchange IR that brings *real* MOT Challenge / COCO
+//!   detection files to the engines — content-based auto-detection,
+//!   collected typed validation, lossless byte-stable conversion, and
+//!   a seeded parser fuzz harness (`smalltrack track --input`,
+//!   `convert`, `ingest-fuzz`).
 //! * [`engine`] — the [`engine::TrackerEngine`] trait unifying the
 //!   four tracker backends (`native` [`sort::Sort`], `batch`
 //!   [`sort::BatchSort`], `strong` [`coordinator::ParallelSort`],

@@ -2,7 +2,13 @@
 //!
 //! Subcommands:
 //!   gen-data   write the synthetic MOT-2015 suite as det.txt files
-//!   track      track one or more det.txt files (the paper's timed run)
+//!   track      track one or more det.txt files (the paper's timed run);
+//!              `--input` routes a real MOT/COCO file through the
+//!              typed ingest IR (auto-detected, strict-validated) and
+//!              scores CLEAR-MOT when `--gt` is given
+//!   convert    losslessly convert between MOT det/gt and COCO via the
+//!              ingest IR (byte-stable canonical writers)
+//!   ingest-fuzz  run the seeded structure-aware parser fuzzer
 //!   suite      run the full Table I suite in-memory and report
 //!   serve      online multi-stream serving demo with latency stats
 //!   scaling    strong/weak/throughput scaling (threads or processes)
@@ -99,6 +105,8 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "gen-data" => cmd_gen_data(&args),
         "track" => cmd_track(&args),
+        "convert" => cmd_convert(&args),
+        "ingest-fuzz" => cmd_ingest_fuzz(&args),
         "suite" => cmd_suite(&args),
         "serve" => cmd_serve(&args),
         "scaling" => cmd_scaling(&args),
@@ -124,6 +132,25 @@ USAGE: smalltrack <command> [--key value ...]
 COMMANDS
   gen-data  --out DIR [--seed N] [--replicas K]     write synthetic MOT det.txt suite
   track     --det FILE[,FILE..] [--out DIR] [--engine E]  track det.txt files, print timing
+  track     --input FILE [--format auto|mot|mot-gt|coco] [--gt FILE]
+            [--out DIR] [--engine E] [--lenient]   track one real detection file
+                                                   through the typed ingest IR:
+                                                   auto-detects the format,
+                                                   strict-validates (issues go
+                                                   to stderr), and prints a
+                                                   CLEAR-MOT line when --gt
+                                                   names a MOT gt.txt
+  convert   --input FILE --to mot|mot-gt|coco --out FILE
+            [--format auto|mot|mot-gt|coco] [--lenient]
+                                                   lossless format conversion
+                                                   via the ingest IR; writers
+                                                   are byte-stable (converting
+                                                   a canonical file to its own
+                                                   format reproduces it)
+  ingest-fuzz [--iters N] [--seed S]               seeded structure-aware fuzz
+                                                   of every ingest parser
+                                                   (same seed => same verdict;
+                                                   the CI job pins one)
   suite     [--seed N]                              full Table I suite, in-memory
   serve     [--workers N] [--stream-fps F] [--seed N] [--engine E]
             [--streams N --frames K]                online session serving with live
@@ -144,8 +171,10 @@ COMMANDS
                                                     (engines x density x detector
                                                     noise x occlusion x streams x
                                                     admission; --smoke adds one 2x-
-                                                    admission overload cell driven
-                                                    through the adaptive runtime)
+                                                    admission overload cell, one
+                                                    wire cell, and one real-input
+                                                    ingest cell over the checked-in
+                                                    fixtures)
   lab compare BASE.json CUR.json [--margin M] [--mota-margin Q]
             [--f32-mota-delta D]                    print the delta table
   lab gate    BASE.json CUR.json [--margin 2.0] [--mota-margin 0.1]
@@ -212,7 +241,10 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 }
 
 fn cmd_track(args: &Args) -> Result<()> {
-    let dets = args.get("det").context("--det FILE[,FILE..] required")?;
+    if args.has("input") {
+        return cmd_track_input(args);
+    }
+    let dets = args.get("det").context("--det FILE[,FILE..] (or --input FILE) required")?;
     let out = args.get("out").map(PathBuf::from);
     let kind = args.engine()?;
     let mut engine = kind.build(params_fast())?;
@@ -259,6 +291,147 @@ fn cmd_track(args: &Args) -> Result<()> {
         total_secs,
         total_frames as f64 / total_secs.max(1e-12)
     );
+    Ok(())
+}
+
+/// `--format` flag → forced [`SourceFormat`], `None` meaning
+/// auto-detect (the default).
+fn format_flag(args: &Args) -> Result<Option<smalltrack::data::ingest::SourceFormat>> {
+    use smalltrack::data::ingest::SourceFormat;
+    match args.get("format").unwrap_or("auto") {
+        "auto" => Ok(None),
+        other => SourceFormat::parse(other)
+            .map(Some)
+            .with_context(|| format!("--format: unknown format '{other}' (auto|mot|mot-gt|coco)")),
+    }
+}
+
+/// `track --input` — one real detection file through the typed ingest
+/// IR: auto-detect (or forced `--format`), strict parse + collected
+/// validation (issues to stderr), track on any engine, and CLEAR-MOT
+/// against `--gt` when given.
+fn cmd_track_input(args: &Args) -> Result<()> {
+    use smalltrack::data::ingest::{self, ParseMode, SourceFormat};
+    let input = PathBuf::from(args.get("input").context("--input FILE required")?);
+    let mode = if args.has("lenient") { ParseMode::Lenient } else { ParseMode::Strict };
+    let (ir, guess) = ingest::load_path(&input, format_flag(args)?, mode)?;
+    let report = ingest::validate(&ir);
+    for issue in &report.issues {
+        eprintln!("{}: {issue}", input.display());
+    }
+    eprintln!(
+        "{}: {} ({} confidence: {}) — {} frames, {} detections, {}",
+        input.display(),
+        guess.format.label(),
+        guess.confidence.label(),
+        guess.detail,
+        ir.n_frames(),
+        ir.n_entries(),
+        report.summary()
+    );
+    let seq = ir.to_sequence();
+    let kind = args.engine()?;
+    let mut engine = kind.build(params_fast())?;
+    let mut rows: Vec<(u32, u64, Bbox)> = Vec::new();
+    let t0 = Instant::now();
+    let mut boxes = Vec::new();
+    for frame in &seq.frames {
+        boxes.clear();
+        boxes.extend(frame.detections.iter().map(|d| d.bbox));
+        for t in engine.update(&boxes) {
+            rows.push((frame.index, t.id, t.bbox));
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    if let Some(dir) = args.get("out").map(PathBuf::from) {
+        write_track_file(&rows, &dir.join(format!("{}.txt", seq.name)))?;
+    }
+    eprintln!(
+        "{}: {} frames in {dt:.4}s ({:.0} fps)",
+        seq.name,
+        seq.n_frames(),
+        seq.n_frames() as f64 / dt.max(1e-12)
+    );
+    let mut quality = String::new();
+    if let Some(gt) = args.get("gt") {
+        let (gt_ir, _) =
+            ingest::load_path(&PathBuf::from(gt), Some(SourceFormat::MotGt), mode)?;
+        let m = ingest::score_tracks(&gt_ir, &rows, 0.5);
+        println!(
+            "CLEAR-MOT vs {gt}: MOTA {:.4} MOTP {:.4} precision {:.4} recall {:.4} (gt {} tp {} fp {} fn {} idsw {})",
+            m.mota(),
+            m.motp(),
+            m.precision(),
+            m.recall(),
+            m.n_gt,
+            m.tp,
+            m.fp,
+            m.fn_,
+            m.id_switches
+        );
+        quality = format!(", \"mota\": {:.6}", m.mota());
+    }
+    // machine-readable line, same shape as the --det path
+    println!(
+        "{{\"impl\": \"rust-{}\", \"frames\": {}, \"seconds\": {:.6}, \"fps\": {:.1}{quality}}}",
+        kind.label(),
+        seq.n_frames(),
+        dt,
+        seq.n_frames() as f64 / dt.max(1e-12)
+    );
+    Ok(())
+}
+
+/// `convert` — lossless format conversion through the ingest IR. The
+/// writers are canonical and byte-stable: converting a canonical file
+/// to its own format reproduces it exactly (CI pins this with
+/// `git diff --exit-code` over the checked-in fixtures).
+fn cmd_convert(args: &Args) -> Result<()> {
+    use smalltrack::data::ingest::{self, ParseMode, SourceFormat};
+    let input = PathBuf::from(args.get("input").context("--input FILE required")?);
+    let to = args.get("to").context("--to mot|mot-gt|coco required")?;
+    let to = SourceFormat::parse(to)
+        .with_context(|| format!("--to: unknown format '{to}' (mot|mot-gt|coco)"))?;
+    let out = args.get("out").context("--out FILE required")?;
+    if out == "true" {
+        bail!("--out requires a <path> argument");
+    }
+    let mode = if args.has("lenient") { ParseMode::Lenient } else { ParseMode::Strict };
+    let (ir, guess) = ingest::load_path(&input, format_flag(args)?, mode)?;
+    let report = ingest::validate(&ir);
+    for issue in &report.issues {
+        eprintln!("{}: {issue}", input.display());
+    }
+    let text = ingest::write_str(&ir, to);
+    let out = PathBuf::from(out);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, &text)?;
+    eprintln!(
+        "{} ({}) -> {} ({}): {} frames, {} detections, {} bytes",
+        input.display(),
+        guess.format.label(),
+        out.display(),
+        to.label(),
+        ir.n_frames(),
+        ir.n_entries(),
+        text.len()
+    );
+    Ok(())
+}
+
+/// `ingest-fuzz` — the seeded structure-aware parser fuzzer. Any
+/// contract violation (panic, non-canonical rewrite) aborts the run;
+/// a clean exit prints the deterministic tally.
+fn cmd_ingest_fuzz(args: &Args) -> Result<()> {
+    use smalltrack::data::ingest::fuzz;
+    let iters: u64 = args.num("iters", 10_000u64)?;
+    let seed: u64 = args.num("seed", 7u64)?;
+    let stats = fuzz::run(seed, iters);
+    println!("ingest-fuzz seed {seed}: {}", stats.summary());
     Ok(())
 }
 

@@ -1,0 +1,224 @@
+#!/usr/bin/env python3
+"""Regenerate the checked-in ingest fixtures (deterministic).
+
+Every number is quantized to 1/64 px (dyadic), so Python's repr and
+Rust's shortest-roundtrip Display agree byte-for-byte, and the emitted
+files are exact fixed points of the canonical writers in
+rust/src/data/ingest/convert.rs:
+
+  tiny.det.txt   -- MOT det.txt, 60 frames, 6 objects + dropout + FPs
+  tiny.gt.txt    -- matching MOT gt.txt (ids 1..6, class/vis varied)
+  tiny.coco.json -- byte-exact write_coco() of the parsed det fixture
+  ambiguous.txt  -- id column mixes -1 and real ids (auto-detect must
+                    return a typed "ambiguous" error)
+  garbage.txt    -- not a detection format at all
+
+Run from anywhere: python3 make_fixtures.py
+CI regenerates nothing; the Rust round-trip tests and the convert CLI
+re-serialize these files and `git diff --exit-code` pins the bytes.
+"""
+
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FRAMES = 60
+Q = 64.0  # quantization grid (1/64 px)
+
+
+class Lcg:
+    """Same 64-bit LCG family the Rust fuzz harness uses."""
+
+    def __init__(self, seed):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self):
+        self.state = (
+            self.state * 6364136223846793005 + 1442695040888963407
+        ) & 0xFFFFFFFFFFFFFFFF
+        return self.state
+
+    def unit(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+
+def q(x):
+    """Snap to the 1/64 grid (keeps repr == Rust Display)."""
+    return round(x * Q) / Q
+
+
+def fmt(x):
+    """Mirror convert.rs fmt_num: shortest roundtrip, ints without .0"""
+    x = float(x)
+    if x == int(x) and abs(x) < 1e15:
+        return str(int(x))
+    s = repr(x)
+    assert "e" not in s and "E" not in s, f"exponent form would diverge: {s}"
+    assert float(s) == x
+    return s
+
+
+# ---------------------------------------------------------------- gt --
+
+# (id, first_frame, last_frame, l0, t0, w, h, vx, vy, class, visibility)
+OBJECTS = [
+    (1, 1, FRAMES, 40.0, 60.0, 36.0, 58.0, 3.5, 0.5, 1, 1.0),
+    (2, 1, FRAMES, 520.0, 80.0, 34.0, 62.0, -3.0, 1.25, 1, 1.0),
+    (3, 1, FRAMES, 120.0, 300.0, 40.0, 66.0, 2.25, -1.5, 1, 1.0),
+    (4, 1, FRAMES, 420.0, 340.0, 30.0, 54.0, -1.75, -0.75, 1, 1.0),
+    (5, 10, FRAMES, 260.0, 40.0, 38.0, 60.0, 0.5, 3.0, 2, 1.0),
+    (6, 1, 45, 60.0, 400.0, 44.0, 70.0, 4.0, -2.0, 2, 0.75),
+]
+
+
+def gt_boxes():
+    """{frame: [(id, l, t, w, h, class, vis)]}, frame-major, id order."""
+    frames = {f: [] for f in range(1, FRAMES + 1)}
+    for oid, f0, f1, l0, t0, w, h, vx, vy, cls, vis in OBJECTS:
+        for f in range(f0, f1 + 1):
+            k = f - f0
+            l = q(l0 + vx * k)
+            t = q(t0 + vy * k)
+            frames[f].append((oid, max(0.0, l), max(0.0, t), w, h, cls, vis))
+    return frames
+
+
+def write_gt(frames):
+    rows = []
+    for f in range(1, FRAMES + 1):
+        for oid, l, t, w, h, cls, vis in frames[f]:
+            rows.append(
+                f"{f},{oid},{fmt(l)},{fmt(t)},{fmt(w)},{fmt(h)},1,{cls},{fmt(vis)}\n"
+            )
+    return "".join(rows)
+
+
+# --------------------------------------------------------------- det --
+
+FP_FRAMES = {7, 19, 33, 51}  # frames that get one spurious detection
+
+
+def det_rows(frames, rng):
+    """[(frame, l, t, w, h, score)] frame-major, sorted like the writer."""
+    rows = []
+    for f in range(1, FRAMES + 1):
+        for oid, l, t, w, h, _cls, _vis in frames[f]:
+            # object 1 is never dropped so every frame has >=1 row and
+            # the parsed sequence stays 60 frames long
+            if oid != 1 and rng.unit() < 0.08:
+                continue
+            jl = max(0.0, q(l + (rng.unit() - 0.5) * 3.0))
+            jt = max(0.0, q(t + (rng.unit() - 0.5) * 3.0))
+            jw = max(1.0, q(w + (rng.unit() - 0.5) * 2.0))
+            jh = max(1.0, q(h + (rng.unit() - 0.5) * 2.0))
+            score = q(0.55 + 0.43 * rng.unit())
+            rows.append((f, jl, jt, jw, jh, score))
+        if f in FP_FRAMES:
+            fl = q(600.0 * rng.unit())
+            ft = q(420.0 * rng.unit())
+            rows.append((f, fl, ft, q(20.0 + 10.0 * rng.unit()), q(40.0 + 10.0 * rng.unit()), 0.3))
+    return rows
+
+
+def write_det(rows):
+    return "".join(
+        f"{f},-1,{fmt(l)},{fmt(t)},{fmt(w)},{fmt(h)},{fmt(s)},-1,-1,-1\n"
+        for f, l, t, w, h, s in rows
+    )
+
+
+# -------------------------------------------------------------- coco --
+
+
+def jesc(s):
+    out = ['"']
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\r":
+            out.append("\\r")
+        elif c == "\t":
+            out.append("\\t")
+        elif ord(c) < 0x20:
+            out.append("\\u%04x" % ord(c))
+        else:
+            out.append(c)
+    out.append('"')
+    return "".join(out)
+
+
+def jpretty(v, depth=0):
+    """Byte-mirror of data/json.rs write_value with indent=2."""
+    pad, pad1 = "  " * depth, "  " * (depth + 1)
+    if isinstance(v, (int, float)):
+        return fmt(v)
+    if isinstance(v, str):
+        return jesc(v)
+    if isinstance(v, list):
+        if not v:
+            return "[]"
+        body = ",".join("\n" + pad1 + jpretty(e, depth + 1) for e in v)
+        return "[" + body + "\n" + pad + "]"
+    if isinstance(v, dict):
+        if not v:
+            return "{}"
+        body = ",".join(
+            "\n" + pad1 + jesc(k) + ": " + jpretty(v[k], depth + 1)
+            for k in sorted(v)
+        )
+        return "{" + body + "\n" + pad + "}"
+    raise TypeError(type(v))
+
+
+def write_coco(rows):
+    """Mirror convert.rs write_coco for a det-sourced IR (no image
+    size, no classes, no track ids)."""
+    images = [{"id": f} for f in range(1, FRAMES + 1)]
+    annotations = []
+    for i, (f, l, t, w, h, s) in enumerate(rows, start=1):
+        annotations.append(
+            {"id": i, "image_id": f, "bbox": [l, t, w, h], "score": s}
+        )
+    doc = {"annotations": annotations, "categories": [], "images": images}
+    return jpretty(doc) + "\n"
+
+
+# --------------------------------------------------------------- out --
+
+
+def main():
+    rng = Lcg(0x5EED0401)
+    frames = gt_boxes()
+    rows = det_rows(frames, rng)
+
+    out = {
+        "tiny.gt.txt": write_gt(frames),
+        "tiny.det.txt": write_det(rows),
+        "tiny.coco.json": write_coco(rows),
+        "ambiguous.txt": (
+            "1,-1,10,20,30,40,0.9,-1,-1,-1\n"
+            "1,3,12,22,30,40,1,1,1\n"
+            "2,-1,11,21,30,40,0.8,-1,-1,-1\n"
+            "2,4,13,23,30,40,1,1,1\n"
+        ),
+        "garbage.txt": (
+            "this file is not a detection file\n"
+            "lorem ipsum dolor sit amet\n"
+            "12 monkeys, no commas that parse\n"
+        ),
+    }
+    for name, text in out.items():
+        path = os.path.join(HERE, name)
+        with open(path, "w", newline="") as fh:
+            fh.write(text)
+        print(f"wrote {name}: {len(text)} bytes, {text.count(chr(10))} lines")
+    n_det = len(rows)
+    n_gt = sum(len(v) for v in frames.values())
+    print(f"det rows: {n_det}, gt rows: {n_gt}, frames: {FRAMES}, objects: {len(OBJECTS)}")
+
+
+if __name__ == "__main__":
+    main()

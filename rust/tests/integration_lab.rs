@@ -36,12 +36,19 @@ fn checked_in_baseline_matches_the_smoke_grid() {
     assert_eq!(got, want, "baseline cells drifted from ScenarioAxes::smoke_cells()");
     assert!(base.manifest.smoke);
     assert_eq!(base.manifest.tool, "smalltrack-lab");
-    // exactly the overload cell carries an SLO block, and exactly the
-    // wire cell carries a wire block
+    // exactly the overload cell carries an SLO block, exactly the
+    // wire cell carries a wire block, and exactly the real-input cell
+    // carries an ingest block
     for c in &base.cells {
         assert_eq!(c.slo.is_some(), c.id.ends_with("-a2x"), "{}", c.id);
         assert_eq!(c.wire.is_some(), c.id.ends_with("-wire"), "{}", c.id);
+        assert_eq!(c.ingest.is_some(), c.id == "batch-ingest-tiny", "{}", c.id);
     }
+    let ingest = base.cells.iter().find(|c| c.ingest.is_some()).expect("ingest cell");
+    let block = ingest.ingest.as_ref().unwrap();
+    assert_eq!(block.format, "mot");
+    assert_eq!((block.frames, block.detections, block.gt_tracks), (60, 322, 6));
+    assert_eq!(block.warnings, 0, "fixtures must validate clean");
 }
 
 #[test]
@@ -113,6 +120,18 @@ fn lab_run_smoke_emits_schema_valid_report_and_gates_against_baseline() {
     assert_eq!(w.frames_acked, c.total_frames, "{}", c.id);
     assert!(w.bit_identical, "{}: wire tracks diverged from the in-process run", c.id);
     assert!(w.sessions_per_sec > 0.0 && w.p99_ms >= w.p50_ms, "{}", c.id);
+
+    // the real-input cell parsed the checked-in fixtures through the
+    // ingest IR and scored against their ground truth
+    let ingest_cells: Vec<_> = report.cells.iter().filter(|c| c.ingest.is_some()).collect();
+    assert_eq!(ingest_cells.len(), 1, "smoke suite carries exactly one ingest cell");
+    let (c, i) = (ingest_cells[0], ingest_cells[0].ingest.as_ref().unwrap());
+    assert_eq!(c.id, "batch-ingest-tiny");
+    assert_eq!(i.format, "mot", "{}", c.id);
+    assert_eq!((i.frames, i.detections, i.gt_tracks), (60, 322, 6), "{}", c.id);
+    assert_eq!(i.warnings, 0, "{}: fixtures must validate clean", c.id);
+    assert_eq!(c.frames, i.frames, "{}: cell frames come from the fixture", c.id);
+    assert!(c.quality.mota > 0.2, "{}: implausible fixture MOTA {}", c.id, c.quality.mota);
 
     // --- lab gate <checked-in baseline> <fresh run> passes (floor
     // baseline: any healthy build clears it at the default margins)
@@ -194,6 +213,28 @@ fn gate_fails_on_synthetic_quality_regression() {
     let (ok_loose, _) = run_gate(&base, &cur, &["--mota-margin", "0.9"]);
     assert!(ok_loose);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gate_ignores_mota_on_the_ingest_cell_but_still_gates_its_fps() {
+    // the real-input cell's MOTA is a fixture property (pinned by the
+    // ingest identity tests), so the baseline MOTA margin must not
+    // apply to it — but throughput still gates
+    let (dir, base, cur) = doctored("ingest_mota", |r| {
+        let c = r.cells.iter_mut().find(|c| c.ingest.is_some()).expect("ingest cell");
+        c.quality.mota -= 0.5;
+    });
+    let (ok, stdout) = run_gate(&base, &cur, &[]);
+    assert!(ok, "ingest cells gate on FPS only:\n{stdout}");
+    let (dir2, base2, cur2) = doctored("ingest_fps", |r| {
+        let c = r.cells.iter_mut().find(|c| c.ingest.is_some()).expect("ingest cell");
+        c.fps.median /= 10.0;
+    });
+    let (ok2, stdout2) = run_gate(&base2, &cur2, &[]);
+    assert!(!ok2, "an ingest fps collapse must still fail:\n{stdout2}");
+    assert!(stdout2.contains("FPS REGRESSED"), "{stdout2}");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
 }
 
 #[test]
