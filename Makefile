@@ -2,7 +2,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts test test-nocounters bench bench-lanes fmt clippy lab-smoke lab-baseline wire-smoke ingest-smoke
+.PHONY: artifacts test test-nocounters bench bench-lanes fmt clippy lab-smoke lab-baseline wire-smoke fleet-smoke ingest-smoke check-links
 
 # Lower the JAX/Pallas tracker-bank graphs to HLO text + export the
 # golden parity/track JSONs and the manifest (requires python with jax;
@@ -39,6 +39,20 @@ lab-smoke:
 wire-smoke:
 	cargo run --release -- netload --streams 4 --frames 80 --engine batch \
 		--faults aggressive --cuts 4 --seed 7 --json wire_report.json
+
+# The CI fleet path: the same contract held across a session-affine
+# router over a 2-shard fleet, under aggressive faults PLUS one
+# scheduled mid-run shard kill (the killed shard's sessions are
+# re-driven from the router's frame bank). See docs/OPERATIONS.md.
+fleet-smoke:
+	cargo run --release -- netload --streams 4 --frames 80 --engine batch \
+		--router 2 --kills 1 --faults aggressive --cuts 3 --seed 7 \
+		--json fleet_report.json
+
+# Verify every relative markdown link in the repo's docs resolves
+# (same check CI's docs job runs).
+check-links:
+	python3 tools/check_md_links.py
 
 # The CI ingest path: the seeded parser fuzzer, then the convert CLI
 # re-serializes the checked-in fixtures onto themselves (byte identity

@@ -63,6 +63,12 @@ pub struct FaultPlan {
     pub to_server: DirectionPlan,
     /// Faults applied to server→client bytes.
     pub to_client: DirectionPlan,
+    /// Offsets on the client→server stream at which a **shard kill**
+    /// event fires. The proxy itself only reports the crossing (k-th
+    /// offset → ordinal `k` via [`FaultProxy::start_with_events`]);
+    /// the fleet harness maps the ordinal to a shard and restarts that
+    /// shard's process, exercising the router's re-drive path.
+    pub shard_kill_at: Vec<u64>,
 }
 
 impl FaultPlan {
@@ -100,7 +106,27 @@ impl FaultPlan {
             let delay = Duration::from_millis(5 + rng.below(20));
             to_server.delay_at.push((span / 10 + rng.below(span * 8 / 10), delay));
         }
-        FaultPlan { to_server: to_server.sorted(), to_client: to_client.sorted() }
+        FaultPlan {
+            to_server: to_server.sorted(),
+            to_client: to_client.sorted(),
+            shard_kill_at: Vec::new(),
+        }
+    }
+
+    /// Schedule `kills` shard-kill events, drawn from the middle of the
+    /// same `approx_bytes` client→server budget as [`aggressive`]
+    /// offsets (seeded independently, so adding kills never perturbs
+    /// the cut/corruption schedule).
+    ///
+    /// [`aggressive`]: FaultPlan::aggressive
+    pub fn with_shard_kills(mut self, kills: usize, seed: u64, approx_bytes: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0x5EED_F1EE);
+        let span = approx_bytes.max(1024);
+        for _ in 0..kills {
+            self.shard_kill_at.push(span / 10 + rng.below(span * 8 / 10));
+        }
+        self.shard_kill_at.sort_unstable();
+        self
     }
 }
 
@@ -109,18 +135,24 @@ impl FaultPlan {
 struct DirectionState {
     plan: DirectionPlan,
     offset: u64,
+    /// Shard-kill event offsets (client→server direction only; empty
+    /// on the return path).
+    kill_at: Vec<u64>,
     /// Cursors into the sorted schedules.
     next_corrupt: usize,
     next_cut: usize,
     next_delay: usize,
+    next_kill: usize,
 }
 
 impl DirectionState {
     /// Apply faults to `buf` (the bytes about to stream at the current
-    /// offset). Returns `(deliver_len, delay, cut)`: deliver the first
-    /// `deliver_len` bytes (corrupted in place), sleep `delay` first if
-    /// set, and sever the connection after delivering when `cut`.
-    fn apply(&mut self, buf: &mut [u8]) -> (usize, Option<Duration>, bool) {
+    /// offset). Returns `(deliver_len, delay, cut, kills)`: deliver the
+    /// first `deliver_len` bytes (corrupted in place), sleep `delay`
+    /// first if set, sever the connection after delivering when `cut`,
+    /// and report the shard-kill ordinals whose offsets this chunk
+    /// crossed.
+    fn apply(&mut self, buf: &mut [u8]) -> (usize, Option<Duration>, bool, std::ops::Range<usize>) {
         let start = self.offset;
         let end = start + buf.len() as u64;
         let mut deliver = buf.len();
@@ -152,11 +184,18 @@ impl DirectionState {
             }
             self.next_delay += 1;
         }
+        let kill_start = self.next_kill;
+        while let Some(&off) = self.kill_at.get(self.next_kill) {
+            if off >= end {
+                break;
+            }
+            self.next_kill += 1;
+        }
         // even when a cut truncates this chunk, the global offset
         // advances by what the client actually wrote — the schedule is
         // keyed to *sent* bytes so it stays deterministic
         self.offset = end;
-        (deliver, delay, cut)
+        (deliver, delay, cut, kill_start..self.next_kill)
     }
 }
 
@@ -167,6 +206,11 @@ pub struct FaultProxy {
     accept_handle: Option<thread::JoinHandle<()>>,
 }
 
+/// Shard-kill event sink: called with the kill's 0-based ordinal in
+/// the schedule. Invoked from a pump thread with no proxy locks held,
+/// so the handler may restart servers or rewrite shard maps freely.
+pub type KillEvents = dyn Fn(usize) + Send + Sync;
+
 /// One-direction pump: read from `src`, apply `dir` faults, write to
 /// `dst`; on a scheduled cut, sever both sockets so the peer notices.
 fn pump(
@@ -174,6 +218,7 @@ fn pump(
     mut dst: TcpStream,
     dir: Arc<Mutex<DirectionState>>,
     stop: Arc<AtomicBool>,
+    on_kill: Option<Arc<KillEvents>>,
 ) {
     let mut buf = [0u8; 4096];
     loop {
@@ -184,12 +229,17 @@ fn pump(
             Ok(0) | Err(_) => break,
             Ok(n) => n,
         };
-        let (deliver, delay, cut) = dir.lock().unwrap().apply(&mut buf[..n]);
+        let (deliver, delay, cut, kills) = dir.lock().unwrap().apply(&mut buf[..n]);
         if let Some(d) = delay {
             thread::sleep(d);
         }
         if deliver > 0 && dst.write_all(&buf[..deliver]).is_err() {
             break;
+        }
+        if let Some(handler) = on_kill.as_ref() {
+            for ordinal in kills {
+                handler(ordinal);
+            }
         }
         if cut {
             break;
@@ -203,24 +253,51 @@ fn pump(
 
 impl FaultProxy {
     /// Start a proxy on an ephemeral loopback port, forwarding every
-    /// accepted connection to `upstream` under `plan`.
+    /// accepted connection to `upstream` under `plan`. Any
+    /// `shard_kill_at` offsets in the plan are silently ignored — use
+    /// [`FaultProxy::start_with_events`] to receive them.
     pub fn start(upstream: SocketAddr, plan: FaultPlan) -> crate::Result<FaultProxy> {
+        FaultProxy::start_inner(upstream, plan, None)
+    }
+
+    /// Like [`FaultProxy::start`], but fires `on_kill` with the 0-based
+    /// ordinal of every `shard_kill_at` offset the client→server stream
+    /// crosses (see [`KillEvents`]).
+    pub fn start_with_events(
+        upstream: SocketAddr,
+        plan: FaultPlan,
+        on_kill: impl Fn(usize) + Send + Sync + 'static,
+    ) -> crate::Result<FaultProxy> {
+        FaultProxy::start_inner(upstream, plan, Some(Arc::new(on_kill)))
+    }
+
+    fn start_inner(
+        upstream: SocketAddr,
+        plan: FaultPlan,
+        on_kill: Option<Arc<KillEvents>>,
+    ) -> crate::Result<FaultProxy> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let mut kill_at = plan.shard_kill_at;
+        kill_at.sort_unstable();
         let to_server = Arc::new(Mutex::new(DirectionState {
             plan: plan.to_server.sorted(),
             offset: 0,
+            kill_at,
             next_corrupt: 0,
             next_cut: 0,
             next_delay: 0,
+            next_kill: 0,
         }));
         let to_client = Arc::new(Mutex::new(DirectionState {
             plan: plan.to_client.sorted(),
             offset: 0,
+            kill_at: Vec::new(),
             next_corrupt: 0,
             next_cut: 0,
             next_delay: 0,
+            next_kill: 0,
         }));
         let flag = Arc::clone(&shutdown);
         let accept_handle = thread::Builder::new()
@@ -244,8 +321,9 @@ impl FaultProxy {
                     let stop = Arc::new(AtomicBool::new(false));
                     let (d_up, d_down) = (Arc::clone(&to_server), Arc::clone(&to_client));
                     let (st_a, st_b) = (Arc::clone(&stop), stop);
-                    pumps.push(thread::spawn(move || pump(client, server, d_up, st_a)));
-                    pumps.push(thread::spawn(move || pump(s2, c2, d_down, st_b)));
+                    let kill = on_kill.clone();
+                    pumps.push(thread::spawn(move || pump(client, server, d_up, st_a, kill)));
+                    pumps.push(thread::spawn(move || pump(s2, c2, d_down, st_b, None)));
                 }
                 for p in pumps {
                     let _ = p.join();
@@ -337,7 +415,7 @@ mod tests {
         let (up, server) = echo_server();
         let plan = FaultPlan {
             to_server: DirectionPlan { corrupt_at: vec![3], ..Default::default() },
-            to_client: DirectionPlan::default(),
+            ..FaultPlan::default()
         };
         let proxy = FaultProxy::start(up, plan).unwrap();
         let mut c = TcpStream::connect(proxy.addr()).unwrap();
@@ -358,7 +436,7 @@ mod tests {
         let (up, server) = echo_server();
         let plan = FaultPlan {
             to_server: DirectionPlan { cut_at: vec![6], ..Default::default() },
-            to_client: DirectionPlan::default(),
+            ..FaultPlan::default()
         };
         let proxy = FaultProxy::start(up, plan).unwrap();
         let mut c = TcpStream::connect(proxy.addr()).unwrap();
@@ -391,6 +469,51 @@ mod tests {
         drop(k);
         proxy.shutdown();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn shard_kill_events_fire_in_order_without_dropping_bytes() {
+        let (up, server) = echo_server();
+        let plan = FaultPlan {
+            shard_kill_at: vec![4, 6],
+            ..FaultPlan::default()
+        };
+        let fired = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&fired);
+        let proxy = FaultProxy::start_with_events(up, plan, move |ordinal| {
+            sink.lock().unwrap().push(ordinal);
+        })
+        .unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c.write_all(&[7u8; 8]).unwrap();
+        let mut got = [0u8; 8];
+        c.read_exact(&mut got).unwrap();
+        assert_eq!(got, [7u8; 8], "kill events never eat or corrupt bytes");
+        // the handler runs on the pump thread; give it a beat to land
+        for _ in 0..200 {
+            if fired.lock().unwrap().len() == 2 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(*fired.lock().unwrap(), vec![0, 1], "one ordinal per scheduled offset");
+        let mut k = TcpStream::connect(up).unwrap();
+        let _ = k.write_all(&[0xEE]);
+        drop(k);
+        proxy.shutdown();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn with_shard_kills_is_seeded_and_leaves_the_base_plan_alone() {
+        let base = FaultPlan::aggressive(7, 10_000, 3);
+        let killed = FaultPlan::aggressive(7, 10_000, 3).with_shard_kills(2, 7, 10_000);
+        assert_eq!(base.to_server.cut_at, killed.to_server.cut_at, "kills don't perturb cuts");
+        assert_eq!(killed.shard_kill_at.len(), 2);
+        assert!(killed.shard_kill_at.windows(2).all(|w| w[0] <= w[1]));
+        let again = FaultPlan::aggressive(7, 10_000, 3).with_shard_kills(2, 7, 10_000);
+        assert_eq!(killed.shard_kill_at, again.shard_kill_at, "same seed, same kill schedule");
     }
 
     #[test]

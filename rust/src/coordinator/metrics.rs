@@ -252,10 +252,15 @@ pub struct WireCounters {
     /// Connections torn down without a clean `CLOSE` (timeout, EOF,
     /// poison) — the sessions survive for resume.
     pub dirty_disconnects: u64,
+    /// Sessions opened per shard, indexed by shard — occupancy stats
+    /// populated by the fleet router ([`crate::coordinator::fleet`]);
+    /// empty for single-server deployments.
+    pub per_shard_sessions: Vec<u64>,
 }
 
 impl WireCounters {
-    /// Merge another instance (fleet roll-ups).
+    /// Merge another instance (fleet roll-ups). Per-shard occupancy
+    /// merges element-wise, widening to the longer shard vector.
     pub fn merge(&mut self, other: &WireCounters) {
         self.connections += other.connections;
         self.sessions_opened += other.sessions_opened;
@@ -264,6 +269,16 @@ impl WireCounters {
         self.rejected_frames += other.rejected_frames;
         self.dup_acks += other.dup_acks;
         self.dirty_disconnects += other.dirty_disconnects;
+        if self.per_shard_sessions.len() < other.per_shard_sessions.len() {
+            self.per_shard_sessions.resize(other.per_shard_sessions.len(), 0);
+        }
+        for (mine, theirs) in self
+            .per_shard_sessions
+            .iter_mut()
+            .zip(other.per_shard_sessions.iter())
+        {
+            *mine += theirs;
+        }
     }
 }
 
@@ -508,15 +523,17 @@ mod tests {
             rejected_frames: 1,
             dup_acks: 4,
             dirty_disconnects: 2,
+            per_shard_sessions: vec![1, 0],
         };
         let b = a.clone();
         a.merge(&b);
         assert_eq!(a.connections, 6);
         assert_eq!(a.replays, 18);
         assert_eq!(a.dirty_disconnects, 4);
+        assert_eq!(a.per_shard_sessions, vec![2, 0]);
         let mut z = WireCounters::default();
         z.merge(&b);
-        assert_eq!(z, b, "merge into default is identity");
+        assert_eq!(z, b, "merge into default is identity (widening to b's shards)");
     }
 
     #[test]

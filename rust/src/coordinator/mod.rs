@@ -41,11 +41,16 @@
 //!   checkpoint/resume/replay recovery, and the backoff-governed
 //!   `NetClient` / netload harness
 //! * [`faults`] — deterministic seeded fault injection (an in-process
-//!   proxy applying byte-offset-keyed corrupt/cut/delay schedules)
+//!   proxy applying byte-offset-keyed corrupt/cut/delay schedules,
+//!   plus shard-kill events for the fleet harness)
+//! * [`fleet`] — the shard-per-core fleet: the session-affine
+//!   `TrackRouter` reverse proxy over N `track-serve` shard processes
+//!   and the `Fleet` supervisor that spawns and respawns them
 
 pub mod backpressure;
 pub mod control;
 pub mod faults;
+pub mod fleet;
 pub mod metrics;
 pub mod net;
 pub mod policy;
@@ -61,6 +66,7 @@ pub mod wire;
 pub use backpressure::{BoundedQueue, PushPolicy, TryPop};
 pub use control::{Action, ControlConfig, Controller, MetricsSource};
 pub use faults::{DirectionPlan, FaultPlan, FaultProxy};
+pub use fleet::{Fleet, FleetConfig, RouterConfig, ShardMap, ShardSlot, TrackRouter};
 pub use metrics::{
     FpsCounter, LatencyHistogram, ServiceMetrics, SessionSnapshot, WireCounters, WorkerCounters,
     WorkerSnapshot,

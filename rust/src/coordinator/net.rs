@@ -38,6 +38,19 @@
 //! superseded connection's teardown a no-op — a fast-reconnecting
 //! client can never have its restored session closed out from under it
 //! by the stale socket it abandoned.
+//!
+//! ## Scaling past one process
+//!
+//! Everything here is deliberately per-process: one `WireServer`, one
+//! [`TrackingService`], one address space. The fleet layer
+//! ([`super::fleet`]) stacks on top without changing this module's
+//! contract — a [`super::fleet::TrackRouter`] fronts N of these
+//! servers as shard processes, pins each `session_key` to its owning
+//! shard by FNV-1a hash, and re-drives the reconnect-and-replay
+//! machinery when a shard restarts. [`netload_run`] grows a fleet mode
+//! (`router_shards > 0`) that self-hosts such a fleet in-process, and
+//! [`WireServer::kill`] is the abrupt-death hook those tests use to
+//! simulate a crashed shard.
 
 use super::backpressure::PushPolicy;
 use super::faults::FaultProxy;
@@ -48,7 +61,7 @@ use crate::engine::{EngineKind, EngineState};
 use crate::prng::Rng;
 use crate::sort::{Bbox, CheckpointCadence};
 use std::collections::{HashMap, VecDeque};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -123,6 +136,10 @@ struct ServerShared {
     counters: Mutex<WireCounters>,
     shutdown: AtomicBool,
     conns: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// `try_clone` of every accepted socket, so [`WireServer::kill`]
+    /// can sever live connections instead of waiting out their read
+    /// timeouts (abrupt-death simulation for fleet tests).
+    streams: Mutex<Vec<TcpStream>>,
 }
 
 /// The TCP front door over the [`wire`] protocol (see module docs).
@@ -148,6 +165,7 @@ impl WireServer {
             counters: Mutex::new(WireCounters::default()),
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
+            streams: Mutex::new(Vec::new()),
         });
         let acc = Arc::clone(&inner);
         let accept = thread::Builder::new()
@@ -196,6 +214,29 @@ impl WireServer {
         let metrics = svc.expect("wire server owns its service until shutdown").shutdown();
         let counters = self.inner.counters.lock().unwrap().clone();
         (metrics, counters)
+    }
+
+    /// Abrupt death: sever every live connection and drop the server
+    /// without the graceful per-session teardown — the registry, row
+    /// logs and checkpoints all die with it, exactly like a `SIGKILL`d
+    /// shard process. The fleet tests use this to exercise the
+    /// router's re-drive path; a respawned replacement starts empty
+    /// and answers `RESUME` with `UNKNOWN_SESSION`.
+    pub fn kill(mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+        for s in self.inner.streams.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.inner.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+        // Drop (not shutdown) releases the service; its workers join
+        // on drop, and no session state survives.
     }
 
     fn stop_accepting(&mut self) {
@@ -354,6 +395,9 @@ fn serve_conn(shared: &ServerShared, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
     let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    if let Ok(clone) = stream.try_clone() {
+        shared.streams.lock().unwrap().push(clone);
+    }
     shared.counters.lock().unwrap().connections += 1;
     let mut bound: Option<Binding> = None;
     let mut hello_done = false;
@@ -972,15 +1016,21 @@ pub struct NetloadOptions {
     pub seed: u64,
     /// Fault schedule injected between clients and server, if any.
     pub faults: Option<super::faults::FaultPlan>,
-    /// Server configuration (self-serve mode).
+    /// Server configuration (self-serve mode; per-shard in fleet mode).
     pub server: WireServerConfig,
     /// Target an already-running server instead of self-serving.
     pub remote: Option<SocketAddr>,
+    /// Fleet mode: self-host this many in-process shard servers behind
+    /// a session-affine [`super::fleet::TrackRouter`] and drive the
+    /// clients through the router. 0 (the default) is direct
+    /// single-server mode. Any `shard_kill_at` offsets in `faults`
+    /// kill-and-respawn shard `ordinal % router_shards` mid-run.
+    pub router_shards: usize,
 }
 
 impl NetloadOptions {
     /// Self-serve defaults on `engine`: checkpoint every 8 frames, no
-    /// faults, default server config.
+    /// faults, default server config, no fleet.
     pub fn new(engine: EngineKind) -> NetloadOptions {
         NetloadOptions {
             engine,
@@ -989,6 +1039,7 @@ impl NetloadOptions {
             faults: None,
             server: WireServerConfig::default(),
             remote: None,
+            router_shards: 0,
         }
     }
 }
@@ -1013,8 +1064,13 @@ pub struct NetloadOutcome {
     pub sessions_per_sec: f64,
     /// Wall clock for the whole run.
     pub wall: Duration,
-    /// Server-side wire counters (self-serve mode only).
+    /// Server-side wire counters (self-serve mode only). In fleet mode
+    /// these are the **router's** counters — the client-facing ledger
+    /// view, including `per_shard_sessions` occupancy; shard-internal
+    /// counters would double-count every router redial.
     pub server_counters: Option<WireCounters>,
+    /// Shard-kill events actually fired during the run (fleet mode).
+    pub shard_kills: u64,
 }
 
 /// Extract per-frame detection boxes from a MOT sequence — the shape
@@ -1069,11 +1125,17 @@ pub fn serial_reference(
 /// Drive `streams` (one `Vec<Vec<Bbox>>` per client) through a wire
 /// server — self-served unless `opts.remote` targets one — optionally
 /// through a fault proxy, one thread per client. Verifies bit-identity
-/// against in-process reference runs and merges the ledgers.
+/// against in-process reference runs and merges the ledgers. With
+/// `opts.router_shards > 0` the clients instead run against a
+/// self-hosted shard fleet behind a [`super::fleet::TrackRouter`].
 pub fn netload_run(
-    opts: NetloadOptions,
+    mut opts: NetloadOptions,
     streams: &[Vec<Vec<Bbox>>],
 ) -> crate::Result<NetloadOutcome> {
+    if opts.router_shards > 0 {
+        return netload_run_fleet(opts, streams);
+    }
+    let faults = opts.faults.take();
     let server = match opts.remote {
         Some(_) => None,
         None => Some(WireServer::bind("127.0.0.1:0", opts.server)?),
@@ -1082,13 +1144,103 @@ pub fn netload_run(
         Some(addr) => addr,
         None => server.as_ref().expect("self-serve binds a server").addr(),
     };
-    let proxy = match opts.faults {
+    let proxy = match faults {
         Some(plan) => Some(FaultProxy::start(upstream, plan)?),
         None => None,
     };
     let addr = proxy.as_ref().map(FaultProxy::addr).unwrap_or(upstream);
     let t0 = Instant::now();
-    let results: Vec<crate::Result<NetRunOutcome>> = thread::scope(|scope| {
+    let results = drive_clients(addr, &opts, streams);
+    let wall = t0.elapsed();
+    if let Some(p) = proxy {
+        p.shutdown();
+    }
+    let server_counters = server.map(|s| s.shutdown().1);
+    summarize(&opts, streams, results, wall, server_counters, 0)
+}
+
+/// Fleet mode: bind `opts.router_shards` in-process shard servers,
+/// front them with a session-affine router, and drive every client
+/// through the router (optionally through a fault proxy in front of
+/// it). `shard_kill_at` offsets in the fault plan abruptly kill shard
+/// `ordinal % shards` and respawn an **empty** replacement on a fresh
+/// port — the in-process stand-in for a crashed `track-serve` process,
+/// exercising the router's re-drive path end to end.
+fn netload_run_fleet(
+    mut opts: NetloadOptions,
+    streams: &[Vec<Vec<Bbox>>],
+) -> crate::Result<NetloadOutcome> {
+    use super::fleet::{RouterConfig, ShardMap, TrackRouter};
+    use std::sync::atomic::AtomicU64;
+
+    if opts.remote.is_some() {
+        anyhow::bail!("--router fleet mode self-hosts its shards; drop the remote address");
+    }
+    let n = opts.router_shards;
+    let faults = opts.faults.take();
+    let mut shards = Vec::with_capacity(n);
+    for _ in 0..n {
+        shards.push(WireServer::bind("127.0.0.1:0", opts.server)?);
+    }
+    let map = ShardMap::new(shards.iter().map(WireServer::addr).collect());
+    let pool: Arc<Mutex<Vec<Option<WireServer>>>> =
+        Arc::new(Mutex::new(shards.into_iter().map(Some).collect()));
+    let router = TrackRouter::bind("127.0.0.1:0", map.clone(), RouterConfig::default())?;
+    let kills_fired = Arc::new(AtomicU64::new(0));
+    let proxy = match faults {
+        Some(plan) => {
+            let pool2 = Arc::clone(&pool);
+            let kills2 = Arc::clone(&kills_fired);
+            let server_cfg = opts.server;
+            Some(FaultProxy::start_with_events(
+                router.addr(),
+                plan,
+                move |ordinal| {
+                    let shard = ordinal % n;
+                    let mut pool = pool2.lock().unwrap();
+                    if let Some(old) = pool[shard].take() {
+                        old.kill();
+                    }
+                    if let Ok(fresh) = WireServer::bind("127.0.0.1:0", server_cfg) {
+                        map.set_addr(shard, fresh.addr());
+                        pool[shard] = Some(fresh);
+                    }
+                    kills2.fetch_add(1, Ordering::Relaxed);
+                },
+            )?)
+        }
+        None => None,
+    };
+    let addr = proxy.as_ref().map(FaultProxy::addr).unwrap_or(router.addr());
+    let t0 = Instant::now();
+    let results = drive_clients(addr, &opts, streams);
+    let wall = t0.elapsed();
+    if let Some(p) = proxy {
+        p.shutdown();
+    }
+    let counters = router.shutdown();
+    for shard in pool.lock().unwrap().drain(..).flatten() {
+        let _ = shard.shutdown();
+    }
+    summarize(
+        &opts,
+        streams,
+        results,
+        wall,
+        Some(counters),
+        kills_fired.load(Ordering::Relaxed),
+    )
+}
+
+/// One client thread per stream against `addr`; stream `i` keys its
+/// session `0xC0FF_EE00 + i` and jitters its backoff from
+/// `opts.seed + 7919·i`.
+fn drive_clients(
+    addr: SocketAddr,
+    opts: &NetloadOptions,
+    streams: &[Vec<Vec<Bbox>>],
+) -> Vec<crate::Result<NetRunOutcome>> {
+    thread::scope(|scope| {
         let handles: Vec<_> = streams
             .iter()
             .enumerate()
@@ -1108,12 +1260,19 @@ pub fn netload_run(
                     .unwrap_or_else(|_| Err(anyhow::anyhow!("netload client thread panicked")))
             })
             .collect()
-    });
-    let wall = t0.elapsed();
-    if let Some(p) = proxy {
-        p.shutdown();
-    }
-    let server_counters = server.map(|s| s.shutdown().1);
+    })
+}
+
+/// Verify bit-identity against in-process reference runs, merge the
+/// ledgers and latency, and assemble the outcome.
+fn summarize(
+    opts: &NetloadOptions,
+    streams: &[Vec<Vec<Bbox>>],
+    results: Vec<crate::Result<NetRunOutcome>>,
+    wall: Duration,
+    server_counters: Option<WireCounters>,
+    shard_kills: u64,
+) -> crate::Result<NetloadOutcome> {
     let mut outcomes = Vec::with_capacity(results.len());
     for r in results {
         outcomes.push(r?);
@@ -1143,6 +1302,7 @@ pub fn netload_run(
         sessions_per_sec,
         wall,
         server_counters,
+        shard_kills,
     })
 }
 
@@ -1200,7 +1360,7 @@ mod tests {
         let cut = approx_upstream_bytes(&frames) / 2;
         opts.faults = Some(FaultPlan {
             to_server: DirectionPlan { cut_at: vec![cut], ..DirectionPlan::default() },
-            to_client: DirectionPlan::default(),
+            ..FaultPlan::default()
         });
         let out = netload_run(opts, &[frames]).unwrap();
         assert!(out.bit_identical, "recovery must be invisible in the delivered rows");
@@ -1222,6 +1382,7 @@ mod tests {
                 ..DirectionPlan::default()
             },
             to_client: DirectionPlan { corrupt_at: vec![span / 4], ..DirectionPlan::default() },
+            ..FaultPlan::default()
         });
         let out = netload_run(opts, &[frames]).unwrap();
         assert!(out.bit_identical);

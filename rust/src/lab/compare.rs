@@ -637,6 +637,8 @@ mod tests {
             replays: 0,
             rejected_frames: 0,
             bit_identical: true,
+            shards: 0,
+            shard_kills: 0,
         }
     }
 

@@ -17,7 +17,11 @@
 //! the same footage driven over a loopback TCP socket through the
 //! `WireServer` front door, reported with the netload client ledger,
 //! socket round-trip percentiles and the bit-identity verdict
-//! ([`WireReport`]), and one *real-input* cell: the checked-in ingest
+//! ([`WireReport`]); one *fleet* cell: the wire cell's contract held
+//! across a two-shard `TrackRouter` process-fleet harness under
+//! aggressive faults plus a mid-run shard kill (the `WireReport`'s
+//! `shards`/`shard_kills` fields record the fleet shape); and one
+//! *real-input* cell: the checked-in ingest
 //! fixtures (`rust/tests/fixtures/ingest/`) parsed through the typed
 //! interchange IR, tracked, and scored against their ground truth
 //! ([`IngestReport`]) — the one place the lab measures real files
@@ -26,7 +30,8 @@
 //! configurable noise margins — plus the SLO criteria: overload p99
 //! must hold under the session deadline and delivered-row MOTA within
 //! the declared budget of the 1x sibling — plus the marginless wire
-//! criteria (ledger conservation, bit-identity) — and produces the
+//! and fleet criteria (ledger conservation, bit-identity — for fleet
+//! cells, across the shard kill) — and produces the
 //! pass/fail verdict CI gates on. Ingest cells gate on FPS only: their
 //! MOTA is a fixture property pinned by the ingest identity tests, not
 //! a seed-deterministic grid output.

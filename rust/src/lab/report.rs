@@ -22,8 +22,10 @@ use super::scenario::ScenarioAxes;
 /// Version of the report JSON schema (top-level `schema` field).
 /// v2 added the optional per-cell `slo` block (overload cells);
 /// v3 added the optional per-cell `wire` block (TCP front-door cells);
-/// v4 added the optional per-cell `ingest` block (real-input cells).
-pub const SCHEMA_VERSION: u64 = 4;
+/// v4 added the optional per-cell `ingest` block (real-input cells);
+/// v5 added the `shards`/`shard_kills` fields to the `wire` block
+/// (fleet cells routed across shard processes).
+pub const SCHEMA_VERSION: u64 = 5;
 
 /// Frames-per-second statistics over the benchkit samples.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -350,6 +352,10 @@ pub struct WireReport {
     /// Whether the delivered tracks matched the in-process reference
     /// run bit-for-bit (`f64::to_bits` equality).
     pub bit_identical: bool,
+    /// Shard processes behind the router (0 = direct single server).
+    pub shards: u64,
+    /// Shard kill+respawn events fired during the run.
+    pub shard_kills: u64,
 }
 
 impl WireReport {
@@ -372,6 +378,8 @@ impl WireReport {
             ("replays", Value::from_u64(self.replays)),
             ("rejected_frames", Value::from_u64(self.rejected_frames)),
             ("bit_identical", Value::Bool(self.bit_identical)),
+            ("shards", Value::from_u64(self.shards)),
+            ("shard_kills", Value::from_u64(self.shard_kills)),
         ])
     }
 
@@ -388,6 +396,8 @@ impl WireReport {
             replays: req_u64(v, "replays")?,
             rejected_frames: req_u64(v, "rejected_frames")?,
             bit_identical: req_bool(v, "bit_identical")?,
+            shards: req_u64(v, "shards")?,
+            shard_kills: req_u64(v, "shard_kills")?,
         })
     }
 }
@@ -767,6 +777,8 @@ mod tests {
                     replays: 4,
                     rejected_frames: 2,
                     bit_identical: true,
+                    shards: 2,
+                    shard_kills: 1,
                 }),
                 ingest: Some(IngestReport {
                     format: "mot".into(),
@@ -852,9 +864,9 @@ mod tests {
 
     #[test]
     fn missing_fields_error_instead_of_panicking() {
-        let v = parse(r#"{"schema": 4, "kind": "lab"}"#).unwrap();
+        let v = parse(r#"{"schema": 5, "kind": "lab"}"#).unwrap();
         assert!(LabReport::from_value(&v).is_err());
-        let v2 = parse(r#"{"schema": 4, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
+        let v2 = parse(r#"{"schema": 5, "kind": "bench", "manifest": {}, "cells": []}"#).unwrap();
         assert!(LabReport::from_value(&v2).is_err());
     }
 

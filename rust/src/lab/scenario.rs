@@ -127,7 +127,11 @@ impl ScenarioAxes {
     /// deadline/budget gate criteria bite on) — plus one *wire* cell:
     /// the same 4-stream batch cell driven over a loopback TCP socket
     /// through the `WireServer`, which the gate holds to ledger
-    /// conservation and bit-identity with the in-process run.
+    /// conservation and bit-identity with the in-process run — plus
+    /// one *fleet* cell: the same cell routed by a `TrackRouter`
+    /// across two shard servers under aggressive faults and one
+    /// mid-run shard kill+respawn, held to the identical marginless
+    /// ledger/bit-identity contract.
     /// The suite also appends one *ingest* cell: the batch engine run
     /// on the checked-in real-format fixture files
     /// (`rust/tests/fixtures/ingest/tiny.{det,gt}.txt`) through the
@@ -143,6 +147,7 @@ impl ScenarioAxes {
             .expect("smoke grid always has a multi-stream batch cell");
         cells.push(Scenario { admission: 2.0, ..base });
         cells.push(Scenario { wire: true, ..base });
+        cells.push(Scenario { fleet: true, ..base });
         cells.push(Scenario { ingest: true, streams: 1, ..base });
         cells
     }
@@ -171,6 +176,7 @@ impl ScenarioAxes {
                                         streams,
                                         admission,
                                         wire: false,
+                                        fleet: false,
                                         ingest: false,
                                         frames: self.frames,
                                         seed: self.seed,
@@ -208,6 +214,13 @@ pub struct Scenario {
     /// loopback socket to a `WireServer` instead of in-process session
     /// handles, and the report row gains a [`WireReport`].
     pub wire: bool,
+    /// Run the cell through the shard-per-core fleet: a `TrackRouter`
+    /// fronting two in-process shard servers, under the aggressive
+    /// fault schedule plus one mid-run shard kill+respawn. The report
+    /// row gains a [`WireReport`] with `shards`/`shard_kills` set, and
+    /// the gate holds it to the same marginless ledger/bit-identity
+    /// contract as wire cells.
+    pub fleet: bool,
     /// Run the cell on the checked-in *real-input* fixture files
     /// instead of synthetic footage: the full `data::ingest` pipeline
     /// (strict parse, validation, IR → sequence) feeds the engine and
@@ -252,6 +265,9 @@ impl Scenario {
         if self.wire {
             id.push_str("-wire");
         }
+        if self.fleet {
+            id.push_str("-fleet");
+        }
         id
     }
 
@@ -266,7 +282,7 @@ impl Scenario {
     pub fn synth_config(&self, stream: usize) -> SynthConfig {
         let name = format!(
             "{}-cam{stream}",
-            Scenario { admission: 1.0, wire: false, ingest: false, ..*self }.id()
+            Scenario { admission: 1.0, wire: false, fleet: false, ingest: false, ..*self }.id()
         );
         let mut cfg = if self.occlusion {
             SynthConfig::stress(&name, self.frames, self.max_objects, self.seed)
@@ -295,6 +311,9 @@ impl Scenario {
         }
         if self.wire {
             return self.run_wire();
+        }
+        if self.fleet {
+            return self.run_fleet();
         }
         if self.admission > 1.0 {
             return self.run_overload();
@@ -612,6 +631,96 @@ impl Scenario {
             replays: sc.replays,
             rejected_frames: sc.rejected_frames,
             bit_identical: out.bit_identical,
+            shards: 0,
+            shard_kills: 0,
+        };
+        Ok(CellReport {
+            id,
+            engine: self.engine.spec(),
+            streams: self.streams,
+            max_objects: self.max_objects,
+            det_prob: self.det_prob,
+            fp_rate: self.fp_rate,
+            occlusion: self.occlusion,
+            frames: self.frames as u64,
+            total_frames,
+            fps: FpsStats { median: fps, mean: fps, stddev: 0.0, min: fps },
+            quality: QualityStats::from_metrics(&quality),
+            counters: CounterTotals::from_snapshot(&counters),
+            slo: None,
+            wire: Some(wire),
+            ingest: None,
+        })
+    }
+
+    /// Run the cell through the shard-per-core fleet: a `TrackRouter`
+    /// fronting two in-process shard servers, driven by the netload
+    /// harness under the aggressive fault schedule *plus one mid-run
+    /// shard kill+respawn*. The cell proves the fleet's recovery
+    /// claim end to end — the frame ledger conserves and the delivered
+    /// tracks are bit-identical to the in-process run even when the
+    /// owning shard dies mid-stream — so the gate holds the wire block
+    /// to the same marginless contract as plain wire cells.
+    fn run_fleet(&self) -> crate::Result<CellReport> {
+        use crate::coordinator::faults::FaultPlan;
+        use crate::coordinator::net::{
+            approx_upstream_bytes, detection_frames, netload_run, NetloadOptions,
+        };
+        let id = self.id();
+        let seqs = self.sequences();
+        let params = SortParams { timing: false, ..Default::default() };
+        let total_frames = (seqs.len() as u64) * self.frames as u64;
+
+        // kernel counters: delta around one serial pass of stream 0
+        // (same protocol as the other runners — thread-local counters,
+        // so the snapshot must come from the calling thread)
+        let counters = {
+            let mut engine = self.engine.build(params)?;
+            let before = snapshot();
+            run_sequence(&mut *engine, &seqs[0].sequence);
+            snapshot().delta(&before)
+        };
+
+        let streams: Vec<Vec<Vec<Bbox>>> =
+            seqs.iter().map(|s| detection_frames(&s.sequence)).collect();
+        let mut opts = NetloadOptions::new(self.engine);
+        opts.seed = self.seed;
+        opts.router_shards = 2;
+        opts.server.service.workers = self.streams.min(2);
+        opts.server.service.session_defaults.engine = self.engine;
+        opts.server.service.session_defaults.sort_params = params;
+        let span: u64 = streams.iter().map(|s| approx_upstream_bytes(s)).sum();
+        opts.faults =
+            Some(FaultPlan::aggressive(self.seed, span, 2).with_shard_kills(1, self.seed, span));
+        let out = netload_run(opts, &streams)?;
+
+        // quality over what the fleet delivered: full GT denominator,
+        // so any loss across the router or a shard respawn prices
+        // itself as misses (bit_identical pins clean delivery)
+        let mut quality = MotMetrics::default();
+        for (s, rows) in seqs.iter().zip(&out.rows) {
+            let tuples: Vec<(u32, u64, Bbox)> =
+                rows.iter().map(|r| (r.frame, r.id, r.bbox)).collect();
+            quality.merge(&delivered_quality(s, &tuples, self.frames));
+        }
+
+        let (p50, _, p99, _) = out.latency.summary();
+        let fps = total_frames as f64 / out.wall.as_secs_f64().max(1e-9);
+        let sc = out.server_counters.clone().unwrap_or_default();
+        let wire = WireReport {
+            sessions_per_sec: out.sessions_per_sec,
+            p50_ms: p50.as_secs_f64() * 1e3,
+            p99_ms: p99.as_secs_f64() * 1e3,
+            frames_sent: out.ledger.frames_sent,
+            frames_acked: out.ledger.frames_acked,
+            rejected: out.ledger.rejected,
+            in_flight_at_close: out.ledger.in_flight_at_close,
+            reconnects: out.ledger.reconnects,
+            replays: sc.replays,
+            rejected_frames: sc.rejected_frames,
+            bit_identical: out.bit_identical,
+            shards: 2,
+            shard_kills: out.shard_kills,
         };
         Ok(CellReport {
             id,
@@ -873,6 +982,7 @@ mod tests {
             streams: 1,
             admission: 1.0,
             wire: false,
+            fleet: false,
             ingest: false,
             frames: 40,
             seed: 3,
@@ -903,6 +1013,7 @@ mod tests {
             streams: 3,
             admission: 1.0,
             wire: false,
+            fleet: false,
             ingest: false,
             frames: 30,
             seed: 5,
@@ -931,6 +1042,7 @@ mod tests {
             streams: 4,
             admission: 1.0,
             wire: false,
+            fleet: false,
             ingest: false,
             frames: 80,
             seed: 7,
@@ -947,7 +1059,7 @@ mod tests {
     fn smoke_suite_is_the_smoke_grid_plus_overload_and_wire_cells() {
         let cells = ScenarioAxes::smoke_cells();
         let grid = ScenarioAxes::smoke().cells();
-        assert_eq!(cells.len(), grid.len() + 3);
+        assert_eq!(cells.len(), grid.len() + 4);
         assert_eq!(cells[..grid.len()], grid[..]);
         let over = &cells[grid.len()];
         assert_eq!(over.id(), "batch-d5-dp90-fp5-occ-s4-a2x");
@@ -960,6 +1072,10 @@ mod tests {
         assert_eq!(wire.id(), "batch-d5-dp90-fp5-occ-s4-wire");
         assert!(wire.wire);
         assert_eq!(wire.admission, 1.0, "the wire cell is unpaced");
+        let fleet = &cells[grid.len() + 2];
+        assert_eq!(fleet.id(), "batch-d5-dp90-fp5-occ-s4-fleet");
+        assert!(fleet.fleet && !fleet.wire);
+        assert_eq!(fleet.admission, 1.0, "the fleet cell is unpaced");
         // the wire cell tracks the same footage as its in-process
         // sibling — any quality gap would be pure transport cost
         let sibling = grid.iter().find(|c| c.id() == "batch-d5-dp90-fp5-occ-s4").unwrap();
@@ -978,6 +1094,7 @@ mod tests {
             streams: 2,
             admission: 1.0,
             wire: true,
+            fleet: false,
             ingest: false,
             frames: 30,
             seed: 5,
@@ -998,6 +1115,39 @@ mod tests {
         assert_eq!(w.frames_acked, 60);
         assert_eq!(w.reconnects, 0, "no faults, no reconnects");
         assert!(w.sessions_per_sec > 0.0);
+        assert!(r.fps.median > 0.0);
+        assert!(r.quality.n_gt > 0, "delivered-row scoring keeps the full GT denominator");
+    }
+
+    #[test]
+    fn fleet_cell_survives_faults_and_a_shard_kill_bit_identically() {
+        let cell = Scenario {
+            engine: EngineKind::Batch,
+            max_objects: 4,
+            det_prob: 0.95,
+            fp_rate: 0.05,
+            occlusion: false,
+            streams: 2,
+            admission: 1.0,
+            wire: false,
+            fleet: true,
+            ingest: false,
+            frames: 30,
+            seed: 5,
+        };
+        let cfg = BenchConfig {
+            warmup: std::time::Duration::from_millis(1),
+            samples: 2,
+            min_sample_time: std::time::Duration::from_micros(100),
+        };
+        let r = cell.run(&cfg).expect("fleet cell run");
+        assert_eq!(r.id, "batch-d4-dp95-fp5-clr-s2-fleet");
+        assert!(r.slo.is_none(), "fleet cells carry no SLO block");
+        let w = r.wire.expect("fleet cells carry a wire block");
+        assert_eq!(w.shards, 2);
+        assert!(w.bit_identical, "fleet recovery must reconverge on the reference rows: {w:?}");
+        assert!(w.conserves(), "{w:?}");
+        assert!(w.frames_acked >= 60, "every distinct frame lands despite faults: {w:?}");
         assert!(r.fps.median > 0.0);
         assert!(r.quality.n_gt > 0, "delivered-row scoring keeps the full GT denominator");
     }
@@ -1056,6 +1206,7 @@ mod tests {
             streams: 2,
             admission: 2.0,
             wire: false,
+            fleet: false,
             ingest: false,
             frames: 40,
             seed: 5,

@@ -18,9 +18,13 @@
 //!              two JSON reports (the CI regression gate)
 //!   track-serve  TCP front door: serve tracking sessions over the
 //!              versioned wire protocol (checkpoint/resume recovery)
+//!   track-router  session-affine reverse proxy over a self-spawned
+//!              fleet of track-serve shard processes (FNV session
+//!              routing, respawn supervision, re-drive recovery)
 //!   netload    drive synthetic streams against a wire server (self-
 //!              served by default) with optional seeded fault
 //!              injection; verifies ledger conservation + bit-identity
+//!              (`--router N` self-hosts an N-shard fleet instead)
 //!
 //! Argument parsing is hand-rolled (`--key value` / `--flag`); the
 //! offline build environment has no clap.
@@ -114,6 +118,7 @@ fn main() -> Result<()> {
         "xla" => cmd_xla(&args),
         "lab" => cmd_lab(&args),
         "track-serve" => cmd_track_serve(&args),
+        "track-router" => cmd_track_router(&args),
         "netload" => cmd_netload(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -172,7 +177,9 @@ COMMANDS
                                                     noise x occlusion x streams x
                                                     admission; --smoke adds one 2x-
                                                     admission overload cell, one
-                                                    wire cell, and one real-input
+                                                    wire cell, one 2-shard fleet
+                                                    cell with a mid-run shard
+                                                    kill, and one real-input
                                                     ingest cell over the checked-in
                                                     fixtures)
   lab compare BASE.json CUR.json [--margin M] [--mota-margin Q]
@@ -183,19 +190,35 @@ COMMANDS
                                                     p99-under-deadline and the
                                                     MOTA budget vs their 1x sibling
   track-serve [--addr H:P] [--workers N] [--run-secs S]
-            [--checkpoint-every K]                  TCP front door on the wire
+            [--checkpoint-every K]
+            [--exit-on-stdin-close]                 TCP front door on the wire
                                                     protocol; --run-secs drains
                                                     gracefully after S seconds
-                                                    (default: run until killed)
+                                                    (default: run until killed);
+                                                    --exit-on-stdin-close exits
+                                                    when stdin reaches EOF (the
+                                                    fleet supervisor's
+                                                    parent-death watchdog)
+  track-router [--addr H:P] [--shards N] [--workers W]
+            [--checkpoint-every K] [--run-secs S]   session-affine reverse proxy:
+                                                    spawns N track-serve shard
+                                                    processes, routes sessions by
+                                                    FNV hash of the session key,
+                                                    respawns dead shards and
+                                                    re-drives their sessions
   netload   [--streams N] [--frames K] [--engine E] [--seed N]
             [--faults none|aggressive [--cuts C]] [--workers W]
             [--checkpoint-every K] [--addr H:P] [--json PATH]
-                                                    replay synthetic streams over
+            [--router N [--kills K]]                replay synthetic streams over
                                                     the wire (self-served unless
-                                                    --addr targets a server);
-                                                    exits non-zero if the frame
-                                                    ledger leaks or tracks differ
-                                                    from the in-process run
+                                                    --addr targets a server;
+                                                    --router N self-hosts an
+                                                    N-shard fleet and --kills K
+                                                    schedules K mid-run shard
+                                                    kill+respawns); exits
+                                                    non-zero if the frame ledger
+                                                    leaks or tracks differ from
+                                                    the in-process run
 
 ENGINES (--engine, default native; the spec form is self-contained)
   native    single-core structure-aware Sort (the paper's fast path)
@@ -982,6 +1005,18 @@ fn cmd_track_serve(args: &Args) -> Result<()> {
         server.addr(),
         cfg.default_checkpoint_every
     );
+    if args.get("exit-on-stdin-close").is_some() {
+        // parent-death watchdog: the fleet supervisor holds our stdin
+        // pipe, so EOF means the supervisor is gone (even via SIGKILL,
+        // where it never gets to reap us) — exit instead of leaking
+        std::thread::spawn(|| {
+            use std::io::Read;
+            let mut sink = [0u8; 64];
+            let mut stdin = std::io::stdin();
+            while matches!(stdin.read(&mut sink), Ok(n) if n > 0) {}
+            std::process::exit(0);
+        });
+    }
     if run_secs > 0.0 {
         std::thread::sleep(Duration::from_secs_f64(run_secs));
     } else {
@@ -1031,7 +1066,13 @@ fn cmd_netload(args: &Args) -> Result<()> {
     opts.server.service.workers = args.num("workers", 2usize)?;
     opts.server.service.session_defaults.sort_params = params_fast();
     opts.remote = args.get("addr").map(|a| a.parse()).transpose().context("--addr: bad host:port")?;
-    match args.get("faults").unwrap_or("none") {
+    opts.router_shards = args.num("router", 0usize)?;
+    let kills: usize = args.num("kills", 0usize)?;
+    if kills > 0 && opts.router_shards == 0 {
+        bail!("--kills requires --router N (shard kills need a fleet to kill)");
+    }
+    let faults_mode = args.get("faults").unwrap_or("none");
+    match faults_mode {
         "none" => {}
         "aggressive" => {
             let cuts: usize = args.num("cuts", 3usize)?;
@@ -1040,13 +1081,24 @@ fn cmd_netload(args: &Args) -> Result<()> {
         }
         other => bail!("--faults must be none|aggressive (got '{other}')"),
     }
+    if kills > 0 {
+        let span: u64 = streams.iter().map(|s| approx_upstream_bytes(s)).sum();
+        let plan = opts.faults.take().unwrap_or_else(FaultPlan::none);
+        opts.faults = Some(plan.with_shard_kills(kills, seed, span));
+    }
     let faulted = opts.faults.is_some();
     println!(
-        "netload: {n_streams} streams x {frames} frames over {} ({} engine, faults: {})",
+        "netload: {n_streams} streams x {frames} frames over {} ({} engine, faults: {faults_mode})",
         opts.remote.map_or_else(|| "self-served loopback".into(), |a| a.to_string()),
         engine.spec(),
-        if faulted { "aggressive" } else { "none" }
     );
+    if opts.router_shards > 0 {
+        println!(
+            "fleet: routing over {} in-process shards ({kills} scheduled shard kills)",
+            opts.router_shards
+        );
+    }
+    let router_shards = opts.router_shards;
     let out = netload_run(opts, &streams)?;
     let l = &out.ledger;
     let (p50, _, p99, _) = out.latency.summary();
@@ -1065,6 +1117,12 @@ fn cmd_netload(args: &Args) -> Result<()> {
             c.rejected_frames,
             c.dirty_disconnects
         );
+        if !c.per_shard_sessions.is_empty() {
+            println!(
+                "fleet: shard_kills={} per_shard_sessions={:?}",
+                out.shard_kills, c.per_shard_sessions
+            );
+        }
     }
     println!(
         "wall={:.2}s sessions/s={:.2} push-to-poll p50={:.2}ms p99={:.2}ms bit_identical={} conserves={}",
@@ -1080,12 +1138,21 @@ fn cmd_netload(args: &Args) -> Result<()> {
             bail!("--json requires a <path> argument");
         }
         let sc = out.server_counters.clone().unwrap_or_default();
+        let pss = sc
+            .per_shard_sessions
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
         let json = format!(
-            "{{\"streams\": {}, \"frames_per_stream\": {}, \"engine\": \"{}\", \"faulted\": {}, \"frames_sent\": {}, \"frames_acked\": {}, \"resent\": {}, \"rejected\": {}, \"in_flight_at_close\": {}, \"client_reconnects\": {}, \"rows_received\": {}, \"server_reconnects\": {}, \"server_replays\": {}, \"dup_acks\": {}, \"rejected_frames\": {}, \"dirty_disconnects\": {}, \"wall_secs\": {:.6}, \"sessions_per_sec\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"bit_identical\": {}, \"conserves\": {}}}",
+            "{{\"streams\": {}, \"frames_per_stream\": {}, \"engine\": \"{}\", \"faulted\": {}, \"router_shards\": {}, \"shard_kills\": {}, \"per_shard_sessions\": [{}], \"frames_sent\": {}, \"frames_acked\": {}, \"resent\": {}, \"rejected\": {}, \"in_flight_at_close\": {}, \"client_reconnects\": {}, \"rows_received\": {}, \"server_reconnects\": {}, \"server_replays\": {}, \"dup_acks\": {}, \"rejected_frames\": {}, \"dirty_disconnects\": {}, \"wall_secs\": {:.6}, \"sessions_per_sec\": {:.3}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"bit_identical\": {}, \"conserves\": {}}}",
             out.streams,
             frames,
             engine.spec(),
             faulted,
+            router_shards,
+            out.shard_kills,
+            pss,
             l.frames_sent,
             l.frames_acked,
             l.resent,
@@ -1121,5 +1188,49 @@ fn cmd_netload(args: &Args) -> Result<()> {
         bail!("wire tracks diverged from the in-process reference run");
     }
     println!("OK: ledger conserves and tracks are bit-identical to the in-process run");
+    Ok(())
+}
+
+/// `track-router` — session-affine reverse proxy over a self-spawned
+/// fleet of `track-serve` shard processes.
+fn cmd_track_router(args: &Args) -> Result<()> {
+    use smalltrack::coordinator::{FleetConfig, RouterConfig, TrackRouter};
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7607");
+    let shards: usize = args.num("shards", 2usize)?;
+    let workers: usize = args.num("workers", 2usize)?;
+    let run_secs: f64 = args.num("run-secs", 0.0f64)?;
+    let mut cfg = FleetConfig::new(shards).context("resolving the shard executable")?;
+    cfg.workers_per_shard = workers;
+    cfg.checkpoint_every = args.num("checkpoint-every", cfg.checkpoint_every)?;
+    let ckpt = cfg.checkpoint_every;
+    let fleet = smalltrack::coordinator::Fleet::spawn(cfg).context("spawning the shard fleet")?;
+    let router = TrackRouter::bind(addr, fleet.shard_map(), RouterConfig::default())
+        .context("binding the router front door")?;
+    println!(
+        "track-router listening on {} ({shards} shards x {workers} workers, checkpoints every {ckpt} frames)",
+        router.addr()
+    );
+    for i in 0..shards {
+        println!("  shard {i}: {}", fleet.shard_map().slot(i).addr);
+    }
+    if run_secs > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(run_secs));
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let wc = router.shutdown();
+    println!(
+        "drained: sessions_opened={} reconnects={} replays={} dup_acks={} rejected_frames={} dirty_disconnects={} per_shard_sessions={:?}",
+        wc.sessions_opened,
+        wc.reconnects,
+        wc.replays,
+        wc.dup_acks,
+        wc.rejected_frames,
+        wc.dirty_disconnects,
+        wc.per_shard_sessions
+    );
+    fleet.shutdown();
     Ok(())
 }

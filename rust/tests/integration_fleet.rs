@@ -1,0 +1,222 @@
+//! Fleet integration: the shard-per-core router end to end.
+//!
+//! The contract under test (the fleet tentpole's acceptance criteria):
+//! a `TrackRouter` fronting N shard servers must preserve the single
+//! server's recovery guarantees — delivered tracks **bit-identical**
+//! (`f64::to_bits`) to an in-process run and a conserved frame ledger
+//! (`frames_sent == frames_acked + rejected + in_flight_at_close`) —
+//! while adding session affinity (a session and every RESUME for it
+//! land on the FNV-owned shard) and shard-restart recovery (a shard
+//! killed mid-stream is replaced and its sessions re-driven from the
+//! router's bank). Covered at three levels: the in-process netload
+//! fleet harness, the seeded fault schedule plus scheduled shard
+//! kills, and the `netload` / `track-router` CLI binaries over real
+//! loopback TCP with real shard child processes.
+
+use smalltrack::coordinator::faults::FaultPlan;
+use smalltrack::coordinator::fleet::shard_of;
+use smalltrack::coordinator::net::{
+    approx_upstream_bytes, detection_frames, netload_run, NetloadOptions,
+};
+use smalltrack::data::synth::{generate_sequence, SynthConfig};
+use smalltrack::engine::EngineKind;
+use smalltrack::sort::Bbox;
+use std::io::BufRead;
+use std::process::{Child, Command, Stdio};
+
+fn synth_stream(name: &str, frames: u32, objects: u32, seed: u64) -> Vec<Vec<Bbox>> {
+    let cfg = SynthConfig::mot15(name, frames, objects, seed);
+    detection_frames(&generate_sequence(&cfg).sequence)
+}
+
+fn fleet_opts(shards: usize, seed: u64) -> NetloadOptions {
+    let mut opts = NetloadOptions::new(EngineKind::Batch);
+    opts.seed = seed;
+    opts.checkpoint_every = 8;
+    opts.router_shards = shards;
+    opts
+}
+
+/// The occupancy the router must report if every session landed on its
+/// FNV-owned shard: netload keys stream `i` as `0xC0FF_EE00 + i`.
+fn expected_occupancy(streams: usize, shards: usize) -> Vec<u64> {
+    let mut expect = vec![0u64; shards];
+    for i in 0..streams as u64 {
+        expect[shard_of(0xC0FF_EE00 + i, shards)] += 1;
+    }
+    expect
+}
+
+// --- in-process level ----------------------------------------------------
+
+#[test]
+fn two_shard_fleet_matches_the_serial_reference_bit_for_bit() {
+    let streams: Vec<_> = (0..4)
+        .map(|i| synth_stream(&format!("fleet-clean{i}"), 50, 4, 21 + i as u64))
+        .collect();
+    let out = netload_run(fleet_opts(2, 21), &streams).expect("fleet netload");
+
+    assert!(out.bit_identical, "fleet tracks diverged from the in-process reference run");
+    let l = &out.ledger;
+    assert!(l.conserves(), "{l:?}");
+    assert_eq!(l.frames_sent, 200, "{l:?}");
+    assert_eq!(l.frames_acked, 200, "{l:?}");
+    assert_eq!(out.shard_kills, 0, "no kills were scheduled");
+
+    // in fleet mode the reported counters are the router's: the
+    // client-facing view, including per-shard occupancy
+    let sc = out.server_counters.as_ref().unwrap();
+    assert_eq!(sc.sessions_opened, 4, "{sc:?}");
+    assert_eq!(sc.per_shard_sessions.len(), 2, "{sc:?}");
+    assert_eq!(
+        sc.per_shard_sessions,
+        expected_occupancy(4, 2),
+        "every session must land on its FNV-owned shard"
+    );
+    // the hash spreads the netload keyspace over both shards, so this
+    // cell genuinely exercises multi-shard routing
+    assert!(sc.per_shard_sessions.iter().all(|&n| n > 0), "{sc:?}");
+}
+
+#[test]
+fn session_affinity_holds_across_cuts_and_resumes() {
+    let streams: Vec<_> = (0..3)
+        .map(|i| synth_stream(&format!("fleet-cuts{i}"), 60, 4, 13 + i as u64))
+        .collect();
+    let mut opts = fleet_opts(2, 13);
+    let span: u64 = streams.iter().map(|s| approx_upstream_bytes(s)).sum();
+    opts.faults = Some(FaultPlan::aggressive(13, span, 3));
+    let out = netload_run(opts, &streams).expect("faulted fleet netload");
+
+    assert!(out.bit_identical, "recovery must reconverge on the reference tracks");
+    assert!(out.ledger.conserves(), "{:?}", out.ledger);
+    assert!(out.ledger.reconnects >= 1, "aggressive cuts must force resumes: {:?}", out.ledger);
+    let sc = out.server_counters.as_ref().unwrap();
+    // occupancy counts *fresh* sessions only — if a RESUME ever landed
+    // on (and re-opened at) the wrong shard, a shard would show a twin
+    assert_eq!(
+        sc.per_shard_sessions,
+        expected_occupancy(3, 2),
+        "a resumed session must come back to the shard that owns its key: {sc:?}"
+    );
+}
+
+#[test]
+fn a_mid_stream_shard_kill_recovers_with_a_conserved_ledger() {
+    let streams: Vec<_> = (0..2)
+        .map(|i| synth_stream(&format!("fleet-kill{i}"), 80, 5, 5 + i as u64))
+        .collect();
+    let mut opts = fleet_opts(2, 5);
+    let span: u64 = streams.iter().map(|s| approx_upstream_bytes(s)).sum();
+    // no byte faults at all — the only disruption is a shard dying
+    // mid-stream and being replaced by an empty one, so any ledger or
+    // bit-identity failure is squarely the router's re-drive
+    opts.faults = Some(FaultPlan::none().with_shard_kills(1, 5, span));
+    let out = netload_run(opts, &streams).expect("shard-kill fleet netload");
+
+    assert_eq!(out.shard_kills, 1, "the scheduled kill must actually fire");
+    assert!(out.bit_identical, "re-driven sessions must reproduce the reference tracks");
+    let l = &out.ledger;
+    assert!(l.conserves(), "{l:?}");
+    assert_eq!(l.frames_sent, 160, "{l:?}");
+    assert_eq!(l.frames_acked, 160, "a kill costs retries, never frames: {l:?}");
+}
+
+// --- CLI level -----------------------------------------------------------
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_smalltrack"))
+}
+
+#[test]
+fn netload_cli_router_mode_enforces_the_contract_and_reports_the_fleet() {
+    let dir = std::env::temp_dir().join(format!("smalltrack_fleet_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let json = dir.join("fleet.json");
+    let out = bin()
+        .args(["netload", "--streams", "2", "--frames", "40", "--engine", "batch"])
+        .args(["--router", "2", "--kills", "1", "--faults", "aggressive", "--cuts", "2"])
+        .args(["--seed", "7", "--json"])
+        .arg(&json)
+        .output()
+        .expect("spawn netload");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "netload --router failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("OK: ledger conserves"), "{stdout}");
+    assert!(stdout.contains("shard_kills="), "fleet line missing: {stdout}");
+
+    let report = smalltrack::data::json::parse(&std::fs::read_to_string(&json).unwrap())
+        .expect("fleet report is valid JSON");
+    assert_eq!(report.req("router_shards").num(), 2.0);
+    assert_eq!(report.req("shard_kills").num(), 1.0);
+    assert_eq!(report.req("bit_identical").as_bool(), Some(true));
+    assert_eq!(report.req("conserves").as_bool(), Some(true));
+    assert_eq!(report.req("frames_sent").num(), 80.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn netload_cli_rejects_kills_without_a_router() {
+    let out = bin()
+        .args(["netload", "--streams", "1", "--frames", "5", "--kills", "1"])
+        .output()
+        .expect("spawn netload");
+    assert!(!out.status.success(), "--kills without --router must be an error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--kills requires --router"), "{stderr}");
+}
+
+/// Kills the router child even when an assert unwinds. Its shard
+/// children exit on their own: each holds a stdin pipe from the router
+/// and exits on EOF (the parent-death watchdog), so a killed router
+/// never leaks shard processes.
+struct KillOnDrop(Child);
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn netload_cli_reaches_a_track_router_fleet_over_loopback() {
+    // real three-process deployment: `track-router` supervising two
+    // `track-serve` shard children, `netload --addr` pointed at it
+    let child = bin()
+        .args(["track-router", "--addr", "127.0.0.1:0", "--shards", "2", "--workers", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn track-router");
+    let mut guard = KillOnDrop(child);
+    let stdout = guard.0.stdout.take().expect("piped stdout");
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let banner = lines
+        .next()
+        .expect("track-router printed nothing")
+        .expect("read track-router banner");
+    // "track-router listening on 127.0.0.1:PORT (2 shards x 2 workers, ...)"
+    let addr = banner
+        .split_whitespace()
+        .find(|w| w.starts_with("127.0.0.1:"))
+        .unwrap_or_else(|| panic!("no address in banner: {banner}"))
+        .to_string();
+    assert_ne!(addr, "127.0.0.1:0", "router must report the real port");
+
+    let out = bin()
+        .args(["netload", "--streams", "2", "--frames", "40", "--engine", "batch", "--addr"])
+        .arg(&addr)
+        .output()
+        .expect("spawn netload");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "netload vs track-router failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("OK: ledger conserves"), "{stdout}");
+}

@@ -47,6 +47,7 @@ fn three_cuts_and_corruption_recover_bit_identically() {
             cut_at: vec![],
             delay_at: vec![],
         },
+        ..FaultPlan::default()
     };
     let mut opts = NetloadOptions::new(EngineKind::Batch);
     opts.seed = 11;

@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Check that every relative markdown link in the repo resolves.
+
+Walks all *.md files (skipping .git/ and target/), extracts inline
+links `[text](target)`, and verifies that each non-external target —
+after stripping any `#fragment` — exists on disk relative to the file
+that links it. External schemes (http/https/mailto) and pure
+in-page anchors (`#section`) are skipped; anchor *presence* in the
+target file is not checked, only that the file itself exists.
+
+Exit 1 with one line per broken link; exit 0 silently when clean.
+Run directly (`python3 tools/check_md_links.py`) or via
+`make check-links`; CI's docs job runs it on every push.
+"""
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "target", "node_modules", "__pycache__"}
+# inline links only; reference-style links are not used in this repo
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def md_files(root):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def strip_code(text):
+    """Drop fenced and inline code spans — links in there are examples."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    broken = []
+    checked = 0
+    for path in sorted(md_files(root)):
+        with open(path, encoding="utf-8") as fh:
+            text = strip_code(fh.read())
+        for target in LINK_RE.findall(text):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            checked += 1
+            resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                broken.append(
+                    f"{os.path.relpath(path, root)}: broken link -> {target}"
+                )
+    if broken:
+        print("\n".join(broken), file=sys.stderr)
+        print(f"{len(broken)} broken markdown link(s)", file=sys.stderr)
+        return 1
+    print(f"ok: {checked} relative markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
